@@ -1,0 +1,60 @@
+//! Lane-scaling demo on the *mechanical* coordinator: dispatch a batch
+//! of quantized mat-mul jobs across 1–8 simulated lanes with a 2-thread
+//! host pool and watch wall-clock + simulated-cycle scaling saturate —
+//! the §V-A host-bottleneck effect, reproduced with real threads rather
+//! than the analytic model.
+//!
+//! Run: `cargo run --release --example lane_scaling`
+
+use imax_sd::coordinator::{Coordinator, OffloadPolicy};
+use imax_sd::coordinator::scheduler::make_job;
+use imax_sd::ggml::{DType, Tensor};
+use imax_sd::imax::ImaxConfig;
+use imax_sd::util::rng::Xoshiro256pp;
+use imax_sd::util::tables::Table;
+
+fn random(rows: usize, cols: usize, seed: u64) -> Tensor {
+    let mut r = Xoshiro256pp::seed_from_u64(seed);
+    let mut v = vec![0.0f32; rows * cols];
+    r.fill_normal(&mut v, 0.5);
+    Tensor::f32(rows, cols, v)
+}
+
+fn main() {
+    let jobs: Vec<_> = (0..24)
+        .map(|i| {
+            make_job(
+                &format!("layer{i}"),
+                random(64, 512, 100 + i),
+                DType::Q8_0,
+                random(48, 512, 200 + i),
+            )
+        })
+        .collect();
+    let mut t = Table::new(
+        "Coordinator lane scaling (24 Q8_0 jobs, 2 host threads — the A72 pair)",
+        &["lanes", "wall ms", "speedup", "sim Mcycles", "offloaded"],
+    );
+    let mut base = None;
+    for lanes in [1usize, 2, 3, 4, 6, 8] {
+        let c = Coordinator::new(ImaxConfig::fpga(1), lanes, 2, OffloadPolicy::QuantizedOnly);
+        let t0 = std::time::Instant::now();
+        let outs = c.execute_batch(&jobs);
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(outs.len(), jobs.len());
+        let base_v = *base.get_or_insert(wall);
+        t.row(&[
+            format!("{lanes}"),
+            format!("{:.1}", wall * 1e3),
+            format!("{:.2}x", base_v / wall),
+            format!(
+                "{:.1}",
+                c.metrics.imax_cycles.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e6
+            ),
+            format!("{}", c.metrics.offloaded_jobs.load(std::sync::atomic::Ordering::Relaxed)),
+        ]);
+    }
+    t.print();
+    println!("\nnote: with only 2 host threads marshalling, speedup saturates near 2 —");
+    println!("the same dual-core supply ceiling the paper reports in §V-A.");
+}

@@ -1,0 +1,47 @@
+//! Energy-efficiency report: regenerate the paper's PDP analysis (Fig. 8)
+//! plus a what-if sweep of the IMAX ASIC power model over active-unit
+//! counts — the "AI-specialized CGLA" design-space hint the conclusion
+//! points at.
+//!
+//! Run: `cargo run --release --example pdp_report`
+
+use imax_sd::device::{arm_a72, gtx_1080ti, pdp_joules, xeon_w5, Device, ImaxDevice};
+use imax_sd::imax::power::asic_power_units;
+use imax_sd::sd::arch::sd_turbo_512;
+use imax_sd::sd::QuantModel;
+use imax_sd::util::tables::Table;
+
+fn main() {
+    let trace = sd_turbo_512(1);
+    let mut t = Table::new(
+        "PDP report (one 512x512 SD-Turbo generation)",
+        &["Device", "Q3_K e2e (s)", "Q3_K PDP (kJ)", "Q8_0 e2e (s)", "Q8_0 PDP (kJ)"],
+    );
+    let devs: Vec<Box<dyn Device>> = vec![
+        Box::new(arm_a72()),
+        Box::new(ImaxDevice::fpga(1)),
+        Box::new(ImaxDevice::asic(1)),
+        Box::new(xeon_w5()),
+        Box::new(gtx_1080ti()),
+    ];
+    for d in &devs {
+        let q3 = pdp_joules(d.as_ref(), &trace, QuantModel::Q3K);
+        let q8 = pdp_joules(d.as_ref(), &trace, QuantModel::Q8_0);
+        t.row(&[
+            d.name(),
+            format!("{:.1}", q3.seconds),
+            format!("{:.2}", q3.joules / 1e3),
+            format!("{:.1}", q8.seconds),
+            format!("{:.2}", q8.joules / 1e3),
+        ]);
+    }
+    t.print();
+
+    println!("\nASIC power vs active functional units (the specialization axis):");
+    for units in [32usize, 46, 51, 64] {
+        println!("  {units:>2} units -> {:.1} W", asic_power_units(units));
+    }
+    println!("\npaper findings reproduced: ARM lowest PDP; ASIC < Xeon on both models;");
+    println!("ASIC < GPU on Q3_K. Deviation: our model also gives ASIC < GPU on Q8_0");
+    println!("(see EXPERIMENTS.md for the attribution).");
+}

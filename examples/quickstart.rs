@@ -1,0 +1,99 @@
+//! Quickstart: the three-layer stack in one page.
+//!
+//! 1. quantize a weight matrix with the GGML substrate (L3 host),
+//! 2. run the same mat-mul three ways — host kernels, the IMAX lane
+//!    simulator (bit-exact hardware dataflow), and the AOT Pallas
+//!    artifact via PJRT (when `make artifacts` has run) —
+//! 3. print timings and agreement.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use imax_sd::ggml::{mul_mat, DType, Tensor};
+use imax_sd::imax::lane::LaneSim;
+use imax_sd::imax::ImaxConfig;
+use imax_sd::util::rng::Xoshiro256pp;
+
+fn random(rows: usize, cols: usize, seed: u64) -> Tensor {
+    let mut r = Xoshiro256pp::seed_from_u64(seed);
+    let mut v = vec![0.0f32; rows * cols];
+    r.fill_normal(&mut v, 0.7);
+    Tensor::f32(rows, cols, v)
+}
+
+fn main() -> anyhow::Result<()> {
+    let (m, n, k) = (64usize, 32usize, 256usize);
+    let w = random(m, k, 1);
+    let x = random(n, k, 2);
+    println!("mul_mat: W[{m}x{k}] (Q8_0) x X[{n}x{k}] -> out[{n}x{m}]\n");
+
+    // 1) Host GGML kernel.
+    let wq = w.quantize(DType::Q8_0);
+    let t0 = std::time::Instant::now();
+    let host = mul_mat(&wq, &x, 2);
+    println!("host ggml kernel     : {:>10.1?}", t0.elapsed());
+
+    // 2) IMAX lane simulator (functional, cycle-counted).
+    let blocks = match &wq.data {
+        imax_sd::ggml::tensor::Storage::Q8_0(b) => b.clone(),
+        _ => unreachable!(),
+    };
+    let acts: Vec<_> = (0..n)
+        .flat_map(|r| imax_sd::ggml::q8_0::quantize_row(x.row_f32(r)))
+        .collect();
+    let mut lane = LaneSim::new(ImaxConfig::fpga(1));
+    let t0 = std::time::Instant::now();
+    let (sim, bd) = lane.mul_mat_q8_0(&blocks, m, &acts, n, k)?;
+    println!(
+        "imax lane simulator  : {:>10.1?}   ({} cycles = {:.1} µs @145 MHz)",
+        t0.elapsed(),
+        bd.total(),
+        bd.total() as f64 / 145.0
+    );
+    let exact = host
+        .as_f32()
+        .iter()
+        .zip(&sim)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    println!("  bit-exact vs host  : {exact}");
+    assert!(exact);
+
+    // 3) PJRT artifact (the L1 Pallas kernel AOT-compiled by jax).
+    match imax_sd::runtime::find_artifact_dir() {
+        Some(dir) => {
+            let mut rt = imax_sd::runtime::ArtifactRuntime::new(dir)?;
+            let exe = rt.load("q8_0_matmul.hlo.txt")?;
+            let mut qs = Vec::new();
+            let mut d = Vec::new();
+            for b in &blocks {
+                qs.extend_from_slice(&b.qs);
+                d.push(b.d.to_f32());
+            }
+            let mut aqs = Vec::new();
+            let mut ad = Vec::new();
+            for b in &acts {
+                aqs.extend_from_slice(&b.qs);
+                ad.push(b.d.to_f32());
+            }
+            use imax_sd::runtime::client::{literal_f32, literal_i8};
+            let t0 = std::time::Instant::now();
+            let out = exe.run_f32(&[
+                literal_i8(&qs, m, k)?,
+                literal_f32(&d, m, k / 32)?,
+                literal_i8(&aqs, n, k)?,
+                literal_f32(&ad, n, k / 32)?,
+            ])?;
+            println!("pjrt pallas artifact : {:>10.1?}", t0.elapsed());
+            let max_err = host
+                .as_f32()
+                .iter()
+                .zip(&out)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            println!("  max |pallas-host|  : {max_err:.2e}");
+            assert!(max_err < 1e-3);
+        }
+        None => println!("pjrt pallas artifact : skipped (run `make artifacts`)"),
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

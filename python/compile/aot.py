@@ -1,0 +1,91 @@
+"""AOT export: lower every L2 entry point to HLO TEXT artifacts.
+
+HLO *text* (never `.serialize()`): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the rust side's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md and gen_hlo.py).
+
+Usage: python -m compile.aot --out ../artifacts/model.hlo.txt
+Writes the main model artifact at --out plus the kernel artifacts next
+to it. Python never runs after this step.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: without it the text printer elides big baked
+    # weight constants as `constant({...})`, which the 0.5.1 parser reads
+    # back as ZEROS — silently corrupting the model artifact.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text):>9} chars  {path}")
+    return text
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# Fixed artifact shapes (the rust runtime matches these).
+Q8_M, Q8_N, Q8_K = 64, 32, 256
+Q3_M, Q3_N, Q3_K = 32, 16, 512
+F16_M, F16_N, F16_K = 64, 64, 288
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    args = ap.parse_args()
+    outdir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(outdir, exist_ok=True)
+
+    # Main model artifact: the quantized transformer block.
+    block = model.make_transformer_block()
+    export(
+        block,
+        (spec((model.SEQ, model.DIM), jnp.float32),
+         spec((model.CTX_LEN, model.DIM), jnp.float32)),
+        args.out,
+    )
+
+    # Kernel artifacts.
+    export(
+        model.make_q8_0_matmul(Q8_M, Q8_N, Q8_K),
+        (spec((Q8_M, Q8_K), jnp.int8), spec((Q8_M, Q8_K // 32), jnp.float32),
+         spec((Q8_N, Q8_K), jnp.int8), spec((Q8_N, Q8_K // 32), jnp.float32)),
+        os.path.join(outdir, "q8_0_matmul.hlo.txt"),
+    )
+    export(
+        model.make_q3_imax_matmul(Q3_M, Q3_N, Q3_K),
+        (spec((Q3_M, Q3_K), jnp.int8), spec((Q3_M, Q3_K // 16), jnp.int8),
+         spec((Q3_M, Q3_K // 256), jnp.float32),
+         spec((Q3_N, Q3_K), jnp.int8), spec((Q3_N, Q3_K // 256), jnp.float32)),
+        os.path.join(outdir, "q3k_matmul.hlo.txt"),
+    )
+    export(
+        model.make_f16_matmul(F16_M, F16_N, F16_K),
+        (spec((F16_M, F16_K), jnp.float32), spec((F16_N, F16_K), jnp.float32)),
+        os.path.join(outdir, "f16_matmul.hlo.txt"),
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""L1 Pallas kernels + references for the IMAX-SD reproduction."""

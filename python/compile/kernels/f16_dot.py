@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: F16-weight mat-mul (the conv-im2col / VAE path).
+
+Takes f32 inputs, rounds weights to bf16-on-MXU semantics (f16 storage in
+GGML; the MXU computes bf16 x bf16 -> f32, so we model the f16 cast
+explicitly and accumulate in f32). interpret=True as always.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, x_ref, o_ref):
+    w = w_ref[...].astype(jnp.float16).astype(jnp.float32)
+    x = x_ref[...]
+    o_ref[...] = jax.lax.dot_general(
+        x, w, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _fit(extent, target):
+    """Largest divisor of `extent` not exceeding `target` (ragged shapes
+    like the 77-token context get a smaller, evenly dividing block)."""
+    for d in range(min(target, extent), 0, -1):
+        if extent % d == 0:
+            return d
+    return 1
+
+
+def matmul_f16(w, x, *, block_m=64, block_n=64):
+    """out[n, m] = X[n, k] . W[m, k]^T with W rounded to f16."""
+    m, k = w.shape
+    n, _ = x.shape
+    bm, bn = _fit(m, block_m), _fit(n, block_n)
+    grid = (n // bn, m // bm)
+    return pl.pallas_call(
+        functools.partial(_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(w, x)

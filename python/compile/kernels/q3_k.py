@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: IMAX-restructured Q3_K x Q8_K mat-mul.
+
+The operands arrive in the paper's OP_CVT53 representation (SS III-B): a
+unified 3-bit quant stream (stored q+4) and 5-bit sub-block scales
+(effective scale 2*s5) with the f16-ish super-block scale kept in f32.
+The kernel:
+
+* unpacks 3-bit -> signed int8 in VMEM (the CVT53 unpack path),
+* runs the 16-element sub-block integer dots on the int8 MXU path with
+  int32 accumulation (OP_SML8 / OP_AD24),
+* weights each sub-block by its doubled 5-bit scale in integer domain
+  (the CVT53 scale path), sums per super-block,
+* applies one f32 multiply by d_w * d_x per super-block pair.
+
+interpret=True always (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QK_K = 256
+SUB = 16
+
+
+def _kernel(q3_ref, s5_ref, wd_ref, xq_ref, xd_ref, o_ref, *, bm, bn, k):
+    nsb = k // SUB
+    nb = k // QK_K
+    # CVT53 unpack: stored q+4 in [0,7] -> signed [-4,3].
+    wq = (q3_ref[...].astype(jnp.int32) - 4).reshape(bm, nsb, SUB)
+    xq = xq_ref[...].astype(jnp.int32).reshape(bn, nsb, SUB)
+    group = jax.lax.dot_general(
+        wq,
+        xq,
+        dimension_numbers=(((2,), (2,)), ((1,), (1,))),  # [nsb, bm, bn]
+        preferred_element_type=jnp.int32,
+    )
+    # CVT53 scale path: x (2 * s5), still integer.
+    s5 = (2 * s5_ref[...].astype(jnp.int32)).T  # [nsb, bm]
+    scaled = group * s5[:, :, None]
+    isum = scaled.reshape(nb, QK_K // SUB, bm, bn).sum(axis=1)  # [nb, bm, bn]
+    wd = wd_ref[...].T[:, :, None]  # [nb, bm, 1]
+    xd = xd_ref[...].T[:, None, :]  # [nb, 1, bn]
+    out = (isum.astype(jnp.float32) * wd * xd).sum(axis=0)
+    o_ref[...] = out.T  # [bn, bm]
+
+
+def _fit(extent, target):
+    """Largest divisor of `extent` not exceeding `target` (ragged shapes
+    like the 77-token context get a smaller, evenly dividing block)."""
+    for d in range(min(target, extent), 0, -1):
+        if extent % d == 0:
+            return d
+    return 1
+
+
+def matmul_q3_imax(w_q3, w_s5, w_d, x_qs, x_d, *, block_m=32, block_n=32):
+    """out[n, m] for IMAX-restructured Q3_K weights x Q8_K activations.
+
+    w_q3 int8 [m, k] (q+4), w_s5 int8 [m, k//16], w_d f32 [m, k//256],
+    x_qs int8 [n, k], x_d f32 [n, k//256].
+    """
+    m, k = w_q3.shape
+    n, _ = x_qs.shape
+    nsb, nb = k // SUB, k // QK_K
+    bm, bn = _fit(m, block_m), _fit(n, block_n)
+    grid = (n // bn, m // bm)
+    return pl.pallas_call(
+        functools.partial(_kernel, bm=bm, bn=bn, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, nsb), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, nb), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, nb), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(w_q3, w_s5, w_d, x_qs, x_d)
+
+
+def vmem_bytes(block_m, block_n, k):
+    """VMEM footprint estimate of one grid step."""
+    return (
+        block_m * k  # 3-bit stream (byte-expanded in VMEM)
+        + block_m * (k // SUB)  # 5-bit scales
+        + 4 * block_m * (k // QK_K)
+        + block_n * k
+        + 4 * block_n * (k // QK_K)
+        + 4 * block_m * block_n
+    )

@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: Q8_0 x Q8_0 quantized mat-mul.
+
+TPU adaptation of the paper's IMAX Q8_0 dataflow (Fig. 3) per DESIGN.md
+#Hardware-Adaptation:
+
+* the per-PE LMM staging becomes a BlockSpec-driven HBM->VMEM tile
+  schedule (one (BM, K) weight tile + one (BN, K) activation tile
+  resident per grid step);
+* the OP_SML8 8-bit multiply-add chain aggregating into 24-bit integers
+  becomes an int8 x int8 dot with a widened int32 accumulator
+  (`preferred_element_type=jnp.int32` targets the MXU's integer path);
+* the final f32 multiply by d_w * d_x per 32-block mirrors the shared
+  FMA spine.
+
+interpret=True always: the CPU PJRT client cannot execute Mosaic
+custom-calls; real-TPU perf is estimated from the VMEM footprint and MXU
+utilization in EXPERIMENTS.md #Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QK8_0 = 32
+
+
+def _kernel(wq_ref, wd_ref, xq_ref, xd_ref, o_ref, *, bm, bn, k):
+    nb = k // QK8_0
+    wq = wq_ref[...].reshape(bm, nb, QK8_0)
+    xq = xq_ref[...].reshape(bn, nb, QK8_0)
+    # Per-block integer dot: contract the 32-lane axis with an int32
+    # accumulator (OP_SML8 -> OP_AD24). dot_general batches over blocks.
+    isums = jax.lax.dot_general(
+        wq,
+        xq,
+        dimension_numbers=(((2,), (2,)), ((1,), (1,))),  # [nb, bm, bn]
+        preferred_element_type=jnp.int32,
+    )
+    wd = wd_ref[...]  # [bm, nb]
+    xd = xd_ref[...]  # [bn, nb]
+    scaled = (
+        isums.astype(jnp.float32)
+        * wd.T[:, :, None]  # [nb, bm, 1]
+        * xd.T[:, None, :]  # [nb, 1, bn]
+    )
+    o_ref[...] = scaled.sum(axis=0).T  # [bn, bm]
+
+
+def _fit(extent, target):
+    """Largest divisor of `extent` not exceeding `target` (ragged shapes
+    like the 77-token context get a smaller, evenly dividing block)."""
+    for d in range(min(target, extent), 0, -1):
+        if extent % d == 0:
+            return d
+    return 1
+
+
+def matmul_q8_0(w_qs, w_d, x_qs, x_d, *, block_m=32, block_n=32):
+    """out[n, m] = sum_k W[m, k] * X[n, k], Q8_0-quantized operands.
+
+    w_qs int8 [m, k], w_d f32 [m, k//32], x_qs int8 [n, k], x_d f32
+    [n, k//32]. m, n must divide by the block sizes (pad upstream).
+    """
+    m, k = w_qs.shape
+    n, _ = x_qs.shape
+    nb = k // QK8_0
+    bm, bn = _fit(m, block_m), _fit(n, block_n)
+    grid = (n // bn, m // bm)
+    return pl.pallas_call(
+        functools.partial(_kernel, bm=bm, bn=bn, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, nb), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, nb), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(w_qs, w_d, x_qs, x_d)
+
+
+def vmem_bytes(block_m, block_n, k):
+    """VMEM footprint estimate of one grid step (perf model input)."""
+    nb = k // QK8_0
+    return (
+        block_m * k  # int8 weight tile
+        + block_n * k  # int8 activation tile
+        + 4 * (block_m * nb + block_n * nb)  # scales
+        + 4 * block_m * block_n  # f32 out tile
+    )

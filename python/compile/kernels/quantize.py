@@ -1,0 +1,76 @@
+"""NumPy reference quantizers (build/test-time only).
+
+Mirror rust/src/ggml's quantize_row_* so python tests can fabricate the
+same block decompositions the rust runtime sends to the artifacts.
+"""
+
+import numpy as np
+
+QK8_0 = 32
+QK_K = 256
+
+
+def quantize_q8_0(x):
+    """x: [rows, k] f32 -> (qs int8 [rows,k], d f32 [rows, k//32])."""
+    rows, k = x.shape
+    xb = x.reshape(rows, k // QK8_0, QK8_0)
+    amax = np.abs(xb).max(axis=-1)
+    d = amax / 127.0
+    inv = np.where(d > 0, 1.0 / np.where(d > 0, d, 1.0), 0.0)
+    q = np.round(xb * inv[..., None]).clip(-127, 127).astype(np.int8)
+    return q.reshape(rows, k), d.astype(np.float32)
+
+
+def quantize_q8_k(x):
+    """x: [rows, k] f32 -> (qs int8 [rows,k], d f32 [rows, k//256]).
+
+    GGML's quantize_row_q8_K: the max-magnitude value anchors at -128.
+    """
+    rows, k = x.shape
+    xb = x.reshape(rows, k // QK_K, QK_K)
+    idx = np.abs(xb).argmax(axis=-1)
+    maxv = np.take_along_axis(xb, idx[..., None], axis=-1)[..., 0]
+    iscale = np.where(maxv != 0, -128.0 / np.where(maxv != 0, maxv, 1.0), 0.0)
+    q = np.round(xb * iscale[..., None]).clip(-128, 127).astype(np.int8)
+    d = np.where(iscale != 0, 1.0 / np.where(iscale != 0, iscale, 1.0), 0.0)
+    return q.reshape(rows, k), d.astype(np.float32)
+
+
+def quantize_q3_imax(x):
+    """x: [rows, k] -> IMAX-restructured Q3_K decomposition.
+
+    Returns (q3 uint8 [rows,k] storing q+4, s5 int8 [rows,k//16],
+    d f32 [rows,k//256]). Simplified quantizer (no rmse refinement):
+    per-16 scale from max|x|/4, 6-bit coded against the super-block max,
+    then rounded to 5 bits — the OP_CVT53 representation.
+    """
+    rows, k = x.shape
+    nsb = k // 16
+    xs = x.reshape(rows, nsb, 16)
+    amax = np.abs(xs).max(axis=-1)
+    # Value with the largest magnitude decides the sign (make_q3_quants).
+    idx = np.abs(xs).argmax(axis=-1)
+    maxv = np.take_along_axis(xs, idx[..., None], axis=-1)[..., 0]
+    sub_scale = np.where(maxv != 0, -maxv / 4.0, 0.0)  # = 1/iscale
+
+    nb = k // QK_K
+    ss = sub_scale.reshape(rows, nb, QK_K // 16)
+    aidx = np.abs(ss).argmax(axis=-1)
+    max_scale = np.take_along_axis(ss, aidx[..., None], axis=-1)[..., 0]
+    d = np.where(max_scale != 0, -max_scale / 32.0, 0.0).astype(np.float32)
+
+    coded = np.zeros((rows, nb, QK_K // 16), dtype=np.int8)
+    nz = d != 0
+    coded_f = np.where(d[..., None] != 0, ss / np.where(d[..., None] != 0, d[..., None], 1.0), 0.0)
+    coded = np.round(coded_f).clip(-32, 31).astype(np.int8)
+    # 5-bit approximation: round-half-away division by 2.
+    s5 = np.sign(coded) * ((np.abs(coded.astype(np.int32)) + 1) // 2)
+    s5 = s5.clip(-16, 15).astype(np.int8).reshape(rows, nsb)
+
+    eff = 2.0 * s5.reshape(rows, nb, QK_K // 16).astype(np.float32) * d[..., None]
+    eff_rep = np.repeat(eff.reshape(rows, nsb), 16, axis=1).reshape(rows, nsb, 16)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        q = np.where(eff_rep != 0, xs / np.where(eff_rep != 0, eff_rep, 1.0), 0.0)
+    q3 = (np.round(q).clip(-4, 3) + 4).astype(np.uint8).reshape(rows, k)
+    _ = nz
+    return q3, s5, d

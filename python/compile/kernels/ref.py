@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for the quantized dot-product kernels.
+
+These are the L1 correctness references: NumPy/jnp implementations of the
+GGML block formats (Q8_0 and the IMAX-restructured Q3_K) that the Pallas
+kernels in q8_0.py / q3_k.py must match exactly in dequantized arithmetic.
+They mirror rust/src/ggml (the L3 host reference) — quantization happens
+on the rust side at runtime; here blocks arrive already decomposed into
+integer arrays + scales, which is also how they stream into IMAX's LMM.
+"""
+
+import jax.numpy as jnp
+
+QK8_0 = 32
+QK_K = 256
+
+
+def dequant_q8_0(qs, d):
+    """Dequantize Q8_0 rows.
+
+    qs: int8 [rows, k], d: float32 [rows, k // 32] per-block scales.
+    """
+    rows, k = qs.shape
+    scales = jnp.repeat(d, QK8_0, axis=1)  # [rows, k]
+    return qs.astype(jnp.float32) * scales
+
+
+def matmul_q8_0(w_qs, w_d, x_qs, x_d):
+    """Q8_0 x Q8_0 mat-mul oracle: out[n, m] = sum_k W[m,k] * X[n,k].
+
+    Integer products accumulate per 32-block in int32 (the OP_SML8 /
+    OP_AD24 path), then one f32 scale multiply per block pair — the same
+    arithmetic as ggml's vec_dot_q8_0_q8_0 and the rust simulator.
+    """
+    m, k = w_qs.shape
+    n, _ = x_qs.shape
+    nb = k // QK8_0
+    wq = w_qs.reshape(m, nb, QK8_0).astype(jnp.int32)
+    xq = x_qs.reshape(n, nb, QK8_0).astype(jnp.int32)
+    # isums[m, n, nb] = per-block integer dot.
+    isums = jnp.einsum("mbk,nbk->mnb", wq, xq)
+    scaled = isums.astype(jnp.float32) * w_d[:, None, :] * x_d[None, :, :]
+    return scaled.sum(axis=-1).T  # [n, m]
+
+
+def dequant_q3_imax(q3, scales5, d):
+    """Dequantize IMAX-restructured Q3_K rows.
+
+    q3: uint8 [rows, k] storing q+4 in [0, 7] (the OP_CVT53 3-bit stream),
+    scales5: int8 [rows, k // 16] 5-bit scales (effective scale 2 * s5),
+    d: float32 [rows, k // 256] super-block scales.
+    """
+    rows, k = q3.shape
+    q = q3.astype(jnp.float32) - 4.0
+    s = jnp.repeat(2.0 * scales5.astype(jnp.float32), 16, axis=1)
+    dd = jnp.repeat(d, QK_K, axis=1)
+    return q * s * dd
+
+
+def matmul_q3_imax(w_q3, w_s5, w_d, x_qs, x_d):
+    """IMAX Q3_K x Q8_K mat-mul oracle.
+
+    x_qs: int8 [n, k] Q8_K quants, x_d: float32 [n, k // 256] scales.
+    Per 16-element sub-block: int dot, times 2*s5, summed per super-block
+    in int32, then one f32 multiply by (d_w * d_x).
+    """
+    m, k = w_q3.shape
+    n, _ = x_qs.shape
+    nsb = k // 16  # sub-blocks
+    nb = k // QK_K
+    wq = (w_q3.reshape(m, nsb, 16).astype(jnp.int32) - 4)
+    xq = x_qs.reshape(n, nsb, 16).astype(jnp.int32)
+    group = jnp.einsum("msk,nsk->mns", wq, xq)  # [m, n, nsb]
+    scaled = group * (2 * w_s5.astype(jnp.int32))[:, None, :]
+    isum = scaled.reshape(m, n, nb, QK_K // 16).sum(axis=-1)  # int32
+    out = isum.astype(jnp.float32) * w_d[:, None, :] * x_d[None, :, :]
+    return out.sum(axis=-1).T
+
+
+def matmul_f16(w, x):
+    """F16-weight mat-mul oracle (conv im2col path): out[n, m]."""
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32).T)

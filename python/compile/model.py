@@ -1,0 +1,127 @@
+"""L2: the jax compute graph — a mini SD transformer block with quantized
+linears, calling the L1 Pallas kernels.
+
+This is the U-Net bottleneck of the rust pipeline expressed in jax:
+self-attention + cross-attention to the 77-token text context + gated
+feed-forward, with every eligible linear weight Q8_0-quantized at build
+time (baked into the HLO as constants) and executed through
+kernels.q8_0.matmul_q8_0 — so the exported artifact exercises exactly
+the offloaded arithmetic. Attention scores stay f32 (sd.cpp policy) and
+the projection uses the f16 kernel.
+
+Python runs ONLY at build time: aot.py lowers `transformer_block` once to
+HLO text and the rust runtime executes it thereafter.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels.f16_dot import matmul_f16
+from .kernels.q8_0 import matmul_q8_0
+from .kernels.quantize import quantize_q8_0
+
+SEQ = 64        # 8x8 bottleneck tokens
+DIM = 256       # transformer width (k-quant eligible)
+CTX_LEN = 77    # text tokens
+HEADS = 4
+
+
+def _weights(seed):
+    """Synthesize + quantize the block's weights (build-time only)."""
+    r = np.random.RandomState(seed)
+
+    def lin(dout, din):
+        w = (r.randn(dout, din) / np.sqrt(din)).astype(np.float32)
+        qs, d = quantize_q8_0(w)
+        return jnp.asarray(qs), jnp.asarray(d)
+
+    return {
+        "q": lin(DIM, DIM),
+        "k": lin(DIM, DIM),
+        "v": lin(DIM, DIM),
+        "o": lin(DIM, DIM),
+        "xq": lin(DIM, DIM),
+        "xk": lin(DIM, DIM),
+        "xv": lin(DIM, DIM),
+        "xo": lin(DIM, DIM),
+        "ff1": lin(2 * DIM, DIM),
+        "ff2": lin(DIM, DIM),
+        # proj stays f16 (the conv-ish path).
+        "proj": jnp.asarray((r.randn(DIM, DIM) / np.sqrt(DIM)).astype(np.float32)),
+    }
+
+
+def _qmm(w, x):
+    """Quantized linear: quantize activations to Q8_0, run the kernel."""
+    # Activation quantization in jnp (the host marshalling step).
+    n, k = x.shape
+    xb = x.reshape(n, k // 32, 32)
+    amax = jnp.abs(xb).max(axis=-1)
+    d = amax / 127.0
+    inv = jnp.where(d > 0, 1.0 / jnp.where(d > 0, d, 1.0), 0.0)
+    q = jnp.clip(jnp.round(xb * inv[..., None]), -127, 127).astype(jnp.int8)
+    return matmul_q8_0(w[0], w[1], q.reshape(n, k), d)
+
+
+def _attention(q, k, v):
+    hd = DIM // HEADS
+    outs = []
+    for h in range(HEADS):
+        qh = q[:, h * hd:(h + 1) * hd]
+        kh = k[:, h * hd:(h + 1) * hd]
+        vh = v[:, h * hd:(h + 1) * hd]
+        s = (qh @ kh.T) / np.sqrt(hd)
+        a = jnp.exp(s - s.max(axis=-1, keepdims=True))
+        a = a / a.sum(axis=-1, keepdims=True)
+        outs.append(a @ vh)
+    return jnp.concatenate(outs, axis=-1)
+
+
+def make_transformer_block(seed=0x51D):
+    """Returns fn(x [SEQ, DIM], ctx [CTX_LEN, DIM]) -> [SEQ, DIM]."""
+    w = _weights(seed)
+
+    def block(x, ctx):
+        h = matmul_f16(w["proj"], x)                      # f16 proj-in
+        # Self-attention.
+        a = _attention(_qmm(w["q"], h), _qmm(w["k"], h), _qmm(w["v"], h))
+        h = h + _qmm(w["o"], a)
+        # Cross-attention.
+        a = _attention(_qmm(w["xq"], h), _qmm(w["xk"], ctx), _qmm(w["xv"], ctx))
+        h = h + _qmm(w["xo"], a)
+        # Gated FF (GEGLU-style).
+        m = _qmm(w["ff1"], h)
+        val, gate = m[:, :DIM], m[:, DIM:]
+        g = 0.5 * gate * (1.0 + jnp.tanh(0.7978845608 * (gate + 0.044715 * gate**3)))
+        h = h + _qmm(w["ff2"], val * g)
+        return (h,)
+
+    return block
+
+
+def make_q8_0_matmul(m, n, k):
+    """Standalone Q8_0 mat-mul entry (kernel-artifact for the runtime)."""
+
+    def fn(wq, wd, xq, xd):
+        return (matmul_q8_0(wq, wd, xq, xd, block_m=min(32, m), block_n=min(32, n)),)
+
+    return fn
+
+
+def make_q3_imax_matmul(m, n, k):
+    """Standalone IMAX-Q3_K mat-mul entry."""
+    from .kernels.q3_k import matmul_q3_imax
+
+    def fn(q3, s5, wd, xq, xd):
+        return (matmul_q3_imax(q3, s5, wd, xq, xd, block_m=min(32, m), block_n=min(32, n)),)
+
+    return fn
+
+
+def make_f16_matmul(m, n, k):
+    """Standalone F16 mat-mul entry."""
+
+    def fn(w, x):
+        return (matmul_f16(w, x, block_m=min(64, m), block_n=min(64, n)),)
+
+    return fn

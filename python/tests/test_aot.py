@@ -1,0 +1,25 @@
+"""AOT export tests: HLO text artifacts parse and contain the entry."""
+
+import os
+import subprocess
+import sys
+
+
+def test_aot_writes_parseable_hlo(tmp_path):
+    out = tmp_path / "model.hlo.txt"
+    env = dict(os.environ)
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out)],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stderr
+    for name in ["model.hlo.txt", "q8_0_matmul.hlo.txt", "q3k_matmul.hlo.txt", "f16_matmul.hlo.txt"]:
+        path = tmp_path / name
+        assert path.exists(), name
+        text = path.read_text()
+        assert text.startswith("HloModule"), f"{name} must be HLO text"
+        assert "ENTRY" in text

@@ -1,0 +1,151 @@
+"""Kernel vs ref allclose — the CORE L1 correctness signal.
+
+Hypothesis sweeps shapes and value ranges; every Pallas kernel must match
+its pure-jnp oracle to float tolerance (identical arithmetic, different
+scheduling) and the plain f32 mat-mul within quantization noise.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.f16_dot import matmul_f16
+from compile.kernels.q3_k import matmul_q3_imax
+from compile.kernels.q8_0 import matmul_q8_0, vmem_bytes
+from compile.kernels.quantize import quantize_q3_imax, quantize_q8_0, quantize_q8_k
+
+
+def rnd(shape, seed, scale=1.0):
+    return (np.random.RandomState(seed).randn(*shape) * scale).astype(np.float32)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 32]),
+    n=st.sampled_from([8, 16, 32]),
+    kb=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 8.0]),
+)
+def test_q8_0_kernel_matches_ref(m, n, kb, seed, scale):
+    k = 32 * kb
+    w = rnd((m, k), seed, scale)
+    x = rnd((n, k), seed + 1, scale)
+    wq, wd = quantize_q8_0(w)
+    xq, xd = quantize_q8_0(x)
+    got = matmul_q8_0(jnp.asarray(wq), jnp.asarray(wd), jnp.asarray(xq), jnp.asarray(xd),
+                      block_m=min(8, m), block_n=min(8, n))
+    want = ref.matmul_q8_0(jnp.asarray(wq), jnp.asarray(wd), jnp.asarray(xq), jnp.asarray(xd))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_q8_0_close_to_f32_matmul():
+    w = rnd((16, 256), 7)
+    x = rnd((8, 256), 8)
+    wq, wd = quantize_q8_0(w)
+    xq, xd = quantize_q8_0(x)
+    got = np.asarray(matmul_q8_0(jnp.asarray(wq), jnp.asarray(wd), jnp.asarray(xq), jnp.asarray(xd)))
+    want = x @ w.T
+    tol = 0.02 * np.abs(want).max() + 0.05
+    assert np.abs(got - want).max() < tol, "quantization noise bound"
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.sampled_from([8, 16]),
+    n=st.sampled_from([8, 16]),
+    kb=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_q3_imax_kernel_matches_ref(m, n, kb, seed):
+    k = 256 * kb
+    w = rnd((m, k), seed)
+    x = rnd((n, k), seed + 1)
+    q3, s5, d = quantize_q3_imax(w)
+    xq, xd = quantize_q8_k(x)
+    got = matmul_q3_imax(
+        jnp.asarray(q3.astype(np.int8)), jnp.asarray(s5), jnp.asarray(d),
+        jnp.asarray(xq), jnp.asarray(xd), block_m=min(8, m), block_n=min(8, n))
+    want = ref.matmul_q3_imax(
+        jnp.asarray(q3.astype(np.int8)), jnp.asarray(s5), jnp.asarray(d),
+        jnp.asarray(xq), jnp.asarray(xd))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_q3_imax_tracks_f32_matmul():
+    w = rnd((8, 512), 3)
+    x = rnd((4, 512), 4)
+    q3, s5, d = quantize_q3_imax(w)
+    xq, xd = quantize_q8_k(x)
+    got = np.asarray(matmul_q3_imax(
+        jnp.asarray(q3.astype(np.int8)), jnp.asarray(s5), jnp.asarray(d),
+        jnp.asarray(xq), jnp.asarray(xd)))
+    want = x @ w.T
+    # 3-bit weights + 5-bit scales: coarse.
+    denom = np.abs(want).max()
+    assert np.abs(got - want).max() / denom < 0.35
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.sampled_from([16, 64]),
+    n=st.sampled_from([16, 64]),
+    k=st.sampled_from([32, 96, 256]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_f16_kernel_matches_ref(m, n, k, seed):
+    w = rnd((m, k), seed)
+    x = rnd((n, k), seed + 1)
+    got = matmul_f16(jnp.asarray(w), jnp.asarray(x), block_m=16, block_n=16)
+    want = ref.matmul_f16(jnp.asarray(w).astype(jnp.float16), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_block_shape_invariance():
+    # Different BlockSpec tilings must not change the numbers.
+    w = rnd((32, 256), 11)
+    x = rnd((32, 256), 12)
+    wq, wd = quantize_q8_0(w)
+    xq, xd = quantize_q8_0(x)
+    args = (jnp.asarray(wq), jnp.asarray(wd), jnp.asarray(xq), jnp.asarray(xd))
+    a = np.asarray(matmul_q8_0(*args, block_m=8, block_n=8))
+    b = np.asarray(matmul_q8_0(*args, block_m=32, block_n=16))
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_adversarial_extremes():
+    # All-max-magnitude blocks: the 24-bit envelope case.
+    w = np.full((8, 64), 3.0, dtype=np.float32)
+    x = np.full((8, 64), -3.0, dtype=np.float32)
+    wq, wd = quantize_q8_0(w)
+    xq, xd = quantize_q8_0(x)
+    got = np.asarray(matmul_q8_0(jnp.asarray(wq), jnp.asarray(wd), jnp.asarray(xq), jnp.asarray(xd)))
+    np.testing.assert_allclose(got, np.full((8, 8), -9.0 * 64), rtol=1e-3)
+
+
+def test_zero_inputs():
+    wq, wd = quantize_q8_0(np.zeros((8, 64), np.float32))
+    xq, xd = quantize_q8_0(np.zeros((8, 64), np.float32))
+    got = np.asarray(matmul_q8_0(jnp.asarray(wq), jnp.asarray(wd), jnp.asarray(xq), jnp.asarray(xd)))
+    assert (got == 0).all()
+
+
+def test_vmem_budget_of_default_blocks():
+    # Default tiling must fit a TPU core's ~16 MiB VMEM with huge margin.
+    assert vmem_bytes(32, 32, 4096) < 1 << 20
+
+
+@pytest.mark.parametrize("kb", [1, 2, 4])
+def test_q8_k_quantizer_anchor(kb):
+    x = rnd((2, 256 * kb), 21)
+    q, d = quantize_q8_k(x)
+    assert q.min() >= -128 and q.max() <= 127
+    # The max-magnitude element must sit at -128 exactly.
+    xb = x.reshape(2, kb, 256)
+    qb = q.reshape(2, kb, 256)
+    for r in range(2):
+        for b in range(kb):
+            idx = np.abs(xb[r, b]).argmax()
+            assert qb[r, b, idx] == -128

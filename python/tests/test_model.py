@@ -1,0 +1,47 @@
+"""L2 model tests: shapes, determinism, quantization closeness."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+
+
+def _inputs(seed=5):
+    r = np.random.RandomState(seed)
+    x = r.randn(model.SEQ, model.DIM).astype(np.float32) * 0.5
+    ctx = r.randn(model.CTX_LEN, model.DIM).astype(np.float32) * 0.3
+    return jnp.asarray(x), jnp.asarray(ctx)
+
+
+def test_block_shape_and_determinism():
+    block = model.make_transformer_block()
+    x, ctx = _inputs()
+    (a,) = block(x, ctx)
+    (b,) = block(x, ctx)
+    assert a.shape == (model.SEQ, model.DIM)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.isfinite(np.asarray(a)).all()
+
+
+def test_block_responds_to_context():
+    block = model.make_transformer_block()
+    x, ctx = _inputs()
+    (a,) = block(x, ctx)
+    (b,) = block(x, ctx * -1.0)
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_different_seeds_different_weights():
+    x, ctx = _inputs()
+    (a,) = model.make_transformer_block(seed=1)(x, ctx)
+    (b,) = model.make_transformer_block(seed=2)(x, ctx)
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_standalone_kernel_entries_run():
+    fn = model.make_q8_0_matmul(8, 8, 64)
+    wq = jnp.zeros((8, 64), jnp.int8)
+    wd = jnp.zeros((8, 2), jnp.float32)
+    (out,) = fn(wq, wd, wq, wd)
+    assert out.shape == (8, 8)
+    assert (np.asarray(out) == 0).all()

@@ -1,0 +1,108 @@
+//! Design-choice ablations called out in DESIGN.md:
+//!
+//! 1. **5-bit scale approximation** (§III-B "almost no effect"):
+//!    dequantization RMSE and dot-product error, exact 6-bit vs OP_CVT53
+//!    5-bit scales.
+//! 2. **LMM capacity sweep**: LOAD amplification vs LMM size (the 512 KB
+//!    configuration is the paper's; smaller LMMs re-stream weights more).
+//! 3. **Lane-group geometry**: EXEC cycles per MAC for the two kernel
+//!    mappings (46 vs 51 PEs).
+
+use imax_sd::ggml::{q3_k, q8_k};
+use imax_sd::imax::lane::{LaneSim, TilePlan};
+use imax_sd::imax::{ImaxConfig, KernelConfig, KernelKind};
+use imax_sd::util::rng::Xoshiro256pp;
+use imax_sd::util::tables::Table;
+
+fn random(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Xoshiro256pp::seed_from_u64(seed);
+    let mut v = vec![0.0f32; n];
+    r.fill_normal(&mut v, 0.8);
+    v
+}
+
+fn main() {
+    // --- Ablation 1: 5-bit scale approximation.
+    let n = 256 * 64;
+    let x = random(n, 1);
+    let blocks = q3_k::quantize_row(&x);
+    let exact = q3_k::dequantize_row(&blocks);
+    let approx = q3_k::dequantize_row_imax5(&blocks);
+    let den: f32 = x.iter().map(|v| v * v).sum();
+    let rmse = |y: &[f32]| {
+        (x.iter().zip(y).map(|(a, b)| (a - b).powi(2)).sum::<f32>() / den).sqrt()
+    };
+    let acts = q8_k::quantize_row(&random(n, 2));
+    let d_exact = q3_k::vec_dot(&blocks, &acts);
+    let d_approx = q3_k::vec_dot_imax5(&blocks, &acts);
+    let mut t = Table::new(
+        "Ablation 1: Q3_K 6-bit vs OP_CVT53 5-bit scales (paper: 'almost no effect')",
+        &["metric", "6-bit exact", "5-bit IMAX", "delta"],
+    );
+    t.row(&[
+        "dequant rel RMSE".into(),
+        format!("{:.4}", rmse(&exact)),
+        format!("{:.4}", rmse(&approx)),
+        format!("{:+.4}", rmse(&approx) - rmse(&exact)),
+    ]);
+    t.row(&[
+        "dot(16k elems)".into(),
+        format!("{d_exact:.3}"),
+        format!("{d_approx:.3}"),
+        format!("{:+.2}%", 100.0 * (d_approx - d_exact) / d_exact.abs().max(1e-6)),
+    ]);
+    t.print();
+
+    // --- Ablation 2: LMM capacity sweep (LOAD amplification).
+    println!();
+    let mut t = Table::new(
+        "Ablation 2: LOAD bytes vs LMM capacity (mul_mat 1280x4096x1280, Q8_0)",
+        &["LMM", "act tiles", "w tiles", "DMA load", "amplification"],
+    );
+    let (m, nn, k) = (1280usize, 4096usize, 1280usize);
+    let base = {
+        let mut cfg = ImaxConfig::fpga(1);
+        cfg.lmm_bytes = usize::MAX / 2;
+        TilePlan::new(&cfg, KernelKind::Q8_0, m, nn, k).unwrap().load_bytes()
+    };
+    for kb in [128usize, 256, 512, 1024, 4096] {
+        let mut cfg = ImaxConfig::fpga(1);
+        cfg.lmm_bytes = kb * 1024;
+        match TilePlan::new(&cfg, KernelKind::Q8_0, m, nn, k) {
+            Ok(p) => {
+                t.row(&[
+                    format!("{kb} KiB"),
+                    format!("{}", p.a_tiles()),
+                    format!("{}", p.w_tiles()),
+                    imax_sd::util::stats::fmt_bytes(p.load_bytes() as f64),
+                    format!("{:.2}x", p.load_bytes() as f64 / base as f64),
+                ]);
+            }
+            Err(_) => {
+                t.row(&[format!("{kb} KiB"), "-".into(), "-".into(), "OOM".into(), "-".into()]);
+            }
+        }
+    }
+    t.print();
+
+    // --- Ablation 3: kernel-mapping geometry.
+    println!();
+    let mut t = Table::new(
+        "Ablation 3: kernel mapping geometry (EXEC efficiency)",
+        &["kernel", "PEs", "MACs/beat", "EXEC cyc (64x64x4096)", "cyc/MAC"],
+    );
+    for kind in [KernelKind::Q8_0, KernelKind::Q3K] {
+        let cfg = KernelConfig::for_kind(kind);
+        let lane = LaneSim::new(ImaxConfig::fpga(1));
+        let bd = lane.analytic_mul_mat(kind, 64, 64, 4096, true).unwrap();
+        let macs = (64 * 64 * 4096) as f64;
+        t.row(&[
+            kind.name().into(),
+            format!("{}", cfg.pe_count()),
+            format!("{}", cfg.macs_per_beat()),
+            format!("{}", bd.exec),
+            format!("{:.3}", bd.exec as f64 / macs),
+        ]);
+    }
+    t.print();
+}

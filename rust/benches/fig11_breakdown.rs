@@ -1,0 +1,32 @@
+//! Regenerates **Fig. 11**: IMAX processing-time breakdown
+//! (EXEC/LOAD/DRAIN/CONF/REGV/RANGE) for the Q3_K and Q8_0 kernels on
+//! the FPGA prototype.
+//!
+//! Paper shape: LOAD dominates both kernels; Q8_0's transfer volume
+//! (8.5 b/w vs 3.4375) makes its LOAD share larger.
+
+use imax_sd::device::ImaxDevice;
+use imax_sd::sd::arch::sd_turbo_512;
+use imax_sd::sd::QuantModel;
+use imax_sd::util::tables::StackedBars;
+
+fn main() {
+    let trace = sd_turbo_512(1);
+    let dev = ImaxDevice::fpga(1);
+    let mut sb = StackedBars::new(
+        "Fig. 11: IMAX FPGA processing time breakdown (s)",
+        "s",
+        &["EXEC", "LOAD", "DRAIN", "CONF", "REGV", "RANGE"],
+    );
+    for model in [QuantModel::Q3K, QuantModel::Q8_0] {
+        let p = dev.offload_phase_seconds(&trace, model);
+        sb.bar(model.name(), &p.fig11_order());
+        println!(
+            "{:>5}: EXEC {:.2}s LOAD {:.2}s DRAIN {:.2}s CONF {:.4}s REGV {:.3}s RANGE {:.3}s  total {:.2}s",
+            model.name(), p.exec, p.load, p.drain, p.conf, p.regv, p.range, p.total()
+        );
+    }
+    println!();
+    sb.print();
+    println!("\npaper shape: LOAD-dominated; Q8_0 LOAD > Q3_K LOAD");
+}

@@ -1,0 +1,36 @@
+//! Regenerates **Fig. 6** (Q3_K) and **Fig. 7** (Q8_0): end-to-end
+//! latency for one 512×512 SD-Turbo generation on every device.
+//!
+//! Paper anchors: Fig.6 ARM 809.7 / FPGA 790.3 / ASIC 754.5 / Xeon 59.3 /
+//! GPU 16.2 s. Fig.7 ARM 625.1 / FPGA 654.7 / ASIC 558.0 s — note the
+//! crossover: the FPGA *loses* to standalone ARM on Q8_0 (transfer
+//! volume), the paper's central finding.
+
+use imax_sd::device::{arm_a72, gtx_1080ti, xeon_w5, Device, ImaxDevice};
+use imax_sd::sd::arch::sd_turbo_512;
+use imax_sd::sd::QuantModel;
+use imax_sd::util::tables::BarChart;
+
+fn main() {
+    let trace = sd_turbo_512(1);
+    for (fig, model) in [(6, QuantModel::Q3K), (7, QuantModel::Q8_0)] {
+        let devices: Vec<(String, f64)> = vec![
+            ("ARM Cortex-A72".into(), arm_a72().e2e_seconds(&trace, model)),
+            ("IMAX3 FPGA 145MHz".into(), ImaxDevice::fpga(1).e2e_seconds(&trace, model)),
+            ("IMAX3 ASIC 840MHz".into(), ImaxDevice::asic(1).e2e_seconds(&trace, model)),
+            ("Xeon w5-2465X".into(), xeon_w5().e2e_seconds(&trace, model)),
+            ("GTX 1080 Ti".into(), gtx_1080ti().e2e_seconds(&trace, model)),
+        ];
+        let mut c = BarChart::new(
+            &format!("Fig. {fig}: E2E latency, {} model inference (s)", model.name()),
+            "s",
+        )
+        .log();
+        for (name, secs) in &devices {
+            c.bar(name, *secs);
+        }
+        c.print();
+        println!();
+    }
+    println!("paper anchors: Fig6 809.7/790.3/754.5/59.3/16.2  Fig7 625.1/654.7/558.0/~60/~15");
+}

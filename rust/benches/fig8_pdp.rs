@@ -1,0 +1,34 @@
+//! Regenerates **Fig. 8**: Power-Delay Product per device, both models.
+//!
+//! Paper findings to reproduce: ARM lowest; IMAX-ASIC beats Xeon on both
+//! models; IMAX-ASIC beats the GPU on Q3_K.
+
+use imax_sd::device::{arm_a72, gtx_1080ti, pdp_joules, xeon_w5, Device, ImaxDevice};
+use imax_sd::sd::arch::sd_turbo_512;
+use imax_sd::sd::QuantModel;
+use imax_sd::util::tables::BarChart;
+
+fn main() {
+    let trace = sd_turbo_512(1);
+    for model in [QuantModel::Q3K, QuantModel::Q8_0] {
+        let mut c = BarChart::new(
+            &format!("Fig. 8 ({} model): PDP = phase-weighted energy (J)", model.name()),
+            "J",
+        )
+        .log();
+        let devs: Vec<Box<dyn Device>> = vec![
+            Box::new(arm_a72()),
+            Box::new(ImaxDevice::fpga(1)),
+            Box::new(ImaxDevice::asic(1)),
+            Box::new(xeon_w5()),
+            Box::new(gtx_1080ti()),
+        ];
+        for d in &devs {
+            let e = pdp_joules(d.as_ref(), &trace, model);
+            c.bar(&e.device, e.joules);
+        }
+        c.print();
+        println!();
+    }
+    println!("paper shape: ARM lowest; ASIC < Xeon (both); ASIC < GPU (Q3_K)");
+}

@@ -1,0 +1,42 @@
+//! Regenerates **Fig. 9** (Q3_K) and **Fig. 10** (Q8_0): offloaded-kernel
+//! execution time vs. thread/lane count (1–8) per device.
+//!
+//! Paper findings: the 145 MHz FPGA beats the ARM host at 1 lane; the
+//! 840 MHz ASIC is competitive with the Xeon; the GPU stays ahead; IMAX
+//! scales efficiently to 2 lanes then saturates (dual-core host supply,
+//! §V-A).
+
+use imax_sd::device::{arm_a72, gtx_1080ti, xeon_w5, Device, ImaxDevice};
+use imax_sd::sd::arch::sd_turbo_512;
+use imax_sd::sd::QuantModel;
+use imax_sd::util::tables::Table;
+
+fn main() {
+    let trace = sd_turbo_512(1);
+    for (fig, model) in [(9, QuantModel::Q3K), (10, QuantModel::Q8_0)] {
+        let mut t = Table::new(
+            &format!(
+                "Fig. {fig}: {} kernel execution time (s) vs threads/lanes",
+                model.name()
+            ),
+            &["Device", "1", "2", "3", "4", "6", "8"],
+        );
+        let devs: Vec<Box<dyn Device>> = vec![
+            Box::new(arm_a72()),
+            Box::new(ImaxDevice::fpga(1)),
+            Box::new(ImaxDevice::asic(1)),
+            Box::new(xeon_w5()),
+            Box::new(gtx_1080ti()),
+        ];
+        for d in &devs {
+            let mut row = vec![d.name()];
+            for lanes in [1usize, 2, 3, 4, 6, 8] {
+                row.push(format!("{:.2}", d.kernel_seconds(&trace, model, lanes)));
+            }
+            t.row(&row);
+        }
+        t.print();
+        println!();
+    }
+    println!("shape checks: FPGA(1) < ARM(1); ASIC ~ Xeon(16t); knee at 2 lanes");
+}

@@ -1,0 +1,103 @@
+//! §VI future-work projections: the three follow-ups the paper names,
+//! quantified on the calibrated substrate.
+//!
+//! 1. offload-ratio increase (F16 kernel) — with the prototype DMA it
+//!    REGRESSES (LOAD-bound, the Fig. 11 lesson); with a production
+//!    interconnect it approaches the CPU class.
+//! 2. multi-core host integration — lifts the Fig. 9/10 lane ceiling.
+//! 3. resolution scalability — e2e vs image size per device.
+
+use imax_sd::device::future::ImaxFutureDevice;
+use imax_sd::device::{arm_a72, xeon_w5, Device, ImaxDevice};
+use imax_sd::imax::ImaxConfig;
+use imax_sd::sd::arch::{clip_text_sd15, unet_sd15, vae_decoder_sd15};
+use imax_sd::sd::{QuantModel, WorkloadTrace};
+use imax_sd::util::tables::Table;
+
+fn sd_at(latent: usize) -> WorkloadTrace {
+    let mut t = clip_text_sd15();
+    t.extend(unet_sd15(latent));
+    t.extend(vae_decoder_sd15(latent));
+    t
+}
+
+fn main() {
+    let trace = sd_at(64);
+    let m = QuantModel::Q8_0;
+
+    // --- 1. Offload-ratio sweep.
+    let mut t = Table::new(
+        "Future work 1: offload ratio vs e2e (Q8_0 model, ASIC)",
+        &["configuration", "offload %", "e2e (s)", "vs baseline"],
+    );
+    let base = ImaxDevice::asic(1).e2e_seconds(&trace, m);
+    let rows: Vec<(String, f64, f64)> = vec![
+        {
+            let d = ImaxFutureDevice::baseline(ImaxConfig::asic(1));
+            ("quantized kernels only (paper)".into(), d.offload_ratio(&trace, m), d.e2e_seconds(&trace, m))
+        },
+        {
+            let d = ImaxFutureDevice::extended(ImaxConfig::asic(1), 2);
+            ("+F16 kernel, prototype DMA".into(), d.offload_ratio(&trace, m), d.e2e_seconds(&trace, m))
+        },
+        {
+            let mut imax = ImaxConfig::asic(1);
+            imax.dma_bytes_per_cycle = 8.0;
+            let d = ImaxFutureDevice::extended(imax, 2);
+            ("+F16 kernel, 6.7 GB/s DMA".into(), d.offload_ratio(&trace, m), d.e2e_seconds(&trace, m))
+        },
+        {
+            let mut imax = ImaxConfig::asic(1);
+            imax.dma_bytes_per_cycle = 8.0;
+            let d = ImaxFutureDevice::extended(imax, 8);
+            ("+F16, fast DMA, 8-core host".into(), d.offload_ratio(&trace, m), d.e2e_seconds(&trace, m))
+        },
+    ];
+    for (name, ratio, e2e) in rows {
+        t.row(&[
+            name,
+            format!("{:.1}", ratio * 100.0),
+            format!("{e2e:.1}"),
+            format!("{:.2}x", base / e2e),
+        ]);
+    }
+    t.print();
+    println!("(Xeon reference: {:.1} s)\n", xeon_w5().e2e_seconds(&trace, m));
+
+    // --- 2. Host-core sweep of the lane ceiling.
+    let mut t = Table::new(
+        "Future work 2: Q3_K kernel seconds vs lanes, by host cores (FPGA)",
+        &["host cores", "1", "2", "4", "8 lanes"],
+    );
+    for cores in [2usize, 4, 8] {
+        let mut d = ImaxFutureDevice::baseline(ImaxConfig::fpga(1));
+        d.host_cores = cores;
+        let mut row = vec![format!("{cores}")];
+        for lanes in [1usize, 2, 4, 8] {
+            row.push(format!("{:.2}", d.kernel_seconds(&trace, QuantModel::Q3K, lanes)));
+        }
+        t.row(&row);
+    }
+    t.print();
+    println!();
+
+    // --- 3. Resolution scalability (paper: "an important avenue").
+    let mut t = Table::new(
+        "Future work 3: e2e (s) vs image resolution (Q8_0 model)",
+        &["resolution", "GMACs", "ARM", "IMAX FPGA", "IMAX ASIC", "Xeon"],
+    );
+    for latent in [32usize, 64, 96, 128] {
+        let tr = sd_at(latent);
+        t.row(&[
+            format!("{}x{}", latent * 8, latent * 8),
+            format!("{:.0}", tr.total_macs() as f64 / 1e9),
+            format!("{:.0}", arm_a72().e2e_seconds(&tr, m)),
+            format!("{:.0}", ImaxDevice::fpga(1).e2e_seconds(&tr, m)),
+            format!("{:.0}", ImaxDevice::asic(1).e2e_seconds(&tr, m)),
+            format!("{:.1}", xeon_w5().e2e_seconds(&tr, m)),
+        ]);
+    }
+    t.print();
+    println!("\nfinding: the FPGA-vs-ARM crossover persists at every resolution —");
+    println!("transfer volume scales with the same N(tokens) as the compute.");
+}

@@ -1,0 +1,97 @@
+//! Kernel micro-benchmarks (the §Perf instrument): host GGML vec-dots,
+//! the IMAX functional simulator, and PJRT artifact dispatch.
+
+use imax_sd::ggml::{q3_k, q8_0, q8_k, DType, Tensor};
+use imax_sd::imax::kernels::{dot_q3_k, dot_q8_0};
+use imax_sd::imax::KernelConfig;
+use imax_sd::util::bench::{bench_throughput, BenchResult};
+use imax_sd::util::rng::Xoshiro256pp;
+use std::time::Duration;
+
+fn random(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Xoshiro256pp::seed_from_u64(seed);
+    let mut v = vec![0.0f32; n];
+    r.fill_normal(&mut v, 0.7);
+    v
+}
+
+fn main() {
+    let budget = Duration::from_millis(300);
+    let k = 4096usize;
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // Host quantized vec-dots (the ARM/Xeon kernel analog).
+    let w8 = q8_0::quantize_row(&random(k, 1));
+    let a8 = q8_0::quantize_row(&random(k, 2));
+    results.push(bench_throughput("ggml q8_0 vec_dot (K=4096)", 10, budget, k as f64, || {
+        std::hint::black_box(q8_0::vec_dot(&w8, &a8));
+    }));
+
+    let w3 = q3_k::quantize_row(&random(k, 3));
+    let a3 = q8_k::quantize_row(&random(k, 4));
+    results.push(bench_throughput("ggml q3_k vec_dot (K=4096)", 10, budget, k as f64, || {
+        std::hint::black_box(q3_k::vec_dot(&w3, &a3));
+    }));
+    results.push(bench_throughput("ggml q3_k vec_dot imax5 (K=4096)", 10, budget, k as f64, || {
+        std::hint::black_box(q3_k::vec_dot_imax5(&w3, &a3));
+    }));
+
+    // IMAX functional simulator dots.
+    let c8 = KernelConfig::q8_0();
+    results.push(bench_throughput("imax-sim q8_0 dot (K=4096)", 10, budget, k as f64, || {
+        std::hint::black_box(dot_q8_0(&c8, &w8, &a8));
+    }));
+    let c3 = KernelConfig::q3_k();
+    results.push(bench_throughput("imax-sim q3_k dot (K=4096)", 10, budget, k as f64, || {
+        std::hint::black_box(dot_q3_k(&c3, &w3, &a3));
+    }));
+
+    // Quantization (the host marshalling cost).
+    let acts = random(k, 5);
+    results.push(bench_throughput("quantize_row q8_0 (K=4096)", 10, budget, k as f64, || {
+        std::hint::black_box(q8_0::quantize_row(&acts));
+    }));
+    results.push(bench_throughput("quantize_row q8_K (K=4096)", 10, budget, k as f64, || {
+        std::hint::black_box(q8_k::quantize_row(&acts));
+    }));
+
+    // Host mul_mat across threads.
+    let w = Tensor::f32(64, 1024, random(64 * 1024, 6)).quantize(DType::Q8_0);
+    let x = Tensor::f32(32, 1024, random(32 * 1024, 7));
+    for threads in [1usize, 2, 4] {
+        let macs = (64 * 1024 * 32) as f64;
+        results.push(bench_throughput(
+            &format!("ggml mul_mat q8_0 64x32x1024 ({threads}t)"),
+            3,
+            budget,
+            macs,
+            || {
+                std::hint::black_box(imax_sd::ggml::mul_mat(&w, &x, threads));
+            },
+        ));
+    }
+
+    // PJRT dispatch (when artifacts exist).
+    if let Some(dir) = imax_sd::runtime::find_artifact_dir() {
+        let mut rt = imax_sd::runtime::ArtifactRuntime::new(dir).unwrap();
+        rt.load("f16_matmul.hlo.txt").unwrap();
+        let (m, n, kk) = (64usize, 64usize, 288usize);
+        let wl = imax_sd::runtime::client::literal_f32(&random(m * kk, 8), m, kk).unwrap();
+        let xl = imax_sd::runtime::client::literal_f32(&random(n * kk, 9), n, kk).unwrap();
+        let exe = rt.load("f16_matmul.hlo.txt").unwrap();
+        results.push(bench_throughput(
+            "pjrt f16_matmul artifact 64x64x288",
+            3,
+            budget,
+            (m * n * kk) as f64,
+            || {
+                std::hint::black_box(exe.run_f32(&[wl.clone(), xl.clone()]).unwrap());
+            },
+        ));
+    }
+
+    println!("== kernel micro-benchmarks (items/s = elements or MACs) ==");
+    for r in &results {
+        println!("{}", r.line());
+    }
+}

@@ -1,0 +1,60 @@
+//! Regenerates **Table I**: breakdown of dot-product execution time by
+//! quantized type for the Q3_K and Q8_0 models.
+//!
+//! The paper profiles stable-diffusion.cpp's mat-mul kernels ("pure
+//! computation time with memory copy overhead excluded"); we price the
+//! reconstructed SD-Turbo 512×512 trace on the calibrated Xeon model
+//! (see DESIGN.md §Calibration).
+
+use imax_sd::device::baseline::xeon_w5;
+use imax_sd::sd::arch::sd_turbo_512;
+use imax_sd::sd::profiler::{paper_table1, table1_shares};
+use imax_sd::sd::QuantModel;
+use imax_sd::util::tables::Table;
+
+fn main() {
+    let trace = sd_turbo_512(1);
+    let dev = xeon_w5();
+    let mut t = Table::new(
+        "TABLE I: Breakdown of execution time in dot-product kernel (% of dot time)",
+        &["Model", "F32", "F16", "Q3_K", "Q8_0"],
+    );
+    for model in [QuantModel::Q3K, QuantModel::Q8_0] {
+        let shares = table1_shares(&trace, &dev, model);
+        let get = |n: &str| {
+            shares
+                .iter()
+                .find(|(m, _)| *m == n)
+                .map(|(_, v)| format!("{v:.1} %"))
+                .unwrap_or_else(|| "-".into())
+        };
+        t.row(&[
+            format!("{} Model (ours)", model.name()),
+            get("F32"),
+            get("F16"),
+            get("Q3_K"),
+            get("Q8_0"),
+        ]);
+        let paper = paper_table1(model);
+        let pget = |n: &str| {
+            paper
+                .iter()
+                .find(|(m, _)| *m == n)
+                .map(|(_, v)| format!("{v:.1} %"))
+                .unwrap_or_else(|| "-".into())
+        };
+        t.row(&[
+            format!("{} Model (paper)", model.name()),
+            pget("F32"),
+            pget("F16"),
+            pget("Q3_K"),
+            pget("Q8_0"),
+        ]);
+    }
+    t.print();
+    println!(
+        "\noffload ratio (MACs): Q3_K {:.1} %, Q8_0 {:.1} %  (paper: \"less than 20 %\")",
+        100.0 * trace.offloaded_macs(QuantModel::Q3K) as f64 / trace.total_macs() as f64,
+        100.0 * trace.offloaded_macs(QuantModel::Q8_0) as f64 / trace.total_macs() as f64,
+    );
+}

@@ -1,0 +1,24 @@
+//! Regenerates **Table II**: physical specifications of the evaluated
+//! hardware platforms (static spec data + the IMAX power model's two
+//! published synthesis points).
+
+use imax_sd::device::table2_specs;
+use imax_sd::imax::power::{asic_power_units, ASIC_BASE_WATTS, ASIC_WATTS_PER_UNIT};
+use imax_sd::util::tables::Table;
+
+fn main() {
+    let mut t = Table::new(
+        "TABLE II: Physical specifications of evaluated hardware platforms",
+        &["Device", "Host CPU", "Cores", "Area mm2", "Process", "Frequency", "Memory", "Power (W)"],
+    );
+    for r in table2_specs() {
+        t.row_str(&[r.device, r.host, r.cores, r.area_mm2, r.process, r.frequency, r.memory, r.power]);
+    }
+    t.print();
+    println!(
+        "\nIMAX 28nm power model: P(units) = {ASIC_BASE_WATTS:.2} + units x {ASIC_WATTS_PER_UNIT:.2} W \
+         -> Q8_0/46u = {:.1} W, Q3_K/51u = {:.1} W (paper: 47.7 / 52.8)",
+        asic_power_units(46),
+        asic_power_units(51),
+    );
+}

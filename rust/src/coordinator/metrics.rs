@@ -1,0 +1,60 @@
+//! Coordinator counters (thread-safe).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared metrics for a coordinator instance.
+#[derive(Debug, Default)]
+pub struct CoordinatorMetrics {
+    /// Jobs executed on the host pool.
+    pub host_jobs: AtomicU64,
+    /// Jobs executed on IMAX lanes.
+    pub offloaded_jobs: AtomicU64,
+    /// Total MACs routed to IMAX.
+    pub offloaded_macs: AtomicU64,
+    /// Total MACs kept on host.
+    pub host_macs: AtomicU64,
+    /// Cumulative simulated IMAX cycles across lanes.
+    pub imax_cycles: AtomicU64,
+}
+
+impl CoordinatorMetrics {
+    /// Offload ratio by MACs in `[0, 1]`.
+    pub fn offload_ratio(&self) -> f64 {
+        let off = self.offloaded_macs.load(Ordering::Relaxed) as f64;
+        let host = self.host_macs.load(Ordering::Relaxed) as f64;
+        if off + host == 0.0 {
+            0.0
+        } else {
+            off / (off + host)
+        }
+    }
+
+    /// Record a host job.
+    pub fn record_host(&self, macs: u64) {
+        self.host_jobs.fetch_add(1, Ordering::Relaxed);
+        self.host_macs.fetch_add(macs, Ordering::Relaxed);
+    }
+
+    /// Record an offloaded job.
+    pub fn record_offload(&self, macs: u64, cycles: u64) {
+        self.offloaded_jobs.fetch_add(1, Ordering::Relaxed);
+        self.offloaded_macs.fetch_add(macs, Ordering::Relaxed);
+        self.imax_cycles.fetch_add(cycles, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_computation() {
+        let m = CoordinatorMetrics::default();
+        assert_eq!(m.offload_ratio(), 0.0);
+        m.record_host(300);
+        m.record_offload(100, 42);
+        assert!((m.offload_ratio() - 0.25).abs() < 1e-12);
+        assert_eq!(m.host_jobs.load(Ordering::Relaxed), 1);
+        assert_eq!(m.imax_cycles.load(Ordering::Relaxed), 42);
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator: routing mat-mul jobs between the host CPU pool and
+//! IMAX lanes.
+//!
+//! This is the paper's system layer made concrete: the host (a 2-core
+//! A72 in the prototype) owns data supply and execution control for up
+//! to 8 independent lanes (§II-B); quantized dot-products route to
+//! lanes, everything else stays on the host. The scheduler demonstrates
+//! the host-bottleneck behaviour the paper analyzes in §V-A — with more
+//! lanes than host service capacity, lanes starve.
+
+pub mod metrics;
+pub mod offload;
+pub mod scheduler;
+
+pub use metrics::CoordinatorMetrics;
+pub use offload::OffloadPolicy;
+pub use scheduler::{Coordinator, MatMulJob};

@@ -1,0 +1,42 @@
+//! Offload policy: which mat-muls go to IMAX.
+
+use crate::ggml::{DType, Tensor};
+
+/// Routing policy for mat-mul jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OffloadPolicy {
+    /// The paper's policy (§III-B): only the model's quantized kernels
+    /// (Q8_0 / Q3_K weights) are offloaded; F16/F32 stay on the host.
+    QuantizedOnly,
+    /// Everything on the host (the "standalone ARM" baseline).
+    HostOnly,
+}
+
+impl OffloadPolicy {
+    /// Decide for a weight tensor.
+    pub fn offloads(self, w: &Tensor) -> bool {
+        match self {
+            OffloadPolicy::HostOnly => false,
+            OffloadPolicy::QuantizedOnly => {
+                matches!(w.dtype(), DType::Q8_0 | DType::Q3K)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantized_only_routes_by_dtype() {
+        let f = Tensor::f32(2, 64, vec![0.1; 128]);
+        let q = f.quantize(DType::Q8_0);
+        let h = f.quantize(DType::F16);
+        let p = OffloadPolicy::QuantizedOnly;
+        assert!(p.offloads(&q));
+        assert!(!p.offloads(&h));
+        assert!(!p.offloads(&f));
+        assert!(!OffloadPolicy::HostOnly.offloads(&q));
+    }
+}

@@ -1,0 +1,236 @@
+//! Multi-lane job scheduler.
+//!
+//! Jobs arrive in submission order; quantized mat-muls round-robin over
+//! the configured IMAX lanes (each lane owned by one worker thread),
+//! host jobs run on a bounded host pool sized like the A72 (2 cores).
+//! Because the host workers also perform the marshalling (activation
+//! quantization) for lane jobs, configuring more lanes than
+//! `host_threads` ceases to help — the §V-A saturation, observable in
+//! this scheduler's metrics.
+
+use super::metrics::CoordinatorMetrics;
+use super::offload::OffloadPolicy;
+use crate::ggml::{self, q8_0, q8_k, DType, Tensor};
+#[cfg(test)]
+use crate::ggml::q3_k;
+use crate::imax::lane::LaneSim;
+use crate::imax::ImaxConfig;
+use std::sync::{Arc, Mutex};
+
+/// One mat-mul job: quantized weights × f32 activations.
+#[derive(Debug, Clone)]
+pub struct MatMulJob {
+    /// Job label (layer name).
+    pub name: String,
+    /// Weight tensor.
+    pub w: Arc<Tensor>,
+    /// Activation tensor `[n, k]` f32.
+    pub x: Arc<Tensor>,
+}
+
+impl MatMulJob {
+    /// MAC count.
+    pub fn macs(&self) -> u64 {
+        (self.w.rows * self.w.cols * self.x.rows) as u64
+    }
+}
+
+/// The coordinator: lanes + host pool + policy + metrics.
+pub struct Coordinator {
+    lanes: Vec<Mutex<LaneSim>>,
+    /// Host worker threads (the A72 pair in the paper's setup).
+    pub host_threads: usize,
+    /// Routing policy.
+    pub policy: OffloadPolicy,
+    /// Shared counters.
+    pub metrics: Arc<CoordinatorMetrics>,
+    next_lane: std::sync::atomic::AtomicUsize,
+}
+
+impl Coordinator {
+    /// Build with `lanes` IMAX lanes and a host pool.
+    pub fn new(imax: ImaxConfig, lanes: usize, host_threads: usize, policy: OffloadPolicy) -> Coordinator {
+        Coordinator {
+            lanes: (0..lanes).map(|_| Mutex::new(LaneSim::new(imax.clone()))).collect(),
+            host_threads,
+            policy,
+            metrics: Arc::new(CoordinatorMetrics::default()),
+            next_lane: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+
+    /// Number of lanes.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Execute one job synchronously, routing by policy. Returns the
+    /// `[n, m]` f32 output.
+    pub fn execute(&self, job: &MatMulJob) -> Tensor {
+        if self.policy.offloads(&job.w) && !self.lanes.is_empty() {
+            self.execute_on_lane(job)
+        } else {
+            self.metrics.record_host(job.macs());
+            ggml::mul_mat(&job.w, &job.x, self.host_threads)
+        }
+    }
+
+    /// Execute a batch of jobs, lane jobs in parallel across lanes and
+    /// host threads (scoped). Results in submission order.
+    pub fn execute_batch(&self, jobs: &[MatMulJob]) -> Vec<Tensor> {
+        let mut out: Vec<Option<Tensor>> = (0..jobs.len()).map(|_| None).collect();
+        let slots: Vec<Mutex<&mut Option<Tensor>>> =
+            out.iter_mut().map(Mutex::new).collect();
+        // Worker per host thread pulling from a shared index.
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..self.host_threads.max(1) {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let r = self.execute(&jobs[i]);
+                    **slots[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        out.into_iter().map(|t| t.expect("all jobs completed")).collect()
+    }
+
+    fn execute_on_lane(&self, job: &MatMulJob) -> Tensor {
+        let idx = self.next_lane.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+            % self.lanes.len();
+        let (m, n, k) = (job.w.rows, job.x.rows, job.w.cols);
+        // Host-side marshalling happens on the calling (host) thread.
+        let result = match &job.w.data {
+            crate::ggml::tensor::Storage::Q8_0(blocks) => {
+                let acts: Vec<_> = (0..n)
+                    .flat_map(|r| q8_0::quantize_row(job.x.row_f32(r)))
+                    .collect();
+                let mut lane = self.lanes[idx].lock().unwrap();
+                let (data, bd) = lane
+                    .mul_mat_q8_0(blocks, m, &acts, n, k)
+                    .expect("job shapes fit LMM");
+                self.metrics.record_offload(job.macs(), bd.total());
+                Tensor::f32(n, m, data)
+            }
+            crate::ggml::tensor::Storage::Q3K(blocks) => {
+                let acts: Vec<_> = (0..n)
+                    .flat_map(|r| q8_k::quantize_row(job.x.row_f32(r)))
+                    .collect();
+                let mut lane = self.lanes[idx].lock().unwrap();
+                let (data, bd) = lane
+                    .mul_mat_q3_k(blocks, m, &acts, n, k)
+                    .expect("job shapes fit LMM");
+                self.metrics.record_offload(job.macs(), bd.total());
+                Tensor::f32(n, m, data)
+            }
+            _ => unreachable!("policy only offloads quantized weights"),
+        };
+        result
+    }
+}
+
+/// Helper: build a quantized job from f32 weights.
+pub fn make_job(name: &str, w_f32: Tensor, dtype: DType, x: Tensor) -> MatMulJob {
+    let w = match dtype {
+        DType::F32 => w_f32,
+        _ => w_f32.quantize(dtype),
+    };
+    MatMulJob { name: name.to_string(), w: Arc::new(w), x: Arc::new(x) }
+}
+
+// Re-exports used in tests and examples.
+pub use crate::ggml::tensor::Storage;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn rnd(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        let mut v = vec![0.0f32; rows * cols];
+        r.fill_normal(&mut v, 0.5);
+        Tensor::f32(rows, cols, v)
+    }
+
+    fn coordinator(lanes: usize) -> Coordinator {
+        Coordinator::new(ImaxConfig::fpga(1), lanes, 2, OffloadPolicy::QuantizedOnly)
+    }
+
+    #[test]
+    fn routes_by_policy_and_counts() {
+        let c = coordinator(2);
+        let jq = make_job("q", rnd(4, 64, 1), DType::Q8_0, rnd(3, 64, 2));
+        let jf = make_job("f", rnd(4, 64, 3), DType::F16, rnd(3, 64, 4));
+        c.execute(&jq);
+        c.execute(&jf);
+        assert_eq!(c.metrics.offloaded_jobs.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(c.metrics.host_jobs.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert!(c.metrics.offload_ratio() > 0.0);
+    }
+
+    #[test]
+    fn coordinator_matches_direct_ggml_q8_0() {
+        let c = coordinator(3);
+        let w = rnd(6, 128, 5);
+        let x = rnd(4, 128, 6);
+        let job = make_job("m", w.clone(), DType::Q8_0, x.clone());
+        let got = c.execute(&job);
+        let want = ggml::mul_mat(&w.quantize(DType::Q8_0), &x, 1);
+        for (a, b) in got.as_f32().iter().zip(want.as_f32()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn batch_preserves_order_and_uses_all_lanes() {
+        let c = coordinator(4);
+        let jobs: Vec<_> = (0..12)
+            .map(|i| make_job(&format!("j{i}"), rnd(2, 64, 10 + i), DType::Q8_0, rnd(2, 64, 50 + i)))
+            .collect();
+        let outs = c.execute_batch(&jobs);
+        assert_eq!(outs.len(), 12);
+        // Verify each against direct computation (order preserved).
+        for (job, out) in jobs.iter().zip(&outs) {
+            let want = ggml::mul_mat(&job.w, &job.x, 1);
+            assert_eq!(out.as_f32(), want.as_f32());
+        }
+        assert_eq!(
+            c.metrics.offloaded_jobs.load(std::sync::atomic::Ordering::Relaxed),
+            12
+        );
+    }
+
+    #[test]
+    fn host_only_policy_never_offloads() {
+        let c = Coordinator::new(ImaxConfig::fpga(1), 2, 2, OffloadPolicy::HostOnly);
+        let job = make_job("q", rnd(2, 64, 7), DType::Q8_0, rnd(2, 64, 8));
+        c.execute(&job);
+        assert_eq!(c.metrics.offloaded_jobs.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn q3k_jobs_route_and_compute() {
+        let c = coordinator(1);
+        let w = rnd(3, 256, 9);
+        let x = rnd(2, 256, 10);
+        let job = make_job("q3", w.clone(), DType::Q3K, x.clone());
+        let got = c.execute(&job);
+        // Lane computes the imax5 (5-bit scale) variant.
+        let wq = w.quantize(DType::Q3K);
+        let blocks = match &wq.data {
+            Storage::Q3K(b) => b.clone(),
+            _ => unreachable!(),
+        };
+        let acts: Vec<_> = (0..2).flat_map(|r| q8_k::quantize_row(x.row_f32(r))).collect();
+        for a_row in 0..2 {
+            for w_row in 0..3 {
+                let want = q3_k::vec_dot_imax5(&blocks[w_row..w_row + 1], &acts[a_row..a_row + 1]);
+                assert_eq!(got.as_f32()[a_row * 3 + w_row].to_bits(), want.to_bits());
+            }
+        }
+    }
+}

@@ -1,0 +1,360 @@
+//! §VI future-work projections, implemented.
+//!
+//! The paper's conclusion names three follow-ups; this module models all
+//! of them on top of the calibrated substrate so the `future_work` bench
+//! can quantify each:
+//!
+//! 1. **"Implement a wider variety of kernels to increase the offload
+//!    ratio"** — an F16 mat-mul kernel mapping for the lane (the FP
+//!    multiply/add units the base IMAX ISA already has), offloading the
+//!    conv-im2col and VAE GEMMs that dominate Table I.
+//! 2. **"Strengthen the integration with a multi-core host"** — the host
+//!    core count parameterizes both marshalling throughput and the lane
+//!    service ceiling (§V-A knee).
+//! 3. **"Evaluating scalability with larger image resolutions"** — the
+//!    trace generator is resolution-parametric; see the bench.
+
+use super::baseline::arm_a72;
+use super::imax_dev::{ImaxDevice, HOST_LANE_SERVICE_CEILING};
+use super::Device;
+use crate::ggml::DType;
+use crate::imax::dma::transfer_cycles;
+use crate::imax::timing::PhaseBreakdown;
+use crate::imax::ImaxConfig;
+#[cfg(test)]
+use crate::imax::PES_PER_LANE;
+use crate::sd::{MatMulOp, QuantModel, WorkloadTrace};
+
+/// The hypothetical F16 kernel mapping (future work #1).
+///
+/// Uses the base-ISA FP units: per 12-PE group, 2 loaders stream f16
+/// word pairs, 8 FMA PEs retire 2 f16 MACs each per beat (f16 operands
+/// packed two per 32-bit lane), 2 PEs run the f32 accumulation spine.
+/// Three groups plus an 8-PE shared drain/reduce spine = 44 PEs — within
+/// the 64-PE lane like the quantized kernels.
+#[derive(Debug, Clone, Copy)]
+pub struct F16Kernel;
+
+impl F16Kernel {
+    /// PEs occupied.
+    pub const PE_COUNT: usize = 44;
+    /// f16 MACs per beat for the lane (3 groups × 16).
+    pub const MACS_PER_BEAT: usize = 48;
+    /// Pipeline depth.
+    pub const DEPTH: usize = 16;
+
+    /// Weight-row bytes for K elements (f16).
+    pub fn w_row_bytes(k: usize) -> usize {
+        2 * k
+    }
+
+    /// Activation-row bytes (host converts f32 → f16 while staging).
+    pub fn a_row_bytes(k: usize) -> usize {
+        2 * k
+    }
+
+    /// Analytic phase breakdown of one offloaded F16 mul_mat, using the
+    /// same tiling scheme as the quantized kernels.
+    pub fn analytic_mul_mat(
+        imax: &ImaxConfig,
+        m: usize,
+        n: usize,
+        k: usize,
+        reconf: bool,
+    ) -> PhaseBreakdown {
+        let w_row = Self::w_row_bytes(k);
+        let a_row = Self::a_row_bytes(k);
+        let lmm = imax.lmm_bytes;
+        // Activation tile at most half the LMM; shrink until a weight
+        // row + result column fits (mirrors TilePlan::new).
+        let mut a_tile = (lmm / 2 / a_row).clamp(1, n);
+        while a_tile > 1 && lmm.saturating_sub(a_tile * a_row) < w_row + a_tile * 4 {
+            a_tile /= 2;
+        }
+        let rem = lmm - a_tile * a_row;
+        let w_tile = (rem / (w_row + a_tile * 4)).max(1).min(m);
+
+        let mut bd = PhaseBreakdown::default();
+        let pe = Self::PE_COUNT as u64;
+        if reconf {
+            bd.conf = imax.conf_cycles_per_pe * pe;
+        }
+        let beats_per_dot = (k as u64).div_ceil(Self::MACS_PER_BEAT as u64);
+        let mut at0 = 0;
+        while at0 < n {
+            let at1 = (at0 + a_tile).min(n);
+            bd.load += transfer_cycles(imax, ((at1 - at0) * a_row) as u64);
+            let mut wt0 = 0;
+            while wt0 < m {
+                let wt1 = (wt0 + w_tile).min(m);
+                bd.regv += imax.regv_cycles_per_pe * pe;
+                bd.range += imax.range_cycles_per_pe * pe;
+                bd.load += transfer_cycles(imax, ((wt1 - wt0) * w_row) as u64);
+                let dots = ((wt1 - wt0) * (at1 - at0)) as u64;
+                bd.exec += Self::DEPTH as u64 + dots * (beats_per_dot + 2);
+                bd.drain += transfer_cycles(imax, ((wt1 - wt0) * (at1 - at0) * 4) as u64);
+                wt0 = wt1;
+            }
+            at0 = at1;
+        }
+        bd
+    }
+}
+
+/// Host marshalling rate for the F16 path (f32→f16 conversion + memcpy —
+/// far cheaper than block quantization; ~A72 streaming rate).
+pub const HOST_MARSHAL_F16_BPS: f64 = 120.0e6;
+
+/// Future-work device: the calibrated IMAX device plus the F16 kernel
+/// and a parameterized host.
+pub struct ImaxFutureDevice {
+    /// The baseline device (quantized kernels, calibrated).
+    pub base: ImaxDevice,
+    /// Offload F16 ops too (future work #1).
+    pub offload_f16: bool,
+    /// Host cores (future work #2; the paper's prototype has 2).
+    pub host_cores: usize,
+}
+
+impl ImaxFutureDevice {
+    /// The paper's prototype configuration (no extra kernels, 2 cores).
+    pub fn baseline(imax: ImaxConfig) -> ImaxFutureDevice {
+        ImaxFutureDevice { base: ImaxDevice { imax, host: arm_a72() }, offload_f16: false, host_cores: 2 }
+    }
+
+    /// With the F16 kernel enabled and `host_cores` host cores.
+    pub fn extended(imax: ImaxConfig, host_cores: usize) -> ImaxFutureDevice {
+        let mut host = arm_a72();
+        // More host cores scale the CPU-side throughputs linearly (the
+        // A72 numbers are 2-core figures).
+        let scale = host_cores as f64 / 2.0;
+        host.gmacs_f32 *= scale;
+        host.gmacs_f16 *= scale;
+        host.gmacs_q3k *= scale;
+        host.gmacs_q8_0 *= scale;
+        ImaxFutureDevice {
+            base: ImaxDevice { imax, host },
+            offload_f16: true,
+            host_cores,
+        }
+    }
+
+    fn f16_ops<'t>(&self, trace: &'t WorkloadTrace, model: QuantModel) -> Vec<&'t MatMulOp> {
+        trace
+            .ops
+            .iter()
+            .filter(|op| op.dtype(model) == DType::F16)
+            .collect()
+    }
+
+    /// Marshalling seconds for the F16 offloads (scaled by host cores).
+    fn f16_dispatch_seconds(&self, trace: &WorkloadTrace, model: QuantModel) -> f64 {
+        let bytes: f64 = self
+            .f16_ops(trace, model)
+            .iter()
+            .map(|op| (op.n * op.repeats) as f64 * op.k as f64 * 4.0)
+            .sum();
+        bytes / (HOST_MARSHAL_F16_BPS * self.host_cores as f64 / 2.0)
+    }
+
+    /// F16 accelerator busy seconds.
+    fn f16_busy_seconds(&self, trace: &WorkloadTrace, model: QuantModel) -> f64 {
+        let mut total = PhaseBreakdown::default();
+        let mut first = true;
+        for op in self.f16_ops(trace, model) {
+            total += F16Kernel::analytic_mul_mat(
+                &self.base.imax,
+                op.m,
+                op.n * op.repeats,
+                op.k,
+                first,
+            );
+            first = false;
+        }
+        total.seconds(self.base.imax.clock_hz).total()
+    }
+
+    /// Offload ratio in MACs under this configuration.
+    pub fn offload_ratio(&self, trace: &WorkloadTrace, model: QuantModel) -> f64 {
+        let mut off = trace.offloaded_macs(model) as f64;
+        if self.offload_f16 {
+            off += self
+                .f16_ops(trace, model)
+                .iter()
+                .map(|op| op.macs() as f64)
+                .sum::<f64>();
+        }
+        off / trace.total_macs() as f64
+    }
+}
+
+impl Device for ImaxFutureDevice {
+    fn name(&self) -> String {
+        let mut n = self.base.name();
+        if self.offload_f16 {
+            n.push_str(" +F16");
+        }
+        if self.host_cores != 2 {
+            n.push_str(&format!(" {}c-host", self.host_cores));
+        }
+        n
+    }
+
+    fn e2e_seconds(&self, trace: &WorkloadTrace, model: QuantModel) -> f64 {
+        let (host, accel) = self.e2e_split(trace, model);
+        host + accel
+    }
+
+    fn kernel_seconds(&self, trace: &WorkloadTrace, model: QuantModel, lanes: usize) -> f64 {
+        let mut busy = self
+            .base
+            .offload_breakdown(trace, model)
+            .seconds(self.base.imax.clock_hz)
+            .total();
+        if self.offload_f16 {
+            busy += self.f16_busy_seconds(trace, model);
+        }
+        // More host cores lift the §V-A service ceiling proportionally.
+        let ceiling = HOST_LANE_SERVICE_CEILING * self.host_cores as f64 / 2.0;
+        busy / (lanes as f64).min(ceiling).max(1.0)
+    }
+
+    fn compute_watts(&self, model: QuantModel) -> f64 {
+        // With the F16 kernel resident too, more units are active; use
+        // the larger of the kernel powers plus the F16 kernel's units.
+        let base = self.base.compute_watts(model);
+        if self.offload_f16 && self.base.imax.target == crate::imax::Target::Asic {
+            crate::imax::power::asic_power_units(
+                F16Kernel::PE_COUNT.max(match model {
+                    QuantModel::Q3K => 51,
+                    QuantModel::Q8_0 => 46,
+                }),
+            )
+        } else {
+            base
+        }
+    }
+
+    fn host_watts(&self) -> Option<f64> {
+        // Scale the A72 power estimate with core count.
+        Some(self.base.host.tdp_watts * self.host_cores as f64 / 2.0)
+    }
+
+    fn e2e_split(&self, trace: &WorkloadTrace, model: QuantModel) -> (f64, f64) {
+        let core_scale = self.host_cores as f64 / 2.0;
+        let mut host_dots: f64 = trace
+            .ops
+            .iter()
+            .filter(|op| {
+                !(op.offloaded(model)
+                    || (self.offload_f16 && op.dtype(model) == DType::F16))
+            })
+            .map(|op| op.macs() as f64 / 1e9 / self.base.host.gmacs(op.dtype(model)))
+            .sum();
+        host_dots += self.base.host.overhead_s / core_scale.min(2.0); // sampler etc. partly parallel
+        let mut dispatch = self.base.total_dispatch_seconds(trace, model) / core_scale;
+        let mut busy = self
+            .base
+            .offload_breakdown(trace, model)
+            .seconds(self.base.imax.clock_hz)
+            .total();
+        if self.offload_f16 {
+            dispatch += self.f16_dispatch_seconds(trace, model);
+            busy += self.f16_busy_seconds(trace, model);
+        }
+        (host_dots + dispatch, busy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sd::arch::sd_turbo_512;
+
+    #[test]
+    fn f16_kernel_fits_the_lane() {
+        assert!(F16Kernel::PE_COUNT <= PES_PER_LANE);
+    }
+
+    #[test]
+    fn baseline_future_device_matches_imax_device() {
+        let t = sd_turbo_512(1);
+        let base = ImaxDevice::fpga(1);
+        let fut = ImaxFutureDevice::baseline(ImaxConfig::fpga(1));
+        for m in [QuantModel::Q3K, QuantModel::Q8_0] {
+            let a = base.e2e_seconds(&t, m);
+            let b = fut.e2e_seconds(&t, m);
+            assert!((a - b).abs() / a < 0.02, "{m:?}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn f16_offload_raises_offload_ratio_dramatically() {
+        let t = sd_turbo_512(1);
+        let base = ImaxFutureDevice::baseline(ImaxConfig::asic(1));
+        let ext = ImaxFutureDevice::extended(ImaxConfig::asic(1), 2);
+        let m = QuantModel::Q8_0;
+        let r0 = base.offload_ratio(&t, m);
+        let r1 = ext.offload_ratio(&t, m);
+        assert!(r0 < 0.20, "paper's current ratio {r0}");
+        assert!(r1 > 0.85, "F16 kernels lift the ratio to {r1}");
+    }
+
+    #[test]
+    fn f16_offload_loses_on_the_prototype_dma() {
+        // Honest finding: with the calibrated prototype LOAD path
+        // (~28 MB/s effective), offloading the F16 GEMMs makes e2e WORSE
+        // — the future work only pays off together with a fixed
+        // interconnect, exactly what Fig. 11's LOAD dominance implies.
+        let t = sd_turbo_512(1);
+        let ext = ImaxFutureDevice::extended(ImaxConfig::asic(1), 4);
+        let m = QuantModel::Q8_0;
+        assert!(
+            ext.e2e_seconds(&t, m) > ImaxDevice::asic(1).e2e_seconds(&t, m),
+            "slow-DMA F16 offload should regress"
+        );
+    }
+
+    #[test]
+    fn asic_with_f16_kernel_and_fixed_dma_approaches_xeon() {
+        // The paper's thesis: higher offload ratio + ASIC + a production
+        // interconnect closes the gap to the CPU class.
+        let t = sd_turbo_512(1);
+        let mut imax = ImaxConfig::asic(1);
+        imax.dma_bytes_per_cycle = 8.0; // ~6.7 GB/s on-package at 840 MHz
+        let ext = ImaxFutureDevice::extended(imax, 4);
+        let m = QuantModel::Q8_0;
+        let e2e = ext.e2e_seconds(&t, m);
+        let baseline = ImaxDevice::asic(1).e2e_seconds(&t, m);
+        assert!(
+            e2e < baseline / 2.0,
+            "F16 offload + fast DMA must at least halve e2e: {e2e} vs {baseline}"
+        );
+        let xeon = super::super::baseline::xeon_w5().e2e_seconds(&t, m);
+        assert!(
+            e2e < xeon * 4.0,
+            "projected ASIC ({e2e}) should reach the Xeon's order ({xeon})"
+        );
+    }
+
+    #[test]
+    fn more_host_cores_lift_the_lane_ceiling() {
+        let t = sd_turbo_512(1);
+        let m = QuantModel::Q3K;
+        let two = ImaxFutureDevice::extended(ImaxConfig::fpga(1), 2);
+        let eight = ImaxFutureDevice::extended(ImaxConfig::fpga(1), 8);
+        let k2 = two.kernel_seconds(&t, m, 8);
+        let k8 = eight.kernel_seconds(&t, m, 8);
+        assert!(k8 < k2 * 0.5, "8-core host unlocks lane scaling: {k8} vs {k2}");
+    }
+
+    #[test]
+    fn f16_busy_scales_with_clock() {
+        let t = sd_turbo_512(1);
+        let f = ImaxFutureDevice::extended(ImaxConfig::fpga(1), 2);
+        let a = ImaxFutureDevice::extended(ImaxConfig::asic(1), 2);
+        let bf = f.f16_busy_seconds(&t, QuantModel::Q8_0);
+        let ba = a.f16_busy_seconds(&t, QuantModel::Q8_0);
+        assert!((bf / ba - 840.0 / 145.0).abs() < 0.01);
+    }
+}

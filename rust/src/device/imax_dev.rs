@@ -1,0 +1,269 @@
+//! IMAX3 as an evaluated device: simulator-derived accelerator time plus
+//! a host-dispatch model around the ARM baseline.
+//!
+//! An IMAX end-to-end run decomposes as (§IV, §V):
+//!
+//! ```text
+//! e2e = host_residual            non-offloaded dots + pipeline overhead,
+//!                                priced by the ARM baseline model
+//!     + host_dispatch            per-offload marshalling on the A72:
+//!                                activation quantization into the vec-dot
+//!                                partner format (Q8_0 / Q8_K super-blocks)
+//!                                and DMA-buffer memcpy + driver calls
+//!     + imax_busy                CONF/REGV/RANGE/LOAD/EXEC/DRAIN cycles
+//!                                from the lane simulator (analytic mode)
+//! ```
+//!
+//! The dispatch rates are the two constants calibrated on the paper's
+//! four published IMAX end-to-end latencies (790.3/754.5 s Q3_K,
+//! 654.7/558.0 s Q8_0); the Q8_K path is far slower per byte than the
+//! Q8_0 path, reflecting super-block quantization with per-16 bsums and
+//! the paper's unquantified driver overheads (see `EXPERIMENTS.md`
+//! §Calibration for the full derivation and residuals).
+//!
+//! Figs. 9–10 ("kernel execution time" vs lanes) exclude host
+//! marshalling — matching the paper's kernel profiling methodology
+//! ("pure computation time with memory copy overhead excluded") — and
+//! model the dual-core host's supply ceiling: beyond ~2.5 lanes' worth
+//! of descriptor service the curve saturates (§V-A).
+
+use super::baseline::{arm_a72, CpuGpuModel};
+use super::Device;
+use crate::imax::lane::LaneSim;
+use crate::imax::power::kernel_power;
+use crate::imax::timing::{PhaseBreakdown, PhaseSeconds};
+use crate::imax::{ImaxConfig, KernelKind, Target};
+use crate::sd::{MatMulOp, QuantModel, WorkloadTrace};
+
+/// Host-side marshalling rate for Q8_K activations (bytes of f32
+/// activations processed per second) — calibrated, see module docs.
+pub const HOST_MARSHAL_Q8K_BPS: f64 = 1.39e6;
+
+/// Host-side marshalling rate for Q8_0 activations — calibrated.
+pub const HOST_MARSHAL_Q8_0_BPS: f64 = 17.0e6;
+
+/// Host descriptor-service ceiling: the 2-core A72 can keep ~2.5 lanes
+/// supplied before lane scaling saturates (§V-A: efficient to 2 lanes,
+/// diminishing at ≥3).
+pub const HOST_LANE_SERVICE_CEILING: f64 = 2.5;
+
+/// IMAX3 as a benchmarked device (FPGA prototype or projected ASIC).
+pub struct ImaxDevice {
+    /// Physical configuration (clock, DMA, LMM).
+    pub imax: ImaxConfig,
+    /// The host model (always the on-board A72 pair in the paper).
+    pub host: CpuGpuModel,
+}
+
+impl ImaxDevice {
+    /// FPGA prototype with `lanes` active lanes.
+    pub fn fpga(lanes: usize) -> ImaxDevice {
+        ImaxDevice { imax: ImaxConfig::fpga(lanes), host: arm_a72() }
+    }
+
+    /// Projected 28 nm ASIC.
+    pub fn asic(lanes: usize) -> ImaxDevice {
+        ImaxDevice { imax: ImaxConfig::asic(lanes), host: arm_a72() }
+    }
+
+    /// Kernel kind used by a quantized model.
+    pub fn kernel_kind(model: QuantModel) -> KernelKind {
+        match model {
+            QuantModel::Q3K => KernelKind::Q3K,
+            QuantModel::Q8_0 => KernelKind::Q8_0,
+        }
+    }
+
+    /// Host marshalling seconds for one offloaded op: the f32 activation
+    /// tensor must be quantized into the vec-dot partner format and
+    /// staged into the DMA buffer.
+    pub fn dispatch_seconds(op: &MatMulOp, model: QuantModel) -> f64 {
+        let act_f32_bytes = (op.n * op.repeats) as f64 * op.k as f64 * 4.0;
+        let rate = match model {
+            QuantModel::Q3K => HOST_MARSHAL_Q8K_BPS,
+            QuantModel::Q8_0 => HOST_MARSHAL_Q8_0_BPS,
+        };
+        act_f32_bytes / rate
+    }
+
+    /// Aggregate accelerator-side phase breakdown for all offloaded ops
+    /// of a trace (single lane; the paper's e2e setup, §IV-A).
+    pub fn offload_breakdown(&self, trace: &WorkloadTrace, model: QuantModel) -> PhaseBreakdown {
+        let kind = Self::kernel_kind(model);
+        let lane = LaneSim::new(self.imax.clone());
+        let mut total = PhaseBreakdown::default();
+        let mut first = true;
+        for op in trace.offloaded_ops(model) {
+            let bd = lane
+                .analytic_mul_mat(kind, op.m, op.n * op.repeats, op.k, first)
+                .expect("SD shapes fit the 512 KiB LMM");
+            total += bd;
+            first = false; // kernel stays configured across ops
+        }
+        total
+    }
+
+    /// Accelerator phase seconds (Fig. 11 input).
+    pub fn offload_phase_seconds(&self, trace: &WorkloadTrace, model: QuantModel) -> PhaseSeconds {
+        self.offload_breakdown(trace, model).seconds(self.imax.clock_hz)
+    }
+
+    /// Total host marshalling seconds for a trace.
+    pub fn total_dispatch_seconds(&self, trace: &WorkloadTrace, model: QuantModel) -> f64 {
+        trace
+            .offloaded_ops(model)
+            .iter()
+            .map(|op| Self::dispatch_seconds(op, model))
+            .sum()
+    }
+
+    /// Host residual: everything the paper leaves on the CPU (the
+    /// non-quantized dots and pipeline overhead).
+    pub fn host_residual_seconds(&self, trace: &WorkloadTrace, model: QuantModel) -> f64 {
+        let host_dots: f64 = trace
+            .ops
+            .iter()
+            .filter(|op| !op.offloaded(model))
+            .map(|op| op.macs() as f64 / 1e9 / self.host.gmacs(op.dtype(model)))
+            .sum();
+        host_dots + self.host.overhead_s
+    }
+}
+
+impl Device for ImaxDevice {
+    fn name(&self) -> String {
+        match self.imax.target {
+            Target::Fpga => "IMAX3 (FPGA 145 MHz)".to_string(),
+            Target::Asic => "IMAX3 (ASIC 840 MHz)".to_string(),
+        }
+    }
+
+    fn e2e_seconds(&self, trace: &WorkloadTrace, model: QuantModel) -> f64 {
+        let busy = self.offload_breakdown(trace, model).seconds(self.imax.clock_hz).total();
+        self.host_residual_seconds(trace, model)
+            + self.total_dispatch_seconds(trace, model)
+            + busy
+    }
+
+    fn kernel_seconds(&self, trace: &WorkloadTrace, model: QuantModel, lanes: usize) -> f64 {
+        // Offloaded rows split across lanes; the dual-core host caps the
+        // sustainable lane parallelism (Figs. 9-10's saturation).
+        let busy = self.offload_breakdown(trace, model).seconds(self.imax.clock_hz).total();
+        let effective = (lanes as f64).min(HOST_LANE_SERVICE_CEILING).max(1.0);
+        busy / effective
+    }
+
+    fn compute_watts(&self, model: QuantModel) -> f64 {
+        kernel_power(self.imax.target, Self::kernel_kind(model))
+    }
+
+    fn host_watts(&self) -> Option<f64> {
+        Some(self.host.tdp_watts)
+    }
+
+    fn e2e_split(&self, trace: &WorkloadTrace, model: QuantModel) -> (f64, f64) {
+        let busy = self.offload_breakdown(trace, model).seconds(self.imax.clock_hz).total();
+        let host = self.host_residual_seconds(trace, model)
+            + self.total_dispatch_seconds(trace, model);
+        (host, busy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sd::arch::sd_turbo_512;
+
+    fn trace() -> WorkloadTrace {
+        sd_turbo_512(1)
+    }
+
+    #[test]
+    fn fig6_q3k_ordering_and_magnitudes() {
+        // Paper Fig. 6: ARM 809.7, FPGA 790.3, ASIC 754.5.
+        let t = trace();
+        let arm = arm_a72().e2e_seconds(&t, QuantModel::Q3K);
+        let fpga = ImaxDevice::fpga(1).e2e_seconds(&t, QuantModel::Q3K);
+        let asic = ImaxDevice::asic(1).e2e_seconds(&t, QuantModel::Q3K);
+        assert!(fpga < arm, "FPGA ({fpga}) must beat ARM ({arm}) on Q3_K");
+        assert!(asic < fpga, "ASIC ({asic}) must beat FPGA ({fpga})");
+        assert!((fpga - 790.3).abs() < 790.0 * 0.03, "FPGA Q3_K e2e {fpga}");
+        assert!((asic - 754.5).abs() < 754.0 * 0.04, "ASIC Q3_K e2e {asic}");
+    }
+
+    #[test]
+    fn fig7_q8_0_fpga_loses_to_arm_asic_wins() {
+        // Paper Fig. 7: ARM 625.1, FPGA 654.7 (transfer-bound!), ASIC 558.0.
+        let t = trace();
+        let arm = arm_a72().e2e_seconds(&t, QuantModel::Q8_0);
+        let fpga = ImaxDevice::fpga(1).e2e_seconds(&t, QuantModel::Q8_0);
+        let asic = ImaxDevice::asic(1).e2e_seconds(&t, QuantModel::Q8_0);
+        assert!(
+            fpga > arm,
+            "the paper's headline crossover: Q8_0 transfer volume makes the \
+             FPGA ({fpga}) slower than standalone ARM ({arm})"
+        );
+        assert!(asic < arm, "ASIC ({asic}) must still beat ARM ({arm})");
+        assert!((fpga - 654.7).abs() < 655.0 * 0.03, "FPGA Q8_0 e2e {fpga}");
+        assert!((asic - 558.0).abs() < 558.0 * 0.06, "ASIC Q8_0 e2e {asic}");
+    }
+
+    #[test]
+    fn fig9_fpga_kernel_beats_arm_q3k() {
+        let t = trace();
+        let fpga = ImaxDevice::fpga(1).kernel_seconds(&t, QuantModel::Q3K, 1);
+        let arm = arm_a72().kernel_seconds(&t, QuantModel::Q3K, 1);
+        assert!(fpga < arm, "145 MHz FPGA ({fpga}) beats ARM ({arm}) on kernels");
+    }
+
+    #[test]
+    fn fig9_asic_competitive_with_xeon() {
+        let t = trace();
+        let asic = ImaxDevice::asic(1).kernel_seconds(&t, QuantModel::Q3K, 1);
+        let xeon = super::super::baseline::xeon_w5().kernel_seconds(&t, QuantModel::Q3K, 16);
+        let ratio = asic / xeon;
+        assert!(
+            (0.3..3.0).contains(&ratio),
+            "ASIC ({asic}) should be same order as full Xeon ({xeon})"
+        );
+    }
+
+    #[test]
+    fn lane_scaling_saturates_past_two(){
+        let t = trace();
+        let dev = ImaxDevice::fpga(1);
+        let t1 = dev.kernel_seconds(&t, QuantModel::Q3K, 1);
+        let t2 = dev.kernel_seconds(&t, QuantModel::Q3K, 2);
+        let t3 = dev.kernel_seconds(&t, QuantModel::Q3K, 3);
+        let t8 = dev.kernel_seconds(&t, QuantModel::Q3K, 8);
+        assert!((t1 / t2 - 2.0).abs() < 1e-9, "perfect scaling to 2 lanes");
+        assert!(t3 > t2 * 2.0 / 3.0 * 0.99, "diminishing returns at 3");
+        assert_eq!(t3, t8, "host-bound plateau beyond the service ceiling");
+    }
+
+    #[test]
+    fn q8_0_busy_is_load_dominated_and_bigger_than_q3k() {
+        // Fig. 11's asymmetry: Q8_0 moves ~3x the bytes.
+        let t = trace();
+        let dev = ImaxDevice::fpga(1);
+        let p3 = dev.offload_phase_seconds(&t, QuantModel::Q3K);
+        let p8 = dev.offload_phase_seconds(&t, QuantModel::Q8_0);
+        assert!(p8.load > p3.load, "Q8_0 LOAD {} vs Q3_K {}", p8.load, p3.load);
+        assert!(p8.load > p8.exec, "LOAD dominates EXEC on the FPGA");
+        assert!(p3.load > p3.exec * 0.5, "Q3_K also transfer-heavy");
+    }
+
+    #[test]
+    fn asic_shrinks_busy_by_clock_ratio_but_not_dispatch() {
+        let t = trace();
+        let fpga = ImaxDevice::fpga(1);
+        let asic = ImaxDevice::asic(1);
+        let m = QuantModel::Q8_0;
+        let bf = fpga.offload_phase_seconds(&t, m).total();
+        let ba = asic.offload_phase_seconds(&t, m).total();
+        assert!((bf / ba - 840.0 / 145.0).abs() < 0.01, "busy scales with clock");
+        let df = fpga.total_dispatch_seconds(&t, m);
+        let da = asic.total_dispatch_seconds(&t, m);
+        assert_eq!(df, da, "host marshalling does not scale with the ASIC clock");
+    }
+}

@@ -1,0 +1,80 @@
+//! Power-Delay Product (Fig. 8).
+//!
+//! Equation (1): `PDP = execution time × power`, "considering the power
+//! consumption during each distinct execution phase" — so for the IMAX
+//! devices host phases are priced at the A72's power and accelerator
+//! phases at the kernel power (board power for the FPGA, the synthesis
+//! estimate for the ASIC).
+
+use super::Device;
+use crate::sd::{QuantModel, WorkloadTrace};
+
+/// One Fig. 8 bar.
+#[derive(Debug, Clone)]
+pub struct PdpEntry {
+    /// Device name.
+    pub device: String,
+    /// End-to-end seconds.
+    pub seconds: f64,
+    /// Phase-weighted energy (J).
+    pub joules: f64,
+}
+
+/// Phase-weighted PDP for a device on a workload.
+pub fn pdp_joules(dev: &dyn Device, trace: &WorkloadTrace, model: QuantModel) -> PdpEntry {
+    let (host_s, accel_s) = dev.e2e_split(trace, model);
+    let joules = match dev.host_watts() {
+        Some(hw) => host_s * hw + accel_s * dev.compute_watts(model),
+        None => (host_s + accel_s) * dev.compute_watts(model),
+    };
+    PdpEntry { device: dev.name(), seconds: host_s + accel_s, joules }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{arm_a72, gtx_1080ti, xeon_w5, ImaxDevice};
+    use crate::sd::arch::sd_turbo_512;
+
+    #[test]
+    fn fig8_orderings_hold() {
+        let t = sd_turbo_512(1);
+        for m in [QuantModel::Q3K, QuantModel::Q8_0] {
+            let arm = pdp_joules(&arm_a72(), &t, m).joules;
+            let xeon = pdp_joules(&xeon_w5(), &t, m).joules;
+            let gpu = pdp_joules(&gtx_1080ti(), &t, m).joules;
+            let asic = pdp_joules(&ImaxDevice::asic(1), &t, m).joules;
+            let fpga = pdp_joules(&ImaxDevice::fpga(1), &t, m).joules;
+            // "the low-power ARM Cortex-A72 exhibited the lowest PDP".
+            assert!(arm < asic && arm < xeon && arm < gpu && arm < fpga, "{m:?}");
+            // "the projected PDP for the ASIC version significantly
+            // surpassed that of the high-performance Xeon CPU for both".
+            assert!(asic < xeon, "{m:?}: asic {asic} vs xeon {xeon}");
+            // FPGA board power keeps the prototype above the ASIC.
+            assert!(asic < fpga, "{m:?}");
+        }
+        // "In the Q3_K case, IMAX (28 nm) achieved a lower PDP than the GPU."
+        let asic3 = pdp_joules(&ImaxDevice::asic(1), &t, QuantModel::Q3K).joules;
+        let gpu3 = pdp_joules(&gtx_1080ti(), &t, QuantModel::Q3K).joules;
+        assert!(asic3 < gpu3, "asic {asic3} vs gpu {gpu3}");
+    }
+
+    #[test]
+    fn pdp_is_time_times_power_for_flat_devices() {
+        let t = sd_turbo_512(1);
+        let x = xeon_w5();
+        let e = pdp_joules(&x, &t, QuantModel::Q3K);
+        let direct = x.e2e_seconds(&t, QuantModel::Q3K) * 200.0;
+        assert!((e.joules - direct).abs() < 1e-6);
+    }
+
+    #[test]
+    fn imax_pdp_splits_host_and_accel_power() {
+        let t = sd_turbo_512(1);
+        let dev = ImaxDevice::asic(1);
+        let (h, a) = dev.e2e_split(&t, QuantModel::Q3K);
+        let e = pdp_joules(&dev, &t, QuantModel::Q3K);
+        assert!((e.joules - (h * 1.5 + a * 52.8)).abs() < 1e-6);
+        assert!(h > a, "host phases dominate the e2e run");
+    }
+}

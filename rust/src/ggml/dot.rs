@@ -1,0 +1,266 @@
+//! Vec-dot dispatch and the GGML-style `mul_mat`.
+//!
+//! `mul_mat(w, x)` computes `out[n, m] = Σ_k w[m, k] · x[n, k]` — GGML's
+//! convention where both operands are row-major with rows of length K and
+//! the weight tensor supplies M rows. Activations are quantized once per
+//! call into the weight type's vec-dot partner (`Q8_0`→`Q8_0`,
+//! `Q3_K`→`Q8_K`), then every output element is one quantized vec-dot.
+//! This is the exact op `stable-diffusion.cpp` dispatches for every
+//! linear/conv(im2col) layer, and the unit of offload in the paper.
+
+use super::tensor::{DType, Storage, Tensor};
+use super::{q3_k, q8_0, q8_k};
+use crate::util::pool::parallel_chunks;
+
+/// Dot product of two f32 slices (the F32 "kernel" that stays on host).
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: keeps the compiler vectorizing and
+    // matches GGML's split-accumulator summation order closely enough.
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Dot product of an f16 row with an f32 activation row (GGML's
+/// `F16 × F32 -> F32` path used for conv/im2col weights).
+pub fn dot_f16_f32(a: &[crate::util::f16::F16], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b.iter()) {
+        s += x.to_f32() * y;
+    }
+    s
+}
+
+/// Generic quantized vec-dot between one weight row and one pre-quantized
+/// activation row, dispatched on the weight dtype.
+pub fn vec_dot(w: &Tensor, w_row: usize, act: &QuantizedActs, a_row: usize) -> f32 {
+    let bpr = w.blocks_per_row();
+    match (&w.data, act) {
+        (Storage::Q8_0(blocks), QuantizedActs::Q8_0(acts)) => {
+            let wb = &blocks[w_row * bpr..(w_row + 1) * bpr];
+            let ab = &acts[a_row * bpr..(a_row + 1) * bpr];
+            q8_0::vec_dot(wb, ab)
+        }
+        (Storage::Q3K(blocks), QuantizedActs::Q8K(acts)) => {
+            let wb = &blocks[w_row * bpr..(w_row + 1) * bpr];
+            let ab = &acts[a_row * bpr..(a_row + 1) * bpr];
+            q3_k::vec_dot(wb, ab)
+        }
+        _ => panic!("mismatched weight/activation quantization pairing"),
+    }
+}
+
+/// Activations quantized into the vec-dot partner format of a weight type.
+pub enum QuantizedActs {
+    /// Partner of `Q8_0` weights.
+    Q8_0(Vec<q8_0::BlockQ8_0>),
+    /// Partner of `Q3_K` weights.
+    Q8K(Vec<q8_k::BlockQ8K>),
+}
+
+/// Quantize an `[N, K]` f32 activation tensor into the partner format for
+/// `weight_dtype` (GGML's "quantize src1 once, reuse per row" step).
+pub fn quantize_acts(x: &Tensor, weight_dtype: DType) -> QuantizedActs {
+    let data = x.as_f32();
+    match weight_dtype {
+        DType::Q8_0 => {
+            let mut blocks = Vec::with_capacity(x.len() / 32);
+            for r in 0..x.rows {
+                blocks.extend(q8_0::quantize_row(&data[r * x.cols..(r + 1) * x.cols]));
+            }
+            QuantizedActs::Q8_0(blocks)
+        }
+        DType::Q3K => {
+            let mut blocks = Vec::with_capacity(x.len() / 256);
+            for r in 0..x.rows {
+                blocks.extend(q8_k::quantize_row(&data[r * x.cols..(r + 1) * x.cols]));
+            }
+            QuantizedActs::Q8K(blocks)
+        }
+        other => panic!("no activation partner for {other:?}"),
+    }
+}
+
+/// `out[n, m] = Σ_k w[m, k] * x[n, k]`, parallelized across `threads`
+/// host workers over the N dimension (GGML parallelizes identically).
+pub fn mul_mat(w: &Tensor, x: &Tensor, threads: usize) -> Tensor {
+    assert_eq!(w.cols, x.cols, "contraction dim mismatch: {} vs {}", w.cols, x.cols);
+    let (m, n, _k) = (w.rows, x.rows, w.cols);
+    let mut out = vec![0.0f32; n * m];
+
+    match w.dtype() {
+        DType::F32 => {
+            let wd = w.as_f32();
+            let xd = x.as_f32();
+            let out_ptr = SendPtr(out.as_mut_ptr());
+            parallel_chunks(n, threads, |s, e| {
+                let out_ptr = &out_ptr;
+                for nn in s..e {
+                    let xr = &xd[nn * x.cols..(nn + 1) * x.cols];
+                    for mm in 0..m {
+                        let wr = &wd[mm * w.cols..(mm + 1) * w.cols];
+                        // SAFETY: each (nn, mm) cell written exactly once,
+                        // rows partitioned disjointly across workers.
+                        unsafe { *out_ptr.0.add(nn * m + mm) = dot_f32(wr, xr) };
+                    }
+                }
+            });
+        }
+        DType::F16 => {
+            let wd = match &w.data {
+                Storage::F16(v) => v,
+                _ => unreachable!(),
+            };
+            let xd = x.as_f32();
+            let out_ptr = SendPtr(out.as_mut_ptr());
+            parallel_chunks(n, threads, |s, e| {
+                let out_ptr = &out_ptr;
+                for nn in s..e {
+                    let xr = &xd[nn * x.cols..(nn + 1) * x.cols];
+                    for mm in 0..m {
+                        let wr = &wd[mm * w.cols..(mm + 1) * w.cols];
+                        unsafe { *out_ptr.0.add(nn * m + mm) = dot_f16_f32(wr, xr) };
+                    }
+                }
+            });
+        }
+        DType::Q8_0 | DType::Q3K => {
+            let acts = quantize_acts(x, w.dtype());
+            let out_ptr = SendPtr(out.as_mut_ptr());
+            parallel_chunks(n, threads, |s, e| {
+                let out_ptr = &out_ptr;
+                for nn in s..e {
+                    for mm in 0..m {
+                        let v = vec_dot(w, mm, &acts, nn);
+                        unsafe { *out_ptr.0.add(nn * m + mm) = v };
+                    }
+                }
+            });
+        }
+        DType::Q8K => panic!("Q8_K is an activation-only format"),
+    }
+    Tensor::f32(n, m, out)
+}
+
+/// Raw pointer wrapper asserting Send/Sync for disjoint-write parallelism.
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn random(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        let mut v = vec![0.0f32; rows * cols];
+        r.fill_normal(&mut v, 0.5);
+        Tensor::f32(rows, cols, v)
+    }
+
+    fn naive_matmul(w: &Tensor, x: &Tensor) -> Vec<f32> {
+        let mut out = vec![0.0f32; x.rows * w.rows];
+        for n in 0..x.rows {
+            for m in 0..w.rows {
+                let mut s = 0.0;
+                for k in 0..w.cols {
+                    s += w.as_f32()[m * w.cols + k] * x.as_f32()[n * x.cols + k];
+                }
+                out[n * w.rows + m] = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn dot_f32_matches_naive() {
+        let a = random(1, 100, 1);
+        let b = random(1, 100, 2);
+        let naive: f32 = a.as_f32().iter().zip(b.as_f32().iter()).map(|(x, y)| x * y).sum();
+        assert!((dot_f32(a.as_f32(), b.as_f32()) - naive).abs() < 1e-4);
+    }
+
+    #[test]
+    fn f32_mul_mat_exact() {
+        let w = random(5, 64, 3);
+        let x = random(7, 64, 4);
+        let got = mul_mat(&w, &x, 1);
+        let want = naive_matmul(&w, &x);
+        assert_eq!(got.rows, 7);
+        assert_eq!(got.cols, 5);
+        for (g, w_) in got.as_f32().iter().zip(want.iter()) {
+            assert!((g - w_).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let w = random(9, 128, 5);
+        let x = random(13, 128, 6);
+        let a = mul_mat(&w, &x, 1);
+        let b = mul_mat(&w, &x, 4);
+        assert_eq!(a.as_f32(), b.as_f32(), "thread count must not change results");
+    }
+
+    #[test]
+    fn f16_mul_mat_close_to_f32() {
+        let w = random(4, 96, 7);
+        let x = random(3, 96, 8);
+        let exact = mul_mat(&w, &x, 1);
+        let wh = w.quantize(DType::F16);
+        let got = mul_mat(&wh, &x, 1);
+        for (g, e) in got.as_f32().iter().zip(exact.as_f32().iter()) {
+            assert!((g - e).abs() < 0.02 * e.abs().max(1.0), "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn q8_0_mul_mat_close_to_f32() {
+        let w = random(6, 128, 9);
+        let x = random(5, 128, 10);
+        let exact = mul_mat(&w, &x, 1);
+        let got = mul_mat(&w.quantize(DType::Q8_0), &x, 2);
+        for (g, e) in got.as_f32().iter().zip(exact.as_f32().iter()) {
+            assert!((g - e).abs() < 0.05 * e.abs().max(1.0), "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn q3_k_mul_mat_tracks_f32() {
+        let w = random(4, 512, 11);
+        let x = random(3, 512, 12);
+        let exact = mul_mat(&w, &x, 1);
+        let got = mul_mat(&w.quantize(DType::Q3K), &x, 2);
+        // 3-bit weights: coarse; dot of 512 gaussian terms has std ~sqrt(512)/4.
+        for (g, e) in got.as_f32().iter().zip(exact.as_f32().iter()) {
+            assert!((g - e).abs() < 3.0, "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "contraction dim mismatch")]
+    fn shape_mismatch_panics() {
+        mul_mat(&random(2, 32, 13), &random(2, 64, 14), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "activation-only")]
+    fn q8k_weights_rejected() {
+        let w = random(2, 256, 15).quantize(DType::Q8K);
+        mul_mat(&w, &random(2, 256, 16), 1);
+    }
+}

@@ -1,0 +1,58 @@
+//! Bit-faithful reimplementation of the GGML block-quantization formats
+//! used by `stable-diffusion.cpp` and offloaded to IMAX3 in the paper.
+//!
+//! The paper reuses the quantized dot-product kernels of the GGML tensor
+//! library (`Q8_0` 8-bit blocks and `Q3_K` 3-bit k-quant super-blocks) for
+//! the U-Net's linear layers. This module reproduces:
+//!
+//! * the exact block layouts (`block_q8_0` = f16 scale + 32×i8,
+//!   `block_q3_K` = 32 B hmask + 64 B low-2-bit + 12 B packed 6-bit scales +
+//!   f16 super-scale, `block_q8_K` activation blocks with per-16 bsums),
+//! * quantize / dequantize rows,
+//! * the integer vec-dot kernels (`vec_dot_q8_0_q8_0`,
+//!   `vec_dot_q3_K_q8_K`) whose arithmetic IMAX executes with `OP_SML8` /
+//!   `OP_AD24` / `OP_CVT53`,
+//! * the paper's IMAX-specific **Q3_K restructuring** (6-bit scales
+//!   approximated to 5 bits, 2+1-bit quants repacked to 3 bits) together
+//!   with an ablation of its accuracy cost (§III-B: "almost no effect"),
+//! * an f32/f16/quantized [`tensor::Tensor`] and the GGML-style
+//!   `mul_mat` used by the graph executor in [`crate::sd`].
+
+pub mod dot;
+pub mod q3_k;
+pub mod q8_0;
+pub mod q8_k;
+pub mod tensor;
+
+pub use dot::{mul_mat, vec_dot};
+pub use tensor::{DType, Tensor};
+
+/// Elements per Q8_0 block.
+pub const QK8_0: usize = 32;
+/// Elements per k-quant super-block.
+pub const QK_K: usize = 256;
+
+/// Round-to-nearest (ties away from zero), matching GGML's `nearest_int`
+/// on the value ranges quantization produces.
+#[inline]
+pub(crate) fn nearest_i32(x: f32) -> i32 {
+    // GGML uses magic-number float rounding equivalent to rint() in
+    // round-half-to-even mode... except it applies it to scaled values
+    // where ties are vanishingly rare; llama.cpp's scalar fallback is
+    // lroundf. We use round-half-away like lroundf.
+    x.round() as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_matches_lround_semantics() {
+        assert_eq!(nearest_i32(2.5), 3);
+        assert_eq!(nearest_i32(-2.5), -3);
+        assert_eq!(nearest_i32(2.4), 2);
+        assert_eq!(nearest_i32(-2.4), -2);
+        assert_eq!(nearest_i32(0.0), 0);
+    }
+}

@@ -1,0 +1,592 @@
+//! `Q3_K`: 3-bit k-quant super-block quantization (GGML `block_q3_K`).
+//!
+//! 256 elements per super-block, laid out exactly like GGML:
+//!
+//! ```text
+//! hmask[32]   high (3rd) bit of each quant, bit b of byte l covers
+//!             element 32*b + l
+//! qs[64]      low 2 bits; element order: 128-element halves, within a
+//!             half 4 shift-planes (0,2,4,6) of 32 consecutive bytes
+//! scales[12]  16 × 6-bit signed sub-block scales (stored +32), packed
+//!             as 8 low nibbles + 8 high nibbles + 16 top-2-bit pairs
+//! d           f16 super-block scale
+//! ```
+//!
+//! Element value: `d * (sc_j - 32) * (q - (hmask bit ? 0 : 4))` where `q`
+//! is the low 2 bits — i.e. signed 3-bit weights in `[-4, 3]` with a
+//! signed 6-bit scale per 16 elements.
+//!
+//! This module also implements the paper's **IMAX restructuring**
+//! (§III-B): the 6-bit scales are approximated to 5 bits and the 2+1-bit
+//! quants are repacked into a unified 3-bit stream, which is what
+//! `OP_CVT53` consumes in hardware. [`to_imax_stream`] produces exactly
+//! that operand layout for the simulator, and the `*_imax5` functions
+//! quantify the accuracy cost of the 5-bit scale approximation (the paper
+//! reports "almost no effect").
+
+use super::{nearest_i32, QK_K};
+use crate::util::f16::F16;
+
+/// One 110-byte Q3_K super-block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockQ3K {
+    /// High-bit mask (1 bit per element).
+    pub hmask: [u8; QK_K / 8],
+    /// Low 2 bits of each quant.
+    pub qs: [u8; QK_K / 4],
+    /// Packed 6-bit sub-block scales.
+    pub scales: [u8; 12],
+    /// Super-block scale.
+    pub d: F16,
+}
+
+impl Default for BlockQ3K {
+    fn default() -> Self {
+        BlockQ3K { hmask: [0; QK_K / 8], qs: [0; QK_K / 4], scales: [0; 12], d: F16::ZERO }
+    }
+}
+
+impl BlockQ3K {
+    /// Serialized size in bytes (32 + 64 + 12 + 2 = 110), the DMA unit.
+    pub const BYTES: usize = QK_K / 8 + QK_K / 4 + 12 + 2;
+
+    /// Unpack the 16 6-bit scales to signed values in `[-32, 31]`
+    /// (i.e. stored value minus 32), reproducing GGML's kmask unpack.
+    pub fn unpack_scales(&self) -> [i8; 16] {
+        let mut out = [0i8; 16];
+        for j in 0..16 {
+            let low4 = if j < 8 {
+                self.scales[j] & 0x0F
+            } else {
+                self.scales[j - 8] >> 4
+            };
+            let hi2 = (self.scales[8 + j % 4] >> (2 * (j / 4))) & 3;
+            out[j] = ((low4 | (hi2 << 4)) as i8) - 32;
+        }
+        out
+    }
+
+    /// Pack 16 signed scales in `[-32, 31]` into the 12-byte layout.
+    pub fn pack_scales(scales: &[i8; 16]) -> [u8; 12] {
+        let mut out = [0u8; 12];
+        for (j, &s) in scales.iter().enumerate() {
+            let l = (s as i32 + 32) as u8; // 0..63
+            if j < 8 {
+                out[j] |= l & 0x0F;
+            } else {
+                out[j - 8] |= (l & 0x0F) << 4;
+            }
+            out[8 + j % 4] |= (l >> 4) << (2 * (j / 4));
+        }
+        out
+    }
+
+    /// Extract the signed 3-bit quant of element `idx` in `[-4, 3]`.
+    pub fn quant(&self, idx: usize) -> i8 {
+        debug_assert!(idx < QK_K);
+        let half = idx / 128; // 0 or 1
+        let within = idx % 128;
+        let shift = 2 * (within / 32);
+        let l = within % 32;
+        let low2 = ((self.qs[half * 32 + l] >> shift) & 3) as i8;
+        let hbit_group = idx / 32; // 0..7 -> mask bit
+        let hbyte = idx % 32;
+        let high_set = self.hmask[hbyte] & (1 << hbit_group) != 0;
+        low2 - if high_set { 0 } else { 4 }
+    }
+
+    /// Unpack all 256 signed quants plane-wise (the GGML `aux8` walk).
+    ///
+    /// §Perf: this replaces 256 independent [`BlockQ3K::quant`] bit
+    /// extractions (each recomputing shift/mask) with four shift-plane
+    /// sweeps per 128-half — ~4× faster per super-block and the reason
+    /// the Q3_K dot kernels run at Q8_0-like speed.
+    pub fn unpack_quants(&self) -> [i8; QK_K] {
+        let mut out = [0i8; QK_K];
+        for half in 0..2 {
+            let qs = &self.qs[half * 32..half * 32 + 32];
+            for shift in 0..4usize {
+                let hbit = (half * 4 + shift) as u8;
+                let base = half * 128 + shift * 32;
+                for l in 0..32 {
+                    let low2 = ((qs[l] >> (2 * shift)) & 3) as i8;
+                    let sub = (((self.hmask[l] >> hbit) & 1) ^ 1) << 2; // 0 or 4
+                    out[base + l] = low2 - sub as i8;
+                }
+            }
+        }
+        out
+    }
+
+    /// Dequantize the super-block into 256 floats (GGML
+    /// `dequantize_row_q3_K` semantics).
+    pub fn dequantize(&self, out: &mut [f32; QK_K]) {
+        let d_all = self.d.to_f32();
+        let scales = self.unpack_scales();
+        let q = self.unpack_quants();
+        for (idx, o) in out.iter_mut().enumerate() {
+            let dl = d_all * scales[idx / 16] as f32;
+            *o = dl * q[idx] as f32;
+        }
+    }
+
+    /// Quantize 256 floats, reproducing `quantize_row_q3_K_ref` (including
+    /// the rmse-refined per-16 scale search of `make_q3_quants`).
+    pub fn quantize(x: &[f32; QK_K]) -> BlockQ3K {
+        // Per-16 sub-block scales.
+        let mut sub_scales = [0.0f32; 16];
+        for j in 0..16 {
+            let chunk: &[f32; 16] = x[16 * j..16 * (j + 1)].try_into().unwrap();
+            sub_scales[j] = make_q3_scale(chunk);
+        }
+
+        // Super-scale: 6-bit code per sub-block.
+        let mut max_scale = 0.0f32;
+        let mut amax = 0.0f32;
+        for &s in &sub_scales {
+            if s.abs() > amax {
+                amax = s.abs();
+                max_scale = s;
+            }
+        }
+        let mut blk = BlockQ3K::default();
+        if max_scale == 0.0 {
+            return blk;
+        }
+        let iscale = -32.0 / max_scale;
+        let mut coded = [0i8; 16];
+        for j in 0..16 {
+            coded[j] = nearest_i32(iscale * sub_scales[j]).clamp(-32, 31) as i8;
+        }
+        blk.scales = Self::pack_scales(&coded);
+        blk.d = F16::from_f32(1.0 / iscale);
+
+        // Re-quantize elements against the coded (lossy) scales.
+        let d_f16 = blk.d.to_f32();
+        let mut l_vals = [0u8; QK_K]; // q + 4 in [0, 7]
+        for j in 0..16 {
+            let dl = d_f16 * coded[j] as f32;
+            if dl == 0.0 {
+                // GGML leaves L at 0 here, which decodes as -4 * 0-scale = 0.
+                for l in &mut l_vals[16 * j..16 * (j + 1)] {
+                    *l = 4; // encode q = 0 so dequant(0-scale) stays 0 cleanly
+                }
+                continue;
+            }
+            for ii in 0..16 {
+                let q = nearest_i32(x[16 * j + ii] / dl).clamp(-4, 3);
+                l_vals[16 * j + ii] = (q + 4) as u8;
+            }
+        }
+
+        // Pack hmask (bit set when q >= 0, i.e. L > 3).
+        for (idx, l) in l_vals.iter_mut().enumerate() {
+            if *l > 3 {
+                blk.hmask[idx % 32] |= 1 << (idx / 32);
+                *l -= 4;
+            }
+        }
+        // Pack low 2 bits: per 128-half, 4 shift planes over 32 bytes.
+        for half in 0..2 {
+            for l in 0..32 {
+                let base = half * 128 + l;
+                blk.qs[half * 32 + l] = l_vals[base]
+                    | (l_vals[base + 32] << 2)
+                    | (l_vals[base + 64] << 4)
+                    | (l_vals[base + 96] << 6);
+            }
+        }
+        blk
+    }
+
+    /// Serialize to GGML's on-disk layout.
+    pub fn to_bytes(&self) -> [u8; Self::BYTES] {
+        let mut out = [0u8; Self::BYTES];
+        out[..32].copy_from_slice(&self.hmask);
+        out[32..96].copy_from_slice(&self.qs);
+        out[96..108].copy_from_slice(&self.scales);
+        out[108..110].copy_from_slice(&self.d.0.to_le_bytes());
+        out
+    }
+
+    /// Parse from GGML's on-disk layout.
+    pub fn from_bytes(b: &[u8]) -> BlockQ3K {
+        assert_eq!(b.len(), Self::BYTES);
+        let mut blk = BlockQ3K::default();
+        blk.hmask.copy_from_slice(&b[..32]);
+        blk.qs.copy_from_slice(&b[32..96]);
+        blk.scales.copy_from_slice(&b[96..108]);
+        blk.d = F16(u16::from_le_bytes([b[108], b[109]]));
+        blk
+    }
+}
+
+/// `make_q3_quants(n=16, nmax=4, do_rmse=true)`: find the best per-16
+/// scale with greedy least-squares refinement, returning the scale
+/// (quants themselves are re-derived later against the coded scale).
+fn make_q3_scale(x: &[f32; 16]) -> f32 {
+    let nmax = 4i32;
+    let mut amax = 0.0f32;
+    let mut max = 0.0f32;
+    for &v in x.iter() {
+        if v.abs() > amax {
+            amax = v.abs();
+            max = v;
+        }
+    }
+    if amax == 0.0 {
+        return 0.0;
+    }
+    let iscale = -(nmax as f32) / max;
+    let mut l_vals = [0i32; 16];
+    let mut sumlx = 0.0f32;
+    let mut suml2 = 0.0f32;
+    for (i, &v) in x.iter().enumerate() {
+        let l = nearest_i32(iscale * v).clamp(-nmax, nmax - 1);
+        l_vals[i] = l;
+        sumlx += v * l as f32;
+        suml2 += (l * l) as f32;
+    }
+    for _try in 0..5 {
+        let mut n_changed = 0;
+        for i in 0..16 {
+            let slx = sumlx - x[i] * l_vals[i] as f32;
+            let sl2 = suml2 - (l_vals[i] * l_vals[i]) as f32;
+            if slx > 0.0 && sl2 > 0.0 {
+                let new_l = nearest_i32(x[i] * sl2 / slx).clamp(-nmax, nmax - 1);
+                if new_l != l_vals[i] {
+                    let slx2 = slx + x[i] * new_l as f32;
+                    let sl22 = sl2 + (new_l * new_l) as f32;
+                    if sl22 > 0.0 && slx2 * slx2 * suml2 > sumlx * sumlx * sl22 {
+                        l_vals[i] = new_l;
+                        sumlx = slx2;
+                        suml2 = sl22;
+                        n_changed += 1;
+                    }
+                }
+            }
+        }
+        if n_changed == 0 {
+            break;
+        }
+    }
+    if suml2 == 0.0 {
+        0.0
+    } else {
+        sumlx / suml2
+    }
+}
+
+/// Quantize a row; `x.len()` must be a multiple of 256.
+pub fn quantize_row(x: &[f32]) -> Vec<BlockQ3K> {
+    assert!(
+        x.len() % QK_K == 0,
+        "Q3_K rows must be a multiple of {QK_K} (got {})",
+        x.len()
+    );
+    x.chunks_exact(QK_K)
+        .map(|c| BlockQ3K::quantize(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Dequantize a row of super-blocks.
+pub fn dequantize_row(blocks: &[BlockQ3K]) -> Vec<f32> {
+    let mut out = vec![0.0f32; blocks.len() * QK_K];
+    let mut buf = [0.0f32; QK_K];
+    for (i, b) in blocks.iter().enumerate() {
+        b.dequantize(&mut buf);
+        out[i * QK_K..(i + 1) * QK_K].copy_from_slice(&buf);
+    }
+    out
+}
+
+/// `vec_dot_q3_K_q8_K`: Q3_K weights × Q8_K activations.
+///
+/// Per super-block: unpack signed 3-bit weights, multiply with the 8-bit
+/// activations into 16-bit products, weight each 16-group by its signed
+/// 6-bit scale into i32 accumulators, then one f32 multiply by
+/// `d_w * d_a`. This integer-dominant structure is what the paper maps
+/// onto 51 PEs with `OP_CVT53` + `OP_SML8` + `OP_AD24`.
+pub fn vec_dot(w: &[BlockQ3K], a: &[super::q8_k::BlockQ8K]) -> f32 {
+    assert_eq!(w.len(), a.len(), "row super-block count mismatch");
+    let mut sumf = 0.0f32;
+    for (bw, ba) in w.iter().zip(a.iter()) {
+        let scales = bw.unpack_scales();
+        let q = bw.unpack_quants();
+        let mut isum: i32 = 0;
+        for j in 0..16 {
+            let mut group: i32 = 0;
+            for l in 0..16 {
+                let idx = 16 * j + l;
+                group += q[idx] as i32 * ba.qs[idx] as i32;
+            }
+            isum += scales[j] as i32 * group;
+        }
+        sumf += bw.d.to_f32() * ba.d * isum as f32;
+    }
+    sumf
+}
+
+// ---------------------------------------------------------------------------
+// IMAX restructuring (paper §III-B)
+// ---------------------------------------------------------------------------
+
+/// A Q3_K super-block restructured into the operand stream the IMAX
+/// kernel consumes: unified 3-bit quants (stored as `q + 4` in `[0, 7]`)
+/// and 5-bit approximated scales, as produced in hardware by `OP_CVT53`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImaxQ3Stream {
+    /// `q + 4` for each element, one packed 3-bit value per entry.
+    pub q3: [u8; QK_K],
+    /// 5-bit signed scales in `[-16, 15]`; effective scale is `2 * s5`.
+    pub scales5: [i8; 16],
+    /// Unchanged f16 super-scale.
+    pub d: F16,
+}
+
+/// Restructure a block for IMAX: pack 2-bit + 1-bit into 3-bit, round the
+/// 6-bit scales to 5 bits (effective value `2 * round(sc / 2)`).
+pub fn to_imax_stream(b: &BlockQ3K) -> ImaxQ3Stream {
+    let mut q3 = [0u8; QK_K];
+    for (idx, (q, &signed)) in q3.iter_mut().zip(b.unpack_quants().iter()).enumerate() {
+        let _ = idx;
+        *q = (signed + 4) as u8;
+    }
+    let scales = b.unpack_scales();
+    let mut scales5 = [0i8; 16];
+    for (s5, &s6) in scales5.iter_mut().zip(scales.iter()) {
+        *s5 = div2_round(s6).clamp(-16, 15);
+    }
+    ImaxQ3Stream { q3, scales5, d: b.d }
+}
+
+/// Round-half-away division by two (what a shift-with-round unit does).
+#[inline]
+fn div2_round(s: i8) -> i8 {
+    let v = s as i32;
+    ((v + if v >= 0 { 1 } else { -1 }) / 2) as i8
+}
+
+/// Dequantize through the restructured (5-bit scale) representation —
+/// used to measure the approximation error the paper calls negligible.
+pub fn dequantize_row_imax5(blocks: &[BlockQ3K]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(blocks.len() * QK_K);
+    for b in blocks {
+        let s = to_imax_stream(b);
+        let d = s.d.to_f32();
+        for idx in 0..QK_K {
+            let dl = d * (2 * s.scales5[idx / 16]) as f32;
+            out.push(dl * (s.q3[idx] as i32 - 4) as f32);
+        }
+    }
+    out
+}
+
+/// Q3_K×Q8_K dot through the IMAX-restructured operands (5-bit scales) —
+/// the arithmetic the simulator's Q3_K kernel performs.
+pub fn vec_dot_imax5(w: &[BlockQ3K], a: &[super::q8_k::BlockQ8K]) -> f32 {
+    assert_eq!(w.len(), a.len());
+    let mut sumf = 0.0f32;
+    for (bw, ba) in w.iter().zip(a.iter()) {
+        let s = to_imax_stream(bw);
+        let mut isum: i32 = 0;
+        for j in 0..16 {
+            let mut group: i32 = 0;
+            for l in 0..16 {
+                let idx = 16 * j + l;
+                group += (s.q3[idx] as i32 - 4) * ba.qs[idx] as i32;
+            }
+            isum += 2 * s.scales5[j] as i32 * group;
+        }
+        sumf += s.d.to_f32() * ba.d * isum as f32;
+    }
+    sumf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ggml::q8_k;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn random_row(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn scale_pack_unpack_round_trip() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        for _ in 0..200 {
+            let mut scales = [0i8; 16];
+            for s in &mut scales {
+                *s = rng.range_i64(-32, 31) as i8;
+            }
+            let packed = BlockQ3K::pack_scales(&scales);
+            let blk = BlockQ3K { scales: packed, ..Default::default() };
+            assert_eq!(blk.unpack_scales(), scales);
+        }
+    }
+
+    #[test]
+    fn quant_extraction_covers_full_range() {
+        // Build a block with known quants via quantize of a crafted input
+        // and verify every element decodes within [-4, 3].
+        let x: Vec<f32> = random_row(QK_K, 2);
+        let b = BlockQ3K::quantize(x.as_slice().try_into().unwrap());
+        for idx in 0..QK_K {
+            let q = b.quant(idx);
+            assert!((-4..=3).contains(&q), "q={q} at {idx}");
+        }
+    }
+
+    #[test]
+    fn zero_block() {
+        let b = BlockQ3K::quantize(&[0.0; QK_K]);
+        assert_eq!(b.d, F16::ZERO);
+        let mut out = [1.0f32; QK_K];
+        b.dequantize(&mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn quantization_relative_error_reasonable() {
+        // 3-bit with per-16 scales: expect coarse but bounded error on
+        // smooth gaussian data.
+        let x: Vec<f32> = random_row(QK_K * 4, 3);
+        let blocks = quantize_row(&x);
+        let back = dequantize_row(&blocks);
+        let num: f32 = x.iter().zip(back.iter()).map(|(a, b)| (a - b).powi(2)).sum();
+        let den: f32 = x.iter().map(|a| a * a).sum();
+        let rel_rmse = (num / den).sqrt();
+        assert!(rel_rmse < 0.25, "relative RMSE {rel_rmse} too high for Q3_K");
+    }
+
+    #[test]
+    fn bytes_round_trip() {
+        let x: Vec<f32> = random_row(QK_K, 4);
+        let b = BlockQ3K::quantize(x.as_slice().try_into().unwrap());
+        assert_eq!(BlockQ3K::from_bytes(&b.to_bytes()), b);
+        assert_eq!(BlockQ3K::BYTES, 110);
+    }
+
+    #[test]
+    fn dot_matches_dequant_reference() {
+        // vec_dot must equal the f32 dot of (dequant weights, dequant
+        // activations) up to f32 summation order noise.
+        let n = QK_K * 2;
+        let xw = random_row(n, 5);
+        let xa = random_row(n, 6);
+        let w = quantize_row(&xw);
+        let a = q8_k::quantize_row(&xa);
+        let got = vec_dot(&w, &a);
+
+        let dw = dequantize_row(&w);
+        let da = q8_k::dequantize_row(&a);
+        let reference: f32 = dw.iter().zip(da.iter()).map(|(x, y)| x * y).sum();
+        let tol = 1e-3 * reference.abs().max(1.0);
+        assert!((got - reference).abs() < tol, "got {got}, ref {reference}");
+    }
+
+    #[test]
+    fn dot_approximates_f32_dot() {
+        let n = QK_K * 4;
+        let xw = random_row(n, 7);
+        let xa = random_row(n, 8);
+        let w = quantize_row(&xw);
+        let a = q8_k::quantize_row(&xa);
+        let got = vec_dot(&w, &a);
+        let truth: f32 = xw.iter().zip(xa.iter()).map(|(x, y)| x * y).sum();
+        // 3-bit quantization noise over n=1024 gaussian terms: loose bound.
+        let scale = (n as f32).sqrt();
+        assert!(
+            (got - truth).abs() < 0.5 * scale,
+            "got {got}, truth {truth}, n {n}"
+        );
+    }
+
+    #[test]
+    fn imax_stream_is_faithful_repack() {
+        // The 3-bit repack itself is lossless: q3 - 4 == quant(idx).
+        let x: Vec<f32> = random_row(QK_K, 9);
+        let b = BlockQ3K::quantize(x.as_slice().try_into().unwrap());
+        let s = to_imax_stream(&b);
+        for idx in 0..QK_K {
+            assert_eq!(s.q3[idx] as i32 - 4, b.quant(idx) as i32);
+            assert!(s.q3[idx] <= 7, "3-bit envelope violated");
+        }
+    }
+
+    #[test]
+    fn imax5_scale_approx_error_small() {
+        // Paper §III-B: 5-bit scale approximation has "almost no effect".
+        // Quantify: relative RMSE increase must stay under 6 % absolute.
+        let x: Vec<f32> = random_row(QK_K * 8, 10);
+        let blocks = quantize_row(&x);
+        let exact = dequantize_row(&blocks);
+        let approx = dequantize_row_imax5(&blocks);
+        let den: f32 = x.iter().map(|a| a * a).sum();
+        let rmse = |y: &[f32]| {
+            let num: f32 = x.iter().zip(y.iter()).map(|(a, b)| (a - b).powi(2)).sum();
+            (num / den).sqrt()
+        };
+        let (e_exact, e_approx) = (rmse(&exact), rmse(&approx));
+        assert!(
+            e_approx - e_exact < 0.06,
+            "5-bit scales cost {} RMSE (exact {e_exact}, approx {e_approx})",
+            e_approx - e_exact
+        );
+    }
+
+    #[test]
+    fn imax5_dot_close_to_exact_dot() {
+        let n = QK_K * 4;
+        let xw = random_row(n, 11);
+        let xa = random_row(n, 12);
+        let w = quantize_row(&xw);
+        let a = q8_k::quantize_row(&xa);
+        let exact = vec_dot(&w, &a);
+        let approx = vec_dot_imax5(&w, &a);
+        let denom = exact.abs().max(1.0);
+        assert!(
+            (exact - approx).abs() / denom < 0.15,
+            "exact {exact} vs imax5 {approx}"
+        );
+    }
+
+    #[test]
+    fn div2_round_half_away() {
+        assert_eq!(div2_round(3), 2);
+        assert_eq!(div2_round(-3), -2);
+        assert_eq!(div2_round(4), 2);
+        assert_eq!(div2_round(-4), -2);
+        assert_eq!(div2_round(1), 1);
+        assert_eq!(div2_round(-1), -1);
+        assert_eq!(div2_round(0), 0);
+    }
+
+    #[test]
+    fn hmask_layout_matches_ggml_bit_order() {
+        // Element idx uses bit (idx / 32) of byte (idx % 32).
+        let mut b = BlockQ3K::default();
+        // Set hmask for element 37: byte 5, bit 1.
+        b.hmask[5] = 1 << 1;
+        // Element 37 low2 = 0 -> with hbit set, quant = 0; without, -4.
+        assert_eq!(b.quant(37), 0);
+        assert_eq!(b.quant(36), -4);
+    }
+
+    #[test]
+    fn qs_layout_matches_ggml_shift_planes() {
+        let mut b = BlockQ3K::default();
+        // Give every element the hbit so values are the raw low2 bits.
+        b.hmask = [0xFF; 32];
+        // Element 96 (half 0, shift plane 3, byte 0): set bits 6..7 of qs[0].
+        b.qs[0] = 0b11 << 6;
+        assert_eq!(b.quant(96), 3);
+        // Element 128 (half 1, plane 0, byte 32): low bits of qs[32].
+        b.qs[32] = 0b10;
+        assert_eq!(b.quant(128), 2);
+        assert_eq!(b.quant(0), 0);
+    }
+}

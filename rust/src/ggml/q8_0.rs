@@ -1,0 +1,228 @@
+//! `Q8_0`: 8-bit block quantization (GGML `block_q8_0`).
+//!
+//! 32 elements per block, one shared f16 scale:
+//! `x[j] ≈ d * qs[j]`, `qs ∈ [-127, 127]`, `d = max|x| / 127`.
+//!
+//! The dot product of two Q8_0 rows is the kernel the paper maps onto 46
+//! IMAX PEs (Fig. 3): 8-bit multiplies accumulated into wide integers
+//! (`OP_SML8` → 24-bit, `OP_AD24` aggregation) followed by a single f32
+//! multiply with `d_a * d_b` per block.
+
+use super::{nearest_i32, QK8_0};
+use crate::util::f16::F16;
+
+/// One 34-byte Q8_0 block: scale + 32 signed bytes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockQ8_0 {
+    /// Block scale (stored as f16, exactly as GGML does).
+    pub d: F16,
+    /// Quantized values.
+    pub qs: [i8; QK8_0],
+}
+
+impl Default for BlockQ8_0 {
+    fn default() -> Self {
+        BlockQ8_0 { d: F16::ZERO, qs: [0; QK8_0] }
+    }
+}
+
+impl BlockQ8_0 {
+    /// Serialized size in bytes (2 + 32), the paper's DMA-volume unit.
+    pub const BYTES: usize = 2 + QK8_0;
+
+    /// Quantize 32 floats.
+    pub fn quantize(x: &[f32; QK8_0]) -> BlockQ8_0 {
+        let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let d = amax / 127.0;
+        let id = if d != 0.0 { 1.0 / d } else { 0.0 };
+        let mut qs = [0i8; QK8_0];
+        for (q, &v) in qs.iter_mut().zip(x.iter()) {
+            *q = nearest_i32(v * id).clamp(-127, 127) as i8;
+        }
+        BlockQ8_0 { d: F16::from_f32(d), qs }
+    }
+
+    /// Dequantize into 32 floats.
+    pub fn dequantize(&self, out: &mut [f32; QK8_0]) {
+        let d = self.d.to_f32();
+        for (o, &q) in out.iter_mut().zip(self.qs.iter()) {
+            *o = d * q as f32;
+        }
+    }
+
+    /// Serialize to GGML's on-disk layout (little-endian f16, then qs).
+    pub fn to_bytes(&self) -> [u8; Self::BYTES] {
+        let mut out = [0u8; Self::BYTES];
+        out[..2].copy_from_slice(&self.d.0.to_le_bytes());
+        for (o, &q) in out[2..].iter_mut().zip(self.qs.iter()) {
+            *o = q as u8;
+        }
+        out
+    }
+
+    /// Parse from GGML's on-disk layout.
+    pub fn from_bytes(b: &[u8]) -> BlockQ8_0 {
+        assert_eq!(b.len(), Self::BYTES);
+        let d = F16(u16::from_le_bytes([b[0], b[1]]));
+        let mut qs = [0i8; QK8_0];
+        for (q, &byte) in qs.iter_mut().zip(b[2..].iter()) {
+            *q = byte as i8;
+        }
+        BlockQ8_0 { d, qs }
+    }
+}
+
+/// Quantize a row; `x.len()` must be a multiple of 32.
+pub fn quantize_row(x: &[f32]) -> Vec<BlockQ8_0> {
+    assert!(
+        x.len() % QK8_0 == 0,
+        "Q8_0 rows must be a multiple of {QK8_0} (got {})",
+        x.len()
+    );
+    x.chunks_exact(QK8_0)
+        .map(|c| BlockQ8_0::quantize(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Dequantize a row of blocks.
+pub fn dequantize_row(blocks: &[BlockQ8_0]) -> Vec<f32> {
+    let mut out = vec![0.0f32; blocks.len() * QK8_0];
+    let mut buf = [0.0f32; QK8_0];
+    for (i, b) in blocks.iter().enumerate() {
+        b.dequantize(&mut buf);
+        out[i * QK8_0..(i + 1) * QK8_0].copy_from_slice(&buf);
+    }
+    out
+}
+
+/// `vec_dot_q8_0_q8_0`: the exact arithmetic the IMAX Q8_0 kernel performs.
+///
+/// Per block: 32 signed 8-bit products summed exactly in i32 (IMAX chains
+/// `OP_SML8`/`OP_AD24` into a 24-bit accumulator, which cannot overflow:
+/// `32 * 127 * 127 = 516_128 < 2^23`), then scaled by `d_a * d_b` in f32.
+pub fn vec_dot(a: &[BlockQ8_0], b: &[BlockQ8_0]) -> f32 {
+    assert_eq!(a.len(), b.len(), "row block-count mismatch");
+    let mut acc = 0.0f32;
+    for (ba, bb) in a.iter().zip(b.iter()) {
+        let mut isum: i32 = 0;
+        for (&qa, &qb) in ba.qs.iter().zip(bb.qs.iter()) {
+            isum += qa as i32 * qb as i32;
+        }
+        acc += isum as f32 * ba.d.to_f32() * bb.d.to_f32();
+    }
+    acc
+}
+
+/// Worst-case magnitude of a per-block integer accumulator — the invariant
+/// that lets IMAX use 24-bit adders (`OP_AD24`).
+pub const MAX_BLOCK_ISUM: i32 = (QK8_0 as i32) * 127 * 127;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn random_row(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        (0..n).map(|_| r.normal() * scale).collect()
+    }
+
+    #[test]
+    fn zero_block() {
+        let b = BlockQ8_0::quantize(&[0.0; QK8_0]);
+        assert_eq!(b.d.to_f32(), 0.0);
+        assert!(b.qs.iter().all(|&q| q == 0));
+    }
+
+    #[test]
+    fn quantize_error_bound() {
+        // |x - dequant(quant(x))| <= d/2 + f16 rounding of d.
+        let x: Vec<f32> = random_row(QK8_0, 1, 2.0);
+        let b = BlockQ8_0::quantize(x.as_slice().try_into().unwrap());
+        let d = b.d.to_f32();
+        let mut out = [0.0; QK8_0];
+        b.dequantize(&mut out);
+        for (orig, deq) in x.iter().zip(out.iter()) {
+            assert!(
+                (orig - deq).abs() <= 0.5 * d * 1.01 + 1e-6,
+                "error {} exceeds half-step {}",
+                (orig - deq).abs(),
+                0.5 * d
+            );
+        }
+    }
+
+    #[test]
+    fn max_magnitude_hits_127() {
+        let mut x = [0.0f32; QK8_0];
+        x[5] = -3.0; // largest magnitude
+        x[9] = 1.5;
+        let b = BlockQ8_0::quantize(&x);
+        assert_eq!(b.qs[5], -127);
+        assert_eq!(b.qs[9], 64); // 1.5/ (3/127) = 63.5 -> 64 (round half away)
+    }
+
+    #[test]
+    fn bytes_round_trip() {
+        let x: Vec<f32> = random_row(QK8_0, 2, 1.0);
+        let b = BlockQ8_0::quantize(x.as_slice().try_into().unwrap());
+        let back = BlockQ8_0::from_bytes(&b.to_bytes());
+        assert_eq!(b, back);
+    }
+
+    #[test]
+    fn row_quantize_shape_checked() {
+        assert_eq!(quantize_row(&vec![0.0; 96]).len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 32")]
+    fn row_quantize_rejects_ragged() {
+        quantize_row(&vec![0.0; 33]);
+    }
+
+    #[test]
+    fn dot_matches_float_reference() {
+        // Quantized dot must approximate the f32 dot of the dequantized
+        // rows *exactly* (same arithmetic), and the original rows closely.
+        let n = 256;
+        let xa = random_row(n, 3, 1.0);
+        let xb = random_row(n, 4, 1.0);
+        let qa = quantize_row(&xa);
+        let qb = quantize_row(&xb);
+        let got = vec_dot(&qa, &qb);
+
+        // Reference over dequantized values.
+        let da = dequantize_row(&qa);
+        let db = dequantize_row(&qb);
+        let ref_deq: f32 = da.iter().zip(db.iter()).map(|(a, b)| a * b).sum();
+        assert!(
+            (got - ref_deq).abs() < 1e-2 * ref_deq.abs().max(1.0),
+            "got {got}, dequant-ref {ref_deq}"
+        );
+
+        // And the true f32 dot within quantization noise.
+        let true_dot: f32 = xa.iter().zip(xb.iter()).map(|(a, b)| a * b).sum();
+        let rel = (got - true_dot).abs() / true_dot.abs().max(1.0);
+        assert!(rel < 0.05, "relative error {rel} vs f32 dot");
+    }
+
+    #[test]
+    fn isum_fits_24_bits() {
+        assert!(MAX_BLOCK_ISUM < (1 << 23), "OP_AD24 would overflow");
+        // Adversarial block: all +127 × all -127.
+        let a = BlockQ8_0 { d: F16::ONE, qs: [127; QK8_0] };
+        let b = BlockQ8_0 { d: F16::ONE, qs: [-127; QK8_0] };
+        let got = vec_dot(&[a], &[b]);
+        assert_eq!(got, -(MAX_BLOCK_ISUM as f32));
+    }
+
+    #[test]
+    fn dot_is_symmetric() {
+        let qa = quantize_row(&random_row(128, 7, 0.5));
+        let qb = quantize_row(&random_row(128, 8, 0.5));
+        // Symmetric up to f32 multiply ordering ((i*da)*db vs (i*db)*da).
+        let (ab, ba) = (vec_dot(&qa, &qb), vec_dot(&qb, &qa));
+        assert!((ab - ba).abs() <= 1e-6 + 1e-4 * ab.abs(), "{ab} vs {ba}");
+    }
+}

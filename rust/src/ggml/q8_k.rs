@@ -1,0 +1,156 @@
+//! `Q8_K`: 8-bit activation quantization over 256-element super-blocks
+//! (GGML `block_q8_K`).
+//!
+//! This is the format GGML quantizes *activations* into before a k-quant
+//! vec-dot (`vec_dot_q3_K_q8_K` takes Q3_K weights × Q8_K activations).
+//! Unlike `Q8_0` it keeps an f32 scale and per-16-element partial sums
+//! (`bsums`) that k-quant kernels use to fold the weights' minimums in.
+
+use super::{nearest_i32, QK_K};
+
+/// One Q8_K super-block: f32 scale, 256 signed bytes, 16 partial sums.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockQ8K {
+    /// Super-block scale (f32, matching GGML).
+    pub d: f32,
+    /// Quantized values.
+    pub qs: [i8; QK_K],
+    /// Sum of each 16-element group of `qs` (i16 in GGML).
+    pub bsums: [i16; QK_K / 16],
+}
+
+impl Default for BlockQ8K {
+    fn default() -> Self {
+        BlockQ8K { d: 0.0, qs: [0; QK_K], bsums: [0; QK_K / 16] }
+    }
+}
+
+impl BlockQ8K {
+    /// Quantize 256 floats, reproducing `quantize_row_q8_K_ref`: the scale
+    /// anchors the most-negative representation at -128.
+    pub fn quantize(x: &[f32; QK_K]) -> BlockQ8K {
+        let mut amax = 0.0f32;
+        let mut max = 0.0f32;
+        for &v in x.iter() {
+            if v.abs() > amax {
+                amax = v.abs();
+                max = v;
+            }
+        }
+        if amax == 0.0 {
+            return BlockQ8K::default();
+        }
+        let iscale = -128.0 / max;
+        let mut qs = [0i8; QK_K];
+        for (q, &v) in qs.iter_mut().zip(x.iter()) {
+            *q = nearest_i32(iscale * v).min(127) as i8;
+        }
+        let mut bsums = [0i16; QK_K / 16];
+        for (g, chunk) in qs.chunks_exact(16).enumerate() {
+            bsums[g] = chunk.iter().map(|&q| q as i16).sum();
+        }
+        BlockQ8K { d: 1.0 / iscale, qs, bsums }
+    }
+
+    /// Dequantize into 256 floats.
+    pub fn dequantize(&self, out: &mut [f32; QK_K]) {
+        for (o, &q) in out.iter_mut().zip(self.qs.iter()) {
+            *o = self.d * q as f32;
+        }
+    }
+}
+
+/// Quantize a row; `x.len()` must be a multiple of 256.
+pub fn quantize_row(x: &[f32]) -> Vec<BlockQ8K> {
+    assert!(
+        x.len() % QK_K == 0,
+        "Q8_K rows must be a multiple of {QK_K} (got {})",
+        x.len()
+    );
+    x.chunks_exact(QK_K)
+        .map(|c| BlockQ8K::quantize(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Dequantize a row of blocks.
+pub fn dequantize_row(blocks: &[BlockQ8K]) -> Vec<f32> {
+    let mut out = vec![0.0f32; blocks.len() * QK_K];
+    let mut buf = [0.0f32; QK_K];
+    for (i, b) in blocks.iter().enumerate() {
+        b.dequantize(&mut buf);
+        out[i * QK_K..(i + 1) * QK_K].copy_from_slice(&buf);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn random_row(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn zero_block_is_default() {
+        let b = BlockQ8K::quantize(&[0.0; QK_K]);
+        assert_eq!(b, BlockQ8K::default());
+    }
+
+    #[test]
+    fn extreme_value_maps_to_neg128_anchor() {
+        let mut x = [0.0f32; QK_K];
+        x[0] = 4.0; // max-magnitude is positive -> iscale negative
+        let b = BlockQ8K::quantize(&x);
+        assert_eq!(b.qs[0], -128);
+        assert!((b.d * b.qs[0] as f32 - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn negative_anchor() {
+        let mut x = [0.0f32; QK_K];
+        x[10] = -2.0;
+        let b = BlockQ8K::quantize(&x);
+        assert_eq!(b.qs[10], -128);
+        assert!((b.d * -128.0 - -2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bsums_are_group_sums() {
+        let x: Vec<f32> = random_row(QK_K, 5);
+        let b = BlockQ8K::quantize(x.as_slice().try_into().unwrap());
+        for (g, chunk) in b.qs.chunks_exact(16).enumerate() {
+            let s: i16 = chunk.iter().map(|&q| q as i16).sum();
+            assert_eq!(b.bsums[g], s, "group {g}");
+        }
+    }
+
+    #[test]
+    fn round_trip_error_bound() {
+        let x: Vec<f32> = random_row(QK_K, 6);
+        let b = BlockQ8K::quantize(x.as_slice().try_into().unwrap());
+        let mut out = [0.0f32; QK_K];
+        b.dequantize(&mut out);
+        let step = b.d.abs();
+        for (orig, deq) in x.iter().zip(out.iter()) {
+            assert!((orig - deq).abs() <= 0.5 * step + 1e-6);
+        }
+    }
+
+    #[test]
+    fn row_helpers() {
+        let x = random_row(2 * QK_K, 7);
+        let blocks = quantize_row(&x);
+        assert_eq!(blocks.len(), 2);
+        let back = dequantize_row(&blocks);
+        assert_eq!(back.len(), x.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 256")]
+    fn ragged_rejected() {
+        quantize_row(&vec![0.0; 100]);
+    }
+}

@@ -1,0 +1,298 @@
+//! A GGML-style 2-D tensor holding f32, f16, or quantized rows.
+//!
+//! Weight matrices live row-major with each row independently quantized
+//! (exactly like GGML: a `[M, K]` weight has `M` rows of `K/block`
+//! blocks). Activations stay f32 until a `mul_mat` quantizes them on the
+//! fly into the vec-dot partner format (`Q8_0` for `Q8_0`, `Q8_K` for
+//! `Q3_K`), which is GGML's `ggml_compute_forward_mul_mat` flow.
+
+use super::{q3_k, q8_0, q8_k, QK8_0, QK_K};
+use crate::util::f16::F16;
+
+/// Element/storage type of a tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// 32-bit float.
+    F32,
+    /// 16-bit float.
+    F16,
+    /// 8-bit block quantization (32/block, f16 scale).
+    Q8_0,
+    /// 3-bit k-quant (256/super-block).
+    Q3K,
+    /// 8-bit k-quant activation format (256/super-block, f32 scale+bsums).
+    Q8K,
+}
+
+impl DType {
+    /// Bytes per element-block / elements per block, for size accounting.
+    pub fn block_size(self) -> usize {
+        match self {
+            DType::F32 | DType::F16 => 1,
+            DType::Q8_0 => QK8_0,
+            DType::Q3K | DType::Q8K => QK_K,
+        }
+    }
+
+    /// Bytes occupied by one block (one element for float types).
+    pub fn block_bytes(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F16 => 2,
+            DType::Q8_0 => q8_0::BlockQ8_0::BYTES,
+            DType::Q3K => q3_k::BlockQ3K::BYTES,
+            DType::Q8K => 4 + QK_K + 2 * (QK_K / 16),
+        }
+    }
+
+    /// Bytes needed to store `n` elements (must divide evenly).
+    pub fn row_bytes(self, n: usize) -> usize {
+        assert!(n % self.block_size() == 0, "{n} not a multiple of {:?} block", self);
+        n / self.block_size() * self.block_bytes()
+    }
+
+    /// Effective bits per weight (the paper's model-size axis).
+    pub fn bits_per_weight(self) -> f64 {
+        self.row_bytes(self.block_size().max(256)) as f64 * 8.0
+            / self.block_size().max(256) as f64
+    }
+
+    /// Short name matching GGML spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "F32",
+            DType::F16 => "F16",
+            DType::Q8_0 => "Q8_0",
+            DType::Q3K => "Q3_K",
+            DType::Q8K => "Q8_K",
+        }
+    }
+}
+
+/// Tensor storage.
+#[derive(Debug, Clone)]
+pub enum Storage {
+    /// Plain f32 values.
+    F32(Vec<f32>),
+    /// f16 values (stored as raw bits).
+    F16(Vec<F16>),
+    /// Q8_0 blocks, `cols / 32` per row.
+    Q8_0(Vec<q8_0::BlockQ8_0>),
+    /// Q3_K super-blocks, `cols / 256` per row.
+    Q3K(Vec<q3_k::BlockQ3K>),
+    /// Q8_K super-blocks, `cols / 256` per row.
+    Q8K(Vec<q8_k::BlockQ8K>),
+}
+
+/// A 2-D tensor `[rows, cols]`, row-major.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    /// Number of rows (output features for weights).
+    pub rows: usize,
+    /// Number of columns (the contraction dimension K).
+    pub cols: usize,
+    /// Storage payload.
+    pub data: Storage,
+}
+
+impl Tensor {
+    /// f32 tensor from data.
+    pub fn f32(rows: usize, cols: usize, data: Vec<f32>) -> Tensor {
+        assert_eq!(data.len(), rows * cols);
+        Tensor { rows, cols, data: Storage::F32(data) }
+    }
+
+    /// f32 tensor of zeros.
+    pub fn zeros(rows: usize, cols: usize) -> Tensor {
+        Tensor::f32(rows, cols, vec![0.0; rows * cols])
+    }
+
+    /// f16 tensor from f32 data (rounded).
+    pub fn f16_from(rows: usize, cols: usize, data: &[f32]) -> Tensor {
+        assert_eq!(data.len(), rows * cols);
+        Tensor {
+            rows,
+            cols,
+            data: Storage::F16(data.iter().map(|&v| F16::from_f32(v)).collect()),
+        }
+    }
+
+    /// DType of the storage.
+    pub fn dtype(&self) -> DType {
+        match &self.data {
+            Storage::F32(_) => DType::F32,
+            Storage::F16(_) => DType::F16,
+            Storage::Q8_0(_) => DType::Q8_0,
+            Storage::Q3K(_) => DType::Q3K,
+            Storage::Q8K(_) => DType::Q8K,
+        }
+    }
+
+    /// Total elements.
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Serialized byte size (the DMA-volume unit for offload modelling).
+    pub fn byte_size(&self) -> usize {
+        self.rows * self.dtype().row_bytes(self.cols)
+    }
+
+    /// Quantize an f32 tensor's rows into `dtype`.
+    pub fn quantize(&self, dtype: DType) -> Tensor {
+        let src = match &self.data {
+            Storage::F32(v) => v,
+            _ => panic!("quantize expects an f32 source tensor"),
+        };
+        let data = match dtype {
+            DType::F32 => Storage::F32(src.clone()),
+            DType::F16 => Storage::F16(src.iter().map(|&v| F16::from_f32(v)).collect()),
+            DType::Q8_0 => {
+                let mut blocks = Vec::with_capacity(self.rows * self.cols / QK8_0);
+                for r in 0..self.rows {
+                    blocks.extend(q8_0::quantize_row(&src[r * self.cols..(r + 1) * self.cols]));
+                }
+                Storage::Q8_0(blocks)
+            }
+            DType::Q3K => {
+                let mut blocks = Vec::with_capacity(self.rows * self.cols / QK_K);
+                for r in 0..self.rows {
+                    blocks.extend(q3_k::quantize_row(&src[r * self.cols..(r + 1) * self.cols]));
+                }
+                Storage::Q3K(blocks)
+            }
+            DType::Q8K => {
+                let mut blocks = Vec::with_capacity(self.rows * self.cols / QK_K);
+                for r in 0..self.rows {
+                    blocks.extend(q8_k::quantize_row(&src[r * self.cols..(r + 1) * self.cols]));
+                }
+                Storage::Q8K(blocks)
+            }
+        };
+        Tensor { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Dequantize/convert to a fresh f32 tensor.
+    pub fn to_f32(&self) -> Tensor {
+        let data = match &self.data {
+            Storage::F32(v) => v.clone(),
+            Storage::F16(v) => v.iter().map(|h| h.to_f32()).collect(),
+            Storage::Q8_0(blocks) => q8_0::dequantize_row(blocks),
+            Storage::Q3K(blocks) => q3_k::dequantize_row(blocks),
+            Storage::Q8K(blocks) => q8_k::dequantize_row(blocks),
+        };
+        Tensor::f32(self.rows, self.cols, data)
+    }
+
+    /// Borrow f32 data (panics for non-f32 storage).
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            Storage::F32(v) => v,
+            other => panic!("expected f32 storage, got {:?}", dtype_of(other)),
+        }
+    }
+
+    /// One f32 row.
+    pub fn row_f32(&self, r: usize) -> &[f32] {
+        let v = self.as_f32();
+        &v[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Blocks-per-row for quantized storage.
+    pub fn blocks_per_row(&self) -> usize {
+        self.cols / self.dtype().block_size()
+    }
+}
+
+fn dtype_of(s: &Storage) -> DType {
+    match s {
+        Storage::F32(_) => DType::F32,
+        Storage::F16(_) => DType::F16,
+        Storage::Q8_0(_) => DType::Q8_0,
+        Storage::Q3K(_) => DType::Q3K,
+        Storage::Q8K(_) => DType::Q8K,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn random(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        let mut v = vec![0.0f32; rows * cols];
+        r.fill_normal(&mut v, 1.0);
+        Tensor::f32(rows, cols, v)
+    }
+
+    #[test]
+    fn byte_sizes_match_ggml() {
+        // Q8_0: 34 bytes / 32 weights = 8.5 bpw. Q3_K: 110 / 256 = 3.4375.
+        let t = random(4, 256, 1);
+        assert_eq!(t.quantize(DType::Q8_0).byte_size(), 4 * 8 * 34);
+        assert_eq!(t.quantize(DType::Q3K).byte_size(), 4 * 110);
+        assert_eq!(t.byte_size(), 4 * 256 * 4);
+        assert_eq!(t.quantize(DType::F16).byte_size(), 4 * 256 * 2);
+    }
+
+    #[test]
+    fn bits_per_weight() {
+        assert!((DType::Q8_0.bits_per_weight() - 8.5).abs() < 1e-9);
+        assert!((DType::Q3K.bits_per_weight() - 3.4375).abs() < 1e-9);
+        assert_eq!(DType::F32.bits_per_weight(), 32.0);
+    }
+
+    #[test]
+    fn quantize_dequantize_f16_exact_for_halves() {
+        let t = Tensor::f32(1, 32, (0..32).map(|i| i as f32 * 0.25).collect());
+        let h = t.quantize(DType::F16);
+        assert_eq!(h.to_f32().as_f32(), t.as_f32());
+    }
+
+    #[test]
+    fn q8_0_round_trip_close() {
+        let t = random(3, 64, 2);
+        let q = t.quantize(DType::Q8_0);
+        let back = q.to_f32();
+        for (a, b) in t.as_f32().iter().zip(back.as_f32().iter()) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn rows_quantized_independently() {
+        // Changing one row must not change another row's blocks.
+        let mut base = random(2, 256, 3);
+        let q1 = base.quantize(DType::Q3K);
+        if let Storage::F32(v) = &mut base.data {
+            for x in v[256..512].iter_mut() {
+                *x *= 5.0;
+            }
+        }
+        let q2 = base.quantize(DType::Q3K);
+        let (b1, b2) = match (&q1.data, &q2.data) {
+            (Storage::Q3K(a), Storage::Q3K(b)) => (a, b),
+            _ => unreachable!(),
+        };
+        assert_eq!(b1[0], b2[0], "row 0 blocks must be unchanged");
+        assert_ne!(b1[1], b2[1], "row 1 blocks must differ");
+    }
+
+    #[test]
+    #[should_panic(expected = "expected f32 storage")]
+    fn as_f32_type_checked() {
+        random(1, 32, 4).quantize(DType::Q8_0).as_f32();
+    }
+
+    #[test]
+    fn row_accessor() {
+        let t = Tensor::f32(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row_f32(1), &[4., 5., 6.]);
+    }
+}

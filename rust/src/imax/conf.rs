@@ -1,0 +1,242 @@
+//! Kernel configurations: how the two dot-product kernels map onto the
+//! 64-PE linear array.
+//!
+//! The paper states the mappings' PE budgets — **Q3_K across 51 PEs,
+//! Q8_0 across 46 PEs** (§III-B) — and the dataflow structure of Figs. 3
+//! and 4 (8-bit MAC chains aggregated to 24-bit "across every 12 PEs",
+//! with a final f32 multiply; Q3_K adds the OP_CVT53 restructuring
+//! stage). The exact PE-by-PE placement is not published, so this module
+//! fixes a concrete placement consistent with those constraints and
+//! documents it; the timing model depends only on the group geometry
+//! (elements per beat, pipeline depth, PE count), which *is* constrained
+//! by the paper.
+
+use super::PES_PER_LANE;
+
+/// Which quantized kernel a configuration implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Q8_0 × Q8_0 dot (Fig. 3).
+    Q8_0,
+    /// Q3_K × Q8_K dot with IMAX restructuring (Fig. 4).
+    Q3K,
+}
+
+impl KernelKind {
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Q8_0 => "Q8_0",
+            KernelKind::Q3K => "Q3_K",
+        }
+    }
+}
+
+/// Role a PE plays inside a group (for utilization/power accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeRole {
+    /// Streams operand words out of LMM (address generation + load).
+    Load,
+    /// OP_SML8 multiply-add stage.
+    Sml8,
+    /// OP_AD24 aggregation stage.
+    Ad24,
+    /// OP_CVT53 restructuring stage (Q3_K only).
+    Cvt53,
+    /// 32-bit integer accumulate (Q3_K isum across sub-blocks).
+    Add32,
+    /// Integer → float conversion.
+    CvtI2F,
+    /// f32 multiply/accumulate stage.
+    Fma,
+    /// Result drain / store.
+    Store,
+}
+
+/// Static description of one kernel's lane mapping.
+#[derive(Debug, Clone)]
+pub struct KernelConfig {
+    /// Kernel this config implements.
+    pub kind: KernelKind,
+    /// Number of parallel MAC groups in the lane.
+    pub groups: usize,
+    /// Elements (MACs) consumed per group per beat.
+    pub elems_per_beat: usize,
+    /// Pipeline depth in PE stages (first operand in → result at drain).
+    pub pipeline_depth: usize,
+    /// Per-group PE roles (placement of one group).
+    pub group_pes: Vec<PeRole>,
+    /// Shared PEs outside the groups (reduction, drain, control).
+    pub shared_pes: Vec<PeRole>,
+}
+
+impl KernelConfig {
+    /// The Q8_0 mapping: 46 PEs (§III-B).
+    ///
+    /// Three identical 12-PE groups, each retiring one 32-element block
+    /// per beat, matching Fig. 3's "aggregate … into a 24-bit integer
+    /// across every 12 PEs":
+    ///
+    /// ```text
+    /// per group (12 PEs):
+    ///   2 × Load     stream w-word + a-word (8 int8 each) per beat
+    ///   8 × OP_SML8  4 products each (2 lanes × 2 segs)  = 32 MACs
+    ///   1 × OP_AD24  fold the two SIMD 24-bit lanes
+    ///   1 × CvtI2F   block isum → f32
+    /// shared (10 PEs):
+    ///   3 × Fma      × (d_w · d_a), one per group, in block order
+    ///   3 × Fma      f32 accumulator chain (ordered reduction)
+    ///   2 × Load     scale-word streaming
+    ///   2 × Store    result drain to LMM
+    /// total: 3 × 12 + 10 = 46
+    /// ```
+    pub fn q8_0() -> KernelConfig {
+        use PeRole::*;
+        let group = vec![
+            Load, Load, Sml8, Sml8, Sml8, Sml8, Sml8, Sml8, Sml8, Sml8, Ad24, CvtI2F,
+        ];
+        let shared = vec![Fma, Fma, Fma, Fma, Fma, Fma, Load, Load, Store, Store];
+        let cfg = KernelConfig {
+            kind: KernelKind::Q8_0,
+            groups: 3,
+            elems_per_beat: 32,
+            pipeline_depth: 12 + 4, // group stages + shared fma/drain spine
+            group_pes: group,
+            shared_pes: shared,
+        };
+        debug_assert_eq!(cfg.pe_count(), 46);
+        cfg
+    }
+
+    /// The Q3_K mapping: 51 PEs (§III-B).
+    ///
+    /// Three 14-PE groups, each retiring one 16-element sub-block per
+    /// beat (the Q3_K scale granularity), plus a 9-PE shared spine:
+    ///
+    /// ```text
+    /// per group (14 PEs):
+    ///   2 × Load      stream packed-3-bit w-word + a-word
+    ///   2 × OP_CVT53  unpack 3-bit → signed 8-bit; 5-bit scale feed
+    ///   4 × OP_SML8   4 products each                = 16 MACs
+    ///   2 × OP_AD24   fold lanes + chain partials
+    ///   1 × OP_CVT53  scale multiply (× 2·s5)
+    ///   2 × Add32     isum accumulate across the 16 sub-blocks
+    ///   1 × CvtI2F    super-block isum → f32
+    /// shared (9 PEs):
+    ///   3 × Fma       × (d_w · d_a) per group, in super-block order
+    ///   2 × Fma       ordered f32 reduction
+    ///   2 × Load      scale stream
+    ///   2 × Store     drain
+    /// total: 3 × 14 + 9 = 51
+    /// ```
+    pub fn q3_k() -> KernelConfig {
+        use PeRole::*;
+        let group = vec![
+            Load, Load, Cvt53, Cvt53, Sml8, Sml8, Sml8, Sml8, Ad24, Ad24, Cvt53, Add32, Add32,
+            CvtI2F,
+        ];
+        let shared = vec![Fma, Fma, Fma, Fma, Fma, Load, Load, Store, Store];
+        let cfg = KernelConfig {
+            kind: KernelKind::Q3K,
+            groups: 3,
+            elems_per_beat: 16,
+            pipeline_depth: 14 + 4,
+            group_pes: group,
+            shared_pes: shared,
+        };
+        debug_assert_eq!(cfg.pe_count(), 51);
+        cfg
+    }
+
+    /// Config for a kernel kind.
+    pub fn for_kind(kind: KernelKind) -> KernelConfig {
+        match kind {
+            KernelKind::Q8_0 => KernelConfig::q8_0(),
+            KernelKind::Q3K => KernelConfig::q3_k(),
+        }
+    }
+
+    /// Total PEs this kernel occupies (the paper's 46 / 51).
+    pub fn pe_count(&self) -> usize {
+        self.groups * self.group_pes.len() + self.shared_pes.len()
+    }
+
+    /// MAC throughput per beat for the whole lane.
+    pub fn macs_per_beat(&self) -> usize {
+        self.groups * self.elems_per_beat
+    }
+
+    /// PEs left idle in the 64-PE lane (general-purpose slack).
+    pub fn idle_pes(&self) -> usize {
+        PES_PER_LANE - self.pe_count()
+    }
+
+    /// Beats needed for one dot product over `k` elements.
+    ///
+    /// The three groups stride over the blocks of a single dot (block
+    /// `b` → group `b mod 3`), so a dot of `nb` block-beats completes in
+    /// `ceil(nb / groups)` beats.
+    pub fn beats_for_dot(&self, k: usize) -> u64 {
+        let nb = k.div_ceil(self.elems_per_beat) as u64;
+        nb.div_ceil(self.groups as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pe_budgets_match_paper() {
+        assert_eq!(KernelConfig::q8_0().pe_count(), 46, "paper: Q8_0 on 46 PEs");
+        assert_eq!(KernelConfig::q3_k().pe_count(), 51, "paper: Q3_K on 51 PEs");
+    }
+
+    #[test]
+    fn both_fit_in_a_64_pe_lane() {
+        assert!(KernelConfig::q8_0().pe_count() <= PES_PER_LANE);
+        assert!(KernelConfig::q3_k().pe_count() <= PES_PER_LANE);
+        assert_eq!(KernelConfig::q8_0().idle_pes(), 18);
+        assert_eq!(KernelConfig::q3_k().idle_pes(), 13);
+    }
+
+    #[test]
+    fn q8_0_group_is_12_pes_as_fig3_states() {
+        assert_eq!(KernelConfig::q8_0().group_pes.len(), 12);
+    }
+
+    #[test]
+    fn sml8_count_covers_elems_per_beat() {
+        for cfg in [KernelConfig::q8_0(), KernelConfig::q3_k()] {
+            let sml8 = cfg.group_pes.iter().filter(|r| **r == PeRole::Sml8).count();
+            // Each OP_SML8 PE performs 4 int8 products per beat.
+            assert_eq!(sml8 * 4, cfg.elems_per_beat, "{:?}", cfg.kind);
+        }
+    }
+
+    #[test]
+    fn q3k_has_cvt53_q8_0_does_not() {
+        let has_cvt = |c: &KernelConfig| c.group_pes.iter().any(|r| *r == PeRole::Cvt53);
+        assert!(has_cvt(&KernelConfig::q3_k()));
+        assert!(!has_cvt(&KernelConfig::q8_0()));
+    }
+
+    #[test]
+    fn beats_for_dot_rounds_up() {
+        let q8 = KernelConfig::q8_0();
+        // k=256 -> 8 blocks over 3 groups -> 3 beats.
+        assert_eq!(q8.beats_for_dot(256), 3);
+        assert_eq!(q8.beats_for_dot(32), 1);
+        assert_eq!(q8.beats_for_dot(96), 1);
+        assert_eq!(q8.beats_for_dot(128), 2);
+        let q3 = KernelConfig::q3_k();
+        // k=256 -> 16 sub-blocks over 3 groups -> 6 beats.
+        assert_eq!(q3.beats_for_dot(256), 6);
+    }
+
+    #[test]
+    fn mac_rates() {
+        assert_eq!(KernelConfig::q8_0().macs_per_beat(), 96);
+        assert_eq!(KernelConfig::q3_k().macs_per_beat(), 48);
+    }
+}

@@ -1,0 +1,110 @@
+//! DMA transfer model: DDR4 (host) ↔ LMM (lane).
+//!
+//! On the VPK180 prototype the host A72 programs DMA descriptors over the
+//! NoC; each transfer pays a fixed setup cost (descriptor write, doorbell,
+//! completion interrupt, driver overhead) plus a streaming cost at the
+//! effective bus rate. The paper's Fig. 11 shows LOAD dominating both
+//! kernels and Q8_0 hurt most by volume (8.5 bits/weight vs 3.4375 —
+//! §IV-B "the larger data transfer volume degraded the FPGA version's
+//! performance"), which this model reproduces from first principles.
+
+use super::ImaxConfig;
+
+/// Accumulated DMA statistics for one offload session.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DmaStats {
+    /// Bytes moved host → LMM.
+    pub load_bytes: u64,
+    /// Bytes moved LMM → host.
+    pub drain_bytes: u64,
+    /// Number of LOAD descriptors issued.
+    pub load_transfers: u64,
+    /// Number of DRAIN descriptors issued.
+    pub drain_transfers: u64,
+}
+
+impl DmaStats {
+    /// Record a LOAD transfer.
+    pub fn record_load(&mut self, bytes: u64) {
+        self.load_bytes += bytes;
+        self.load_transfers += 1;
+    }
+
+    /// Record a DRAIN transfer.
+    pub fn record_drain(&mut self, bytes: u64) {
+        self.drain_bytes += bytes;
+        self.drain_transfers += 1;
+    }
+}
+
+/// Cycles for one DMA transfer of `bytes` under `cfg`.
+pub fn transfer_cycles(cfg: &ImaxConfig, bytes: u64) -> u64 {
+    if bytes == 0 {
+        return 0;
+    }
+    cfg.dma_setup_cycles + (bytes as f64 / cfg.dma_bytes_per_cycle).ceil() as u64
+}
+
+/// Cycles for a whole stats bundle (loads + drains serialized, as the
+/// single-channel prototype does).
+pub fn total_cycles(cfg: &ImaxConfig, stats: &DmaStats) -> (u64, u64) {
+    let load = stats.load_transfers * cfg.dma_setup_cycles
+        + (stats.load_bytes as f64 / cfg.dma_bytes_per_cycle).ceil() as u64;
+    let drain = stats.drain_transfers * cfg.dma_setup_cycles
+        + (stats.drain_bytes as f64 / cfg.dma_bytes_per_cycle).ceil() as u64;
+    (load, drain)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_bytes_is_free() {
+        let cfg = ImaxConfig::fpga(1);
+        assert_eq!(transfer_cycles(&cfg, 0), 0);
+    }
+
+    #[test]
+    fn setup_dominates_small_transfers() {
+        let cfg = ImaxConfig::fpga(1);
+        let small = transfer_cycles(&cfg, 64);
+        let stream = (64.0 / cfg.dma_bytes_per_cycle).ceil() as u64;
+        assert!(small >= cfg.dma_setup_cycles);
+        assert_eq!(small, cfg.dma_setup_cycles + stream);
+        assert!(cfg.dma_setup_cycles > stream, "setup dominates 64 B");
+    }
+
+    #[test]
+    fn streaming_dominates_large_transfers() {
+        let cfg = ImaxConfig::fpga(1);
+        let big = transfer_cycles(&cfg, 8 * 1024 * 1024);
+        let stream = (8.0 * 1024.0 * 1024.0 / cfg.dma_bytes_per_cycle) as u64;
+        assert!(big >= stream);
+        assert!((big - stream) as f64 / big as f64 <= 0.01, "setup share small");
+    }
+
+    #[test]
+    fn stats_accumulate_and_convert() {
+        let cfg = ImaxConfig::fpga(1);
+        let mut s = DmaStats::default();
+        s.record_load(1000);
+        s.record_load(2000);
+        s.record_drain(500);
+        assert_eq!(s.load_bytes, 3000);
+        assert_eq!(s.load_transfers, 2);
+        let (load, drain) = total_cycles(&cfg, &s);
+        let bpc = cfg.dma_bytes_per_cycle;
+        assert_eq!(load, 2 * cfg.dma_setup_cycles + (3000f64 / bpc).ceil() as u64);
+        assert_eq!(drain, cfg.dma_setup_cycles + (500f64 / bpc).ceil() as u64);
+    }
+
+    #[test]
+    fn q8_0_rows_cost_more_than_q3_k_rows() {
+        // Same logical K=4096 row: Q8_0 = 4096/32·34 B, Q3_K = 4096/256·110 B.
+        let cfg = ImaxConfig::fpga(1);
+        let q8 = transfer_cycles(&cfg, (4096 / 32 * 34) as u64);
+        let q3 = transfer_cycles(&cfg, (4096 / 256 * 110) as u64);
+        assert!(q8 > q3, "paper §IV-B: Q8_0 transfer volume larger");
+    }
+}

@@ -1,0 +1,215 @@
+//! The IMAX3 instruction semantics used by the dot-product kernels.
+//!
+//! IMAX PEs operate on 64-bit words viewed as two 32-bit SIMD lanes. The
+//! paper adds three instructions for the Stable-Diffusion kernels
+//! (§III-B); the remainder are base-ISA ops the earlier CNN/LLM ports
+//! already used. Every arithmetic the simulator performs goes through
+//! these functions, so ISA-level unit tests pin the hardware semantics
+//! (sign extension, 24-bit wrap-around, conversion rounding) in one place.
+//!
+//! New instructions (paper §III-B):
+//!
+//! * [`op_sml8`] — **OP_SML8**: 2-way SIMD signed 8-bit multiply-add. Each
+//!   32-bit lane multiplies its two 8-bit segments with the corresponding
+//!   segments of the second operand and sums the two products into a
+//!   sign-extended 24-bit result.
+//! * [`op_ad24`] — **OP_AD24**: 2-way 24-bit integer addition aggregating
+//!   OP_SML8 partials (wraps modulo 2^24, as hardware adders do).
+//! * [`op_cvt53`] — **OP_CVT53**: Q3_K restructuring: expands packed 3-bit
+//!   quants (stored `q+4`) to signed 8-bit and applies the 5-bit scale
+//!   path (effective scale `2·s5`) by signed multiplication.
+
+/// Two signed 8-bit segments packed in a 32-bit SIMD lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pair8(pub i8, pub i8);
+
+/// Sign-extend a 24-bit value held in an i32.
+#[inline]
+pub fn sext24(v: i32) -> i32 {
+    (v << 8) >> 8
+}
+
+/// **OP_SML8** (one 32-bit lane): `a.0*b.0 + a.1*b.1`, sign-extended
+/// 24-bit output. Max magnitude `2·127·127 = 32 258`, comfortably within
+/// 24 bits, so the result is exact.
+#[inline]
+pub fn op_sml8(a: Pair8, b: Pair8) -> i32 {
+    let s = a.0 as i32 * b.0 as i32 + a.1 as i32 * b.1 as i32;
+    sext24(s)
+}
+
+/// **OP_SML8** full 64-bit word: both lanes independently.
+#[inline]
+pub fn op_sml8_w(a: [Pair8; 2], b: [Pair8; 2]) -> [i32; 2] {
+    [op_sml8(a[0], b[0]), op_sml8(a[1], b[1])]
+}
+
+/// **OP_AD24** (one lane): 24-bit addition with hardware wrap-around.
+#[inline]
+pub fn op_ad24(a: i32, b: i32) -> i32 {
+    sext24(a.wrapping_add(b))
+}
+
+/// **OP_AD24** full word.
+#[inline]
+pub fn op_ad24_w(a: [i32; 2], b: [i32; 2]) -> [i32; 2] {
+    [op_ad24(a[0], b[0]), op_ad24(a[1], b[1])]
+}
+
+/// **OP_CVT53** unpack half: expand a packed 3-bit quant (stored `q+4` in
+/// `[0,7]`) into a signed 8-bit value in `[-4,3]`.
+#[inline]
+pub fn op_cvt53_unpack(q3_plus4: u8) -> i8 {
+    debug_assert!(q3_plus4 <= 7, "3-bit envelope");
+    q3_plus4 as i8 - 4
+}
+
+/// **OP_CVT53** scale half: apply the 5-bit-approximated Q3_K sub-block
+/// scale to a 24-bit group partial: `partial · (2·s5)`, widening to i32.
+/// `s5 ∈ [-16, 15]`; worst case `|partial| ≤ 16·4·127 = 8 128` so the
+/// product magnitude is ≤ 260 096 · … well inside i32.
+#[inline]
+pub fn op_cvt53_scale(partial24: i32, s5: i8) -> i32 {
+    debug_assert!((-16..=15).contains(&s5), "5-bit scale envelope");
+    partial24 * (2 * s5 as i32)
+}
+
+/// Base ISA: 32-bit integer add (isum accumulation across sub-blocks).
+#[inline]
+pub fn op_add32(a: i32, b: i32) -> i32 {
+    a.wrapping_add(b)
+}
+
+/// Base ISA: signed i32 → f32 conversion (exact for |v| < 2^24, which the
+/// kernels guarantee per super-block).
+#[inline]
+pub fn op_cvti2f(v: i32) -> f32 {
+    v as f32
+}
+
+/// Base ISA: f32 multiply.
+#[inline]
+pub fn op_fmul(a: f32, b: f32) -> f32 {
+    a * b
+}
+
+/// Base ISA: f32 add.
+#[inline]
+pub fn op_fadd(a: f32, b: f32) -> f32 {
+    a + b
+}
+
+/// Base ISA: f32 fused multiply-add as separate mul+add (IMAX FP units
+/// are mul + add stages, not fused — keep f32 rounding at each step so
+/// numerics match the chained-unit hardware).
+#[inline]
+pub fn op_fma(acc: f32, a: f32, b: f32) -> f32 {
+    op_fadd(acc, op_fmul(a, b))
+}
+
+/// Pack 4 consecutive i8 values into the `[Pair8; 2]` word layout OP_SML8
+/// consumes — the LMM-side byte arrangement.
+#[inline]
+pub fn pack_word(v: &[i8]) -> [Pair8; 2] {
+    debug_assert!(v.len() >= 4);
+    [Pair8(v[0], v[1]), Pair8(v[2], v[3])]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sext24_behaviour() {
+        assert_eq!(sext24(0x007F_FFFF), 0x007F_FFFF); // max positive 24-bit
+        assert_eq!(sext24(0x0080_0000), -0x0080_0000); // min negative
+        assert_eq!(sext24(0x00FF_FFFF), -1);
+        assert_eq!(sext24(0), 0);
+        assert_eq!(sext24(123), 123);
+    }
+
+    #[test]
+    fn sml8_exact_products() {
+        assert_eq!(op_sml8(Pair8(3, -4), Pair8(5, 6)), 15 - 24);
+        assert_eq!(op_sml8(Pair8(127, 127), Pair8(127, 127)), 2 * 127 * 127);
+        assert_eq!(op_sml8(Pair8(-128, -128), Pair8(127, 127)), -2 * 128 * 127);
+        assert_eq!(op_sml8(Pair8(0, 0), Pair8(99, -99)), 0);
+    }
+
+    #[test]
+    fn sml8_word_lanes_independent() {
+        let r = op_sml8_w(
+            [Pair8(1, 2), Pair8(3, 4)],
+            [Pair8(10, 10), Pair8(-1, -1)],
+        );
+        assert_eq!(r, [30, -7]);
+    }
+
+    #[test]
+    fn ad24_wraps_like_hardware() {
+        let max24 = 0x007F_FFFF;
+        assert_eq!(op_ad24(max24, 1), -0x0080_0000, "24-bit overflow wraps");
+        assert_eq!(op_ad24(-0x0080_0000, -1), max24);
+        assert_eq!(op_ad24(1000, 2345), 3345);
+        assert_eq!(op_ad24_w([1, -1], [2, -2]), [3, -3]);
+    }
+
+    #[test]
+    fn q8_0_block_chain_never_wraps() {
+        // Invariant from q8_0.rs: 32·127·127 < 2^23, so a full block chained
+        // through OP_AD24 stays exact.
+        let mut acc = 0i32;
+        for _ in 0..8 {
+            let p = op_sml8_w(
+                [Pair8(127, 127), Pair8(127, 127)],
+                [Pair8(127, 127), Pair8(127, 127)],
+            );
+            acc = op_ad24(acc, op_ad24(p[0], p[1]));
+        }
+        assert_eq!(acc, 32 * 127 * 127);
+        assert_eq!(sext24(acc), acc, "still a valid 24-bit value");
+    }
+
+    #[test]
+    fn cvt53_unpack_range() {
+        for q in 0..=7u8 {
+            let v = op_cvt53_unpack(q);
+            assert_eq!(v as i32, q as i32 - 4);
+            assert!((-4..=3).contains(&v));
+        }
+    }
+
+    #[test]
+    fn cvt53_scale_is_doubled_5bit() {
+        assert_eq!(op_cvt53_scale(100, 3), 600);
+        assert_eq!(op_cvt53_scale(100, -16), -3200);
+        assert_eq!(op_cvt53_scale(-50, 15), -1500);
+        assert_eq!(op_cvt53_scale(12345, 0), 0);
+    }
+
+    #[test]
+    fn q3_k_superblock_isum_fits_i32() {
+        // Worst case per sub-block: 16 · 4 · 127 = 8128; scaled by 2·16 = 32
+        // and 16 sub-blocks: 8128 · 32 · 16 = 4 161 536 — exact in i32 and
+        // exactly convertible to f32 (< 2^24).
+        let worst = op_cvt53_scale(16 * 4 * 127, -16).abs() * 16;
+        assert!(worst < (1 << 24));
+        assert_eq!(op_cvti2f(worst) as i32, worst);
+    }
+
+    #[test]
+    fn float_ops_match_ieee() {
+        assert_eq!(op_fmul(1.5, 2.0), 3.0);
+        assert_eq!(op_fadd(0.1f32, 0.2f32), 0.1f32 + 0.2f32);
+        assert_eq!(op_fma(1.0, 2.0, 3.0), 7.0);
+        // Not fused: rounding happens after the multiply.
+        let a = 1.0f32 + f32::EPSILON;
+        assert_eq!(op_fma(0.0, a, a), a * a);
+    }
+
+    #[test]
+    fn pack_word_layout() {
+        let w = pack_word(&[1, -2, 3, -4]);
+        assert_eq!(w, [Pair8(1, -2), Pair8(3, -4)]);
+    }
+}

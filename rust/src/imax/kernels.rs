@@ -1,0 +1,218 @@
+//! Functional execution of the two offloaded kernels through the ISA.
+//!
+//! These interpreters stream real GGML blocks through the PE structure of
+//! [`super::conf::KernelConfig`], performing every arithmetic step with
+//! the [`super::isa`] op functions. They are **bit-exact** with the host
+//! reference implementations:
+//!
+//! * [`dot_q8_0`] ≡ [`crate::ggml::q8_0::vec_dot`] (same integer block
+//!   sums, same f32 multiply/accumulate order), and
+//! * [`dot_q3_k`] ≡ [`crate::ggml::q3_k::vec_dot_imax5`] — the *IMAX
+//!   restructured* variant with 5-bit scales, because that is what the
+//!   hardware executes after `OP_CVT53` (§III-B).
+//!
+//! Each call also reports the beats consumed, which the timing model in
+//! [`super::lane`] converts to EXEC cycles — so numerics and timing come
+//! from one walk over the data.
+
+use super::conf::KernelConfig;
+use super::isa::{
+    op_ad24, op_add32, op_cvt53_scale, op_cvt53_unpack, op_cvti2f, op_fadd, op_fmul, op_sml8,
+    pack_word, Pair8,
+};
+use crate::ggml::q3_k::{to_imax_stream, BlockQ3K};
+use crate::ggml::q8_0::BlockQ8_0;
+use crate::ggml::q8_k::BlockQ8K;
+use crate::ggml::{QK8_0, QK_K};
+
+/// Result of one functional dot: value plus consumed lane beats.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DotResult {
+    /// The dot product.
+    pub value: f32,
+    /// Lane beats consumed (all groups advancing together).
+    pub beats: u64,
+}
+
+/// One 32-element Q8_0 block through a 12-PE group: 8 × OP_SML8 (4
+/// products each, two SIMD lanes) chained with OP_AD24, lanes folded by
+/// the final OP_AD24 → exact block integer sum.
+fn q8_0_group_beat(w: &BlockQ8_0, a: &BlockQ8_0) -> i32 {
+    let mut lane_acc = [0i32, 0i32];
+    for seg in 0..8 {
+        // Load PEs stream one 4-byte word pair per SML8 stage.
+        let wq = pack_word(&w.qs[seg * 4..seg * 4 + 4]);
+        let aq = pack_word(&a.qs[seg * 4..seg * 4 + 4]);
+        // Two SIMD lanes, each 2 products, accumulated along the chain.
+        lane_acc[0] = op_ad24(lane_acc[0], op_sml8(wq[0], aq[0]));
+        lane_acc[1] = op_ad24(lane_acc[1], op_sml8(wq[1], aq[1]));
+    }
+    // AD24 stage folds the two 24-bit SIMD lanes.
+    op_ad24(lane_acc[0], lane_acc[1])
+}
+
+/// Functional Q8_0 × Q8_0 dot over block rows.
+///
+/// Blocks stride over the 3 groups (block `b` → group `b % 3`); the
+/// shared FMA spine applies `isum · d_w · d_a` and accumulates **in block
+/// order**, which makes the result bit-identical to the host
+/// `vec_dot_q8_0_q8_0` loop.
+pub fn dot_q8_0(cfg: &KernelConfig, w: &[BlockQ8_0], a: &[BlockQ8_0]) -> DotResult {
+    assert_eq!(w.len(), a.len(), "row block-count mismatch");
+    debug_assert_eq!(cfg.elems_per_beat, QK8_0);
+    let mut acc = 0.0f32;
+    for (bw, ba) in w.iter().zip(a.iter()) {
+        let isum = q8_0_group_beat(bw, ba);
+        // CvtI2F then the shared FMA spine: (isum * d_w) * d_a, block order.
+        let prod = op_fmul(op_fmul(op_cvti2f(isum), bw.d.to_f32()), ba.d.to_f32());
+        acc = op_fadd(acc, prod);
+    }
+    DotResult { value: acc, beats: cfg.beats_for_dot(w.len() * QK8_0) }
+}
+
+/// One 16-element Q3_K sub-block through a 14-PE group: OP_CVT53 unpacks
+/// the 3-bit quants, 4 × OP_SML8 chains produce the 24-bit partial,
+/// OP_CVT53's scale path multiplies by the doubled 5-bit scale.
+fn q3_k_group_beat(q3: &[u8], acts: &[i8], s5: i8) -> i32 {
+    debug_assert_eq!(q3.len(), 16);
+    debug_assert_eq!(acts.len(), 16);
+    let mut lane_acc = [0i32, 0i32];
+    for seg in 0..4 {
+        // CVT53 unpack stage: 3-bit (stored q+4) -> signed 8-bit operands.
+        let wq: [i8; 4] = [
+            op_cvt53_unpack(q3[seg * 4]),
+            op_cvt53_unpack(q3[seg * 4 + 1]),
+            op_cvt53_unpack(q3[seg * 4 + 2]),
+            op_cvt53_unpack(q3[seg * 4 + 3]),
+        ];
+        let ww = [Pair8(wq[0], wq[1]), Pair8(wq[2], wq[3])];
+        let aw = pack_word(&acts[seg * 4..seg * 4 + 4]);
+        lane_acc[0] = op_ad24(lane_acc[0], op_sml8(ww[0], aw[0]));
+        lane_acc[1] = op_ad24(lane_acc[1], op_sml8(ww[1], aw[1]));
+    }
+    let partial = op_ad24(lane_acc[0], lane_acc[1]);
+    // CVT53 scale path: × (2 · s5).
+    op_cvt53_scale(partial, s5)
+}
+
+/// Functional Q3_K × Q8_K dot over super-block rows (IMAX restructured
+/// operands, 5-bit scales) — bit-identical to
+/// [`crate::ggml::q3_k::vec_dot_imax5`].
+pub fn dot_q3_k(cfg: &KernelConfig, w: &[BlockQ3K], a: &[BlockQ8K]) -> DotResult {
+    assert_eq!(w.len(), a.len(), "row super-block count mismatch");
+    debug_assert_eq!(cfg.elems_per_beat, 16);
+    let mut acc = 0.0f32;
+    for (bw, ba) in w.iter().zip(a.iter()) {
+        // OP_CVT53 restructuring happens as the operands stream from LMM.
+        let s = to_imax_stream(bw);
+        // 16 sub-blocks strided over the 3 groups; Add32 PEs accumulate
+        // the super-block isum (exact integer, order-free).
+        let mut isum = 0i32;
+        for j in 0..16 {
+            let scaled = q3_k_group_beat(
+                &s.q3[16 * j..16 * (j + 1)],
+                &ba.qs[16 * j..16 * (j + 1)],
+                s.scales5[j],
+            );
+            isum = op_add32(isum, scaled);
+        }
+        // Shared spine: (d_w * d_a) * isum, super-block order.
+        let prod = op_fmul(op_fmul(s.d.to_f32(), ba.d), op_cvti2f(isum));
+        acc = op_fadd(acc, prod);
+    }
+    DotResult { value: acc, beats: cfg.beats_for_dot(w.len() * QK_K) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ggml::{q3_k, q8_0, q8_k};
+    use crate::util::rng::Xoshiro256pp;
+
+    fn random_row(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn q8_0_bit_exact_vs_host_reference() {
+        let cfg = KernelConfig::q8_0();
+        for seed in 0..20 {
+            let k = 32 * (1 + (seed as usize % 7) * 3);
+            let w = q8_0::quantize_row(&random_row(k, seed * 2 + 1));
+            let a = q8_0::quantize_row(&random_row(k, seed * 2 + 2));
+            let sim = dot_q8_0(&cfg, &w, &a);
+            let host = q8_0::vec_dot(&w, &a);
+            assert_eq!(
+                sim.value.to_bits(),
+                host.to_bits(),
+                "seed {seed}: sim {} vs host {host}",
+                sim.value
+            );
+        }
+    }
+
+    #[test]
+    fn q3_k_bit_exact_vs_imax5_reference() {
+        let cfg = KernelConfig::q3_k();
+        for seed in 0..20 {
+            let k = 256 * (1 + seed as usize % 4);
+            let w = q3_k::quantize_row(&random_row(k, seed * 2 + 101));
+            let a = q8_k::quantize_row(&random_row(k, seed * 2 + 102));
+            let sim = dot_q3_k(&cfg, &w, &a);
+            let host = q3_k::vec_dot_imax5(&w, &a);
+            assert_eq!(
+                sim.value.to_bits(),
+                host.to_bits(),
+                "seed {seed}: sim {} vs host {host}",
+                sim.value
+            );
+        }
+    }
+
+    #[test]
+    fn q3_k_close_to_exact_6bit_reference() {
+        // The hardware's 5-bit scales approximate the exact Q3_K dot.
+        let cfg = KernelConfig::q3_k();
+        let k = 1024;
+        let w = q3_k::quantize_row(&random_row(k, 7));
+        let a = q8_k::quantize_row(&random_row(k, 8));
+        let sim = dot_q3_k(&cfg, &w, &a).value;
+        let exact = q3_k::vec_dot(&w, &a);
+        assert!(
+            (sim - exact).abs() < 0.15 * exact.abs().max(1.0),
+            "sim {sim} vs exact {exact}"
+        );
+    }
+
+    #[test]
+    fn beats_match_config_formula() {
+        let q8 = KernelConfig::q8_0();
+        let w = q8_0::quantize_row(&random_row(256, 1));
+        let a = q8_0::quantize_row(&random_row(256, 2));
+        assert_eq!(dot_q8_0(&q8, &w, &a).beats, 3); // 8 blocks / 3 groups
+
+        let q3 = KernelConfig::q3_k();
+        let w = q3_k::quantize_row(&random_row(512, 3));
+        let a = q8_k::quantize_row(&random_row(512, 4));
+        assert_eq!(dot_q3_k(&q3, &w, &a).beats, 11); // 32 sub-blocks / 3
+    }
+
+    #[test]
+    fn adversarial_blocks_do_not_overflow() {
+        // All-max-magnitude blocks exercise the 24-bit envelope.
+        let cfg = KernelConfig::q8_0();
+        let w = vec![BlockQ8_0 { d: crate::util::f16::F16::ONE, qs: [127; 32] }; 4];
+        let a = vec![BlockQ8_0 { d: crate::util::f16::F16::ONE, qs: [-127; 32] }; 4];
+        let sim = dot_q8_0(&cfg, &w, &a);
+        let host = q8_0::vec_dot(&w, &a);
+        assert_eq!(sim.value, host);
+        assert_eq!(sim.value, -(4.0 * 32.0 * 127.0 * 127.0));
+    }
+
+    #[test]
+    fn empty_rows_are_zero() {
+        assert_eq!(dot_q8_0(&KernelConfig::q8_0(), &[], &[]).value, 0.0);
+        assert_eq!(dot_q3_k(&KernelConfig::q3_k(), &[], &[]).value, 0.0);
+    }
+}

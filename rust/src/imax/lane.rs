@@ -1,0 +1,502 @@
+//! Lane-level offload simulation: tiling, phase timing, and functional
+//! matrix-multiply execution.
+//!
+//! One offloaded `mul_mat` (weights `[M, K]` quantized, activations
+//! `[N, K]` pre-quantized by the host) runs as:
+//!
+//! ```text
+//! CONF            once per kernel switch (write 46/51 PE configs)
+//! for each activation tile (rows that fit half the LMM):
+//!     LOAD acts   one DMA descriptor
+//!     for each weight tile:
+//!         REGV/RANGE   per-pass register & address setup
+//!         LOAD weights one DMA descriptor
+//!         EXEC         w_tile × a_tile dots, beats from the kernel config
+//!         DRAIN        f32 results, one descriptor
+//! ```
+//!
+//! [`TilePlan`] fixes the tile geometry from the LMM capacity;
+//! [`LaneSim::analytic_mul_mat`] prices the loops in closed form and
+//! [`LaneSim::mul_mat_q8_0`]/[`LaneSim::mul_mat_q3_k`] execute the same
+//! loops functionally (numerics via [`super::kernels`]), so a property
+//! test can require cycle-exact agreement between the two modes.
+
+use super::conf::{KernelConfig, KernelKind};
+use super::dma::{transfer_cycles, DmaStats};
+use super::kernels;
+use super::lmm::{Lmm, LmmError};
+use super::timing::PhaseBreakdown;
+use super::ImaxConfig;
+use crate::ggml::q3_k::BlockQ3K;
+use crate::ggml::q8_0::BlockQ8_0;
+use crate::ggml::q8_k::BlockQ8K;
+use crate::ggml::{QK8_0, QK_K};
+
+/// Bytes of one quantized weight row of `k` elements.
+pub fn weight_row_bytes(kind: KernelKind, k: usize) -> usize {
+    match kind {
+        KernelKind::Q8_0 => k / QK8_0 * BlockQ8_0::BYTES,
+        KernelKind::Q3K => k / QK_K * BlockQ3K::BYTES,
+    }
+}
+
+/// Bytes of one quantized activation row of `k` elements (the vec-dot
+/// partner format: Q8_0 → Q8_0, Q3_K → Q8_K).
+pub fn act_row_bytes(kind: KernelKind, k: usize) -> usize {
+    match kind {
+        KernelKind::Q8_0 => k / QK8_0 * BlockQ8_0::BYTES,
+        KernelKind::Q3K => k / QK_K * (4 + QK_K + 2 * (QK_K / 16)),
+    }
+}
+
+/// Tile geometry for one offloaded mul_mat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TilePlan {
+    /// Weight rows (output features).
+    pub m: usize,
+    /// Activation rows.
+    pub n: usize,
+    /// Contraction length.
+    pub k: usize,
+    /// Activation rows per tile.
+    pub a_tile: usize,
+    /// Weight rows per tile.
+    pub w_tile: usize,
+    /// Bytes per weight row.
+    pub w_row_bytes: usize,
+    /// Bytes per activation row.
+    pub a_row_bytes: usize,
+}
+
+impl TilePlan {
+    /// Build a plan that fits the LMM, or report why it cannot.
+    pub fn new(
+        imax: &ImaxConfig,
+        kind: KernelKind,
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> Result<TilePlan, LmmError> {
+        assert!(m > 0 && n > 0 && k > 0, "degenerate mul_mat shape");
+        let block = match kind {
+            KernelKind::Q8_0 => QK8_0,
+            KernelKind::Q3K => QK_K,
+        };
+        assert!(k % block == 0, "K={k} not a multiple of the {kind:?} block");
+        let w_row_bytes = weight_row_bytes(kind, k);
+        let a_row_bytes = act_row_bytes(kind, k);
+        let lmm = imax.lmm_bytes;
+
+        // Activations take at most half the LMM; weights + result buffer
+        // share the rest. Shrink the activation tile until at least one
+        // weight row fits.
+        let mut a_tile = (lmm / 2 / a_row_bytes).clamp(1, n.max(1)).min(n);
+        loop {
+            let a_bytes = a_tile * a_row_bytes;
+            if a_bytes <= lmm {
+                let rem = lmm - a_bytes;
+                let per_w_row = w_row_bytes + a_tile * 4; // row + its results
+                if rem >= per_w_row {
+                    let w_tile = (rem / per_w_row).min(m);
+                    return Ok(TilePlan { m, n, k, a_tile, w_tile, w_row_bytes, a_row_bytes });
+                }
+            }
+            if a_tile == 1 {
+                return Err(LmmError::OutOfMemory {
+                    requested: a_row_bytes + w_row_bytes + 4,
+                    free: lmm,
+                    label: "mul_mat tile (K too large for LMM)",
+                });
+            }
+            a_tile /= 2;
+        }
+    }
+
+    /// Number of activation tiles.
+    pub fn a_tiles(&self) -> usize {
+        self.n.div_ceil(self.a_tile)
+    }
+
+    /// Number of weight tiles.
+    pub fn w_tiles(&self) -> usize {
+        self.m.div_ceil(self.w_tile)
+    }
+
+    /// Total bytes DMA-loaded (weights re-stream once per activation tile).
+    pub fn load_bytes(&self) -> u64 {
+        let acts = (self.n * self.a_row_bytes) as u64;
+        let weights_once = (self.m * self.w_row_bytes) as u64;
+        acts + weights_once * self.a_tiles() as u64
+    }
+
+    /// Total result bytes drained (f32 outputs).
+    pub fn drain_bytes(&self) -> u64 {
+        (self.m * self.n * 4) as u64
+    }
+}
+
+/// Cycles the lane spends executing one (w_rows × a_rows) tile.
+fn exec_cycles_tile(kcfg: &KernelConfig, w_rows: usize, a_rows: usize, k: usize) -> u64 {
+    let dots = (w_rows * a_rows) as u64;
+    let beats = kcfg.beats_for_dot(k);
+    // Pipeline fill once per tile, then dots stream back-to-back with a
+    // 2-cycle accumulator handoff between consecutive dots.
+    kcfg.pipeline_depth as u64 + dots * (beats + 2)
+}
+
+/// A single IMAX lane plus its offload state.
+pub struct LaneSim {
+    /// Physical configuration.
+    pub imax: ImaxConfig,
+    /// Currently loaded kernel configuration (None = unconfigured).
+    configured: Option<KernelKind>,
+    /// LMM occupancy model.
+    pub lmm: Lmm,
+    /// Cumulative DMA statistics.
+    pub dma: DmaStats,
+    /// Cumulative phase breakdown across all offloads on this lane.
+    pub total: PhaseBreakdown,
+}
+
+impl LaneSim {
+    /// Fresh lane.
+    pub fn new(imax: ImaxConfig) -> LaneSim {
+        let lmm = Lmm::new(imax.lmm_bytes);
+        LaneSim { imax, configured: None, lmm, dma: DmaStats::default(), total: PhaseBreakdown::default() }
+    }
+
+    /// Whether the next `kind` kernel needs a CONF phase.
+    pub fn needs_conf(&self, kind: KernelKind) -> bool {
+        self.configured != Some(kind)
+    }
+
+    /// Closed-form phase breakdown for one offloaded mul_mat, without
+    /// touching data. `reconf` forces a CONF phase price.
+    pub fn analytic_mul_mat(
+        &self,
+        kind: KernelKind,
+        m: usize,
+        n: usize,
+        k: usize,
+        reconf: bool,
+    ) -> Result<PhaseBreakdown, LmmError> {
+        let plan = TilePlan::new(&self.imax, kind, m, n, k)?;
+        let kcfg = KernelConfig::for_kind(kind);
+        Ok(breakdown_for_plan(&self.imax, &kcfg, &plan, reconf))
+    }
+
+    /// Functional offloaded Q8_0 mul_mat: `w` is `m` rows × `k/32`
+    /// blocks, `acts` is `n` rows in the same layout. Returns the `[n, m]`
+    /// f32 output (row-major) and the phase breakdown.
+    pub fn mul_mat_q8_0(
+        &mut self,
+        w: &[BlockQ8_0],
+        m: usize,
+        acts: &[BlockQ8_0],
+        n: usize,
+        k: usize,
+    ) -> Result<(Vec<f32>, PhaseBreakdown), LmmError> {
+        let bpr = k / QK8_0;
+        assert_eq!(w.len(), m * bpr, "weight block count");
+        assert_eq!(acts.len(), n * bpr, "activation block count");
+        let plan = TilePlan::new(&self.imax, KernelKind::Q8_0, m, n, k)?;
+        let kcfg = KernelConfig::q8_0();
+        let reconf = self.needs_conf(KernelKind::Q8_0);
+
+        let mut out = vec![0.0f32; n * m];
+        self.walk_tiles(&plan, |wt0, wt1, at0, at1| {
+            for a_row in at0..at1 {
+                for w_row in wt0..wt1 {
+                    let r = kernels::dot_q8_0(
+                        &kcfg,
+                        &w[w_row * bpr..(w_row + 1) * bpr],
+                        &acts[a_row * bpr..(a_row + 1) * bpr],
+                    );
+                    out[a_row * m + w_row] = r.value;
+                }
+            }
+        });
+
+        let bd = breakdown_for_plan(&self.imax, &kcfg, &plan, reconf);
+        self.commit(KernelKind::Q8_0, &plan, bd);
+        Ok((out, bd))
+    }
+
+    /// Functional offloaded Q3_K mul_mat (IMAX-restructured numerics).
+    pub fn mul_mat_q3_k(
+        &mut self,
+        w: &[BlockQ3K],
+        m: usize,
+        acts: &[BlockQ8K],
+        n: usize,
+        k: usize,
+    ) -> Result<(Vec<f32>, PhaseBreakdown), LmmError> {
+        let bpr = k / QK_K;
+        assert_eq!(w.len(), m * bpr, "weight super-block count");
+        assert_eq!(acts.len(), n * bpr, "activation super-block count");
+        let plan = TilePlan::new(&self.imax, KernelKind::Q3K, m, n, k)?;
+        let kcfg = KernelConfig::q3_k();
+        let reconf = self.needs_conf(KernelKind::Q3K);
+
+        let mut out = vec![0.0f32; n * m];
+        self.walk_tiles(&plan, |wt0, wt1, at0, at1| {
+            for a_row in at0..at1 {
+                for w_row in wt0..wt1 {
+                    let r = kernels::dot_q3_k(
+                        &kcfg,
+                        &w[w_row * bpr..(w_row + 1) * bpr],
+                        &acts[a_row * bpr..(a_row + 1) * bpr],
+                    );
+                    out[a_row * m + w_row] = r.value;
+                }
+            }
+        });
+
+        let bd = breakdown_for_plan(&self.imax, &kcfg, &plan, reconf);
+        self.commit(KernelKind::Q3K, &plan, bd);
+        Ok((out, bd))
+    }
+
+    /// Iterate tile pairs in the canonical order (acts outer, weights
+    /// inner), exercising the LMM allocator for every pass.
+    fn walk_tiles(&mut self, plan: &TilePlan, mut body: impl FnMut(usize, usize, usize, usize)) {
+        let mut at0 = 0;
+        while at0 < plan.n {
+            let at1 = (at0 + plan.a_tile).min(plan.n);
+            let a_region = self
+                .lmm
+                .alloc((at1 - at0) * plan.a_row_bytes, "acts")
+                .expect("plan guarantees the activation tile fits");
+            self.lmm.record_load(a_region);
+            let mut wt0 = 0;
+            while wt0 < plan.m {
+                let wt1 = (wt0 + plan.w_tile).min(plan.m);
+                let w_region = self
+                    .lmm
+                    .alloc((wt1 - wt0) * plan.w_row_bytes, "weights")
+                    .expect("plan guarantees the weight tile fits");
+                let o_region = self
+                    .lmm
+                    .alloc((wt1 - wt0) * (at1 - at0) * 4, "out")
+                    .expect("plan guarantees the output tile fits");
+                self.lmm.record_load(w_region);
+                body(wt0, wt1, at0, at1);
+                self.lmm.record_drain((wt1 - wt0) * (at1 - at0) * 4);
+                self.lmm.release(w_region);
+                self.lmm.release(o_region);
+                wt0 = wt1;
+            }
+            self.lmm.release(a_region);
+            at0 = at1;
+        }
+    }
+
+    /// Book the finished offload into the lane's cumulative state.
+    fn commit(&mut self, kind: KernelKind, plan: &TilePlan, bd: PhaseBreakdown) {
+        self.configured = Some(kind);
+        self.total += bd;
+        self.dma.record_load(plan.load_bytes());
+        self.dma.record_drain(plan.drain_bytes());
+    }
+}
+
+/// Price a tile plan's loops in cycles (the single source of truth for
+/// both the analytic and functional paths).
+pub fn breakdown_for_plan(
+    imax: &ImaxConfig,
+    kcfg: &KernelConfig,
+    plan: &TilePlan,
+    reconf: bool,
+) -> PhaseBreakdown {
+    let mut bd = PhaseBreakdown::default();
+    let pe = kcfg.pe_count() as u64;
+    if reconf {
+        bd.conf = imax.conf_cycles_per_pe * pe;
+    }
+
+    let mut at0 = 0;
+    while at0 < plan.n {
+        let at1 = (at0 + plan.a_tile).min(plan.n);
+        bd.load += transfer_cycles(imax, ((at1 - at0) * plan.a_row_bytes) as u64);
+        let mut wt0 = 0;
+        while wt0 < plan.m {
+            let wt1 = (wt0 + plan.w_tile).min(plan.m);
+            bd.regv += imax.regv_cycles_per_pe * pe;
+            bd.range += imax.range_cycles_per_pe * pe;
+            bd.load += transfer_cycles(imax, ((wt1 - wt0) * plan.w_row_bytes) as u64);
+            bd.exec += exec_cycles_tile(kcfg, wt1 - wt0, at1 - at0, plan.k);
+            bd.drain += transfer_cycles(imax, ((wt1 - wt0) * (at1 - at0) * 4) as u64);
+            wt0 = wt1;
+        }
+        at0 = at1;
+    }
+    bd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ggml::{q3_k, q8_0, q8_k, DType, Tensor};
+    use crate::util::rng::Xoshiro256pp;
+
+    fn random_tensor(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        let mut v = vec![0.0f32; rows * cols];
+        r.fill_normal(&mut v, 0.7);
+        Tensor::f32(rows, cols, v)
+    }
+
+    #[test]
+    fn plan_small_shapes_single_tile() {
+        let imax = ImaxConfig::fpga(1);
+        let p = TilePlan::new(&imax, KernelKind::Q8_0, 8, 4, 128).unwrap();
+        assert_eq!(p.a_tiles(), 1);
+        assert_eq!(p.w_tiles(), 1);
+        assert_eq!(p.load_bytes(), (4 * p.a_row_bytes + 8 * p.w_row_bytes) as u64);
+        assert_eq!(p.drain_bytes(), 8 * 4 * 4);
+    }
+
+    #[test]
+    fn plan_tiles_when_acts_exceed_lmm() {
+        let imax = ImaxConfig::fpga(1);
+        // 4096 act rows of K=320 Q8_0: 4096 * 340 B = 1.36 MB > 512 KiB.
+        let p = TilePlan::new(&imax, KernelKind::Q8_0, 320, 4096, 320).unwrap();
+        assert!(p.a_tiles() > 1, "{p:?}");
+        // Weights must re-stream once per activation tile.
+        assert!(p.load_bytes() > (4096 * p.a_row_bytes + 320 * p.w_row_bytes) as u64);
+    }
+
+    #[test]
+    fn plan_rejects_k_too_large_for_lmm() {
+        let mut imax = ImaxConfig::fpga(1);
+        imax.lmm_bytes = 1024; // tiny LMM
+        let err = TilePlan::new(&imax, KernelKind::Q8_0, 4, 4, 4096).unwrap_err();
+        assert!(matches!(err, LmmError::OutOfMemory { .. }));
+    }
+
+    #[test]
+    fn functional_q8_0_matches_host_mul_mat() {
+        let imax = ImaxConfig::fpga(1);
+        let (m, n, k) = (5, 3, 128);
+        let wt = random_tensor(m, k, 1);
+        let xt = random_tensor(n, k, 2);
+        let wq = wt.quantize(DType::Q8_0);
+        let w_blocks = match &wq.data {
+            crate::ggml::tensor::Storage::Q8_0(b) => b.clone(),
+            _ => unreachable!(),
+        };
+        let acts: Vec<_> = (0..n).flat_map(|r| q8_0::quantize_row(xt.row_f32(r))).collect();
+
+        let mut lane = LaneSim::new(imax);
+        let (out, bd) = lane.mul_mat_q8_0(&w_blocks, m, &acts, n, k).unwrap();
+
+        // Host reference: ggml mul_mat with the same weight blocks.
+        let host = crate::ggml::mul_mat(&wq, &xt, 1);
+        for (a, b) in out.iter().zip(host.as_f32().iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "sim vs host mul_mat");
+        }
+        assert!(bd.exec > 0 && bd.load > 0 && bd.drain > 0);
+        assert_eq!(bd.conf, 46 * lane.imax.conf_cycles_per_pe);
+    }
+
+    #[test]
+    fn functional_q3_k_matches_imax5_reference() {
+        let imax = ImaxConfig::fpga(1);
+        let (m, n, k) = (4, 2, 512);
+        let wt = random_tensor(m, k, 3);
+        let xt = random_tensor(n, k, 4);
+        let w_blocks: Vec<_> = (0..m).flat_map(|r| q3_k::quantize_row(wt.row_f32(r))).collect();
+        let acts: Vec<_> = (0..n).flat_map(|r| q8_k::quantize_row(xt.row_f32(r))).collect();
+
+        let mut lane = LaneSim::new(imax);
+        let (out, _) = lane.mul_mat_q3_k(&w_blocks, m, &acts, n, k).unwrap();
+
+        let bpr = k / 256;
+        for a_row in 0..n {
+            for w_row in 0..m {
+                let want = q3_k::vec_dot_imax5(
+                    &w_blocks[w_row * bpr..(w_row + 1) * bpr],
+                    &acts[a_row * bpr..(a_row + 1) * bpr],
+                );
+                assert_eq!(out[a_row * m + w_row].to_bits(), want.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn functional_dma_volume_matches_plan() {
+        let imax = ImaxConfig::fpga(1);
+        let (m, n, k) = (6, 4, 256);
+        let wt = random_tensor(m, k, 5);
+        let xt = random_tensor(n, k, 6);
+        let w_blocks: Vec<_> = (0..m).flat_map(|r| q8_0::quantize_row(wt.row_f32(r))).collect();
+        let acts: Vec<_> = (0..n).flat_map(|r| q8_0::quantize_row(xt.row_f32(r))).collect();
+        let plan = TilePlan::new(&imax, KernelKind::Q8_0, m, n, k).unwrap();
+
+        let mut lane = LaneSim::new(imax);
+        lane.mul_mat_q8_0(&w_blocks, m, &acts, n, k).unwrap();
+        assert_eq!(lane.lmm.loaded_bytes, plan.load_bytes());
+        assert_eq!(lane.lmm.drained_bytes, plan.drain_bytes());
+    }
+
+    #[test]
+    fn analytic_equals_functional_breakdown() {
+        let imax = ImaxConfig::fpga(1);
+        let (m, n, k) = (7, 5, 256);
+        let wt = random_tensor(m, k, 7);
+        let xt = random_tensor(n, k, 8);
+        let w_blocks: Vec<_> = (0..m).flat_map(|r| q8_0::quantize_row(wt.row_f32(r))).collect();
+        let acts: Vec<_> = (0..n).flat_map(|r| q8_0::quantize_row(xt.row_f32(r))).collect();
+
+        let mut lane = LaneSim::new(imax.clone());
+        let analytic = lane.analytic_mul_mat(KernelKind::Q8_0, m, n, k, true).unwrap();
+        let (_, functional) = lane.mul_mat_q8_0(&w_blocks, m, &acts, n, k).unwrap();
+        assert_eq!(analytic, functional, "modes must agree cycle-exactly");
+    }
+
+    #[test]
+    fn conf_charged_only_on_kernel_switch() {
+        let imax = ImaxConfig::fpga(1);
+        let mut lane = LaneSim::new(imax);
+        let (m, n, k) = (2, 2, 256);
+        let wt = random_tensor(m, k, 9);
+        let xt = random_tensor(n, k, 10);
+        let w8: Vec<_> = (0..m).flat_map(|r| q8_0::quantize_row(wt.row_f32(r))).collect();
+        let a8: Vec<_> = (0..n).flat_map(|r| q8_0::quantize_row(xt.row_f32(r))).collect();
+        let (_, bd1) = lane.mul_mat_q8_0(&w8, m, &a8, n, k).unwrap();
+        assert!(bd1.conf > 0, "first run configures");
+        let (_, bd2) = lane.mul_mat_q8_0(&w8, m, &a8, n, k).unwrap();
+        assert_eq!(bd2.conf, 0, "same kernel stays configured");
+        let w3: Vec<_> = (0..m).flat_map(|r| q3_k::quantize_row(wt.row_f32(r))).collect();
+        let a3: Vec<_> = (0..n).flat_map(|r| q8_k::quantize_row(xt.row_f32(r))).collect();
+        let (_, bd3) = lane.mul_mat_q3_k(&w3, m, &a3, n, k).unwrap();
+        assert!(bd3.conf > 0, "kernel switch reconfigures");
+    }
+
+    #[test]
+    fn asic_same_cycles_less_time() {
+        let (m, n, k) = (8, 8, 512);
+        let fpga = LaneSim::new(ImaxConfig::fpga(1));
+        let asic = LaneSim::new(ImaxConfig::asic(1));
+        let b_f = fpga.analytic_mul_mat(KernelKind::Q3K, m, n, k, true).unwrap();
+        let b_a = asic.analytic_mul_mat(KernelKind::Q3K, m, n, k, true).unwrap();
+        assert_eq!(b_f, b_a, "same microarchitecture, same cycles");
+        let t_f = b_f.seconds(fpga.imax.clock_hz).total();
+        let t_a = b_a.seconds(asic.imax.clock_hz).total();
+        assert!((t_f / t_a - 840.0 / 145.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn q8_0_loads_more_bytes_than_q3_k_same_shape() {
+        let imax = ImaxConfig::fpga(1);
+        let (m, n, k) = (64, 32, 1024);
+        let p8 = TilePlan::new(&imax, KernelKind::Q8_0, m, n, k).unwrap();
+        let p3 = TilePlan::new(&imax, KernelKind::Q3K, m, n, k).unwrap();
+        assert!(
+            p8.load_bytes() > p3.load_bytes(),
+            "paper §IV-B: Q8_0 moves more data ({} vs {})",
+            p8.load_bytes(),
+            p3.load_bytes()
+        );
+    }
+}

@@ -1,0 +1,175 @@
+//! Local Memory Module (LMM) model.
+//!
+//! IMAX interleaves a slice of local memory with every PE; architecturally
+//! the lane's LMM behaves as a software-managed scratchpad that DMA fills
+//! (LOAD) and drains (DRAIN). The simulator tracks capacity, the resident
+//! regions, and access counts; kernels allocate regions for weight tiles,
+//! activation rows and result buffers, and the tiling logic in
+//! [`super::lane`] uses the capacity to decide how many weight rows fit
+//! per pass — which in turn drives the LOAD-phase DMA volume (the paper's
+//! Q8_0-vs-Q3_K asymmetry in Fig. 11).
+
+/// Identifies an allocated LMM region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegionId(usize);
+
+/// One resident region.
+#[derive(Debug, Clone)]
+struct Region {
+    bytes: usize,
+    label: &'static str,
+    live: bool,
+}
+
+/// A lane's LMM: bounded scratchpad with accounting.
+#[derive(Debug)]
+pub struct Lmm {
+    capacity: usize,
+    used: usize,
+    regions: Vec<Region>,
+    /// Total bytes ever written by DMA LOAD.
+    pub loaded_bytes: u64,
+    /// Total bytes ever read back by DMA DRAIN.
+    pub drained_bytes: u64,
+    /// Peak occupancy seen.
+    pub peak_used: usize,
+}
+
+impl Lmm {
+    /// New LMM with `capacity` bytes.
+    pub fn new(capacity: usize) -> Lmm {
+        Lmm {
+            capacity,
+            used: 0,
+            regions: Vec::new(),
+            loaded_bytes: 0,
+            drained_bytes: 0,
+            peak_used: 0,
+        }
+    }
+
+    /// Capacity in bytes.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Bytes currently allocated.
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    /// Bytes free.
+    pub fn free_bytes(&self) -> usize {
+        self.capacity - self.used
+    }
+
+    /// Allocate a region; `Err` when it does not fit (caller must tile).
+    pub fn alloc(&mut self, bytes: usize, label: &'static str) -> Result<RegionId, LmmError> {
+        if bytes > self.free_bytes() {
+            return Err(LmmError::OutOfMemory {
+                requested: bytes,
+                free: self.free_bytes(),
+                label,
+            });
+        }
+        self.used += bytes;
+        self.peak_used = self.peak_used.max(self.used);
+        self.regions.push(Region { bytes, label, live: true });
+        Ok(RegionId(self.regions.len() - 1))
+    }
+
+    /// Free a region (idempotent).
+    pub fn release(&mut self, id: RegionId) {
+        let r = &mut self.regions[id.0];
+        if r.live {
+            r.live = false;
+            self.used -= r.bytes;
+        }
+    }
+
+    /// Record a DMA fill of a region (LOAD phase bookkeeping).
+    pub fn record_load(&mut self, id: RegionId) {
+        let r = &self.regions[id.0];
+        assert!(r.live, "load into released region '{}'", r.label);
+        self.loaded_bytes += r.bytes as u64;
+    }
+
+    /// Record a DMA write-back of `bytes` (DRAIN phase bookkeeping).
+    pub fn record_drain(&mut self, bytes: usize) {
+        self.drained_bytes += bytes as u64;
+    }
+
+    /// Drop all regions (between kernel invocations).
+    pub fn reset(&mut self) {
+        self.regions.clear();
+        self.used = 0;
+    }
+}
+
+/// LMM failure modes.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum LmmError {
+    /// Allocation exceeded free capacity.
+    #[error("LMM OOM allocating {requested} B for '{label}' ({free} B free)")]
+    OutOfMemory {
+        /// Bytes requested.
+        requested: usize,
+        /// Bytes free at the time.
+        free: usize,
+        /// Region label.
+        label: &'static str,
+    },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_and_release_accounting() {
+        let mut lmm = Lmm::new(1000);
+        let a = lmm.alloc(400, "w").unwrap();
+        let b = lmm.alloc(500, "act").unwrap();
+        assert_eq!(lmm.used(), 900);
+        assert_eq!(lmm.peak_used, 900);
+        lmm.release(a);
+        assert_eq!(lmm.used(), 500);
+        lmm.release(a); // idempotent
+        assert_eq!(lmm.used(), 500);
+        lmm.release(b);
+        assert_eq!(lmm.used(), 0);
+        assert_eq!(lmm.peak_used, 900);
+    }
+
+    #[test]
+    fn oom_is_reported_not_panicked() {
+        let mut lmm = Lmm::new(100);
+        let err = lmm.alloc(101, "w").unwrap_err();
+        assert_eq!(
+            err,
+            LmmError::OutOfMemory { requested: 101, free: 100, label: "w" }
+        );
+    }
+
+    #[test]
+    fn load_drain_volumes() {
+        let mut lmm = Lmm::new(1 << 20);
+        let a = lmm.alloc(4096, "w").unwrap();
+        lmm.record_load(a);
+        lmm.record_load(a); // re-fill (second tile pass)
+        lmm.record_drain(512);
+        assert_eq!(lmm.loaded_bytes, 8192);
+        assert_eq!(lmm.drained_bytes, 512);
+    }
+
+    #[test]
+    fn reset_clears_occupancy_not_volumes() {
+        let mut lmm = Lmm::new(1024);
+        let a = lmm.alloc(1024, "w").unwrap();
+        lmm.record_load(a);
+        lmm.reset();
+        assert_eq!(lmm.used(), 0);
+        assert_eq!(lmm.loaded_bytes, 1024);
+        assert!(lmm.alloc(1024, "w2").is_ok());
+    }
+}

@@ -1,0 +1,151 @@
+//! IMAX3 CGLA simulator — the paper's accelerator substrate.
+//!
+//! IMAX3 (Akabe et al., IEEE Access 2025) is a Coarse-Grained **Linear**
+//! Array: 64 Processing Elements per lane, each PE interleaving an ALU
+//! pipeline with a slice of Local Memory (LMM), up to 8 lanes, attached to
+//! an ARM host over DMA. The paper maps two GGML quantized dot-product
+//! kernels onto it:
+//!
+//! * **Q8_0** across **46 PEs** — `OP_SML8` 8-bit multiply-add chains
+//!   aggregated into 24-bit integers over every 12-PE group (Fig. 3),
+//! * **Q3_K** across **51 PEs** — `OP_CVT53` restructuring (6-bit scales →
+//!   5-bit, 2+1-bit quants → 3-bit) feeding the same MAC spine (Fig. 4).
+//!
+//! We do not have the Verilog or the VPK180; this module is the
+//! substitution mandated by the reproduction brief: a transaction-level
+//! simulator whose **numerics** execute every arithmetic op through the
+//! ISA functions in [`isa`], and whose **timing** is derived cycle-by-cycle
+//! from the same kernel geometry (beats through a systolic chain, DMA
+//! bytes over a bus, per-phase configuration costs). Two execution modes
+//! are provided and property-tested to agree exactly:
+//!
+//! * functional — streams real blocks through the PE chain (numerics +
+//!   cycles); used by tests and the image-generation example.
+//! * analytic — closed-form cycle counts from the same [`conf::KernelConfig`];
+//!   used for paper-scale workloads (the full SD U-Net trace).
+//!
+//! Phase accounting follows the paper's Fig. 11 decomposition:
+//! `CONF` / `REGV` / `RANGE` (configuration), `LOAD` (DDR→LMM), `EXEC`
+//! (systolic compute), `DRAIN` (LMM→DDR).
+
+pub mod conf;
+pub mod dma;
+pub mod isa;
+pub mod kernels;
+pub mod lane;
+pub mod lmm;
+pub mod power;
+pub mod timing;
+
+pub use conf::{KernelConfig, KernelKind};
+pub use lane::LaneSim;
+pub use timing::{Phase, PhaseBreakdown};
+
+/// Number of PEs in one IMAX3 lane (Table II: "64 cores per lane").
+pub const PES_PER_LANE: usize = 64;
+
+/// Maximum lane count of the evaluated prototype (Figs. 9–10 sweep 1–8).
+pub const MAX_LANES: usize = 8;
+
+/// Target silicon/bitstream the simulator models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// AMD Versal VPK180 prototype @ 145 MHz (Table II).
+    Fpga,
+    /// Projected TSMC 28 nm ASIC @ 840 MHz (§IV-A static timing analysis).
+    Asic,
+}
+
+/// Physical configuration of an IMAX3 instance.
+#[derive(Debug, Clone)]
+pub struct ImaxConfig {
+    /// Silicon target.
+    pub target: Target,
+    /// Core clock in Hz.
+    pub clock_hz: f64,
+    /// Number of active lanes (1–8).
+    pub lanes: usize,
+    /// LMM capacity per lane in bytes (512 KiB configuration, §IV-A).
+    pub lmm_bytes: usize,
+    /// DMA payload bytes transferred per core cycle once streaming.
+    ///
+    /// The VPK180 prototype moves data PS-DDR → host-memcpy → DMA buffer
+    /// → NoC → PL; the paper's Fig. 11 shows this LOAD path dominating
+    /// both kernels. The effective 0.193 B/cycle (≈28 MB/s at 145 MHz)
+    /// is calibrated on the published FPGA/ASIC end-to-end deltas (see
+    /// `EXPERIMENTS.md` §Calibration).
+    pub dma_bytes_per_cycle: f64,
+    /// Fixed cycles per DMA descriptor (setup + interrupt + host driver).
+    pub dma_setup_cycles: u64,
+    /// Configuration cycles per PE (CONF phase).
+    pub conf_cycles_per_pe: u64,
+    /// Register-init cycles per PE (REGV phase).
+    pub regv_cycles_per_pe: u64,
+    /// Address-range setup cycles per PE (RANGE phase).
+    pub range_cycles_per_pe: u64,
+}
+
+impl ImaxConfig {
+    /// The FPGA prototype (Table II row "IMAX3 (Xilinx VPK180)").
+    pub fn fpga(lanes: usize) -> ImaxConfig {
+        assert!((1..=MAX_LANES).contains(&lanes));
+        ImaxConfig {
+            target: Target::Fpga,
+            clock_hz: 145.0e6,
+            lanes,
+            lmm_bytes: 512 * 1024,
+            dma_bytes_per_cycle: 0.193,
+            dma_setup_cycles: 4_000,
+            conf_cycles_per_pe: 16,
+            regv_cycles_per_pe: 4,
+            range_cycles_per_pe: 4,
+        }
+    }
+
+    /// The projected 28 nm ASIC (§IV-A: 840 MHz from static timing
+    /// analysis; same microarchitecture, so per-cycle constants carry
+    /// over and wall-clock scales with the clock — the paper's "≈5.8×
+    /// computation-time reduction").
+    pub fn asic(lanes: usize) -> ImaxConfig {
+        ImaxConfig {
+            target: Target::Asic,
+            clock_hz: 840.0e6,
+            // ASIC DMA: on-package interface keeps pace with the core
+            // clock at the same bytes/cycle; absolute bandwidth scales
+            // 840/145 like the compute.
+            ..ImaxConfig::fpga(lanes)
+        }
+    }
+
+    /// Seconds for a cycle count at this clock.
+    pub fn seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fpga_asic_clock_ratio_is_papers_5_8x() {
+        let f = ImaxConfig::fpga(1);
+        let a = ImaxConfig::asic(1);
+        let ratio = a.clock_hz / f.clock_hz;
+        assert!((ratio - 5.793).abs() < 0.01, "840/145 = {ratio}");
+        // Same cycles -> 5.8x less wall-clock.
+        let c = 1_000_000;
+        assert!((f.seconds(c) / a.seconds(c) - ratio).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn lane_bounds_enforced() {
+        ImaxConfig::fpga(9);
+    }
+
+    #[test]
+    fn lmm_is_512k() {
+        assert_eq!(ImaxConfig::fpga(1).lmm_bytes, 512 * 1024);
+    }
+}

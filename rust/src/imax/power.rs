@@ -1,0 +1,76 @@
+//! IMAX power model.
+//!
+//! §IV-A: "The power draw of IMAX depends on the LMM size and the number
+//! of active functional units. In our 512 KB LMM configuration, we
+//! estimated the power at 47.7 W for the Q8_0 kernel (46 units) and
+//! 52.8 W for the Q3_K kernel (51 units)" — from Synopsys DC synthesis
+//! on TSMC 28 nm. Two published points determine a linear
+//! per-active-unit model exactly:
+//!
+//! ```text
+//! P(u) = base + u · per_unit,   per_unit = (52.8 − 47.7) / (51 − 46) = 1.02 W
+//!                               base     = 47.7 − 46 · 1.02       = 0.78 W
+//! ```
+//!
+//! The FPGA prototype's wall power is the board figure from Table II
+//! (180 W for the VPK180 kit).
+
+use super::conf::KernelKind;
+use super::Target;
+
+/// Watts per active functional unit in the 28 nm ASIC synthesis.
+pub const ASIC_WATTS_PER_UNIT: f64 = (52.8 - 47.7) / (51.0 - 46.0);
+
+/// Baseline (LMM + clock tree + idle array) watts in the ASIC synthesis.
+pub const ASIC_BASE_WATTS: f64 = 47.7 - 46.0 * ASIC_WATTS_PER_UNIT;
+
+/// VPK180 evaluation-kit board power (Table II).
+pub const FPGA_BOARD_WATTS: f64 = 180.0;
+
+/// ASIC power for `active_units` functional units (512 KB LMM config).
+pub fn asic_power_units(active_units: usize) -> f64 {
+    ASIC_BASE_WATTS + active_units as f64 * ASIC_WATTS_PER_UNIT
+}
+
+/// Power draw of one lane running a kernel on a target.
+pub fn kernel_power(target: Target, kind: KernelKind) -> f64 {
+    let units = match kind {
+        KernelKind::Q8_0 => 46,
+        KernelKind::Q3K => 51,
+    };
+    match target {
+        Target::Fpga => FPGA_BOARD_WATTS,
+        Target::Asic => asic_power_units(units),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_reproduces_published_points() {
+        assert!(
+            (kernel_power(Target::Asic, KernelKind::Q8_0) - 47.7).abs() < 1e-9,
+            "Q8_0 / 46 units must give the paper's 47.7 W"
+        );
+        assert!(
+            (kernel_power(Target::Asic, KernelKind::Q3K) - 52.8).abs() < 1e-9,
+            "Q3_K / 51 units must give the paper's 52.8 W"
+        );
+    }
+
+    #[test]
+    fn fpga_is_board_power() {
+        assert_eq!(kernel_power(Target::Fpga, KernelKind::Q8_0), 180.0);
+        assert_eq!(kernel_power(Target::Fpga, KernelKind::Q3K), 180.0);
+    }
+
+    #[test]
+    fn per_unit_slope_positive_and_sane() {
+        assert!(ASIC_WATTS_PER_UNIT > 0.5 && ASIC_WATTS_PER_UNIT < 2.0);
+        assert!(ASIC_BASE_WATTS > 0.0, "base power must be positive");
+        // A hypothetical full 64-unit kernel stays under 70 W.
+        assert!(asic_power_units(64) < 70.0);
+    }
+}

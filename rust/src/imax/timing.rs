@@ -1,0 +1,208 @@
+//! Phase-level time accounting (the paper's Fig. 11 decomposition).
+//!
+//! Every offloaded kernel invocation decomposes into the six phases the
+//! paper measures on the FPGA: `CONF`/`REGV`/`RANGE` (writing the CGLA
+//! configuration, initial register values, and LMM address ranges),
+//! `LOAD` (DDR → LMM DMA), `EXEC` (systolic compute), `DRAIN` (LMM → DDR
+//! write-back).
+
+use std::ops::{Add, AddAssign};
+
+/// One of the six measured phases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Configuration-word write.
+    Conf,
+    /// Register-value initialization.
+    Regv,
+    /// LMM address-range setup.
+    Range,
+    /// DDR → LMM data transfer.
+    Load,
+    /// Systolic execution.
+    Exec,
+    /// LMM → DDR result write-back.
+    Drain,
+}
+
+impl Phase {
+    /// All phases in the paper's Fig. 11 order.
+    pub const ALL: [Phase; 6] =
+        [Phase::Exec, Phase::Load, Phase::Drain, Phase::Conf, Phase::Regv, Phase::Range];
+
+    /// Display name as the paper labels it.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Conf => "CONF",
+            Phase::Regv => "REGV",
+            Phase::Range => "RANGE",
+            Phase::Load => "LOAD",
+            Phase::Exec => "EXEC",
+            Phase::Drain => "DRAIN",
+        }
+    }
+}
+
+/// Cycle counts per phase for one or more kernel invocations.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseBreakdown {
+    /// CONF cycles.
+    pub conf: u64,
+    /// REGV cycles.
+    pub regv: u64,
+    /// RANGE cycles.
+    pub range: u64,
+    /// LOAD cycles.
+    pub load: u64,
+    /// EXEC cycles.
+    pub exec: u64,
+    /// DRAIN cycles.
+    pub drain: u64,
+}
+
+impl PhaseBreakdown {
+    /// Cycles in one phase.
+    pub fn get(&self, p: Phase) -> u64 {
+        match p {
+            Phase::Conf => self.conf,
+            Phase::Regv => self.regv,
+            Phase::Range => self.range,
+            Phase::Load => self.load,
+            Phase::Exec => self.exec,
+            Phase::Drain => self.drain,
+        }
+    }
+
+    /// Add cycles to one phase.
+    pub fn add(&mut self, p: Phase, cycles: u64) {
+        match p {
+            Phase::Conf => self.conf += cycles,
+            Phase::Regv => self.regv += cycles,
+            Phase::Range => self.range += cycles,
+            Phase::Load => self.load += cycles,
+            Phase::Exec => self.exec += cycles,
+            Phase::Drain => self.drain += cycles,
+        }
+    }
+
+    /// Total cycles across phases (phases serialize on the prototype:
+    /// the host driver runs CONF→LOAD→EXEC→DRAIN per invocation).
+    pub fn total(&self) -> u64 {
+        self.conf + self.regv + self.range + self.load + self.exec + self.drain
+    }
+
+    /// Configuration overhead (CONF + REGV + RANGE), as Fig. 11 groups it.
+    pub fn config_total(&self) -> u64 {
+        self.conf + self.regv + self.range
+    }
+
+    /// Fraction of total spent in a phase (0 when total is 0).
+    pub fn fraction(&self, p: Phase) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            0.0
+        } else {
+            self.get(p) as f64 / t as f64
+        }
+    }
+
+    /// Seconds per phase at a clock.
+    pub fn seconds(&self, clock_hz: f64) -> PhaseSeconds {
+        PhaseSeconds {
+            conf: self.conf as f64 / clock_hz,
+            regv: self.regv as f64 / clock_hz,
+            range: self.range as f64 / clock_hz,
+            load: self.load as f64 / clock_hz,
+            exec: self.exec as f64 / clock_hz,
+            drain: self.drain as f64 / clock_hz,
+        }
+    }
+}
+
+impl Add for PhaseBreakdown {
+    type Output = PhaseBreakdown;
+    fn add(self, o: PhaseBreakdown) -> PhaseBreakdown {
+        PhaseBreakdown {
+            conf: self.conf + o.conf,
+            regv: self.regv + o.regv,
+            range: self.range + o.range,
+            load: self.load + o.load,
+            exec: self.exec + o.exec,
+            drain: self.drain + o.drain,
+        }
+    }
+}
+
+impl AddAssign for PhaseBreakdown {
+    fn add_assign(&mut self, o: PhaseBreakdown) {
+        *self = *self + o;
+    }
+}
+
+/// Wall-clock seconds per phase.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseSeconds {
+    /// CONF seconds.
+    pub conf: f64,
+    /// REGV seconds.
+    pub regv: f64,
+    /// RANGE seconds.
+    pub range: f64,
+    /// LOAD seconds.
+    pub load: f64,
+    /// EXEC seconds.
+    pub exec: f64,
+    /// DRAIN seconds.
+    pub drain: f64,
+}
+
+impl PhaseSeconds {
+    /// Total seconds.
+    pub fn total(&self) -> f64 {
+        self.conf + self.regv + self.range + self.load + self.exec + self.drain
+    }
+
+    /// Values in Fig. 11 order (EXEC, LOAD, DRAIN, CONF, REGV, RANGE).
+    pub fn fig11_order(&self) -> [f64; 6] {
+        [self.exec, self.load, self.drain, self.conf, self.regv, self.range]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_total() {
+        let mut a = PhaseBreakdown { conf: 1, regv: 2, range: 3, load: 4, exec: 5, drain: 6 };
+        let b = PhaseBreakdown { conf: 10, ..Default::default() };
+        a += b;
+        assert_eq!(a.conf, 11);
+        assert_eq!(a.total(), 31);
+        assert_eq!(a.config_total(), 16);
+    }
+
+    #[test]
+    fn get_matches_fields() {
+        let p = PhaseBreakdown { conf: 1, regv: 2, range: 3, load: 4, exec: 5, drain: 6 };
+        for (ph, want) in Phase::ALL.iter().zip([5u64, 4, 6, 1, 2, 3]) {
+            assert_eq!(p.get(*ph), want, "{}", ph.name());
+        }
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let p = PhaseBreakdown { conf: 10, regv: 20, range: 30, load: 15, exec: 15, drain: 10 };
+        let s: f64 = Phase::ALL.iter().map(|&ph| p.fraction(ph)).sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        assert_eq!(PhaseBreakdown::default().fraction(Phase::Exec), 0.0);
+    }
+
+    #[test]
+    fn seconds_conversion() {
+        let p = PhaseBreakdown { exec: 145_000_000, ..Default::default() };
+        let s = p.seconds(145.0e6);
+        assert!((s.exec - 1.0).abs() < 1e-12);
+        assert!((s.total() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,13 @@
+//! # imax-sd
+//!
+//! Reproduction of "Implementation and Evaluation of Stable Diffusion on a
+//! General-Purpose CGLA Accelerator" (Ando, Eto, Nakashima; CS.AR 2025).
+//!
+//! See `DESIGN.md` for the substitution ledger and experiment index.
+pub mod coordinator;
+pub mod device;
+pub mod ggml;
+pub mod imax;
+pub mod runtime;
+pub mod sd;
+pub mod util;

@@ -1,0 +1,194 @@
+//! `imax-sd`: CLI for the IMAX3 Stable-Diffusion reproduction.
+//!
+//! Subcommands map onto the paper's evaluation:
+//!
+//! * `generate`  — run the mini pipeline end-to-end and write a PNG (Fig. 5)
+//! * `e2e`       — device end-to-end latency comparison (Figs. 6–7)
+//! * `pdp`       — power-delay product (Fig. 8)
+//! * `scaling`   — kernel time vs lanes/threads (Figs. 9–10)
+//! * `breakdown` — IMAX phase breakdown (Fig. 11)
+//! * `table1`    — dot-time by dtype (Table I)
+//! * `trace`     — dump the SD-Turbo mat-mul trace summary
+
+use imax_sd::device::{arm_a72, gtx_1080ti, pdp_joules, xeon_w5, Device, ImaxDevice};
+use imax_sd::imax::ImaxConfig;
+use imax_sd::sd::arch::sd_turbo_512;
+use imax_sd::sd::pipeline::{to_rgb8, Backend, Pipeline, PipelineConfig};
+use imax_sd::sd::profiler::table1_shares;
+use imax_sd::sd::QuantModel;
+use imax_sd::util::cli::{App, Arg};
+use imax_sd::util::png::{write_png, ColorType};
+use imax_sd::util::tables::{BarChart, StackedBars, Table};
+
+fn model_of(s: &str) -> QuantModel {
+    match s {
+        "q3_k" | "q3k" | "Q3_K" => QuantModel::Q3K,
+        "q8_0" | "q8" | "Q8_0" => QuantModel::Q8_0,
+        other => {
+            eprintln!("unknown model '{other}' (use q3_k or q8_0)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn devices() -> Vec<Box<dyn Device>> {
+    vec![
+        Box::new(arm_a72()),
+        Box::new(ImaxDevice::fpga(1)),
+        Box::new(ImaxDevice::asic(1)),
+        Box::new(xeon_w5()),
+        Box::new(gtx_1080ti()),
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    let app = App::new("imax-sd", "Stable Diffusion on the IMAX3 CGLA — reproduction CLI")
+        .subcommand(
+            App::new("generate", "generate an image with the mini pipeline (Fig. 5)")
+                .arg(Arg::opt("prompt", 'p', "TEXT", "text prompt").default("a lovely cat"))
+                .arg(Arg::opt("model", 'm', "TYPE", "q3_k or q8_0").default("q8_0"))
+                .arg(Arg::opt("seed", 's', "N", "latent seed").default("42"))
+                .arg(Arg::opt("steps", 'n', "N", "denoising steps").default("1"))
+                .arg(Arg::opt("out", 'o', "PATH", "output PNG").default("out.png"))
+                .arg(Arg::flag("host", 'H', "run on host only (no IMAX offload)")),
+        )
+        .subcommand(
+            App::new("e2e", "device end-to-end latency comparison (Figs. 6-7)")
+                .arg(Arg::opt("model", 'm', "TYPE", "q3_k or q8_0").default("q3_k")),
+        )
+        .subcommand(App::new("pdp", "power-delay product per device (Fig. 8)"))
+        .subcommand(
+            App::new("scaling", "kernel time vs lanes/threads (Figs. 9-10)")
+                .arg(Arg::opt("model", 'm', "TYPE", "q3_k or q8_0").default("q3_k")),
+        )
+        .subcommand(
+            App::new("breakdown", "IMAX phase breakdown (Fig. 11)")
+                .arg(Arg::opt("target", 't', "T", "fpga or asic").default("fpga")),
+        )
+        .subcommand(App::new("table1", "dot-product time by dtype (Table I)"))
+        .subcommand(App::new("trace", "dump the SD-Turbo workload trace summary"));
+
+    let m = app.parse_env();
+    let Some(sub) = m.sub else {
+        println!("{}", app.help_text());
+        return Ok(());
+    };
+    let trace = sd_turbo_512(1);
+
+    match sub.command.as_str() {
+        "generate" => {
+            let model = model_of(sub.str("model"));
+            let backend = if sub.flag("host") {
+                Backend::Host { threads: 2 }
+            } else {
+                Backend::Imax { config: ImaxConfig::fpga(1), threads: 2 }
+            };
+            let pipe = Pipeline::new(PipelineConfig {
+                weight_seed: 0x5D_7B0,
+                model: Some(model),
+                steps: sub.usize("steps")?,
+                backend,
+            });
+            let (img, report) = pipe.generate(sub.str("prompt"), sub.u64("seed")?);
+            let out = sub.str("out");
+            write_png(out, img.w as u32, img.h as u32, ColorType::Rgb, &to_rgb8(&img))?;
+            println!(
+                "wrote {out}: {} mat-muls ({} offloaded), {:.2} s wall",
+                report.matmul_calls, report.offloaded_calls, report.wall_seconds
+            );
+        }
+        "e2e" => {
+            let model = model_of(sub.str("model"));
+            let mut c = BarChart::new(
+                &format!("E2E latency, {} model (s)", model.name()),
+                "s",
+            )
+            .log();
+            for d in devices() {
+                c.bar(&d.name(), d.e2e_seconds(&trace, model));
+            }
+            c.print();
+        }
+        "pdp" => {
+            let mut t = Table::new(
+                "PDP (J)",
+                &["Device", "Q3_K", "Q8_0"],
+            );
+            for d in devices() {
+                t.row(&[
+                    d.name(),
+                    format!("{:.0}", pdp_joules(d.as_ref(), &trace, QuantModel::Q3K).joules),
+                    format!("{:.0}", pdp_joules(d.as_ref(), &trace, QuantModel::Q8_0).joules),
+                ]);
+            }
+            t.print();
+        }
+        "scaling" => {
+            let model = model_of(sub.str("model"));
+            let mut t = Table::new(
+                &format!("{} kernel seconds vs threads/lanes", model.name()),
+                &["Device", "1", "2", "4", "8"],
+            );
+            for d in devices() {
+                let mut row = vec![d.name()];
+                for l in [1usize, 2, 4, 8] {
+                    row.push(format!("{:.2}", d.kernel_seconds(&trace, model, l)));
+                }
+                t.row(&row);
+            }
+            t.print();
+        }
+        "breakdown" => {
+            let dev = match sub.str("target") {
+                "asic" => ImaxDevice::asic(1),
+                _ => ImaxDevice::fpga(1),
+            };
+            let mut sb = StackedBars::new(
+                &format!("IMAX phase breakdown ({})", dev.name()),
+                "s",
+                &["EXEC", "LOAD", "DRAIN", "CONF", "REGV", "RANGE"],
+            );
+            for model in [QuantModel::Q3K, QuantModel::Q8_0] {
+                sb.bar(model.name(), &dev.offload_phase_seconds(&trace, model).fig11_order());
+            }
+            sb.print();
+        }
+        "table1" => {
+            let dev = xeon_w5();
+            let mut t = Table::new("Table I (% of dot time)", &["Model", "F32", "F16", "Quant"]);
+            for model in [QuantModel::Q3K, QuantModel::Q8_0] {
+                let shares = table1_shares(&trace, &dev, model);
+                let get = |n: &str| {
+                    shares
+                        .iter()
+                        .find(|(m, _)| *m == n)
+                        .map(|(_, v)| format!("{v:.1} %"))
+                        .unwrap_or_else(|| "-".into())
+                };
+                t.row(&[
+                    model.name().to_string(),
+                    get("F32"),
+                    get("F16"),
+                    get(model.weight_dtype().name()),
+                ]);
+            }
+            t.print();
+        }
+        "trace" => {
+            println!("SD-Turbo 512x512, 1 step: {} mat-muls, {:.1} GMACs total", trace.ops.len(), trace.total_macs() as f64 / 1e9);
+            for model in [QuantModel::Q3K, QuantModel::Q8_0] {
+                println!("\n{} model:", model.name());
+                for (d, v) in trace.macs_by_dtype(model) {
+                    println!("  {d:<5} {:>8.1} GMACs", v as f64 / 1e9);
+                }
+                println!(
+                    "  offload: {:.1} % of MACs across {} ops",
+                    100.0 * trace.offloaded_macs(model) as f64 / trace.total_macs() as f64,
+                    trace.offloaded_ops(model).len()
+                );
+            }
+        }
+        other => unreachable!("unhandled subcommand {other}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! PJRT client wrapper + artifact registry with a compile cache.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One compiled HLO artifact ready to execute.
+pub struct CompiledArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact file name (for reports).
+    pub name: String,
+}
+
+impl CompiledArtifact {
+    /// Execute with literal inputs; returns the untupled output literals.
+    ///
+    /// Artifacts are lowered with `return_tuple=True`, so the single
+    /// result is a tuple we decompose.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.decompose_tuple()?)
+    }
+
+    /// Execute and read output 0 as an `f32` vector.
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let outs = self.run(inputs)?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+}
+
+/// The runtime: one PJRT CPU client + compiled-executable cache.
+pub struct ArtifactRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, CompiledArtifact>,
+}
+
+impl ArtifactRuntime {
+    /// Create over an artifact directory.
+    pub fn new(dir: impl AsRef<Path>) -> Result<ArtifactRuntime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(ArtifactRuntime { client, dir: dir.as_ref().to_path_buf(), cache: HashMap::new() })
+    }
+
+    /// Platform string (e.g. "cpu") for logs.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by file name.
+    pub fn load(&mut self, name: &str) -> Result<&CompiledArtifact> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path utf-8")?,
+            )
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+            self.cache
+                .insert(name.to_string(), CompiledArtifact { exe, name: name.to_string() });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Number of compiled artifacts resident.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Build an `i8` (S8) literal of shape `[rows, cols]` from a slice.
+pub fn literal_i8(data: &[i8], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(data.len(), rows * cols);
+    // The crate has no i8 NativeType; go through the untyped-bytes path.
+    let bytes: &[u8] = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S8,
+        &[rows, cols],
+        bytes,
+    )?)
+}
+
+/// Build an `f32` literal of shape `[rows, cols]` from a slice.
+pub fn literal_f32(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(data.len(), rows * cols);
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(&[rows as i64, cols as i64])?)
+}

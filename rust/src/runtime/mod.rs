@@ -1,0 +1,38 @@
+//! PJRT runtime: load and execute the AOT artifacts from rust.
+//!
+//! Python runs once (`make artifacts`) to lower the L2 jax graph +
+//! L1 Pallas kernels to HLO **text**; this module wraps the `xla`
+//! crate's PJRT CPU client to compile those artifacts and execute them
+//! on the request path with zero python. Text is the interchange format
+//! because the crate's xla_extension 0.5.1 rejects jax ≥ 0.5's
+//! 64-bit-id serialized protos (see /opt/xla-example/README.md).
+
+pub mod client;
+
+pub use client::{ArtifactRuntime, CompiledArtifact};
+
+/// Default artifact directory relative to the repo root.
+pub const ARTIFACT_DIR: &str = "artifacts";
+
+/// Names of the artifacts `make artifacts` produces.
+pub const ARTIFACTS: [&str; 4] = [
+    "model.hlo.txt",
+    "q8_0_matmul.hlo.txt",
+    "q3k_matmul.hlo.txt",
+    "f16_matmul.hlo.txt",
+];
+
+/// Locate the artifact directory from the current dir or ancestors
+/// (tests run from the workspace root; examples may run elsewhere).
+pub fn find_artifact_dir() -> Option<std::path::PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join(ARTIFACT_DIR);
+        if cand.join(ARTIFACTS[0]).exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

@@ -1,0 +1,608 @@
+//! Mini graph executor: the GGML-op substrate the runnable pipeline uses.
+//!
+//! Mirrors how `stable-diffusion.cpp` composes GGML ops: every mat-mul
+//! goes through a [`MatMulEngine`] (host kernels or the IMAX functional
+//! simulator — the offload seam the paper inserts), everything else
+//! (norms, activations, softmax, im2col, resampling) runs as host f32
+//! ops here.
+
+use crate::ggml::{self, DType, Tensor};
+use crate::imax::lane::LaneSim;
+use crate::imax::timing::PhaseBreakdown;
+use crate::imax::ImaxConfig;
+use crate::sd::trace::QuantModel;
+use std::collections::BTreeMap;
+
+/// A spatial feature map `[c, h, w]`, channel-major.
+#[derive(Debug, Clone)]
+pub struct Feat {
+    /// Channels.
+    pub c: usize,
+    /// Height.
+    pub h: usize,
+    /// Width.
+    pub w: usize,
+    /// `c * h * w` values, channel-major.
+    pub data: Vec<f32>,
+}
+
+impl Feat {
+    /// Zero-filled feature map.
+    pub fn zeros(c: usize, h: usize, w: usize) -> Feat {
+        Feat { c, h, w, data: vec![0.0; c * h * w] }
+    }
+
+    /// From data (length-checked).
+    pub fn new(c: usize, h: usize, w: usize, data: Vec<f32>) -> Feat {
+        assert_eq!(data.len(), c * h * w);
+        Feat { c, h, w, data }
+    }
+
+    /// Pixel count.
+    pub fn hw(&self) -> usize {
+        self.h * self.w
+    }
+
+    /// Channel slice.
+    pub fn channel(&self, ch: usize) -> &[f32] {
+        &self.data[ch * self.hw()..(ch + 1) * self.hw()]
+    }
+
+    /// Concatenate along channels.
+    pub fn concat(&self, other: &Feat) -> Feat {
+        assert_eq!((self.h, self.w), (other.h, other.w));
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Feat::new(self.c + other.c, self.h, self.w, data)
+    }
+
+    /// Elementwise add.
+    pub fn add(&self, other: &Feat) -> Feat {
+        assert_eq!(self.data.len(), other.data.len());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Feat { c: self.c, h: self.h, w: self.w, data }
+    }
+
+    /// Reinterpret as `[h*w, c]` token rows (for attention/linear ops).
+    pub fn to_tokens(&self) -> Tensor {
+        let hw = self.hw();
+        let mut out = vec![0.0f32; hw * self.c];
+        for ch in 0..self.c {
+            let src = self.channel(ch);
+            for p in 0..hw {
+                out[p * self.c + ch] = src[p];
+            }
+        }
+        Tensor::f32(hw, self.c, out)
+    }
+
+    /// Inverse of [`Feat::to_tokens`].
+    pub fn from_tokens(t: &Tensor, h: usize, w: usize) -> Feat {
+        let (hw, c) = (t.rows, t.cols);
+        assert_eq!(hw, h * w);
+        let src = t.as_f32();
+        let mut data = vec![0.0f32; c * hw];
+        for p in 0..hw {
+            for ch in 0..c {
+                data[ch * hw + p] = src[p * c + ch];
+            }
+        }
+        Feat::new(c, h, w, data)
+    }
+}
+
+/// Per-engine run statistics (mini analog of the paper's profiling).
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    /// Wall-clock seconds per weight dtype.
+    pub seconds_by_dtype: BTreeMap<&'static str, f64>,
+    /// MACs per weight dtype.
+    pub macs_by_dtype: BTreeMap<&'static str, u64>,
+    /// Mat-mul invocations.
+    pub calls: u64,
+    /// Ops executed on the IMAX simulator.
+    pub offloaded_calls: u64,
+    /// Accumulated IMAX phase breakdown (zero for host-only runs).
+    pub imax_phases: PhaseBreakdown,
+}
+
+impl EngineStats {
+    fn record(&mut self, dtype: DType, macs: u64, secs: f64) {
+        *self.seconds_by_dtype.entry(dtype.name()).or_insert(0.0) += secs;
+        *self.macs_by_dtype.entry(dtype.name()).or_insert(0) += macs;
+        self.calls += 1;
+    }
+}
+
+/// The offload seam: all pipeline mat-muls route through here.
+pub trait MatMulEngine {
+    /// `out[n, m] = Σ_k w[m,k] · x[n,k]` with per-dtype accounting.
+    fn mul_mat(&mut self, w: &Tensor, x: &Tensor) -> Tensor;
+    /// Statistics so far.
+    fn stats(&self) -> &EngineStats;
+}
+
+/// Host engine: GGML kernels on CPU threads.
+pub struct HostEngine {
+    /// Worker threads for row-parallel mat-muls.
+    pub threads: usize,
+    stats: EngineStats,
+}
+
+impl HostEngine {
+    /// New host engine.
+    pub fn new(threads: usize) -> HostEngine {
+        HostEngine { threads, stats: EngineStats::default() }
+    }
+}
+
+impl MatMulEngine for HostEngine {
+    fn mul_mat(&mut self, w: &Tensor, x: &Tensor) -> Tensor {
+        let t0 = std::time::Instant::now();
+        let out = ggml::mul_mat(w, x, self.threads);
+        let macs = (w.rows * w.cols * x.rows) as u64;
+        self.stats.record(w.dtype(), macs, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+}
+
+/// IMAX engine: quantized mat-muls run functionally on the lane
+/// simulator (bit-exact vs the hardware dataflow); everything else falls
+/// back to the host path — exactly the paper's offload policy.
+pub struct ImaxEngine {
+    lane: LaneSim,
+    /// Host threads for the non-offloaded ops.
+    pub threads: usize,
+    stats: EngineStats,
+}
+
+impl ImaxEngine {
+    /// New engine over an IMAX configuration.
+    pub fn new(imax: ImaxConfig, threads: usize) -> ImaxEngine {
+        ImaxEngine { lane: LaneSim::new(imax), threads, stats: EngineStats::default() }
+    }
+
+    /// Which quantized model a weight dtype's offloads correspond to.
+    pub fn quant_model_of(dtype: DType) -> Option<QuantModel> {
+        match dtype {
+            DType::Q3K => Some(QuantModel::Q3K),
+            DType::Q8_0 => Some(QuantModel::Q8_0),
+            _ => None,
+        }
+    }
+}
+
+impl MatMulEngine for ImaxEngine {
+    fn mul_mat(&mut self, w: &Tensor, x: &Tensor) -> Tensor {
+        let t0 = std::time::Instant::now();
+        let macs = (w.rows * w.cols * x.rows) as u64;
+        let out = match &w.data {
+            crate::ggml::tensor::Storage::Q8_0(blocks) => {
+                // Host marshalling: quantize activations to Q8_0 rows.
+                let acts: Vec<_> = (0..x.rows)
+                    .flat_map(|r| crate::ggml::q8_0::quantize_row(x.row_f32(r)))
+                    .collect();
+                let (data, bd) = self
+                    .lane
+                    .mul_mat_q8_0(blocks, w.rows, &acts, x.rows, w.cols)
+                    .expect("mini shapes fit LMM");
+                self.stats.imax_phases += bd;
+                self.stats.offloaded_calls += 1;
+                Tensor::f32(x.rows, w.rows, data)
+            }
+            crate::ggml::tensor::Storage::Q3K(blocks) => {
+                let acts: Vec<_> = (0..x.rows)
+                    .flat_map(|r| crate::ggml::q8_k::quantize_row(x.row_f32(r)))
+                    .collect();
+                let (data, bd) = self
+                    .lane
+                    .mul_mat_q3_k(blocks, w.rows, &acts, x.rows, w.cols)
+                    .expect("mini shapes fit LMM");
+                self.stats.imax_phases += bd;
+                self.stats.offloaded_calls += 1;
+                Tensor::f32(x.rows, w.rows, data)
+            }
+            _ => ggml::mul_mat(w, x, self.threads),
+        };
+        self.stats.record(w.dtype(), macs, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Host f32 ops (GGML non-mat-mul kernels)
+// ---------------------------------------------------------------------------
+
+/// SiLU activation in place.
+pub fn silu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = *v / (1.0 + (-*v).exp());
+    }
+}
+
+/// GELU (tanh approximation, as GGML uses) in place.
+pub fn gelu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        let c = 0.797_884_56_f32; // sqrt(2/pi)
+        *v = 0.5 * *v * (1.0 + (c * (*v + 0.044715 * *v * *v * *v)).tanh());
+    }
+}
+
+/// GroupNorm over a feature map (eps 1e-6).
+pub fn group_norm(x: &Feat, groups: usize, gamma: &[f32], beta: &[f32]) -> Feat {
+    assert_eq!(gamma.len(), x.c);
+    assert_eq!(beta.len(), x.c);
+    let groups = groups.min(x.c);
+    assert_eq!(x.c % groups, 0, "channels divide groups");
+    let cpg = x.c / groups;
+    let hw = x.hw();
+    let mut out = x.clone();
+    for g in 0..groups {
+        let span = g * cpg * hw..(g + 1) * cpg * hw;
+        let slice = &x.data[span.clone()];
+        let n = slice.len() as f32;
+        let mean = slice.iter().sum::<f32>() / n;
+        let var = slice.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / n;
+        let inv = 1.0 / (var + 1e-6).sqrt();
+        for (i, v) in out.data[span].iter_mut().enumerate() {
+            let ch = g * cpg + i / hw;
+            *v = (*v - mean) * inv * gamma[ch] + beta[ch];
+        }
+    }
+    out
+}
+
+/// LayerNorm over the last dim of `[rows, cols]` tokens.
+pub fn layer_norm(x: &Tensor, gamma: &[f32], beta: &[f32]) -> Tensor {
+    assert_eq!(gamma.len(), x.cols);
+    let mut out = vec![0.0f32; x.len()];
+    for r in 0..x.rows {
+        let row = x.row_f32(r);
+        let mean = row.iter().sum::<f32>() / x.cols as f32;
+        let var = row.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / x.cols as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for c in 0..x.cols {
+            out[r * x.cols + c] = (row[c] - mean) * inv * gamma[c] + beta[c];
+        }
+    }
+    Tensor::f32(x.rows, x.cols, out)
+}
+
+/// Row-wise softmax in place over `[rows, cols]`.
+pub fn softmax_rows(x: &mut Tensor) {
+    let cols = x.cols;
+    let data = match &mut x.data {
+        crate::ggml::tensor::Storage::F32(v) => v,
+        _ => panic!("softmax expects f32"),
+    };
+    for row in data.chunks_mut(cols) {
+        let max = row.iter().fold(f32::MIN, |m, &v| m.max(v));
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// im2col for a `k×k` conv with stride `s` and `same`-style padding
+/// `k/2`: returns `[out_h*out_w, cin*k*k]` rows ready for `mul_mat`.
+pub fn im2col(x: &Feat, k: usize, stride: usize) -> Tensor {
+    let pad = k / 2;
+    let oh = (x.h + 2 * pad - k) / stride + 1;
+    let ow = (x.w + 2 * pad - k) / stride + 1;
+    let cols = x.c * k * k;
+    let mut out = vec![0.0f32; oh * ow * cols];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = oy * ow + ox;
+            for c in 0..x.c {
+                let chan = x.channel(c);
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        let v = if iy >= 0 && iy < x.h as isize && ix >= 0 && ix < x.w as isize {
+                            chan[iy as usize * x.w + ix as usize]
+                        } else {
+                            0.0
+                        };
+                        out[row * cols + c * k * k + ky * k + kx] = v;
+                    }
+                }
+            }
+        }
+    }
+    Tensor::f32(oh * ow, cols, out)
+}
+
+/// Conv2d via im2col + engine mat-mul. `w` is `[cout, cin·k·k]`.
+pub fn conv2d(
+    eng: &mut dyn MatMulEngine,
+    w: &Tensor,
+    bias: &[f32],
+    x: &Feat,
+    k: usize,
+    stride: usize,
+) -> Feat {
+    let pad = k / 2;
+    let oh = (x.h + 2 * pad - k) / stride + 1;
+    let ow = (x.w + 2 * pad - k) / stride + 1;
+    assert_eq!(w.cols, x.c * k * k, "conv weight shape");
+    assert_eq!(bias.len(), w.rows);
+    let cols = im2col(x, k, stride);
+    let out_tok = eng.mul_mat(w, &cols); // [oh*ow, cout]
+    let mut f = Feat::from_tokens(&out_tok, oh, ow);
+    let hw = f.hw();
+    for c in 0..f.c {
+        for p in 0..hw {
+            f.data[c * hw + p] += bias[c];
+        }
+    }
+    f
+}
+
+/// Nearest-neighbour 2× upsample.
+pub fn upsample2x(x: &Feat) -> Feat {
+    let (h2, w2) = (x.h * 2, x.w * 2);
+    let mut out = Feat::zeros(x.c, h2, w2);
+    for c in 0..x.c {
+        let src = x.channel(c);
+        for y in 0..h2 {
+            for xx in 0..w2 {
+                out.data[c * h2 * w2 + y * w2 + xx] = src[(y / 2) * x.w + xx / 2];
+            }
+        }
+    }
+    out
+}
+
+/// Multi-head attention over token tensors: `q:[n,d] k:[m,d] v:[m,d]`,
+/// all mat-muls through the engine (scores in F32, like sd.cpp).
+pub fn attention(
+    eng: &mut dyn MatMulEngine,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    heads: usize,
+) -> Tensor {
+    assert_eq!(q.cols, k.cols);
+    assert_eq!(k.rows, v.rows);
+    let d = q.cols / heads;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0.0f32; q.rows * q.cols];
+    for h in 0..heads {
+        // Slice head h: [n, d] / [m, d].
+        let take = |t: &Tensor| {
+            let mut s = vec![0.0f32; t.rows * d];
+            for r in 0..t.rows {
+                s[r * d..(r + 1) * d].copy_from_slice(&t.row_f32(r)[h * d..(h + 1) * d]);
+            }
+            Tensor::f32(t.rows, d, s)
+        };
+        let (qh, kh, vh) = (take(q), take(k), take(v));
+        // scores[n, m] = q · kᵀ (mul_mat with w = kh gives [n, m]).
+        let mut scores = eng.mul_mat(&kh, &qh);
+        {
+            let sdata = match &mut scores.data {
+                crate::ggml::tensor::Storage::F32(vv) => vv,
+                _ => unreachable!(),
+            };
+            for s in sdata.iter_mut() {
+                *s *= scale;
+            }
+        }
+        softmax_rows(&mut scores);
+        // ctx[n, d] = scores · v — build vᵀ [d, m] rows for mul_mat.
+        let mut vt = vec![0.0f32; d * v.rows];
+        for r in 0..v.rows {
+            for c in 0..d {
+                vt[c * v.rows + r] = vh.as_f32()[r * d + c];
+            }
+        }
+        let vt = Tensor::f32(d, v.rows, vt);
+        let ctx = eng.mul_mat(&vt, &scores); // [n, d]
+        for r in 0..q.rows {
+            out[r * q.cols + h * d..r * q.cols + (h + 1) * d]
+                .copy_from_slice(ctx.row_f32(r));
+        }
+    }
+    Tensor::f32(q.rows, q.cols, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn rnd_feat(c: usize, h: usize, w: usize, seed: u64) -> Feat {
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        let mut d = vec![0.0f32; c * h * w];
+        r.fill_normal(&mut d, 1.0);
+        Feat::new(c, h, w, d)
+    }
+
+    #[test]
+    fn tokens_round_trip() {
+        let f = rnd_feat(3, 4, 5, 1);
+        let t = f.to_tokens();
+        assert_eq!((t.rows, t.cols), (20, 3));
+        let back = Feat::from_tokens(&t, 4, 5);
+        assert_eq!(back.data, f.data);
+    }
+
+    #[test]
+    fn silu_and_gelu_known_points() {
+        let mut v = [0.0f32, 1.0, -1.0];
+        silu(&mut v);
+        assert!((v[0]).abs() < 1e-7);
+        assert!((v[1] - 0.731058).abs() < 1e-5);
+        let mut g = [0.0f32, 1.0];
+        gelu(&mut g);
+        assert!(g[0].abs() < 1e-7);
+        assert!((g[1] - 0.841192).abs() < 1e-4);
+    }
+
+    #[test]
+    fn group_norm_zero_mean_unit_var() {
+        let f = rnd_feat(8, 4, 4, 2);
+        let gamma = vec![1.0; 8];
+        let beta = vec![0.0; 8];
+        let out = group_norm(&f, 4, &gamma, &beta);
+        let hw = 16;
+        for g in 0..4 {
+            let s = &out.data[g * 2 * hw..(g + 1) * 2 * hw];
+            let mean: f32 = s.iter().sum::<f32>() / s.len() as f32;
+            let var: f32 = s.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / s.len() as f32;
+            assert!(mean.abs() < 1e-4, "group {g} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "group {g} var {var}");
+        }
+    }
+
+    #[test]
+    fn layer_norm_rows_normalized() {
+        let f = rnd_feat(1, 4, 8, 3);
+        let t = Tensor::f32(4, 8, f.data.clone());
+        let out = layer_norm(&t, &vec![1.0; 8], &vec![0.0; 8]);
+        for r in 0..out.rows {
+            let row = out.row_f32(r);
+            let mean: f32 = row.iter().sum::<f32>() / row.len() as f32;
+            let var: f32 = row.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / row.len() as f32;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let f = rnd_feat(1, 3, 5, 4);
+        let mut t = Tensor::f32(3, 5, f.data.clone());
+        softmax_rows(&mut t);
+        for r in 0..3 {
+            let s: f32 = t.row_f32(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(t.row_f32(r).iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1×1 conv im2col is just the token matrix.
+        let f = rnd_feat(2, 3, 3, 5);
+        let cols = im2col(&f, 1, 1);
+        let toks = f.to_tokens();
+        assert_eq!(cols.as_f32(), toks.as_f32());
+    }
+
+    #[test]
+    fn conv2d_matches_direct_convolution() {
+        let f = rnd_feat(2, 5, 5, 6);
+        let mut r = Xoshiro256pp::seed_from_u64(7);
+        let mut wdata = vec![0.0f32; 3 * 2 * 9];
+        r.fill_normal(&mut wdata, 0.5);
+        let w = Tensor::f32(3, 18, wdata.clone());
+        let bias = vec![0.1f32, -0.2, 0.3];
+        let mut eng = HostEngine::new(1);
+        let out = conv2d(&mut eng, &w, &bias, &f, 3, 1);
+        assert_eq!((out.c, out.h, out.w), (3, 5, 5));
+        // Direct computation at interior pixel (2,2), channel 1.
+        let mut want = bias[1];
+        for c in 0..2 {
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    let iv = f.channel(c)[(2 + ky - 1) * 5 + (2 + kx - 1)];
+                    want += wdata[18 + c * 9 + ky * 3 + kx] * iv;
+                }
+            }
+        }
+        let got = out.channel(1)[2 * 5 + 2];
+        assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+    }
+
+    #[test]
+    fn strided_conv_halves_resolution() {
+        let f = rnd_feat(2, 8, 8, 8);
+        let w = Tensor::f32(2, 18, vec![0.1; 36]);
+        let mut eng = HostEngine::new(1);
+        let out = conv2d(&mut eng, &w, &[0.0, 0.0], &f, 3, 2);
+        assert_eq!((out.h, out.w), (4, 4));
+    }
+
+    #[test]
+    fn upsample_doubles() {
+        let f = rnd_feat(1, 2, 2, 9);
+        let up = upsample2x(&f);
+        assert_eq!((up.h, up.w), (4, 4));
+        assert_eq!(up.data[0], f.data[0]);
+        assert_eq!(up.data[1], f.data[0]);
+        assert_eq!(up.data[4], f.data[0]);
+    }
+
+    #[test]
+    fn attention_uniform_scores_average_values() {
+        // q ⟂ k (zeros) -> uniform softmax -> output = mean of V rows.
+        let q = Tensor::zeros(2, 4);
+        let k = Tensor::zeros(3, 4);
+        let v = Tensor::f32(3, 4, (0..12).map(|i| i as f32).collect());
+        let mut eng = HostEngine::new(1);
+        let out = attention(&mut eng, &q, &k, &v, 2);
+        let mean0 = (0.0 + 4.0 + 8.0) / 3.0;
+        assert!((out.as_f32()[0] - mean0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn engine_stats_accumulate() {
+        let mut eng = HostEngine::new(1);
+        let w = Tensor::f32(4, 32, vec![0.1; 128]).quantize(crate::ggml::DType::Q8_0);
+        let x = Tensor::f32(2, 32, vec![0.2; 64]);
+        eng.mul_mat(&w, &x);
+        assert_eq!(eng.stats().calls, 1);
+        assert_eq!(eng.stats().macs_by_dtype["Q8_0"], 4 * 32 * 2);
+    }
+
+    #[test]
+    fn imax_engine_offloads_quantized_only() {
+        let mut eng = ImaxEngine::new(crate::imax::ImaxConfig::fpga(1), 1);
+        let w_f = Tensor::f32(4, 32, vec![0.1; 128]);
+        let w_q = w_f.quantize(crate::ggml::DType::Q8_0);
+        let x = Tensor::f32(2, 32, vec![0.2; 64]);
+        eng.mul_mat(&w_f, &x);
+        assert_eq!(eng.stats().offloaded_calls, 0, "f32 stays on host");
+        eng.mul_mat(&w_q, &x);
+        assert_eq!(eng.stats().offloaded_calls, 1, "quantized goes to IMAX");
+        assert!(eng.stats().imax_phases.total() > 0);
+    }
+
+    #[test]
+    fn imax_engine_q8_0_bit_exact_with_host() {
+        // The Q8_0 lane kernel is bit-exact with the host GGML path, so
+        // the engines must agree exactly.
+        let f = rnd_feat(1, 8, 64, 10);
+        let w = Tensor::f32(8, 64, {
+            let mut r = Xoshiro256pp::seed_from_u64(11);
+            let mut v = vec![0.0f32; 512];
+            r.fill_normal(&mut v, 0.5);
+            v
+        })
+        .quantize(crate::ggml::DType::Q8_0);
+        let x = Tensor::f32(8, 64, f.data.clone());
+        let mut host = HostEngine::new(1);
+        let mut imax = ImaxEngine::new(crate::imax::ImaxConfig::fpga(1), 1);
+        let a = host.mul_mat(&w, &x);
+        let b = imax.mul_mat(&w, &x);
+        for (p, q) in a.as_f32().iter().zip(b.as_f32().iter()) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+    }
+}

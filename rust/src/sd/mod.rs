@@ -1,0 +1,30 @@
+//! Stable-Diffusion workload substrate (the `stable-diffusion.cpp` analog).
+//!
+//! Two layers of fidelity, per the substitution ledger in `DESIGN.md`:
+//!
+//! * **Paper scale** — [`arch`]/[`trace`] reconstruct the *mat-mul shape
+//!   trace* of the real SD v1.5 / SD-Turbo pipeline at 512×512 (U-Net
+//!   single step + VAE decoder + CLIP text encoder), with the dtype
+//!   assignment `stable-diffusion.cpp` uses (conv-as-im2col in F16,
+//!   attention score/value mat-muls in F32, linear weights quantized to
+//!   the model's type). [`profiler`] turns the trace into Table I and
+//!   the figure benches price it on every device model.
+//! * **Mini scale** — [`graph`], [`unet`], [`vae`], [`text`],
+//!   [`sampler`], [`pipeline`] implement a *runnable* latent-diffusion
+//!   pipeline (~4 M parameters, 128×128 output) with synthetic weights,
+//!   executed for real through the GGML kernels and (optionally) the
+//!   IMAX functional simulator — this generates Fig. 5's images and is
+//!   the end-to-end driver of `examples/generate_image.rs`.
+
+pub mod arch;
+pub mod graph;
+pub mod pipeline;
+pub mod profiler;
+pub mod sampler;
+pub mod text;
+pub mod trace;
+pub mod unet;
+pub mod vae;
+pub mod weights;
+
+pub use trace::{MatMulOp, OpCategory, QuantModel, WorkloadTrace};

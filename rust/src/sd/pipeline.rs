@@ -1,0 +1,232 @@
+//! End-to-end mini Stable-Diffusion pipeline (the runnable Fig. 5 driver).
+//!
+//! Text encode → U-Net denoise (1-step turbo or N-step DDIM) → VAE
+//! decode → RGB image, with the quantized mat-muls optionally offloaded
+//! to the IMAX functional simulator. The prompt seeds the latent through
+//! FNV hashing (so "a lovely cat" is reproducible forever), and the full
+//! run returns a [`RunReport`] with the mini analog of the paper's
+//! profiling (per-dtype times, offload counts, IMAX phase breakdown).
+
+use super::graph::{Feat, HostEngine, ImaxEngine, MatMulEngine};
+use super::sampler;
+use super::text::TextEncoder;
+use super::unet::{UNet, LATENT_C, LATENT_HW};
+use super::vae::VaeDecoder;
+use super::weights::WeightFactory;
+use super::trace::QuantModel;
+use crate::imax::timing::PhaseBreakdown;
+use crate::imax::ImaxConfig;
+use crate::util::rng::fnv1a64;
+
+/// Where the quantized mat-muls execute.
+#[derive(Debug, Clone)]
+pub enum Backend {
+    /// Everything on host GGML kernels with N threads.
+    Host {
+        /// Worker threads.
+        threads: usize,
+    },
+    /// Quantized ops on the IMAX lane simulator (paper §III-B policy).
+    Imax {
+        /// Simulated instance.
+        config: ImaxConfig,
+        /// Host threads for the residual ops.
+        threads: usize,
+    },
+}
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Weight seed (the "checkpoint").
+    pub weight_seed: u64,
+    /// Quantized model type (`None` = F16 reference).
+    pub model: Option<QuantModel>,
+    /// Denoising steps (1 = SD-Turbo mode, the paper's setting).
+    pub steps: usize,
+    /// Execution backend.
+    pub backend: Backend,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            weight_seed: 0x5D_7B0,
+            model: Some(QuantModel::Q8_0),
+            steps: 1,
+            backend: Backend::Host { threads: 2 },
+        }
+    }
+}
+
+/// Run metadata returned alongside the image.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Wall-clock seconds.
+    pub wall_seconds: f64,
+    /// Wall-clock seconds per weight dtype (mini Table I analog).
+    pub seconds_by_dtype: Vec<(&'static str, f64)>,
+    /// MACs per weight dtype.
+    pub macs_by_dtype: Vec<(&'static str, u64)>,
+    /// Total mat-mul calls.
+    pub matmul_calls: u64,
+    /// Calls offloaded to IMAX.
+    pub offloaded_calls: u64,
+    /// IMAX phase breakdown (zero for host runs).
+    pub imax_phases: PhaseBreakdown,
+    /// IMAX clock for converting phases to seconds (0 for host runs).
+    pub imax_clock_hz: f64,
+}
+
+/// The assembled pipeline.
+pub struct Pipeline {
+    /// Configuration it was built with.
+    pub config: PipelineConfig,
+    text: TextEncoder,
+    unet: UNet,
+    vae: VaeDecoder,
+}
+
+impl Pipeline {
+    /// Build all three models from the weight seed.
+    pub fn new(config: PipelineConfig) -> Pipeline {
+        let f = WeightFactory::new(config.weight_seed, config.model);
+        // The VAE is never quantized (sd.cpp policy): force F16 factory.
+        let f_vae = WeightFactory::new(config.weight_seed, None);
+        Pipeline {
+            text: TextEncoder::new(&f),
+            unet: UNet::new(&f),
+            vae: VaeDecoder::new(&f_vae),
+            config,
+        }
+    }
+
+    fn make_engine(&self) -> Box<dyn MatMulEngine> {
+        match &self.config.backend {
+            Backend::Host { threads } => Box::new(HostEngine::new(*threads)),
+            Backend::Imax { config, threads } => {
+                Box::new(ImaxEngine::new(config.clone(), *threads))
+            }
+        }
+    }
+
+    /// Generate an image for a prompt + seed. Returns the RGB image
+    /// (3×128×128, values in `[0,1]`) and the run report.
+    pub fn generate(&self, prompt: &str, seed: u64) -> (Feat, RunReport) {
+        let t0 = std::time::Instant::now();
+        let mut eng = self.make_engine();
+        let ctx = self.text.encode(eng.as_mut(), prompt);
+        let z_seed = seed ^ fnv1a64(prompt.as_bytes());
+        let z = sampler::initial_latent(z_seed, LATENT_C, LATENT_HW, LATENT_HW);
+        let x0 = if self.config.steps == 1 {
+            sampler::turbo_step(eng.as_mut(), &self.unet, &z, &ctx)
+        } else {
+            sampler::ddim(eng.as_mut(), &self.unet, &z, &ctx, self.config.steps)
+        };
+        let img = self.vae.decode(eng.as_mut(), &x0);
+        let stats = eng.stats();
+        let clock = match &self.config.backend {
+            Backend::Imax { config, .. } => config.clock_hz,
+            _ => 0.0,
+        };
+        let report = RunReport {
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            seconds_by_dtype: stats.seconds_by_dtype.iter().map(|(k, v)| (*k, *v)).collect(),
+            macs_by_dtype: stats.macs_by_dtype.iter().map(|(k, v)| (*k, *v)).collect(),
+            matmul_calls: stats.calls,
+            offloaded_calls: stats.offloaded_calls,
+            imax_phases: stats.imax_phases,
+            imax_clock_hz: clock,
+        };
+        (img, report)
+    }
+}
+
+/// Convert an RGB [`Feat`] to interleaved 8-bit pixels for PNG encoding.
+pub fn to_rgb8(img: &Feat) -> Vec<u8> {
+    assert_eq!(img.c, 3);
+    let hw = img.hw();
+    let mut out = vec![0u8; hw * 3];
+    for p in 0..hw {
+        for c in 0..3 {
+            out[p * 3 + c] = (img.data[c * hw + p].clamp(0.0, 1.0) * 255.0 + 0.5) as u8;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(model: Option<QuantModel>, backend: Backend) -> PipelineConfig {
+        PipelineConfig { weight_seed: 99, model, steps: 1, backend }
+    }
+
+    #[test]
+    fn generate_reproducible_image() {
+        let p = Pipeline::new(cfg(Some(QuantModel::Q8_0), Backend::Host { threads: 2 }));
+        let (a, ra) = p.generate("a lovely cat", 7);
+        let (b, _) = p.generate("a lovely cat", 7);
+        assert_eq!(a.data, b.data, "same prompt+seed => same image");
+        assert_eq!((a.c, a.h, a.w), (3, 128, 128));
+        assert!(ra.matmul_calls > 30, "pipeline ran: {} calls", ra.matmul_calls);
+        let (c, _) = p.generate("a lovely dog", 7);
+        assert_ne!(a.data, c.data, "prompt changes the image");
+    }
+
+    #[test]
+    fn imax_backend_q8_matches_host_bitexactly() {
+        let host = Pipeline::new(cfg(Some(QuantModel::Q8_0), Backend::Host { threads: 2 }));
+        let imax = Pipeline::new(cfg(
+            Some(QuantModel::Q8_0),
+            Backend::Imax { config: ImaxConfig::fpga(1), threads: 2 },
+        ));
+        let (a, _) = host.generate("a lovely cat", 7);
+        let (b, rb) = imax.generate("a lovely cat", 7);
+        assert!(rb.offloaded_calls > 0, "offload must happen");
+        assert!(rb.imax_phases.total() > 0);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "Q8_0 offload is bit-exact");
+        }
+    }
+
+    #[test]
+    fn imax_backend_q3k_close_to_host() {
+        // Q3_K offload uses the 5-bit-scale hardware path: close, not equal.
+        let host = Pipeline::new(cfg(Some(QuantModel::Q3K), Backend::Host { threads: 2 }));
+        let imax = Pipeline::new(cfg(
+            Some(QuantModel::Q3K),
+            Backend::Imax { config: ImaxConfig::fpga(1), threads: 2 },
+        ));
+        let (a, _) = host.generate("a lovely cat", 7);
+        let (b, rb) = imax.generate("a lovely cat", 7);
+        assert!(rb.offloaded_calls > 0);
+        let dot: f32 = a.data.iter().zip(&b.data).map(|(x, y)| x * y).sum();
+        let na = a.data.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let nb = b.data.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!(dot / (na * nb) > 0.99, "cosine {}", dot / (na * nb));
+    }
+
+    #[test]
+    fn f16_dominates_mini_profile_too() {
+        // Even at mini scale the dtype mix echoes Table I: F16 (convs +
+        // VAE) carries the most MACs.
+        let p = Pipeline::new(cfg(Some(QuantModel::Q8_0), Backend::Host { threads: 2 }));
+        let (_, r) = p.generate("profile me", 1);
+        let f16 = r.macs_by_dtype.iter().find(|(k, _)| *k == "F16").map(|(_, v)| *v).unwrap();
+        let total: u64 = r.macs_by_dtype.iter().map(|(_, v)| *v).sum();
+        assert!(f16 * 2 > total, "F16 {} of {}", f16, total);
+    }
+
+    #[test]
+    fn to_rgb8_layout() {
+        let mut img = Feat::zeros(3, 2, 2);
+        img.data[0] = 1.0; // R of pixel 0
+        img.data[4] = 0.5; // G of pixel 0 (channel 1, first pixel)
+        let px = to_rgb8(&img);
+        assert_eq!(px.len(), 12);
+        assert_eq!(px[0], 255);
+        assert_eq!(px[1], 128);
+    }
+}

@@ -1,0 +1,72 @@
+//! Table I regeneration: per-dtype share of dot-product execution time.
+//!
+//! §III-A profiles the dot kernels "calculated from pure computation
+//! time with memory copy overhead excluded". The proportions are
+//! workstation measurements; we price the trace on the Xeon model
+//! (whose throughputs were calibrated to reproduce the Q3_K column
+//! exactly — see `device::baseline`).
+
+use crate::device::baseline::CpuGpuModel;
+use crate::sd::trace::{QuantModel, WorkloadTrace};
+
+/// One Table I row: `(dtype name, percent of dot time)`.
+pub type Table1Row = Vec<(&'static str, f64)>;
+
+/// Compute the per-dtype share of dot time for a model on a device.
+pub fn table1_shares(trace: &WorkloadTrace, device: &CpuGpuModel, model: QuantModel) -> Table1Row {
+    let by = device.dot_seconds_by_dtype(trace, model);
+    let total: f64 = by.iter().map(|(_, s)| s).sum();
+    by.into_iter().map(|(d, s)| (d, 100.0 * s / total)).collect()
+}
+
+/// The paper's published Table I values for comparison columns.
+pub fn paper_table1(model: QuantModel) -> Vec<(&'static str, f64)> {
+    match model {
+        QuantModel::Q3K => vec![("F32", 30.7), ("F16", 59.0), ("Q3_K", 10.3)],
+        QuantModel::Q8_0 => vec![("F32", 21.8), ("F16", 62.0), ("Q8_0", 16.3)],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::baseline::xeon_w5;
+    use crate::sd::arch::sd_turbo_512;
+
+    #[test]
+    fn q3k_column_matches_paper_closely() {
+        let t = sd_turbo_512(1);
+        let shares = table1_shares(&t, &xeon_w5(), QuantModel::Q3K);
+        for (name, want) in paper_table1(QuantModel::Q3K) {
+            let got = shares.iter().find(|(n, _)| *n == name).map(|(_, v)| *v).unwrap();
+            assert!((got - want).abs() < 2.0, "{name}: got {got}, paper {want}");
+        }
+    }
+
+    #[test]
+    fn q8_column_orderings_match_paper() {
+        // The Q8_0 column cannot be matched simultaneously with the Q3_K
+        // column under one static throughput model (see EXPERIMENTS.md);
+        // orderings and rough levels must hold.
+        let t = sd_turbo_512(1);
+        let shares = table1_shares(&t, &xeon_w5(), QuantModel::Q8_0);
+        let get = |n: &str| shares.iter().find(|(m, _)| *m == n).map(|(_, v)| *v).unwrap();
+        assert!(get("F16") > get("F32"), "F16 dominates");
+        assert!(get("F32") > get("Q8_0"), "F32 second");
+        assert!(get("Q8_0") > 10.0 && get("Q8_0") < 20.0, "Q8_0 share {}", get("Q8_0"));
+        // Q8_0 model's quantized share exceeds the Q3_K model's (paper:
+        // 16.3 vs 10.3).
+        let q3_shares = table1_shares(&t, &xeon_w5(), QuantModel::Q3K);
+        let q3 = q3_shares.iter().find(|(n, _)| *n == "Q3_K").map(|(_, v)| *v).unwrap();
+        assert!(get("Q8_0") > q3);
+    }
+
+    #[test]
+    fn shares_sum_to_100() {
+        let t = sd_turbo_512(1);
+        for m in [QuantModel::Q3K, QuantModel::Q8_0] {
+            let s: f64 = table1_shares(&t, &xeon_w5(), m).iter().map(|(_, v)| v).sum();
+            assert!((s - 100.0).abs() < 1e-9);
+        }
+    }
+}

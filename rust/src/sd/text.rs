@@ -1,0 +1,186 @@
+//! Mini CLIP-style text encoder: prompt → `[77, 256]` context tensor.
+//!
+//! Byte-level hashing tokenizer (deterministic, dependency-free), learned
+//! synthetic embeddings, and two pre-LN transformer layers whose linear
+//! weights are quantized per the run's model — so the text encoder
+//! exercises the same offload path the paper's CLIP does.
+
+use super::graph::{attention, gelu, layer_norm, MatMulEngine};
+use super::weights::WeightFactory;
+use crate::ggml::Tensor;
+use crate::util::rng::fnv1a64;
+
+/// Fixed context length (matching SD's CLIP).
+pub const CTX_LEN: usize = 77;
+/// Token vocabulary (byte-hash buckets).
+pub const VOCAB: usize = 256;
+/// Embedding width.
+pub const DIM: usize = 256;
+/// Attention heads.
+pub const HEADS: usize = 4;
+/// Transformer layers.
+pub const LAYERS: usize = 2;
+
+/// Hash-bucket tokenizer: words → `[0, VOCAB)` ids, padded/truncated to
+/// [`CTX_LEN`].
+pub fn tokenize(prompt: &str) -> Vec<usize> {
+    let mut toks: Vec<usize> = prompt
+        .split_whitespace()
+        .map(|w| (fnv1a64(w.as_bytes()) % (VOCAB as u64 - 2)) as usize + 2)
+        .collect();
+    toks.insert(0, 0); // BOS
+    toks.truncate(CTX_LEN - 1);
+    toks.push(1); // EOS
+    while toks.len() < CTX_LEN {
+        toks.push(1);
+    }
+    toks
+}
+
+/// The encoder weights.
+pub struct TextEncoder {
+    emb: Tensor,
+    pos: Tensor,
+    layers: Vec<Layer>,
+    final_norm: (Vec<f32>, Vec<f32>),
+}
+
+struct Layer {
+    ln1: (Vec<f32>, Vec<f32>),
+    wq: Tensor,
+    wk: Tensor,
+    wv: Tensor,
+    wo: Tensor,
+    ln2: (Vec<f32>, Vec<f32>),
+    mlp1: Tensor,
+    mlp1_b: Vec<f32>,
+    mlp2: Tensor,
+    mlp2_b: Vec<f32>,
+}
+
+impl TextEncoder {
+    /// Build from a weight factory.
+    pub fn new(f: &WeightFactory) -> TextEncoder {
+        let layers = (0..LAYERS)
+            .map(|l| Layer {
+                ln1: f.norm(&format!("text.l{l}.ln1"), DIM),
+                wq: f.linear(&format!("text.l{l}.q"), DIM, DIM),
+                wk: f.linear(&format!("text.l{l}.k"), DIM, DIM),
+                wv: f.linear(&format!("text.l{l}.v"), DIM, DIM),
+                wo: f.linear(&format!("text.l{l}.o"), DIM, DIM),
+                ln2: f.norm(&format!("text.l{l}.ln2"), DIM),
+                mlp1: f.linear(&format!("text.l{l}.mlp1"), DIM, 2 * DIM),
+                mlp1_b: f.bias(&format!("text.l{l}.mlp1"), 2 * DIM),
+                mlp2: f.linear(&format!("text.l{l}.mlp2"), 2 * DIM, DIM),
+                mlp2_b: f.bias(&format!("text.l{l}.mlp2"), DIM),
+            })
+            .collect();
+        TextEncoder {
+            emb: f.embedding("text.emb", VOCAB, DIM),
+            pos: f.embedding("text.pos", CTX_LEN, DIM),
+            layers,
+            final_norm: f.norm("text.final", DIM),
+        }
+    }
+
+    /// Encode a prompt into the `[77, 256]` context.
+    pub fn encode(&self, eng: &mut dyn MatMulEngine, prompt: &str) -> Tensor {
+        let toks = tokenize(prompt);
+        let mut x = vec![0.0f32; CTX_LEN * DIM];
+        for (i, &t) in toks.iter().enumerate() {
+            for d in 0..DIM {
+                x[i * DIM + d] =
+                    self.emb.as_f32()[t * DIM + d] + self.pos.as_f32()[i * DIM + d];
+            }
+        }
+        let mut h = Tensor::f32(CTX_LEN, DIM, x);
+        for l in &self.layers {
+            // Pre-LN self-attention with residual.
+            let n = layer_norm(&h, &l.ln1.0, &l.ln1.1);
+            let q = eng.mul_mat(&l.wq, &n);
+            let k = eng.mul_mat(&l.wk, &n);
+            let v = eng.mul_mat(&l.wv, &n);
+            let a = attention(eng, &q, &k, &v, HEADS);
+            let o = eng.mul_mat(&l.wo, &a);
+            let mut hd = h.as_f32().to_vec();
+            for (dst, src) in hd.iter_mut().zip(o.as_f32()) {
+                *dst += src;
+            }
+            h = Tensor::f32(CTX_LEN, DIM, hd);
+            // Pre-LN MLP with residual.
+            let n2 = layer_norm(&h, &l.ln2.0, &l.ln2.1);
+            let mut m1 = eng.mul_mat(&l.mlp1, &n2);
+            add_bias(&mut m1, &l.mlp1_b);
+            if let crate::ggml::tensor::Storage::F32(vv) = &mut m1.data {
+                gelu(vv);
+            }
+            let mut m2 = eng.mul_mat(&l.mlp2, &m1);
+            add_bias(&mut m2, &l.mlp2_b);
+            let mut hd = h.as_f32().to_vec();
+            for (dst, src) in hd.iter_mut().zip(m2.as_f32()) {
+                *dst += src;
+            }
+            h = Tensor::f32(CTX_LEN, DIM, hd);
+        }
+        layer_norm(&h, &self.final_norm.0, &self.final_norm.1)
+    }
+}
+
+fn add_bias(t: &mut Tensor, bias: &[f32]) {
+    let cols = t.cols;
+    if let crate::ggml::tensor::Storage::F32(v) = &mut t.data {
+        for row in v.chunks_mut(cols) {
+            for (x, b) in row.iter_mut().zip(bias) {
+                *x += b;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sd::graph::HostEngine;
+
+    #[test]
+    fn tokenizer_is_deterministic_and_padded() {
+        let a = tokenize("a lovely cat");
+        let b = tokenize("a lovely cat");
+        assert_eq!(a, b);
+        assert_eq!(a.len(), CTX_LEN);
+        assert_eq!(a[0], 0, "BOS");
+        assert!(a.iter().all(|&t| t < VOCAB));
+        assert_ne!(tokenize("a lovely cat"), tokenize("a lovely dog"));
+    }
+
+    #[test]
+    fn encode_shape_and_determinism() {
+        let f = WeightFactory::new(42, None);
+        let enc = TextEncoder::new(&f);
+        let mut eng = HostEngine::new(1);
+        let a = enc.encode(&mut eng, "a lovely cat");
+        assert_eq!((a.rows, a.cols), (CTX_LEN, DIM));
+        let mut eng2 = HostEngine::new(2);
+        let b = enc.encode(&mut eng2, "a lovely cat");
+        assert_eq!(a.as_f32(), b.as_f32(), "thread count must not change result");
+    }
+
+    #[test]
+    fn different_prompts_different_contexts() {
+        let f = WeightFactory::new(42, None);
+        let enc = TextEncoder::new(&f);
+        let mut eng = HostEngine::new(1);
+        let a = enc.encode(&mut eng, "a lovely cat");
+        let b = enc.encode(&mut eng, "an angry robot");
+        assert_ne!(a.as_f32(), b.as_f32());
+    }
+
+    #[test]
+    fn outputs_are_finite_and_normalized() {
+        let f = WeightFactory::new(42, Some(crate::sd::trace::QuantModel::Q8_0));
+        let enc = TextEncoder::new(&f);
+        let mut eng = HostEngine::new(1);
+        let a = enc.encode(&mut eng, "quantized path");
+        assert!(a.as_f32().iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,230 @@
+//! Mat-mul workload trace: the unit of performance modelling.
+//!
+//! The paper evaluates the dot-product kernels of `stable-diffusion.cpp`
+//! generating one 512×512 image (SD-Turbo, 1 denoising step). We do not
+//! ship the 2.5 GB model, but every performance-relevant property of the
+//! workload is determined by the *mat-mul shape trace* — the (M, N, K)
+//! and weight dtype of every `ggml_mul_mat` call — which is fully
+//! derivable from the published SD v1.5 architecture. [`super::arch`]
+//! reconstructs that trace; this module defines the op/trace types, the
+//! dtype-assignment policy, and the per-dtype aggregation that Table I
+//! and the figure benches consume.
+
+use crate::ggml::DType;
+use std::collections::BTreeMap;
+
+/// What produced a mat-mul (determines its GGML dtype).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OpCategory {
+    /// U-Net conv lowered to im2col GEMM (F16 weights in sd.cpp).
+    ConvIm2col,
+    /// U-Net attention/projection/FF linear (quantized weights).
+    Linear,
+    /// Attention activation×activation mat-mul (QKᵀ and attn·V — F32).
+    AttnScores,
+    /// Time-embedding MLP linear (quantized).
+    TimeEmbed,
+    /// VAE decoder conv im2col (F16; the VAE is not quantized by sd.cpp).
+    VaeConv,
+    /// VAE attention activation mat-mul (F32).
+    VaeAttn,
+    /// CLIP text-encoder linear (quantized).
+    TextLinear,
+    /// CLIP attention activation mat-mul (F32).
+    TextAttn,
+}
+
+/// Which quantized model file the run uses (the paper evaluates both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QuantModel {
+    /// 3-bit k-quants ("Q3_K model").
+    Q3K,
+    /// 8-bit blocks ("Q8_0 model").
+    Q8_0,
+}
+
+impl QuantModel {
+    /// The weight dtype quantized layers carry in this model.
+    pub fn weight_dtype(self) -> DType {
+        match self {
+            QuantModel::Q3K => DType::Q3K,
+            QuantModel::Q8_0 => DType::Q8_0,
+        }
+    }
+
+    /// Display name as the paper writes it.
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantModel::Q3K => "Q3_K",
+            QuantModel::Q8_0 => "Q8_0",
+        }
+    }
+}
+
+/// One logical `ggml_mul_mat` call: `out[N, M] = W[M, K] · X[N, K]ᵀ`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatMulOp {
+    /// Layer name for reports (e.g. `down0.res1.conv1`).
+    pub name: String,
+    /// Output features (weight rows).
+    pub m: usize,
+    /// Activation rows (tokens / pixels).
+    pub n: usize,
+    /// Contraction length.
+    pub k: usize,
+    /// Origin of the op.
+    pub category: OpCategory,
+    /// Batched repetitions (e.g. attention heads).
+    pub repeats: usize,
+}
+
+impl MatMulOp {
+    /// Construct with `repeats = 1`.
+    pub fn new(name: impl Into<String>, m: usize, n: usize, k: usize, category: OpCategory) -> Self {
+        MatMulOp { name: name.into(), m, n, k, category, repeats: 1 }
+    }
+
+    /// Multiply-accumulate count (one MAC = 2 FLOPs).
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.n as u64 * self.k as u64 * self.repeats as u64
+    }
+
+    /// The dtype this op's weights carry under a given quantized model —
+    /// the `stable-diffusion.cpp` assignment policy (§III-A/B): linear
+    /// weights quantized; conv im2col and VAE in F16; attention
+    /// activation×activation mat-muls in F32.
+    pub fn dtype(&self, model: QuantModel) -> DType {
+        match self.category {
+            OpCategory::ConvIm2col | OpCategory::VaeConv => DType::F16,
+            OpCategory::AttnScores | OpCategory::VaeAttn | OpCategory::TextAttn => DType::F32,
+            OpCategory::Linear | OpCategory::TimeEmbed | OpCategory::TextLinear => {
+                // Block-quantized dots need K divisible by the block size
+                // (32 for Q8_0, 256 for k-quants); layers that do not
+                // qualify stay F16, mirroring sd.cpp's per-tensor fallback.
+                // (Table I accordingly has no Q8_0 row in the Q3_K model.)
+                let d = model.weight_dtype();
+                if self.k % d.block_size() == 0 {
+                    d
+                } else {
+                    DType::F16
+                }
+            }
+        }
+    }
+
+    /// True when this op is offloaded to IMAX under the paper's policy
+    /// (only the model's quantized kernels are offloaded, §III-B).
+    pub fn offloaded(&self, model: QuantModel) -> bool {
+        self.dtype(model) == model.weight_dtype()
+    }
+}
+
+/// A full pipeline trace (one image generation).
+#[derive(Debug, Clone, Default)]
+pub struct WorkloadTrace {
+    /// Ops in execution order.
+    pub ops: Vec<MatMulOp>,
+}
+
+impl WorkloadTrace {
+    /// Total MACs.
+    pub fn total_macs(&self) -> u64 {
+        self.ops.iter().map(|o| o.macs()).sum()
+    }
+
+    /// MACs grouped by effective dtype under a model.
+    pub fn macs_by_dtype(&self, model: QuantModel) -> BTreeMap<&'static str, u64> {
+        let mut out = BTreeMap::new();
+        for op in &self.ops {
+            *out.entry(op.dtype(model).name()).or_insert(0) += op.macs();
+        }
+        out
+    }
+
+    /// MACs offloaded to IMAX under a model (the numerator of the
+    /// paper's "offload ratio of less than 20 %").
+    pub fn offloaded_macs(&self, model: QuantModel) -> u64 {
+        self.ops.iter().filter(|o| o.offloaded(model)).map(|o| o.macs()).sum()
+    }
+
+    /// The offloaded ops only.
+    pub fn offloaded_ops(&self, model: QuantModel) -> Vec<&MatMulOp> {
+        self.ops.iter().filter(|o| o.offloaded(model)).collect()
+    }
+
+    /// Weight + activation bytes a device touches for an op set — used by
+    /// roofline-style device models (N.B. activations counted once).
+    pub fn op_bytes(op: &MatMulOp, model: QuantModel) -> u64 {
+        let d = op.dtype(model);
+        let w = op.m as u64 * d.row_bytes(op.k.next_multiple_of(d.block_size())) as u64
+            / op.k.next_multiple_of(d.block_size()) as u64
+            * op.k as u64;
+        let a = op.n as u64 * op.k as u64 * 4;
+        (w + a) * op.repeats as u64
+    }
+
+    /// Concatenate traces.
+    pub fn extend(&mut self, other: WorkloadTrace) {
+        self.ops.extend(other.ops);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macs_include_repeats() {
+        let mut op = MatMulOp::new("attn", 64, 64, 40, OpCategory::AttnScores);
+        assert_eq!(op.macs(), 64 * 64 * 40);
+        op.repeats = 8;
+        assert_eq!(op.macs(), 8 * 64 * 64 * 40);
+    }
+
+    #[test]
+    fn dtype_policy_conv_is_f16_attn_is_f32() {
+        let conv = MatMulOp::new("c", 320, 4096, 2880, OpCategory::ConvIm2col);
+        let attn = MatMulOp::new("a", 4096, 4096, 40, OpCategory::AttnScores);
+        for m in [QuantModel::Q3K, QuantModel::Q8_0] {
+            assert_eq!(conv.dtype(m), DType::F16);
+            assert_eq!(attn.dtype(m), DType::F32);
+            assert!(!conv.offloaded(m));
+            assert!(!attn.offloaded(m));
+        }
+    }
+
+    #[test]
+    fn dtype_policy_linear_quantized_with_fallback() {
+        let fat = MatMulOp::new("l", 320, 4096, 768, OpCategory::Linear);
+        assert_eq!(fat.dtype(QuantModel::Q3K), DType::Q3K);
+        assert_eq!(fat.dtype(QuantModel::Q8_0), DType::Q8_0);
+        // K = 320: not a multiple of 256 -> Q3_K falls back to F16.
+        let thin = MatMulOp::new("l", 320, 4096, 320, OpCategory::Linear);
+        assert_eq!(thin.dtype(QuantModel::Q3K), DType::F16);
+        assert_eq!(thin.dtype(QuantModel::Q8_0), DType::Q8_0);
+        // K = 40: not even a Q8_0 block -> F16.
+        let tiny = MatMulOp::new("l", 8, 8, 40, OpCategory::Linear);
+        assert_eq!(tiny.dtype(QuantModel::Q8_0), DType::F16);
+    }
+
+    #[test]
+    fn offload_filter_matches_model_dtype() {
+        // A Q3_K-fallback-to-Q8_0 layer is NOT offloaded in the Q3_K model
+        // (the lane is configured for the Q3_K kernel).
+        let thin = MatMulOp::new("l", 320, 4096, 320, OpCategory::Linear);
+        assert!(!thin.offloaded(QuantModel::Q3K));
+        assert!(thin.offloaded(QuantModel::Q8_0));
+    }
+
+    #[test]
+    fn totals_aggregate() {
+        let mut t = WorkloadTrace::default();
+        t.ops.push(MatMulOp::new("c", 10, 10, 32, OpCategory::ConvIm2col));
+        t.ops.push(MatMulOp::new("l", 10, 10, 256, OpCategory::Linear));
+        assert_eq!(t.total_macs(), 100 * 32 + 100 * 256);
+        let by = t.macs_by_dtype(QuantModel::Q3K);
+        assert_eq!(by["F16"], 100 * 32);
+        assert_eq!(by["Q3_K"], 100 * 256);
+        assert_eq!(t.offloaded_macs(QuantModel::Q3K), 100 * 256);
+    }
+}

@@ -1,0 +1,370 @@
+//! Mini latent-diffusion U-Net (the SD-Turbo analog at toy scale).
+//!
+//! 4×16×16 latents, channel schedule 64→128, one spatial transformer at
+//! the 8×8 bottleneck with inner dim 256 so its q/k/v/ff linears are
+//! k-quant eligible (K ∈ {256, 512}) — the same layers the paper
+//! offloads. Convs run F16 im2col GEMMs; attention scores run F32;
+//! linears run Q8_0/Q3_K per the run's model. Structure per layer
+//! mirrors SD v1.5 (res-blocks with time embedding, pre-norm transformer
+//! with self-attn, cross-attn to the 77-token context, GEGLU-ish FF).
+
+use super::graph::{
+    attention, conv2d, group_norm, silu, upsample2x, Feat, MatMulEngine,
+};
+use super::text::{CTX_LEN, DIM as TEXT_DIM};
+use super::weights::WeightFactory;
+use crate::ggml::Tensor;
+
+/// Latent channels.
+pub const LATENT_C: usize = 4;
+/// Latent spatial size.
+pub const LATENT_HW: usize = 16;
+/// Base channels.
+const C0: usize = 64;
+/// Bottleneck channels.
+const C1: usize = 128;
+/// Transformer inner dim (k-quant eligible).
+const TD: usize = 256;
+/// Attention heads in the bottleneck transformer.
+const HEADS: usize = 4;
+/// GroupNorm groups.
+const GROUPS: usize = 8;
+/// Time-embedding dim.
+pub const TEMB: usize = 256;
+
+struct ResBlock {
+    norm1: (Vec<f32>, Vec<f32>),
+    conv1: Tensor,
+    conv1_b: Vec<f32>,
+    emb: Tensor,
+    emb_b: Vec<f32>,
+    norm2: (Vec<f32>, Vec<f32>),
+    conv2: Tensor,
+    conv2_b: Vec<f32>,
+    skip: Option<(Tensor, Vec<f32>)>,
+    cin: usize,
+    cout: usize,
+}
+
+impl ResBlock {
+    fn new(f: &WeightFactory, name: &str, cin: usize, cout: usize) -> ResBlock {
+        ResBlock {
+            norm1: f.norm(&format!("{name}.n1"), cin),
+            conv1: f.conv(&format!("{name}.c1"), cin, cout, 3),
+            conv1_b: f.bias(&format!("{name}.c1"), cout),
+            emb: f.linear(&format!("{name}.emb"), TEMB, cout),
+            emb_b: f.bias(&format!("{name}.emb"), cout),
+            norm2: f.norm(&format!("{name}.n2"), cout),
+            conv2: f.conv(&format!("{name}.c2"), cout, cout, 3),
+            conv2_b: f.bias(&format!("{name}.c2"), cout),
+            skip: (cin != cout).then(|| {
+                (f.conv(&format!("{name}.skip"), cin, cout, 1), f.bias(&format!("{name}.skip"), cout))
+            }),
+            cin,
+            cout,
+        }
+    }
+
+    fn forward(&self, eng: &mut dyn MatMulEngine, x: &Feat, temb: &Tensor) -> Feat {
+        debug_assert_eq!(x.c, self.cin);
+        let mut h = group_norm(x, GROUPS, &self.norm1.0, &self.norm1.1);
+        silu(&mut h.data);
+        let mut h = conv2d(eng, &self.conv1, &self.conv1_b, &h, 3, 1);
+        // Add the per-channel time embedding projection.
+        let e = eng.mul_mat(&self.emb, temb); // [1, cout]
+        let hw = h.hw();
+        for c in 0..self.cout {
+            let ev = e.as_f32()[c] + self.emb_b[c];
+            for p in 0..hw {
+                h.data[c * hw + p] += ev;
+            }
+        }
+        let mut h2 = group_norm(&h, GROUPS, &self.norm2.0, &self.norm2.1);
+        silu(&mut h2.data);
+        let h2 = conv2d(eng, &self.conv2, &self.conv2_b, &h2, 3, 1);
+        let res = match &self.skip {
+            Some((w, b)) => conv2d(eng, w, b, x, 1, 1),
+            None => x.clone(),
+        };
+        h2.add(&res)
+    }
+}
+
+struct Transformer {
+    norm: (Vec<f32>, Vec<f32>),
+    proj_in: Tensor,
+    proj_in_b: Vec<f32>,
+    wq: Tensor,
+    wk: Tensor,
+    wv: Tensor,
+    wo: Tensor,
+    xq: Tensor,
+    xk: Tensor,
+    xv: Tensor,
+    xo: Tensor,
+    ff1: Tensor,
+    ff1_b: Vec<f32>,
+    ff2: Tensor,
+    ff2_b: Vec<f32>,
+    proj_out: Tensor,
+    proj_out_b: Vec<f32>,
+}
+
+impl Transformer {
+    fn new(f: &WeightFactory, name: &str, ch: usize) -> Transformer {
+        Transformer {
+            norm: f.norm(&format!("{name}.norm"), ch),
+            proj_in: f.linear(&format!("{name}.proj_in"), ch, TD),
+            proj_in_b: f.bias(&format!("{name}.proj_in"), TD),
+            wq: f.linear(&format!("{name}.attn1.q"), TD, TD),
+            wk: f.linear(&format!("{name}.attn1.k"), TD, TD),
+            wv: f.linear(&format!("{name}.attn1.v"), TD, TD),
+            wo: f.linear(&format!("{name}.attn1.o"), TD, TD),
+            xq: f.linear(&format!("{name}.attn2.q"), TD, TD),
+            xk: f.linear(&format!("{name}.attn2.k"), TEXT_DIM, TD),
+            xv: f.linear(&format!("{name}.attn2.v"), TEXT_DIM, TD),
+            xo: f.linear(&format!("{name}.attn2.o"), TD, TD),
+            ff1: f.linear(&format!("{name}.ff1"), TD, 2 * TD),
+            ff1_b: f.bias(&format!("{name}.ff1"), 2 * TD),
+            ff2: f.linear(&format!("{name}.ff2"), TD, TD),
+            ff2_b: f.bias(&format!("{name}.ff2"), TD),
+            proj_out: f.linear(&format!("{name}.proj_out"), TD, ch),
+            proj_out_b: f.bias(&format!("{name}.proj_out"), ch),
+        }
+    }
+
+    fn forward(&self, eng: &mut dyn MatMulEngine, x: &Feat, ctx: &Tensor) -> Feat {
+        debug_assert_eq!(ctx.rows, CTX_LEN);
+        let normed = group_norm(x, GROUPS, &self.norm.0, &self.norm.1);
+        let toks = normed.to_tokens(); // [hw, ch]
+        let mut h = eng.mul_mat(&self.proj_in, &toks); // [hw, TD]
+        add_bias(&mut h, &self.proj_in_b);
+
+        // Self-attention + residual.
+        let q = eng.mul_mat(&self.wq, &h);
+        let k = eng.mul_mat(&self.wk, &h);
+        let v = eng.mul_mat(&self.wv, &h);
+        let a = attention(eng, &q, &k, &v, HEADS);
+        let o = eng.mul_mat(&self.wo, &a);
+        h = add_t(&h, &o);
+
+        // Cross-attention to the text context + residual.
+        let q = eng.mul_mat(&self.xq, &h);
+        let k = eng.mul_mat(&self.xk, ctx);
+        let v = eng.mul_mat(&self.xv, ctx);
+        let a = attention(eng, &q, &k, &v, HEADS);
+        let o = eng.mul_mat(&self.xo, &a);
+        h = add_t(&h, &o);
+
+        // Gated feed-forward + residual.
+        let mut m = eng.mul_mat(&self.ff1, &h); // [hw, 2*TD]
+        add_bias(&mut m, &self.ff1_b);
+        // GEGLU: first half gated by GELU of second half.
+        let hw = m.rows;
+        let mut gated = vec![0.0f32; hw * TD];
+        {
+            let md = m.as_f32();
+            for r in 0..hw {
+                for c in 0..TD {
+                    let val = md[r * 2 * TD + c];
+                    let mut gate = [md[r * 2 * TD + TD + c]];
+                    super::graph::gelu(&mut gate);
+                    gated[r * TD + c] = val * gate[0];
+                }
+            }
+        }
+        let mut m2 = eng.mul_mat(&self.ff2, &Tensor::f32(hw, TD, gated));
+        add_bias(&mut m2, &self.ff2_b);
+        h = add_t(&h, &m2);
+
+        let mut out = eng.mul_mat(&self.proj_out, &h); // [hw, ch]
+        add_bias(&mut out, &self.proj_out_b);
+        Feat::from_tokens(&out, x.h, x.w).add(x)
+    }
+}
+
+fn add_bias(t: &mut Tensor, bias: &[f32]) {
+    let cols = t.cols;
+    if let crate::ggml::tensor::Storage::F32(v) = &mut t.data {
+        for row in v.chunks_mut(cols) {
+            for (x, b) in row.iter_mut().zip(bias) {
+                *x += b;
+            }
+        }
+    }
+}
+
+fn add_t(a: &Tensor, b: &Tensor) -> Tensor {
+    let v = a.as_f32().iter().zip(b.as_f32()).map(|(x, y)| x + y).collect();
+    Tensor::f32(a.rows, a.cols, v)
+}
+
+/// Sinusoidal timestep embedding (dim 64), as SD uses.
+pub fn timestep_embedding(t: f32) -> Tensor {
+    let half = 32;
+    let mut v = vec![0.0f32; 64];
+    for i in 0..half {
+        let freq = (-(i as f32) * (10000.0f32).ln() / half as f32).exp();
+        v[i] = (t * freq).cos();
+        v[half + i] = (t * freq).sin();
+    }
+    Tensor::f32(1, 64, v)
+}
+
+/// The mini U-Net.
+pub struct UNet {
+    conv_in: (Tensor, Vec<f32>),
+    temb1: Tensor,
+    temb1_b: Vec<f32>,
+    temb2: Tensor,
+    temb2_b: Vec<f32>,
+    rb_down0: ResBlock,
+    down: (Tensor, Vec<f32>),
+    rb_down1: ResBlock,
+    transformer: Transformer,
+    rb_mid: ResBlock,
+    rb_up0: ResBlock,
+    rb_up1: ResBlock,
+    norm_out: (Vec<f32>, Vec<f32>),
+    conv_out: (Tensor, Vec<f32>),
+}
+
+impl UNet {
+    /// Build from a factory.
+    pub fn new(f: &WeightFactory) -> UNet {
+        UNet {
+            conv_in: (f.conv("unet.conv_in", LATENT_C, C0, 3), f.bias("unet.conv_in", C0)),
+            temb1: f.linear("unet.temb1", 64, TEMB),
+            temb1_b: f.bias("unet.temb1", TEMB),
+            temb2: f.linear("unet.temb2", TEMB, TEMB),
+            temb2_b: f.bias("unet.temb2", TEMB),
+            rb_down0: ResBlock::new(f, "unet.down0", C0, C0),
+            down: (f.conv("unet.down", C0, C1, 3), f.bias("unet.down", C1)),
+            rb_down1: ResBlock::new(f, "unet.down1", C1, C1),
+            transformer: Transformer::new(f, "unet.mid.tf", C1),
+            rb_mid: ResBlock::new(f, "unet.mid.rb", C1, C1),
+            rb_up0: ResBlock::new(f, "unet.up0", C1 + C1, C1),
+            rb_up1: ResBlock::new(f, "unet.up1", C1 + C0, C0),
+            norm_out: f.norm("unet.norm_out", C0),
+            conv_out: (f.conv("unet.conv_out", C0, LATENT_C, 3), f.bias("unet.conv_out", LATENT_C)),
+        }
+    }
+
+    /// Predict noise for a latent at timestep `t` with text context.
+    pub fn forward(&self, eng: &mut dyn MatMulEngine, latent: &Feat, t: f32, ctx: &Tensor) -> Feat {
+        assert_eq!((latent.c, latent.h, latent.w), (LATENT_C, LATENT_HW, LATENT_HW));
+        // Time embedding MLP.
+        let te = timestep_embedding(t);
+        let mut e = eng.mul_mat(&self.temb1, &te);
+        add_bias(&mut e, &self.temb1_b);
+        if let crate::ggml::tensor::Storage::F32(v) = &mut e.data {
+            silu(v);
+        }
+        let mut e = eng.mul_mat(&self.temb2, &e);
+        add_bias(&mut e, &self.temb2_b);
+        let temb = e; // [1, TEMB]
+
+        // Encoder.
+        let h0 = conv2d(eng, &self.conv_in.0, &self.conv_in.1, latent, 3, 1); // C0@16
+        let h1 = self.rb_down0.forward(eng, &h0, &temb); // C0@16 (skip)
+        let h2 = conv2d(eng, &self.down.0, &self.down.1, &h1, 3, 2); // C1@8
+        let h3 = self.rb_down1.forward(eng, &h2, &temb); // C1@8 (skip)
+
+        // Bottleneck.
+        let m = self.transformer.forward(eng, &h3, ctx);
+        let m = self.rb_mid.forward(eng, &m, &temb); // C1@8
+
+        // Decoder with skip concats.
+        let u0 = self.rb_up0.forward(eng, &m.concat(&h3), &temb); // C1@8
+        let u0 = upsample2x(&u0); // C1@16
+        let u1 = self.rb_up1.forward(eng, &u0.concat(&h1), &temb); // C0@16
+
+        let mut out = group_norm(&u1, GROUPS, &self.norm_out.0, &self.norm_out.1);
+        silu(&mut out.data);
+        conv2d(eng, &self.conv_out.0, &self.conv_out.1, &out, 3, 1) // 4@16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sd::graph::{HostEngine, ImaxEngine};
+    use crate::sd::trace::QuantModel;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn latent(seed: u64) -> Feat {
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        let mut d = vec![0.0f32; LATENT_C * LATENT_HW * LATENT_HW];
+        r.fill_normal(&mut d, 1.0);
+        Feat::new(LATENT_C, LATENT_HW, LATENT_HW, d)
+    }
+
+    fn ctx(seed: u64) -> Tensor {
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        let mut d = vec![0.0f32; CTX_LEN * TEXT_DIM];
+        r.fill_normal(&mut d, 0.3);
+        Tensor::f32(CTX_LEN, TEXT_DIM, d)
+    }
+
+    #[test]
+    fn forward_shape_and_determinism() {
+        let f = WeightFactory::new(1, None);
+        let unet = UNet::new(&f);
+        let mut eng = HostEngine::new(2);
+        let out = unet.forward(&mut eng, &latent(5), 999.0, &ctx(6));
+        assert_eq!((out.c, out.h, out.w), (LATENT_C, LATENT_HW, LATENT_HW));
+        assert!(out.data.iter().all(|v| v.is_finite()));
+        let mut eng2 = HostEngine::new(1);
+        let out2 = unet.forward(&mut eng2, &latent(5), 999.0, &ctx(6));
+        assert_eq!(out.data, out2.data);
+    }
+
+    #[test]
+    fn quantized_unet_tracks_f16_reference() {
+        let latent5 = latent(5);
+        let c = ctx(6);
+        let reference = {
+            let f = WeightFactory::new(1, None);
+            let unet = UNet::new(&f);
+            let mut eng = HostEngine::new(2);
+            unet.forward(&mut eng, &latent5, 500.0, &c)
+        };
+        for m in [QuantModel::Q8_0, QuantModel::Q3K] {
+            let f = WeightFactory::new(1, Some(m));
+            let unet = UNet::new(&f);
+            let mut eng = HostEngine::new(2);
+            let got = unet.forward(&mut eng, &latent5, 500.0, &c);
+            // Cosine similarity between quantized and f16 outputs.
+            let dot: f32 = got.data.iter().zip(&reference.data).map(|(a, b)| a * b).sum();
+            let na: f32 = got.data.iter().map(|v| v * v).sum::<f32>().sqrt();
+            let nb: f32 = reference.data.iter().map(|v| v * v).sum::<f32>().sqrt();
+            let cos = dot / (na * nb);
+            assert!(cos > 0.95, "{m:?} cosine {cos}");
+        }
+    }
+
+    #[test]
+    fn timestep_embedding_distinguishes_timesteps() {
+        let a = timestep_embedding(0.0);
+        let b = timestep_embedding(999.0);
+        assert_ne!(a.as_f32(), b.as_f32());
+        assert!(a.as_f32().iter().all(|v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn imax_offload_is_exercised_and_q8_bit_exact() {
+        let f = WeightFactory::new(1, Some(QuantModel::Q8_0));
+        let unet = UNet::new(&f);
+        let l = latent(5);
+        let c = ctx(6);
+        let mut host = HostEngine::new(2);
+        let a = unet.forward(&mut host, &l, 999.0, &c);
+        let mut imax = ImaxEngine::new(crate::imax::ImaxConfig::fpga(1), 2);
+        let b = unet.forward(&mut imax, &l, 999.0, &c);
+        assert!(imax.stats().offloaded_calls > 0, "transformer linears offload");
+        // Q8_0 lane kernel is bit-exact vs host GGML: whole U-Net agrees.
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Mini VAE decoder: 4×16×16 latent → 3×128×128 RGB image.
+//!
+//! Mirrors the SD VAE decoder's shape (conv_in, res-blocks, nearest-
+//! upsample + conv per level, conv_out) at toy scale. All weights stay
+//! F16 — sd.cpp never quantizes the VAE — so this is pure host-side F16
+//! GEMM load, exactly the dominant dtype of Table I.
+
+use super::graph::{conv2d, group_norm, silu, upsample2x, Feat, MatMulEngine};
+use super::weights::WeightFactory;
+use crate::ggml::Tensor;
+
+/// Decoder channel schedule per level (16→32→64→128 spatial).
+const CHS: [usize; 4] = [64, 48, 32, 16];
+const GROUPS: usize = 8;
+
+struct VaeRes {
+    norm1: (Vec<f32>, Vec<f32>),
+    conv1: Tensor,
+    conv1_b: Vec<f32>,
+    norm2: (Vec<f32>, Vec<f32>),
+    conv2: Tensor,
+    conv2_b: Vec<f32>,
+}
+
+impl VaeRes {
+    fn new(f: &WeightFactory, name: &str, ch: usize) -> VaeRes {
+        VaeRes {
+            norm1: f.norm(&format!("{name}.n1"), ch),
+            conv1: f.conv(&format!("{name}.c1"), ch, ch, 3),
+            conv1_b: f.bias(&format!("{name}.c1"), ch),
+            norm2: f.norm(&format!("{name}.n2"), ch),
+            conv2: f.conv(&format!("{name}.c2"), ch, ch, 3),
+            conv2_b: f.bias(&format!("{name}.c2"), ch),
+        }
+    }
+
+    fn forward(&self, eng: &mut dyn MatMulEngine, x: &Feat) -> Feat {
+        let mut h = group_norm(x, GROUPS, &self.norm1.0, &self.norm1.1);
+        silu(&mut h.data);
+        let h = conv2d(eng, &self.conv1, &self.conv1_b, &h, 3, 1);
+        let mut h2 = group_norm(&h, GROUPS, &self.norm2.0, &self.norm2.1);
+        silu(&mut h2.data);
+        conv2d(eng, &self.conv2, &self.conv2_b, &h2, 3, 1).add(x)
+    }
+}
+
+/// The decoder.
+pub struct VaeDecoder {
+    conv_in: (Tensor, Vec<f32>),
+    levels: Vec<(VaeRes, Option<(Tensor, Vec<f32>)>)>,
+    norm_out: (Vec<f32>, Vec<f32>),
+    conv_out: (Tensor, Vec<f32>),
+}
+
+impl VaeDecoder {
+    /// Build from a factory.
+    pub fn new(f: &WeightFactory) -> VaeDecoder {
+        let mut levels = Vec::new();
+        for (l, &ch) in CHS.iter().enumerate() {
+            let rb = VaeRes::new(f, &format!("vae.up{l}.rb"), ch);
+            // Upsample conv to the next level's channels (none after last).
+            let up = (l + 1 < CHS.len()).then(|| {
+                (
+                    f.conv(&format!("vae.up{l}.conv"), ch, CHS[l + 1], 3),
+                    f.bias(&format!("vae.up{l}.conv"), CHS[l + 1]),
+                )
+            });
+            levels.push((rb, up));
+        }
+        VaeDecoder {
+            conv_in: (f.conv("vae.conv_in", 4, CHS[0], 3), f.bias("vae.conv_in", CHS[0])),
+            levels,
+            norm_out: f.norm("vae.norm_out", CHS[CHS.len() - 1]),
+            conv_out: (
+                f.conv("vae.conv_out", CHS[CHS.len() - 1], 3, 3),
+                f.bias("vae.conv_out", 3),
+            ),
+        }
+    }
+
+    /// Decode a latent into an RGB image in `[0, 1]`.
+    pub fn decode(&self, eng: &mut dyn MatMulEngine, latent: &Feat) -> Feat {
+        let mut h = conv2d(eng, &self.conv_in.0, &self.conv_in.1, latent, 3, 1);
+        for (rb, up) in &self.levels {
+            h = rb.forward(eng, &h);
+            if let Some((w, b)) = up {
+                h = upsample2x(&h);
+                h = conv2d(eng, w, b, &h, 3, 1);
+            }
+        }
+        let mut out = group_norm(&h, GROUPS, &self.norm_out.0, &self.norm_out.1);
+        silu(&mut out.data);
+        let mut img = conv2d(eng, &self.conv_out.0, &self.conv_out.1, &out, 3, 1);
+        // tanh-squash into [0, 1] display range.
+        for v in img.data.iter_mut() {
+            *v = 0.5 * (v.tanh() + 1.0);
+        }
+        img
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sd::graph::HostEngine;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn decode_shape_range_determinism() {
+        let f = WeightFactory::new(2, None);
+        let vae = VaeDecoder::new(&f);
+        let mut r = Xoshiro256pp::seed_from_u64(3);
+        let mut d = vec![0.0f32; 4 * 16 * 16];
+        r.fill_normal(&mut d, 1.0);
+        let latent = Feat::new(4, 16, 16, d);
+        let mut eng = HostEngine::new(2);
+        let img = vae.decode(&mut eng, &latent);
+        assert_eq!((img.c, img.h, img.w), (3, 128, 128));
+        assert!(img.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let mut eng2 = HostEngine::new(1);
+        let img2 = vae.decode(&mut eng2, &latent);
+        assert_eq!(img.data, img2.data);
+    }
+
+    #[test]
+    fn vae_weights_are_all_f16() {
+        // The factory must keep every VAE tensor F16 even under a
+        // quantized model (sd.cpp policy).
+        let f = WeightFactory::new(2, Some(crate::sd::trace::QuantModel::Q8_0));
+        let vae = VaeDecoder::new(&f);
+        assert_eq!(vae.conv_in.0.dtype(), crate::ggml::DType::F16);
+        assert_eq!(vae.conv_out.0.dtype(), crate::ggml::DType::F16);
+    }
+
+    #[test]
+    fn different_latents_different_images() {
+        let f = WeightFactory::new(2, None);
+        let vae = VaeDecoder::new(&f);
+        let mut eng = HostEngine::new(2);
+        let a = vae.decode(&mut eng, &Feat::new(4, 16, 16, vec![0.5; 1024]));
+        let b = vae.decode(&mut eng, &Feat::new(4, 16, 16, vec![-0.5; 1024]));
+        assert_ne!(a.data, b.data);
+    }
+}

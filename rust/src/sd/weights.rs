@@ -1,0 +1,111 @@
+//! Deterministic synthetic weight factory for the mini pipeline.
+//!
+//! We do not ship the SD-Turbo checkpoint; weights are synthesized
+//! deterministically from `(seed, layer_name)` with 1/√K fan-in scaling,
+//! then quantized according to the run's [`QuantModel`] with the same
+//! per-tensor eligibility policy as the paper-scale trace (linear weights
+//! quantized when K divides the block size, convs in F16).
+
+use crate::ggml::{DType, Tensor};
+use crate::sd::trace::QuantModel;
+use crate::util::rng::{fnv1a64, Xoshiro256pp};
+
+/// Weight factory: one per pipeline instantiation.
+#[derive(Debug, Clone)]
+pub struct WeightFactory {
+    /// Base seed (prompt-independent; the model is fixed).
+    pub seed: u64,
+    /// Quantized model type (`None` = full F16 reference pipeline).
+    pub model: Option<QuantModel>,
+}
+
+impl WeightFactory {
+    /// New factory.
+    pub fn new(seed: u64, model: Option<QuantModel>) -> WeightFactory {
+        WeightFactory { seed, model }
+    }
+
+    fn rng(&self, name: &str) -> Xoshiro256pp {
+        Xoshiro256pp::seed_from_u64(self.seed ^ fnv1a64(name.as_bytes()))
+    }
+
+    /// Raw f32 matrix `[rows, cols]` with fan-in scaling.
+    fn matrix(&self, name: &str, rows: usize, cols: usize) -> Tensor {
+        let mut r = self.rng(name);
+        let mut v = vec![0.0f32; rows * cols];
+        r.fill_normal(&mut v, 1.0 / (cols as f32).sqrt());
+        Tensor::f32(rows, cols, v)
+    }
+
+    /// Small bias vector.
+    pub fn bias(&self, name: &str, n: usize) -> Vec<f32> {
+        let mut r = self.rng(&format!("{name}.bias"));
+        let mut v = vec![0.0f32; n];
+        r.fill_normal(&mut v, 0.02);
+        v
+    }
+
+    /// Linear weight `[dout, din]`, quantized when eligible.
+    pub fn linear(&self, name: &str, din: usize, dout: usize) -> Tensor {
+        let w = self.matrix(name, dout, din);
+        match self.model {
+            Some(m) if din % m.weight_dtype().block_size() == 0 => {
+                w.quantize(m.weight_dtype())
+            }
+            _ => w.quantize(DType::F16),
+        }
+    }
+
+    /// Conv weight `[cout, cin·k·k]` — always F16 (sd.cpp policy).
+    pub fn conv(&self, name: &str, cin: usize, cout: usize, k: usize) -> Tensor {
+        self.matrix(name, cout, cin * k * k).quantize(DType::F16)
+    }
+
+    /// Norm parameters: gamma ≈ 1, beta ≈ 0.
+    pub fn norm(&self, name: &str, c: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut r = self.rng(&format!("{name}.norm"));
+        let gamma: Vec<f32> = (0..c).map(|_| 1.0 + r.normal() * 0.02).collect();
+        let beta: Vec<f32> = (0..c).map(|_| r.normal() * 0.02).collect();
+        (gamma, beta)
+    }
+
+    /// Embedding table `[vocab, dim]`.
+    pub fn embedding(&self, name: &str, vocab: usize, dim: usize) -> Tensor {
+        self.matrix(name, vocab, dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_name() {
+        let f = WeightFactory::new(7, None);
+        let a = f.linear("layer.a", 64, 32);
+        let b = f.linear("layer.a", 64, 32);
+        let c = f.linear("layer.b", 64, 32);
+        assert_eq!(a.to_f32().as_f32(), b.to_f32().as_f32());
+        assert_ne!(a.to_f32().as_f32(), c.to_f32().as_f32());
+    }
+
+    #[test]
+    fn quantization_policy_applied() {
+        let q3 = WeightFactory::new(7, Some(QuantModel::Q3K));
+        assert_eq!(q3.linear("x", 256, 64).dtype(), DType::Q3K);
+        assert_eq!(q3.linear("x", 128, 64).dtype(), DType::F16, "K=128 fallback");
+        let q8 = WeightFactory::new(7, Some(QuantModel::Q8_0));
+        assert_eq!(q8.linear("x", 128, 64).dtype(), DType::Q8_0);
+        assert_eq!(q8.conv("c", 16, 8, 3).dtype(), DType::F16, "convs stay F16");
+        let f16 = WeightFactory::new(7, None);
+        assert_eq!(f16.linear("x", 256, 64).dtype(), DType::F16);
+    }
+
+    #[test]
+    fn fan_in_scaling_keeps_outputs_bounded() {
+        let f = WeightFactory::new(3, None);
+        let w = f.linear("big", 512, 512).to_f32();
+        let std: f32 = (w.as_f32().iter().map(|v| v * v).sum::<f32>() / w.len() as f32).sqrt();
+        assert!((std - 1.0 / (512.0f32).sqrt()).abs() < 0.005, "std {std}");
+    }
+}

@@ -1,0 +1,95 @@
+//! Micro-benchmark harness (criterion is not vendored in this image).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: warmup,
+//! fixed-duration sampling, and a [`crate::util::stats::Summary`] printed
+//! through the table renderer.
+
+use super::stats::{fmt_duration, Summary};
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Case name.
+    pub name: String,
+    /// Per-iteration timing summary (seconds).
+    pub summary: Summary,
+    /// Optional throughput denominator (items per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// items/second at the median, when a denominator was given.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.summary.median)
+    }
+
+    /// One-line report.
+    pub fn line(&self) -> String {
+        let tp = self
+            .throughput()
+            .map(|t| format!("  ({:.3e} items/s)", t))
+            .unwrap_or_default();
+        format!(
+            "{:<44} median {}  (±{:.1}% over {} samples){tp}",
+            self.name,
+            fmt_duration(self.summary.median),
+            self.summary.cv() * 100.0,
+            self.summary.n,
+        )
+    }
+}
+
+/// Run `f` repeatedly for ~`budget` (after `warmup` iterations) and
+/// summarize per-iteration latency.
+pub fn bench(name: &str, warmup: u32, budget: Duration, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), summary: Summary::of(&samples), items_per_iter: None }
+}
+
+/// [`bench`] with a throughput denominator.
+pub fn bench_throughput(
+    name: &str,
+    warmup: u32,
+    budget: Duration,
+    items_per_iter: f64,
+    f: impl FnMut(),
+) -> BenchResult {
+    let mut r = bench(name, warmup, budget, f);
+    r.items_per_iter = Some(items_per_iter);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples_and_reports() {
+        let r = bench("noop", 2, Duration::from_millis(20), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.summary.n >= 5);
+        assert!(r.line().contains("noop"));
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let r = bench_throughput("t", 1, Duration::from_millis(10), 100.0, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+}

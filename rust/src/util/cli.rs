@@ -1,0 +1,414 @@
+//! Declarative command-line parsing (clap is not vendored in this image).
+//!
+//! Supports the subset the `imax-sd` binary needs: subcommands, long/short
+//! flags, `--key value` and `--key=value` options, typed accessors with
+//! defaults, required options, auto-generated `--help`, and unknown-flag
+//! errors.
+//!
+//! ```no_run
+//! use imax_sd::util::cli::{App, Arg};
+//! let app = App::new("imax-sd", "IMAX3 Stable-Diffusion reproduction")
+//!     .subcommand(
+//!         App::new("generate", "Generate an image")
+//!             .arg(Arg::opt("prompt", 'p', "PROMPT", "text prompt").default("a lovely cat"))
+//!             .arg(Arg::flag("verbose", 'v', "chatty output")),
+//!     );
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Error produced by the parser; rendered to the user with usage text.
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Kind of argument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ArgKind {
+    /// Boolean presence flag (`--verbose`).
+    Flag,
+    /// Option taking a value (`--steps 4`).
+    Opt,
+    /// Positional argument.
+    Positional,
+}
+
+/// Declaration of a single argument.
+#[derive(Debug, Clone)]
+pub struct Arg {
+    name: &'static str,
+    short: Option<char>,
+    value_name: &'static str,
+    help: &'static str,
+    kind: ArgKind,
+    default: Option<String>,
+    required: bool,
+}
+
+impl Arg {
+    /// A boolean flag: `--name` / `-s`.
+    pub fn flag(name: &'static str, short: char, help: &'static str) -> Arg {
+        Arg {
+            name,
+            short: if short == '\0' { None } else { Some(short) },
+            value_name: "",
+            help,
+            kind: ArgKind::Flag,
+            default: None,
+            required: false,
+        }
+    }
+
+    /// A valued option: `--name VALUE` / `-s VALUE` / `--name=VALUE`.
+    pub fn opt(name: &'static str, short: char, value_name: &'static str, help: &'static str) -> Arg {
+        Arg {
+            name,
+            short: if short == '\0' { None } else { Some(short) },
+            value_name,
+            help,
+            kind: ArgKind::Opt,
+            default: None,
+            required: false,
+        }
+    }
+
+    /// A positional argument, matched in declaration order.
+    pub fn positional(name: &'static str, help: &'static str) -> Arg {
+        Arg {
+            name,
+            short: None,
+            value_name: "",
+            help,
+            kind: ArgKind::Positional,
+            default: None,
+            required: false,
+        }
+    }
+
+    /// Provide a default value (implies not required).
+    pub fn default(mut self, v: &str) -> Arg {
+        self.default = Some(v.to_string());
+        self
+    }
+
+    /// Mark the option as required.
+    pub fn required(mut self) -> Arg {
+        self.required = true;
+        self
+    }
+}
+
+/// An application or subcommand definition.
+#[derive(Debug, Clone)]
+pub struct App {
+    name: &'static str,
+    about: &'static str,
+    args: Vec<Arg>,
+    subs: Vec<App>,
+}
+
+impl App {
+    /// New (sub)command with a one-line description.
+    pub fn new(name: &'static str, about: &'static str) -> App {
+        App { name, about, args: Vec::new(), subs: Vec::new() }
+    }
+
+    /// Add an argument declaration.
+    pub fn arg(mut self, a: Arg) -> App {
+        self.args.push(a);
+        self
+    }
+
+    /// Add a subcommand.
+    pub fn subcommand(mut self, s: App) -> App {
+        self.subs.push(s);
+        self
+    }
+
+    /// Render `--help` text.
+    pub fn help_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("{} — {}\n\nUSAGE:\n    {} ", self.name, self.about, self.name));
+        if !self.subs.is_empty() {
+            out.push_str("<SUBCOMMAND> ");
+        }
+        out.push_str("[OPTIONS]");
+        for a in self.args.iter().filter(|a| a.kind == ArgKind::Positional) {
+            out.push_str(&format!(" <{}>", a.name));
+        }
+        out.push('\n');
+        if !self.args.is_empty() {
+            out.push_str("\nOPTIONS:\n");
+            for a in &self.args {
+                let short = a.short.map(|c| format!("-{c}, ")).unwrap_or_else(|| "    ".into());
+                let left = match a.kind {
+                    ArgKind::Flag => format!("{short}--{}", a.name),
+                    ArgKind::Opt => format!("{short}--{} <{}>", a.name, a.value_name),
+                    ArgKind::Positional => format!("<{}>", a.name),
+                };
+                let def = a
+                    .default
+                    .as_ref()
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                out.push_str(&format!("    {left:<36} {}{def}\n", a.help));
+            }
+        }
+        if !self.subs.is_empty() {
+            out.push_str("\nSUBCOMMANDS:\n");
+            for s in &self.subs {
+                out.push_str(&format!("    {:<20} {}\n", s.name, s.about));
+            }
+        }
+        out
+    }
+
+    /// Parse an argv slice (excluding the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Matches, CliError> {
+        let mut m = Matches {
+            command: self.name.to_string(),
+            values: BTreeMap::new(),
+            flags: Vec::new(),
+            sub: None,
+        };
+        // Seed defaults.
+        for a in &self.args {
+            if let Some(d) = &a.default {
+                m.values.insert(a.name.to_string(), d.clone());
+            }
+        }
+        let mut positionals: Vec<&Arg> =
+            self.args.iter().filter(|a| a.kind == ArgKind::Positional).collect();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError(self.help_text()));
+            }
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (key, inline) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let a = self
+                    .args
+                    .iter()
+                    .find(|a| a.name == key)
+                    .ok_or_else(|| CliError(format!("unknown flag --{key}\n\n{}", self.help_text())))?;
+                match a.kind {
+                    ArgKind::Flag => {
+                        if inline.is_some() {
+                            return Err(CliError(format!("flag --{key} takes no value")));
+                        }
+                        m.flags.push(a.name.to_string());
+                    }
+                    ArgKind::Opt => {
+                        let v = match inline {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                argv.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| CliError(format!("--{key} needs a value")))?
+                            }
+                        };
+                        m.values.insert(a.name.to_string(), v);
+                    }
+                    ArgKind::Positional => unreachable!(),
+                }
+            } else if let Some(short) = tok.strip_prefix('-').filter(|s| s.len() == 1) {
+                let c = short.chars().next().unwrap();
+                let a = self
+                    .args
+                    .iter()
+                    .find(|a| a.short == Some(c))
+                    .ok_or_else(|| CliError(format!("unknown flag -{c}\n\n{}", self.help_text())))?;
+                match a.kind {
+                    ArgKind::Flag => m.flags.push(a.name.to_string()),
+                    ArgKind::Opt => {
+                        i += 1;
+                        let v = argv
+                            .get(i)
+                            .cloned()
+                            .ok_or_else(|| CliError(format!("-{c} needs a value")))?;
+                        m.values.insert(a.name.to_string(), v);
+                    }
+                    ArgKind::Positional => unreachable!(),
+                }
+            } else if let Some(sub) = self.subs.iter().find(|s| s.name == *tok) {
+                let inner = sub.parse(&argv[i + 1..])?;
+                m.sub = Some(Box::new(inner));
+                break;
+            } else if !positionals.is_empty() {
+                let a = positionals.remove(0);
+                m.values.insert(a.name.to_string(), tok.clone());
+            } else {
+                return Err(CliError(format!(
+                    "unexpected argument '{tok}'\n\n{}",
+                    self.help_text()
+                )));
+            }
+            i += 1;
+        }
+        // Required check (only when no subcommand consumed the tail).
+        if m.sub.is_none() {
+            for a in &self.args {
+                if a.required && !m.values.contains_key(a.name) {
+                    return Err(CliError(format!("missing required option --{}", a.name)));
+                }
+            }
+        }
+        Ok(m)
+    }
+
+    /// Parse `std::env::args()`, printing help/errors and exiting on failure.
+    pub fn parse_env(&self) -> Matches {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+/// Parse result: typed accessors over matched values.
+#[derive(Debug)]
+pub struct Matches {
+    /// Name of the command these matches belong to.
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// The matched subcommand, if any.
+    pub sub: Option<Box<Matches>>,
+}
+
+impl Matches {
+    /// Raw string value of an option (default-filled if declared).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// String value, panicking if absent (use for defaulted/required opts).
+    pub fn str(&self, name: &str) -> &str {
+        self.get(name)
+            .unwrap_or_else(|| panic!("option --{name} missing (declare a default)"))
+    }
+
+    /// Typed parse of an option value.
+    pub fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError(format!("option --{name} missing")))?;
+        raw.parse::<T>()
+            .map_err(|e| CliError(format!("--{name}={raw}: {e}")))
+    }
+
+    /// `usize` accessor.
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.parse_as(name)
+    }
+
+    /// `u64` accessor.
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.parse_as(name)
+    }
+
+    /// `f64` accessor.
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.parse_as(name)
+    }
+
+    /// Whether a boolean flag was passed.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("t", "test app")
+            .arg(Arg::opt("steps", 's', "N", "denoise steps").default("1"))
+            .arg(Arg::flag("verbose", 'v', "chatty"))
+            .subcommand(
+                App::new("gen", "generate")
+                    .arg(Arg::opt("prompt", 'p', "P", "prompt").default("a lovely cat"))
+                    .arg(Arg::opt("seed", '\0', "S", "seed").required()),
+            )
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = app().parse(&argv(&[])).unwrap();
+        assert_eq!(m.str("steps"), "1");
+        assert!(!m.flag("verbose"));
+    }
+
+    #[test]
+    fn long_and_short_and_equals() {
+        let m = app().parse(&argv(&["--steps", "4", "-v"])).unwrap();
+        assert_eq!(m.usize("steps").unwrap(), 4);
+        assert!(m.flag("verbose"));
+        let m = app().parse(&argv(&["--steps=8"])).unwrap();
+        assert_eq!(m.usize("steps").unwrap(), 8);
+        let m = app().parse(&argv(&["-s", "2"])).unwrap();
+        assert_eq!(m.usize("steps").unwrap(), 2);
+    }
+
+    #[test]
+    fn subcommand_dispatch() {
+        let m = app()
+            .parse(&argv(&["gen", "--prompt", "hi there", "--seed", "7"]))
+            .unwrap();
+        let sub = m.sub.expect("sub");
+        assert_eq!(sub.command, "gen");
+        assert_eq!(sub.str("prompt"), "hi there");
+        assert_eq!(sub.u64("seed").unwrap(), 7);
+    }
+
+    #[test]
+    fn required_enforced() {
+        let err = app().parse(&argv(&["gen"])).unwrap_err();
+        assert!(err.0.contains("--seed"), "{}", err.0);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(app().parse(&argv(&["--nope"])).is_err());
+        assert!(app().parse(&argv(&["-z"])).is_err());
+    }
+
+    #[test]
+    fn bad_typed_value() {
+        let m = app().parse(&argv(&["--steps", "abc"])).unwrap();
+        assert!(m.usize("steps").is_err());
+    }
+
+    #[test]
+    fn help_contains_everything() {
+        let h = app().help_text();
+        for needle in ["--steps", "--verbose", "gen", "test app"] {
+            assert!(h.contains(needle), "help missing {needle}: {h}");
+        }
+    }
+}

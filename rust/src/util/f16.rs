@@ -1,0 +1,226 @@
+//! IEEE 754 binary16 (half precision) conversion.
+//!
+//! GGML block formats ([`crate::ggml`]) store per-block scale factors as
+//! `ggml_fp16_t`, i.e. raw binary16 bits. The conversions here are
+//! round-trip exact for every representable half value and use
+//! round-to-nearest-even on the f32 → f16 path, matching both hardware
+//! `F16C`/`fcvt` behaviour and GGML's lookup-table implementation.
+
+/// A raw IEEE 754 binary16 value stored as its bit pattern.
+///
+/// This is deliberately a transparent wrapper over `u16` so that quantized
+/// blocks can be byte-serialized exactly like GGML's C structs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct F16(pub u16);
+
+impl F16 {
+    /// Positive zero.
+    pub const ZERO: F16 = F16(0);
+    /// One (0x3C00).
+    pub const ONE: F16 = F16(0x3C00);
+    /// Largest finite half value (65504.0).
+    pub const MAX: F16 = F16(0x7BFF);
+
+    /// Convert from `f32` with round-to-nearest-even.
+    #[inline]
+    pub fn from_f32(x: f32) -> F16 {
+        F16(f32_to_f16_bits(x))
+    }
+
+    /// Convert to `f32` (exact; every half is representable in f32).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f16_bits_to_f32(self.0)
+    }
+
+    /// True if the value is NaN.
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x03FF) != 0
+    }
+
+    /// True if the value is +/- infinity.
+    #[inline]
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+}
+
+impl From<f32> for F16 {
+    fn from(x: f32) -> F16 {
+        F16::from_f32(x)
+    }
+}
+
+impl From<F16> for f32 {
+    fn from(h: F16) -> f32 {
+        h.to_f32()
+    }
+}
+
+/// f32 → binary16 bit pattern, round-to-nearest-even, IEEE semantics
+/// (overflow → infinity, subnormal halves produced exactly).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN. Preserve a quiet-NaN payload bit so NaN stays NaN.
+        return if mant != 0 { sign | 0x7E00 } else { sign | 0x7C00 };
+    }
+
+    // Unbiased exponent, then re-bias for binary16 (bias 15).
+    let unbiased = exp - 127;
+    let half_exp = unbiased + 15;
+
+    if half_exp >= 0x1F {
+        // Overflow → infinity.
+        return sign | 0x7C00;
+    }
+
+    if half_exp <= 0 {
+        // Subnormal half or underflow to zero.
+        if half_exp < -10 {
+            return sign; // Rounds to +/- 0.
+        }
+        // Add the implicit bit, then shift right with round-to-nearest-even.
+        let m = mant | 0x0080_0000;
+        let shift = (14 - half_exp) as u32; // 14..24
+        let halfway = 1u32 << (shift - 1);
+        let mut q = m >> shift;
+        let rem = m & ((1 << shift) - 1);
+        if rem > halfway || (rem == halfway && (q & 1) == 1) {
+            q += 1;
+        }
+        return sign | q as u16;
+    }
+
+    // Normal case: round 23-bit mantissa to 10 bits, nearest-even.
+    let mut q = (mant >> 13) as u16;
+    let rem = mant & 0x1FFF;
+    let mut e = half_exp as u16;
+    if rem > 0x1000 || (rem == 0x1000 && (q & 1) == 1) {
+        q += 1;
+        if q == 0x400 {
+            // Mantissa rollover bumps the exponent.
+            q = 0;
+            e += 1;
+            if e >= 0x1F {
+                return sign | 0x7C00;
+            }
+        }
+    }
+    sign | (e << 10) | q
+}
+
+/// binary16 bit pattern → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign // +/- 0
+        } else {
+            // Subnormal: v = mant * 2^-24. Normalize so bit 10 is the
+            // implicit one; each shift costs one exponent step from the
+            // max subnormal exponent (2^-15 with implicit bit at 2^-1).
+            let mut e = -1i32;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            // MSB of mant at position k => f32 biased exponent k + 103;
+            // here e == k - 11, so biased exponent == e + 114.
+            let exp32 = (e + 114) as u32;
+            sign | (exp32 << 23) | ((m & 0x03FF) << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13) // Inf / NaN
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants() {
+        assert_eq!(F16::ZERO.to_f32(), 0.0);
+        assert_eq!(F16::ONE.to_f32(), 1.0);
+        assert_eq!(F16::MAX.to_f32(), 65504.0);
+    }
+
+    #[test]
+    fn simple_values_round_trip() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, -2.5, 1024.0, 0.125, 65504.0] {
+            let h = F16::from_f32(v);
+            assert_eq!(h.to_f32(), v, "value {v} must be exact in f16");
+        }
+    }
+
+    #[test]
+    fn all_halves_round_trip_through_f32() {
+        // Every finite half must survive f16 -> f32 -> f16 bit-exactly.
+        for bits in 0..=0xFFFFu16 {
+            let h = F16(bits);
+            if h.is_nan() {
+                continue;
+            }
+            let back = F16::from_f32(h.to_f32());
+            assert_eq!(back.0, bits, "bits {bits:#06x} failed round trip");
+        }
+    }
+
+    #[test]
+    fn rounding_is_nearest_even() {
+        // 2049/2048 is halfway between two halves; even mantissa wins.
+        let a = f32::from_bits(0x3880_1000); // exactly halfway case
+        let h = F16::from_f32(a);
+        assert_eq!(h.0 & 1, 0, "halfway must round to even");
+    }
+
+    #[test]
+    fn overflow_to_infinity() {
+        assert!(F16::from_f32(1e6).is_infinite());
+        assert!(F16::from_f32(-1e6).is_infinite());
+        assert_eq!(F16::from_f32(1e6).0, 0x7C00);
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(F16::from_f32(f32::NAN).is_nan());
+        assert!(F16(0x7E00).to_f32().is_nan());
+    }
+
+    #[test]
+    fn subnormals() {
+        // Smallest positive subnormal half = 2^-24.
+        let tiny = (2.0f32).powi(-24);
+        let h = F16::from_f32(tiny);
+        assert_eq!(h.0, 1);
+        assert_eq!(h.to_f32(), tiny);
+        // Below half of the smallest subnormal rounds to zero.
+        assert_eq!(F16::from_f32(tiny / 4.0).0, 0);
+    }
+
+    #[test]
+    fn quantize_scale_range() {
+        // Typical GGML scales: d = max(|x|)/127 with |x| <= ~30. All such
+        // values must be representable with < 0.1% relative error.
+        let mut v = 1e-4f32;
+        while v < 1.0 {
+            let err = (F16::from_f32(v).to_f32() - v).abs() / v;
+            assert!(err < 1e-3, "relative error {err} too big at {v}");
+            v *= 1.37;
+        }
+    }
+}

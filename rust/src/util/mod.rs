@@ -1,0 +1,26 @@
+//! Self-contained infrastructure substrates.
+//!
+//! The build image is fully offline and only vendors the crates the `xla`
+//! bindings need, so the usual ecosystem crates (clap, tokio, criterion,
+//! proptest, rand, image) are unavailable. Everything the rest of the
+//! workspace needs from them is reimplemented here, scoped to exactly what
+//! this project uses:
+//!
+//! * [`f16`] — IEEE 754 binary16 conversion (GGML stores block scales as f16)
+//! * [`rng`] — SplitMix64 / xoshiro256++ deterministic PRNGs
+//! * [`cli`] — a declarative flag/subcommand parser for the `imax-sd` binary
+//! * [`pool`] — a scoped worker thread pool (stand-in for rayon/tokio tasks)
+//! * [`prop`] — a miniature property-based testing framework with shrinking
+//! * [`png`] — a PNG encoder (stored-deflate + zlib wrapper) for Fig. 5 output
+//! * [`tables`] — ASCII table / horizontal-bar renderers for bench reports
+//! * [`stats`] — summary statistics used by the bench harness
+
+pub mod bench;
+pub mod cli;
+pub mod f16;
+pub mod png;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tables;

@@ -1,0 +1,238 @@
+//! Minimal PNG encoder for Fig. 5 outputs (no `image`/`png` crate vendored).
+//!
+//! Writes 8-bit RGB or grayscale PNGs using *stored* (uncompressed) DEFLATE
+//! blocks inside a zlib stream. Stored blocks are valid DEFLATE, decode in
+//! every viewer, and keep the encoder dependency-free; the 512×512 RGB
+//! outputs are ~790 KB, which is fine for experiment artifacts.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Pixel layout of the buffer handed to [`write_png`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColorType {
+    /// 1 byte per pixel.
+    Gray,
+    /// 3 bytes per pixel, R then G then B.
+    Rgb,
+}
+
+impl ColorType {
+    fn png_code(self) -> u8 {
+        match self {
+            ColorType::Gray => 0,
+            ColorType::Rgb => 2,
+        }
+    }
+
+    /// Bytes per pixel.
+    pub fn bpp(self) -> usize {
+        match self {
+            ColorType::Gray => 1,
+            ColorType::Rgb => 3,
+        }
+    }
+}
+
+/// CRC-32 (IEEE 802.3), bit-reflected, as PNG requires.
+pub fn crc32(data: &[u8]) -> u32 {
+    // Build the table lazily once.
+    use once_cell::sync::Lazy;
+    static TABLE: Lazy<[u32; 256]> = Lazy::new(|| {
+        let mut t = [0u32; 256];
+        for (n, slot) in t.iter_mut().enumerate() {
+            let mut c = n as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    });
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Adler-32 checksum for the zlib wrapper.
+pub fn adler32(data: &[u8]) -> u32 {
+    const MOD: u32 = 65521;
+    let (mut a, mut b) = (1u32, 0u32);
+    for chunk in data.chunks(5552) {
+        for &x in chunk {
+            a += x as u32;
+            b += a;
+        }
+        a %= MOD;
+        b %= MOD;
+    }
+    (b << 16) | a
+}
+
+/// Wrap raw bytes in a zlib stream of stored DEFLATE blocks.
+pub fn zlib_stored(raw: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(raw.len() + raw.len() / 65535 * 5 + 16);
+    out.push(0x78); // CMF: deflate, 32K window
+    out.push(0x01); // FLG: fastest, check bits valid
+    let mut chunks = raw.chunks(65535).peekable();
+    if raw.is_empty() {
+        out.extend_from_slice(&[0x01, 0x00, 0x00, 0xFF, 0xFF]);
+    }
+    while let Some(chunk) = chunks.next() {
+        let last = chunks.peek().is_none();
+        out.push(if last { 1 } else { 0 });
+        let len = chunk.len() as u16;
+        out.extend_from_slice(&len.to_le_bytes());
+        out.extend_from_slice(&(!len).to_le_bytes());
+        out.extend_from_slice(chunk);
+    }
+    out.extend_from_slice(&adler32(raw).to_be_bytes());
+    out
+}
+
+fn chunk(out: &mut Vec<u8>, tag: &[u8; 4], body: &[u8]) {
+    out.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    let start = out.len();
+    out.extend_from_slice(tag);
+    out.extend_from_slice(body);
+    let crc = crc32(&out[start..]);
+    out.extend_from_slice(&crc.to_be_bytes());
+}
+
+/// Encode `pixels` (row-major, no padding) as a PNG byte vector.
+///
+/// `pixels.len()` must equal `width * height * color.bpp()`.
+pub fn encode_png(width: u32, height: u32, color: ColorType, pixels: &[u8]) -> Vec<u8> {
+    let bpp = color.bpp();
+    assert_eq!(
+        pixels.len(),
+        width as usize * height as usize * bpp,
+        "pixel buffer size mismatch"
+    );
+    let mut out = Vec::new();
+    out.extend_from_slice(&[0x89, b'P', b'N', b'G', 0x0D, 0x0A, 0x1A, 0x0A]);
+
+    let mut ihdr = Vec::with_capacity(13);
+    ihdr.extend_from_slice(&width.to_be_bytes());
+    ihdr.extend_from_slice(&height.to_be_bytes());
+    ihdr.push(8); // bit depth
+    ihdr.push(color.png_code());
+    ihdr.extend_from_slice(&[0, 0, 0]); // compression, filter, interlace
+    chunk(&mut out, b"IHDR", &ihdr);
+
+    // Raw scanlines, each prefixed by filter byte 0 (None).
+    let stride = width as usize * bpp;
+    let mut raw = Vec::with_capacity((stride + 1) * height as usize);
+    for row in pixels.chunks(stride) {
+        raw.push(0);
+        raw.extend_from_slice(row);
+    }
+    chunk(&mut out, b"IDAT", &zlib_stored(&raw));
+    chunk(&mut out, b"IEND", &[]);
+    out
+}
+
+/// Encode and write a PNG file.
+pub fn write_png(
+    path: impl AsRef<Path>,
+    width: u32,
+    height: u32,
+    color: ColorType,
+    pixels: &[u8],
+) -> std::io::Result<()> {
+    let bytes = encode_png(width, height, color, pixels);
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&bytes)
+}
+
+/// Convert an `[0,1]`-ish f32 channel buffer to u8 with clamping.
+pub fn to_u8(values: &[f32]) -> Vec<u8> {
+    values
+        .iter()
+        .map(|&v| (v.clamp(0.0, 1.0) * 255.0 + 0.5) as u8)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"IEND"), 0xAE42_6082); // the famous PNG IEND CRC
+    }
+
+    #[test]
+    fn adler32_known_vectors() {
+        assert_eq!(adler32(b""), 1);
+        assert_eq!(adler32(b"Wikipedia"), 0x11E6_0398);
+    }
+
+    #[test]
+    fn zlib_stream_shape() {
+        let z = zlib_stored(&[1, 2, 3]);
+        assert_eq!(&z[..2], &[0x78, 0x01]);
+        assert_eq!(z[2], 1); // final stored block
+        assert_eq!(&z[3..5], &[3, 0]); // LEN
+        assert_eq!(&z[5..7], &[!3u8, 0xFF]); // NLEN
+        assert_eq!(&z[7..10], &[1, 2, 3]);
+        assert_eq!(&z[10..], &adler32(&[1, 2, 3]).to_be_bytes());
+    }
+
+    #[test]
+    fn zlib_multi_block() {
+        let big = vec![7u8; 70_000];
+        let z = zlib_stored(&big);
+        // Two stored blocks: 65535 + 4465.
+        assert_eq!(z[2], 0, "first block not final");
+        let len0 = u16::from_le_bytes([z[3], z[4]]) as usize;
+        assert_eq!(len0, 65535);
+        let second = 2 + 5 + len0;
+        assert_eq!(z[second], 1, "second block final");
+    }
+
+    #[test]
+    fn png_structure_valid() {
+        let px = vec![128u8; 4 * 4 * 3];
+        let png = encode_png(4, 4, ColorType::Rgb, &px);
+        assert_eq!(&png[..8], &[0x89, b'P', b'N', b'G', 0x0D, 0x0A, 0x1A, 0x0A]);
+        assert_eq!(&png[12..16], b"IHDR");
+        // Width/height big-endian.
+        assert_eq!(&png[16..20], &4u32.to_be_bytes());
+        assert_eq!(&png[20..24], &4u32.to_be_bytes());
+        assert_eq!(png[24], 8); // depth
+        assert_eq!(png[25], 2); // RGB
+        assert_eq!(&png[png.len() - 8..png.len() - 4], b"IEND");
+        // Every chunk CRC must verify.
+        let mut i = 8;
+        while i < png.len() {
+            let len = u32::from_be_bytes(png[i..i + 4].try_into().unwrap()) as usize;
+            let body = &png[i + 4..i + 8 + len];
+            let crc = u32::from_be_bytes(png[i + 8 + len..i + 12 + len].try_into().unwrap());
+            assert_eq!(crc32(body), crc, "chunk at {i}");
+            i += 12 + len;
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "pixel buffer size mismatch")]
+    fn size_mismatch_panics() {
+        encode_png(4, 4, ColorType::Rgb, &[0u8; 10]);
+    }
+
+    #[test]
+    fn to_u8_clamps() {
+        assert_eq!(to_u8(&[-1.0, 0.0, 0.5, 1.0, 2.0]), vec![0, 0, 128, 255, 255]);
+    }
+
+    #[test]
+    fn gray_roundtrip_size() {
+        let px = vec![0u8; 16 * 8];
+        let png = encode_png(16, 8, ColorType::Gray, &px);
+        assert!(png.len() > 16 * 8); // stored blocks: bigger than raw
+    }
+}

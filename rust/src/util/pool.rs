@@ -1,0 +1,210 @@
+//! A scoped worker thread pool (rayon/tokio are not vendored).
+//!
+//! Two entry points:
+//!
+//! * [`ThreadPool`] — a long-lived pool with a work queue; the coordinator
+//!   uses one pool to model host CPU cores driving IMAX lanes.
+//! * [`parallel_chunks`] — fork-join helper: split an index range over N
+//!   workers with `std::thread::scope`, used by the ggml matmul row loop.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<QueueState>,
+    cond: Condvar,
+}
+
+struct QueueState {
+    pending: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// Fixed-size pool of worker threads consuming a FIFO job queue.
+pub struct ThreadPool {
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+    done: Arc<(Mutex<()>, Condvar)>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `n` workers (`n >= 1`).
+    pub fn new(n: usize) -> ThreadPool {
+        assert!(n >= 1, "pool needs at least one worker");
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new(QueueState { pending: VecDeque::new(), shutdown: false }),
+            cond: Condvar::new(),
+        });
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new((Mutex::new(()), Condvar::new()));
+        let mut workers = Vec::with_capacity(n);
+        for idx in 0..n {
+            let q = Arc::clone(&queue);
+            let fl = Arc::clone(&in_flight);
+            let dn = Arc::clone(&done);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("imax-pool-{idx}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let mut st = q.jobs.lock().unwrap();
+                            loop {
+                                if let Some(j) = st.pending.pop_front() {
+                                    break j;
+                                }
+                                if st.shutdown {
+                                    return;
+                                }
+                                st = q.cond.wait(st).unwrap();
+                            }
+                        };
+                        job();
+                        if fl.fetch_sub(1, Ordering::AcqRel) == 1 {
+                            let (_l, cv) = &*dn;
+                            cv.notify_all();
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { queue, workers, in_flight, done }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.in_flight.fetch_add(1, Ordering::AcqRel);
+        let mut st = self.queue.jobs.lock().unwrap();
+        st.pending.push_back(Box::new(f));
+        drop(st);
+        self.queue.cond.notify_one();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.done;
+        let mut guard = lock.lock().unwrap();
+        while self.in_flight.load(Ordering::Acquire) != 0 {
+            guard = cv.wait(guard).unwrap();
+        }
+        drop(guard);
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.queue.jobs.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.queue.cond.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Fork-join over `0..len` in `workers` contiguous chunks.
+///
+/// `f(chunk_start, chunk_end)` runs on its own scoped thread per chunk; the
+/// call returns when all chunks complete. With `workers <= 1` (or tiny
+/// ranges) it degrades to a plain call on the current thread.
+pub fn parallel_chunks<F>(len: usize, workers: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if len == 0 {
+        return;
+    }
+    let workers = workers.clamp(1, len);
+    if workers == 1 {
+        f(0, len);
+        return;
+    }
+    let chunk = len.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let start = w * chunk;
+            let end = ((w + 1) * chunk).min(len);
+            if start >= end {
+                break;
+            }
+            let fref = &f;
+            scope.spawn(move || fref(start, end));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_everything() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn wait_idle_with_nothing_pending_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle(); // must not deadlock
+    }
+
+    #[test]
+    fn pool_reusable_after_wait() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for round in 0..3 {
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.wait_idle();
+            assert_eq!(counter.load(Ordering::Relaxed), (round + 1) * 10);
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_covers_range_exactly_once() {
+        let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks(97, 8, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_degenerate_cases() {
+        parallel_chunks(0, 4, |_, _| panic!("must not be called"));
+        let n = AtomicU64::new(0);
+        parallel_chunks(3, 16, |s, e| {
+            n.fetch_add((e - s) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 3);
+    }
+}

@@ -1,0 +1,259 @@
+//! Miniature property-based testing framework (proptest is not vendored).
+//!
+//! Provides what the simulator/quantization invariant tests need: seeded
+//! case generation from composable [`Gen`]s, a configurable number of cases,
+//! and greedy shrinking of failing inputs via [`Shrink`].
+//!
+//! ```no_run
+//! use imax_sd::util::prop::{run, Gen};
+//! run("abs(len) preserved", 256, Gen::vec_f32(1..=64, -10.0..10.0), |xs| {
+//!     let n = xs.len();
+//!     if xs.iter().map(|x| x.abs()).count() != n { return Err("len".into()); }
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Xoshiro256pp;
+use std::ops::RangeInclusive;
+
+/// A generator of values of type `T` from a PRNG.
+pub struct Gen<T> {
+    gen: Box<dyn Fn(&mut Xoshiro256pp) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    /// Build from a closure.
+    pub fn from_fn(f: impl Fn(&mut Xoshiro256pp) -> T + 'static) -> Gen<T> {
+        Gen { gen: Box::new(f) }
+    }
+
+    /// Sample one value.
+    pub fn sample(&self, rng: &mut Xoshiro256pp) -> T {
+        (self.gen)(rng)
+    }
+
+    /// Map the generated value.
+    pub fn map<U: 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::from_fn(move |r| f((self.gen)(r)))
+    }
+}
+
+impl Gen<usize> {
+    /// Uniform usize in an inclusive range.
+    pub fn usize_in(range: RangeInclusive<usize>) -> Gen<usize> {
+        let (lo, hi) = (*range.start(), *range.end());
+        Gen::from_fn(move |r| lo + r.below((hi - lo + 1) as u64) as usize)
+    }
+}
+
+impl Gen<i64> {
+    /// Uniform i64 in an inclusive range.
+    pub fn i64_in(range: RangeInclusive<i64>) -> Gen<i64> {
+        let (lo, hi) = (*range.start(), *range.end());
+        Gen::from_fn(move |r| r.range_i64(lo, hi))
+    }
+}
+
+impl Gen<f32> {
+    /// Uniform f32 in `[lo, hi)`, with occasional exact-zero and boundary
+    /// values mixed in (edge-case biasing).
+    pub fn f32_in(range: std::ops::Range<f32>) -> Gen<f32> {
+        let (lo, hi) = (range.start, range.end);
+        Gen::from_fn(move |r| match r.below(16) {
+            0 => 0.0,
+            1 => lo,
+            2 => hi - (hi - lo) * 1e-7,
+            _ => r.uniform(lo, hi),
+        })
+    }
+}
+
+impl Gen<Vec<f32>> {
+    /// Vector of f32 with random length in `len` and values in `vals`.
+    pub fn vec_f32(len: RangeInclusive<usize>, vals: std::ops::Range<f32>) -> Gen<Vec<f32>> {
+        let elem = Gen::f32_in(vals);
+        let lgen = Gen::usize_in(len);
+        Gen::from_fn(move |r| {
+            let n = lgen.sample(r);
+            (0..n).map(|_| elem.sample(r)).collect()
+        })
+    }
+}
+
+impl Gen<Vec<i8>> {
+    /// Vector of i8 with random length and full-range values.
+    pub fn vec_i8(len: RangeInclusive<usize>) -> Gen<Vec<i8>> {
+        let lgen = Gen::usize_in(len);
+        Gen::from_fn(move |r| {
+            let n = lgen.sample(r);
+            (0..n).map(|_| r.range_i64(-128, 127) as i8).collect()
+        })
+    }
+}
+
+/// Types that know how to propose smaller versions of themselves.
+pub trait Shrink: Sized {
+    /// Candidate shrinks, ordered most-aggressive first.
+    fn shrinks(&self) -> Vec<Self>;
+}
+
+impl Shrink for Vec<f32> {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let n = self.len();
+        if n > 1 {
+            out.push(self[..n / 2].to_vec());
+            out.push(self[n / 2..].to_vec());
+            out.push(self[..n - 1].to_vec());
+        }
+        // Zero out elements one at a time (first non-zero).
+        if let Some(i) = self.iter().position(|&x| x != 0.0) {
+            let mut v = self.clone();
+            v[i] = 0.0;
+            out.push(v);
+        }
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for i64 {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0 {
+            out.push(self / 2);
+            if *self > 0 {
+                out.push(self - 1);
+            } else {
+                out.push(self + 1);
+            }
+        }
+        out
+    }
+}
+
+/// Outcome of a property check on one input.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random checks of `prop` over values from `gen`.
+///
+/// On failure the input is greedily shrunk (up to 200 shrink steps) and the
+/// function panics with the minimal counterexample — the standard
+/// property-test contract, usable directly inside `#[test]`s.
+pub fn run<T>(name: &str, cases: u32, gen: Gen<T>, prop: impl Fn(&T) -> PropResult)
+where
+    T: Shrink + std::fmt::Debug + Clone + 'static,
+{
+    run_seeded(name, cases, 0xD1F_F05E, gen, prop)
+}
+
+/// [`run`] with an explicit seed (tests that must be stable across refactor).
+pub fn run_seeded<T>(
+    name: &str,
+    cases: u32,
+    seed: u64,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> PropResult,
+) where
+    T: Shrink + std::fmt::Debug + Clone + 'static,
+{
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    for case in 0..cases {
+        let input = gen.sample(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min, min_msg, steps) = shrink_loop(input, msg, &prop);
+            panic!(
+                "property '{name}' failed (case {case}/{cases}, shrunk {steps} steps)\n\
+                 counterexample: {min:?}\nreason: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T>(mut cur: T, mut msg: String, prop: &impl Fn(&T) -> PropResult) -> (T, String, u32)
+where
+    T: Shrink + Clone,
+{
+    let mut steps = 0;
+    'outer: while steps < 200 {
+        for cand in cur.shrinks() {
+            if let Err(m) = prop(&cand) {
+                cur = cand;
+                msg = m;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (cur, msg, steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run("sum is finite", 64, Gen::vec_f32(0..=32, -5.0..5.0), |xs| {
+            if xs.iter().sum::<f32>().is_finite() {
+                Ok(())
+            } else {
+                Err("non-finite".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_counterexample() {
+        run("always fails", 8, Gen::vec_f32(1..=8, 0.0..1.0), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // Property: "no vector of length >= 3" — shrinker should land on
+        // exactly length 3.
+        let gen = Gen::vec_f32(10..=30, 0.0..1.0);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let input = gen.sample(&mut rng);
+        let prop = |v: &Vec<f32>| if v.len() >= 3 { Err("too long".into()) } else { Ok(()) };
+        let (min, _msg, _steps) = shrink_loop(input, "seed".into(), &prop);
+        assert_eq!(min.len(), 3, "greedy shrink should reach minimal length");
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let g = Gen::usize_in(5..=9);
+        for _ in 0..1000 {
+            let v = g.sample(&mut rng);
+            assert!((5..=9).contains(&v));
+        }
+        let g = Gen::i64_in(-3..=3);
+        for _ in 0..1000 {
+            let v = g.sample(&mut rng);
+            assert!((-3..=3).contains(&v));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed| {
+            let g = Gen::vec_f32(1..=4, -1.0..1.0);
+            let mut r = Xoshiro256pp::seed_from_u64(seed);
+            (0..8).map(|_| g.sample(&mut r)).collect::<Vec<_>>()
+        };
+        assert_eq!(collect(9), collect(9));
+    }
+}

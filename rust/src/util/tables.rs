@@ -1,0 +1,310 @@
+//! ASCII table and bar-chart rendering for bench/report output.
+//!
+//! Every bench target regenerating a paper table or figure prints through
+//! these so the terminal output visually mirrors the paper's tables (rows ×
+//! columns) and bar figures (Figs 6–11).
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    /// Left-aligned (labels).
+    Left,
+    /// Right-aligned (numbers).
+    Right,
+}
+
+/// A simple text table builder.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a title and column headers (all right-aligned except
+    /// the first).
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        let aligns = headers
+            .iter()
+            .enumerate()
+            .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+            .collect();
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            aligns,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Override column alignments.
+    pub fn aligns(mut self, aligns: &[Align]) -> Table {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    /// Append a row (must match header count).
+    pub fn row(&mut self, cells: &[String]) -> &mut Table {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Append a row of `&str`.
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Table {
+        let owned: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&owned)
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].chars().count());
+            }
+        }
+        let sep = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for c in 0..ncol {
+                let pad = widths[c] - cells[c].chars().count();
+                match self.aligns[c] {
+                    Align::Left => s.push_str(&format!(" {}{} |", cells[c], " ".repeat(pad))),
+                    Align::Right => s.push_str(&format!(" {}{} |", " ".repeat(pad), cells[c])),
+                }
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("{}\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// Render and print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Horizontal bar chart, log- or linear-scaled, for latency figures.
+#[derive(Debug, Clone)]
+pub struct BarChart {
+    title: String,
+    unit: String,
+    log_scale: bool,
+    bars: Vec<(String, f64)>,
+}
+
+impl BarChart {
+    /// New chart; `unit` is appended to each value label.
+    pub fn new(title: &str, unit: &str) -> BarChart {
+        BarChart {
+            title: title.to_string(),
+            unit: unit.to_string(),
+            log_scale: false,
+            bars: Vec::new(),
+        }
+    }
+
+    /// Use log10 bar lengths (the paper's latency figures span 16 s – 810 s).
+    pub fn log(mut self) -> BarChart {
+        self.log_scale = true;
+        self
+    }
+
+    /// Add one bar.
+    pub fn bar(&mut self, label: &str, value: f64) -> &mut BarChart {
+        self.bars.push((label.to_string(), value));
+        self
+    }
+
+    /// Render to a string, bars scaled to `width` characters.
+    pub fn render(&self, width: usize) -> String {
+        let mut out = format!("{}\n", self.title);
+        if self.bars.is_empty() {
+            return out;
+        }
+        let label_w = self.bars.iter().map(|(l, _)| l.chars().count()).max().unwrap();
+        let max_v = self.bars.iter().map(|&(_, v)| v).fold(f64::MIN, f64::max);
+        let min_v = self
+            .bars
+            .iter()
+            .map(|&(_, v)| v)
+            .filter(|v| *v > 0.0)
+            .fold(f64::MAX, f64::min);
+        for (label, v) in &self.bars {
+            let frac = if max_v <= 0.0 {
+                0.0
+            } else if self.log_scale && min_v < max_v && *v > 0.0 {
+                // Map [min, max] onto [0.15, 1.0] in log space so the
+                // smallest bar stays visible.
+                let t = (v.ln() - min_v.ln()) / (max_v.ln() - min_v.ln());
+                0.15 + 0.85 * t
+            } else {
+                (v / max_v).clamp(0.0, 1.0)
+            };
+            let n = ((width as f64) * frac).round() as usize;
+            out.push_str(&format!(
+                "  {label:<label_w$} |{} {v:.1} {}\n",
+                "█".repeat(n),
+                self.unit
+            ));
+        }
+        out
+    }
+
+    /// Render with default width and print.
+    pub fn print(&self) {
+        print!("{}", self.render(48));
+    }
+}
+
+/// Stacked horizontal bars for breakdowns (Fig. 11): each bar is a set of
+/// named segments rendered with distinct glyphs plus a legend.
+#[derive(Debug, Clone)]
+pub struct StackedBars {
+    title: String,
+    unit: String,
+    segments: Vec<String>,
+    bars: Vec<(String, Vec<f64>)>,
+}
+
+const GLYPHS: [char; 8] = ['█', '▓', '▒', '░', '◆', '●', '▲', '■'];
+
+impl StackedBars {
+    /// New stacked chart with the segment names (<= 8).
+    pub fn new(title: &str, unit: &str, segments: &[&str]) -> StackedBars {
+        assert!(segments.len() <= GLYPHS.len());
+        StackedBars {
+            title: title.to_string(),
+            unit: unit.to_string(),
+            segments: segments.iter().map(|s| s.to_string()).collect(),
+            bars: Vec::new(),
+        }
+    }
+
+    /// Add one stacked bar; `values` aligns with the segment names.
+    pub fn bar(&mut self, label: &str, values: &[f64]) -> &mut StackedBars {
+        assert_eq!(values.len(), self.segments.len());
+        self.bars.push((label.to_string(), values.to_vec()));
+        self
+    }
+
+    /// Render to a string with total bar width `width`.
+    pub fn render(&self, width: usize) -> String {
+        let mut out = format!("{}\n", self.title);
+        let label_w = self
+            .bars
+            .iter()
+            .map(|(l, _)| l.chars().count())
+            .max()
+            .unwrap_or(0);
+        let max_total: f64 = self
+            .bars
+            .iter()
+            .map(|(_, v)| v.iter().sum::<f64>())
+            .fold(0.0, f64::max);
+        for (label, values) in &self.bars {
+            let total: f64 = values.iter().sum();
+            out.push_str(&format!("  {label:<label_w$} |"));
+            for (i, v) in values.iter().enumerate() {
+                let n = if max_total > 0.0 {
+                    ((width as f64) * v / max_total).round() as usize
+                } else {
+                    0
+                };
+                out.push_str(&GLYPHS[i].to_string().repeat(n));
+            }
+            out.push_str(&format!(" {total:.2} {}\n", self.unit));
+        }
+        out.push_str("  legend:");
+        for (i, s) in self.segments.iter().enumerate() {
+            out.push_str(&format!(" {}={}", GLYPHS[i], s));
+        }
+        out.push('\n');
+        out
+    }
+
+    /// Render with default width and print.
+    pub fn print(&self) {
+        print!("{}", self.render(60));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["dev", "lat"]);
+        t.row_str(&["ARM", "809.7"]).row_str(&["IMAX3 (FPGA)", "790.3"]);
+        let s = t.render();
+        assert!(s.contains("| dev          |   lat |"), "{s}");
+        assert!(s.contains("| ARM          | 809.7 |"), "{s}");
+        assert!(s.contains("| IMAX3 (FPGA) | 790.3 |"), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_arity_checked() {
+        Table::new("T", &["a", "b"]).row_str(&["x"]);
+    }
+
+    #[test]
+    fn bar_chart_monotone_lengths() {
+        let mut c = BarChart::new("latency", "s");
+        c.bar("gpu", 16.2).bar("xeon", 59.3).bar("arm", 809.7);
+        let s = c.render(40);
+        let counts: Vec<usize> = s
+            .lines()
+            .skip(1)
+            .map(|l| l.chars().filter(|&ch| ch == '█').count())
+            .collect();
+        assert!(counts[0] < counts[1] && counts[1] < counts[2], "{s}");
+    }
+
+    #[test]
+    fn log_scale_keeps_small_bars_visible() {
+        let mut c = BarChart::new("latency", "s").log();
+        c.bar("gpu", 16.2).bar("arm", 809.7);
+        let s = c.render(40);
+        let first = s.lines().nth(1).unwrap();
+        assert!(first.chars().filter(|&ch| ch == '█').count() >= 4, "{s}");
+    }
+
+    #[test]
+    fn stacked_bars_sum_label() {
+        let mut sb = StackedBars::new("breakdown", "s", &["EXEC", "LOAD", "DRAIN"]);
+        sb.bar("Q3_K", &[1.0, 2.0, 3.0]);
+        let s = sb.render(30);
+        assert!(s.contains("6.00 s"), "{s}");
+        assert!(s.contains("legend: █=EXEC ▓=LOAD ▒=DRAIN"), "{s}");
+    }
+}

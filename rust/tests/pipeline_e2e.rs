@@ -1,0 +1,137 @@
+//! End-to-end integration over the full stack: text encoder → U-Net →
+//! sampler → VAE → PNG, on both backends and both quantized models, plus
+//! the paper-shape assertions that tie the analytic reproduction
+//! together across modules.
+
+use imax_sd::device::{arm_a72, gtx_1080ti, pdp_joules, xeon_w5, Device, ImaxDevice};
+use imax_sd::imax::ImaxConfig;
+use imax_sd::sd::arch::sd_turbo_512;
+use imax_sd::sd::pipeline::{to_rgb8, Backend, Pipeline, PipelineConfig};
+use imax_sd::sd::QuantModel;
+use imax_sd::util::png::{crc32, encode_png, ColorType};
+
+fn cfg(model: QuantModel, backend: Backend, steps: usize) -> PipelineConfig {
+    PipelineConfig { weight_seed: 0x5D_7B0, model: Some(model), steps, backend }
+}
+
+#[test]
+fn fig5_images_generate_and_are_stable_png_bytes() {
+    // The Fig. 5 analog: both models produce deterministic 128x128 PNGs.
+    let mut digests = Vec::new();
+    for model in [QuantModel::Q3K, QuantModel::Q8_0] {
+        let pipe = Pipeline::new(cfg(model, Backend::Host { threads: 2 }, 1));
+        let (img, report) = pipe.generate("a lovely cat", 42);
+        assert_eq!((img.c, img.h, img.w), (3, 128, 128));
+        assert!(report.matmul_calls > 50);
+        let png = encode_png(128, 128, ColorType::Rgb, &to_rgb8(&img));
+        let (img2, _) = pipe.generate("a lovely cat", 42);
+        let png2 = encode_png(128, 128, ColorType::Rgb, &to_rgb8(&img2));
+        assert_eq!(crc32(&png), crc32(&png2), "byte-stable output");
+        digests.push(crc32(&png));
+    }
+    assert_ne!(digests[0], digests[1], "Q3_K and Q8_0 images differ (Fig. 5)");
+}
+
+#[test]
+fn multi_step_ddim_changes_image_and_scales_compute() {
+    let p1 = Pipeline::new(cfg(QuantModel::Q8_0, Backend::Host { threads: 2 }, 1));
+    let p4 = Pipeline::new(cfg(QuantModel::Q8_0, Backend::Host { threads: 2 }, 4));
+    let (i1, r1) = p1.generate("a lovely cat", 7);
+    let (i4, r4) = p4.generate("a lovely cat", 7);
+    assert_ne!(i1.data, i4.data);
+    assert!(r4.matmul_calls > r1.matmul_calls * 2, "{} vs {}", r4.matmul_calls, r1.matmul_calls);
+}
+
+#[test]
+fn offload_ratio_of_mini_pipeline_matches_paper_band() {
+    // Paper: offload ratio < 20% — the mini pipeline's MAC mix lands in
+    // the same band because the same policy drives it.
+    let pipe = Pipeline::new(cfg(
+        QuantModel::Q8_0,
+        Backend::Imax { config: ImaxConfig::fpga(1), threads: 2 },
+        1,
+    ));
+    let (_, report) = pipe.generate("a lovely cat", 1);
+    let total: u64 = report.macs_by_dtype.iter().map(|(_, v)| *v).sum();
+    let quant = report
+        .macs_by_dtype
+        .iter()
+        .find(|(k, _)| *k == "Q8_0")
+        .map(|(_, v)| *v)
+        .unwrap();
+    let ratio = quant as f64 / total as f64;
+    assert!(ratio > 0.05 && ratio < 0.30, "offload MAC ratio {ratio}");
+    assert!(report.offloaded_calls > 0);
+}
+
+#[test]
+fn paper_shape_fig6_fig7_orderings() {
+    let t = sd_turbo_512(1);
+    let e2e = |d: &dyn Device, m| d.e2e_seconds(&t, m);
+    let (arm, fpga, asic) = (arm_a72(), ImaxDevice::fpga(1), ImaxDevice::asic(1));
+    let (xeon, gpu) = (xeon_w5(), gtx_1080ti());
+    // Fig 6 (Q3_K): GPU < Xeon < ASIC < FPGA < ARM.
+    let m = QuantModel::Q3K;
+    assert!(e2e(&gpu, m) < e2e(&xeon, m));
+    assert!(e2e(&xeon, m) < e2e(&asic, m));
+    assert!(e2e(&asic, m) < e2e(&fpga, m));
+    assert!(e2e(&fpga, m) < e2e(&arm, m));
+    // Fig 7 (Q8_0): the crossover — ARM < FPGA, ASIC < ARM.
+    let m = QuantModel::Q8_0;
+    assert!(e2e(&arm, m) < e2e(&fpga, m), "FPGA must lose on Q8_0");
+    assert!(e2e(&asic, m) < e2e(&arm, m), "ASIC must win on Q8_0");
+}
+
+#[test]
+fn paper_shape_speedup_factors() {
+    // "who wins, by roughly what factor": check the big ratios.
+    let t = sd_turbo_512(1);
+    let m = QuantModel::Q3K;
+    let arm = arm_a72().e2e_seconds(&t, m);
+    let xeon = xeon_w5().e2e_seconds(&t, m);
+    let gpu = gtx_1080ti().e2e_seconds(&t, m);
+    let r_arm_xeon = arm / xeon; // paper: 809.7 / 59.3 = 13.7
+    let r_xeon_gpu = xeon / gpu; // paper: 59.3 / 16.2 = 3.66
+    assert!((10.0..18.0).contains(&r_arm_xeon), "ARM/Xeon {r_arm_xeon}");
+    assert!((2.5..5.0).contains(&r_xeon_gpu), "Xeon/GPU {r_xeon_gpu}");
+}
+
+#[test]
+fn paper_shape_fig8_pdp() {
+    let t = sd_turbo_512(1);
+    for m in [QuantModel::Q3K, QuantModel::Q8_0] {
+        let arm = pdp_joules(&arm_a72(), &t, m).joules;
+        let asic = pdp_joules(&ImaxDevice::asic(1), &t, m).joules;
+        let xeon = pdp_joules(&xeon_w5(), &t, m).joules;
+        assert!(arm < asic, "{m:?}: ARM lowest PDP");
+        assert!(asic < xeon, "{m:?}: ASIC beats Xeon");
+    }
+    let asic3 = pdp_joules(&ImaxDevice::asic(1), &t, QuantModel::Q3K).joules;
+    let gpu3 = pdp_joules(&gtx_1080ti(), &t, QuantModel::Q3K).joules;
+    assert!(asic3 < gpu3, "ASIC beats GPU on Q3_K");
+}
+
+#[test]
+fn paper_shape_fig9_10_kernel_and_scaling() {
+    let t = sd_turbo_512(1);
+    for m in [QuantModel::Q3K, QuantModel::Q8_0] {
+        let fpga = ImaxDevice::fpga(1);
+        let f1 = fpga.kernel_seconds(&t, m, 1);
+        let arm1 = arm_a72().kernel_seconds(&t, m, 1);
+        assert!(f1 < arm1, "{m:?}: 145 MHz FPGA beats 1-thread ARM on kernels");
+        // Knee at 2: 1->2 near-perfect, 3+ flat.
+        let f2 = fpga.kernel_seconds(&t, m, 2);
+        let f8 = fpga.kernel_seconds(&t, m, 8);
+        assert!((f1 / f2 - 2.0).abs() < 0.01);
+        assert!(f8 > f1 / 8.0 * 2.0, "{m:?}: must saturate well above ideal 8x");
+    }
+}
+
+#[test]
+fn asic_kernel_projection_factor() {
+    // §IV-A: "approximate 5.8x reduction in IMAX's computation time".
+    let t = sd_turbo_512(1);
+    let f = ImaxDevice::fpga(1).kernel_seconds(&t, QuantModel::Q3K, 1);
+    let a = ImaxDevice::asic(1).kernel_seconds(&t, QuantModel::Q3K, 1);
+    assert!((f / a - 5.79).abs() < 0.05, "ratio {}", f / a);
+}

@@ -1,0 +1,162 @@
+//! Property-based tests over the quantization + simulator invariants,
+//! using the in-tree prop framework (proptest is not vendored).
+
+use imax_sd::ggml::{q3_k, q8_0, q8_k};
+use imax_sd::imax::kernels::{dot_q3_k, dot_q8_0};
+use imax_sd::imax::lane::{LaneSim, TilePlan};
+use imax_sd::imax::{ImaxConfig, KernelConfig, KernelKind};
+use imax_sd::util::prop::{run, Gen};
+use imax_sd::util::rng::Xoshiro256pp;
+
+fn pad_to(v: &[f32], mult: usize) -> Vec<f32> {
+    let mut out = v.to_vec();
+    while out.len() % mult != 0 || out.is_empty() {
+        out.push(0.0);
+    }
+    out
+}
+
+#[test]
+fn prop_q8_0_roundtrip_error_bounded() {
+    run("q8_0 |x - deq(q(x))| <= d/2 + eps", 300, Gen::vec_f32(1..=96, -20.0..20.0), |xs| {
+        let x = pad_to(xs, 32);
+        let blocks = q8_0::quantize_row(&x);
+        let back = q8_0::dequantize_row(&blocks);
+        for (i, (a, b)) in x.iter().zip(&back).enumerate() {
+            let d = blocks[i / 32].d.to_f32();
+            // Half-step rounding error plus the f16 rounding of the
+            // stored scale itself (relative 2^-11 over |q| <= 127).
+            let bound = 0.5 * d + 127.0 * d * 4.9e-4 + 1e-5;
+            if (a - b).abs() > bound {
+                return Err(format!("elem {i}: {a} vs {b}, d={d}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_q8_0_sim_bit_exact_with_host() {
+    let cfg = KernelConfig::q8_0();
+    run("imax q8_0 == ggml vec_dot (bits)", 200, Gen::vec_f32(1..=128, -8.0..8.0), |xs| {
+        let x = pad_to(xs, 32);
+        let mut rng = Xoshiro256pp::seed_from_u64(x.len() as u64);
+        let y: Vec<f32> = (0..x.len()).map(|_| rng.normal()).collect();
+        let (qa, qb) = (q8_0::quantize_row(&x), q8_0::quantize_row(&y));
+        let sim = dot_q8_0(&cfg, &qa, &qb).value;
+        let host = q8_0::vec_dot(&qa, &qb);
+        if sim.to_bits() != host.to_bits() {
+            return Err(format!("sim {sim} != host {host}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_q3_k_sim_bit_exact_with_imax5() {
+    let cfg = KernelConfig::q3_k();
+    run("imax q3_k == vec_dot_imax5 (bits)", 100, Gen::vec_f32(1..=300, -4.0..4.0), |xs| {
+        let x = pad_to(xs, 256);
+        let mut rng = Xoshiro256pp::seed_from_u64(x.len() as u64 + 1);
+        let y: Vec<f32> = (0..x.len()).map(|_| rng.normal()).collect();
+        let w = q3_k::quantize_row(&x);
+        let a = q8_k::quantize_row(&y);
+        let sim = dot_q3_k(&cfg, &w, &a).value;
+        let host = q3_k::vec_dot_imax5(&w, &a);
+        if sim.to_bits() != host.to_bits() {
+            return Err(format!("sim {sim} != host {host}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_q3_scale_pack_roundtrip() {
+    run("q3_k scale pack/unpack", 500, Gen::vec_f32(16..=16, -32.0..31.0), |xs| {
+        let scales: Vec<i8> = xs.iter().map(|v| (*v as i32).clamp(-32, 31) as i8).collect();
+        let arr: [i8; 16] = scales.clone().try_into().unwrap();
+        let packed = q3_k::BlockQ3K::pack_scales(&arr);
+        let blk = q3_k::BlockQ3K { scales: packed, ..Default::default() };
+        if blk.unpack_scales() != arr {
+            return Err(format!("{arr:?} -> {:?}", blk.unpack_scales()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_analytic_equals_functional_cycles() {
+    // For random shapes, the analytic phase model must equal the cycles
+    // the functional walk produces (single source of truth).
+    run("analytic == functional breakdown", 40, Gen::vec_f32(3..=3, 1.0..6.0), |dims| {
+        let m = dims[0] as usize + 1;
+        let n = dims[1] as usize + 1;
+        let k = 32 * (dims[2] as usize + 1);
+        let mut rng = Xoshiro256pp::seed_from_u64((m * 31 + n * 7 + k) as u64);
+        let w: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let x: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+        let wb: Vec<_> = (0..m).flat_map(|r| q8_0::quantize_row(&w[r * k..(r + 1) * k])).collect();
+        let ab: Vec<_> = (0..n).flat_map(|r| q8_0::quantize_row(&x[r * k..(r + 1) * k])).collect();
+        let mut lane = LaneSim::new(ImaxConfig::fpga(1));
+        let analytic = lane.analytic_mul_mat(KernelKind::Q8_0, m, n, k, true).unwrap();
+        let (_, functional) = lane.mul_mat_q8_0(&wb, m, &ab, n, k).unwrap();
+        if analytic != functional {
+            return Err(format!("analytic {analytic:?} != functional {functional:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tile_plans_always_fit_lmm() {
+    run("tile plan fits LMM", 200, Gen::vec_f32(3..=3, 1.0..50.0), |dims| {
+        let m = dims[0] as usize * 13 + 1;
+        let n = dims[1] as usize * 17 + 1;
+        let k = 256 * (dims[2] as usize + 1);
+        let imax = ImaxConfig::fpga(1);
+        match TilePlan::new(&imax, KernelKind::Q3K, m, n, k) {
+            Ok(p) => {
+                let bytes = p.a_tile * p.a_row_bytes
+                    + p.w_tile * p.w_row_bytes
+                    + p.w_tile * p.a_tile * 4;
+                if bytes > imax.lmm_bytes {
+                    return Err(format!("plan {p:?} exceeds LMM: {bytes}"));
+                }
+                if p.a_tiles() * p.a_tile < n || p.w_tiles() * p.w_tile < m {
+                    return Err("tiles do not cover the matrix".into());
+                }
+                Ok(())
+            }
+            Err(_) => Ok(()), // reported OOM is a legal outcome for huge K
+        }
+    });
+}
+
+#[test]
+fn prop_q8k_bsums_consistent() {
+    run("q8_K bsums = group sums", 300, Gen::vec_f32(1..=64, -10.0..10.0), |xs| {
+        let x = pad_to(xs, 256);
+        for b in q8_k::quantize_row(&x) {
+            for (g, chunk) in b.qs.chunks_exact(16).enumerate() {
+                let s: i16 = chunk.iter().map(|&q| q as i16).sum();
+                if b.bsums[g] != s {
+                    return Err(format!("group {g}: {} vs {s}", b.bsums[g]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_f16_roundtrip_monotone() {
+    run("f16 conversion order-preserving", 400, Gen::vec_f32(2..=2, -60000.0..60000.0), |xs| {
+        use imax_sd::util::f16::F16;
+        let (a, b) = (xs[0], xs[1]);
+        let (fa, fb) = (F16::from_f32(a).to_f32(), F16::from_f32(b).to_f32());
+        if a <= b && fa > fb {
+            return Err(format!("{a} <= {b} but {fa} > {fb}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,205 @@
+//! Cross-language integration: the AOT Pallas/JAX artifacts executed via
+//! PJRT from rust must agree with the rust GGML host kernels on the same
+//! quantized operands. This closes the L1↔L3 loop: the arithmetic the
+//! paper offloads is implemented three times (rust host kernels, the
+//! IMAX simulator, the Pallas kernels) and all three must agree.
+//!
+//! Requires `make artifacts`; tests skip (with a message) when the
+//! artifacts are absent so plain `cargo test` stays green pre-build.
+
+use imax_sd::ggml::{q3_k, q8_0, q8_k, DType, Tensor};
+use imax_sd::runtime::client::{literal_f32, literal_i8};
+use imax_sd::runtime::{find_artifact_dir, ArtifactRuntime};
+use imax_sd::util::rng::Xoshiro256pp;
+
+fn runtime() -> Option<ArtifactRuntime> {
+    let Some(dir) = find_artifact_dir() else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    };
+    Some(ArtifactRuntime::new(dir).expect("PJRT CPU client"))
+}
+
+fn random(rows: usize, cols: usize, seed: u64) -> Tensor {
+    let mut r = Xoshiro256pp::seed_from_u64(seed);
+    let mut v = vec![0.0f32; rows * cols];
+    r.fill_normal(&mut v, 0.7);
+    Tensor::f32(rows, cols, v)
+}
+
+/// Decompose a Q8_0-quantized tensor into (qs, d) arrays for the artifact.
+fn decompose_q8_0(t: &Tensor) -> (Vec<i8>, Vec<f32>) {
+    let blocks = match &t.data {
+        imax_sd::ggml::tensor::Storage::Q8_0(b) => b,
+        _ => panic!("not q8_0"),
+    };
+    let mut qs = Vec::with_capacity(t.len());
+    let mut d = Vec::with_capacity(blocks.len());
+    for b in blocks {
+        qs.extend_from_slice(&b.qs);
+        d.push(b.d.to_f32());
+    }
+    (qs, d)
+}
+
+#[test]
+fn q8_0_artifact_matches_rust_ggml() {
+    let Some(mut rt) = runtime() else { return };
+    let (m, n, k) = (64usize, 32usize, 256usize); // aot.py's fixed shapes
+    let w = random(m, k, 1);
+    let x = random(n, k, 2);
+    let wq = w.quantize(DType::Q8_0);
+    let xq = x.quantize(DType::Q8_0);
+    let (wqs, wd) = decompose_q8_0(&wq);
+    let (xqs, xd) = decompose_q8_0(&xq);
+
+    let exe = rt.load("q8_0_matmul.hlo.txt").expect("compile artifact");
+    let out = exe
+        .run_f32(&[
+            literal_i8(&wqs, m, k).unwrap(),
+            literal_f32(&wd, m, k / 32).unwrap(),
+            literal_i8(&xqs, n, k).unwrap(),
+            literal_f32(&xd, n, k / 32).unwrap(),
+        ])
+        .expect("execute");
+
+    // Host reference: same quantized weights, activations quantized the
+    // same way (we pass the pre-quantized acts through mul_mat by
+    // dequantizing-requantizing identically — use vec_dot directly).
+    let wb = match &wq.data {
+        imax_sd::ggml::tensor::Storage::Q8_0(b) => b,
+        _ => unreachable!(),
+    };
+    let xb = match &xq.data {
+        imax_sd::ggml::tensor::Storage::Q8_0(b) => b,
+        _ => unreachable!(),
+    };
+    let bpr = k / 32;
+    assert_eq!(out.len(), n * m);
+    for nn in 0..n {
+        for mm in 0..m {
+            let want = q8_0::vec_dot(
+                &wb[mm * bpr..(mm + 1) * bpr],
+                &xb[nn * bpr..(nn + 1) * bpr],
+            );
+            let got = out[nn * m + mm];
+            assert!(
+                (got - want).abs() < 1e-3 * want.abs().max(1.0),
+                "[{nn},{mm}] pallas {got} vs ggml {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn q3k_artifact_matches_rust_imax5() {
+    let Some(mut rt) = runtime() else { return };
+    let (m, n, k) = (32usize, 16usize, 512usize);
+    let w = random(m, k, 3);
+    let x = random(n, k, 4);
+
+    // Rust-side Q3_K quantization + IMAX restructuring (OP_CVT53 view).
+    let mut q3 = Vec::with_capacity(m * k);
+    let mut s5 = Vec::with_capacity(m * k / 16);
+    let mut wd = Vec::with_capacity(m * k / 256);
+    let mut w_blocks = Vec::new();
+    for r in 0..m {
+        let blocks = q3_k::quantize_row(w.row_f32(r));
+        for b in &blocks {
+            let s = q3_k::to_imax_stream(b);
+            q3.extend(s.q3.iter().map(|&v| v as i8));
+            s5.extend_from_slice(&s.scales5);
+            wd.push(s.d.to_f32());
+        }
+        w_blocks.push(blocks);
+    }
+    let mut xqs = Vec::with_capacity(n * k);
+    let mut xd = Vec::with_capacity(n * k / 256);
+    let mut x_blocks = Vec::new();
+    for r in 0..n {
+        let blocks = q8_k::quantize_row(x.row_f32(r));
+        for b in &blocks {
+            xqs.extend_from_slice(&b.qs);
+            xd.push(b.d);
+        }
+        x_blocks.push(blocks);
+    }
+
+    let exe = rt.load("q3k_matmul.hlo.txt").expect("compile artifact");
+    let out = exe
+        .run_f32(&[
+            literal_i8(&q3, m, k).unwrap(),
+            literal_i8(&s5, m, k / 16).unwrap(),
+            literal_f32(&wd, m, k / 256).unwrap(),
+            literal_i8(&xqs, n, k).unwrap(),
+            literal_f32(&xd, n, k / 256).unwrap(),
+        ])
+        .expect("execute");
+
+    for nn in 0..n {
+        for mm in 0..m {
+            let want = q3_k::vec_dot_imax5(&w_blocks[mm], &x_blocks[nn]);
+            let got = out[nn * m + mm];
+            assert!(
+                (got - want).abs() < 1e-3 * want.abs().max(1.0),
+                "[{nn},{mm}] pallas {got} vs imax5 {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn f16_artifact_matches_rust_f16_mul_mat() {
+    let Some(mut rt) = runtime() else { return };
+    let (m, n, k) = (64usize, 64usize, 288usize);
+    let w = random(m, k, 5);
+    let x = random(n, k, 6);
+    let exe = rt.load("f16_matmul.hlo.txt").expect("compile artifact");
+    let out = exe
+        .run_f32(&[
+            literal_f32(w.as_f32(), m, k).unwrap(),
+            literal_f32(x.as_f32(), n, k).unwrap(),
+        ])
+        .expect("execute");
+    let want = imax_sd::ggml::mul_mat(&w.quantize(DType::F16), &x, 1);
+    for (g, wv) in out.iter().zip(want.as_f32()) {
+        assert!((g - wv).abs() < 2e-3 * wv.abs().max(1.0), "{g} vs {wv}");
+    }
+}
+
+#[test]
+fn model_artifact_runs_and_is_deterministic() {
+    let Some(mut rt) = runtime() else { return };
+    let (seq, dim, ctx_len) = (64usize, 256usize, 77usize);
+    let x = random(seq, dim, 7);
+    let ctx = random(ctx_len, dim, 8);
+    let exe = rt.load("model.hlo.txt").expect("compile model artifact");
+    let a = exe
+        .run_f32(&[
+            literal_f32(x.as_f32(), seq, dim).unwrap(),
+            literal_f32(ctx.as_f32(), ctx_len, dim).unwrap(),
+        ])
+        .expect("execute");
+    assert_eq!(a.len(), seq * dim);
+    assert!(a.iter().all(|v| v.is_finite()));
+    let b = exe
+        .run_f32(&[
+            literal_f32(x.as_f32(), seq, dim).unwrap(),
+            literal_f32(ctx.as_f32(), ctx_len, dim).unwrap(),
+        ])
+        .unwrap();
+    assert_eq!(a, b, "artifact execution is deterministic");
+    // Residual structure: output correlates with input.
+    let dot: f32 = a.iter().zip(x.as_f32()).map(|(p, q)| p * q).sum();
+    assert!(dot != 0.0);
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(mut rt) = runtime() else { return };
+    rt.load("f16_matmul.hlo.txt").unwrap();
+    rt.load("f16_matmul.hlo.txt").unwrap();
+    assert_eq!(rt.cached(), 1);
+    rt.load("q8_0_matmul.hlo.txt").unwrap();
+    assert_eq!(rt.cached(), 2);
+}
