@@ -11,7 +11,7 @@ use imax_sd::sd::QuantModel;
 use imax_sd::util::png::{write_png, ColorType};
 use imax_sd::util::stats::fmt_duration;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let prompt = "a lovely cat";
     println!("Fig. 5: prompt = {prompt:?}, 1 denoising step (SD-Turbo mode)\n");
     for model in [QuantModel::Q3K, QuantModel::Q8_0] {

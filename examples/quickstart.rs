@@ -3,11 +3,13 @@
 //! 1. quantize a weight matrix with the GGML substrate (L3 host),
 //! 2. run the same mat-mul three ways — host kernels, the IMAX lane
 //!    simulator (bit-exact hardware dataflow), and the AOT Pallas
-//!    artifact via PJRT (when `make artifacts` has run) —
+//!    artifact via PJRT (when built with `--features pjrt` and
+//!    `make artifacts` has run) —
 //! 3. print timings and agreement.
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use imax_sd::ggml::q8_0::BlockQ8_0;
 use imax_sd::ggml::{mul_mat, DType, Tensor};
 use imax_sd::imax::lane::LaneSim;
 use imax_sd::imax::ImaxConfig;
@@ -20,7 +22,7 @@ fn random(rows: usize, cols: usize, seed: u64) -> Tensor {
     Tensor::f32(rows, cols, v)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let (m, n, k) = (64usize, 32usize, 256usize);
     let w = random(m, k, 1);
     let x = random(n, k, 2);
@@ -58,19 +60,34 @@ fn main() -> anyhow::Result<()> {
     assert!(exact);
 
     // 3) PJRT artifact (the L1 Pallas kernel AOT-compiled by jax).
+    run_pjrt(&host, &blocks, &acts, m, n, k)?;
+    println!("\nquickstart OK");
+    Ok(())
+}
+
+/// Execute the Q8_0 artifact through PJRT and compare against the host.
+#[cfg(feature = "pjrt")]
+fn run_pjrt(
+    host: &Tensor,
+    blocks: &[BlockQ8_0],
+    acts: &[BlockQ8_0],
+    m: usize,
+    n: usize,
+    k: usize,
+) -> Result<(), Box<dyn std::error::Error>> {
     match imax_sd::runtime::find_artifact_dir() {
         Some(dir) => {
             let mut rt = imax_sd::runtime::ArtifactRuntime::new(dir)?;
             let exe = rt.load("q8_0_matmul.hlo.txt")?;
             let mut qs = Vec::new();
             let mut d = Vec::new();
-            for b in &blocks {
+            for b in blocks {
                 qs.extend_from_slice(&b.qs);
                 d.push(b.d.to_f32());
             }
             let mut aqs = Vec::new();
             let mut ad = Vec::new();
-            for b in &acts {
+            for b in acts {
                 aqs.extend_from_slice(&b.qs);
                 ad.push(b.d.to_f32());
             }
@@ -94,6 +111,19 @@ fn main() -> anyhow::Result<()> {
         }
         None => println!("pjrt pallas artifact : skipped (run `make artifacts`)"),
     }
-    println!("\nquickstart OK");
+    Ok(())
+}
+
+/// Stub when the `pjrt` feature is off (the default, offline build).
+#[cfg(not(feature = "pjrt"))]
+fn run_pjrt(
+    _host: &Tensor,
+    _blocks: &[BlockQ8_0],
+    _acts: &[BlockQ8_0],
+    _m: usize,
+    _n: usize,
+    _k: usize,
+) -> Result<(), Box<dyn std::error::Error>> {
+    println!("pjrt pallas artifact : skipped (build with --features pjrt)");
     Ok(())
 }

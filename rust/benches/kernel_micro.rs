@@ -71,10 +71,20 @@ fn main() {
         ));
     }
 
-    // PJRT dispatch (when artifacts exist).
+    // PJRT dispatch (feature-gated; needs the vendored xla bindings).
+    pjrt_bench(&mut results, budget);
+
+    println!("== kernel micro-benchmarks (items/s = elements or MACs) ==");
+    for r in &results {
+        println!("{}", r.line());
+    }
+}
+
+/// PJRT artifact dispatch (when artifacts exist and `pjrt` is enabled).
+#[cfg(feature = "pjrt")]
+fn pjrt_bench(results: &mut Vec<BenchResult>, budget: Duration) {
     if let Some(dir) = imax_sd::runtime::find_artifact_dir() {
         let mut rt = imax_sd::runtime::ArtifactRuntime::new(dir).unwrap();
-        rt.load("f16_matmul.hlo.txt").unwrap();
         let (m, n, kk) = (64usize, 64usize, 288usize);
         let wl = imax_sd::runtime::client::literal_f32(&random(m * kk, 8), m, kk).unwrap();
         let xl = imax_sd::runtime::client::literal_f32(&random(n * kk, 9), n, kk).unwrap();
@@ -89,9 +99,8 @@ fn main() {
             },
         ));
     }
-
-    println!("== kernel micro-benchmarks (items/s = elements or MACs) ==");
-    for r in &results {
-        println!("{}", r.line());
-    }
 }
+
+/// Stub when the `pjrt` feature is off (the default, offline build).
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_bench(_results: &mut Vec<BenchResult>, _budget: Duration) {}

@@ -15,6 +15,10 @@ pub struct CoordinatorMetrics {
     pub host_macs: AtomicU64,
     /// Cumulative simulated IMAX cycles across lanes.
     pub imax_cycles: AtomicU64,
+    /// Merged lane submissions covering more than one job.
+    pub batched_submissions: AtomicU64,
+    /// Jobs folded into merged submissions.
+    pub coalesced_jobs: AtomicU64,
 }
 
 impl CoordinatorMetrics {
@@ -41,6 +45,24 @@ impl CoordinatorMetrics {
         self.offloaded_macs.fetch_add(macs, Ordering::Relaxed);
         self.imax_cycles.fetch_add(cycles, Ordering::Relaxed);
     }
+
+    /// Record a merged lane submission covering `jobs` coalesced jobs.
+    pub fn record_batch(&self, jobs: u64) {
+        self.batched_submissions.fetch_add(1, Ordering::Relaxed);
+        self.coalesced_jobs.fetch_add(jobs, Ordering::Relaxed);
+    }
+
+    /// Simulated IMAX cycles per offloaded MAC (0 when nothing offloaded)
+    /// — the lane-utilization figure the serving bench compares across
+    /// serial and batched submission.
+    pub fn cycles_per_offloaded_mac(&self) -> f64 {
+        let macs = self.offloaded_macs.load(Ordering::Relaxed);
+        if macs == 0 {
+            0.0
+        } else {
+            self.imax_cycles.load(Ordering::Relaxed) as f64 / macs as f64
+        }
+    }
 }
 
 #[cfg(test)]
@@ -56,5 +78,17 @@ mod tests {
         assert!((m.offload_ratio() - 0.25).abs() < 1e-12);
         assert_eq!(m.host_jobs.load(Ordering::Relaxed), 1);
         assert_eq!(m.imax_cycles.load(Ordering::Relaxed), 42);
+    }
+
+    #[test]
+    fn batch_counters_and_cycle_efficiency() {
+        let m = CoordinatorMetrics::default();
+        assert_eq!(m.cycles_per_offloaded_mac(), 0.0);
+        m.record_offload(1000, 500);
+        assert!((m.cycles_per_offloaded_mac() - 0.5).abs() < 1e-12);
+        m.record_batch(4);
+        m.record_batch(2);
+        assert_eq!(m.batched_submissions.load(Ordering::Relaxed), 2);
+        assert_eq!(m.coalesced_jobs.load(Ordering::Relaxed), 6);
     }
 }

@@ -14,4 +14,4 @@ pub mod scheduler;
 
 pub use metrics::CoordinatorMetrics;
 pub use offload::OffloadPolicy;
-pub use scheduler::{Coordinator, MatMulJob};
+pub use scheduler::{Coordinator, MatMulJob, ShapeKey};

@@ -7,14 +7,23 @@
 //! quantization) for lane jobs, configuring more lanes than
 //! `host_threads` ceases to help — the §V-A saturation, observable in
 //! this scheduler's metrics.
+//!
+//! Beyond per-job execution the coordinator supports **batched
+//! submission** ([`Coordinator::execute_coalesced`]): jobs that share a
+//! weight tensor (same `Arc`) have their activation rows concatenated
+//! into one lane submission, which amortizes the per-descriptor DMA
+//! setup, the weight-tile streaming, and the CONF/REGV/RANGE phases
+//! across requests — the serving layer in [`crate::serve`] is built on
+//! this. Groups are ordered by kernel kind so consecutive submissions
+//! avoid CONF reconfiguration, the shape-level analog of SD-Acc-style
+//! kernel scheduling.
 
 use super::metrics::CoordinatorMetrics;
 use super::offload::OffloadPolicy;
 use crate::ggml::{self, q8_0, q8_k, DType, Tensor};
-#[cfg(test)]
-use crate::ggml::q3_k;
 use crate::imax::lane::LaneSim;
 use crate::imax::ImaxConfig;
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 /// One mat-mul job: quantized weights × f32 activations.
@@ -28,10 +37,30 @@ pub struct MatMulJob {
     pub x: Arc<Tensor>,
 }
 
+/// Key identifying lane-batchable job shapes: jobs with equal keys run
+/// the same kernel over the same weight geometry, so their lane
+/// submissions can share a configuration — [`Coordinator::execute_coalesced`]
+/// orders merged groups by this key (and merges jobs whose weight tensor
+/// is additionally *identical* into a single batched submission).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShapeKey {
+    /// Weight dtype (selects the lane kernel).
+    pub dtype: DType,
+    /// Weight rows (output features).
+    pub m: usize,
+    /// Contraction length.
+    pub k: usize,
+}
+
 impl MatMulJob {
     /// MAC count.
     pub fn macs(&self) -> u64 {
         (self.w.rows * self.w.cols * self.x.rows) as u64
+    }
+
+    /// Shape key for coalescing.
+    pub fn shape_key(&self) -> ShapeKey {
+        ShapeKey { dtype: self.w.dtype(), m: self.w.rows, k: self.w.cols }
     }
 }
 
@@ -67,21 +96,29 @@ impl Coordinator {
     /// Execute one job synchronously, routing by policy. Returns the
     /// `[n, m]` f32 output.
     pub fn execute(&self, job: &MatMulJob) -> Tensor {
-        if self.policy.offloads(&job.w) && !self.lanes.is_empty() {
-            self.execute_on_lane(job)
+        self.execute_ref(&job.w, &job.x)
+    }
+
+    /// [`Coordinator::execute`] over borrowed tensors — the seam the
+    /// serving batcher uses (its weights live inside a shared
+    /// [`crate::sd::pipeline::Pipeline`], not inside `Arc`ed jobs).
+    pub fn execute_ref(&self, w: &Tensor, x: &Tensor) -> Tensor {
+        if self.policy.offloads(w) && !self.lanes.is_empty() {
+            self.execute_on_lane_ref(w, x)
         } else {
-            self.metrics.record_host(job.macs());
-            ggml::mul_mat(&job.w, &job.x, self.host_threads)
+            self.metrics.record_host((w.rows * w.cols * x.rows) as u64);
+            ggml::mul_mat(w, x, self.host_threads)
         }
     }
 
-    /// Execute a batch of jobs, lane jobs in parallel across lanes and
-    /// host threads (scoped). Results in submission order.
+    /// Execute a batch of jobs, pulled by a pool of host threads
+    /// (round-robining lane jobs over lanes). Results in submission
+    /// order. Each job is submitted individually — see
+    /// [`Coordinator::execute_coalesced`] for the merged-submission
+    /// variant.
     pub fn execute_batch(&self, jobs: &[MatMulJob]) -> Vec<Tensor> {
-        let mut out: Vec<Option<Tensor>> = (0..jobs.len()).map(|_| None).collect();
-        let slots: Vec<Mutex<&mut Option<Tensor>>> =
-            out.iter_mut().map(Mutex::new).collect();
-        // Worker per host thread pulling from a shared index.
+        let slots: Vec<Mutex<Option<Tensor>>> =
+            (0..jobs.len()).map(|_| Mutex::new(None)).collect();
         let next = std::sync::atomic::AtomicUsize::new(0);
         std::thread::scope(|scope| {
             for _ in 0..self.host_threads.max(1) {
@@ -91,44 +128,117 @@ impl Coordinator {
                         break;
                     }
                     let r = self.execute(&jobs[i]);
-                    **slots[i].lock().unwrap() = Some(r);
+                    *slots[i].lock().unwrap() = Some(r);
                 });
             }
         });
-        out.into_iter().map(|t| t.expect("all jobs completed")).collect()
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("all jobs completed"))
+            .collect()
     }
 
-    fn execute_on_lane(&self, job: &MatMulJob) -> Tensor {
+    /// Execute a batch with shape-keyed coalescing: lane-eligible jobs
+    /// sharing the *same weight tensor* (same `Arc`) are merged into one
+    /// submission whose activation rows are the concatenation of the
+    /// members' rows, and merged groups are ordered by kernel kind to
+    /// avoid CONF switches. Outputs are returned per job, in submission
+    /// order, **bit-identical** to executing each job alone (each output
+    /// row is an independent vec-dot of the same operands).
+    pub fn execute_coalesced(&self, jobs: &[MatMulJob]) -> Vec<Tensor> {
+        let mut out: Vec<Option<Tensor>> = (0..jobs.len()).map(|_| None).collect();
+        // Group lane jobs by weight identity; host jobs run individually.
+        let mut host_jobs: Vec<usize> = Vec::new();
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        let mut by_weight: HashMap<usize, usize> = HashMap::new();
+        for (i, job) in jobs.iter().enumerate() {
+            if self.policy.offloads(&job.w) && !self.lanes.is_empty() {
+                let key = Arc::as_ptr(&job.w) as usize;
+                match by_weight.entry(key) {
+                    std::collections::hash_map::Entry::Occupied(e) => groups[*e.get()].push(i),
+                    std::collections::hash_map::Entry::Vacant(v) => {
+                        v.insert(groups.len());
+                        groups.push(vec![i]);
+                    }
+                }
+            } else {
+                host_jobs.push(i);
+            }
+        }
+        // Order merged groups by shape key: same-kernel (and, within a
+        // kernel, same-geometry) groups submit back-to-back, so a lane
+        // re-hit by consecutive submissions avoids CONF reconfiguration.
+        groups.sort_by_key(|members| {
+            let key = jobs[members[0]].shape_key();
+            (key.dtype.name(), key.m, key.k)
+        });
+
+        for members in &groups {
+            let w = &jobs[members[0]].w;
+            if members.len() == 1 {
+                let i = members[0];
+                out[i] = Some(self.execute_on_lane_ref(w, &jobs[i].x));
+                continue;
+            }
+            // Concatenate activation rows across the member jobs.
+            let k = w.cols;
+            let total_rows: usize = members.iter().map(|&i| jobs[i].x.rows).sum();
+            let mut data = Vec::with_capacity(total_rows * k);
+            for &i in members {
+                assert_eq!(jobs[i].x.cols, k, "coalesced jobs must share K");
+                data.extend_from_slice(jobs[i].x.as_f32());
+            }
+            let x_cat = Tensor::f32(total_rows, k, data);
+            let y = self.execute_on_lane_ref(w, &x_cat); // [total_rows, m]
+            self.metrics.record_batch(members.len() as u64);
+            // Split the stacked output rows back per job.
+            let m = w.rows;
+            let mut row = 0;
+            for &i in members {
+                let n_i = jobs[i].x.rows;
+                let slice = &y.as_f32()[row * m..(row + n_i) * m];
+                out[i] = Some(Tensor::f32(n_i, m, slice.to_vec()));
+                row += n_i;
+            }
+        }
+        for &i in &host_jobs {
+            self.metrics.record_host(jobs[i].macs());
+            out[i] = Some(ggml::mul_mat(&jobs[i].w, &jobs[i].x, self.host_threads));
+        }
+        out.into_iter().map(|t| t.expect("all jobs executed")).collect()
+    }
+
+    fn execute_on_lane_ref(&self, w: &Tensor, x: &Tensor) -> Tensor {
         let idx = self.next_lane.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
             % self.lanes.len();
-        let (m, n, k) = (job.w.rows, job.x.rows, job.w.cols);
+        let (m, n, k) = (w.rows, x.rows, w.cols);
+        let macs = (m * k * n) as u64;
         // Host-side marshalling happens on the calling (host) thread.
-        let result = match &job.w.data {
+        match &w.data {
             crate::ggml::tensor::Storage::Q8_0(blocks) => {
                 let acts: Vec<_> = (0..n)
-                    .flat_map(|r| q8_0::quantize_row(job.x.row_f32(r)))
+                    .flat_map(|r| q8_0::quantize_row(x.row_f32(r)))
                     .collect();
                 let mut lane = self.lanes[idx].lock().unwrap();
                 let (data, bd) = lane
                     .mul_mat_q8_0(blocks, m, &acts, n, k)
                     .expect("job shapes fit LMM");
-                self.metrics.record_offload(job.macs(), bd.total());
+                self.metrics.record_offload(macs, bd.total());
                 Tensor::f32(n, m, data)
             }
             crate::ggml::tensor::Storage::Q3K(blocks) => {
                 let acts: Vec<_> = (0..n)
-                    .flat_map(|r| q8_k::quantize_row(job.x.row_f32(r)))
+                    .flat_map(|r| q8_k::quantize_row(x.row_f32(r)))
                     .collect();
                 let mut lane = self.lanes[idx].lock().unwrap();
                 let (data, bd) = lane
                     .mul_mat_q3_k(blocks, m, &acts, n, k)
                     .expect("job shapes fit LMM");
-                self.metrics.record_offload(job.macs(), bd.total());
+                self.metrics.record_offload(macs, bd.total());
                 Tensor::f32(n, m, data)
             }
             _ => unreachable!("policy only offloads quantized weights"),
-        };
-        result
+        }
     }
 }
 
@@ -147,6 +257,7 @@ pub use crate::ggml::tensor::Storage;
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ggml::q3_k;
     use crate::util::rng::Xoshiro256pp;
 
     fn rnd(rows: usize, cols: usize, seed: u64) -> Tensor {
@@ -232,5 +343,97 @@ mod tests {
                 assert_eq!(got.as_f32()[a_row * 3 + w_row].to_bits(), want.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn shape_key_groups_same_geometry() {
+        let a = make_job("a", rnd(4, 64, 1), DType::Q8_0, rnd(3, 64, 2));
+        let b = make_job("b", rnd(4, 64, 3), DType::Q8_0, rnd(7, 64, 4));
+        let c = make_job("c", rnd(8, 64, 5), DType::Q8_0, rnd(3, 64, 6));
+        assert_eq!(a.shape_key(), b.shape_key(), "N does not enter the key");
+        assert_ne!(a.shape_key(), c.shape_key(), "M does");
+        assert_eq!(a.shape_key(), ShapeKey { dtype: DType::Q8_0, m: 4, k: 64 });
+    }
+
+    #[test]
+    fn coalesced_bit_identical_to_serial() {
+        // Three requests hitting the same two weight tensors, plus one
+        // host (F16) job: coalesced outputs must match per-job execution
+        // bit-for-bit, in submission order.
+        let w1 = Arc::new(rnd(6, 128, 1).quantize(DType::Q8_0));
+        let w2 = Arc::new(rnd(4, 256, 2).quantize(DType::Q3K));
+        let wf = Arc::new(rnd(5, 64, 3).quantize(DType::F16));
+        let mut jobs = Vec::new();
+        for r in 0..3u64 {
+            jobs.push(MatMulJob {
+                name: format!("r{r}.l1"),
+                w: Arc::clone(&w1),
+                x: Arc::new(rnd(2 + r as usize, 128, 10 + r)),
+            });
+            jobs.push(MatMulJob {
+                name: format!("r{r}.l2"),
+                w: Arc::clone(&w2),
+                x: Arc::new(rnd(3, 256, 20 + r)),
+            });
+        }
+        jobs.push(MatMulJob { name: "host".into(), w: wf, x: Arc::new(rnd(2, 64, 30)) });
+
+        let serial = coordinator(2);
+        let want: Vec<Tensor> = jobs.iter().map(|j| serial.execute(j)).collect();
+        let batched = coordinator(2);
+        let got = batched.execute_coalesced(&jobs);
+        assert_eq!(got.len(), want.len());
+        for (g, w_) in got.iter().zip(&want) {
+            assert_eq!((g.rows, g.cols), (w_.rows, w_.cols));
+            for (a, b) in g.as_f32().iter().zip(w_.as_f32()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "batched == serial bit-exact");
+            }
+        }
+    }
+
+    #[test]
+    fn coalescing_merges_submissions_and_saves_cycles() {
+        let w = Arc::new(rnd(8, 128, 1).quantize(DType::Q8_0));
+        let jobs: Vec<MatMulJob> = (0..6u64)
+            .map(|r| MatMulJob {
+                name: format!("r{r}"),
+                w: Arc::clone(&w),
+                x: Arc::new(rnd(4, 128, 40 + r)),
+            })
+            .collect();
+
+        let serial = coordinator(1);
+        for j in &jobs {
+            serial.execute(j);
+        }
+        let batched = coordinator(1);
+        batched.execute_coalesced(&jobs);
+
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(serial.metrics.offloaded_jobs.load(ord), 6);
+        assert_eq!(batched.metrics.offloaded_jobs.load(ord), 1, "one merged submission");
+        assert_eq!(batched.metrics.batched_submissions.load(ord), 1);
+        assert_eq!(batched.metrics.coalesced_jobs.load(ord), 6);
+        assert_eq!(
+            serial.metrics.offloaded_macs.load(ord),
+            batched.metrics.offloaded_macs.load(ord),
+            "same work either way"
+        );
+        assert!(
+            batched.metrics.imax_cycles.load(ord) < serial.metrics.imax_cycles.load(ord),
+            "batched submission amortizes DMA setup + weight streaming: {} vs {}",
+            batched.metrics.imax_cycles.load(ord),
+            serial.metrics.imax_cycles.load(ord)
+        );
+    }
+
+    #[test]
+    fn coalesced_handles_empty_and_singleton() {
+        let c = coordinator(2);
+        assert!(c.execute_coalesced(&[]).is_empty());
+        let job = make_job("solo", rnd(4, 64, 1), DType::Q8_0, rnd(2, 64, 2));
+        let got = c.execute_coalesced(std::slice::from_ref(&job));
+        let want = c.execute(&job);
+        assert_eq!(got[0].as_f32(), want.as_f32());
     }
 }

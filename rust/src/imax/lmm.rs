@@ -107,10 +107,9 @@ impl Lmm {
 }
 
 /// LMM failure modes.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum LmmError {
     /// Allocation exceeded free capacity.
-    #[error("LMM OOM allocating {requested} B for '{label}' ({free} B free)")]
     OutOfMemory {
         /// Bytes requested.
         requested: usize,
@@ -120,6 +119,18 @@ pub enum LmmError {
         label: &'static str,
     },
 }
+
+impl std::fmt::Display for LmmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LmmError::OutOfMemory { requested, free, label } => {
+                write!(f, "LMM OOM allocating {requested} B for '{label}' ({free} B free)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LmmError {}
 
 #[cfg(test)]
 mod tests {

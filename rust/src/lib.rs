@@ -8,6 +8,8 @@ pub mod coordinator;
 pub mod device;
 pub mod ggml;
 pub mod imax;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sd;
+pub mod serve;
 pub mod util;

@@ -41,7 +41,7 @@ fn devices() -> Vec<Box<dyn Device>> {
     ]
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let app = App::new("imax-sd", "Stable Diffusion on the IMAX3 CGLA — reproduction CLI")
         .subcommand(
             App::new("generate", "generate an image with the mini pipeline (Fig. 5)")

@@ -91,6 +91,17 @@ impl Feat {
     }
 }
 
+/// Identity of one serving request, threaded through the engines so a
+/// shared profile can be split per request (the serving layer's latency
+/// and accounting unit). Single-shot runs use [`RequestId::SOLO`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RequestId(pub u64);
+
+impl RequestId {
+    /// The id used by non-serving (single request) pipeline runs.
+    pub const SOLO: RequestId = RequestId(0);
+}
+
 /// Per-engine run statistics (mini analog of the paper's profiling).
 #[derive(Debug, Clone, Default)]
 pub struct EngineStats {
@@ -98,6 +109,8 @@ pub struct EngineStats {
     pub seconds_by_dtype: BTreeMap<&'static str, f64>,
     /// MACs per weight dtype.
     pub macs_by_dtype: BTreeMap<&'static str, u64>,
+    /// MACs per request id (one entry for non-serving runs).
+    pub macs_by_request: BTreeMap<u64, u64>,
     /// Mat-mul invocations.
     pub calls: u64,
     /// Ops executed on the IMAX simulator.
@@ -107,9 +120,13 @@ pub struct EngineStats {
 }
 
 impl EngineStats {
-    fn record(&mut self, dtype: DType, macs: u64, secs: f64) {
+    /// Record one mat-mul for `request` (crate-visible so engine
+    /// implementations outside this module, e.g. the serving batcher,
+    /// account identically).
+    pub(crate) fn record(&mut self, request: RequestId, dtype: DType, macs: u64, secs: f64) {
         *self.seconds_by_dtype.entry(dtype.name()).or_insert(0.0) += secs;
         *self.macs_by_dtype.entry(dtype.name()).or_insert(0) += macs;
+        *self.macs_by_request.entry(request.0).or_insert(0) += macs;
         self.calls += 1;
     }
 }
@@ -120,19 +137,22 @@ pub trait MatMulEngine {
     fn mul_mat(&mut self, w: &Tensor, x: &Tensor) -> Tensor;
     /// Statistics so far.
     fn stats(&self) -> &EngineStats;
+    /// Tag subsequent mat-muls with a request id (default: keep SOLO).
+    fn begin_request(&mut self, _id: RequestId) {}
 }
 
 /// Host engine: GGML kernels on CPU threads.
 pub struct HostEngine {
     /// Worker threads for row-parallel mat-muls.
     pub threads: usize,
+    request: RequestId,
     stats: EngineStats,
 }
 
 impl HostEngine {
     /// New host engine.
     pub fn new(threads: usize) -> HostEngine {
-        HostEngine { threads, stats: EngineStats::default() }
+        HostEngine { threads, request: RequestId::SOLO, stats: EngineStats::default() }
     }
 }
 
@@ -141,12 +161,16 @@ impl MatMulEngine for HostEngine {
         let t0 = std::time::Instant::now();
         let out = ggml::mul_mat(w, x, self.threads);
         let macs = (w.rows * w.cols * x.rows) as u64;
-        self.stats.record(w.dtype(), macs, t0.elapsed().as_secs_f64());
+        self.stats.record(self.request, w.dtype(), macs, t0.elapsed().as_secs_f64());
         out
     }
 
     fn stats(&self) -> &EngineStats {
         &self.stats
+    }
+
+    fn begin_request(&mut self, id: RequestId) {
+        self.request = id;
     }
 }
 
@@ -157,13 +181,19 @@ pub struct ImaxEngine {
     lane: LaneSim,
     /// Host threads for the non-offloaded ops.
     pub threads: usize,
+    request: RequestId,
     stats: EngineStats,
 }
 
 impl ImaxEngine {
     /// New engine over an IMAX configuration.
     pub fn new(imax: ImaxConfig, threads: usize) -> ImaxEngine {
-        ImaxEngine { lane: LaneSim::new(imax), threads, stats: EngineStats::default() }
+        ImaxEngine {
+            lane: LaneSim::new(imax),
+            threads,
+            request: RequestId::SOLO,
+            stats: EngineStats::default(),
+        }
     }
 
     /// Which quantized model a weight dtype's offloads correspond to.
@@ -208,12 +238,16 @@ impl MatMulEngine for ImaxEngine {
             }
             _ => ggml::mul_mat(w, x, self.threads),
         };
-        self.stats.record(w.dtype(), macs, t0.elapsed().as_secs_f64());
+        self.stats.record(self.request, w.dtype(), macs, t0.elapsed().as_secs_f64());
         out
     }
 
     fn stats(&self) -> &EngineStats {
         &self.stats
+    }
+
+    fn begin_request(&mut self, id: RequestId) {
+        self.request = id;
     }
 }
 
@@ -569,6 +603,20 @@ mod tests {
         eng.mul_mat(&w, &x);
         assert_eq!(eng.stats().calls, 1);
         assert_eq!(eng.stats().macs_by_dtype["Q8_0"], 4 * 32 * 2);
+    }
+
+    #[test]
+    fn engine_stats_split_per_request() {
+        let mut eng = HostEngine::new(1);
+        let w = Tensor::f32(4, 32, vec![0.1; 128]).quantize(crate::ggml::DType::Q8_0);
+        let x = Tensor::f32(2, 32, vec![0.2; 64]);
+        eng.mul_mat(&w, &x); // SOLO
+        eng.begin_request(RequestId(7));
+        eng.mul_mat(&w, &x);
+        eng.mul_mat(&w, &x);
+        assert_eq!(eng.stats().macs_by_request[&0], 4 * 32 * 2);
+        assert_eq!(eng.stats().macs_by_request[&7], 2 * 4 * 32 * 2);
+        assert_eq!(eng.stats().calls, 3);
     }
 
     #[test]

@@ -27,4 +27,5 @@ pub mod unet;
 pub mod vae;
 pub mod weights;
 
+pub use graph::RequestId;
 pub use trace::{MatMulOp, OpCategory, QuantModel, WorkloadTrace};

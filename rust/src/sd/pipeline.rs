@@ -7,7 +7,7 @@
 //! run returns a [`RunReport`] with the mini analog of the paper's
 //! profiling (per-dtype times, offload counts, IMAX phase breakdown).
 
-use super::graph::{Feat, HostEngine, ImaxEngine, MatMulEngine};
+use super::graph::{Feat, HostEngine, ImaxEngine, MatMulEngine, RequestId};
 use super::sampler;
 use super::text::TextEncoder;
 use super::unet::{UNet, LATENT_C, LATENT_HW};
@@ -62,6 +62,8 @@ impl Default for PipelineConfig {
 /// Run metadata returned alongside the image.
 #[derive(Debug, Clone)]
 pub struct RunReport {
+    /// Request this run served ([`RequestId::SOLO`] outside serving).
+    pub request: RequestId,
     /// Wall-clock seconds.
     pub wall_seconds: f64,
     /// Wall-clock seconds per weight dtype (mini Table I analog).
@@ -113,23 +115,40 @@ impl Pipeline {
     /// Generate an image for a prompt + seed. Returns the RGB image
     /// (3×128×128, values in `[0,1]`) and the run report.
     pub fn generate(&self, prompt: &str, seed: u64) -> (Feat, RunReport) {
-        let t0 = std::time::Instant::now();
         let mut eng = self.make_engine();
-        let ctx = self.text.encode(eng.as_mut(), prompt);
+        self.generate_with_engine(eng.as_mut(), RequestId::SOLO, prompt, seed)
+    }
+
+    /// [`Pipeline::generate`] over a caller-supplied engine, tagged with
+    /// a request id — the entry point the serving layer uses so many
+    /// concurrent requests can share one pipeline (weights are read-only)
+    /// while each runs on its own engine (a batching member engine in
+    /// [`crate::serve`]).
+    pub fn generate_with_engine(
+        &self,
+        eng: &mut dyn MatMulEngine,
+        request: RequestId,
+        prompt: &str,
+        seed: u64,
+    ) -> (Feat, RunReport) {
+        let t0 = std::time::Instant::now();
+        eng.begin_request(request);
+        let ctx = self.text.encode(eng, prompt);
         let z_seed = seed ^ fnv1a64(prompt.as_bytes());
         let z = sampler::initial_latent(z_seed, LATENT_C, LATENT_HW, LATENT_HW);
         let x0 = if self.config.steps == 1 {
-            sampler::turbo_step(eng.as_mut(), &self.unet, &z, &ctx)
+            sampler::turbo_step(eng, &self.unet, &z, &ctx)
         } else {
-            sampler::ddim(eng.as_mut(), &self.unet, &z, &ctx, self.config.steps)
+            sampler::ddim(eng, &self.unet, &z, &ctx, self.config.steps)
         };
-        let img = self.vae.decode(eng.as_mut(), &x0);
+        let img = self.vae.decode(eng, &x0);
         let stats = eng.stats();
         let clock = match &self.config.backend {
             Backend::Imax { config, .. } => config.clock_hz,
             _ => 0.0,
         };
         let report = RunReport {
+            request,
             wall_seconds: t0.elapsed().as_secs_f64(),
             seconds_by_dtype: stats.seconds_by_dtype.iter().map(|(k, v)| (*k, *v)).collect(),
             macs_by_dtype: stats.macs_by_dtype.iter().map(|(k, v)| (*k, *v)).collect(),

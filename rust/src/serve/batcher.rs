@@ -1,0 +1,321 @@
+//! Cross-request mat-mul coalescing: the rendezvous at the heart of the
+//! serving layer.
+//!
+//! Every request in a micro-batch runs the identical op sequence over a
+//! shared read-only [`crate::sd::pipeline::Pipeline`], so the i-th
+//! mat-mul of every request names the *same weight tensor*. Each request
+//! thread drives a [`BatchMember`] engine; model-weight mat-muls
+//! rendezvous in the shared [`SharedBatch`]: the last arrival (the
+//! leader) concatenates all members' activation rows, performs **one**
+//! coordinator submission for the whole micro-batch, splits the stacked
+//! output rows back, and wakes the waiters.
+//!
+//! Activation×activation mat-muls (attention scores / values — F32, and
+//! per-request tensors, so there is nothing shared to batch) bypass the
+//! rendezvous and run immediately on the coordinator's host path — which
+//! is also the paper's routing (F32 never offloads).
+//!
+//! Determinism: each output row of a GGML-style `mul_mat` is an
+//! independent vec-dot of one weight row and one activation row, and
+//! activation quantization is per-row — so batched outputs are
+//! **bit-identical** to serial per-request execution (regression-tested
+//! in `tests/serve_batching.rs`).
+
+use crate::coordinator::Coordinator;
+use crate::ggml::tensor::Storage;
+use crate::ggml::{DType, Tensor};
+use crate::sd::graph::{EngineStats, MatMulEngine, RequestId};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Cheap identity fingerprint of a weight tensor: storage address +
+/// shape. Model weights live at stable addresses inside the shared
+/// pipeline, so equal fingerprints across members ⇒ same tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct WeightFp {
+    addr: usize,
+    rows: usize,
+    cols: usize,
+}
+
+fn fingerprint(w: &Tensor) -> WeightFp {
+    let addr = match &w.data {
+        Storage::F32(v) => v.as_ptr() as usize,
+        Storage::F16(v) => v.as_ptr() as usize,
+        Storage::Q8_0(v) => v.as_ptr() as usize,
+        Storage::Q3K(v) => v.as_ptr() as usize,
+        Storage::Q8K(v) => v.as_ptr() as usize,
+    };
+    WeightFp { addr, rows: w.rows, cols: w.cols }
+}
+
+struct Pending {
+    fp: WeightFp,
+    x: Tensor,
+}
+
+struct BatchState {
+    inputs: Vec<Option<Pending>>,
+    outputs: Vec<Option<Tensor>>,
+    arrived: usize,
+    generation: u64,
+}
+
+/// Rendezvous shared by the members of one micro-batch.
+pub struct SharedBatch {
+    size: usize,
+    coordinator: Arc<Coordinator>,
+    state: Mutex<BatchState>,
+    cv: Condvar,
+}
+
+impl SharedBatch {
+    /// New rendezvous for `size` lockstep members.
+    pub fn new(size: usize, coordinator: Arc<Coordinator>) -> Arc<SharedBatch> {
+        assert!(size >= 1, "a batch needs at least one member");
+        Arc::new(SharedBatch {
+            size,
+            coordinator,
+            state: Mutex::new(BatchState {
+                inputs: (0..size).map(|_| None).collect(),
+                outputs: (0..size).map(|_| None).collect(),
+                arrived: 0,
+                generation: 0,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Members in the micro-batch.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// The coordinator executing the merged submissions.
+    pub fn coordinator(&self) -> &Arc<Coordinator> {
+        &self.coordinator
+    }
+
+    /// Rendezvous: block until all `size` members have submitted their
+    /// activations for the current op, execute once, return this
+    /// member's `[n_slot, m]` output.
+    fn submit(&self, slot: usize, w: &Tensor, x: &Tensor) -> Tensor {
+        if self.size == 1 {
+            // Nothing to merge: skip the rendezvous (and its activation
+            // clone) entirely — this is the serial baseline path.
+            return self.coordinator.execute_ref(w, x);
+        }
+        let mut st = self.state.lock().unwrap();
+        assert!(
+            st.inputs[slot].is_none(),
+            "member {slot} submitted twice before the rendezvous completed"
+        );
+        st.inputs[slot] = Some(Pending { fp: fingerprint(w), x: x.clone() });
+        st.arrived += 1;
+        if st.arrived == self.size {
+            // Leader: concatenate activation rows in slot order.
+            let fp = fingerprint(w);
+            let (m, k) = (w.rows, w.cols);
+            let mut rows_per = Vec::with_capacity(self.size);
+            let mut total_rows = 0;
+            for p in st.inputs.iter().flatten() {
+                assert_eq!(p.fp, fp, "lockstep members diverged at a rendezvous point");
+                rows_per.push(p.x.rows);
+                total_rows += p.x.rows;
+            }
+            let mut data = Vec::with_capacity(total_rows * k);
+            for p in st.inputs.iter().flatten() {
+                data.extend_from_slice(p.x.as_f32());
+            }
+            let x_cat = Tensor::f32(total_rows, k, data);
+            let y = self.coordinator.execute_ref(w, &x_cat); // [total_rows, m]
+            // Count the merge only when it actually reached a lane, so
+            // `batched_submissions` stays comparable with
+            // `Coordinator::execute_coalesced` ("merged *lane*
+            // submissions"); merged host (F16) mat-muls are not lane
+            // submissions.
+            if self.coordinator.policy.offloads(w) && self.coordinator.lanes() > 0 {
+                self.coordinator.metrics.record_batch(self.size as u64);
+            }
+            // Split the stacked output rows back per member.
+            let mut row = 0;
+            for (i, n_i) in rows_per.iter().copied().enumerate() {
+                let slice = &y.as_f32()[row * m..(row + n_i) * m];
+                st.outputs[i] = Some(Tensor::f32(n_i, m, slice.to_vec()));
+                row += n_i;
+            }
+            for p in st.inputs.iter_mut() {
+                *p = None;
+            }
+            st.arrived = 0;
+            st.generation = st.generation.wrapping_add(1);
+            let mine = st.outputs[slot].take().expect("leader output present");
+            self.cv.notify_all();
+            mine
+        } else {
+            let gen = st.generation;
+            while st.generation == gen {
+                st = self.cv.wait(st).unwrap();
+            }
+            st.outputs[slot].take().expect("rendezvous output present")
+        }
+    }
+}
+
+/// Per-request engine participating in a [`SharedBatch`].
+pub struct BatchMember {
+    shared: Arc<SharedBatch>,
+    slot: usize,
+    request: RequestId,
+    stats: EngineStats,
+}
+
+impl BatchMember {
+    /// Member engine for `slot` (0-based, unique within the batch).
+    pub fn new(shared: Arc<SharedBatch>, slot: usize, request: RequestId) -> BatchMember {
+        assert!(slot < shared.size(), "slot out of range");
+        BatchMember { shared, slot, request, stats: EngineStats::default() }
+    }
+}
+
+impl MatMulEngine for BatchMember {
+    fn mul_mat(&mut self, w: &Tensor, x: &Tensor) -> Tensor {
+        let t0 = std::time::Instant::now();
+        let macs = (w.rows * w.cols * x.rows) as u64;
+        let offloads = self.shared.coordinator().policy.offloads(w);
+        let out = if w.dtype() == DType::F32 {
+            // Per-request activation tensor as "weight": nothing shared
+            // to batch; run on the host path immediately.
+            self.shared.coordinator().execute_ref(w, x)
+        } else {
+            self.shared.submit(self.slot, w, x)
+        };
+        if offloads {
+            self.stats.offloaded_calls += 1;
+        }
+        self.stats.record(self.request, w.dtype(), macs, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    fn begin_request(&mut self, id: RequestId) {
+        self.request = id;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::OffloadPolicy;
+    use crate::ggml;
+    use crate::imax::ImaxConfig;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn rnd(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        let mut v = vec![0.0f32; rows * cols];
+        r.fill_normal(&mut v, 0.5);
+        Tensor::f32(rows, cols, v)
+    }
+
+    fn coordinator(lanes: usize) -> Arc<Coordinator> {
+        Arc::new(Coordinator::new(ImaxConfig::fpga(1), lanes, 2, OffloadPolicy::QuantizedOnly))
+    }
+
+    #[test]
+    fn single_member_batch_executes_inline() {
+        let shared = SharedBatch::new(1, coordinator(1));
+        let w = rnd(4, 64, 1).quantize(DType::Q8_0);
+        let x = rnd(3, 64, 2);
+        let mut eng = BatchMember::new(shared, 0, RequestId(1));
+        let got = eng.mul_mat(&w, &x);
+        let want = ggml::mul_mat(&w, &x, 1);
+        for (a, b) in got.as_f32().iter().zip(want.as_f32()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(eng.stats().offloaded_calls, 1);
+        assert_eq!(eng.stats().macs_by_request[&1], 4 * 64 * 3);
+    }
+
+    #[test]
+    fn rendezvous_merges_and_splits_per_member() {
+        let coord = coordinator(2);
+        let w = rnd(6, 128, 3).quantize(DType::Q8_0);
+        let xs: Vec<Tensor> = (0..3).map(|i| rnd(2 + i, 128, 10 + i as u64)).collect();
+        let shared = SharedBatch::new(3, Arc::clone(&coord));
+        let outs: Vec<Tensor> = std::thread::scope(|scope| {
+            let handles: Vec<_> = xs
+                .iter()
+                .enumerate()
+                .map(|(slot, x)| {
+                    let shared = Arc::clone(&shared);
+                    let w = &w;
+                    scope.spawn(move || {
+                        let mut eng = BatchMember::new(shared, slot, RequestId(slot as u64));
+                        eng.mul_mat(w, x)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (x, got) in xs.iter().zip(&outs) {
+            let want = ggml::mul_mat(&w, x, 1);
+            assert_eq!((got.rows, got.cols), (x.rows, 6));
+            for (a, b) in got.as_f32().iter().zip(want.as_f32()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "batched row == serial row");
+            }
+        }
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(coord.metrics.offloaded_jobs.load(ord), 1, "one merged submission");
+        assert_eq!(coord.metrics.coalesced_jobs.load(ord), 3);
+    }
+
+    #[test]
+    fn f32_ops_bypass_the_rendezvous() {
+        // With batch size 2 but only ONE member issuing an F32 op, a
+        // rendezvous would deadlock — bypass means it must complete.
+        let shared = SharedBatch::new(2, coordinator(1));
+        let w = rnd(4, 32, 5); // F32 "weight" (attention-score pattern)
+        let x = rnd(3, 32, 6);
+        let mut eng = BatchMember::new(shared, 0, RequestId(0));
+        let got = eng.mul_mat(&w, &x);
+        let want = ggml::mul_mat(&w, &x, 1);
+        for (a, b) in got.as_f32().iter().zip(want.as_f32()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        assert_eq!(eng.stats().offloaded_calls, 0);
+    }
+
+    #[test]
+    fn repeated_rendezvous_across_generations() {
+        let coord = coordinator(1);
+        let w1 = rnd(4, 64, 7).quantize(DType::Q8_0);
+        let w2 = rnd(8, 64, 8).quantize(DType::F16);
+        let shared = SharedBatch::new(2, Arc::clone(&coord));
+        std::thread::scope(|scope| {
+            for slot in 0..2usize {
+                let shared = Arc::clone(&shared);
+                let (w1, w2) = (&w1, &w2);
+                scope.spawn(move || {
+                    let mut eng = BatchMember::new(shared, slot, RequestId(slot as u64));
+                    for round in 0..4u64 {
+                        let x = rnd(2, 64, 100 + 10 * round + slot as u64);
+                        let a = eng.mul_mat(w1, &x);
+                        let b = eng.mul_mat(w2, &x);
+                        assert_eq!(a.rows, 2);
+                        assert_eq!(b.cols, 8);
+                    }
+                });
+            }
+        });
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        // 4 rounds × 1 quantized rendezvous each -> 4 merged lane
+        // submissions; the F16 rendezvous runs merged on the host path
+        // and therefore does NOT count as a batched lane submission.
+        assert_eq!(coord.metrics.offloaded_jobs.load(ord), 4);
+        assert_eq!(coord.metrics.batched_submissions.load(ord), 4);
+        assert_eq!(coord.metrics.coalesced_jobs.load(ord), 8);
+    }
+}

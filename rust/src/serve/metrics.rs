@@ -1,0 +1,139 @@
+//! Serving metrics: per-request latency plus aggregate throughput.
+
+use crate::sd::graph::RequestId;
+use crate::util::stats::Summary;
+
+/// Outcome of one served request.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    /// Request identity.
+    pub id: RequestId,
+    /// The prompt served.
+    pub prompt: String,
+    /// Queue-to-image latency in seconds (includes time spent waiting
+    /// for micro-batch peers at rendezvous points).
+    pub latency_seconds: f64,
+    /// Mat-mul ops executed for this request.
+    pub matmul_calls: u64,
+    /// MACs attributed to this request.
+    pub macs: u64,
+    /// CRC-32 of the RGB8 image bytes (determinism fingerprint).
+    pub image_crc32: u32,
+}
+
+/// Aggregate report for one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Per-request outcomes, sorted by request id.
+    pub outcomes: Vec<RequestOutcome>,
+    /// Wall-clock seconds for the whole run.
+    pub wall_seconds: f64,
+    /// Total MACs across requests (engine-side accounting).
+    pub total_macs: u64,
+    /// MACs offloaded to IMAX lanes.
+    pub offloaded_macs: u64,
+    /// Simulated IMAX cycles across lanes.
+    pub imax_cycles: u64,
+    /// Lane submissions (merged submissions count once).
+    pub lane_submissions: u64,
+    /// Merged lane submissions covering more than one request.
+    pub batched_submissions: u64,
+    /// Jobs folded into merged submissions.
+    pub coalesced_jobs: u64,
+}
+
+impl ServeReport {
+    /// Requests served.
+    pub fn requests(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    /// Aggregate MAC throughput over the run (MAC/s of wall time).
+    pub fn macs_per_second(&self) -> f64 {
+        if self.wall_seconds == 0.0 {
+            0.0
+        } else {
+            self.total_macs as f64 / self.wall_seconds
+        }
+    }
+
+    /// Requests per second of wall time.
+    pub fn requests_per_second(&self) -> f64 {
+        if self.wall_seconds == 0.0 {
+            0.0
+        } else {
+            self.requests() as f64 / self.wall_seconds
+        }
+    }
+
+    /// Simulated IMAX cycles per offloaded MAC — the lane-utilization
+    /// figure (lower = better amortization of DMA/CONF overhead).
+    pub fn cycles_per_offloaded_mac(&self) -> f64 {
+        if self.offloaded_macs == 0 {
+            0.0
+        } else {
+            self.imax_cycles as f64 / self.offloaded_macs as f64
+        }
+    }
+
+    /// Latency distribution across requests (empty runs panic, like
+    /// [`Summary::of`]).
+    pub fn latency_summary(&self) -> Summary {
+        let samples: Vec<f64> = self.outcomes.iter().map(|o| o.latency_seconds).collect();
+        Summary::of(&samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(id: u64, latency: f64, macs: u64) -> RequestOutcome {
+        RequestOutcome {
+            id: RequestId(id),
+            prompt: format!("p{id}"),
+            latency_seconds: latency,
+            matmul_calls: 10,
+            macs,
+            image_crc32: 0,
+        }
+    }
+
+    #[test]
+    fn aggregates_compute() {
+        let r = ServeReport {
+            outcomes: vec![outcome(1, 0.5, 1000), outcome(2, 1.5, 3000)],
+            wall_seconds: 2.0,
+            total_macs: 4000,
+            offloaded_macs: 800,
+            imax_cycles: 400,
+            lane_submissions: 3,
+            batched_submissions: 1,
+            coalesced_jobs: 2,
+        };
+        assert_eq!(r.requests(), 2);
+        assert!((r.macs_per_second() - 2000.0).abs() < 1e-9);
+        assert!((r.requests_per_second() - 1.0).abs() < 1e-9);
+        assert!((r.cycles_per_offloaded_mac() - 0.5).abs() < 1e-9);
+        let lat = r.latency_summary();
+        assert!((lat.mean - 1.0).abs() < 1e-9);
+        assert_eq!(lat.n, 2);
+    }
+
+    #[test]
+    fn zero_denominators_are_safe() {
+        let r = ServeReport {
+            outcomes: Vec::new(),
+            wall_seconds: 0.0,
+            total_macs: 0,
+            offloaded_macs: 0,
+            imax_cycles: 0,
+            lane_submissions: 0,
+            batched_submissions: 0,
+            coalesced_jobs: 0,
+        };
+        assert_eq!(r.macs_per_second(), 0.0);
+        assert_eq!(r.requests_per_second(), 0.0);
+        assert_eq!(r.cycles_per_offloaded_mac(), 0.0);
+    }
+}

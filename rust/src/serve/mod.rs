@@ -1,0 +1,43 @@
+//! Batched multi-lane serving: many concurrent image-generation
+//! requests over one shared pipeline + coordinator.
+//!
+//! The paper evaluates single-image runs; the system-level lever it
+//! leaves on the table (and the companion CGLA/LLM work shows is the
+//! dominant one) is **lane utilization under concurrent kernels**. This
+//! subsystem turns the mini pipeline into a serving stack:
+//!
+//! ```text
+//! requests ──▶ RequestQueue ──▶ worker (micro-batch of ≤ B requests)
+//!                                  │ one thread per request, lockstep
+//!                                  ▼
+//!                             SharedBatch rendezvous per mat-mul
+//!                                  │ same-shape jobs coalesced:
+//!                                  │ activation rows concatenated
+//!                                  ▼
+//!                        Coordinator ──▶ LaneSim lanes (round-robin)
+//!                                  └──▶ host GGML pool (F32/F16 ops)
+//! ```
+//!
+//! All requests in a micro-batch share one [`crate::sd::pipeline::Pipeline`]
+//! (weights are read-only), so every request executes the identical op
+//! sequence; the rendezvous in [`batcher`] exploits that to merge each
+//! model-weight mat-mul across requests into **one** lane submission,
+//! amortizing DMA descriptors, weight-tile streaming and CONF/REGV/RANGE
+//! configuration — strictly fewer simulated cycles per MAC than serial
+//! per-request submission, with bit-identical outputs (each output row is
+//! an independent vec-dot). Multiple workers serve disjoint micro-batches
+//! concurrently, spreading merged submissions over the lanes.
+//!
+//! Metrics: per-request latency plus aggregate throughput in
+//! [`metrics::ServeReport`], built on the extended
+//! [`crate::coordinator::CoordinatorMetrics`] batch counters.
+
+pub mod batcher;
+pub mod metrics;
+pub mod queue;
+pub mod worker;
+
+pub use batcher::{BatchMember, SharedBatch};
+pub use metrics::{RequestOutcome, ServeReport};
+pub use queue::{RequestQueue, ServeRequest};
+pub use worker::{ServeConfig, ServeHarness};

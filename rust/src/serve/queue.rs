@@ -1,0 +1,163 @@
+//! Concurrent request queue feeding the serving workers.
+//!
+//! A bounded-complexity MPMC queue on `Mutex` + `Condvar` (the vendored
+//! crate set has no channel/async runtime): producers [`RequestQueue::push`]
+//! requests, workers block in [`RequestQueue::pop_batch`] until work (or
+//! close), then drain up to a micro-batch worth in FIFO order.
+
+use crate::sd::graph::RequestId;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// One image-generation request.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    /// Request identity (threaded through engines and reports).
+    pub id: RequestId,
+    /// Text prompt.
+    pub prompt: String,
+    /// Latent seed.
+    pub seed: u64,
+}
+
+struct QueueState {
+    pending: VecDeque<ServeRequest>,
+    closed: bool,
+}
+
+/// FIFO request queue with close semantics.
+pub struct RequestQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+impl Default for RequestQueue {
+    fn default() -> Self {
+        RequestQueue::new()
+    }
+}
+
+impl RequestQueue {
+    /// New, open, empty queue.
+    pub fn new() -> RequestQueue {
+        RequestQueue {
+            state: Mutex::new(QueueState { pending: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a request. Panics if the queue was closed.
+    pub fn push(&self, req: ServeRequest) {
+        let mut st = self.state.lock().unwrap();
+        assert!(!st.closed, "push after close");
+        st.pending.push_back(req);
+        drop(st);
+        self.cv.notify_one();
+    }
+
+    /// Close the queue: workers drain what is left, then see empty pops.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Requests currently waiting.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().pending.len()
+    }
+
+    /// True when no request is waiting.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Block until at least one request is available (or the queue is
+    /// closed and drained), then take up to `max` requests in FIFO
+    /// order. An empty vec means "closed and drained" — the worker's
+    /// stop signal.
+    pub fn pop_batch(&self, max: usize) -> Vec<ServeRequest> {
+        assert!(max >= 1, "micro-batch size must be >= 1");
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.pending.is_empty() {
+                let take = st.pending.len().min(max);
+                return st.pending.drain(..take).collect();
+            }
+            if st.closed {
+                return Vec::new();
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn req(id: u64) -> ServeRequest {
+        ServeRequest { id: RequestId(id), prompt: format!("p{id}"), seed: id }
+    }
+
+    #[test]
+    fn fifo_order_and_batch_limit() {
+        let q = RequestQueue::new();
+        for i in 0..5 {
+            q.push(req(i));
+        }
+        q.close();
+        let a = q.pop_batch(3);
+        assert_eq!(a.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let b = q.pop_batch(3);
+        assert_eq!(b.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![3, 4]);
+        assert!(q.pop_batch(3).is_empty(), "closed + drained = stop signal");
+    }
+
+    #[test]
+    fn workers_drain_everything_exactly_once() {
+        let q = RequestQueue::new();
+        for i in 0..40 {
+            q.push(req(i));
+        }
+        q.close();
+        let served = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| loop {
+                    let batch = q.pop_batch(4);
+                    if batch.is_empty() {
+                        break;
+                    }
+                    served.fetch_add(batch.len(), Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(served.load(Ordering::Relaxed), 40);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_blocks_until_push() {
+        let q = RequestQueue::new();
+        std::thread::scope(|scope| {
+            let h = scope.spawn(|| q.pop_batch(2));
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            q.push(req(9));
+            let got = h.join().unwrap();
+            assert_eq!(got.len(), 1);
+            assert_eq!(got[0].id.0, 9);
+        });
+        q.close();
+    }
+
+    #[test]
+    #[should_panic(expected = "push after close")]
+    fn push_after_close_rejected() {
+        let q = RequestQueue::new();
+        q.close();
+        q.push(req(1));
+    }
+}

@@ -1,0 +1,241 @@
+//! The serving harness: workers pulling micro-batches off the queue and
+//! running them lockstep over the shared pipeline.
+
+use super::batcher::{BatchMember, SharedBatch};
+use super::metrics::{RequestOutcome, ServeReport};
+use super::queue::{RequestQueue, ServeRequest};
+use crate::coordinator::{Coordinator, OffloadPolicy};
+use crate::imax::ImaxConfig;
+use crate::sd::graph::RequestId;
+use crate::sd::pipeline::{to_rgb8, Pipeline, PipelineConfig};
+use crate::util::png::crc32;
+use std::sync::{Arc, Mutex};
+
+/// Serving-side knobs (the pipeline/model side comes from
+/// [`PipelineConfig`]).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// IMAX lanes behind the coordinator (1–8).
+    pub lanes: usize,
+    /// Host threads for non-offloaded GGML ops.
+    pub host_threads: usize,
+    /// Maximum requests coalesced into one micro-batch.
+    pub max_batch: usize,
+    /// Concurrent micro-batch workers.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { lanes: 2, host_threads: 2, max_batch: 4, workers: 2 }
+    }
+}
+
+impl ServeConfig {
+    /// The serial baseline: one request at a time, no coalescing — the
+    /// paper's one-image-per-invocation mode, for comparison benches.
+    pub fn serial(lanes: usize, host_threads: usize) -> ServeConfig {
+        ServeConfig { lanes, host_threads, max_batch: 1, workers: 1 }
+    }
+}
+
+/// The serving stack: shared pipeline + coordinator + worker pool.
+pub struct ServeHarness {
+    pipeline: Arc<Pipeline>,
+    coordinator: Arc<Coordinator>,
+    /// Serving configuration.
+    pub config: ServeConfig,
+}
+
+impl ServeHarness {
+    /// Build the harness. `pipe_cfg.backend` is ignored — execution is
+    /// always routed through the coordinator (lanes + host pool).
+    pub fn new(pipe_cfg: PipelineConfig, config: ServeConfig) -> ServeHarness {
+        assert!(config.max_batch >= 1, "max_batch must be >= 1");
+        assert!(config.workers >= 1, "workers must be >= 1");
+        let coordinator = Arc::new(Coordinator::new(
+            ImaxConfig::fpga(config.lanes),
+            config.lanes,
+            config.host_threads,
+            OffloadPolicy::QuantizedOnly,
+        ));
+        ServeHarness { pipeline: Arc::new(Pipeline::new(pipe_cfg)), coordinator, config }
+    }
+
+    /// The shared coordinator (for metric inspection).
+    pub fn coordinator(&self) -> &Arc<Coordinator> {
+        &self.coordinator
+    }
+
+    /// The shared pipeline.
+    pub fn pipeline(&self) -> &Arc<Pipeline> {
+        &self.pipeline
+    }
+
+    /// Serve a set of `(prompt, seed)` requests to completion and report
+    /// per-request latency plus aggregate throughput.
+    pub fn serve(&self, prompts: &[(String, u64)]) -> ServeReport {
+        let t_start = std::time::Instant::now();
+        // Snapshot the shared counters so a reused harness reports this
+        // run's deltas, not lifetime totals.
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        let m = &self.coordinator.metrics;
+        let base_offloaded_macs = m.offloaded_macs.load(ord);
+        let base_imax_cycles = m.imax_cycles.load(ord);
+        let base_lane_submissions = m.offloaded_jobs.load(ord);
+        let base_batched_submissions = m.batched_submissions.load(ord);
+        let base_coalesced_jobs = m.coalesced_jobs.load(ord);
+        let queue = RequestQueue::new();
+        for (i, (prompt, seed)) in prompts.iter().enumerate() {
+            queue.push(ServeRequest {
+                id: RequestId(i as u64 + 1),
+                prompt: prompt.clone(),
+                seed: *seed,
+            });
+        }
+        queue.close();
+
+        let outcomes: Mutex<Vec<RequestOutcome>> = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for _ in 0..self.config.workers {
+                scope.spawn(|| loop {
+                    let batch = queue.pop_batch(self.config.max_batch);
+                    if batch.is_empty() {
+                        break;
+                    }
+                    self.run_micro_batch(&batch, &outcomes);
+                });
+            }
+        });
+
+        let mut outcomes = outcomes.into_inner().unwrap();
+        outcomes.sort_by_key(|o| o.id);
+        let total_macs = outcomes.iter().map(|o| o.macs).sum();
+        ServeReport {
+            outcomes,
+            wall_seconds: t_start.elapsed().as_secs_f64(),
+            total_macs,
+            offloaded_macs: m.offloaded_macs.load(ord) - base_offloaded_macs,
+            imax_cycles: m.imax_cycles.load(ord) - base_imax_cycles,
+            lane_submissions: m.offloaded_jobs.load(ord) - base_lane_submissions,
+            batched_submissions: m.batched_submissions.load(ord) - base_batched_submissions,
+            coalesced_jobs: m.coalesced_jobs.load(ord) - base_coalesced_jobs,
+        }
+    }
+
+    /// Run one micro-batch: one thread per request, lockstep through the
+    /// shared rendezvous.
+    fn run_micro_batch(&self, batch: &[ServeRequest], outcomes: &Mutex<Vec<RequestOutcome>>) {
+        let shared = SharedBatch::new(batch.len(), Arc::clone(&self.coordinator));
+        std::thread::scope(|scope| {
+            for (slot, req) in batch.iter().enumerate() {
+                let shared = Arc::clone(&shared);
+                scope.spawn(move || {
+                    let t0 = std::time::Instant::now();
+                    let mut eng = BatchMember::new(shared, slot, req.id);
+                    let (img, report) = self.pipeline.generate_with_engine(
+                        &mut eng,
+                        req.id,
+                        &req.prompt,
+                        req.seed,
+                    );
+                    let macs: u64 = report.macs_by_dtype.iter().map(|(_, v)| *v).sum();
+                    let outcome = RequestOutcome {
+                        id: req.id,
+                        prompt: req.prompt.clone(),
+                        latency_seconds: t0.elapsed().as_secs_f64(),
+                        matmul_calls: report.matmul_calls,
+                        macs,
+                        image_crc32: crc32(&to_rgb8(&img)),
+                    };
+                    outcomes.lock().unwrap().push(outcome);
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sd::trace::QuantModel;
+
+    fn pipe_cfg() -> PipelineConfig {
+        PipelineConfig {
+            weight_seed: 99,
+            model: Some(QuantModel::Q8_0),
+            steps: 1,
+            backend: crate::sd::pipeline::Backend::Host { threads: 2 },
+        }
+    }
+
+    fn prompts(n: usize) -> Vec<(String, u64)> {
+        (0..n).map(|i| (format!("a lovely cat number {i}"), 7 + i as u64)).collect()
+    }
+
+    #[test]
+    fn serves_all_requests_with_metrics() {
+        let h = ServeHarness::new(
+            pipe_cfg(),
+            ServeConfig { lanes: 2, host_threads: 2, max_batch: 2, workers: 2 },
+        );
+        let report = h.serve(&prompts(4));
+        assert_eq!(report.requests(), 4);
+        assert_eq!(
+            report.outcomes.iter().map(|o| o.id.0).collect::<Vec<_>>(),
+            vec![1, 2, 3, 4],
+            "outcomes sorted by request id"
+        );
+        assert!(report.total_macs > 0);
+        assert!(report.offloaded_macs > 0, "quantized layers offloaded");
+        assert!(report.batched_submissions > 0, "micro-batches coalesced ops");
+        assert!(report.outcomes.iter().all(|o| o.latency_seconds > 0.0));
+        assert!(report.macs_per_second() > 0.0);
+        assert!(report.latency_summary().n == 4);
+    }
+
+    #[test]
+    fn batched_serving_is_deterministic_and_matches_serial() {
+        let reqs = prompts(3);
+        let serial = ServeHarness::new(pipe_cfg(), ServeConfig::serial(1, 2)).serve(&reqs);
+        let batched = ServeHarness::new(
+            pipe_cfg(),
+            ServeConfig { lanes: 1, host_threads: 2, max_batch: 3, workers: 1 },
+        )
+        .serve(&reqs);
+        for (a, b) in serial.outcomes.iter().zip(&batched.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.image_crc32, b.image_crc32, "bit-identical images for {:?}", a.id);
+            assert_eq!(a.macs, b.macs);
+        }
+        assert_eq!(serial.offloaded_macs, batched.offloaded_macs, "same offloaded work");
+        assert!(
+            batched.imax_cycles < serial.imax_cycles,
+            "coalescing must save simulated lane cycles: {} vs {}",
+            batched.imax_cycles,
+            serial.imax_cycles
+        );
+        assert_eq!(serial.batched_submissions, 0);
+        assert!(batched.batched_submissions > 0);
+    }
+
+    #[test]
+    fn reused_harness_reports_per_run_deltas() {
+        let h = ServeHarness::new(pipe_cfg(), ServeConfig::serial(1, 2));
+        let a = h.serve(&prompts(1));
+        let b = h.serve(&prompts(1));
+        assert_eq!(a.requests(), 1);
+        assert_eq!(b.requests(), 1);
+        assert_eq!(a.offloaded_macs, b.offloaded_macs, "deltas, not lifetime totals");
+        assert_eq!(a.lane_submissions, b.lane_submissions);
+        // The lane stays configured across runs, so run B skips CONF.
+        assert!(b.imax_cycles > 0 && b.imax_cycles <= a.imax_cycles);
+    }
+
+    #[test]
+    fn different_prompts_yield_different_images() {
+        let h = ServeHarness::new(pipe_cfg(), ServeConfig::default());
+        let report = h.serve(&[("a lovely cat".into(), 7), ("an angry robot".into(), 7)]);
+        assert_ne!(report.outcomes[0].image_crc32, report.outcomes[1].image_crc32);
+    }
+}

@@ -36,9 +36,10 @@ impl ColorType {
 
 /// CRC-32 (IEEE 802.3), bit-reflected, as PNG requires.
 pub fn crc32(data: &[u8]) -> u32 {
-    // Build the table lazily once.
-    use once_cell::sync::Lazy;
-    static TABLE: Lazy<[u32; 256]> = Lazy::new(|| {
+    // Build the table lazily once (std::sync::OnceLock keeps this
+    // dependency-free; the vendored crate set has no once_cell).
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
         let mut t = [0u32; 256];
         for (n, slot) in t.iter_mut().enumerate() {
             let mut c = n as u32;
@@ -51,7 +52,7 @@ pub fn crc32(data: &[u8]) -> u32 {
     });
     let mut c = 0xFFFF_FFFFu32;
     for &b in data {
-        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
     }
     c ^ 0xFFFF_FFFF
 }

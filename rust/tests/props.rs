@@ -36,6 +36,56 @@ fn prop_q8_0_roundtrip_error_bounded() {
 }
 
 #[test]
+fn prop_q8_k_roundtrip_error_bounded() {
+    // Q8_K anchors the max-magnitude element at -128; every other
+    // element rounds to the nearest step, except values whose scaled
+    // magnitude rounds to 128 and clamps to 127 (error < 1 step).
+    run("q8_K |x - deq(q(x))| <= |d| + eps", 300, Gen::vec_f32(1..=96, -25.0..25.0), |xs| {
+        let x = pad_to(xs, 256);
+        let blocks = q8_k::quantize_row(&x);
+        let back = q8_k::dequantize_row(&blocks);
+        for (i, (a, b)) in x.iter().zip(&back).enumerate() {
+            let d = blocks[i / 256].d.abs();
+            let bound = d + 1e-6;
+            if (a - b).abs() > bound {
+                return Err(format!("elem {i}: {a} vs {b}, d={d}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_q8_k_anchor_is_exact() {
+    // The max-magnitude element must reconstruct (near-)exactly: it maps
+    // to the -128 anchor by construction.
+    run("q8_K anchor reconstructs", 300, Gen::vec_f32(1..=64, -50.0..50.0), |xs| {
+        let x = pad_to(xs, 256);
+        let blocks = q8_k::quantize_row(&x);
+        let back = q8_k::dequantize_row(&blocks);
+        for (bi, b) in blocks.iter().enumerate() {
+            let chunk = &x[bi * 256..(bi + 1) * 256];
+            let (mut amax, mut at) = (0.0f32, 0usize);
+            for (j, &v) in chunk.iter().enumerate() {
+                if v.abs() > amax {
+                    amax = v.abs();
+                    at = j;
+                }
+            }
+            if amax == 0.0 {
+                continue;
+            }
+            let got = back[bi * 256 + at];
+            let want = chunk[at];
+            if (got - want).abs() > 1e-5 * want.abs().max(1.0) {
+                return Err(format!("anchor {at}: {want} -> {got} (d={})", b.d));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_q8_0_sim_bit_exact_with_host() {
     let cfg = KernelConfig::q8_0();
     run("imax q8_0 == ggml vec_dot (bits)", 200, Gen::vec_f32(1..=128, -8.0..8.0), |xs| {

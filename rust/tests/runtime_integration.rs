@@ -4,8 +4,11 @@
 //! paper offloads is implemented three times (rust host kernels, the
 //! IMAX simulator, the Pallas kernels) and all three must agree.
 //!
-//! Requires `make artifacts`; tests skip (with a message) when the
-//! artifacts are absent so plain `cargo test` stays green pre-build.
+//! Requires `make artifacts` and a build with `--features pjrt` (the
+//! runtime module needs the vendored `xla` bindings); tests skip (with a
+//! message) when the artifacts are absent so `cargo test` stays green
+//! pre-build, and the whole file compiles away without the feature.
+#![cfg(feature = "pjrt")]
 
 use imax_sd::ggml::{q3_k, q8_0, q8_k, DType, Tensor};
 use imax_sd::runtime::client::{literal_f32, literal_i8};

@@ -1,0 +1,126 @@
+//! Serving-stack integration: batched multi-lane submission must be
+//! bit-identical to serial per-request submission, strictly cheaper in
+//! simulated lane cycles, and report coherent per-request metrics.
+
+use imax_sd::coordinator::{Coordinator, MatMulJob, OffloadPolicy};
+use imax_sd::ggml::{DType, Tensor};
+use imax_sd::imax::ImaxConfig;
+use imax_sd::sd::pipeline::{Backend, PipelineConfig};
+use imax_sd::sd::QuantModel;
+use imax_sd::serve::{ServeConfig, ServeHarness};
+use imax_sd::util::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+fn rnd(rows: usize, cols: usize, seed: u64) -> Tensor {
+    let mut r = Xoshiro256pp::seed_from_u64(seed);
+    let mut v = vec![0.0f32; rows * cols];
+    r.fill_normal(&mut v, 0.5);
+    Tensor::f32(rows, cols, v)
+}
+
+fn pipe_cfg(model: QuantModel) -> PipelineConfig {
+    PipelineConfig {
+        weight_seed: 0x5D_7B0,
+        model: Some(model),
+        steps: 1,
+        backend: Backend::Host { threads: 2 },
+    }
+}
+
+fn prompts(n: usize) -> Vec<(String, u64)> {
+    (0..n).map(|i| (format!("request number {i} of a lovely cat"), 42 + i as u64)).collect()
+}
+
+/// The ISSUE acceptance regression: coalesced coordinator submission is
+/// bit-identical to serial submission, across both lane kernels.
+#[test]
+fn batched_scheduler_bit_identical_to_serial() {
+    for (dtype, k) in [(DType::Q8_0, 128), (DType::Q3K, 256)] {
+        let w = Arc::new(rnd(8, k, 1).quantize(dtype));
+        let jobs: Vec<MatMulJob> = (0..5u64)
+            .map(|r| MatMulJob {
+                name: format!("req{r}"),
+                w: Arc::clone(&w),
+                x: Arc::new(rnd(3 + r as usize % 2, k, 50 + r)),
+            })
+            .collect();
+        let serial = Coordinator::new(ImaxConfig::fpga(1), 2, 2, OffloadPolicy::QuantizedOnly);
+        let want: Vec<Tensor> = jobs.iter().map(|j| serial.execute(j)).collect();
+        let batched = Coordinator::new(ImaxConfig::fpga(1), 2, 2, OffloadPolicy::QuantizedOnly);
+        let got = batched.execute_coalesced(&jobs);
+        for (g, w_) in got.iter().zip(&want) {
+            assert_eq!(g.rows, w_.rows);
+            for (a, b) in g.as_f32().iter().zip(w_.as_f32()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{dtype:?} batched == serial");
+            }
+        }
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        assert!(
+            batched.metrics.imax_cycles.load(ord) < serial.metrics.imax_cycles.load(ord),
+            "{dtype:?}: coalescing must reduce simulated cycles"
+        );
+    }
+}
+
+/// End-to-end: serving the same requests serially and batched produces
+/// byte-identical images, and batching improves lane efficiency
+/// (cycles per offloaded MAC) — the serve-subsystem acceptance at ≥4
+/// concurrent requests.
+#[test]
+fn serve_batched_matches_serial_and_improves_lane_efficiency() {
+    let reqs = prompts(4);
+    let serial = ServeHarness::new(pipe_cfg(QuantModel::Q8_0), ServeConfig::serial(1, 2));
+    let serial_report = serial.serve(&reqs);
+    let batched = ServeHarness::new(
+        pipe_cfg(QuantModel::Q8_0),
+        ServeConfig { lanes: 2, host_threads: 2, max_batch: 4, workers: 1 },
+    );
+    let batched_report = batched.serve(&reqs);
+
+    assert_eq!(serial_report.requests(), 4);
+    assert_eq!(batched_report.requests(), 4);
+    for (a, b) in serial_report.outcomes.iter().zip(&batched_report.outcomes) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.image_crc32, b.image_crc32, "request {:?} image differs", a.id);
+        assert_eq!(a.matmul_calls, b.matmul_calls);
+    }
+    assert_eq!(serial_report.offloaded_macs, batched_report.offloaded_macs);
+    assert!(
+        batched_report.imax_cycles < serial_report.imax_cycles,
+        "batched lane submission must spend fewer simulated cycles ({} vs {})",
+        batched_report.imax_cycles,
+        serial_report.imax_cycles
+    );
+    assert!(
+        batched_report.cycles_per_offloaded_mac() < serial_report.cycles_per_offloaded_mac(),
+        "higher aggregate MAC throughput per simulated cycle"
+    );
+    assert!(
+        batched_report.lane_submissions < serial_report.lane_submissions,
+        "merged submissions: {} vs {}",
+        batched_report.lane_submissions,
+        serial_report.lane_submissions
+    );
+    assert_eq!(batched_report.coalesced_jobs % 4, 0, "whole micro-batches coalesced");
+}
+
+/// Serving must also work for the Q3_K model (the lane's other kernel),
+/// and per-request MAC accounting must be uniform across identical
+/// requests.
+#[test]
+fn serve_q3k_model_accounts_per_request() {
+    let h = ServeHarness::new(
+        pipe_cfg(QuantModel::Q3K),
+        ServeConfig { lanes: 2, host_threads: 2, max_batch: 2, workers: 2 },
+    );
+    let report = h.serve(&prompts(4));
+    assert_eq!(report.requests(), 4);
+    assert!(report.offloaded_macs > 0, "Q3_K layers offload");
+    let macs0 = report.outcomes[0].macs;
+    assert!(macs0 > 0);
+    for o in &report.outcomes {
+        assert_eq!(o.macs, macs0, "identical pipeline => identical per-request MACs");
+    }
+    let lat = report.latency_summary();
+    assert!(lat.min > 0.0 && lat.max < 3600.0);
+}
