@@ -2,14 +2,27 @@
 //! serving stack, with per-request latency and aggregate throughput.
 //!
 //! Run: `cargo run --release --example serve_demo`
+//!
+//! Flags: `--no-weight-cache` disables LMM weight residency (the paper's
+//! stream-every-call baseline), `--lmm-cache BYTES` sizes the per-lane
+//! cache partition (default 262144).
 
+use imax_sd::imax::ImaxConfig;
 use imax_sd::sd::pipeline::{Backend, PipelineConfig};
 use imax_sd::sd::QuantModel;
 use imax_sd::serve::{ServeConfig, ServeHarness};
+use imax_sd::util::cli::{App, Arg};
 use imax_sd::util::stats::fmt_duration;
 use imax_sd::util::tables::Table;
 
 fn main() {
+    let app = App::new("serve_demo", "batched multi-lane serving demo")
+        .arg(
+            Arg::opt("lmm-cache", 'c', "BYTES", "LMM bytes reserved as resident weight cache")
+                .default("262144"),
+        )
+        .arg(Arg::flag("no-weight-cache", '\0', "disable weight residency"));
+    let m = app.parse_env();
     let prompts: Vec<(String, u64)> = [
         "a lovely cat",
         "an angry robot",
@@ -25,21 +38,41 @@ fn main() {
     .map(|(i, p)| (p.to_string(), 42 + i as u64))
     .collect();
 
-    let harness = ServeHarness::new(
+    let serve_cfg = ServeConfig { lanes: 4, host_threads: 4, max_batch: 4, workers: 2 };
+    let mut imax = ImaxConfig::fpga(serve_cfg.lanes);
+    imax.weight_cache_bytes = if m.flag("no-weight-cache") {
+        0
+    } else {
+        match m.usize("lmm-cache") {
+            Ok(bytes) => bytes,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    };
+    let cache_label = if imax.weight_cache_bytes == 0 {
+        "off".to_string()
+    } else {
+        format!("{} KiB/lane", imax.weight_cache_bytes / 1024)
+    };
+    let harness = ServeHarness::with_imax(
         PipelineConfig {
             weight_seed: 0x5D_7B0,
             model: Some(QuantModel::Q8_0),
             steps: 1,
             backend: Backend::Host { threads: 2 },
         },
-        ServeConfig { lanes: 4, host_threads: 4, max_batch: 4, workers: 2 },
+        serve_cfg,
+        imax,
     );
     println!(
-        "serving {} prompts: {} lanes, {} workers, micro-batch {}\n",
+        "serving {} prompts: {} lanes, {} workers, micro-batch {}, weight cache {}\n",
         prompts.len(),
         harness.config.lanes,
         harness.config.workers,
-        harness.config.max_batch
+        harness.config.max_batch,
+        cache_label
     );
 
     let report = harness.serve(&prompts);
@@ -80,6 +113,12 @@ fn main() {
     println!(
         "  lane efficiency      : {:.4} simulated cycles per offloaded MAC",
         report.cycles_per_offloaded_mac()
+    );
+    println!(
+        "  weight residency     : {} B LOAD skipped, {} B missed ({:.0} % byte hit rate)",
+        report.cache_hit_bytes,
+        report.cache_miss_bytes,
+        100.0 * report.cache_byte_hit_rate()
     );
     println!("\nimages are deterministic: same prompt+seed always gives the same crc32");
 }

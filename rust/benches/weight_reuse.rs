@@ -1,0 +1,70 @@
+//! Cold-step vs warm-step lane cost under weight residency.
+//!
+//! Replays the mini U-Net denoising step on one simulated lane and
+//! reports, per step, the simulated lane cycles and DMA LOAD bytes —
+//! cold (step 1: every weight misses and is DMA'd) vs warm (steps ≥ 2:
+//! resident weights skip LOAD entirely). Run for both quantized models
+//! and two LMM shapes:
+//!
+//! * `fpga 512K/256K` — the paper's 512 KiB LMM with half reserved as
+//!   cache: only the plan-pinned hottest weights stay resident;
+//! * `roomy 4M/2M` — a cache that holds the full weight set: warm steps
+//!   move activations only.
+//!
+//! All reported numbers are simulator-deterministic (independent of the
+//! host machine). `--smoke` shrinks the step count for CI.
+
+use imax_sd::sd::plan::replay_unet_steps;
+use imax_sd::sd::QuantModel;
+use imax_sd::util::tables::Table;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let steps = if smoke { 2 } else { 4 };
+    println!(
+        "weight_reuse: mini U-Net denoising steps on one lane, {} steps{}\n",
+        steps,
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let mut t = Table::new(
+        "Cold vs warm denoising steps (simulated lane)",
+        &["model", "LMM / cache", "step", "cycles", "LOAD B", "hits", "hit B"],
+    );
+    let shapes: [(&str, usize, usize); 3] = [
+        ("512K / off", 512 << 10, 0),
+        ("512K / 256K", 512 << 10, 256 << 10),
+        ("4M / 2M", 4 << 20, 2 << 20),
+    ];
+    for model in [QuantModel::Q8_0, QuantModel::Q3K] {
+        for (label, lmm, cache) in shapes {
+            let costs = replay_unet_steps(model, lmm, cache, steps);
+            for (i, c) in costs.iter().enumerate() {
+                t.row(&[
+                    model.name().to_string(),
+                    label.to_string(),
+                    format!("{}", i + 1),
+                    format!("{}", c.cycles),
+                    format!("{}", c.load_bytes),
+                    format!("{}", c.hits),
+                    format!("{}", c.hit_bytes),
+                ]);
+            }
+            let (cold, warm) = (&costs[0], &costs[costs.len() - 1]);
+            println!(
+                "{} {label}: warm/cold cycles {:.3}, warm/cold LOAD bytes {:.3}",
+                model.name(),
+                warm.cycles as f64 / cold.cycles as f64,
+                warm.load_bytes as f64 / cold.load_bytes as f64,
+            );
+            if cache > 0 {
+                assert!(
+                    warm.cycles < cold.cycles,
+                    "{model:?} {label}: warm step must be strictly cheaper"
+                );
+            }
+        }
+    }
+    println!();
+    t.print();
+}

@@ -1,5 +1,6 @@
 //! Coordinator counters (thread-safe).
 
+use crate::imax::lmm::CacheStats;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Shared metrics for a coordinator instance.
@@ -19,6 +20,23 @@ pub struct CoordinatorMetrics {
     pub batched_submissions: AtomicU64,
     /// Jobs folded into merged submissions.
     pub coalesced_jobs: AtomicU64,
+    /// Lane selections that followed an existing weight→lane affinity
+    /// (the weight's cached tiles were on the chosen lane).
+    pub affinity_hits: AtomicU64,
+    /// Weight-cache lookups that hit, summed over lanes.
+    pub cache_hits: AtomicU64,
+    /// Weight-cache lookups that missed, summed over lanes.
+    pub cache_misses: AtomicU64,
+    /// Weight LOAD bytes skipped thanks to residency.
+    pub cache_hit_bytes: AtomicU64,
+    /// Weight bytes DMA'd on cache misses.
+    pub cache_miss_bytes: AtomicU64,
+    /// Bytes freed by LRU eviction across lanes.
+    pub cache_evicted_bytes: AtomicU64,
+    /// Cache inserts the lanes rejected (weight larger than the
+    /// unpinned budget) — the canary for a mis-sized pin/prefetch pass:
+    /// a healthy plan keeps this at 0 for every pinned weight.
+    pub cache_insert_failures: AtomicU64,
 }
 
 impl CoordinatorMetrics {
@@ -52,6 +70,27 @@ impl CoordinatorMetrics {
         self.coalesced_jobs.fetch_add(jobs, Ordering::Relaxed);
     }
 
+    /// Fold one lane call's residency-cache delta into the shared totals.
+    pub fn record_cache(&self, delta: CacheStats) {
+        self.cache_hits.fetch_add(delta.hits, Ordering::Relaxed);
+        self.cache_misses.fetch_add(delta.misses, Ordering::Relaxed);
+        self.cache_hit_bytes.fetch_add(delta.hit_bytes, Ordering::Relaxed);
+        self.cache_miss_bytes.fetch_add(delta.miss_bytes, Ordering::Relaxed);
+        self.cache_evicted_bytes.fetch_add(delta.evicted_bytes, Ordering::Relaxed);
+        self.cache_insert_failures.fetch_add(delta.insert_failures, Ordering::Relaxed);
+    }
+
+    /// Weight-cache hit rate over lookups in `[0, 1]` (delegates to
+    /// [`CacheStats::hit_rate`] so the definition lives in one place).
+    pub fn cache_hit_rate(&self) -> f64 {
+        CacheStats {
+            hits: self.cache_hits.load(Ordering::Relaxed),
+            misses: self.cache_misses.load(Ordering::Relaxed),
+            ..Default::default()
+        }
+        .hit_rate()
+    }
+
     /// Simulated IMAX cycles per offloaded MAC (0 when nothing offloaded)
     /// — the lane-utilization figure the serving bench compares across
     /// serial and batched submission.
@@ -78,6 +117,27 @@ mod tests {
         assert!((m.offload_ratio() - 0.25).abs() < 1e-12);
         assert_eq!(m.host_jobs.load(Ordering::Relaxed), 1);
         assert_eq!(m.imax_cycles.load(Ordering::Relaxed), 42);
+    }
+
+    #[test]
+    fn cache_counters_fold_deltas() {
+        let m = CoordinatorMetrics::default();
+        assert_eq!(m.cache_hit_rate(), 0.0);
+        m.record_cache(CacheStats {
+            hits: 3,
+            misses: 1,
+            hit_bytes: 300,
+            miss_bytes: 100,
+            evicted_bytes: 50,
+            insert_failures: 2,
+        });
+        m.record_cache(CacheStats { hits: 1, ..Default::default() });
+        assert_eq!(m.cache_hits.load(Ordering::Relaxed), 4);
+        assert_eq!(m.cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(m.cache_hit_bytes.load(Ordering::Relaxed), 300);
+        assert_eq!(m.cache_evicted_bytes.load(Ordering::Relaxed), 50);
+        assert_eq!(m.cache_insert_failures.load(Ordering::Relaxed), 2);
+        assert!((m.cache_hit_rate() - 0.8).abs() < 1e-12);
     }
 
     #[test]

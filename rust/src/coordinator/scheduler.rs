@@ -17,12 +17,21 @@
 //! this. Groups are ordered by kernel kind so consecutive submissions
 //! avoid CONF reconfiguration, the shape-level analog of SD-Acc-style
 //! kernel scheduling.
+//!
+//! Lane selection is **residency-aware**: a job whose weight carries a
+//! [`WeightId`] is routed to the lane that already holds (or was
+//! assigned) that weight's cached tiles, so cross-step and cross-request
+//! reuse land where the bytes are; anonymous weights round-robin as
+//! before. [`Coordinator::apply_plan`] seeds the weight→lane map from a
+//! compiled [`OpPlan`], sharding the hottest weights across lanes and
+//! pinning each lane's share into its LMM cache partition.
 
 use super::metrics::CoordinatorMetrics;
 use super::offload::OffloadPolicy;
-use crate::ggml::{self, q8_0, q8_k, DType, Tensor};
+use crate::ggml::{self, q8_0, q8_k, DType, Tensor, WeightId};
 use crate::imax::lane::LaneSim;
 use crate::imax::ImaxConfig;
+use crate::sd::plan::OpPlan;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -74,6 +83,9 @@ pub struct Coordinator {
     /// Shared counters.
     pub metrics: Arc<CoordinatorMetrics>,
     next_lane: std::sync::atomic::AtomicUsize,
+    /// Sticky weight→lane assignment (keyed by [`WeightId`]): the lane
+    /// whose LMM cache holds — or will hold — the weight's tiles.
+    affinity: Mutex<HashMap<u64, usize>>,
 }
 
 impl Coordinator {
@@ -85,12 +97,66 @@ impl Coordinator {
             policy,
             metrics: Arc::new(CoordinatorMetrics::default()),
             next_lane: std::sync::atomic::AtomicUsize::new(0),
+            affinity: Mutex::new(HashMap::new()),
         }
     }
 
     /// Number of lanes.
     pub fn lanes(&self) -> usize {
         self.lanes.len()
+    }
+
+    /// Seed residency from a compiled [`OpPlan`]: shard the
+    /// offload-eligible weights across lanes hottest-first (so each
+    /// lane's cache serves a disjoint, load-balanced slice of the
+    /// model), and pin each lane's share while it fits that lane's
+    /// cache budget.
+    pub fn apply_plan(&self, plan: &OpPlan) {
+        if self.lanes.is_empty() {
+            return;
+        }
+        let mut map = self.affinity.lock().unwrap();
+        let mut remaining: Vec<usize> = self
+            .lanes
+            .iter()
+            .map(|l| l.lock().unwrap().lmm.cache_budget())
+            .collect();
+        for (rank, wu) in plan.weight_uses().iter().enumerate() {
+            let idx = rank % self.lanes.len();
+            map.insert(wu.wid.0, idx);
+            if wu.bytes <= remaining[idx] {
+                remaining[idx] -= wu.bytes;
+                self.lanes[idx].lock().unwrap().pin_weight(wu.wid);
+            }
+        }
+    }
+
+    /// Pick the lane for a job: follow the weight's affinity when it has
+    /// one, assign a sticky lane on first sight, round-robin anonymous
+    /// weights.
+    fn pick_lane(&self, wid: Option<WeightId>) -> usize {
+        let rr = || {
+            self.next_lane.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % self.lanes.len()
+        };
+        match wid {
+            Some(id) => {
+                let mut map = self.affinity.lock().unwrap();
+                match map.entry(id.0) {
+                    std::collections::hash_map::Entry::Occupied(e) => {
+                        self.metrics
+                            .affinity_hits
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        *e.get()
+                    }
+                    std::collections::hash_map::Entry::Vacant(v) => {
+                        let idx = rr();
+                        v.insert(idx);
+                        idx
+                    }
+                }
+            }
+            None => rr(),
+        }
     }
 
     /// Execute one job synchronously, routing by policy. Returns the
@@ -209,8 +275,7 @@ impl Coordinator {
     }
 
     fn execute_on_lane_ref(&self, w: &Tensor, x: &Tensor) -> Tensor {
-        let idx = self.next_lane.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
-            % self.lanes.len();
+        let idx = self.pick_lane(w.wid);
         let (m, n, k) = (w.rows, x.rows, w.cols);
         let macs = (m * k * n) as u64;
         // Host-side marshalling happens on the calling (host) thread.
@@ -220,9 +285,11 @@ impl Coordinator {
                     .flat_map(|r| q8_0::quantize_row(x.row_f32(r)))
                     .collect();
                 let mut lane = self.lanes[idx].lock().unwrap();
+                let before = lane.cache_stats();
                 let (data, bd) = lane
-                    .mul_mat_q8_0(blocks, m, &acts, n, k)
+                    .mul_mat_q8_0_cached(w.wid, blocks, m, &acts, n, k)
                     .expect("job shapes fit LMM");
+                self.metrics.record_cache(lane.cache_stats() - before);
                 self.metrics.record_offload(macs, bd.total());
                 Tensor::f32(n, m, data)
             }
@@ -231,9 +298,11 @@ impl Coordinator {
                     .flat_map(|r| q8_k::quantize_row(x.row_f32(r)))
                     .collect();
                 let mut lane = self.lanes[idx].lock().unwrap();
+                let before = lane.cache_stats();
                 let (data, bd) = lane
-                    .mul_mat_q3_k(blocks, m, &acts, n, k)
+                    .mul_mat_q3_k_cached(w.wid, blocks, m, &acts, n, k)
                     .expect("job shapes fit LMM");
+                self.metrics.record_cache(lane.cache_stats() - before);
                 self.metrics.record_offload(macs, bd.total());
                 Tensor::f32(n, m, data)
             }
@@ -425,6 +494,62 @@ mod tests {
             batched.metrics.imax_cycles.load(ord),
             serial.metrics.imax_cycles.load(ord)
         );
+    }
+
+    #[test]
+    fn residency_affinity_routes_weight_to_one_lane_and_reuses_cache() {
+        let c = coordinator(3);
+        let w = Arc::new(
+            rnd(6, 128, 40).quantize(DType::Q8_0).with_wid(crate::ggml::WeightId(77)),
+        );
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        for i in 0..4u64 {
+            let job = MatMulJob {
+                name: format!("j{i}"),
+                w: Arc::clone(&w),
+                x: Arc::new(rnd(2, 128, 60 + i)),
+            };
+            let got = c.execute(&job);
+            let want = ggml::mul_mat(&w, &job.x, 1);
+            for (a, b) in got.as_f32().iter().zip(want.as_f32()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "cached execution stays bit-exact");
+            }
+        }
+        assert_eq!(c.metrics.affinity_hits.load(ord), 3, "first call assigns, rest follow");
+        assert_eq!(c.metrics.cache_misses.load(ord), 1, "one cold fill");
+        assert_eq!(c.metrics.cache_hits.load(ord), 3, "later jobs find the weight resident");
+        assert!(c.metrics.cache_hit_bytes.load(ord) > 0);
+        assert!((c.metrics.cache_hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn apply_plan_preassigns_affinity_before_first_execution() {
+        use crate::sd::plan::{OpPlan, OpSite};
+        let c = coordinator(2);
+        let site = |seq: usize, wid: u64, bytes: usize| OpSite {
+            seq,
+            wid: Some(crate::ggml::WeightId(wid)),
+            dtype: DType::Q8_0,
+            m: 4,
+            k: 128,
+            n: 2,
+            weight_bytes: bytes,
+        };
+        let plan = OpPlan { sites: vec![site(0, 1, 4 * 136), site(1, 2, 4 * 136)] };
+        c.apply_plan(&plan);
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        let w = Arc::new(
+            rnd(4, 128, 50).quantize(DType::Q8_0).with_wid(crate::ggml::WeightId(1)),
+        );
+        let job = MatMulJob { name: "a".into(), w, x: Arc::new(rnd(2, 128, 51)) };
+        c.execute(&job);
+        assert_eq!(
+            c.metrics.affinity_hits.load(ord),
+            1,
+            "the plan pre-assigned this weight's lane"
+        );
+        c.execute(&job);
+        assert_eq!(c.metrics.cache_hits.load(ord), 1, "second call hits the pinned resident");
     }
 
     #[test]

@@ -25,7 +25,7 @@ pub mod q8_k;
 pub mod tensor;
 
 pub use dot::{mul_mat, vec_dot};
-pub use tensor::{DType, Tensor};
+pub use tensor::{DType, Tensor, WeightId};
 
 /// Elements per Q8_0 block.
 pub const QK8_0: usize = 32;

@@ -69,6 +69,21 @@ impl DType {
     }
 }
 
+/// Stable content identity of a model weight tensor.
+///
+/// Assigned by [`crate::sd::weights::WeightFactory`] from the weight's
+/// `(seed, layer name, dtype)` triple, so the same logical weight names
+/// the same bytes across denoising steps, serving requests, pipelines
+/// and processes. Everything above the kernel level keys on this id:
+/// the LMM residency cache ([`crate::imax::lmm::Lmm`]), the
+/// residency-aware lane scheduler
+/// ([`crate::coordinator::Coordinator`]) and the serving batcher's
+/// cross-request rendezvous ([`crate::serve::batcher`]). Activation
+/// tensors and ad-hoc tensors carry no id (`Tensor::wid == None`) and
+/// are always treated as transient.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct WeightId(pub u64);
+
 /// Tensor storage.
 #[derive(Debug, Clone)]
 pub enum Storage {
@@ -93,13 +108,26 @@ pub struct Tensor {
     pub cols: usize,
     /// Storage payload.
     pub data: Storage,
+    /// Weight identity, when this tensor is a named model weight.
+    ///
+    /// `None` for activations and ad-hoc tensors. Deliberately *not*
+    /// propagated by [`Tensor::quantize`]/[`Tensor::to_f32`]: the id
+    /// names one exact byte content, and re-encoded bytes are a
+    /// different content.
+    pub wid: Option<WeightId>,
 }
 
 impl Tensor {
     /// f32 tensor from data.
     pub fn f32(rows: usize, cols: usize, data: Vec<f32>) -> Tensor {
         assert_eq!(data.len(), rows * cols);
-        Tensor { rows, cols, data: Storage::F32(data) }
+        Tensor { rows, cols, data: Storage::F32(data), wid: None }
+    }
+
+    /// Tag this tensor with a weight identity (builder style).
+    pub fn with_wid(mut self, wid: WeightId) -> Tensor {
+        self.wid = Some(wid);
+        self
     }
 
     /// f32 tensor of zeros.
@@ -114,6 +142,7 @@ impl Tensor {
             rows,
             cols,
             data: Storage::F16(data.iter().map(|&v| F16::from_f32(v)).collect()),
+            wid: None,
         }
     }
 
@@ -174,7 +203,7 @@ impl Tensor {
                 Storage::Q8K(blocks)
             }
         };
-        Tensor { rows: self.rows, cols: self.cols, data }
+        Tensor { rows: self.rows, cols: self.cols, data, wid: None }
     }
 
     /// Dequantize/convert to a fresh f32 tensor.
@@ -294,5 +323,17 @@ mod tests {
     fn row_accessor() {
         let t = Tensor::f32(2, 3, vec![1., 2., 3., 4., 5., 6.]);
         assert_eq!(t.row_f32(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn weight_id_tagging_and_non_propagation() {
+        let t = random(1, 32, 5).with_wid(WeightId(42));
+        assert_eq!(t.wid, Some(WeightId(42)));
+        // Re-encoding produces different bytes => identity must not leak.
+        assert_eq!(t.quantize(DType::Q8_0).wid, None);
+        assert_eq!(t.to_f32().wid, None);
+        // Plain constructors are untagged.
+        assert_eq!(Tensor::zeros(2, 2).wid, None);
+        assert_eq!(Tensor::f16_from(1, 2, &[0.5, 1.0]).wid, None);
     }
 }

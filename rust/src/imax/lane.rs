@@ -20,17 +20,49 @@
 //! [`LaneSim::mul_mat_q8_0`]/[`LaneSim::mul_mat_q3_k`] execute the same
 //! loops functionally (numerics via [`super::kernels`]), so a property
 //! test can require cycle-exact agreement between the two modes.
+//! (Precisely: analytic `Streamed` prices the cache-less full-LMM
+//! baseline; functional runs plan over the transient partition, which
+//! is the whole LMM when `weight_cache_bytes == 0` and the two agree
+//! exactly — with a cache partition reserved, functional streaming of
+//! shapes too large for the partition legitimately tiles finer. See
+//! [`LaneSim::analytic_mul_mat_with_residency`].)
+//!
+//! # Weight residency
+//!
+//! When the caller names the weight operand with a
+//! [`crate::ggml::WeightId`] (`mul_mat_*_cached`), the lane consults the
+//! LMM's resident weight cache first: a **resident** weight skips the
+//! weight LOAD phase entirely (the dominant Fig. 11 cost), a **miss**
+//! DMAs the weight once into the cache partition (one descriptor instead
+//! of one per tile pass), and a weight that cannot fit streams exactly
+//! as the uncached path does. Residency is a pure DMA-elision: the EXEC
+//! numerics consume the same blocks either way, so outputs are
+//! bit-identical across all three modes.
 
 use super::conf::{KernelConfig, KernelKind};
 use super::dma::{transfer_cycles, DmaStats};
 use super::kernels;
-use super::lmm::{Lmm, LmmError};
+use super::lmm::{CacheStats, Lmm, LmmError};
 use super::timing::PhaseBreakdown;
 use super::ImaxConfig;
 use crate::ggml::q3_k::BlockQ3K;
 use crate::ggml::q8_0::BlockQ8_0;
 use crate::ggml::q8_k::BlockQ8K;
+use crate::ggml::tensor::WeightId;
 use crate::ggml::{QK8_0, QK_K};
+
+/// How the weight operand of one offloaded mul_mat reaches the LMM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightResidency {
+    /// Streamed transiently, one DMA descriptor per weight tile per
+    /// activation tile (the paper's baseline behavior).
+    Streamed,
+    /// Cache miss: DMA'd once into the cache partition, then read in
+    /// place for every tile pass of this and later invocations.
+    Inserted,
+    /// Cache hit: already resident, no weight DMA at all.
+    Resident,
+}
 
 /// Bytes of one quantized weight row of `k` elements.
 pub fn weight_row_bytes(kind: KernelKind, k: usize) -> usize {
@@ -77,6 +109,20 @@ impl TilePlan {
         n: usize,
         k: usize,
     ) -> Result<TilePlan, LmmError> {
+        TilePlan::with_capacity(imax.lmm_bytes, kind, m, n, k)
+    }
+
+    /// [`TilePlan::new`] over an explicit byte capacity — the cached
+    /// execution paths plan over the transient partition only
+    /// (`lmm_bytes - cache_budget`), so tile geometry is identical for
+    /// cold and warm runs and cycle deltas come purely from LOAD.
+    pub fn with_capacity(
+        capacity: usize,
+        kind: KernelKind,
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> Result<TilePlan, LmmError> {
         assert!(m > 0 && n > 0 && k > 0, "degenerate mul_mat shape");
         let block = match kind {
             KernelKind::Q8_0 => QK8_0,
@@ -85,7 +131,7 @@ impl TilePlan {
         assert!(k % block == 0, "K={k} not a multiple of the {kind:?} block");
         let w_row_bytes = weight_row_bytes(kind, k);
         let a_row_bytes = act_row_bytes(kind, k);
-        let lmm = imax.lmm_bytes;
+        let lmm = capacity;
 
         // Activations take at most half the LMM; weights + result buffer
         // share the rest. Shrink the activation tile until at least one
@@ -122,11 +168,20 @@ impl TilePlan {
         self.m.div_ceil(self.w_tile)
     }
 
-    /// Total bytes DMA-loaded (weights re-stream once per activation tile).
+    /// Bytes of activation rows DMA-loaded (once per row).
+    pub fn act_load_bytes(&self) -> u64 {
+        (self.n * self.a_row_bytes) as u64
+    }
+
+    /// Bytes of the whole weight matrix (one full streaming pass).
+    pub fn weight_bytes(&self) -> u64 {
+        (self.m * self.w_row_bytes) as u64
+    }
+
+    /// Total bytes DMA-loaded when weights stream transiently (they
+    /// re-stream once per activation tile).
     pub fn load_bytes(&self) -> u64 {
-        let acts = (self.n * self.a_row_bytes) as u64;
-        let weights_once = (self.m * self.w_row_bytes) as u64;
-        acts + weights_once * self.a_tiles() as u64
+        self.act_load_bytes() + self.weight_bytes() * self.a_tiles() as u64
     }
 
     /// Total result bytes drained (f32 outputs).
@@ -159,15 +214,35 @@ pub struct LaneSim {
 }
 
 impl LaneSim {
-    /// Fresh lane.
+    /// Fresh lane. The resident weight cache gets
+    /// `imax.weight_cache_bytes` of the LMM (clamped to 3/4 of capacity
+    /// so transient tiles always keep working room).
     pub fn new(imax: ImaxConfig) -> LaneSim {
-        let lmm = Lmm::new(imax.lmm_bytes);
+        let mut lmm = Lmm::new(imax.lmm_bytes);
+        lmm.set_cache_budget(imax.weight_cache_bytes.min(imax.lmm_bytes / 4 * 3));
         LaneSim { imax, configured: None, lmm, dma: DmaStats::default(), total: PhaseBreakdown::default() }
     }
 
     /// Whether the next `kind` kernel needs a CONF phase.
     pub fn needs_conf(&self, kind: KernelKind) -> bool {
         self.configured != Some(kind)
+    }
+
+    /// Pin a weight: once resident it is never LRU-evicted. Called by
+    /// the plan compiler's prefetch pass for the hottest weights that
+    /// fit the cache budget.
+    pub fn pin_weight(&mut self, wid: WeightId) {
+        self.lmm.cache_pin(wid.0);
+    }
+
+    /// Whether a weight is currently resident in this lane's LMM.
+    pub fn weight_resident(&self, wid: WeightId) -> bool {
+        self.lmm.cache_contains(wid.0)
+    }
+
+    /// Snapshot of the lane's residency-cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.lmm.cache_stats()
     }
 
     /// Closed-form phase breakdown for one offloaded mul_mat, without
@@ -180,9 +255,70 @@ impl LaneSim {
         k: usize,
         reconf: bool,
     ) -> Result<PhaseBreakdown, LmmError> {
-        let plan = TilePlan::new(&self.imax, kind, m, n, k)?;
+        self.analytic_mul_mat_with_residency(kind, m, n, k, reconf, WeightResidency::Streamed)
+    }
+
+    /// [`LaneSim::analytic_mul_mat`] under an assumed weight residency —
+    /// prices warm steps (`Resident`) and first-touch cache fills
+    /// (`Inserted`) without executing; those two use the same
+    /// transient-partition tile plan the cached functional path uses, so
+    /// they agree with it cycle-exactly. `Streamed` prices the
+    /// **cache-less baseline** over the full LMM (what the calibrated
+    /// device models publish); a functional run on a lane *with* a cache
+    /// partition streams through the smaller transient window instead,
+    /// so for shapes large enough to tile differently the two `Streamed`
+    /// prices legitimately diverge.
+    pub fn analytic_mul_mat_with_residency(
+        &self,
+        kind: KernelKind,
+        m: usize,
+        n: usize,
+        k: usize,
+        reconf: bool,
+        residency: WeightResidency,
+    ) -> Result<PhaseBreakdown, LmmError> {
+        let capacity = match residency {
+            WeightResidency::Streamed => self.imax.lmm_bytes,
+            _ => self.imax.lmm_bytes - self.lmm.cache_budget(),
+        };
+        let plan = TilePlan::with_capacity(capacity, kind, m, n, k)?;
         let kcfg = KernelConfig::for_kind(kind);
-        Ok(breakdown_for_plan(&self.imax, &kcfg, &plan, reconf))
+        Ok(breakdown_for_plan_with_residency(&self.imax, &kcfg, &plan, reconf, residency))
+    }
+
+    /// Decide how this invocation's weight reaches the LMM, and plan the
+    /// tiles accordingly. Every functional execution plans over the
+    /// transient partition (`lmm_bytes - cache_budget`) — the space its
+    /// allocations actually come from, so a plan that succeeds can never
+    /// fail to allocate. With the cache disabled the partition is the
+    /// whole LMM and behavior is exactly the paper's baseline; anonymous
+    /// weights always stream.
+    fn prepare(
+        &mut self,
+        kind: KernelKind,
+        wid: Option<WeightId>,
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> Result<(TilePlan, WeightResidency), LmmError> {
+        let transient = self.imax.lmm_bytes - self.lmm.cache_budget();
+        let plan = TilePlan::with_capacity(transient, kind, m, n, k)?;
+        if let Some(id) = wid {
+            if self.lmm.cache_enabled() {
+                let w_bytes = m * plan.w_row_bytes;
+                let residency = if self.lmm.cache_lookup(id.0, w_bytes) {
+                    WeightResidency::Resident
+                } else if self.lmm.cache_insert(id.0, w_bytes, "weight cache") {
+                    // One whole-matrix DMA fill of the cached copy.
+                    self.lmm.record_load_bytes(w_bytes as u64);
+                    WeightResidency::Inserted
+                } else {
+                    WeightResidency::Streamed
+                };
+                return Ok((plan, residency));
+            }
+        }
+        Ok((plan, WeightResidency::Streamed))
     }
 
     /// Functional offloaded Q8_0 mul_mat: `w` is `m` rows × `k/32`
@@ -196,15 +332,30 @@ impl LaneSim {
         n: usize,
         k: usize,
     ) -> Result<(Vec<f32>, PhaseBreakdown), LmmError> {
+        self.mul_mat_q8_0_cached(None, w, m, acts, n, k)
+    }
+
+    /// [`LaneSim::mul_mat_q8_0`] with a weight identity: resident
+    /// weights skip the LOAD phase (see the module docs). Bit-identical
+    /// output in every residency mode.
+    pub fn mul_mat_q8_0_cached(
+        &mut self,
+        wid: Option<WeightId>,
+        w: &[BlockQ8_0],
+        m: usize,
+        acts: &[BlockQ8_0],
+        n: usize,
+        k: usize,
+    ) -> Result<(Vec<f32>, PhaseBreakdown), LmmError> {
         let bpr = k / QK8_0;
         assert_eq!(w.len(), m * bpr, "weight block count");
         assert_eq!(acts.len(), n * bpr, "activation block count");
-        let plan = TilePlan::new(&self.imax, KernelKind::Q8_0, m, n, k)?;
+        let (plan, residency) = self.prepare(KernelKind::Q8_0, wid, m, n, k)?;
         let kcfg = KernelConfig::q8_0();
         let reconf = self.needs_conf(KernelKind::Q8_0);
 
         let mut out = vec![0.0f32; n * m];
-        self.walk_tiles(&plan, |wt0, wt1, at0, at1| {
+        self.walk_tiles(&plan, residency, |wt0, wt1, at0, at1| {
             for a_row in at0..at1 {
                 for w_row in wt0..wt1 {
                     let r = kernels::dot_q8_0(
@@ -217,8 +368,8 @@ impl LaneSim {
             }
         });
 
-        let bd = breakdown_for_plan(&self.imax, &kcfg, &plan, reconf);
-        self.commit(KernelKind::Q8_0, &plan, bd);
+        let bd = breakdown_for_plan_with_residency(&self.imax, &kcfg, &plan, reconf, residency);
+        self.commit(KernelKind::Q8_0, &plan, bd, residency);
         Ok((out, bd))
     }
 
@@ -231,15 +382,28 @@ impl LaneSim {
         n: usize,
         k: usize,
     ) -> Result<(Vec<f32>, PhaseBreakdown), LmmError> {
+        self.mul_mat_q3_k_cached(None, w, m, acts, n, k)
+    }
+
+    /// [`LaneSim::mul_mat_q3_k`] with a weight identity (cache-aware).
+    pub fn mul_mat_q3_k_cached(
+        &mut self,
+        wid: Option<WeightId>,
+        w: &[BlockQ3K],
+        m: usize,
+        acts: &[BlockQ8K],
+        n: usize,
+        k: usize,
+    ) -> Result<(Vec<f32>, PhaseBreakdown), LmmError> {
         let bpr = k / QK_K;
         assert_eq!(w.len(), m * bpr, "weight super-block count");
         assert_eq!(acts.len(), n * bpr, "activation super-block count");
-        let plan = TilePlan::new(&self.imax, KernelKind::Q3K, m, n, k)?;
+        let (plan, residency) = self.prepare(KernelKind::Q3K, wid, m, n, k)?;
         let kcfg = KernelConfig::q3_k();
         let reconf = self.needs_conf(KernelKind::Q3K);
 
         let mut out = vec![0.0f32; n * m];
-        self.walk_tiles(&plan, |wt0, wt1, at0, at1| {
+        self.walk_tiles(&plan, residency, |wt0, wt1, at0, at1| {
             for a_row in at0..at1 {
                 for w_row in wt0..wt1 {
                     let r = kernels::dot_q3_k(
@@ -252,14 +416,22 @@ impl LaneSim {
             }
         });
 
-        let bd = breakdown_for_plan(&self.imax, &kcfg, &plan, reconf);
-        self.commit(KernelKind::Q3K, &plan, bd);
+        let bd = breakdown_for_plan_with_residency(&self.imax, &kcfg, &plan, reconf, residency);
+        self.commit(KernelKind::Q3K, &plan, bd, residency);
         Ok((out, bd))
     }
 
     /// Iterate tile pairs in the canonical order (acts outer, weights
-    /// inner), exercising the LMM allocator for every pass.
-    fn walk_tiles(&mut self, plan: &TilePlan, mut body: impl FnMut(usize, usize, usize, usize)) {
+    /// inner), exercising the LMM allocator for every pass. Non-streamed
+    /// weights are read in place from the cache partition, so no
+    /// transient weight region (and no weight LOAD) exists for them.
+    fn walk_tiles(
+        &mut self,
+        plan: &TilePlan,
+        residency: WeightResidency,
+        mut body: impl FnMut(usize, usize, usize, usize),
+    ) {
+        let stream_weights = residency == WeightResidency::Streamed;
         let mut at0 = 0;
         while at0 < plan.n {
             let at1 = (at0 + plan.a_tile).min(plan.n);
@@ -271,18 +443,25 @@ impl LaneSim {
             let mut wt0 = 0;
             while wt0 < plan.m {
                 let wt1 = (wt0 + plan.w_tile).min(plan.m);
-                let w_region = self
-                    .lmm
-                    .alloc((wt1 - wt0) * plan.w_row_bytes, "weights")
-                    .expect("plan guarantees the weight tile fits");
+                let w_region = if stream_weights {
+                    let r = self
+                        .lmm
+                        .alloc((wt1 - wt0) * plan.w_row_bytes, "weights")
+                        .expect("plan guarantees the weight tile fits");
+                    self.lmm.record_load(r);
+                    Some(r)
+                } else {
+                    None
+                };
                 let o_region = self
                     .lmm
                     .alloc((wt1 - wt0) * (at1 - at0) * 4, "out")
                     .expect("plan guarantees the output tile fits");
-                self.lmm.record_load(w_region);
                 body(wt0, wt1, at0, at1);
                 self.lmm.record_drain((wt1 - wt0) * (at1 - at0) * 4);
-                self.lmm.release(w_region);
+                if let Some(r) = w_region {
+                    self.lmm.release(r);
+                }
                 self.lmm.release(o_region);
                 wt0 = wt1;
             }
@@ -292,26 +471,54 @@ impl LaneSim {
     }
 
     /// Book the finished offload into the lane's cumulative state.
-    fn commit(&mut self, kind: KernelKind, plan: &TilePlan, bd: PhaseBreakdown) {
+    fn commit(
+        &mut self,
+        kind: KernelKind,
+        plan: &TilePlan,
+        bd: PhaseBreakdown,
+        residency: WeightResidency,
+    ) {
         self.configured = Some(kind);
         self.total += bd;
-        self.dma.record_load(plan.load_bytes());
+        let load_bytes = match residency {
+            WeightResidency::Streamed => plan.load_bytes(),
+            WeightResidency::Inserted => plan.act_load_bytes() + plan.weight_bytes(),
+            WeightResidency::Resident => plan.act_load_bytes(),
+        };
+        self.dma.record_load(load_bytes);
         self.dma.record_drain(plan.drain_bytes());
     }
 }
 
 /// Price a tile plan's loops in cycles (the single source of truth for
-/// both the analytic and functional paths).
+/// both the analytic and functional paths), weights streamed per pass.
 pub fn breakdown_for_plan(
     imax: &ImaxConfig,
     kcfg: &KernelConfig,
     plan: &TilePlan,
     reconf: bool,
 ) -> PhaseBreakdown {
+    breakdown_for_plan_with_residency(imax, kcfg, plan, reconf, WeightResidency::Streamed)
+}
+
+/// [`breakdown_for_plan`] under a weight-residency mode: `Resident`
+/// omits every weight LOAD, `Inserted` replaces the per-pass weight
+/// streams by a single whole-matrix fill. CONF/REGV/RANGE/EXEC/DRAIN are
+/// identical across modes — caching only elides DMA.
+pub fn breakdown_for_plan_with_residency(
+    imax: &ImaxConfig,
+    kcfg: &KernelConfig,
+    plan: &TilePlan,
+    reconf: bool,
+    residency: WeightResidency,
+) -> PhaseBreakdown {
     let mut bd = PhaseBreakdown::default();
     let pe = kcfg.pe_count() as u64;
     if reconf {
         bd.conf = imax.conf_cycles_per_pe * pe;
+    }
+    if residency == WeightResidency::Inserted {
+        bd.load += transfer_cycles(imax, plan.weight_bytes());
     }
 
     let mut at0 = 0;
@@ -323,7 +530,9 @@ pub fn breakdown_for_plan(
             let wt1 = (wt0 + plan.w_tile).min(plan.m);
             bd.regv += imax.regv_cycles_per_pe * pe;
             bd.range += imax.range_cycles_per_pe * pe;
-            bd.load += transfer_cycles(imax, ((wt1 - wt0) * plan.w_row_bytes) as u64);
+            if residency == WeightResidency::Streamed {
+                bd.load += transfer_cycles(imax, ((wt1 - wt0) * plan.w_row_bytes) as u64);
+            }
             bd.exec += exec_cycles_tile(kcfg, wt1 - wt0, at1 - at0, plan.k);
             bd.drain += transfer_cycles(imax, ((wt1 - wt0) * (at1 - at0) * 4) as u64);
             wt0 = wt1;
@@ -484,6 +693,106 @@ mod tests {
         let t_f = b_f.seconds(fpga.imax.clock_hz).total();
         let t_a = b_a.seconds(asic.imax.clock_hz).total();
         assert!((t_f / t_a - 840.0 / 145.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cached_weight_skips_load_on_warm_call_bit_exactly() {
+        let imax = ImaxConfig::fpga(1);
+        let (m, n, k) = (8, 4, 256);
+        let wt = random_tensor(m, k, 21);
+        let xt = random_tensor(n, k, 22);
+        let w_blocks: Vec<_> = (0..m).flat_map(|r| q8_0::quantize_row(wt.row_f32(r))).collect();
+        let acts: Vec<_> = (0..n).flat_map(|r| q8_0::quantize_row(xt.row_f32(r))).collect();
+        let wid = Some(crate::ggml::WeightId(0xCAFE));
+
+        let mut plain = LaneSim::new(imax.clone());
+        let (want, _) = plain.mul_mat_q8_0(&w_blocks, m, &acts, n, k).unwrap();
+
+        let mut lane = LaneSim::new(imax);
+        let (cold_out, cold) = lane.mul_mat_q8_0_cached(wid, &w_blocks, m, &acts, n, k).unwrap();
+        let loaded_after_cold = lane.lmm.loaded_bytes;
+        let (warm_out, warm) = lane.mul_mat_q8_0_cached(wid, &w_blocks, m, &acts, n, k).unwrap();
+
+        for (a, b) in cold_out.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "cold cached == uncached");
+        }
+        for (a, b) in warm_out.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "warm cached == uncached");
+        }
+        assert!(warm.load < cold.load, "resident weight skips LOAD: {warm:?} vs {cold:?}");
+        assert_eq!(warm.exec, cold.exec, "EXEC is residency-independent");
+        assert_eq!(warm.drain, cold.drain);
+        let plan = TilePlan::with_capacity(
+            lane.imax.lmm_bytes - lane.lmm.cache_budget(),
+            KernelKind::Q8_0,
+            m,
+            n,
+            k,
+        )
+        .unwrap();
+        assert_eq!(
+            lane.lmm.loaded_bytes - loaded_after_cold,
+            plan.act_load_bytes(),
+            "warm call DMAs activations only"
+        );
+        let s = lane.cache_stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert!(lane.weight_resident(crate::ggml::WeightId(0xCAFE)));
+    }
+
+    #[test]
+    fn cache_disabled_restores_streaming_behavior() {
+        let mut imax = ImaxConfig::fpga(1);
+        imax.weight_cache_bytes = 0;
+        let (m, n, k) = (4, 3, 128);
+        let wt = random_tensor(m, k, 23);
+        let xt = random_tensor(n, k, 24);
+        let w_blocks: Vec<_> = (0..m).flat_map(|r| q8_0::quantize_row(wt.row_f32(r))).collect();
+        let acts: Vec<_> = (0..n).flat_map(|r| q8_0::quantize_row(xt.row_f32(r))).collect();
+        let mut a = LaneSim::new(imax.clone());
+        let (_, bd_plain) = a.mul_mat_q8_0(&w_blocks, m, &acts, n, k).unwrap();
+        let mut b = LaneSim::new(imax);
+        let (_, bd_tagged) = b
+            .mul_mat_q8_0_cached(Some(crate::ggml::WeightId(9)), &w_blocks, m, &acts, n, k)
+            .unwrap();
+        assert_eq!(bd_plain, bd_tagged, "no cache partition => identical pricing");
+        assert_eq!(b.cache_stats().hits + b.cache_stats().misses, 0);
+    }
+
+    #[test]
+    fn analytic_warm_matches_functional_warm_q3_k() {
+        let imax = ImaxConfig::fpga(1);
+        let (m, n, k) = (6, 3, 512);
+        let wt = random_tensor(m, k, 25);
+        let xt = random_tensor(n, k, 26);
+        let w_blocks: Vec<_> = (0..m).flat_map(|r| q3_k::quantize_row(wt.row_f32(r))).collect();
+        let acts: Vec<_> = (0..n).flat_map(|r| q8_k::quantize_row(xt.row_f32(r))).collect();
+        let wid = Some(crate::ggml::WeightId(7));
+        let mut lane = LaneSim::new(imax);
+        let (_, cold) = lane.mul_mat_q3_k_cached(wid, &w_blocks, m, &acts, n, k).unwrap();
+        let (_, warm) = lane.mul_mat_q3_k_cached(wid, &w_blocks, m, &acts, n, k).unwrap();
+        let analytic_warm = lane
+            .analytic_mul_mat_with_residency(
+                KernelKind::Q3K,
+                m,
+                n,
+                k,
+                false,
+                WeightResidency::Resident,
+            )
+            .unwrap();
+        assert_eq!(warm, analytic_warm, "warm functional == warm analytic");
+        let analytic_cold = lane
+            .analytic_mul_mat_with_residency(
+                KernelKind::Q3K,
+                m,
+                n,
+                k,
+                true,
+                WeightResidency::Inserted,
+            )
+            .unwrap();
+        assert_eq!(cold, analytic_cold, "cold cached functional == Inserted analytic");
     }
 
     #[test]

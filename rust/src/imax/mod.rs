@@ -39,6 +39,7 @@ pub mod timing;
 
 pub use conf::{KernelConfig, KernelKind};
 pub use lane::LaneSim;
+pub use lmm::CacheStats;
 pub use timing::{Phase, PhaseBreakdown};
 
 /// Number of PEs in one IMAX3 lane (Table II: "64 cores per lane").
@@ -67,6 +68,12 @@ pub struct ImaxConfig {
     pub lanes: usize,
     /// LMM capacity per lane in bytes (512 KiB configuration, §IV-A).
     pub lmm_bytes: usize,
+    /// Bytes of the LMM reserved as the resident weight cache
+    /// ([`lmm::Lmm`] high partition). `0` disables weight residency and
+    /// restores the paper's stream-every-call behavior. Clamped by
+    /// [`lane::LaneSim::new`] to 3/4 of `lmm_bytes` so transient tiles
+    /// always keep working room.
+    pub weight_cache_bytes: usize,
     /// DMA payload bytes transferred per core cycle once streaming.
     ///
     /// The VPK180 prototype moves data PS-DDR → host-memcpy → DMA buffer
@@ -94,6 +101,7 @@ impl ImaxConfig {
             clock_hz: 145.0e6,
             lanes,
             lmm_bytes: 512 * 1024,
+            weight_cache_bytes: 256 * 1024,
             dma_bytes_per_cycle: 0.193,
             dma_setup_cycles: 4_000,
             conf_cycles_per_pe: 16,

@@ -50,7 +50,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 .arg(Arg::opt("seed", 's', "N", "latent seed").default("42"))
                 .arg(Arg::opt("steps", 'n', "N", "denoising steps").default("1"))
                 .arg(Arg::opt("out", 'o', "PATH", "output PNG").default("out.png"))
-                .arg(Arg::flag("host", 'H', "run on host only (no IMAX offload)")),
+                .arg(Arg::flag("host", 'H', "run on host only (no IMAX offload)"))
+                .arg(
+                    Arg::opt("lmm-cache", 'c', "BYTES", "LMM bytes for the resident weight cache")
+                        .default("262144"),
+                )
+                .arg(Arg::flag(
+                    "no-weight-cache",
+                    '\0',
+                    "disable weight residency (stream every weight tile, paper baseline)",
+                )),
         )
         .subcommand(
             App::new("e2e", "device end-to-end latency comparison (Figs. 6-7)")
@@ -81,7 +90,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             let backend = if sub.flag("host") {
                 Backend::Host { threads: 2 }
             } else {
-                Backend::Imax { config: ImaxConfig::fpga(1), threads: 2 }
+                let mut imax = ImaxConfig::fpga(1);
+                imax.weight_cache_bytes = if sub.flag("no-weight-cache") {
+                    0
+                } else {
+                    sub.usize("lmm-cache")?
+                };
+                Backend::Imax { config: imax, threads: 2 }
             };
             let pipe = Pipeline::new(PipelineConfig {
                 weight_seed: 0x5D_7B0,
@@ -96,6 +111,17 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 "wrote {out}: {} mat-muls ({} offloaded), {:.2} s wall",
                 report.matmul_calls, report.offloaded_calls, report.wall_seconds
             );
+            let c = report.cache;
+            if c.hits + c.misses > 0 {
+                println!(
+                    "weight cache: {}/{} hits ({:.0} %), {} B LOAD skipped, {} B evicted",
+                    c.hits,
+                    c.hits + c.misses,
+                    100.0 * c.hit_rate(),
+                    c.hit_bytes,
+                    c.evicted_bytes
+                );
+            }
         }
         "e2e" => {
             let model = model_of(sub.str("model"));

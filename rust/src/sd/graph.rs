@@ -6,10 +6,12 @@
 //! (norms, activations, softmax, im2col, resampling) runs as host f32
 //! ops here.
 
-use crate::ggml::{self, DType, Tensor};
+use crate::ggml::{self, DType, Tensor, WeightId};
 use crate::imax::lane::LaneSim;
+use crate::imax::lmm::CacheStats;
 use crate::imax::timing::PhaseBreakdown;
 use crate::imax::ImaxConfig;
+use crate::sd::plan::OpPlan;
 use crate::sd::trace::QuantModel;
 use std::collections::BTreeMap;
 
@@ -117,6 +119,13 @@ pub struct EngineStats {
     pub offloaded_calls: u64,
     /// Accumulated IMAX phase breakdown (zero for host-only runs).
     pub imax_phases: PhaseBreakdown,
+    /// Weight-residency cache counters of the engine's lane (zero for
+    /// host-only runs).
+    pub cache: CacheStats,
+    /// Mat-mul calls that did not match the compiled [`OpPlan`] site at
+    /// their position (0 when no plan is attached, or when dispatch
+    /// followed the plan exactly).
+    pub plan_divergences: u64,
 }
 
 impl EngineStats {
@@ -183,6 +192,10 @@ pub struct ImaxEngine {
     pub threads: usize,
     request: RequestId,
     stats: EngineStats,
+    /// Compiled dispatch sequence to verify against (weight ids in plan
+    /// order) and the cursor into it.
+    plan_wids: Option<Vec<Option<WeightId>>>,
+    plan_pos: usize,
 }
 
 impl ImaxEngine {
@@ -193,7 +206,26 @@ impl ImaxEngine {
             threads,
             request: RequestId::SOLO,
             stats: EngineStats::default(),
+            plan_wids: None,
+            plan_pos: 0,
         }
+    }
+
+    /// Attach a compiled [`OpPlan`]: runs the prefetch/pin pass (pin the
+    /// hottest weights that fit this lane's cache budget) and arms the
+    /// dispatch check. Call once, before the first `mul_mat`, on an
+    /// engine that will execute exactly one recorded sequence.
+    pub fn apply_plan(&mut self, plan: &OpPlan) {
+        for wid in plan.pin_set(self.lane.lmm.cache_budget()) {
+            self.lane.pin_weight(wid);
+        }
+        self.plan_wids = Some(plan.sites.iter().map(|s| s.wid).collect());
+        self.plan_pos = 0;
+    }
+
+    /// The simulated lane (cache/DMA/phase introspection).
+    pub fn lane(&self) -> &LaneSim {
+        &self.lane
     }
 
     /// Which quantized model a weight dtype's offloads correspond to.
@@ -210,6 +242,13 @@ impl MatMulEngine for ImaxEngine {
     fn mul_mat(&mut self, w: &Tensor, x: &Tensor) -> Tensor {
         let t0 = std::time::Instant::now();
         let macs = (w.rows * w.cols * x.rows) as u64;
+        if let Some(wids) = &self.plan_wids {
+            match wids.get(self.plan_pos) {
+                Some(expected) if *expected == w.wid => {}
+                _ => self.stats.plan_divergences += 1,
+            }
+            self.plan_pos += 1;
+        }
         let out = match &w.data {
             crate::ggml::tensor::Storage::Q8_0(blocks) => {
                 // Host marshalling: quantize activations to Q8_0 rows.
@@ -218,10 +257,11 @@ impl MatMulEngine for ImaxEngine {
                     .collect();
                 let (data, bd) = self
                     .lane
-                    .mul_mat_q8_0(blocks, w.rows, &acts, x.rows, w.cols)
+                    .mul_mat_q8_0_cached(w.wid, blocks, w.rows, &acts, x.rows, w.cols)
                     .expect("mini shapes fit LMM");
                 self.stats.imax_phases += bd;
                 self.stats.offloaded_calls += 1;
+                self.stats.cache = self.lane.cache_stats();
                 Tensor::f32(x.rows, w.rows, data)
             }
             crate::ggml::tensor::Storage::Q3K(blocks) => {
@@ -230,10 +270,11 @@ impl MatMulEngine for ImaxEngine {
                     .collect();
                 let (data, bd) = self
                     .lane
-                    .mul_mat_q3_k(blocks, w.rows, &acts, x.rows, w.cols)
+                    .mul_mat_q3_k_cached(w.wid, blocks, w.rows, &acts, x.rows, w.cols)
                     .expect("mini shapes fit LMM");
                 self.stats.imax_phases += bd;
                 self.stats.offloaded_calls += 1;
+                self.stats.cache = self.lane.cache_stats();
                 Tensor::f32(x.rows, w.rows, data)
             }
             _ => ggml::mul_mat(w, x, self.threads),
@@ -630,6 +671,45 @@ mod tests {
         eng.mul_mat(&w_q, &x);
         assert_eq!(eng.stats().offloaded_calls, 1, "quantized goes to IMAX");
         assert!(eng.stats().imax_phases.total() > 0);
+    }
+
+    #[test]
+    fn imax_engine_caches_identified_weights_across_calls() {
+        let w = Tensor::f32(8, 64, vec![0.1; 512])
+            .quantize(crate::ggml::DType::Q8_0)
+            .with_wid(WeightId(0xBEEF));
+        let x = Tensor::f32(2, 64, vec![0.2; 128]);
+        let mut eng = ImaxEngine::new(crate::imax::ImaxConfig::fpga(1), 1);
+        let a = eng.mul_mat(&w, &x);
+        let cold_load = eng.stats().imax_phases.load;
+        let b = eng.mul_mat(&w, &x);
+        let warm_load = eng.stats().imax_phases.load - cold_load;
+        assert!(warm_load < cold_load, "second call hits the residency cache");
+        assert_eq!(eng.stats().cache.hits, 1);
+        assert_eq!(eng.stats().cache.misses, 1);
+        for (p, q) in a.as_f32().iter().zip(b.as_f32()) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+    }
+
+    #[test]
+    fn imax_engine_plan_pins_and_flags_divergence() {
+        use crate::sd::plan::PlanRecorder;
+        let w = Tensor::f32(4, 64, vec![0.3; 256])
+            .quantize(crate::ggml::DType::Q8_0)
+            .with_wid(WeightId(0xF00D));
+        let x = Tensor::f32(2, 64, vec![0.1; 128]);
+        let mut rec = PlanRecorder::new();
+        rec.mul_mat(&w, &x);
+        let plan = rec.finish();
+
+        let mut eng = ImaxEngine::new(crate::imax::ImaxConfig::fpga(1), 1);
+        eng.apply_plan(&plan);
+        eng.mul_mat(&w, &x); // matches site 0
+        assert_eq!(eng.stats().plan_divergences, 0);
+        assert!(eng.lane().weight_resident(WeightId(0xF00D)), "plan's weight cached");
+        eng.mul_mat(&w, &x); // beyond the recorded sequence
+        assert_eq!(eng.stats().plan_divergences, 1);
     }
 
     #[test]

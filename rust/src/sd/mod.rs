@@ -19,6 +19,7 @@
 pub mod arch;
 pub mod graph;
 pub mod pipeline;
+pub mod plan;
 pub mod profiler;
 pub mod sampler;
 pub mod text;
@@ -28,4 +29,5 @@ pub mod vae;
 pub mod weights;
 
 pub use graph::RequestId;
+pub use plan::{OpPlan, OpSite, PlanRecorder};
 pub use trace::{MatMulOp, OpCategory, QuantModel, WorkloadTrace};

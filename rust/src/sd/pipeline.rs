@@ -8,15 +8,18 @@
 //! profiling (per-dtype times, offload counts, IMAX phase breakdown).
 
 use super::graph::{Feat, HostEngine, ImaxEngine, MatMulEngine, RequestId};
+use super::plan::{OpPlan, PlanRecorder};
 use super::sampler;
 use super::text::TextEncoder;
 use super::unet::{UNet, LATENT_C, LATENT_HW};
 use super::vae::VaeDecoder;
 use super::weights::WeightFactory;
 use super::trace::QuantModel;
+use crate::imax::lmm::CacheStats;
 use crate::imax::timing::PhaseBreakdown;
 use crate::imax::ImaxConfig;
 use crate::util::rng::fnv1a64;
+use std::sync::{Arc, OnceLock};
 
 /// Where the quantized mat-muls execute.
 #[derive(Debug, Clone)]
@@ -78,6 +81,11 @@ pub struct RunReport {
     pub imax_phases: PhaseBreakdown,
     /// IMAX clock for converting phases to seconds (0 for host runs).
     pub imax_clock_hz: f64,
+    /// Weight-residency cache counters (zero for host runs or when the
+    /// cache is disabled).
+    pub cache: CacheStats,
+    /// Dispatches that disagreed with the compiled plan (should be 0).
+    pub plan_divergences: u64,
 }
 
 /// The assembled pipeline.
@@ -87,6 +95,8 @@ pub struct Pipeline {
     text: TextEncoder,
     unet: UNet,
     vae: VaeDecoder,
+    /// Lazily compiled dispatch plan (see [`Pipeline::plan`]).
+    plan: OnceLock<Arc<OpPlan>>,
 }
 
 impl Pipeline {
@@ -100,14 +110,39 @@ impl Pipeline {
             unet: UNet::new(&f),
             vae: VaeDecoder::new(&f_vae),
             config,
+            plan: OnceLock::new(),
         }
+    }
+
+    /// The compiled [`OpPlan`] of one full generation under this
+    /// configuration: every mat-mul site with shapes, dtypes and weight
+    /// ids, in dispatch order. Compiled lazily by replaying the graph
+    /// against a [`PlanRecorder`] (zero-tensor outputs, no GEMM work —
+    /// the dispatch sequence is prompt-independent because shapes are
+    /// fixed and the graph has no data-dependent control flow), then
+    /// shared by every engine and coordinator that executes this
+    /// pipeline.
+    pub fn plan(&self) -> Arc<OpPlan> {
+        self.plan
+            .get_or_init(|| {
+                let mut rec = PlanRecorder::new();
+                let _ = self.generate_with_engine(&mut rec, RequestId::SOLO, "", 0);
+                Arc::new(rec.finish())
+            })
+            .clone()
     }
 
     fn make_engine(&self) -> Box<dyn MatMulEngine> {
         match &self.config.backend {
             Backend::Host { threads } => Box::new(HostEngine::new(*threads)),
             Backend::Imax { config, threads } => {
-                Box::new(ImaxEngine::new(config.clone(), *threads))
+                let mut eng = ImaxEngine::new(config.clone(), *threads);
+                if config.weight_cache_bytes > 0 {
+                    // Prefetch/pin pass: the hottest weights of the
+                    // compiled plan become permanent residents.
+                    eng.apply_plan(&self.plan());
+                }
+                Box::new(eng)
             }
         }
     }
@@ -156,6 +191,8 @@ impl Pipeline {
             offloaded_calls: stats.offloaded_calls,
             imax_phases: stats.imax_phases,
             imax_clock_hz: clock,
+            cache: stats.cache,
+            plan_divergences: stats.plan_divergences,
         };
         (img, report)
     }
@@ -225,6 +262,23 @@ mod tests {
         let na = a.data.iter().map(|v| v * v).sum::<f32>().sqrt();
         let nb = b.data.iter().map(|v| v * v).sum::<f32>().sqrt();
         assert!(dot / (na * nb) > 0.99, "cosine {}", dot / (na * nb));
+    }
+
+    #[test]
+    fn compiled_plan_matches_real_dispatch_and_warms_cache() {
+        let p = Pipeline::new(PipelineConfig {
+            weight_seed: 99,
+            model: Some(QuantModel::Q8_0),
+            steps: 2,
+            backend: Backend::Imax { config: ImaxConfig::fpga(1), threads: 2 },
+        });
+        let plan = p.plan();
+        assert!(plan.offloaded_sites() > 0, "quantized sites compiled");
+        let (_, r) = p.generate("a lovely cat", 7);
+        assert_eq!(plan.sites.len() as u64, r.matmul_calls, "plan covers every dispatch");
+        assert_eq!(r.plan_divergences, 0, "dispatch followed the compiled plan");
+        assert!(r.cache.hits > 0, "step 2 re-hits step 1's pinned residents");
+        assert!(r.cache.hit_bytes > 0);
     }
 
     #[test]

@@ -1,0 +1,338 @@
+//! Compiled execution plan: the explicit list of mat-mul sites a
+//! pipeline run dispatches, with shapes, dtypes and weight identities.
+//!
+//! The mini pipeline (like `stable-diffusion.cpp`) historically
+//! dispatched mat-muls implicitly, in whatever order the graph code
+//! calls [`MatMulEngine::mul_mat`]. That order is *static* — shapes are
+//! fixed by the architecture and there is no data-dependent control flow
+//! — so it can be compiled once into an [`OpPlan`] by replaying the
+//! graph against a [`PlanRecorder`] engine that records every site and
+//! returns zero tensors instead of multiplying (compilation costs
+//! host-op time only, no GEMM work).
+//!
+//! The plan buys three things:
+//!
+//! * a **prefetch/pin pass** ([`OpPlan::pin_set`]): rank weights by the
+//!   DMA bytes they would stream per step (`bytes × uses`) and pin the
+//!   hottest set that fits the LMM cache budget, so the residency cache
+//!   in [`crate::imax::lmm`] keeps exactly the tiles that save the most
+//!   LOAD time — immune to the LRU-defeating cyclic access pattern a
+//!   denoising loop otherwise produces;
+//! * **residency-aware lane sharding**
+//!   ([`crate::coordinator::Coordinator::apply_plan`]): weights are
+//!   distributed over lanes hottest-first so each lane's cache serves a
+//!   disjoint slice of the model;
+//! * a **dispatch check**: engines executing a plan verify the observed
+//!   call sequence against the compiled one (divergences are counted,
+//!   see [`crate::sd::graph::EngineStats::plan_divergences`]).
+
+use crate::ggml::{DType, Tensor, WeightId};
+use crate::sd::graph::{EngineStats, MatMulEngine};
+
+/// One compiled mat-mul site.
+#[derive(Debug, Clone)]
+pub struct OpSite {
+    /// Position in the dispatch order.
+    pub seq: usize,
+    /// Weight identity (`None` for activation×activation mat-muls).
+    pub wid: Option<WeightId>,
+    /// Weight storage dtype.
+    pub dtype: DType,
+    /// Weight rows (output features).
+    pub m: usize,
+    /// Contraction length.
+    pub k: usize,
+    /// Activation rows at record time (serving batches may widen this;
+    /// everything else about the site is invariant).
+    pub n: usize,
+    /// Serialized weight bytes (the LOAD volume one streaming pass costs).
+    pub weight_bytes: usize,
+}
+
+impl OpSite {
+    /// Whether the offload policy routes this site to a lane kernel.
+    pub fn offload_eligible(&self) -> bool {
+        matches!(self.dtype, DType::Q8_0 | DType::Q3K)
+    }
+}
+
+/// Aggregate use of one weight across a plan.
+#[derive(Debug, Clone)]
+pub struct WeightUse {
+    /// The weight.
+    pub wid: WeightId,
+    /// Its storage dtype.
+    pub dtype: DType,
+    /// Serialized bytes (cache footprint).
+    pub bytes: usize,
+    /// Times the plan dispatches it.
+    pub uses: u64,
+    /// Bytes it would stream without residency (`bytes × uses`) — the
+    /// hotness key for the pin pass.
+    pub streamed_bytes: u64,
+}
+
+/// The compiled plan for one pipeline configuration.
+#[derive(Debug, Clone, Default)]
+pub struct OpPlan {
+    /// Mat-mul sites in dispatch order.
+    pub sites: Vec<OpSite>,
+}
+
+impl OpPlan {
+    /// Offload-eligible weights aggregated across sites, hottest first
+    /// (ties broken by id so the order is deterministic).
+    pub fn weight_uses(&self) -> Vec<WeightUse> {
+        let mut order: Vec<WeightUse> = Vec::new();
+        let mut index: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+        for site in &self.sites {
+            let wid = match site.wid {
+                Some(w) if site.offload_eligible() => w,
+                _ => continue,
+            };
+            match index.entry(wid.0) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    let wu = &mut order[*e.get()];
+                    wu.uses += 1;
+                    wu.streamed_bytes += site.weight_bytes as u64;
+                }
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    v.insert(order.len());
+                    order.push(WeightUse {
+                        wid,
+                        dtype: site.dtype,
+                        bytes: site.weight_bytes,
+                        uses: 1,
+                        streamed_bytes: site.weight_bytes as u64,
+                    });
+                }
+            }
+        }
+        order.sort_by(|a, b| {
+            b.streamed_bytes.cmp(&a.streamed_bytes).then(a.wid.cmp(&b.wid))
+        });
+        order
+    }
+
+    /// The prefetch/pin pass: greedily take the hottest weights whose
+    /// cumulative bytes fit `budget`. Pinning these guarantees warm
+    /// steps hit on them even when the full weight set exceeds the LMM
+    /// (where plain LRU over a cyclic replay would hit on nothing).
+    pub fn pin_set(&self, budget: usize) -> Vec<WeightId> {
+        let mut remaining = budget;
+        let mut out = Vec::new();
+        for wu in self.weight_uses() {
+            if wu.bytes <= remaining {
+                remaining -= wu.bytes;
+                out.push(wu.wid);
+            }
+        }
+        out
+    }
+
+    /// Total bytes a full streaming (cache-less) execution would LOAD
+    /// for offload-eligible weights.
+    pub fn streamed_weight_bytes(&self) -> u64 {
+        self.weight_uses().iter().map(|w| w.streamed_bytes).sum()
+    }
+
+    /// Offload-eligible sites in the plan.
+    pub fn offloaded_sites(&self) -> usize {
+        self.sites.iter().filter(|s| s.offload_eligible()).count()
+    }
+}
+
+/// Recording engine: captures every [`MatMulEngine::mul_mat`] site and
+/// returns a zero tensor of the correct shape without multiplying. The
+/// graph has no data-dependent control flow, so the recorded sequence is
+/// exactly the sequence any real engine will dispatch.
+#[derive(Default)]
+pub struct PlanRecorder {
+    sites: Vec<OpSite>,
+    stats: EngineStats,
+}
+
+impl PlanRecorder {
+    /// Fresh recorder.
+    pub fn new() -> PlanRecorder {
+        PlanRecorder::default()
+    }
+
+    /// Finish recording.
+    pub fn finish(self) -> OpPlan {
+        OpPlan { sites: self.sites }
+    }
+}
+
+impl MatMulEngine for PlanRecorder {
+    fn mul_mat(&mut self, w: &Tensor, x: &Tensor) -> Tensor {
+        self.sites.push(OpSite {
+            seq: self.sites.len(),
+            wid: w.wid,
+            dtype: w.dtype(),
+            m: w.rows,
+            k: w.cols,
+            n: x.rows,
+            weight_bytes: w.byte_size(),
+        });
+        Tensor::zeros(x.rows, w.rows)
+    }
+
+    fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+}
+
+/// Per-step cost of one replayed denoising step (all values are
+/// simulator-deterministic, independent of the host machine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepCost {
+    /// Simulated lane cycles the step spent.
+    pub cycles: u64,
+    /// DMA LOAD bytes the step moved into the LMM.
+    pub load_bytes: u64,
+    /// Residency-cache hits during the step.
+    pub hits: u64,
+    /// Weight bytes whose LOAD residency skipped.
+    pub hit_bytes: u64,
+}
+
+/// Replay `steps` identical mini U-Net denoising steps on one simulated
+/// lane (`lmm_bytes` of LMM, `cache_bytes` of it reserved as weight
+/// cache, plan-pinned when non-zero) and return per-step cost deltas —
+/// step 1 is the cold step, steps ≥ 2 are warm.
+///
+/// This is the **single definition of the cold-vs-warm experiment**,
+/// shared by `benches/weight_reuse.rs` and the acceptance tests in
+/// `tests/weight_cache.rs`, so the CI bench and the assertions always
+/// measure the same thing.
+pub fn replay_unet_steps(
+    model: crate::sd::trace::QuantModel,
+    lmm_bytes: usize,
+    cache_bytes: usize,
+    steps: usize,
+) -> Vec<StepCost> {
+    // `MatMulEngine` (for `eng.stats()`) is already in scope from the
+    // module-level import.
+    use crate::imax::ImaxConfig;
+    use crate::sd::graph::{Feat, ImaxEngine};
+    use crate::sd::text::{CTX_LEN, DIM};
+    use crate::sd::unet::{UNet, LATENT_C, LATENT_HW};
+    use crate::sd::weights::WeightFactory;
+    use crate::util::rng::Xoshiro256pp;
+
+    let f = WeightFactory::new(1, Some(model));
+    let unet = UNet::new(&f);
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let mut latent_data = vec![0.0f32; LATENT_C * LATENT_HW * LATENT_HW];
+    rng.fill_normal(&mut latent_data, 1.0);
+    let latent = Feat::new(LATENT_C, LATENT_HW, LATENT_HW, latent_data);
+    let mut ctx_data = vec![0.0f32; CTX_LEN * DIM];
+    rng.fill_normal(&mut ctx_data, 0.3);
+    let ctx = Tensor::f32(CTX_LEN, DIM, ctx_data);
+
+    let mut rec = PlanRecorder::new();
+    unet.forward(&mut rec, &latent, 999.0, &ctx);
+    let plan = rec.finish();
+
+    let mut imax = ImaxConfig::fpga(1);
+    imax.lmm_bytes = lmm_bytes;
+    imax.weight_cache_bytes = cache_bytes;
+    let mut eng = ImaxEngine::new(imax, 1);
+    if cache_bytes > 0 {
+        eng.apply_plan(&plan);
+    }
+
+    (0..steps)
+        .map(|_| {
+            let c0 = eng.stats().imax_phases.total();
+            let l0 = eng.lane().lmm.loaded_bytes;
+            let s0 = eng.lane().cache_stats();
+            unet.forward(&mut eng, &latent, 999.0, &ctx);
+            let s1 = eng.lane().cache_stats();
+            StepCost {
+                cycles: eng.stats().imax_phases.total() - c0,
+                load_bytes: eng.lane().lmm.loaded_bytes - l0,
+                hits: s1.hits - s0.hits,
+                hit_bytes: s1.hit_bytes - s0.hit_bytes,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ggml::DType;
+
+    fn site(seq: usize, wid: Option<u64>, dtype: DType, bytes: usize) -> OpSite {
+        OpSite {
+            seq,
+            wid: wid.map(WeightId),
+            dtype,
+            m: 4,
+            k: 256,
+            n: 2,
+            weight_bytes: bytes,
+        }
+    }
+
+    #[test]
+    fn weight_uses_aggregates_and_ranks_by_streamed_bytes() {
+        let plan = OpPlan {
+            sites: vec![
+                site(0, Some(1), DType::Q8_0, 100),
+                site(1, Some(2), DType::Q8_0, 300),
+                site(2, Some(1), DType::Q8_0, 100),
+                site(3, Some(1), DType::Q8_0, 100),
+                site(4, None, DType::F32, 0),
+                site(5, Some(3), DType::F16, 999), // not offload-eligible
+            ],
+        };
+        let uses = plan.weight_uses();
+        assert_eq!(uses.len(), 2, "F32/F16 sites excluded");
+        assert_eq!(uses[0].wid, WeightId(2), "300 streamed beats 3x100");
+        assert_eq!(uses[1].uses, 3);
+        assert_eq!(uses[1].streamed_bytes, 300);
+        assert_eq!(plan.streamed_weight_bytes(), 600);
+        assert_eq!(plan.offloaded_sites(), 4);
+    }
+
+    #[test]
+    fn pin_set_greedy_within_budget() {
+        let plan = OpPlan {
+            sites: vec![
+                site(0, Some(1), DType::Q3K, 200),
+                site(1, Some(2), DType::Q3K, 150),
+                site(2, Some(2), DType::Q3K, 150),
+                site(3, Some(3), DType::Q3K, 60),
+            ],
+        };
+        // Hotness: wid2 (300 streamed), wid1 (200), wid3 (60).
+        assert_eq!(plan.pin_set(1000), vec![WeightId(2), WeightId(1), WeightId(3)]);
+        // 200 B budget: wid2 fits (150), wid1 (200) does not, wid3 (60)
+        // would exceed the 50 left — greedy still skips to nothing.
+        assert_eq!(plan.pin_set(200), vec![WeightId(2)]);
+        assert!(plan.pin_set(0).is_empty());
+    }
+
+    #[test]
+    fn recorder_captures_sites_shapes_and_returns_zeros() {
+        let w = Tensor::f32(4, 32, vec![0.5; 128])
+            .quantize(DType::Q8_0)
+            .with_wid(WeightId(11));
+        let x = Tensor::f32(3, 32, vec![0.25; 96]);
+        let mut rec = PlanRecorder::new();
+        let out = rec.mul_mat(&w, &x);
+        assert_eq!((out.rows, out.cols), (3, 4));
+        assert!(out.as_f32().iter().all(|&v| v == 0.0));
+        let plan = rec.finish();
+        assert_eq!(plan.sites.len(), 1);
+        let s = &plan.sites[0];
+        assert_eq!((s.m, s.k, s.n), (4, 32, 3));
+        assert_eq!(s.wid, Some(WeightId(11)));
+        assert_eq!(s.dtype, DType::Q8_0);
+        assert!(s.offload_eligible());
+        assert_eq!(s.weight_bytes, 4 * 34);
+    }
+}

@@ -6,7 +6,7 @@
 //! per-tensor eligibility policy as the paper-scale trace (linear weights
 //! quantized when K divides the block size, convs in F16).
 
-use crate::ggml::{DType, Tensor};
+use crate::ggml::{DType, Tensor, WeightId};
 use crate::sd::trace::QuantModel;
 use crate::util::rng::{fnv1a64, Xoshiro256pp};
 
@@ -29,6 +29,21 @@ impl WeightFactory {
         Xoshiro256pp::seed_from_u64(self.seed ^ fnv1a64(name.as_bytes()))
     }
 
+    /// Content identity of the weight named `name` in its final storage
+    /// `dtype`. Weights are a pure function of `(seed, name)` and the
+    /// encoding is a pure function of the dtype, so this triple *is* the
+    /// byte content: two factories with the same seed and model mint
+    /// equal ids for equal bytes, and re-encodings (e.g. the same layer
+    /// under Q8_0 vs Q3_K) get distinct ids. Every layer above — the LMM
+    /// residency cache, the residency-aware scheduler, the serving
+    /// rendezvous — keys on this.
+    pub fn weight_id(&self, name: &str, dtype: DType) -> WeightId {
+        let h = fnv1a64(name.as_bytes())
+            ^ self.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ fnv1a64(dtype.name().as_bytes()).rotate_left(32);
+        WeightId(h)
+    }
+
     /// Raw f32 matrix `[rows, cols]` with fan-in scaling.
     fn matrix(&self, name: &str, rows: usize, cols: usize) -> Tensor {
         let mut r = self.rng(name);
@@ -45,20 +60,25 @@ impl WeightFactory {
         v
     }
 
-    /// Linear weight `[dout, din]`, quantized when eligible.
+    /// Linear weight `[dout, din]`, quantized when eligible, tagged with
+    /// its [`WeightId`].
     pub fn linear(&self, name: &str, din: usize, dout: usize) -> Tensor {
         let w = self.matrix(name, dout, din);
-        match self.model {
+        let q = match self.model {
             Some(m) if din % m.weight_dtype().block_size() == 0 => {
                 w.quantize(m.weight_dtype())
             }
             _ => w.quantize(DType::F16),
-        }
+        };
+        let dtype = q.dtype();
+        q.with_wid(self.weight_id(name, dtype))
     }
 
     /// Conv weight `[cout, cin·k·k]` — always F16 (sd.cpp policy).
     pub fn conv(&self, name: &str, cin: usize, cout: usize, k: usize) -> Tensor {
-        self.matrix(name, cout, cin * k * k).quantize(DType::F16)
+        self.matrix(name, cout, cin * k * k)
+            .quantize(DType::F16)
+            .with_wid(self.weight_id(name, DType::F16))
     }
 
     /// Norm parameters: gamma ≈ 1, beta ≈ 0.
@@ -71,7 +91,7 @@ impl WeightFactory {
 
     /// Embedding table `[vocab, dim]`.
     pub fn embedding(&self, name: &str, vocab: usize, dim: usize) -> Tensor {
-        self.matrix(name, vocab, dim)
+        self.matrix(name, vocab, dim).with_wid(self.weight_id(name, DType::F32))
     }
 }
 
@@ -99,6 +119,26 @@ mod tests {
         assert_eq!(q8.conv("c", 16, 8, 3).dtype(), DType::F16, "convs stay F16");
         let f16 = WeightFactory::new(7, None);
         assert_eq!(f16.linear("x", 256, 64).dtype(), DType::F16);
+    }
+
+    #[test]
+    fn weight_ids_are_stable_content_identities() {
+        let a = WeightFactory::new(7, Some(QuantModel::Q8_0));
+        let b = WeightFactory::new(7, Some(QuantModel::Q8_0));
+        let wa = a.linear("layer.a", 64, 32);
+        assert_eq!(wa.wid, b.linear("layer.a", 64, 32).wid, "same seed+name+model");
+        assert!(wa.wid.is_some());
+        assert_ne!(wa.wid, a.linear("layer.b", 64, 32).wid, "name enters the id");
+        let other_seed = WeightFactory::new(8, Some(QuantModel::Q8_0));
+        assert_ne!(wa.wid, other_seed.linear("layer.a", 64, 32).wid, "seed enters the id");
+        // Same layer under a different encoding = different bytes = id.
+        let q3 = WeightFactory::new(7, Some(QuantModel::Q3K));
+        assert_ne!(
+            a.linear("layer.q", 256, 32).wid,
+            q3.linear("layer.q", 256, 32).wid,
+            "dtype enters the id"
+        );
+        assert!(a.conv("c", 4, 4, 3).wid.is_some());
     }
 
     #[test]

@@ -23,21 +23,34 @@
 
 use crate::coordinator::Coordinator;
 use crate::ggml::tensor::Storage;
-use crate::ggml::{DType, Tensor};
+use crate::ggml::{DType, Tensor, WeightId};
 use crate::sd::graph::{EngineStats, MatMulEngine, RequestId};
 use std::sync::{Arc, Condvar, Mutex};
 
-/// Cheap identity fingerprint of a weight tensor: storage address +
-/// shape. Model weights live at stable addresses inside the shared
-/// pipeline, so equal fingerprints across members ⇒ same tensor.
+/// Identity fingerprint of a weight tensor at a rendezvous point.
+///
+/// Model weights carry a stable [`WeightId`] content identity, which is
+/// the preferred key: it survives address changes, composes with the
+/// coordinator's residency-aware lane routing (the merged submission
+/// lands on the lane caching that weight), and holds across pipelines
+/// built from the same seed. Ad-hoc tensors without an id fall back to
+/// storage address + shape (stable inside one shared pipeline).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-struct WeightFp {
-    addr: usize,
-    rows: usize,
-    cols: usize,
+enum WeightFp {
+    /// Stable content identity.
+    Wid(WeightId),
+    /// Address + shape fallback.
+    Addr {
+        addr: usize,
+        rows: usize,
+        cols: usize,
+    },
 }
 
 fn fingerprint(w: &Tensor) -> WeightFp {
+    if let Some(id) = w.wid {
+        return WeightFp::Wid(id);
+    }
     let addr = match &w.data {
         Storage::F32(v) => v.as_ptr() as usize,
         Storage::F16(v) => v.as_ptr() as usize,
@@ -45,7 +58,7 @@ fn fingerprint(w: &Tensor) -> WeightFp {
         Storage::Q3K(v) => v.as_ptr() as usize,
         Storage::Q8K(v) => v.as_ptr() as usize,
     };
-    WeightFp { addr, rows: w.rows, cols: w.cols }
+    WeightFp::Addr { addr, rows: w.rows, cols: w.cols }
 }
 
 struct Pending {
@@ -286,6 +299,21 @@ mod tests {
             assert!((a - b).abs() < 1e-5);
         }
         assert_eq!(eng.stats().offloaded_calls, 0);
+    }
+
+    #[test]
+    fn fingerprint_prefers_weight_identity_over_address() {
+        let w = rnd(4, 64, 11).quantize(DType::Q8_0).with_wid(WeightId(5));
+        let clone = w.clone(); // different storage address, same identity
+        assert_eq!(fingerprint(&w), fingerprint(&clone), "WeightId keys the rendezvous");
+        let anon = rnd(4, 64, 11).quantize(DType::Q8_0);
+        let anon2 = anon.clone();
+        assert_ne!(
+            fingerprint(&anon),
+            fingerprint(&anon2),
+            "anonymous tensors fall back to address identity"
+        );
+        assert_ne!(fingerprint(&w), fingerprint(&anon));
     }
 
     #[test]

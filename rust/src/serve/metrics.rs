@@ -40,6 +40,10 @@ pub struct ServeReport {
     pub batched_submissions: u64,
     /// Jobs folded into merged submissions.
     pub coalesced_jobs: u64,
+    /// Weight LOAD bytes skipped because the weight was LMM-resident.
+    pub cache_hit_bytes: u64,
+    /// Weight bytes DMA'd on residency-cache misses.
+    pub cache_miss_bytes: u64,
 }
 
 impl ServeReport {
@@ -82,6 +86,17 @@ impl ServeReport {
         let samples: Vec<f64> = self.outcomes.iter().map(|o| o.latency_seconds).collect();
         Summary::of(&samples)
     }
+
+    /// Fraction of weight LOAD bytes the residency cache elided, in
+    /// `[0, 1]` (0 when nothing was looked up).
+    pub fn cache_byte_hit_rate(&self) -> f64 {
+        let total = self.cache_hit_bytes + self.cache_miss_bytes;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hit_bytes as f64 / total as f64
+        }
+    }
 }
 
 #[cfg(test)]
@@ -110,11 +125,14 @@ mod tests {
             lane_submissions: 3,
             batched_submissions: 1,
             coalesced_jobs: 2,
+            cache_hit_bytes: 300,
+            cache_miss_bytes: 100,
         };
         assert_eq!(r.requests(), 2);
         assert!((r.macs_per_second() - 2000.0).abs() < 1e-9);
         assert!((r.requests_per_second() - 1.0).abs() < 1e-9);
         assert!((r.cycles_per_offloaded_mac() - 0.5).abs() < 1e-9);
+        assert!((r.cache_byte_hit_rate() - 0.75).abs() < 1e-9);
         let lat = r.latency_summary();
         assert!((lat.mean - 1.0).abs() < 1e-9);
         assert_eq!(lat.n, 2);
@@ -131,9 +149,12 @@ mod tests {
             lane_submissions: 0,
             batched_submissions: 0,
             coalesced_jobs: 0,
+            cache_hit_bytes: 0,
+            cache_miss_bytes: 0,
         };
         assert_eq!(r.macs_per_second(), 0.0);
         assert_eq!(r.requests_per_second(), 0.0);
         assert_eq!(r.cycles_per_offloaded_mac(), 0.0);
+        assert_eq!(r.cache_byte_hit_rate(), 0.0);
     }
 }

@@ -28,9 +28,17 @@
 //! an independent vec-dot). Multiple workers serve disjoint micro-batches
 //! concurrently, spreading merged submissions over the lanes.
 //!
+//! The rendezvous keys on [`crate::ggml::WeightId`] content identity
+//! (not storage addresses), and the coordinator routes each merged
+//! submission to the lane whose LMM already caches that weight — so
+//! cross-request coalescing and cross-step weight residency compose:
+//! the first micro-batch pays the weight LOADs once, every later one
+//! pays almost none.
+//!
 //! Metrics: per-request latency plus aggregate throughput in
 //! [`metrics::ServeReport`], built on the extended
-//! [`crate::coordinator::CoordinatorMetrics`] batch counters.
+//! [`crate::coordinator::CoordinatorMetrics`] batch counters, plus the
+//! residency cache's hit/miss byte volumes.
 
 pub mod batcher;
 pub mod metrics;

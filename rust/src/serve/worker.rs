@@ -50,16 +50,37 @@ pub struct ServeHarness {
 impl ServeHarness {
     /// Build the harness. `pipe_cfg.backend` is ignored — execution is
     /// always routed through the coordinator (lanes + host pool).
+    /// Equivalent to [`ServeHarness::with_imax`] over the default FPGA
+    /// configuration (weight cache on).
     pub fn new(pipe_cfg: PipelineConfig, config: ServeConfig) -> ServeHarness {
+        let imax = ImaxConfig::fpga(config.lanes);
+        ServeHarness::with_imax(pipe_cfg, config, imax)
+    }
+
+    /// [`ServeHarness::new`] over an explicit IMAX configuration — the
+    /// seam the CLI uses to thread `--lmm-cache` / `--no-weight-cache`
+    /// through to the lanes. When the weight cache is enabled, the
+    /// pipeline's compiled plan shards and pins the hottest weights
+    /// across the lanes before any request runs.
+    pub fn with_imax(
+        pipe_cfg: PipelineConfig,
+        config: ServeConfig,
+        imax: ImaxConfig,
+    ) -> ServeHarness {
         assert!(config.max_batch >= 1, "max_batch must be >= 1");
         assert!(config.workers >= 1, "workers must be >= 1");
+        let cache_enabled = imax.weight_cache_bytes > 0;
         let coordinator = Arc::new(Coordinator::new(
-            ImaxConfig::fpga(config.lanes),
+            imax,
             config.lanes,
             config.host_threads,
             OffloadPolicy::QuantizedOnly,
         ));
-        ServeHarness { pipeline: Arc::new(Pipeline::new(pipe_cfg)), coordinator, config }
+        let pipeline = Arc::new(Pipeline::new(pipe_cfg));
+        if cache_enabled && config.lanes > 0 {
+            coordinator.apply_plan(&pipeline.plan());
+        }
+        ServeHarness { pipeline, coordinator, config }
     }
 
     /// The shared coordinator (for metric inspection).
@@ -85,6 +106,8 @@ impl ServeHarness {
         let base_lane_submissions = m.offloaded_jobs.load(ord);
         let base_batched_submissions = m.batched_submissions.load(ord);
         let base_coalesced_jobs = m.coalesced_jobs.load(ord);
+        let base_cache_hit_bytes = m.cache_hit_bytes.load(ord);
+        let base_cache_miss_bytes = m.cache_miss_bytes.load(ord);
         let queue = RequestQueue::new();
         for (i, (prompt, seed)) in prompts.iter().enumerate() {
             queue.push(ServeRequest {
@@ -120,6 +143,8 @@ impl ServeHarness {
             lane_submissions: m.offloaded_jobs.load(ord) - base_lane_submissions,
             batched_submissions: m.batched_submissions.load(ord) - base_batched_submissions,
             coalesced_jobs: m.coalesced_jobs.load(ord) - base_coalesced_jobs,
+            cache_hit_bytes: m.cache_hit_bytes.load(ord) - base_cache_hit_bytes,
+            cache_miss_bytes: m.cache_miss_bytes.load(ord) - base_cache_miss_bytes,
         }
     }
 
@@ -230,6 +255,33 @@ mod tests {
         assert_eq!(a.lane_submissions, b.lane_submissions);
         // The lane stays configured across runs, so run B skips CONF.
         assert!(b.imax_cycles > 0 && b.imax_cycles <= a.imax_cycles);
+    }
+
+    #[test]
+    fn cross_request_weight_reuse_shows_in_cache_metrics() {
+        let h = ServeHarness::new(pipe_cfg(), ServeConfig::serial(1, 2));
+        let report = h.serve(&prompts(2));
+        assert!(report.cache_hit_bytes > 0, "request 2 reuses request 1's residents");
+        assert!(report.cache_byte_hit_rate() > 0.0);
+
+        let mut imax = ImaxConfig::fpga(1);
+        imax.weight_cache_bytes = 0;
+        let off = ServeHarness::with_imax(pipe_cfg(), ServeConfig::serial(1, 2), imax);
+        let off_report = off.serve(&prompts(2));
+        assert_eq!(
+            off_report.cache_hit_bytes + off_report.cache_miss_bytes,
+            0,
+            "--no-weight-cache means no cache traffic at all"
+        );
+        for (a, b) in report.outcomes.iter().zip(&off_report.outcomes) {
+            assert_eq!(a.image_crc32, b.image_crc32, "cache on/off images bit-identical");
+        }
+        assert!(
+            report.imax_cycles < off_report.imax_cycles,
+            "residency must save simulated lane cycles: {} vs {}",
+            report.imax_cycles,
+            off_report.imax_cycles
+        );
     }
 
     #[test]

@@ -4,6 +4,7 @@
 use imax_sd::ggml::{q3_k, q8_0, q8_k};
 use imax_sd::imax::kernels::{dot_q3_k, dot_q8_0};
 use imax_sd::imax::lane::{LaneSim, TilePlan};
+use imax_sd::imax::lmm::{Lmm, RegionId};
 use imax_sd::imax::{ImaxConfig, KernelConfig, KernelKind};
 use imax_sd::util::prop::{run, Gen};
 use imax_sd::util::rng::Xoshiro256pp;
@@ -180,6 +181,133 @@ fn prop_tile_plans_always_fit_lmm() {
             Err(_) => Ok(()), // reported OOM is a legal outcome for huge K
         }
     });
+}
+
+/// Fixed byte size per cache key (a `WeightId` always names the same
+/// bytes, and `Lmm::cache_lookup` asserts it).
+fn key_bytes(key: u64) -> usize {
+    300 * (key as usize + 1)
+}
+
+/// Drive one LMM through a random alloc/free/lookup/insert/pin sequence
+/// (decoded from the generated floats) and check the allocator/cache
+/// invariants after every operation:
+///
+/// * live regions are disjoint and inside `[0, capacity)`;
+/// * `used()` equals both the shadow model and the sum of live extents;
+/// * `peak_used` is exactly the running max of post-op occupancy;
+/// * transient bytes never exceed the transient partition, cached bytes
+///   never exceed the budget;
+/// * once a pinned key is resident it is never evicted by the policy.
+fn drive_lmm(ops: &[f32], capacity: usize, budget: usize) -> Result<(), String> {
+    let mut lmm = Lmm::new(capacity);
+    lmm.set_cache_budget(budget);
+    let mut live: Vec<(RegionId, usize)> = Vec::new();
+    let mut trans_used = 0usize;
+    let mut shadow_peak = 0usize;
+    let mut pinned_resident: Vec<u64> = Vec::new();
+
+    for (step, &v) in ops.iter().enumerate() {
+        let sel = (v.abs() * 1e6) as usize;
+        let key = (sel / 5 % 7) as u64;
+        match sel % 5 {
+            0 | 1 => {
+                let bytes = sel % 1997 + 1;
+                if let Ok(id) = lmm.alloc(bytes, "t") {
+                    live.push((id, bytes));
+                    trans_used += bytes;
+                }
+            }
+            2 => {
+                if let Some((id, bytes)) = live.pop() {
+                    lmm.release(id);
+                    trans_used -= bytes;
+                }
+            }
+            3 => {
+                if sel % 3 == 0 {
+                    lmm.cache_pin(key);
+                }
+                if !lmm.cache_lookup(key, key_bytes(key))
+                    && lmm.cache_insert(key, key_bytes(key), "w")
+                    && lmm.cache_contains(key)
+                    && sel % 3 == 0
+                {
+                    pinned_resident.push(key);
+                }
+            }
+            _ => {
+                // Lookup only (refreshes recency on hits).
+                lmm.cache_lookup(key, key_bytes(key));
+            }
+        }
+
+        // Invariants.
+        let regions = lmm.live_regions();
+        let mut sum = 0usize;
+        for w in regions.windows(2) {
+            if w[0].0 + w[0].1 > w[1].0 {
+                return Err(format!("step {step}: overlapping regions {regions:?}"));
+            }
+        }
+        for &(off, bytes) in &regions {
+            if off + bytes > capacity {
+                return Err(format!("step {step}: region [{off}, {}) outside LMM", off + bytes));
+            }
+            sum += bytes;
+        }
+        if lmm.used() != sum {
+            return Err(format!("step {step}: used {} != live extents {sum}", lmm.used()));
+        }
+        if lmm.used() != trans_used + lmm.resident_bytes() {
+            return Err(format!(
+                "step {step}: used {} != transient {trans_used} + resident {}",
+                lmm.used(),
+                lmm.resident_bytes()
+            ));
+        }
+        if trans_used > capacity - budget {
+            return Err(format!("step {step}: transients overflow their partition"));
+        }
+        if lmm.resident_bytes() > budget {
+            return Err(format!("step {step}: cache overflows its budget"));
+        }
+        shadow_peak = shadow_peak.max(lmm.used());
+        if lmm.peak_used != shadow_peak {
+            return Err(format!(
+                "step {step}: peak_used {} != running max {shadow_peak}",
+                lmm.peak_used
+            ));
+        }
+        for &k in &pinned_resident {
+            if !lmm.cache_contains(k) {
+                return Err(format!("step {step}: pinned key {k} was evicted"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_lmm_regions_disjoint_accounting_exact() {
+    run(
+        "lmm alloc/free/insert invariants",
+        150,
+        Gen::vec_f32(1..=60, 0.0..1.0),
+        |ops| drive_lmm(ops, 10_000, 4_000),
+    );
+}
+
+#[test]
+fn prop_lmm_eviction_never_frees_pinned() {
+    // A tiny budget forces constant eviction pressure; the pinned-key
+    // invariant inside `drive_lmm` is what this property is about.
+    run(
+        "lmm LRU churn spares pinned",
+        150,
+        Gen::vec_f32(1..=80, 0.0..1.0),
+        |ops| drive_lmm(ops, 6_000, 1_500),
+    );
 }
 
 #[test]
