@@ -39,9 +39,26 @@ fn main() {
     for lanes in [1usize, 2, 3, 4, 6, 8] {
         let c = Coordinator::new(ImaxConfig::fpga(1), lanes, 2, OffloadPolicy::QuantizedOnly);
         let t0 = std::time::Instant::now();
-        let outs = c.execute_batch(&jobs);
+        // A 2-thread host pool pulling jobs through the submission path
+        // (the pool the removed `execute_batch` used to spawn): the host
+        // threads do the marshalling, so they are the supply ceiling.
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let done = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..c.host_threads {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let out = c.execute(&jobs[i]);
+                    assert_eq!((out.rows, out.cols), (jobs[i].x.rows, jobs[i].w.rows));
+                    done.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                });
+            }
+        });
         let wall = t0.elapsed().as_secs_f64();
-        assert_eq!(outs.len(), jobs.len());
+        assert_eq!(done.load(std::sync::atomic::Ordering::Relaxed), jobs.len());
         let base_v = *base.get_or_insert(wall);
         t.row(&[
             format!("{lanes}"),

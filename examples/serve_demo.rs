@@ -3,26 +3,35 @@
 //!
 //! Run: `cargo run --release --example serve_demo`
 //!
-//! Flags: `--no-weight-cache` disables LMM weight residency (the paper's
-//! stream-every-call baseline), `--lmm-cache BYTES` sizes the per-lane
-//! cache partition (default 262144).
+//! Backend flags are shared with the `imax-sd` binary (one parser in
+//! `util::cli`): `--backend imax|sharded` selects whole-op lane
+//! affinity vs single-op row-tile sharding, `--lanes N` sizes the lane
+//! pool, `--threads N` the host pool, `--lmm-cache BYTES` the per-lane
+//! resident weight cache and `--no-weight-cache` restores the paper's
+//! stream-every-call baseline.
 
-use imax_sd::imax::ImaxConfig;
 use imax_sd::sd::pipeline::{Backend, PipelineConfig};
 use imax_sd::sd::QuantModel;
 use imax_sd::serve::{ServeConfig, ServeHarness};
-use imax_sd::util::cli::{App, Arg};
+use imax_sd::util::cli::{App, BackendFlags, BackendKind};
 use imax_sd::util::stats::fmt_duration;
 use imax_sd::util::tables::Table;
 
 fn main() {
     let app = App::new("serve_demo", "batched multi-lane serving demo")
-        .arg(
-            Arg::opt("lmm-cache", 'c', "BYTES", "LMM bytes reserved as resident weight cache")
-                .default("262144"),
-        )
-        .arg(Arg::flag("no-weight-cache", '\0', "disable weight residency"));
+        .args(BackendFlags::args());
     let m = app.parse_env();
+    let sel = match BackendFlags::parse(&m) {
+        Ok(sel) => sel,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if sel.kind == BackendKind::Host {
+        eprintln!("serve_demo always routes through the lane coordinator; use --backend imax or sharded");
+        std::process::exit(2);
+    }
     let prompts: Vec<(String, u64)> = [
         "a lovely cat",
         "an angry robot",
@@ -38,19 +47,15 @@ fn main() {
     .map(|(i, p)| (p.to_string(), 42 + i as u64))
     .collect();
 
-    let serve_cfg = ServeConfig { lanes: 4, host_threads: 4, max_batch: 4, workers: 2 };
-    let mut imax = ImaxConfig::fpga(serve_cfg.lanes);
-    imax.weight_cache_bytes = if m.flag("no-weight-cache") {
-        0
-    } else {
-        match m.usize("lmm-cache") {
-            Ok(bytes) => bytes,
-            Err(e) => {
-                eprintln!("{e}");
-                std::process::exit(2);
-            }
-        }
+    let serve_cfg = ServeConfig {
+        lanes: sel.lanes,
+        host_threads: sel.threads,
+        max_batch: 4,
+        workers: 2,
+        sharded: sel.kind == BackendKind::Sharded,
     };
+    let mut imax = imax_sd::imax::ImaxConfig::fpga(sel.lanes);
+    imax.weight_cache_bytes = sel.cache_bytes;
     let cache_label = if imax.weight_cache_bytes == 0 {
         "off".to_string()
     } else {
@@ -67,9 +72,10 @@ fn main() {
         imax,
     );
     println!(
-        "serving {} prompts: {} lanes, {} workers, micro-batch {}, weight cache {}\n",
+        "serving {} prompts: {} lanes ({} routing), {} workers, micro-batch {}, weight cache {}\n",
         prompts.len(),
         harness.config.lanes,
+        if harness.config.sharded { "sharded" } else { "affinity" },
         harness.config.workers,
         harness.config.max_batch,
         cache_label
@@ -79,7 +85,7 @@ fn main() {
 
     let mut t = Table::new(
         "Per-request results",
-        &["id", "prompt", "latency", "mat-muls", "MMACs", "image crc32"],
+        &["id", "prompt", "latency", "ops", "MMACs", "image crc32"],
     );
     for o in &report.outcomes {
         t.row(&[
@@ -94,6 +100,8 @@ fn main() {
     t.print();
 
     let lat = report.latency_summary();
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    let metrics = harness.coordinator().metrics.as_ref();
     println!("\naggregate:");
     println!("  wall time            : {}", fmt_duration(report.wall_seconds));
     println!(
@@ -107,8 +115,12 @@ fn main() {
         fmt_duration(lat.p95)
     );
     println!(
-        "  lane submissions     : {} ({} merged, {} jobs coalesced)",
-        report.lane_submissions, report.batched_submissions, report.coalesced_jobs
+        "  lane submissions     : {} ({} merged, {} jobs coalesced, {} sharded ops over {} shards)",
+        report.lane_submissions,
+        report.batched_submissions,
+        report.coalesced_jobs,
+        metrics.sharded_ops.load(ord),
+        metrics.shard_submissions.load(ord),
     );
     println!(
         "  lane efficiency      : {:.4} simulated cycles per offloaded MAC",

@@ -1,0 +1,303 @@
+"""Python replica of the shard-scaling experiment (no Rust toolchain needed).
+
+Re-implements, in deterministic integer math, exactly what
+``benches/shard_scaling.rs`` measures through the Rust simulator:
+
+* the mini U-Net's quantized op list (dispatch order, shapes, WeightIds
+  minted like ``WeightFactory::weight_id`` with seed 1),
+* the sharded prefetch/pin pass (``Coordinator::apply_plan_sharded``:
+  hottest-first, ``ShardPlan`` row partition, per-lane budgets),
+* per-shard execution on per-lane LMM caches (lookup/insert/LRU with
+  pins, ``TilePlan`` over the transient partition, the
+  ``breakdown_for_plan_with_residency`` phase pricing and DMA byte
+  accounting of ``imax/lane.rs``).
+
+Running it prints the table recorded in ``EXPERIMENTS.md`` §Shard
+scaling and asserts the same monotonicity the bench asserts, so the
+recorded numbers and the CI smoke run measure one definition.
+"""
+
+import math
+
+MASK = (1 << 64) - 1
+
+# --- ImaxConfig::fpga -------------------------------------------------------
+CLOCK_HZ = 145.0e6
+DMA_BPC = 0.193
+DMA_SETUP = 4_000
+CONF_PER_PE = 16
+REGV_PER_PE = 4
+RANGE_PER_PE = 4
+
+KCFG = {
+    # kind: (pe_count, elems_per_beat, groups, pipeline_depth)
+    "Q8_0": (46, 32, 3, 16),
+    "Q3_K": (51, 16, 3, 18),
+}
+
+
+def fnv1a64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h = ((h ^ b) * 0x100000001B3) & MASK
+    return h
+
+
+def rotl(x: int, n: int) -> int:
+    return ((x << n) | (x >> (64 - n))) & MASK
+
+
+def weight_id(seed: int, name: str, dtype: str) -> int:
+    # WeightFactory::weight_id
+    return (
+        fnv1a64(name.encode())
+        ^ ((seed * 0x9E3779B97F4A7C15) & MASK)
+        ^ rotl(fnv1a64(dtype.encode()), 32)
+    )
+
+
+def shard_wid(parent: int, index: int, count: int) -> int:
+    # coordinator::shard::shard_wid
+    if count == 1:
+        return parent
+    h = parent ^ 0xA0761D6478BD642F
+    h = (h * 0x100000001B3) & MASK
+    h ^= ((index << 32) | count) & MASK
+    h = (h * 0x9E3779B97F4A7C15) & MASK
+    return h
+
+
+def w_row_bytes(kind: str, k: int) -> int:
+    return k // 32 * 34 if kind == "Q8_0" else k // 256 * 110
+
+
+def a_row_bytes(kind: str, k: int) -> int:
+    return k // 32 * 34 if kind == "Q8_0" else k // 256 * (4 + 256 + 2 * 16)
+
+
+def transfer(bytes_: int) -> int:
+    if bytes_ == 0:
+        return 0
+    return DMA_SETUP + math.ceil(bytes_ / DMA_BPC)
+
+
+def beats_for_dot(kind: str, k: int) -> int:
+    _, elems, groups, _ = KCFG[kind]
+    nb = -(-k // elems)
+    return -(-nb // groups)
+
+
+def tile_plan(capacity: int, kind: str, m: int, n: int, k: int):
+    # TilePlan::with_capacity
+    wrb, arb = w_row_bytes(kind, k), a_row_bytes(kind, k)
+    a_tile = min(max(min(capacity // 2 // arb, max(n, 1)), 1), n)
+    while True:
+        a_bytes = a_tile * arb
+        if a_bytes <= capacity:
+            rem = capacity - a_bytes
+            per_w_row = wrb + a_tile * 4
+            if rem >= per_w_row:
+                return dict(m=m, n=n, k=k, a_tile=a_tile,
+                            w_tile=min(rem // per_w_row, m), wrb=wrb, arb=arb)
+        if a_tile == 1:
+            raise MemoryError("K too large for LMM")
+        a_tile //= 2
+
+
+def breakdown(kind: str, plan, reconf: bool, residency: str):
+    # breakdown_for_plan_with_residency; returns (cycles, act_load_B, w_load_B)
+    pe, _, _, depth = KCFG[kind]
+    cyc = CONF_PER_PE * pe if reconf else 0
+    w_load = plan["m"] * plan["wrb"] if residency == "Inserted" else 0
+    if residency == "Inserted":
+        cyc += transfer(plan["m"] * plan["wrb"])
+    act_load = 0
+    beats = beats_for_dot(kind, plan["k"])
+    at0 = 0
+    while at0 < plan["n"]:
+        at1 = min(at0 + plan["a_tile"], plan["n"])
+        cyc += transfer((at1 - at0) * plan["arb"])
+        act_load += (at1 - at0) * plan["arb"]
+        wt0 = 0
+        while wt0 < plan["m"]:
+            wt1 = min(wt0 + plan["w_tile"], plan["m"])
+            cyc += (REGV_PER_PE + RANGE_PER_PE) * pe
+            if residency == "Streamed":
+                cyc += transfer((wt1 - wt0) * plan["wrb"])
+                w_load += (wt1 - wt0) * plan["wrb"]
+            dots = (wt1 - wt0) * (at1 - at0)
+            cyc += depth + dots * (beats + 2)
+            cyc += transfer(dots * 4)
+            wt0 = wt1
+        at0 = at1
+    return cyc, act_load, w_load
+
+
+class LaneCache:
+    """imax/lmm.rs residency cache: LRU with pins, per-lane budget."""
+
+    def __init__(self, budget: int):
+        self.budget = budget
+        self.entries = {}  # wid -> [bytes, tick, pinned]
+        self.pin_wish = set()
+        self.tick = 0
+        self.hits = 0
+
+    def pinned_bytes(self):
+        return sum(b for b, _, p in self.entries.values() if p)
+
+    def used(self):
+        return sum(b for b, _, _ in self.entries.values())
+
+    def lookup(self, wid, bytes_):
+        self.tick += 1
+        if wid in self.entries:
+            self.entries[wid][1] = self.tick
+            self.hits += 1
+            return True
+        return False
+
+    def insert(self, wid, bytes_):
+        if wid in self.entries:
+            return True
+        if self.budget == 0 or bytes_ > self.budget - self.pinned_bytes():
+            return False
+        while self.budget - self.used() < bytes_:
+            victims = [(t, w) for w, (b, t, p) in self.entries.items() if not p]
+            if not victims:
+                return False
+            del self.entries[min(victims)[1]]
+        self.tick += 1
+        self.entries[wid] = [bytes_, self.tick, wid in self.pin_wish]
+        return True
+
+
+def unet_ops(model: str):
+    """Quantized op sites of one mini U-Net step, in dispatch order."""
+    lin = []  # (name, m, k, n)
+    lin.append(("unet.temb1", 256, 64, 1))
+    lin.append(("unet.temb2", 256, 256, 1))
+    lin.append(("unet.down0.emb", 64, 256, 1))
+    lin.append(("unet.down1.emb", 128, 256, 1))
+    tf = "unet.mid.tf"
+    lin.append((f"{tf}.proj_in", 256, 128, 64))
+    for a in ["attn1.q", "attn1.k", "attn1.v", "attn1.o", "attn2.q"]:
+        lin.append((f"{tf}.{a}", 256, 256, 64))
+    lin.append((f"{tf}.attn2.k", 256, 256, 77))
+    lin.append((f"{tf}.attn2.v", 256, 256, 77))
+    lin.append((f"{tf}.attn2.o", 256, 256, 64))
+    lin.append((f"{tf}.ff1", 512, 256, 64))
+    lin.append((f"{tf}.ff2", 256, 256, 64))
+    lin.append((f"{tf}.proj_out", 128, 256, 64))
+    lin.append(("unet.mid.rb.emb", 128, 256, 1))
+    lin.append(("unet.up0.emb", 128, 256, 1))
+    lin.append(("unet.up1.emb", 64, 256, 1))
+    block = 32 if model == "Q8_0" else 256
+    out = []
+    for name, m, k, n in lin:
+        if k % block != 0:
+            continue  # WeightFactory falls back to F16 -> host path
+        out.append(dict(name=name, m=m, k=k, n=n,
+                        wid=weight_id(1, name, model)))
+    return out
+
+
+def shard_plan(m, lanes, cap, parent):
+    cap = max(cap, 1)
+    count = min(max(lanes, -(-m // cap)), m)
+    base, rem = divmod(m, count)
+    shards, start = [], 0
+    for i in range(count):
+        ln = base + (1 if i < rem else 0)
+        shards.append(dict(lane=i % lanes, start=start, rows=ln,
+                           wid=shard_wid(parent, i, count)))
+        start += ln
+    return shards
+
+
+def cap_rows(row_bytes, budget, m):
+    if budget == 0 or row_bytes == 0 or row_bytes > budget:
+        return max(m, 1)
+    return budget // row_bytes
+
+
+def replay(model, lanes, lmm, cache, steps):
+    ops = unet_ops(model)
+    budget = min(cache, lmm // 4 * 3)
+    transient = lmm - budget
+    caches = [LaneCache(budget) for _ in range(lanes)]
+    configured = [False] * lanes
+    # apply_plan_sharded: hottest-first (streamed bytes desc, wid asc).
+    uses = {}
+    for op in ops:
+        wb = op["m"] * w_row_bytes(model, op["k"])
+        u = uses.setdefault(op["wid"], dict(wid=op["wid"], rows=op["m"],
+                                            bytes=wb, streamed=0))
+        u["streamed"] += wb
+    order = sorted(uses.values(), key=lambda u: (-u["streamed"], u["wid"]))
+    remaining = [budget] * lanes
+    for u in order:
+        rb = u["bytes"] // u["rows"]
+        for s in shard_plan(u["rows"], lanes, cap_rows(rb, budget, u["rows"]),
+                            u["wid"]):
+            b = s["rows"] * rb
+            if b <= remaining[s["lane"]]:
+                remaining[s["lane"]] -= b
+                caches[s["lane"]].pin_wish.add(s["wid"])
+
+    results = []
+    for _ in range(steps):
+        cyc = [0] * lanes
+        wload = [0] * lanes
+        hits0 = [c.hits for c in caches]
+        for op in ops:
+            rb = w_row_bytes(model, op["k"])
+            for s in shard_plan(op["m"], lanes, cap_rows(rb, budget, op["m"]),
+                                op["wid"]):
+                lane, c = s["lane"], caches[s["lane"]]
+                wb = s["rows"] * rb
+                if budget > 0 and c.lookup(s["wid"], wb):
+                    residency = "Resident"
+                elif budget > 0 and c.insert(s["wid"], wb):
+                    residency = "Inserted"
+                else:
+                    residency = "Streamed"
+                plan = tile_plan(transient, model, s["rows"], op["n"], op["k"])
+                reconf = not configured[lane]
+                configured[lane] = True
+                dc, _, dw = breakdown(model, plan, reconf, residency)
+                cyc[lane] += dc
+                wload[lane] += dw
+        results.append(dict(max_ms=max(cyc) / CLOCK_HZ * 1e3,
+                            total_cyc=sum(cyc),
+                            max_wload=max(wload),
+                            hits=sum(c.hits for c in caches) - sum(hits0)))
+    return results
+
+
+def main():
+    lmm, cache = 512 << 10, 64 << 10
+    print(f"shard_scaling replica: mini U-Net step, LMM {lmm >> 10} KiB, "
+          f"cache {cache >> 10} KiB/lane\n")
+    hdr = (f"{'model':6} {'lanes':>5} {'cold ms':>8} {'warm ms':>8} "
+           f"{'cold wLOAD/lane':>16} {'warm wLOAD/lane':>16} {'hits':>6}")
+    print(hdr)
+    print("-" * len(hdr))
+    for model in ["Q8_0", "Q3_K"]:
+        total = sum(op["m"] * w_row_bytes(model, op["k"])
+                    for op in unet_ops(model))
+        prev_w = prev_ms = None
+        for lanes in [1, 2, 4, 8]:
+            cold, warm = replay(model, lanes, lmm, cache, 2)
+            print(f"{model:6} {lanes:>5} {cold['max_ms']:>8.2f} "
+                  f"{warm['max_ms']:>8.2f} {cold['max_wload']:>16} "
+                  f"{warm['max_wload']:>16} {warm['hits']:>6}")
+            if prev_w is not None:
+                assert warm["max_wload"] < prev_w, "warm wLOAD must shrink"
+                assert warm["max_ms"] < prev_ms, "warm ms must shrink"
+            prev_w, prev_ms = warm["max_wload"], warm["max_ms"]
+        print(f"{model:6} quantized weight set: {total} B\n")
+
+
+if __name__ == "__main__":
+    main()

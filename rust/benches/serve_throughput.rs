@@ -67,17 +67,24 @@ fn main() {
 
     let batched_1l = ServeHarness::new(
         pipe_cfg(QuantModel::Q8_0),
-        ServeConfig { lanes: 1, host_threads: 2, max_batch: 4, workers: 1 },
+        ServeConfig { lanes: 1, host_threads: 2, max_batch: 4, workers: 1, sharded: false },
     );
     let batched_1l_report = batched_1l.serve(&reqs);
     row_for(&mut t, "batched 1w/b4/1L", &batched_1l_report);
 
     let batched_ml = ServeHarness::new(
         pipe_cfg(QuantModel::Q8_0),
-        ServeConfig { lanes: 4, host_threads: 4, max_batch: 4, workers: 2 },
+        ServeConfig { lanes: 4, host_threads: 4, max_batch: 4, workers: 2, sharded: false },
     );
     let batched_ml_report = batched_ml.serve(&reqs);
     row_for(&mut t, "batched 2w/b4/4L", &batched_ml_report);
+
+    let sharded_ml = ServeHarness::new(
+        pipe_cfg(QuantModel::Q8_0),
+        ServeConfig { lanes: 4, host_threads: 4, max_batch: 4, workers: 2, sharded: true },
+    );
+    let sharded_ml_report = sharded_ml.serve(&reqs);
+    row_for(&mut t, "sharded 2w/b4/4L", &sharded_ml_report);
 
     t.print();
 
@@ -97,4 +104,10 @@ fn main() {
         batched_1l_report.cycles_per_offloaded_mac() < serial_report.cycles_per_offloaded_mac(),
         "the gain must come from coalescing itself, not only extra lanes/workers"
     );
+    for (a, b) in batched_ml_report.outcomes.iter().zip(&sharded_ml_report.outcomes) {
+        assert_eq!(
+            a.image_crc32, b.image_crc32,
+            "sharded lane routing must stay bit-identical to affinity routing"
+        );
+    }
 }

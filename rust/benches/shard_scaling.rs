@@ -1,0 +1,96 @@
+//! Shard scaling: single-op row-tile sharding across 1–8 lanes.
+//!
+//! Replays the mini U-Net denoising step through a `ShardedBackend` and
+//! reports, per lane count:
+//!
+//! * **kernel seconds** — the slowest lane's simulated cycles per step
+//!   over the 145 MHz FPGA clock (lanes run their shards in parallel, so
+//!   the max-lane time is the step's lane wall-clock);
+//! * **warm weight LOAD B/lane** — the max per-lane DMA *weight* bytes
+//!   of a warm step: the ROADMAP's bandwidth-scaling claim is that this
+//!   shrinks as lanes are added, because each lane caches (and pins)
+//!   only its own row-tile shards and the aggregate resident bytes grow
+//!   with the lane count.
+//!
+//! All numbers are simulator-deterministic. `--smoke` shrinks the lane
+//! sweep for CI. Results are recorded in `EXPERIMENTS.md` §Shard
+//! scaling.
+
+use imax_sd::imax::ImaxConfig;
+use imax_sd::sd::plan::replay_unet_steps_sharded;
+use imax_sd::sd::QuantModel;
+use imax_sd::util::tables::Table;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let lane_sweep: &[usize] = if smoke { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let clock_hz = ImaxConfig::fpga(1).clock_hz;
+    println!(
+        "shard_scaling: mini U-Net step, row-tile sharding over {:?} lanes{}\n",
+        lane_sweep,
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    // 512 KiB LMM with a 64 KiB/lane cache partition: small enough that
+    // no lane count holds the whole quantized weight set, so the warm
+    // curve shows scaling rather than saturation.
+    let (lmm, cache) = (512usize << 10, 64usize << 10);
+    let mut t = Table::new(
+        "Shard scaling (cold step 1, warm step 2; per-lane numbers are the max lane)",
+        &[
+            "model",
+            "lanes",
+            "cold ms",
+            "warm ms",
+            "cold wLOAD B/lane",
+            "warm wLOAD B/lane",
+            "warm hits",
+        ],
+    );
+    for model in [QuantModel::Q8_0, QuantModel::Q3K] {
+        let mut prev_warm_load: Option<u64> = None;
+        let mut prev_warm_ms: Option<f64> = None;
+        for &lanes in lane_sweep {
+            let steps = replay_unet_steps_sharded(model, lanes, lmm, cache, 2);
+            let (cold, warm) = (&steps[0], &steps[1]);
+            let max_w = |c: &imax_sd::sd::plan::ShardStepCost| {
+                c.weight_load_per_lane.iter().max().copied().unwrap_or(0)
+            };
+            let ms = |cycles: u64| cycles as f64 / clock_hz * 1e3;
+            let warm_ms = ms(warm.max_lane_cycles);
+            t.row(&[
+                model.name().to_string(),
+                format!("{lanes}"),
+                format!("{:.2}", ms(cold.max_lane_cycles)),
+                format!("{warm_ms:.2}"),
+                format!("{}", max_w(cold)),
+                format!("{}", max_w(warm)),
+                format!("{}", warm.hits),
+            ]);
+            // The acceptance regression, also asserted in
+            // tests/backend_equivalence.rs over 1/2/4 lanes.
+            if let Some(prev) = prev_warm_load {
+                assert!(
+                    max_w(warm) < prev,
+                    "{model:?}: warm per-lane weight LOAD must shrink with lanes \
+                     ({prev} B -> {} B at {lanes} lanes)",
+                    max_w(warm)
+                );
+            }
+            if let Some(prev) = prev_warm_ms {
+                assert!(
+                    warm_ms < prev,
+                    "{model:?}: warm kernel-seconds must improve with lanes"
+                );
+            }
+            prev_warm_load = Some(max_w(warm));
+            prev_warm_ms = Some(warm_ms);
+        }
+    }
+    t.print();
+    println!(
+        "\nper-lane warm weight LOAD shrinks with lanes: each lane pins only its own \
+         row-tile shards, so aggregate residency scales with the lane count \
+         (the cache as a bandwidth lever, not just a latency lever)."
+    );
+}

@@ -20,6 +20,13 @@ pub struct CoordinatorMetrics {
     pub batched_submissions: AtomicU64,
     /// Jobs folded into merged submissions.
     pub coalesced_jobs: AtomicU64,
+    /// Ops executed through the sharded submission path
+    /// ([`crate::coordinator::Coordinator::submit_sharded`]).
+    pub sharded_ops: AtomicU64,
+    /// Per-lane shard submissions those ops decomposed into (an op
+    /// splits into `min(m, max(lanes, ceil(m/cap)))` shards, so this
+    /// equals `sharded_ops` only on single-lane/single-row runs).
+    pub shard_submissions: AtomicU64,
     /// Lane selections that followed an existing weight→lane affinity
     /// (the weight's cached tiles were on the chosen lane).
     pub affinity_hits: AtomicU64,
@@ -68,6 +75,12 @@ impl CoordinatorMetrics {
     pub fn record_batch(&self, jobs: u64) {
         self.batched_submissions.fetch_add(1, Ordering::Relaxed);
         self.coalesced_jobs.fetch_add(jobs, Ordering::Relaxed);
+    }
+
+    /// Record one sharded op that split into `shards` lane submissions.
+    pub fn record_sharded(&self, shards: u64) {
+        self.sharded_ops.fetch_add(1, Ordering::Relaxed);
+        self.shard_submissions.fetch_add(shards, Ordering::Relaxed);
     }
 
     /// Fold one lane call's residency-cache delta into the shared totals.

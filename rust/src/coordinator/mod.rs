@@ -11,7 +11,9 @@
 pub mod metrics;
 pub mod offload;
 pub mod scheduler;
+pub mod shard;
 
 pub use metrics::CoordinatorMetrics;
 pub use offload::OffloadPolicy;
-pub use scheduler::{Coordinator, MatMulJob, ShapeKey};
+pub use scheduler::{Coordinator, MatMulJob, ShapeKey, ShardedRun};
+pub use shard::{shard_wid, RowShard, ShardPlan};

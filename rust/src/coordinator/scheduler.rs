@@ -1,45 +1,64 @@
-//! Multi-lane job scheduler.
+//! Multi-lane op scheduler — the submission path behind
+//! [`crate::sd::backend::ShardedBackend`] and the serving rendezvous.
 //!
-//! Jobs arrive in submission order; quantized mat-muls round-robin over
-//! the configured IMAX lanes (each lane owned by one worker thread),
-//! host jobs run on a bounded host pool sized like the A72 (2 cores).
-//! Because the host workers also perform the marshalling (activation
-//! quantization) for lane jobs, configuring more lanes than
-//! `host_threads` ceases to help — the §V-A saturation, observable in
-//! this scheduler's metrics.
+//! Every operation reaches the coordinator as a typed
+//! [`OpDesc`]: quantized ops route to IMAX lanes, everything else runs
+//! on a bounded host pool sized like the A72 (2 cores). Because the host
+//! workers also perform the marshalling (activation quantization) for
+//! lane jobs, configuring more lanes than `host_threads` ceases to help
+//! — the §V-A saturation, observable in this scheduler's metrics.
 //!
-//! Beyond per-job execution the coordinator supports **batched
-//! submission** ([`Coordinator::execute_coalesced`]): jobs that share a
-//! weight tensor (same `Arc`) have their activation rows concatenated
-//! into one lane submission, which amortizes the per-descriptor DMA
-//! setup, the weight-tile streaming, and the CONF/REGV/RANGE phases
-//! across requests — the serving layer in [`crate::serve`] is built on
-//! this. Groups are ordered by kernel kind so consecutive submissions
-//! avoid CONF reconfiguration, the shape-level analog of SD-Acc-style
-//! kernel scheduling.
+//! Three lane entry points, all funneling through one `run_rows_on_lane`
+//! primitive (so counters and phase accounting stay consistent):
 //!
-//! Lane selection is **residency-aware**: a job whose weight carries a
-//! [`WeightId`] is routed to the lane that already holds (or was
-//! assigned) that weight's cached tiles, so cross-step and cross-request
-//! reuse land where the bytes are; anonymous weights round-robin as
-//! before. [`Coordinator::apply_plan`] seeds the weight→lane map from a
-//! compiled [`OpPlan`], sharding the hottest weights across lanes and
-//! pinning each lane's share into its LMM cache partition.
+//! * [`Coordinator::submit_op`] — one op on one lane, selected
+//!   residency-aware: a weight with a [`WeightId`] is routed to the lane
+//!   that already holds (or was assigned) its cached tiles; anonymous
+//!   weights round-robin.
+//! * [`Coordinator::submit_sharded`] — **single-op multi-lane
+//!   sharding**: the op's weight row-tiles are split across the lanes
+//!   (see [`super::shard::ShardPlan`]), each lane computes and caches
+//!   only its resident shard, and the per-shard outputs are stitched
+//!   back column-wise — bit-identical to unsharded execution. This is
+//!   what turns the per-lane weight cache into a bandwidth-scaling
+//!   lever: aggregate resident bytes grow with the lane count, so the
+//!   warm-step weight LOAD per lane shrinks as lanes are added.
+//! * [`Coordinator::execute_coalesced`] — batched submission: jobs
+//!   sharing a weight tensor have their activation rows concatenated
+//!   into one lane submission (amortizing DMA setup, weight streaming
+//!   and CONF/REGV/RANGE across requests); merged groups are ordered by
+//!   kernel kind to avoid CONF reconfiguration.
+//!
+//! The compiled [`OpPlan`] seeds both routing modes before any op runs:
+//! [`Coordinator::apply_plan`] shards *whole weights* across lanes
+//! (kind-grouped so each lane sees one CONF kind where lane count
+//! allows) and [`Coordinator::apply_plan_sharded`] pins each hot
+//! weight's *row-tile shards* on their owning lanes.
 
 use super::metrics::CoordinatorMetrics;
 use super::offload::OffloadPolicy;
-use crate::ggml::{self, q8_0, q8_k, DType, Tensor, WeightId};
-use crate::imax::lane::LaneSim;
+use super::shard::ShardPlan;
+use crate::ggml::{self, q8_0, q8_k, DType, Tensor, WeightId, QK8_0, QK_K};
+use crate::imax::conf::KernelKind;
+use crate::imax::lane::{weight_row_bytes, LaneSim};
+use crate::imax::lmm::CacheStats;
+use crate::imax::timing::PhaseBreakdown;
 use crate::imax::ImaxConfig;
+use crate::sd::backend::{OpDesc, OpKind};
 use crate::sd::plan::OpPlan;
 use std::collections::HashMap;
+use std::ops::Range;
 use std::sync::{Arc, Mutex};
 
-/// One mat-mul job: quantized weights × f32 activations.
+/// One mat-mul job: quantized weights × f32 activations (the owned-
+/// tensor form used by benches/examples; the serving layer submits
+/// borrowed [`OpDesc`]s instead).
 #[derive(Debug, Clone)]
 pub struct MatMulJob {
     /// Job label (layer name).
     pub name: String,
+    /// What the op is in the graph.
+    pub kind: OpKind,
     /// Weight tensor.
     pub w: Arc<Tensor>,
     /// Activation tensor `[n, k]` f32.
@@ -71,6 +90,49 @@ impl MatMulJob {
     pub fn shape_key(&self) -> ShapeKey {
         ShapeKey { dtype: self.w.dtype(), m: self.w.rows, k: self.w.cols }
     }
+
+    /// The job as a borrowed typed op.
+    pub fn as_op(&self) -> OpDesc<'_> {
+        OpDesc::new(self.kind, &self.w, &self.x)
+    }
+}
+
+/// Result of one sharded submission: the stitched output plus the
+/// summed per-shard lane costs (what [`crate::sd::backend::ShardedBackend`]
+/// folds into its [`crate::sd::backend::EngineStats`]).
+#[derive(Debug)]
+pub struct ShardedRun {
+    /// Stitched `[n, m]` output, bit-identical to unsharded execution.
+    pub out: Tensor,
+    /// Phase breakdown summed over the shards.
+    pub phases: PhaseBreakdown,
+    /// Residency-cache deltas summed over the shards' lanes.
+    pub cache: CacheStats,
+    /// Lane submissions the op decomposed into.
+    pub shards: usize,
+}
+
+/// Cumulative cost counters of one lane (see
+/// [`Coordinator::lane_costs`]).
+#[derive(Debug, Clone, Copy)]
+pub struct LaneCost {
+    /// Simulated cycles across all phases.
+    pub cycles: u64,
+    /// All DMA LOAD bytes (weights + activations).
+    pub loaded_bytes: u64,
+    /// DMA LOAD bytes spent on weight tiles only.
+    pub weight_load_bytes: u64,
+    /// Residency-cache counters.
+    pub cache: CacheStats,
+}
+
+/// Pre-quantized activation rows in the vec-dot partner format of the
+/// weight's kernel (marshalled once per op, shared by every shard).
+enum QuantActs {
+    /// Q8_0 kernel partner.
+    Q8_0(Vec<crate::ggml::q8_0::BlockQ8_0>),
+    /// Q3_K kernel partner (Q8_K rows).
+    Q8K(Vec<crate::ggml::q8_k::BlockQ8K>),
 }
 
 /// The coordinator: lanes + host pool + policy + metrics.
@@ -106,11 +168,38 @@ impl Coordinator {
         self.lanes.len()
     }
 
-    /// Seed residency from a compiled [`OpPlan`]: shard the
-    /// offload-eligible weights across lanes hottest-first (so each
-    /// lane's cache serves a disjoint, load-balanced slice of the
-    /// model), and pin each lane's share while it fits that lane's
-    /// cache budget.
+    /// Per-lane cache budget (lanes are homogeneous; 0 without lanes or
+    /// with the cache disabled).
+    pub fn lane_cache_budget(&self) -> usize {
+        self.lanes
+            .first()
+            .map(|l| l.lock().unwrap().lmm.cache_budget())
+            .unwrap_or(0)
+    }
+
+    /// Per-lane cumulative cost snapshot, in lane order — the
+    /// introspection the shard-scaling experiment diffs across steps.
+    pub fn lane_costs(&self) -> Vec<LaneCost> {
+        self.lanes
+            .iter()
+            .map(|l| {
+                let lane = l.lock().unwrap();
+                LaneCost {
+                    cycles: lane.total.total(),
+                    loaded_bytes: lane.lmm.loaded_bytes,
+                    weight_load_bytes: lane.lmm.loaded_weight_bytes,
+                    cache: lane.cache_stats(),
+                }
+            })
+            .collect()
+    }
+
+    /// Seed residency from a compiled [`OpPlan`] for **whole-weight**
+    /// routing ([`Coordinator::submit_op`]): weights are distributed over
+    /// lanes by [`OpPlan::lane_assignment`] — kind-grouped so each lane
+    /// serves a single CONF kind where lane count allows, hottest-first
+    /// within a kind — and pinned while they fit their lane's cache
+    /// budget.
     pub fn apply_plan(&self, plan: &OpPlan) {
         if self.lanes.is_empty() {
             return;
@@ -121,8 +210,7 @@ impl Coordinator {
             .iter()
             .map(|l| l.lock().unwrap().lmm.cache_budget())
             .collect();
-        for (rank, wu) in plan.weight_uses().iter().enumerate() {
-            let idx = rank % self.lanes.len();
+        for (wu, idx) in plan.lane_assignment(self.lanes.len()) {
             map.insert(wu.wid.0, idx);
             if wu.bytes <= remaining[idx] {
                 remaining[idx] -= wu.bytes;
@@ -131,7 +219,41 @@ impl Coordinator {
         }
     }
 
-    /// Pick the lane for a job: follow the weight's affinity when it has
+    /// Seed residency for **sharded** routing
+    /// ([`Coordinator::submit_sharded`]): each offload-eligible weight's
+    /// row-tile shards, hottest weight first, are pinned on their owning
+    /// lanes while they fit the per-lane budget. The shard geometry (and
+    /// the derived shard [`WeightId`]s) is recomputed identically at
+    /// execution time, so warm submissions hit exactly what was pinned.
+    pub fn apply_plan_sharded(&self, plan: &OpPlan) {
+        if self.lanes.is_empty() {
+            return;
+        }
+        let lanes = self.lanes.len();
+        let budget = self.lane_cache_budget();
+        let mut remaining = vec![budget; lanes];
+        for wu in plan.weight_uses() {
+            let rows = wu.rows.max(1);
+            // The same derivation submit_sharded uses at execution time,
+            // so the shard geometry (and the derived shard ids) agree.
+            let row_bytes = KernelKind::of_dtype(wu.dtype)
+                .map(|kind| weight_row_bytes(kind, wu.k))
+                .unwrap_or_else(|| wu.bytes / rows);
+            let cap = ShardPlan::cap_rows(row_bytes, budget, rows);
+            let sp = ShardPlan::new(rows, lanes, cap, Some(wu.wid));
+            for shard in &sp.shards {
+                let bytes = shard.len() * row_bytes;
+                if let Some(wid) = shard.wid {
+                    if bytes <= remaining[shard.lane] {
+                        remaining[shard.lane] -= bytes;
+                        self.lanes[shard.lane].lock().unwrap().pin_weight(wid);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pick the lane for an op: follow the weight's affinity when it has
     /// one, assign a sticky lane on first sight, round-robin anonymous
     /// weights.
     fn pick_lane(&self, wid: Option<WeightId>) -> usize {
@@ -159,49 +281,149 @@ impl Coordinator {
         }
     }
 
-    /// Execute one job synchronously, routing by policy. Returns the
-    /// `[n, m]` f32 output.
-    pub fn execute(&self, job: &MatMulJob) -> Tensor {
-        self.execute_ref(&job.w, &job.x)
-    }
-
-    /// [`Coordinator::execute`] over borrowed tensors — the seam the
-    /// serving batcher uses (its weights live inside a shared
-    /// [`crate::sd::pipeline::Pipeline`], not inside `Arc`ed jobs).
-    pub fn execute_ref(&self, w: &Tensor, x: &Tensor) -> Tensor {
-        if self.policy.offloads(w) && !self.lanes.is_empty() {
-            self.execute_on_lane_ref(w, x)
-        } else {
-            self.metrics.record_host((w.rows * w.cols * x.rows) as u64);
-            ggml::mul_mat(w, x, self.host_threads)
+    /// Quantize the activation rows into the weight kernel's vec-dot
+    /// partner format (host-side marshalling, once per op).
+    fn marshal_acts(w: &Tensor, x: &Tensor) -> QuantActs {
+        match &w.data {
+            crate::ggml::tensor::Storage::Q8_0(_) => QuantActs::Q8_0(
+                (0..x.rows).flat_map(|r| q8_0::quantize_row(x.row_f32(r))).collect(),
+            ),
+            crate::ggml::tensor::Storage::Q3K(_) => QuantActs::Q8K(
+                (0..x.rows).flat_map(|r| q8_k::quantize_row(x.row_f32(r))).collect(),
+            ),
+            _ => unreachable!("policy only offloads quantized weights"),
         }
     }
 
-    /// Execute a batch of jobs, pulled by a pool of host threads
-    /// (round-robining lane jobs over lanes). Results in submission
-    /// order. Each job is submitted individually — see
-    /// [`Coordinator::execute_coalesced`] for the merged-submission
-    /// variant.
-    pub fn execute_batch(&self, jobs: &[MatMulJob]) -> Vec<Tensor> {
-        let slots: Vec<Mutex<Option<Tensor>>> =
-            (0..jobs.len()).map(|_| Mutex::new(None)).collect();
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        std::thread::scope(|scope| {
-            for _ in 0..self.host_threads.max(1) {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if i >= jobs.len() {
-                        break;
-                    }
-                    let r = self.execute(&jobs[i]);
-                    *slots[i].lock().unwrap() = Some(r);
-                });
+    /// The lane kernel a quantized weight selects.
+    fn kernel_kind(w: &Tensor) -> KernelKind {
+        KernelKind::of_dtype(w.dtype()).expect("policy only offloads quantized weights")
+    }
+
+    /// Whether an op is eligible for (sharded) lane submission: the
+    /// single gate [`crate::sd::backend::ShardedBackend`] and the
+    /// serving rendezvous share.
+    pub fn shardable(&self, op: &OpDesc<'_>) -> bool {
+        self.policy.offloads(op.w) && !self.lanes.is_empty()
+    }
+
+    /// Run weight rows `rows` of `w` against pre-marshalled activations
+    /// on lane `lane_idx`, caching under `wid`. The single lane-call
+    /// primitive every submission path uses. Returns the `[n, rows.len()]`
+    /// output rows, the phase breakdown and the cache delta (`n` and `k`
+    /// are recovered from `w.cols` and the activation block count).
+    fn run_rows_on_lane(
+        &self,
+        lane_idx: usize,
+        w: &Tensor,
+        rows: Range<usize>,
+        wid: Option<WeightId>,
+        acts: &QuantActs,
+    ) -> (Vec<f32>, PhaseBreakdown, CacheStats) {
+        let m_i = rows.end - rows.start;
+        let k = w.cols;
+        let mut lane = self.lanes[lane_idx].lock().unwrap();
+        let before = lane.cache_stats();
+        let (data, bd) = match (&w.data, acts) {
+            (crate::ggml::tensor::Storage::Q8_0(blocks), QuantActs::Q8_0(a)) => {
+                let bpr = k / QK8_0;
+                lane.mul_mat_q8_0_cached(
+                    wid,
+                    &blocks[rows.start * bpr..rows.end * bpr],
+                    m_i,
+                    a,
+                    a.len() / bpr,
+                    k,
+                )
+                .expect("job shapes fit LMM")
             }
-        });
-        slots
-            .into_iter()
-            .map(|s| s.into_inner().unwrap().expect("all jobs completed"))
-            .collect()
+            (crate::ggml::tensor::Storage::Q3K(blocks), QuantActs::Q8K(a)) => {
+                let bpr = k / QK_K;
+                lane.mul_mat_q3_k_cached(
+                    wid,
+                    &blocks[rows.start * bpr..rows.end * bpr],
+                    m_i,
+                    a,
+                    a.len() / bpr,
+                    k,
+                )
+                .expect("job shapes fit LMM")
+            }
+            _ => unreachable!("marshalled activations match the weight kernel"),
+        };
+        let delta = lane.cache_stats() - before;
+        (data, bd, delta)
+    }
+
+    /// Submit one typed op, routing by policy: offload-eligible weights
+    /// run whole on one residency-selected lane, everything else runs on
+    /// the host pool. This is the submission path that replaced the
+    /// eager `execute_ref`/`execute_batch` entry points (counter
+    /// semantics preserved: one `record_offload`/`record_host` per op).
+    pub fn submit_op(&self, op: &OpDesc<'_>) -> Tensor {
+        if self.policy.offloads(op.w) && !self.lanes.is_empty() {
+            let (w, x) = (op.w, op.x);
+            let (m, n) = (w.rows, x.rows);
+            let acts = Self::marshal_acts(w, x);
+            // OpDesc.wid is the weight identity everywhere (the
+            // constructors default it to the tensor's own id).
+            let idx = self.pick_lane(op.wid);
+            let (data, bd, delta) = self.run_rows_on_lane(idx, w, 0..m, op.wid, &acts);
+            self.metrics.record_cache(delta);
+            self.metrics.record_offload(op.macs(), bd.total());
+            Tensor::f32(n, m, data)
+        } else {
+            self.metrics.record_host(op.macs());
+            ggml::mul_mat(op.w, op.x, self.host_threads)
+        }
+    }
+
+    /// Submit one offload-eligible op **sharded across every lane**: the
+    /// weight's row-tiles are partitioned by [`ShardPlan`] (balanced,
+    /// capped to the per-lane cache budget so each shard is cacheable),
+    /// each shard executes on its lane under a derived shard
+    /// [`WeightId`], and the outputs are stitched column-wise.
+    ///
+    /// Stitching invariant: output element `[a, j]` is the vec-dot of
+    /// weight row `j` with activation row `a`, computed by exactly one
+    /// shard from the same operand bytes the unsharded kernel would
+    /// consume — so the stitched tensor is **bit-identical** to
+    /// [`Coordinator::submit_op`]'s for every lane count.
+    pub fn submit_sharded(&self, op: &OpDesc<'_>) -> ShardedRun {
+        assert!(
+            self.shardable(op),
+            "submit_sharded wants an offload-eligible op and at least one lane"
+        );
+        let (w, x) = (op.w, op.x);
+        let (m, n, k) = (w.rows, x.rows, w.cols);
+        let row_bytes = weight_row_bytes(Self::kernel_kind(w), k);
+        let cap = ShardPlan::cap_rows(row_bytes, self.lane_cache_budget(), m);
+        let plan = ShardPlan::new(m, self.lanes.len(), cap, op.wid);
+        let acts = Self::marshal_acts(w, x);
+
+        let mut out = vec![0.0f32; n * m];
+        let mut phases = PhaseBreakdown::default();
+        let mut cache = CacheStats::default();
+        for shard in &plan.shards {
+            let m_i = shard.len();
+            let (data, bd, delta) =
+                self.run_rows_on_lane(shard.lane, w, shard.rows.clone(), shard.wid, &acts);
+            for a in 0..n {
+                out[a * m + shard.rows.start..a * m + shard.rows.end]
+                    .copy_from_slice(&data[a * m_i..(a + 1) * m_i]);
+            }
+            self.metrics.record_offload((m_i * k * n) as u64, bd.total());
+            self.metrics.record_cache(delta);
+            phases += bd;
+            cache += delta;
+        }
+        self.metrics.record_sharded(plan.len() as u64);
+        ShardedRun { out: Tensor::f32(n, m, out), phases, cache, shards: plan.len() }
+    }
+
+    /// Execute one owned job synchronously through the submission path.
+    pub fn execute(&self, job: &MatMulJob) -> Tensor {
+        self.submit_op(&job.as_op())
     }
 
     /// Execute a batch with shape-keyed coalescing: lane-eligible jobs
@@ -240,10 +462,11 @@ impl Coordinator {
         });
 
         for members in &groups {
-            let w = &jobs[members[0]].w;
+            let job0 = &jobs[members[0]];
+            let w = &job0.w;
             if members.len() == 1 {
                 let i = members[0];
-                out[i] = Some(self.execute_on_lane_ref(w, &jobs[i].x));
+                out[i] = Some(self.lane_mul(w, &jobs[i].x));
                 continue;
             }
             // Concatenate activation rows across the member jobs.
@@ -255,7 +478,7 @@ impl Coordinator {
                 data.extend_from_slice(jobs[i].x.as_f32());
             }
             let x_cat = Tensor::f32(total_rows, k, data);
-            let y = self.execute_on_lane_ref(w, &x_cat); // [total_rows, m]
+            let y = self.lane_mul(w, &x_cat); // [total_rows, m]
             self.metrics.record_batch(members.len() as u64);
             // Split the stacked output rows back per job.
             let m = w.rows;
@@ -274,50 +497,26 @@ impl Coordinator {
         out.into_iter().map(|t| t.expect("all jobs executed")).collect()
     }
 
-    fn execute_on_lane_ref(&self, w: &Tensor, x: &Tensor) -> Tensor {
-        let idx = self.pick_lane(w.wid);
+    /// One whole-op lane execution (the coalesced path's primitive):
+    /// marshal, pick the residency lane, run all rows, book metrics.
+    fn lane_mul(&self, w: &Tensor, x: &Tensor) -> Tensor {
         let (m, n, k) = (w.rows, x.rows, w.cols);
-        let macs = (m * k * n) as u64;
-        // Host-side marshalling happens on the calling (host) thread.
-        match &w.data {
-            crate::ggml::tensor::Storage::Q8_0(blocks) => {
-                let acts: Vec<_> = (0..n)
-                    .flat_map(|r| q8_0::quantize_row(x.row_f32(r)))
-                    .collect();
-                let mut lane = self.lanes[idx].lock().unwrap();
-                let before = lane.cache_stats();
-                let (data, bd) = lane
-                    .mul_mat_q8_0_cached(w.wid, blocks, m, &acts, n, k)
-                    .expect("job shapes fit LMM");
-                self.metrics.record_cache(lane.cache_stats() - before);
-                self.metrics.record_offload(macs, bd.total());
-                Tensor::f32(n, m, data)
-            }
-            crate::ggml::tensor::Storage::Q3K(blocks) => {
-                let acts: Vec<_> = (0..n)
-                    .flat_map(|r| q8_k::quantize_row(x.row_f32(r)))
-                    .collect();
-                let mut lane = self.lanes[idx].lock().unwrap();
-                let before = lane.cache_stats();
-                let (data, bd) = lane
-                    .mul_mat_q3_k_cached(w.wid, blocks, m, &acts, n, k)
-                    .expect("job shapes fit LMM");
-                self.metrics.record_cache(lane.cache_stats() - before);
-                self.metrics.record_offload(macs, bd.total());
-                Tensor::f32(n, m, data)
-            }
-            _ => unreachable!("policy only offloads quantized weights"),
-        }
+        let acts = Self::marshal_acts(w, x);
+        let idx = self.pick_lane(w.wid);
+        let (data, bd, delta) = self.run_rows_on_lane(idx, w, 0..m, w.wid, &acts);
+        self.metrics.record_cache(delta);
+        self.metrics.record_offload((m * k * n) as u64, bd.total());
+        Tensor::f32(n, m, data)
     }
 }
 
-/// Helper: build a quantized job from f32 weights.
+/// Helper: build a quantized [`OpKind::Linear`] job from f32 weights.
 pub fn make_job(name: &str, w_f32: Tensor, dtype: DType, x: Tensor) -> MatMulJob {
     let w = match dtype {
         DType::F32 => w_f32,
         _ => w_f32.quantize(dtype),
     };
-    MatMulJob { name: name.to_string(), w: Arc::new(w), x: Arc::new(x) }
+    MatMulJob { name: name.to_string(), kind: OpKind::Linear, w: Arc::new(w), x: Arc::new(x) }
 }
 
 // Re-exports used in tests and examples.
@@ -366,12 +565,12 @@ mod tests {
     }
 
     #[test]
-    fn batch_preserves_order_and_uses_all_lanes() {
+    fn submitted_jobs_preserve_order_and_use_all_lanes() {
         let c = coordinator(4);
         let jobs: Vec<_> = (0..12)
             .map(|i| make_job(&format!("j{i}"), rnd(2, 64, 10 + i), DType::Q8_0, rnd(2, 64, 50 + i)))
             .collect();
-        let outs = c.execute_batch(&jobs);
+        let outs: Vec<Tensor> = jobs.iter().map(|j| c.execute(j)).collect();
         assert_eq!(outs.len(), 12);
         // Verify each against direct computation (order preserved).
         for (job, out) in jobs.iter().zip(&outs) {
@@ -382,6 +581,10 @@ mod tests {
             c.metrics.offloaded_jobs.load(std::sync::atomic::Ordering::Relaxed),
             12
         );
+        // Anonymous weights round-robin: every lane did real work.
+        let costs = c.lane_costs();
+        assert_eq!(costs.len(), 4);
+        assert!(costs.iter().all(|lc| lc.cycles > 0), "round-robin must hit every lane");
     }
 
     #[test]
@@ -436,16 +639,23 @@ mod tests {
         for r in 0..3u64 {
             jobs.push(MatMulJob {
                 name: format!("r{r}.l1"),
+                kind: OpKind::Linear,
                 w: Arc::clone(&w1),
                 x: Arc::new(rnd(2 + r as usize, 128, 10 + r)),
             });
             jobs.push(MatMulJob {
                 name: format!("r{r}.l2"),
+                kind: OpKind::Linear,
                 w: Arc::clone(&w2),
                 x: Arc::new(rnd(3, 256, 20 + r)),
             });
         }
-        jobs.push(MatMulJob { name: "host".into(), w: wf, x: Arc::new(rnd(2, 64, 30)) });
+        jobs.push(MatMulJob {
+            name: "host".into(),
+            kind: OpKind::Linear,
+            w: wf,
+            x: Arc::new(rnd(2, 64, 30)),
+        });
 
         let serial = coordinator(2);
         let want: Vec<Tensor> = jobs.iter().map(|j| serial.execute(j)).collect();
@@ -466,6 +676,7 @@ mod tests {
         let jobs: Vec<MatMulJob> = (0..6u64)
             .map(|r| MatMulJob {
                 name: format!("r{r}"),
+                kind: OpKind::Linear,
                 w: Arc::clone(&w),
                 x: Arc::new(rnd(4, 128, 40 + r)),
             })
@@ -506,6 +717,7 @@ mod tests {
         for i in 0..4u64 {
             let job = MatMulJob {
                 name: format!("j{i}"),
+                kind: OpKind::Linear,
                 w: Arc::clone(&w),
                 x: Arc::new(rnd(2, 128, 60 + i)),
             };
@@ -528,6 +740,7 @@ mod tests {
         let c = coordinator(2);
         let site = |seq: usize, wid: u64, bytes: usize| OpSite {
             seq,
+            kind: OpKind::Linear,
             wid: Some(crate::ggml::WeightId(wid)),
             dtype: DType::Q8_0,
             m: 4,
@@ -541,7 +754,7 @@ mod tests {
         let w = Arc::new(
             rnd(4, 128, 50).quantize(DType::Q8_0).with_wid(crate::ggml::WeightId(1)),
         );
-        let job = MatMulJob { name: "a".into(), w, x: Arc::new(rnd(2, 128, 51)) };
+        let job = MatMulJob { name: "a".into(), kind: OpKind::Linear, w, x: Arc::new(rnd(2, 128, 51)) };
         c.execute(&job);
         assert_eq!(
             c.metrics.affinity_hits.load(ord),
@@ -560,5 +773,107 @@ mod tests {
         let got = c.execute_coalesced(std::slice::from_ref(&job));
         let want = c.execute(&job);
         assert_eq!(got[0].as_f32(), want.as_f32());
+    }
+
+    #[test]
+    fn sharded_submission_bit_identical_and_counts_shards() {
+        for (dtype, k) in [(DType::Q8_0, 128), (DType::Q3K, 256)] {
+            let w = rnd(11, k, 70).quantize(dtype).with_wid(WeightId(123));
+            let x = rnd(3, k, 71);
+            let serial = coordinator(1);
+            let want = serial.submit_op(&OpDesc::linear(&w, &x));
+            for lanes in [1usize, 2, 4] {
+                let c = coordinator(lanes);
+                let run = c.submit_sharded(&OpDesc::linear(&w, &x));
+                assert_eq!(run.shards, lanes.min(11));
+                assert_eq!((run.out.rows, run.out.cols), (3, 11));
+                for (a, b) in run.out.as_f32().iter().zip(want.as_f32()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{dtype:?} x{lanes} bit-exact");
+                }
+                let ord = std::sync::atomic::Ordering::Relaxed;
+                assert_eq!(c.metrics.sharded_ops.load(ord), 1);
+                assert_eq!(c.metrics.shard_submissions.load(ord), run.shards as u64);
+                assert_eq!(c.metrics.offloaded_jobs.load(ord), run.shards as u64);
+                assert_eq!(
+                    c.metrics.offloaded_macs.load(ord),
+                    (11 * k * 3) as u64,
+                    "shard MACs sum to the op's MACs"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_warm_step_streams_less_per_lane_as_lanes_grow() {
+        // One big weight whose bytes exceed a single lane's cache budget:
+        // with more lanes each lane owns fewer shards, the sharded pin
+        // pass keeps more of the weight resident in aggregate, and the
+        // warm-step weight miss volume drops — the cache acting as a
+        // bandwidth-scaling lever.
+        use crate::sd::plan::{OpPlan, OpSite};
+        let mut imax = ImaxConfig::fpga(1);
+        imax.lmm_bytes = 64 << 10;
+        imax.weight_cache_bytes = 8 << 10; // 8 KiB per lane
+        let w = rnd(128, 512, 80).quantize(DType::Q8_0).with_wid(WeightId(9)); // 68 KiB
+        let x = rnd(2, 512, 81);
+        let plan = OpPlan {
+            sites: vec![OpSite {
+                seq: 0,
+                kind: OpKind::Linear,
+                wid: Some(WeightId(9)),
+                dtype: DType::Q8_0,
+                m: 128,
+                k: 512,
+                n: 2,
+                weight_bytes: w.byte_size(),
+            }],
+        };
+        let mut warm_by_lanes = Vec::new();
+        for lanes in [1usize, 2, 4, 8] {
+            let c = Coordinator::new(imax.clone(), lanes, 2, OffloadPolicy::QuantizedOnly);
+            c.apply_plan_sharded(&plan);
+            c.submit_sharded(&OpDesc::linear(&w, &x)); // cold
+            let ord = std::sync::atomic::Ordering::Relaxed;
+            let miss0 = c.metrics.cache_miss_bytes.load(ord);
+            let hit0 = c.metrics.cache_hit_bytes.load(ord);
+            c.submit_sharded(&OpDesc::linear(&w, &x)); // warm
+            let warm_miss = c.metrics.cache_miss_bytes.load(ord) - miss0;
+            let warm_hit = c.metrics.cache_hit_bytes.load(ord) - hit0;
+            warm_by_lanes.push((lanes, warm_miss, warm_hit));
+        }
+        for pair in warm_by_lanes.windows(2) {
+            let ((l0, miss0, hit0), (l1, miss1, hit1)) = (pair[0], pair[1]);
+            assert!(
+                miss1 < miss0,
+                "warm miss bytes must shrink with lanes: {l0} lanes {miss0} B vs {l1} lanes {miss1} B"
+            );
+            assert!(hit1 >= hit0, "resident bytes grow with lanes: {hit0} vs {hit1}");
+        }
+    }
+
+    #[test]
+    fn apply_plan_sharded_prepins_shards_for_warm_first_step() {
+        use crate::sd::plan::{OpPlan, OpSite};
+        let w = rnd(32, 128, 90).quantize(DType::Q8_0).with_wid(WeightId(5));
+        let x = rnd(2, 128, 91);
+        let plan = OpPlan {
+            sites: vec![OpSite {
+                seq: 0,
+                kind: OpKind::Linear,
+                wid: Some(WeightId(5)),
+                dtype: DType::Q8_0,
+                m: 32,
+                k: 128,
+                n: 2,
+                weight_bytes: w.byte_size(),
+            }],
+        };
+        let c = coordinator(2);
+        c.apply_plan_sharded(&plan);
+        c.submit_sharded(&OpDesc::linear(&w, &x));
+        c.submit_sharded(&OpDesc::linear(&w, &x));
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(c.metrics.cache_hits.load(ord), 2, "warm shards hit the pre-pinned ids");
+        assert_eq!(c.metrics.cache_insert_failures.load(ord), 0);
     }
 }

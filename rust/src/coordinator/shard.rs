@@ -1,0 +1,223 @@
+//! Row-tile sharding of one mat-mul across lanes.
+//!
+//! A GGML-style `mul_mat` output is `[n, m]` where every column `j` is
+//! produced by an independent vec-dot of weight row `j` against each
+//! activation row — so the *weight rows* are the natural shard axis: a
+//! [`ShardPlan`] splits the `m` rows into contiguous ranges, assigns each
+//! range to a lane, and the stitched output is **bit-identical** to the
+//! unsharded op (no partial sums ever cross a shard boundary).
+//!
+//! Invariants (property-tested in `tests/shard_props.rs`):
+//!
+//! * **disjoint + covering** — the shard ranges partition `0..m` exactly,
+//!   in ascending order;
+//! * **balanced** — shard sizes differ by at most one row;
+//! * **budget-capped** — when a per-lane cache budget is given, no shard
+//!   exceeds it (`rows × row_bytes ≤ budget`) as long as a single row
+//!   fits the budget at all, so every shard is *cacheable* in its lane's
+//!   LMM partition; over-budget weights fall back to more, smaller
+//!   shards dealt round-robin over the lanes.
+//!
+//! Each shard carries its own derived [`WeightId`] ([`shard_wid`]) so a
+//! lane caches **only its resident shard** of the parent weight — this is
+//! what turns the weight cache from a latency lever into a
+//! bandwidth-scaling lever: `L` lanes hold `L×` the aggregate resident
+//! bytes, and a warm step streams only the shards that did not fit.
+
+use crate::ggml::WeightId;
+use std::ops::Range;
+
+/// One shard of a row-partitioned weight: `rows` of the parent matrix,
+/// executed on `lane`, cached under `wid`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RowShard {
+    /// Lane index the shard executes (and caches) on.
+    pub lane: usize,
+    /// Weight-row range of the parent matrix (`[start, end)`).
+    pub rows: Range<usize>,
+    /// Cache identity of this shard (`None` for anonymous weights, which
+    /// stream transiently on every call).
+    pub wid: Option<WeightId>,
+}
+
+impl RowShard {
+    /// Rows in the shard.
+    pub fn len(&self) -> usize {
+        self.rows.end - self.rows.start
+    }
+
+    /// Whether the shard is empty (never produced by [`ShardPlan::new`]).
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// The row partition of one weight across the lanes.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// Total weight rows partitioned.
+    pub m: usize,
+    /// Shards in ascending row order (lane = index % lanes).
+    pub shards: Vec<RowShard>,
+}
+
+impl ShardPlan {
+    /// Rows of one shard that fit a lane's cache budget: `m` (no cap)
+    /// when caching is disabled **or** when a single row already exceeds
+    /// the budget — such a weight cannot be cached at any shard size, so
+    /// it takes the plain lanes-way split and streams, rather than
+    /// fragmenting into per-row submissions that would each re-load the
+    /// activation rows.
+    pub fn cap_rows(row_bytes: usize, cache_budget: usize, m: usize) -> usize {
+        if cache_budget == 0 || row_bytes == 0 || row_bytes > cache_budget {
+            m.max(1)
+        } else {
+            cache_budget / row_bytes
+        }
+    }
+
+    /// Partition `m` rows over `lanes` lanes with at most `cap_rows` rows
+    /// per shard. The shard count is `max(lanes, ceil(m / cap_rows))`
+    /// (clamped to `m`), sizes are balanced to within one row, and shard
+    /// `i` runs on lane `i % lanes`; shard ids derive from `parent` via
+    /// [`shard_wid`]. With one shard the parent id is used unchanged, so
+    /// single-lane sharded execution is cache-compatible with unsharded
+    /// execution.
+    pub fn new(m: usize, lanes: usize, cap_rows: usize, parent: Option<WeightId>) -> ShardPlan {
+        assert!(m > 0, "cannot shard an empty weight");
+        assert!(lanes > 0, "cannot shard over zero lanes");
+        let cap = cap_rows.max(1);
+        let count = lanes.max(m.div_ceil(cap)).min(m);
+        let (base, rem) = (m / count, m % count);
+        let mut shards = Vec::with_capacity(count);
+        let mut start = 0;
+        for i in 0..count {
+            let len = base + usize::from(i < rem);
+            let rows = start..start + len;
+            start += len;
+            shards.push(RowShard {
+                lane: i % lanes,
+                rows,
+                wid: parent.map(|p| shard_wid(p, i, count)),
+            });
+        }
+        debug_assert_eq!(start, m, "shards must cover all rows");
+        ShardPlan { m, shards }
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Whether the plan is trivial (no split happened).
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Largest shard size in rows.
+    pub fn max_rows(&self) -> usize {
+        self.shards.iter().map(RowShard::len).max().unwrap_or(0)
+    }
+}
+
+/// Stable identity of shard `index` of `count` of a parent weight.
+///
+/// A pure function of `(parent, index, count)`, so the pin pass
+/// ([`crate::coordinator::Coordinator::apply_plan_sharded`]) and the
+/// execution path ([`crate::coordinator::Coordinator::submit_sharded`])
+/// independently derive the **same** id — warm calls hit the shards the
+/// plan pinned. `count == 1` returns the parent id unchanged.
+pub fn shard_wid(parent: WeightId, index: usize, count: usize) -> WeightId {
+    if count == 1 {
+        return parent;
+    }
+    let mut h = parent.0 ^ 0xA076_1D64_78BD_642F;
+    h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    h ^= ((index as u64) << 32) | count as u64;
+    h = h.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    WeightId(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_partition(plan: &ShardPlan) {
+        let mut next = 0;
+        for s in &plan.shards {
+            assert_eq!(s.rows.start, next, "shards must be contiguous: {plan:?}");
+            assert!(!s.is_empty(), "empty shard: {plan:?}");
+            next = s.rows.end;
+        }
+        assert_eq!(next, plan.m, "shards must cover all rows: {plan:?}");
+    }
+
+    #[test]
+    fn balanced_split_over_lanes() {
+        let p = ShardPlan::new(10, 4, usize::MAX, None);
+        assert_partition(&p);
+        assert_eq!(p.len(), 4);
+        let sizes: Vec<_> = p.shards.iter().map(RowShard::len).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+        assert_eq!(
+            p.shards.iter().map(|s| s.lane).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+    }
+
+    #[test]
+    fn fewer_rows_than_lanes_caps_shard_count() {
+        let p = ShardPlan::new(3, 8, usize::MAX, None);
+        assert_partition(&p);
+        assert_eq!(p.len(), 3, "no empty shards");
+    }
+
+    #[test]
+    fn cache_cap_splits_finer_and_respects_budget() {
+        // 100 rows of 10 B over 2 lanes with a 200 B budget: cap is 20
+        // rows, so 5 shards of ≤ 20 rows dealt round-robin.
+        let cap = ShardPlan::cap_rows(10, 200, 100);
+        assert_eq!(cap, 20);
+        let p = ShardPlan::new(100, 2, cap, Some(WeightId(7)));
+        assert_partition(&p);
+        assert_eq!(p.len(), 5);
+        assert!(p.max_rows() <= cap);
+        assert_eq!(
+            p.shards.iter().map(|s| s.lane).collect::<Vec<_>>(),
+            vec![0, 1, 0, 1, 0]
+        );
+    }
+
+    #[test]
+    fn cap_rows_disabled_cache_means_no_cap() {
+        assert_eq!(ShardPlan::cap_rows(10, 0, 64), 64);
+        // A row bigger than the budget is uncacheable at any shard size:
+        // no cap either (plain lanes-way split, shards stream).
+        assert_eq!(ShardPlan::cap_rows(500, 200, 64), 64);
+    }
+
+    #[test]
+    fn shard_wids_are_stable_distinct_and_identity_for_single() {
+        let parent = WeightId(0xBEEF);
+        assert_eq!(shard_wid(parent, 0, 1), parent, "unsharded keeps the parent id");
+        let a = shard_wid(parent, 0, 4);
+        let b = shard_wid(parent, 1, 4);
+        assert_ne!(a, b, "index enters the id");
+        assert_ne!(a, shard_wid(parent, 0, 2), "count enters the id");
+        assert_ne!(a.0, parent.0, "shard ids do not collide with the parent");
+        assert_eq!(a, shard_wid(parent, 0, 4), "pure function of the inputs");
+        assert_ne!(a, shard_wid(WeightId(0xF00D), 0, 4), "parent enters the id");
+    }
+
+    #[test]
+    fn plan_ids_match_independent_derivation() {
+        let parent = WeightId(42);
+        let p = ShardPlan::new(64, 4, 16, Some(parent));
+        for (i, s) in p.shards.iter().enumerate() {
+            assert_eq!(s.wid, Some(shard_wid(parent, i, p.len())));
+        }
+        let anon = ShardPlan::new(64, 4, 16, None);
+        assert!(anon.shards.iter().all(|s| s.wid.is_none()));
+    }
+}

@@ -30,6 +30,17 @@ impl KernelKind {
             KernelKind::Q3K => "Q3_K",
         }
     }
+
+    /// The lane kernel a weight storage dtype selects (`None` for
+    /// host-only dtypes) — the single dtype→kernel mapping the offload
+    /// paths share.
+    pub fn of_dtype(dtype: crate::ggml::DType) -> Option<KernelKind> {
+        match dtype {
+            crate::ggml::DType::Q8_0 => Some(KernelKind::Q8_0),
+            crate::ggml::DType::Q3K => Some(KernelKind::Q3K),
+            _ => None,
+        }
+    }
 }
 
 /// Role a PE plays inside a group (for utilization/power accounting).

@@ -142,6 +142,10 @@ pub struct Lmm {
     stats: CacheStats,
     /// Total bytes ever written by DMA LOAD.
     pub loaded_bytes: u64,
+    /// Subset of [`Lmm::loaded_bytes`] spent on weight tiles (streamed
+    /// tiles and cache fills; activation rows excluded) — the per-lane
+    /// metric the shard-scaling experiment reports.
+    pub loaded_weight_bytes: u64,
     /// Total bytes ever read back by DMA DRAIN.
     pub drained_bytes: u64,
     /// Peak occupancy seen (transient + cached).
@@ -163,6 +167,7 @@ impl Lmm {
             tick: 0,
             stats: CacheStats::default(),
             loaded_bytes: 0,
+            loaded_weight_bytes: 0,
             drained_bytes: 0,
             peak_used: 0,
         }
@@ -258,11 +263,16 @@ impl Lmm {
     pub fn record_load(&mut self, id: RegionId) {
         let at = self.region_index(id.0).expect("load into released region");
         self.loaded_bytes += self.regions[at].bytes as u64;
+        if self.regions[at].label == "weights" {
+            self.loaded_weight_bytes += self.regions[at].bytes as u64;
+        }
     }
 
-    /// Record a DMA fill of `bytes` not tied to a handle (cache fills).
+    /// Record a DMA fill of `bytes` not tied to a handle (the
+    /// whole-matrix weight fills of the residency cache).
     pub fn record_load_bytes(&mut self, bytes: u64) {
         self.loaded_bytes += bytes;
+        self.loaded_weight_bytes += bytes;
     }
 
     /// Record a DMA write-back of `bytes` (DRAIN phase bookkeeping).

@@ -11,12 +11,11 @@
 //! * `trace`     — dump the SD-Turbo mat-mul trace summary
 
 use imax_sd::device::{arm_a72, gtx_1080ti, pdp_joules, xeon_w5, Device, ImaxDevice};
-use imax_sd::imax::ImaxConfig;
 use imax_sd::sd::arch::sd_turbo_512;
-use imax_sd::sd::pipeline::{to_rgb8, Backend, Pipeline, PipelineConfig};
+use imax_sd::sd::pipeline::{to_rgb8, Pipeline, PipelineConfig};
 use imax_sd::sd::profiler::table1_shares;
 use imax_sd::sd::QuantModel;
-use imax_sd::util::cli::{App, Arg};
+use imax_sd::util::cli::{App, Arg, BackendFlags};
 use imax_sd::util::png::{write_png, ColorType};
 use imax_sd::util::tables::{BarChart, StackedBars, Table};
 
@@ -50,16 +49,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 .arg(Arg::opt("seed", 's', "N", "latent seed").default("42"))
                 .arg(Arg::opt("steps", 'n', "N", "denoising steps").default("1"))
                 .arg(Arg::opt("out", 'o', "PATH", "output PNG").default("out.png"))
-                .arg(Arg::flag("host", 'H', "run on host only (no IMAX offload)"))
-                .arg(
-                    Arg::opt("lmm-cache", 'c', "BYTES", "LMM bytes for the resident weight cache")
-                        .default("262144"),
-                )
-                .arg(Arg::flag(
-                    "no-weight-cache",
-                    '\0',
-                    "disable weight residency (stream every weight tile, paper baseline)",
-                )),
+                .args(BackendFlags::args()),
         )
         .subcommand(
             App::new("e2e", "device end-to-end latency comparison (Figs. 6-7)")
@@ -87,29 +77,22 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     match sub.command.as_str() {
         "generate" => {
             let model = model_of(sub.str("model"));
-            let backend = if sub.flag("host") {
-                Backend::Host { threads: 2 }
-            } else {
-                let mut imax = ImaxConfig::fpga(1);
-                imax.weight_cache_bytes = if sub.flag("no-weight-cache") {
-                    0
-                } else {
-                    sub.usize("lmm-cache")?
-                };
-                Backend::Imax { config: imax, threads: 2 }
-            };
+            let sel = BackendFlags::parse(&sub)?;
             let pipe = Pipeline::new(PipelineConfig {
                 weight_seed: 0x5D_7B0,
                 model: Some(model),
                 steps: sub.usize("steps")?,
-                backend,
+                backend: sel.pipeline_backend(),
             });
             let (img, report) = pipe.generate(sub.str("prompt"), sub.u64("seed")?);
             let out = sub.str("out");
             write_png(out, img.w as u32, img.h as u32, ColorType::Rgb, &to_rgb8(&img))?;
             println!(
-                "wrote {out}: {} mat-muls ({} offloaded), {:.2} s wall",
-                report.matmul_calls, report.offloaded_calls, report.wall_seconds
+                "wrote {out}: {} ops ({} offloaded over {} lane submissions), {:.2} s wall",
+                report.matmul_calls,
+                report.offloaded_calls,
+                report.lane_submissions,
+                report.wall_seconds
             );
             let c = report.cache;
             if c.hits + c.misses > 0 {

@@ -1,0 +1,782 @@
+//! Typed op-submission execution API — the offload seam.
+//!
+//! Historically every pipeline mat-mul went through an eager, kind-blind
+//! `MatMulEngine::mul_mat(w, x) -> Tensor`. That seam could not express
+//! what the dispatcher needs to *see* to schedule well: which kernel
+//! kind an op is (the CGLA pays CONF on kind switches), which weight it
+//! names (residency), and which request it serves (serving accounting).
+//! This module replaces it with a **typed submission API**:
+//!
+//! * [`OpDesc`] — one operation: an [`OpKind`] (`Linear`,
+//!   `ConvIm2col{k,stride}`, `AttnScores`, `AttnValues`, `TimeEmbed`),
+//!   the weight identity, the operand tensors and the request tag;
+//! * [`ExecBackend`] — `submit(OpDesc) -> OpHandle` plus
+//!   `sync(OpHandle) -> Tensor` (and the [`ExecBackend::submit_now`]
+//!   sugar for the synchronous callers);
+//! * three implementations: [`HostBackend`] (GGML kernels on CPU
+//!   threads), [`ImaxBackend`] (one simulated lane, paper §III-B
+//!   policy), and [`ShardedBackend`] (the multi-lane coordinator with
+//!   **single-op row-tile sharding**: one op's weight rows split across
+//!   lanes, each lane loading/caching only its resident shard, outputs
+//!   stitched bit-identically).
+//!
+//! [`crate::sd::plan::PlanRecorder`] is a fourth backend that records
+//! the typed op sequence instead of executing it — the compiled
+//! [`crate::sd::plan::OpPlan`] is what the prefetch/pin passes and the
+//! per-lane CONF grouping consume.
+//!
+//! # Migration from `MatMulEngine`
+//!
+//! | old                              | new                                          |
+//! |----------------------------------|----------------------------------------------|
+//! | `eng.mul_mat(&w, &x)`            | `eng.submit_now(OpDesc::linear(&w, &x))`     |
+//! | `HostEngine::new(t)`             | `HostBackend::new(t)`                        |
+//! | `ImaxEngine::new(cfg, t)`        | `ImaxBackend::new(cfg, t)`                   |
+//! | (not expressible)                | `ShardedBackend` / `Backend::Sharded`        |
+//!
+//! Backends execute `submit` synchronously today (the simulator is
+//! sequential), parking the result until `sync` — the split is the API
+//! contract that lets a future scheduler overlap marshalling, DMA and
+//! EXEC without touching any caller.
+
+use crate::coordinator::Coordinator;
+use crate::ggml::{self, DType, Tensor, WeightId};
+use crate::imax::lane::LaneSim;
+use crate::imax::lmm::CacheStats;
+use crate::imax::timing::PhaseBreakdown;
+use crate::imax::ImaxConfig;
+use crate::sd::plan::OpPlan;
+use crate::sd::trace::QuantModel;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Identity of one serving request, threaded through the backends so a
+/// shared profile can be split per request (the serving layer's latency
+/// and accounting unit). Single-shot runs use [`RequestId::SOLO`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RequestId(pub u64);
+
+impl RequestId {
+    /// The id used by non-serving (single request) pipeline runs.
+    pub const SOLO: RequestId = RequestId(0);
+}
+
+/// What a submitted mat-mul *is* in the graph — the kernel-kind-aware
+/// dispatch key. The CGLA mapping work (and SD-Acc-style phase-aware
+/// dispatch) both hinge on the dispatcher seeing this rather than an
+/// opaque `(w, x)` pair: kinds group into CONF-compatible runs, identify
+/// per-request operands (attention), and name the im2col geometry convs
+/// would need for a future OP_SML16 offload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Dense projection: quantized (or F16) model weight × activations.
+    Linear,
+    /// Convolution lowered to a GEMM over im2col patches of a `k×k`
+    /// kernel with stride `stride` (weights `[cout, cin·k·k]`).
+    ConvIm2col {
+        /// Spatial kernel size.
+        k: usize,
+        /// Convolution stride.
+        stride: usize,
+    },
+    /// Attention score mat-mul `q · kᵀ` (both operands per-request F32).
+    AttnScores,
+    /// Attention value mat-mul `softmax(scores) · v` (per-request F32).
+    AttnValues,
+    /// Timestep-embedding projection (dense, but n = 1 — the GEMV-style
+    /// site the LLM-on-CGLA follow-up optimizes for).
+    TimeEmbed,
+}
+
+impl OpKind {
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Linear => "linear",
+            OpKind::ConvIm2col { .. } => "conv_im2col",
+            OpKind::AttnScores => "attn_scores",
+            OpKind::AttnValues => "attn_values",
+            OpKind::TimeEmbed => "time_embed",
+        }
+    }
+
+    /// Whether both operands are per-request activation tensors (nothing
+    /// shared between concurrent requests). These ops bypass the serving
+    /// rendezvous and run immediately on the host path — which is also
+    /// the paper's routing (attention F32 never offloads).
+    pub fn per_request_operands(self) -> bool {
+        matches!(self, OpKind::AttnScores | OpKind::AttnValues)
+    }
+}
+
+/// One typed operation submitted to an [`ExecBackend`]:
+/// `out[n, m] = Σ_k w[m, k] · x[n, k]` plus the dispatch metadata the
+/// eager seam could not carry.
+#[derive(Debug, Clone, Copy)]
+pub struct OpDesc<'a> {
+    /// What the op is in the graph.
+    pub kind: OpKind,
+    /// Weight content identity (`None` for anonymous tensors, e.g. the
+    /// per-request attention operands).
+    pub wid: Option<WeightId>,
+    /// Weight operand `[m, k]`.
+    pub w: &'a Tensor,
+    /// Activation operand `[n, k]` (f32).
+    pub x: &'a Tensor,
+    /// Request the op serves. [`RequestId::SOLO`] (the constructor
+    /// default) inherits the backend's current request set via
+    /// [`ExecBackend::begin_request`]; an explicit tag overrides it.
+    pub request: RequestId,
+}
+
+impl<'a> OpDesc<'a> {
+    /// Build a descriptor of `kind` (weight identity taken from `w`).
+    pub fn new(kind: OpKind, w: &'a Tensor, x: &'a Tensor) -> OpDesc<'a> {
+        OpDesc { kind, wid: w.wid, w, x, request: RequestId::SOLO }
+    }
+
+    /// Dense projection.
+    pub fn linear(w: &'a Tensor, x: &'a Tensor) -> OpDesc<'a> {
+        OpDesc::new(OpKind::Linear, w, x)
+    }
+
+    /// im2col conv GEMM (`x` is the `[oh·ow, cin·k·k]` patch matrix).
+    pub fn conv_im2col(w: &'a Tensor, cols: &'a Tensor, k: usize, stride: usize) -> OpDesc<'a> {
+        OpDesc::new(OpKind::ConvIm2col { k, stride }, w, cols)
+    }
+
+    /// Attention scores: `w` = per-head keys `[m_tokens, d]`, `x` =
+    /// per-head queries `[n, d]`.
+    pub fn attn_scores(k_head: &'a Tensor, q_head: &'a Tensor) -> OpDesc<'a> {
+        OpDesc::new(OpKind::AttnScores, k_head, q_head)
+    }
+
+    /// Attention values: `w` = transposed per-head values `[d, m_tokens]`,
+    /// `x` = softmaxed scores `[n, m_tokens]`.
+    pub fn attn_values(v_t: &'a Tensor, scores: &'a Tensor) -> OpDesc<'a> {
+        OpDesc::new(OpKind::AttnValues, v_t, scores)
+    }
+
+    /// Timestep-embedding projection.
+    pub fn time_embed(w: &'a Tensor, x: &'a Tensor) -> OpDesc<'a> {
+        OpDesc::new(OpKind::TimeEmbed, w, x)
+    }
+
+    /// Tag the op with an explicit request.
+    pub fn with_request(mut self, request: RequestId) -> OpDesc<'a> {
+        self.request = request;
+        self
+    }
+
+    /// Override the weight identity (the constructors default to
+    /// `w.wid`). `OpDesc.wid` — not the tensor's own id — is what every
+    /// consumer reads: plan recording, the dispatch check, lane
+    /// affinity, residency caching and shard-id derivation. Overriding
+    /// lets a caller alias distinct tensors to one cache entry (or
+    /// split one tensor's uses into distinct entries).
+    pub fn with_wid(mut self, wid: WeightId) -> OpDesc<'a> {
+        self.wid = Some(wid);
+        self
+    }
+
+    /// MAC count of the op.
+    pub fn macs(&self) -> u64 {
+        (self.w.rows * self.w.cols * self.x.rows) as u64
+    }
+}
+
+/// Handle to a submitted op; redeem with [`ExecBackend::sync`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct OpHandle(u64);
+
+/// Completion store shared by the backend implementations: `submit`
+/// parks the finished tensor here, `sync` takes it out. Slots are freed
+/// on `sync`, so long-lived backends do not grow without bound.
+#[derive(Debug, Default)]
+pub struct Completions {
+    next: u64,
+    ready: std::collections::HashMap<u64, Tensor>,
+}
+
+impl Completions {
+    /// Park a finished result, minting its handle.
+    pub fn complete(&mut self, out: Tensor) -> OpHandle {
+        let h = OpHandle(self.next);
+        self.next += 1;
+        self.ready.insert(h.0, out);
+        h
+    }
+
+    /// Redeem a handle (panics on double-sync or a foreign handle).
+    pub fn take(&mut self, h: OpHandle) -> Tensor {
+        self.ready
+            .remove(&h.0)
+            .unwrap_or_else(|| panic!("OpHandle {h:?} already synced (or from another backend)"))
+    }
+
+    /// Ops submitted but not yet synced.
+    pub fn pending(&self) -> usize {
+        self.ready.len()
+    }
+}
+
+/// Per-backend run statistics (mini analog of the paper's profiling).
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    /// Wall-clock seconds per weight dtype.
+    pub seconds_by_dtype: BTreeMap<&'static str, f64>,
+    /// MACs per weight dtype.
+    pub macs_by_dtype: BTreeMap<&'static str, u64>,
+    /// MACs per request id (one entry for non-serving runs).
+    pub macs_by_request: BTreeMap<u64, u64>,
+    /// Submitted ops.
+    pub calls: u64,
+    /// Ops executed on the IMAX simulator.
+    pub offloaded_calls: u64,
+    /// Lane submissions those ops decomposed into (> `offloaded_calls`
+    /// when the backend shards single ops across lanes).
+    pub lane_submissions: u64,
+    /// Accumulated IMAX phase breakdown (zero for host-only runs).
+    pub imax_phases: PhaseBreakdown,
+    /// Weight-residency cache counters, summed over the lanes the
+    /// backend executed on (zero for host-only runs).
+    pub cache: CacheStats,
+    /// Submissions that did not match the compiled [`OpPlan`] site at
+    /// their position (0 when no plan is attached, or when dispatch
+    /// followed the plan exactly).
+    pub plan_divergences: u64,
+}
+
+impl EngineStats {
+    /// Record one op for `request` (crate-visible so backend
+    /// implementations outside this module, e.g. the serving batcher,
+    /// account identically).
+    pub(crate) fn record(&mut self, request: RequestId, dtype: DType, macs: u64, secs: f64) {
+        *self.seconds_by_dtype.entry(dtype.name()).or_insert(0.0) += secs;
+        *self.macs_by_dtype.entry(dtype.name()).or_insert(0) += macs;
+        *self.macs_by_request.entry(request.0).or_insert(0) += macs;
+        self.calls += 1;
+    }
+}
+
+/// The offload seam: every pipeline mat-mul is submitted through here as
+/// a typed [`OpDesc`].
+pub trait ExecBackend {
+    /// Submit one op; the returned handle is redeemed with
+    /// [`ExecBackend::sync`].
+    fn submit(&mut self, op: OpDesc<'_>) -> OpHandle;
+
+    /// Block until a submitted op's output is ready and take it.
+    fn sync(&mut self, h: OpHandle) -> Tensor;
+
+    /// Submit + sync in one call — the synchronous sugar every graph-
+    /// level caller uses today.
+    fn submit_now(&mut self, op: OpDesc<'_>) -> Tensor {
+        let h = self.submit(op);
+        self.sync(h)
+    }
+
+    /// Statistics so far.
+    fn stats(&self) -> &EngineStats;
+
+    /// Tag subsequent ops with a request id (default: keep SOLO).
+    fn begin_request(&mut self, _id: RequestId) {}
+}
+
+/// Resolve the request an op is accounted to: an explicit tag wins,
+/// otherwise the backend's current request.
+pub(crate) fn resolve_request(op: &OpDesc<'_>, current: RequestId) -> RequestId {
+    if op.request == RequestId::SOLO {
+        current
+    } else {
+        op.request
+    }
+}
+
+/// The compiled-plan dispatch check shared by the plan-aware backends:
+/// armed with a recorded `(wid, kind)` sequence, it verifies each
+/// submission against the site at its position.
+#[derive(Default)]
+struct PlanCheck {
+    sites: Option<Vec<(Option<WeightId>, OpKind)>>,
+    pos: usize,
+}
+
+impl PlanCheck {
+    /// Arm the check with a compiled plan (resets the cursor).
+    fn arm(&mut self, plan: &OpPlan) {
+        self.sites = Some(plan.sites.iter().map(|s| (s.wid, s.kind)).collect());
+        self.pos = 0;
+    }
+
+    /// Advance past one submission; `true` when it diverged from the
+    /// armed plan (always `false` while unarmed).
+    fn diverges(&mut self, op: &OpDesc<'_>) -> bool {
+        let Some(sites) = &self.sites else {
+            return false;
+        };
+        let ok = matches!(
+            sites.get(self.pos),
+            Some((wid, kind)) if *wid == op.wid && *kind == op.kind
+        );
+        self.pos += 1;
+        !ok
+    }
+}
+
+/// Quantize the activations and run one whole op on `lane`, caching
+/// under `wid` — the single-lane analog of the coordinator's
+/// marshal+run primitive. Returns `None` when `w` is not a lane dtype
+/// (the caller falls back to the host kernels).
+fn run_quantized_on_lane(
+    lane: &mut LaneSim,
+    wid: Option<WeightId>,
+    w: &Tensor,
+    x: &Tensor,
+) -> Option<(Vec<f32>, PhaseBreakdown)> {
+    match &w.data {
+        crate::ggml::tensor::Storage::Q8_0(blocks) => {
+            let acts: Vec<_> = (0..x.rows)
+                .flat_map(|r| crate::ggml::q8_0::quantize_row(x.row_f32(r)))
+                .collect();
+            Some(
+                lane.mul_mat_q8_0_cached(wid, blocks, w.rows, &acts, x.rows, w.cols)
+                    .expect("mini shapes fit LMM"),
+            )
+        }
+        crate::ggml::tensor::Storage::Q3K(blocks) => {
+            let acts: Vec<_> = (0..x.rows)
+                .flat_map(|r| crate::ggml::q8_k::quantize_row(x.row_f32(r)))
+                .collect();
+            Some(
+                lane.mul_mat_q3_k_cached(wid, blocks, w.rows, &acts, x.rows, w.cols)
+                    .expect("mini shapes fit LMM"),
+            )
+        }
+        _ => None,
+    }
+}
+
+/// Host backend: GGML kernels on CPU threads.
+pub struct HostBackend {
+    /// Worker threads for row-parallel mat-muls.
+    pub threads: usize,
+    request: RequestId,
+    stats: EngineStats,
+    done: Completions,
+}
+
+impl HostBackend {
+    /// New host backend.
+    pub fn new(threads: usize) -> HostBackend {
+        HostBackend {
+            threads,
+            request: RequestId::SOLO,
+            stats: EngineStats::default(),
+            done: Completions::default(),
+        }
+    }
+}
+
+impl ExecBackend for HostBackend {
+    fn submit(&mut self, op: OpDesc<'_>) -> OpHandle {
+        let t0 = std::time::Instant::now();
+        let out = ggml::mul_mat(op.w, op.x, self.threads);
+        let request = resolve_request(&op, self.request);
+        self.stats.record(request, op.w.dtype(), op.macs(), t0.elapsed().as_secs_f64());
+        self.done.complete(out)
+    }
+
+    fn sync(&mut self, h: OpHandle) -> Tensor {
+        self.done.take(h)
+    }
+
+    fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    fn begin_request(&mut self, id: RequestId) {
+        self.request = id;
+    }
+}
+
+/// IMAX backend: quantized ops run functionally on one lane simulator
+/// (bit-exact vs the hardware dataflow); everything else falls back to
+/// the host path — exactly the paper's offload policy.
+pub struct ImaxBackend {
+    lane: LaneSim,
+    /// Host threads for the non-offloaded ops.
+    pub threads: usize,
+    request: RequestId,
+    stats: EngineStats,
+    done: Completions,
+    plan: PlanCheck,
+}
+
+impl ImaxBackend {
+    /// New backend over an IMAX configuration.
+    pub fn new(imax: ImaxConfig, threads: usize) -> ImaxBackend {
+        ImaxBackend {
+            lane: LaneSim::new(imax),
+            threads,
+            request: RequestId::SOLO,
+            stats: EngineStats::default(),
+            done: Completions::default(),
+            plan: PlanCheck::default(),
+        }
+    }
+
+    /// Attach a compiled [`OpPlan`]: runs the prefetch/pin pass (pin the
+    /// hottest weights that fit this lane's cache budget) and arms the
+    /// dispatch check — each submission is verified against the recorded
+    /// `(wid, kind)` at its position. Call once, before the first
+    /// submission, on a backend that will execute exactly one recorded
+    /// sequence.
+    pub fn apply_plan(&mut self, plan: &OpPlan) {
+        for wid in plan.pin_set(self.lane.lmm.cache_budget()) {
+            self.lane.pin_weight(wid);
+        }
+        self.plan.arm(plan);
+    }
+
+    /// The simulated lane (cache/DMA/phase introspection).
+    pub fn lane(&self) -> &LaneSim {
+        &self.lane
+    }
+
+    /// Which quantized model a weight dtype's offloads correspond to.
+    pub fn quant_model_of(dtype: DType) -> Option<QuantModel> {
+        match dtype {
+            DType::Q3K => Some(QuantModel::Q3K),
+            DType::Q8_0 => Some(QuantModel::Q8_0),
+            _ => None,
+        }
+    }
+}
+
+impl ExecBackend for ImaxBackend {
+    fn submit(&mut self, op: OpDesc<'_>) -> OpHandle {
+        let t0 = std::time::Instant::now();
+        let macs = op.macs();
+        if self.plan.diverges(&op) {
+            self.stats.plan_divergences += 1;
+        }
+        let (w, x) = (op.w, op.x);
+        let out = match run_quantized_on_lane(&mut self.lane, op.wid, w, x) {
+            Some((data, bd)) => {
+                self.stats.imax_phases += bd;
+                self.stats.offloaded_calls += 1;
+                self.stats.lane_submissions += 1;
+                self.stats.cache = self.lane.cache_stats();
+                Tensor::f32(x.rows, w.rows, data)
+            }
+            None => ggml::mul_mat(w, x, self.threads),
+        };
+        let request = resolve_request(&op, self.request);
+        self.stats.record(request, w.dtype(), macs, t0.elapsed().as_secs_f64());
+        self.done.complete(out)
+    }
+
+    fn sync(&mut self, h: OpHandle) -> Tensor {
+        self.done.take(h)
+    }
+
+    fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    fn begin_request(&mut self, id: RequestId) {
+        self.request = id;
+    }
+}
+
+/// Sharded backend: routes through the multi-lane [`Coordinator`] and
+/// splits every offload-eligible op's weight **row-tiles across the
+/// lanes** — each lane computes (and caches) only its shard, outputs are
+/// stitched back column-wise, bit-identical to unsharded execution (each
+/// output element is one independent vec-dot; no partial sums cross a
+/// shard boundary).
+///
+/// This is the bandwidth-scaling mode the ROADMAP calls for: `L` lanes
+/// hold `L×` the aggregate resident weight bytes, so the warm-step
+/// weight LOAD per lane *shrinks* as lanes are added instead of every
+/// lane re-streaming the full matrix.
+pub struct ShardedBackend {
+    coordinator: Arc<Coordinator>,
+    request: RequestId,
+    stats: EngineStats,
+    done: Completions,
+    plan: PlanCheck,
+}
+
+impl ShardedBackend {
+    /// New backend over a shared coordinator.
+    pub fn new(coordinator: Arc<Coordinator>) -> ShardedBackend {
+        ShardedBackend {
+            coordinator,
+            request: RequestId::SOLO,
+            stats: EngineStats::default(),
+            done: Completions::default(),
+            plan: PlanCheck::default(),
+        }
+    }
+
+    /// Build a private coordinator: `imax.lanes` lanes, `host_threads`
+    /// host workers, quantized-only offload policy.
+    pub fn from_config(imax: ImaxConfig, host_threads: usize) -> ShardedBackend {
+        let lanes = imax.lanes;
+        ShardedBackend::new(Arc::new(Coordinator::new(
+            imax,
+            lanes,
+            host_threads,
+            crate::coordinator::OffloadPolicy::QuantizedOnly,
+        )))
+    }
+
+    /// The coordinator (lane/cache/metric introspection).
+    pub fn coordinator(&self) -> &Arc<Coordinator> {
+        &self.coordinator
+    }
+
+    /// Run the sharded prefetch/pin pass for a compiled plan — each hot
+    /// weight's row-tiles are pinned shard-by-shard on their owning
+    /// lanes (see [`Coordinator::apply_plan_sharded`]) — and arm the
+    /// dispatch check: each submission is verified against the recorded
+    /// `(wid, kind)` at its position, like [`ImaxBackend::apply_plan`].
+    pub fn apply_plan(&mut self, plan: &OpPlan) {
+        self.coordinator.apply_plan_sharded(plan);
+        self.plan.arm(plan);
+    }
+}
+
+impl ExecBackend for ShardedBackend {
+    fn submit(&mut self, op: OpDesc<'_>) -> OpHandle {
+        let t0 = std::time::Instant::now();
+        let macs = op.macs();
+        let request = resolve_request(&op, self.request);
+        if self.plan.diverges(&op) {
+            self.stats.plan_divergences += 1;
+        }
+        let out = if self.coordinator.shardable(&op) {
+            let run = self.coordinator.submit_sharded(&op);
+            self.stats.offloaded_calls += 1;
+            self.stats.lane_submissions += run.shards as u64;
+            self.stats.imax_phases += run.phases;
+            self.stats.cache += run.cache;
+            run.out
+        } else {
+            self.coordinator.submit_op(&op)
+        };
+        self.stats.record(request, op.w.dtype(), macs, t0.elapsed().as_secs_f64());
+        self.done.complete(out)
+    }
+
+    fn sync(&mut self, h: OpHandle) -> Tensor {
+        self.done.take(h)
+    }
+
+    fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    fn begin_request(&mut self, id: RequestId) {
+        self.request = id;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::OffloadPolicy;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn rnd(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        let mut v = vec![0.0f32; rows * cols];
+        r.fill_normal(&mut v, 0.5);
+        Tensor::f32(rows, cols, v)
+    }
+
+    #[test]
+    fn op_desc_constructors_carry_kind_and_wid() {
+        let w = rnd(4, 64, 1).quantize(DType::Q8_0).with_wid(WeightId(9));
+        let x = rnd(2, 64, 2);
+        let d = OpDesc::linear(&w, &x);
+        assert_eq!(d.kind, OpKind::Linear);
+        assert_eq!(d.wid, Some(WeightId(9)));
+        assert_eq!(d.request, RequestId::SOLO);
+        assert_eq!(d.macs(), 4 * 64 * 2);
+        let c = OpDesc::conv_im2col(&w, &x, 3, 2);
+        assert_eq!(c.kind, OpKind::ConvIm2col { k: 3, stride: 2 });
+        assert!(OpDesc::attn_scores(&x, &x).kind.per_request_operands());
+        assert!(OpDesc::attn_values(&x, &x).kind.per_request_operands());
+        assert!(!OpDesc::time_embed(&w, &x).kind.per_request_operands());
+        assert_eq!(d.with_request(RequestId(7)).request, RequestId(7));
+        assert_eq!(d.with_wid(WeightId(42)).wid, Some(WeightId(42)), "override wins");
+    }
+
+    #[test]
+    fn submit_sync_round_trip_and_handle_reuse_panics() {
+        let w = rnd(4, 64, 3).quantize(DType::Q8_0);
+        let x = rnd(2, 64, 4);
+        let mut b = HostBackend::new(1);
+        let h = b.submit(OpDesc::linear(&w, &x));
+        let out = b.sync(h);
+        assert_eq!((out.rows, out.cols), (2, 4));
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| b.sync(h)));
+        assert!(r.is_err(), "double sync must panic");
+    }
+
+    #[test]
+    fn host_backend_stats_accumulate() {
+        let mut b = HostBackend::new(1);
+        let w = rnd(4, 32, 5).quantize(DType::Q8_0);
+        let x = rnd(2, 32, 6);
+        b.submit_now(OpDesc::linear(&w, &x));
+        assert_eq!(b.stats().calls, 1);
+        assert_eq!(b.stats().macs_by_dtype["Q8_0"], 4 * 32 * 2);
+    }
+
+    #[test]
+    fn request_tag_overrides_begin_request() {
+        let mut b = HostBackend::new(1);
+        let w = rnd(4, 32, 7).quantize(DType::Q8_0);
+        let x = rnd(2, 32, 8);
+        b.begin_request(RequestId(3));
+        b.submit_now(OpDesc::linear(&w, &x)); // inherits 3
+        b.submit_now(OpDesc::linear(&w, &x).with_request(RequestId(9)));
+        assert_eq!(b.stats().macs_by_request[&3], 4 * 32 * 2);
+        assert_eq!(b.stats().macs_by_request[&9], 4 * 32 * 2);
+    }
+
+    #[test]
+    fn imax_backend_offloads_quantized_only() {
+        let mut b = ImaxBackend::new(ImaxConfig::fpga(1), 1);
+        let w_f = rnd(4, 32, 9);
+        let w_q = w_f.quantize(DType::Q8_0);
+        let x = rnd(2, 32, 10);
+        b.submit_now(OpDesc::linear(&w_f, &x));
+        assert_eq!(b.stats().offloaded_calls, 0, "f32 stays on host");
+        b.submit_now(OpDesc::linear(&w_q, &x));
+        assert_eq!(b.stats().offloaded_calls, 1, "quantized goes to IMAX");
+        assert_eq!(b.stats().lane_submissions, 1);
+        assert!(b.stats().imax_phases.total() > 0);
+    }
+
+    #[test]
+    fn imax_backend_caches_identified_weights_across_calls() {
+        let w = rnd(8, 64, 11).quantize(DType::Q8_0).with_wid(WeightId(0xBEEF));
+        let x = rnd(2, 64, 12);
+        let mut b = ImaxBackend::new(ImaxConfig::fpga(1), 1);
+        let a = b.submit_now(OpDesc::linear(&w, &x));
+        let cold_load = b.stats().imax_phases.load;
+        let c = b.submit_now(OpDesc::linear(&w, &x));
+        let warm_load = b.stats().imax_phases.load - cold_load;
+        assert!(warm_load < cold_load, "second call hits the residency cache");
+        assert_eq!(b.stats().cache.hits, 1);
+        assert_eq!(b.stats().cache.misses, 1);
+        for (p, q) in a.as_f32().iter().zip(c.as_f32()) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+    }
+
+    #[test]
+    fn imax_backend_plan_checks_wid_and_kind() {
+        use crate::sd::plan::PlanRecorder;
+        let w = rnd(4, 64, 13).quantize(DType::Q8_0).with_wid(WeightId(0xF00D));
+        let x = rnd(2, 64, 14);
+        let mut rec = PlanRecorder::new();
+        rec.submit_now(OpDesc::linear(&w, &x));
+        rec.submit_now(OpDesc::time_embed(&w, &x));
+        let plan = rec.finish();
+
+        let mut b = ImaxBackend::new(ImaxConfig::fpga(1), 1);
+        b.apply_plan(&plan);
+        b.submit_now(OpDesc::linear(&w, &x)); // matches site 0
+        assert_eq!(b.stats().plan_divergences, 0);
+        assert!(b.lane().weight_resident(WeightId(0xF00D)), "plan's weight cached");
+        b.submit_now(OpDesc::linear(&w, &x)); // site 1 expects TimeEmbed
+        assert_eq!(b.stats().plan_divergences, 1, "kind mismatch is a divergence");
+    }
+
+    #[test]
+    fn sharded_backend_bit_identical_to_host_and_imax() {
+        let w = rnd(13, 128, 15).quantize(DType::Q8_0).with_wid(WeightId(21));
+        let x = rnd(3, 128, 16);
+        let mut host = HostBackend::new(1);
+        let want = host.submit_now(OpDesc::linear(&w, &x));
+        for lanes in [1usize, 2, 4] {
+            let mut b = ShardedBackend::from_config(ImaxConfig::fpga(lanes), 2);
+            let got = b.submit_now(OpDesc::linear(&w, &x));
+            assert_eq!((got.rows, got.cols), (3, 13));
+            for (p, q) in got.as_f32().iter().zip(want.as_f32()) {
+                assert_eq!(p.to_bits(), q.to_bits(), "{lanes}-lane sharding stays bit-exact");
+            }
+            assert_eq!(b.stats().offloaded_calls, 1);
+            assert_eq!(b.stats().lane_submissions, lanes as u64, "one shard per lane");
+        }
+    }
+
+    #[test]
+    fn sharded_backend_routes_f32_to_host() {
+        let mut b = ShardedBackend::from_config(ImaxConfig::fpga(2), 2);
+        let w = rnd(4, 32, 17);
+        let x = rnd(2, 32, 18);
+        let got = b.submit_now(OpDesc::attn_scores(&w, &x));
+        let want = ggml::mul_mat(&w, &x, 1);
+        for (p, q) in got.as_f32().iter().zip(want.as_f32()) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+        assert_eq!(b.stats().offloaded_calls, 0);
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(b.coordinator().metrics.host_jobs.load(ord), 1);
+    }
+
+    #[test]
+    fn sharded_backend_warm_call_hits_per_lane_shards() {
+        let w = rnd(16, 128, 19).quantize(DType::Q8_0).with_wid(WeightId(33));
+        let x = rnd(2, 128, 20);
+        let mut b = ShardedBackend::from_config(ImaxConfig::fpga(4), 2);
+        b.submit_now(OpDesc::linear(&w, &x));
+        assert_eq!(b.stats().cache.misses, 4, "one cold miss per lane shard");
+        b.submit_now(OpDesc::linear(&w, &x));
+        assert_eq!(b.stats().cache.hits, 4, "every shard resident on its lane");
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(b.coordinator().metrics.sharded_ops.load(ord), 2);
+        assert_eq!(b.coordinator().metrics.shard_submissions.load(ord), 8);
+    }
+
+    #[test]
+    fn sharded_backend_plan_checks_wid_and_kind() {
+        use crate::sd::plan::PlanRecorder;
+        let w = rnd(8, 64, 23).quantize(DType::Q8_0).with_wid(WeightId(0xABC));
+        let x = rnd(2, 64, 24);
+        let mut rec = PlanRecorder::new();
+        rec.submit_now(OpDesc::linear(&w, &x));
+        rec.submit_now(OpDesc::time_embed(&w, &x));
+        let plan = rec.finish();
+
+        let mut b = ShardedBackend::from_config(ImaxConfig::fpga(2), 2);
+        b.apply_plan(&plan);
+        b.submit_now(OpDesc::linear(&w, &x)); // matches site 0
+        assert_eq!(b.stats().plan_divergences, 0);
+        b.submit_now(OpDesc::linear(&w, &x)); // site 1 expects TimeEmbed
+        assert_eq!(b.stats().plan_divergences, 1, "kind mismatch is a divergence");
+        assert_eq!(b.stats().cache.hits, 2, "warm shards hit the pre-pinned ids");
+    }
+
+    #[test]
+    fn host_only_policy_keeps_sharded_backend_on_host() {
+        let coord = Arc::new(Coordinator::new(
+            ImaxConfig::fpga(2),
+            2,
+            2,
+            OffloadPolicy::HostOnly,
+        ));
+        let mut b = ShardedBackend::new(coord);
+        let w = rnd(4, 64, 21).quantize(DType::Q8_0);
+        let x = rnd(2, 64, 22);
+        b.submit_now(OpDesc::linear(&w, &x));
+        assert_eq!(b.stats().offloaded_calls, 0);
+    }
+}

@@ -17,6 +17,7 @@
 //!   the end-to-end driver of `examples/generate_image.rs`.
 
 pub mod arch;
+pub mod backend;
 pub mod graph;
 pub mod pipeline;
 pub mod plan;
@@ -28,6 +29,9 @@ pub mod unet;
 pub mod vae;
 pub mod weights;
 
-pub use graph::RequestId;
+pub use backend::{
+    EngineStats, ExecBackend, HostBackend, ImaxBackend, OpDesc, OpHandle, OpKind, RequestId,
+    ShardedBackend,
+};
 pub use plan::{OpPlan, OpSite, PlanRecorder};
 pub use trace::{MatMulOp, OpCategory, QuantModel, WorkloadTrace};

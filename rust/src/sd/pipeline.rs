@@ -1,20 +1,23 @@
 //! End-to-end mini Stable-Diffusion pipeline (the runnable Fig. 5 driver).
 //!
 //! Text encode → U-Net denoise (1-step turbo or N-step DDIM) → VAE
-//! decode → RGB image, with the quantized mat-muls optionally offloaded
-//! to the IMAX functional simulator. The prompt seeds the latent through
-//! FNV hashing (so "a lovely cat" is reproducible forever), and the full
-//! run returns a [`RunReport`] with the mini analog of the paper's
-//! profiling (per-dtype times, offload counts, IMAX phase breakdown).
+//! decode → RGB image, with every mat-mul submitted as a typed
+//! [`crate::sd::backend::OpDesc`] through an [`ExecBackend`] — host
+//! kernels, one IMAX lane, or the sharded multi-lane coordinator. The
+//! prompt seeds the latent through FNV hashing (so "a lovely cat" is
+//! reproducible forever), and the full run returns a [`RunReport`] with
+//! the mini analog of the paper's profiling (per-dtype times, offload
+//! counts, IMAX phase breakdown).
 
-use super::graph::{Feat, HostEngine, ImaxEngine, MatMulEngine, RequestId};
+use super::backend::{ExecBackend, HostBackend, ImaxBackend, RequestId, ShardedBackend};
+use super::graph::Feat;
 use super::plan::{OpPlan, PlanRecorder};
 use super::sampler;
 use super::text::TextEncoder;
+use super::trace::QuantModel;
 use super::unet::{UNet, LATENT_C, LATENT_HW};
 use super::vae::VaeDecoder;
 use super::weights::WeightFactory;
-use super::trace::QuantModel;
 use crate::imax::lmm::CacheStats;
 use crate::imax::timing::PhaseBreakdown;
 use crate::imax::ImaxConfig;
@@ -29,11 +32,21 @@ pub enum Backend {
         /// Worker threads.
         threads: usize,
     },
-    /// Quantized ops on the IMAX lane simulator (paper §III-B policy).
+    /// Quantized ops on one IMAX lane simulator (paper §III-B policy).
     Imax {
         /// Simulated instance.
         config: ImaxConfig,
         /// Host threads for the residual ops.
+        threads: usize,
+    },
+    /// Quantized ops row-tile-sharded across `config.lanes` lanes
+    /// behind a [`crate::coordinator::Coordinator`] — one op executes
+    /// on several lanes at once, each lane caching only its resident
+    /// shard.
+    Sharded {
+        /// Simulated instance (`config.lanes` selects the lane count).
+        config: ImaxConfig,
+        /// Host threads for marshalling and the residual ops.
         threads: usize,
     },
 }
@@ -73,10 +86,12 @@ pub struct RunReport {
     pub seconds_by_dtype: Vec<(&'static str, f64)>,
     /// MACs per weight dtype.
     pub macs_by_dtype: Vec<(&'static str, u64)>,
-    /// Total mat-mul calls.
+    /// Total op submissions.
     pub matmul_calls: u64,
-    /// Calls offloaded to IMAX.
+    /// Ops offloaded to IMAX.
     pub offloaded_calls: u64,
+    /// Lane submissions those ops decomposed into (shards).
+    pub lane_submissions: u64,
     /// IMAX phase breakdown (zero for host runs).
     pub imax_phases: PhaseBreakdown,
     /// IMAX clock for converting phases to seconds (0 for host runs).
@@ -115,31 +130,40 @@ impl Pipeline {
     }
 
     /// The compiled [`OpPlan`] of one full generation under this
-    /// configuration: every mat-mul site with shapes, dtypes and weight
+    /// configuration: every op site with kind, shapes, dtypes and weight
     /// ids, in dispatch order. Compiled lazily by replaying the graph
     /// against a [`PlanRecorder`] (zero-tensor outputs, no GEMM work —
     /// the dispatch sequence is prompt-independent because shapes are
     /// fixed and the graph has no data-dependent control flow), then
-    /// shared by every engine and coordinator that executes this
+    /// shared by every backend and coordinator that executes this
     /// pipeline.
     pub fn plan(&self) -> Arc<OpPlan> {
         self.plan
             .get_or_init(|| {
                 let mut rec = PlanRecorder::new();
-                let _ = self.generate_with_engine(&mut rec, RequestId::SOLO, "", 0);
+                let _ = self.generate_with_backend(&mut rec, RequestId::SOLO, "", 0);
                 Arc::new(rec.finish())
             })
             .clone()
     }
 
-    fn make_engine(&self) -> Box<dyn MatMulEngine> {
+    fn make_backend(&self) -> Box<dyn ExecBackend> {
         match &self.config.backend {
-            Backend::Host { threads } => Box::new(HostEngine::new(*threads)),
+            Backend::Host { threads } => Box::new(HostBackend::new(*threads)),
             Backend::Imax { config, threads } => {
-                let mut eng = ImaxEngine::new(config.clone(), *threads);
+                let mut eng = ImaxBackend::new(config.clone(), *threads);
                 if config.weight_cache_bytes > 0 {
                     // Prefetch/pin pass: the hottest weights of the
                     // compiled plan become permanent residents.
+                    eng.apply_plan(&self.plan());
+                }
+                Box::new(eng)
+            }
+            Backend::Sharded { config, threads } => {
+                let mut eng = ShardedBackend::from_config(config.clone(), *threads);
+                if config.weight_cache_bytes > 0 {
+                    // Sharded prefetch/pin pass: each hot weight's
+                    // row-tile shards are pinned on their owning lanes.
                     eng.apply_plan(&self.plan());
                 }
                 Box::new(eng)
@@ -150,18 +174,18 @@ impl Pipeline {
     /// Generate an image for a prompt + seed. Returns the RGB image
     /// (3×128×128, values in `[0,1]`) and the run report.
     pub fn generate(&self, prompt: &str, seed: u64) -> (Feat, RunReport) {
-        let mut eng = self.make_engine();
-        self.generate_with_engine(eng.as_mut(), RequestId::SOLO, prompt, seed)
+        let mut eng = self.make_backend();
+        self.generate_with_backend(eng.as_mut(), RequestId::SOLO, prompt, seed)
     }
 
-    /// [`Pipeline::generate`] over a caller-supplied engine, tagged with
-    /// a request id — the entry point the serving layer uses so many
-    /// concurrent requests can share one pipeline (weights are read-only)
-    /// while each runs on its own engine (a batching member engine in
-    /// [`crate::serve`]).
-    pub fn generate_with_engine(
+    /// [`Pipeline::generate`] over a caller-supplied backend, tagged
+    /// with a request id — the entry point the serving layer uses so
+    /// many concurrent requests can share one pipeline (weights are
+    /// read-only) while each runs on its own backend (a batching member
+    /// in [`crate::serve`]).
+    pub fn generate_with_backend(
         &self,
-        eng: &mut dyn MatMulEngine,
+        eng: &mut dyn ExecBackend,
         request: RequestId,
         prompt: &str,
         seed: u64,
@@ -179,7 +203,7 @@ impl Pipeline {
         let img = self.vae.decode(eng, &x0);
         let stats = eng.stats();
         let clock = match &self.config.backend {
-            Backend::Imax { config, .. } => config.clock_hz,
+            Backend::Imax { config, .. } | Backend::Sharded { config, .. } => config.clock_hz,
             _ => 0.0,
         };
         let report = RunReport {
@@ -189,6 +213,7 @@ impl Pipeline {
             macs_by_dtype: stats.macs_by_dtype.iter().map(|(k, v)| (*k, *v)).collect(),
             matmul_calls: stats.calls,
             offloaded_calls: stats.offloaded_calls,
+            lane_submissions: stats.lane_submissions,
             imax_phases: stats.imax_phases,
             imax_clock_hz: clock,
             cache: stats.cache,
@@ -262,6 +287,36 @@ mod tests {
         let na = a.data.iter().map(|v| v * v).sum::<f32>().sqrt();
         let nb = b.data.iter().map(|v| v * v).sum::<f32>().sqrt();
         assert!(dot / (na * nb) > 0.99, "cosine {}", dot / (na * nb));
+    }
+
+    #[test]
+    fn sharded_backend_matches_single_lane_imax_bitexactly() {
+        // The acceptance invariant at pipeline level: sharding one op
+        // across lanes must not change a single output bit.
+        let imax = Pipeline::new(cfg(
+            Some(QuantModel::Q8_0),
+            Backend::Imax { config: ImaxConfig::fpga(1), threads: 2 },
+        ));
+        let (a, _) = imax.generate("a lovely cat", 7);
+        for lanes in [1usize, 4] {
+            let sharded = Pipeline::new(cfg(
+                Some(QuantModel::Q8_0),
+                Backend::Sharded { config: ImaxConfig::fpga(lanes), threads: 2 },
+            ));
+            let (b, rb) = sharded.generate("a lovely cat", 7);
+            assert!(rb.offloaded_calls > 0);
+            if lanes > 1 {
+                assert!(
+                    rb.lane_submissions > rb.offloaded_calls,
+                    "multi-lane sharding splits ops: {} submissions for {} ops",
+                    rb.lane_submissions,
+                    rb.offloaded_calls
+                );
+            }
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{lanes}-lane sharded == 1-lane imax");
+            }
+        }
     }
 
     #[test]

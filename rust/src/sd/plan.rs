@@ -1,16 +1,17 @@
-//! Compiled execution plan: the explicit list of mat-mul sites a
-//! pipeline run dispatches, with shapes, dtypes and weight identities.
+//! Compiled execution plan: the explicit list of typed op sites a
+//! pipeline run dispatches, with kinds, shapes, dtypes and weight
+//! identities.
 //!
 //! The mini pipeline (like `stable-diffusion.cpp`) historically
 //! dispatched mat-muls implicitly, in whatever order the graph code
-//! calls [`MatMulEngine::mul_mat`]. That order is *static* — shapes are
-//! fixed by the architecture and there is no data-dependent control flow
-//! — so it can be compiled once into an [`OpPlan`] by replaying the
-//! graph against a [`PlanRecorder`] engine that records every site and
-//! returns zero tensors instead of multiplying (compilation costs
-//! host-op time only, no GEMM work).
+//! submitted them. That order is *static* — shapes are fixed by the
+//! architecture and there is no data-dependent control flow — so it can
+//! be compiled once into an [`OpPlan`] by replaying the graph against a
+//! [`PlanRecorder`] backend that records every [`OpDesc`] and returns
+//! zero tensors instead of multiplying (compilation costs host-op time
+//! only, no GEMM work).
 //!
-//! The plan buys three things:
+//! The plan buys four things:
 //!
 //! * a **prefetch/pin pass** ([`OpPlan::pin_set`]): rank weights by the
 //!   DMA bytes they would stream per step (`bytes × uses`) and pin the
@@ -18,22 +19,30 @@
 //!   in [`crate::imax::lmm`] keeps exactly the tiles that save the most
 //!   LOAD time — immune to the LRU-defeating cyclic access pattern a
 //!   denoising loop otherwise produces;
-//! * **residency-aware lane sharding**
-//!   ([`crate::coordinator::Coordinator::apply_plan`]): weights are
-//!   distributed over lanes hottest-first so each lane's cache serves a
-//!   disjoint slice of the model;
-//! * a **dispatch check**: engines executing a plan verify the observed
-//!   call sequence against the compiled one (divergences are counted,
-//!   see [`crate::sd::graph::EngineStats::plan_divergences`]).
+//! * **residency-aware lane sharding**: whole weights
+//!   ([`crate::coordinator::Coordinator::apply_plan`]) or row-tile
+//!   shards ([`crate::coordinator::Coordinator::apply_plan_sharded`])
+//!   are distributed over lanes hottest-first so each lane's cache
+//!   serves a disjoint slice of the model;
+//! * **plan-driven per-lane CONF grouping**
+//!   ([`OpPlan::lane_assignment`]): because sites carry their
+//!   [`OpKind`] and dtype, weights can be dealt to lanes kind-major —
+//!   each lane sees one kernel kind where lane count allows, so
+//!   consecutive submissions skip the CONF phase;
+//! * a **dispatch check**: backends executing a plan verify the observed
+//!   `(wid, kind)` sequence against the compiled one (divergences are
+//!   counted, see [`crate::sd::backend::EngineStats::plan_divergences`]).
 
 use crate::ggml::{DType, Tensor, WeightId};
-use crate::sd::graph::{EngineStats, MatMulEngine};
+use crate::sd::backend::{Completions, EngineStats, ExecBackend, OpDesc, OpHandle, OpKind};
 
-/// One compiled mat-mul site.
+/// One compiled op site.
 #[derive(Debug, Clone)]
 pub struct OpSite {
     /// Position in the dispatch order.
     pub seq: usize,
+    /// What the op is in the graph.
+    pub kind: OpKind,
     /// Weight identity (`None` for activation×activation mat-muls).
     pub wid: Option<WeightId>,
     /// Weight storage dtype.
@@ -63,6 +72,10 @@ pub struct WeightUse {
     pub wid: WeightId,
     /// Its storage dtype.
     pub dtype: DType,
+    /// Weight rows (the row-tile shard axis).
+    pub rows: usize,
+    /// Contraction length (per-row byte geometry).
+    pub k: usize,
     /// Serialized bytes (cache footprint).
     pub bytes: usize,
     /// Times the plan dispatches it.
@@ -75,7 +88,7 @@ pub struct WeightUse {
 /// The compiled plan for one pipeline configuration.
 #[derive(Debug, Clone, Default)]
 pub struct OpPlan {
-    /// Mat-mul sites in dispatch order.
+    /// Op sites in dispatch order.
     pub sites: Vec<OpSite>,
 }
 
@@ -101,6 +114,8 @@ impl OpPlan {
                     order.push(WeightUse {
                         wid,
                         dtype: site.dtype,
+                        rows: site.m,
+                        k: site.k,
                         bytes: site.weight_bytes,
                         uses: 1,
                         streamed_bytes: site.weight_bytes as u64,
@@ -130,6 +145,68 @@ impl OpPlan {
         out
     }
 
+    /// Plan-driven per-lane CONF grouping: distribute the
+    /// offload-eligible weights over `lanes` so that each lane serves —
+    /// as far as lane count allows — a **single kernel kind**, which
+    /// means consecutive submissions on that lane skip the CONF phase.
+    ///
+    /// Kinds (weight dtypes, which select the lane kernel) get disjoint
+    /// contiguous lane ranges sized proportionally to their streamed
+    /// bytes (at least one lane each); within a range, weights deal
+    /// round-robin hottest-first. With one kind, or more kinds than
+    /// lanes, the grouping degenerates to plain hottest-first
+    /// round-robin (the pre-plan behavior).
+    pub fn lane_assignment(&self, lanes: usize) -> Vec<(WeightUse, usize)> {
+        assert!(lanes > 0, "lane_assignment wants at least one lane");
+        let uses = self.weight_uses();
+        let kinds: std::collections::HashSet<&'static str> =
+            uses.iter().map(|wu| wu.dtype.name()).collect();
+        if kinds.len() <= 1 || kinds.len() > lanes {
+            // Degenerate: hottest-first round-robin over all lanes.
+            return uses.into_iter().enumerate().map(|(i, wu)| (wu, i % lanes)).collect();
+        }
+        // Group by dtype, preserving hottest-first order within groups.
+        let mut groups: Vec<(DType, Vec<WeightUse>, u64)> = Vec::new();
+        for wu in uses {
+            match groups.iter_mut().find(|(d, _, _)| *d == wu.dtype) {
+                Some((_, v, s)) => {
+                    *s += wu.streamed_bytes;
+                    v.push(wu);
+                }
+                None => {
+                    let s = wu.streamed_bytes;
+                    groups.push((wu.dtype, vec![wu], s));
+                }
+            }
+        }
+        // Proportional lane allocation, one lane minimum per kind,
+        // largest-remainder rounding (deterministic).
+        groups.sort_by(|a, b| b.2.cmp(&a.2));
+        let total: u64 = groups.iter().map(|(_, _, s)| *s).sum::<u64>().max(1);
+        let extra = (lanes - groups.len()) as u64;
+        let mut alloc: Vec<u64> = groups.iter().map(|(_, _, s)| 1 + extra * s / total).collect();
+        let mut leftover = lanes as u64 - alloc.iter().sum::<u64>();
+        let mut by_rem: Vec<usize> = (0..groups.len()).collect();
+        by_rem.sort_by_key(|&g| std::cmp::Reverse(extra * groups[g].2 % total));
+        for &g in by_rem.iter().cycle() {
+            if leftover == 0 {
+                break;
+            }
+            alloc[g] += 1;
+            leftover -= 1;
+        }
+        let mut out = Vec::new();
+        let mut offset = 0usize;
+        for ((_, wus, _), width) in groups.into_iter().zip(alloc) {
+            let width = width as usize;
+            for (j, wu) in wus.into_iter().enumerate() {
+                out.push((wu, offset + j % width));
+            }
+            offset += width;
+        }
+        out
+    }
+
     /// Total bytes a full streaming (cache-less) execution would LOAD
     /// for offload-eligible weights.
     pub fn streamed_weight_bytes(&self) -> u64 {
@@ -142,14 +219,15 @@ impl OpPlan {
     }
 }
 
-/// Recording engine: captures every [`MatMulEngine::mul_mat`] site and
+/// Recording backend: captures every submitted [`OpDesc`] site and
 /// returns a zero tensor of the correct shape without multiplying. The
 /// graph has no data-dependent control flow, so the recorded sequence is
-/// exactly the sequence any real engine will dispatch.
+/// exactly the sequence any real backend will dispatch.
 #[derive(Default)]
 pub struct PlanRecorder {
     sites: Vec<OpSite>,
     stats: EngineStats,
+    done: Completions,
 }
 
 impl PlanRecorder {
@@ -164,18 +242,23 @@ impl PlanRecorder {
     }
 }
 
-impl MatMulEngine for PlanRecorder {
-    fn mul_mat(&mut self, w: &Tensor, x: &Tensor) -> Tensor {
+impl ExecBackend for PlanRecorder {
+    fn submit(&mut self, op: OpDesc<'_>) -> OpHandle {
         self.sites.push(OpSite {
             seq: self.sites.len(),
-            wid: w.wid,
-            dtype: w.dtype(),
-            m: w.rows,
-            k: w.cols,
-            n: x.rows,
-            weight_bytes: w.byte_size(),
+            kind: op.kind,
+            wid: op.wid,
+            dtype: op.w.dtype(),
+            m: op.w.rows,
+            k: op.w.cols,
+            n: op.x.rows,
+            weight_bytes: op.w.byte_size(),
         });
-        Tensor::zeros(x.rows, w.rows)
+        self.done.complete(Tensor::zeros(op.x.rows, op.w.rows))
+    }
+
+    fn sync(&mut self, h: OpHandle) -> Tensor {
+        self.done.take(h)
     }
 
     fn stats(&self) -> &EngineStats {
@@ -197,25 +280,12 @@ pub struct StepCost {
     pub hit_bytes: u64,
 }
 
-/// Replay `steps` identical mini U-Net denoising steps on one simulated
-/// lane (`lmm_bytes` of LMM, `cache_bytes` of it reserved as weight
-/// cache, plan-pinned when non-zero) and return per-step cost deltas —
-/// step 1 is the cold step, steps ≥ 2 are warm.
-///
-/// This is the **single definition of the cold-vs-warm experiment**,
-/// shared by `benches/weight_reuse.rs` and the acceptance tests in
-/// `tests/weight_cache.rs`, so the CI bench and the assertions always
-/// measure the same thing.
-pub fn replay_unet_steps(
+/// Build the deterministic mini U-Net replay fixture: the net itself,
+/// one latent and one context tensor, plus the compiled plan.
+fn unet_fixture(
     model: crate::sd::trace::QuantModel,
-    lmm_bytes: usize,
-    cache_bytes: usize,
-    steps: usize,
-) -> Vec<StepCost> {
-    // `MatMulEngine` (for `eng.stats()`) is already in scope from the
-    // module-level import.
-    use crate::imax::ImaxConfig;
-    use crate::sd::graph::{Feat, ImaxEngine};
+) -> (crate::sd::unet::UNet, super::graph::Feat, Tensor, OpPlan) {
+    use crate::sd::graph::Feat;
     use crate::sd::text::{CTX_LEN, DIM};
     use crate::sd::unet::{UNet, LATENT_C, LATENT_HW};
     use crate::sd::weights::WeightFactory;
@@ -234,17 +304,42 @@ pub fn replay_unet_steps(
     let mut rec = PlanRecorder::new();
     unet.forward(&mut rec, &latent, 999.0, &ctx);
     let plan = rec.finish();
+    (unet, latent, ctx, plan)
+}
 
+/// Replay `steps` identical mini U-Net denoising steps on one simulated
+/// lane (`lmm_bytes` of LMM, `cache_bytes` of it reserved as weight
+/// cache, plan-pinned when non-zero) and return per-step cost deltas —
+/// step 1 is the cold step, steps ≥ 2 are warm.
+///
+/// This is the **single definition of the cold-vs-warm experiment**,
+/// shared by `benches/weight_reuse.rs` and the acceptance tests in
+/// `tests/weight_cache.rs`, so the CI bench and the assertions always
+/// measure the same thing.
+pub fn replay_unet_steps(
+    model: crate::sd::trace::QuantModel,
+    lmm_bytes: usize,
+    cache_bytes: usize,
+    steps: usize,
+) -> Vec<StepCost> {
+    use crate::imax::ImaxConfig;
+    use crate::sd::graph::ImaxBackend;
+
+    let (unet, latent, ctx, plan) = unet_fixture(model);
     let mut imax = ImaxConfig::fpga(1);
     imax.lmm_bytes = lmm_bytes;
     imax.weight_cache_bytes = cache_bytes;
-    let mut eng = ImaxEngine::new(imax, 1);
-    if cache_bytes > 0 {
-        eng.apply_plan(&plan);
-    }
+    let mut eng = ImaxBackend::new(imax, 1);
 
     (0..steps)
         .map(|_| {
+            if cache_bytes > 0 {
+                // Re-arm per step: the plan records exactly one forward,
+                // and each replayed step dispatches that sequence once —
+                // so the divergence diagnostic stays exact (re-pinning
+                // is idempotent).
+                eng.apply_plan(&plan);
+            }
             let c0 = eng.stats().imax_phases.total();
             let l0 = eng.lane().lmm.loaded_bytes;
             let s0 = eng.lane().cache_stats();
@@ -260,6 +355,74 @@ pub fn replay_unet_steps(
         .collect()
 }
 
+/// Per-step cost of one sharded mini U-Net replay across `L` lanes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardStepCost {
+    /// Cycles of the slowest lane (the parallel wall-clock of the step).
+    pub max_lane_cycles: u64,
+    /// Cycles summed over all lanes (total lane-seconds of work).
+    pub total_cycles: u64,
+    /// DMA **weight** LOAD bytes per lane (activation loads excluded) —
+    /// the acceptance metric: on a warm step each lane streams only the
+    /// shards that did not fit its cache, so this shrinks as lanes grow.
+    pub weight_load_per_lane: Vec<u64>,
+    /// All DMA LOAD bytes summed over lanes.
+    pub load_bytes_total: u64,
+    /// Residency-cache hits summed over lanes.
+    pub hits: u64,
+}
+
+/// Replay `steps` identical mini U-Net denoising steps through a
+/// [`crate::sd::backend::ShardedBackend`] over `lanes` lanes — the
+/// single definition of the **shard-scaling experiment** shared by
+/// `benches/shard_scaling.rs` and `tests/backend_equivalence.rs`. The
+/// sharded prefetch/pin pass runs first whenever `cache_bytes > 0`.
+pub fn replay_unet_steps_sharded(
+    model: crate::sd::trace::QuantModel,
+    lanes: usize,
+    lmm_bytes: usize,
+    cache_bytes: usize,
+    steps: usize,
+) -> Vec<ShardStepCost> {
+    use crate::imax::ImaxConfig;
+    use crate::sd::backend::ShardedBackend;
+
+    let (unet, latent, ctx, plan) = unet_fixture(model);
+    let mut imax = ImaxConfig::fpga(lanes);
+    imax.lmm_bytes = lmm_bytes;
+    imax.weight_cache_bytes = cache_bytes;
+    let mut eng = ShardedBackend::from_config(imax, 2);
+
+    (0..steps)
+        .map(|_| {
+            if cache_bytes > 0 {
+                // Re-arm per step (see replay_unet_steps): one recorded
+                // forward per replayed step keeps plan_divergences exact.
+                eng.apply_plan(&plan);
+            }
+            let before = eng.coordinator().lane_costs();
+            unet.forward(&mut eng, &latent, 999.0, &ctx);
+            let after = eng.coordinator().lane_costs();
+            let mut cost = ShardStepCost {
+                max_lane_cycles: 0,
+                total_cycles: 0,
+                weight_load_per_lane: Vec::with_capacity(after.len()),
+                load_bytes_total: 0,
+                hits: 0,
+            };
+            for (b, a) in before.iter().zip(&after) {
+                let cycles = a.cycles - b.cycles;
+                cost.max_lane_cycles = cost.max_lane_cycles.max(cycles);
+                cost.total_cycles += cycles;
+                cost.weight_load_per_lane.push(a.weight_load_bytes - b.weight_load_bytes);
+                cost.load_bytes_total += a.loaded_bytes - b.loaded_bytes;
+                cost.hits += a.cache.hits - b.cache.hits;
+            }
+            cost
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -268,6 +431,7 @@ mod tests {
     fn site(seq: usize, wid: Option<u64>, dtype: DType, bytes: usize) -> OpSite {
         OpSite {
             seq,
+            kind: OpKind::Linear,
             wid: wid.map(WeightId),
             dtype,
             m: 4,
@@ -292,6 +456,7 @@ mod tests {
         let uses = plan.weight_uses();
         assert_eq!(uses.len(), 2, "F32/F16 sites excluded");
         assert_eq!(uses[0].wid, WeightId(2), "300 streamed beats 3x100");
+        assert_eq!(uses[0].rows, 4);
         assert_eq!(uses[1].uses, 3);
         assert_eq!(uses[1].streamed_bytes, 300);
         assert_eq!(plan.streamed_weight_bytes(), 600);
@@ -317,22 +482,80 @@ mod tests {
     }
 
     #[test]
-    fn recorder_captures_sites_shapes_and_returns_zeros() {
+    fn recorder_captures_typed_sites_and_returns_zeros() {
         let w = Tensor::f32(4, 32, vec![0.5; 128])
             .quantize(DType::Q8_0)
             .with_wid(WeightId(11));
         let x = Tensor::f32(3, 32, vec![0.25; 96]);
         let mut rec = PlanRecorder::new();
-        let out = rec.mul_mat(&w, &x);
+        let out = rec.submit_now(OpDesc::time_embed(&w, &x));
         assert_eq!((out.rows, out.cols), (3, 4));
         assert!(out.as_f32().iter().all(|&v| v == 0.0));
         let plan = rec.finish();
         assert_eq!(plan.sites.len(), 1);
         let s = &plan.sites[0];
         assert_eq!((s.m, s.k, s.n), (4, 32, 3));
+        assert_eq!(s.kind, OpKind::TimeEmbed);
         assert_eq!(s.wid, Some(WeightId(11)));
         assert_eq!(s.dtype, DType::Q8_0);
         assert!(s.offload_eligible());
         assert_eq!(s.weight_bytes, 4 * 34);
+    }
+
+    #[test]
+    fn lane_assignment_single_kind_round_robins() {
+        let plan = OpPlan {
+            sites: vec![
+                site(0, Some(1), DType::Q8_0, 300),
+                site(1, Some(2), DType::Q8_0, 200),
+                site(2, Some(3), DType::Q8_0, 100),
+            ],
+        };
+        let a = plan.lane_assignment(2);
+        assert_eq!(
+            a.iter().map(|(wu, l)| (wu.wid.0, *l)).collect::<Vec<_>>(),
+            vec![(1, 0), (2, 1), (3, 0)],
+            "hottest-first round-robin"
+        );
+    }
+
+    #[test]
+    fn lane_assignment_groups_kinds_onto_disjoint_lanes() {
+        // Two kinds over four lanes: Q8_0 streams 3x the bytes of Q3_K,
+        // so it gets 3 lanes and Q3_K gets 1 — and no lane ever sees
+        // both kinds (zero CONF switches at steady state).
+        let plan = OpPlan {
+            sites: vec![
+                site(0, Some(1), DType::Q8_0, 3000),
+                site(1, Some(2), DType::Q8_0, 2000),
+                site(2, Some(3), DType::Q8_0, 1000),
+                site(3, Some(4), DType::Q3K, 1500),
+                site(4, Some(5), DType::Q3K, 500),
+            ],
+        };
+        let a = plan.lane_assignment(4);
+        let mut lanes_by_dtype: std::collections::HashMap<&'static str, Vec<usize>> =
+            std::collections::HashMap::new();
+        for (wu, lane) in &a {
+            lanes_by_dtype.entry(wu.dtype.name()).or_default().push(*lane);
+        }
+        let q8: std::collections::HashSet<_> = lanes_by_dtype["Q8_0"].iter().copied().collect();
+        let q3: std::collections::HashSet<_> = lanes_by_dtype["Q3_K"].iter().copied().collect();
+        assert!(q8.is_disjoint(&q3), "kinds must own disjoint lanes: {q8:?} vs {q3:?}");
+        assert_eq!(q8.len() + q3.len(), 4, "all lanes used");
+        assert!(q8.len() > q3.len(), "lane share follows streamed bytes");
+    }
+
+    #[test]
+    fn lane_assignment_more_kinds_than_lanes_degenerates() {
+        let plan = OpPlan {
+            sites: vec![
+                site(0, Some(1), DType::Q8_0, 300),
+                site(1, Some(2), DType::Q3K, 200),
+            ],
+        };
+        let a = plan.lane_assignment(1);
+        assert_eq!(a.len(), 2);
+        assert!(a.iter().all(|(_, l)| *l == 0));
     }
 }

@@ -4,7 +4,7 @@
 //! (adversarial diffusion distillation makes one step sufficient); the
 //! DDIM path exists for the multi-step ablation bench.
 
-use super::graph::{Feat, MatMulEngine};
+use super::graph::{ExecBackend, Feat};
 use super::unet::UNet;
 use crate::ggml::Tensor;
 use crate::util::rng::Xoshiro256pp;
@@ -26,7 +26,7 @@ pub fn initial_latent(seed: u64, c: usize, h: usize, w: usize) -> Feat {
 
 /// One-step SD-Turbo-style sampling: predict noise at the terminal
 /// timestep and jump straight to the x0 estimate.
-pub fn turbo_step(eng: &mut dyn MatMulEngine, unet: &UNet, latent: &Feat, ctx: &Tensor) -> Feat {
+pub fn turbo_step(eng: &mut dyn ExecBackend, unet: &UNet, latent: &Feat, ctx: &Tensor) -> Feat {
     let t = 999.0;
     let ab = alpha_bar(t);
     let (a, s) = (ab.sqrt(), (1.0 - ab).sqrt());
@@ -43,7 +43,7 @@ pub fn turbo_step(eng: &mut dyn MatMulEngine, unet: &UNet, latent: &Feat, ctx: &
 
 /// Multi-step deterministic DDIM (eta = 0).
 pub fn ddim(
-    eng: &mut dyn MatMulEngine,
+    eng: &mut dyn ExecBackend,
     unet: &UNet,
     latent: &Feat,
     ctx: &Tensor,
@@ -75,7 +75,7 @@ pub fn ddim(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sd::graph::HostEngine;
+    use crate::sd::graph::HostBackend;
     use crate::sd::unet::{LATENT_C, LATENT_HW};
     use crate::sd::weights::WeightFactory;
 
@@ -112,7 +112,7 @@ mod tests {
     #[test]
     fn turbo_step_produces_finite_latent() {
         let (unet, ctx) = setup();
-        let mut eng = HostEngine::new(2);
+        let mut eng = HostBackend::new(2);
         let z = initial_latent(1, LATENT_C, LATENT_HW, LATENT_HW);
         let x0 = turbo_step(&mut eng, &unet, &z, &ctx);
         assert_eq!(x0.data.len(), z.data.len());
@@ -126,9 +126,9 @@ mod tests {
         // both must be finite and same shape; 4 steps must differ from 1.
         let (unet, ctx) = setup();
         let z = initial_latent(2, LATENT_C, LATENT_HW, LATENT_HW);
-        let mut e1 = HostEngine::new(2);
+        let mut e1 = HostBackend::new(2);
         let one = ddim(&mut e1, &unet, &z, &ctx, 1);
-        let mut e4 = HostEngine::new(2);
+        let mut e4 = HostBackend::new(2);
         let four = ddim(&mut e4, &unet, &z, &ctx, 4);
         assert!(one.data.iter().all(|v| v.is_finite()));
         assert!(four.data.iter().all(|v| v.is_finite()));

@@ -5,7 +5,7 @@
 //! weights are quantized per the run's model — so the text encoder
 //! exercises the same offload path the paper's CLIP does.
 
-use super::graph::{attention, gelu, layer_norm, MatMulEngine};
+use super::graph::{attention, gelu, layer_norm, ExecBackend, OpDesc};
 use super::weights::WeightFactory;
 use crate::ggml::Tensor;
 use crate::util::rng::fnv1a64;
@@ -84,7 +84,7 @@ impl TextEncoder {
     }
 
     /// Encode a prompt into the `[77, 256]` context.
-    pub fn encode(&self, eng: &mut dyn MatMulEngine, prompt: &str) -> Tensor {
+    pub fn encode(&self, eng: &mut dyn ExecBackend, prompt: &str) -> Tensor {
         let toks = tokenize(prompt);
         let mut x = vec![0.0f32; CTX_LEN * DIM];
         for (i, &t) in toks.iter().enumerate() {
@@ -97,11 +97,11 @@ impl TextEncoder {
         for l in &self.layers {
             // Pre-LN self-attention with residual.
             let n = layer_norm(&h, &l.ln1.0, &l.ln1.1);
-            let q = eng.mul_mat(&l.wq, &n);
-            let k = eng.mul_mat(&l.wk, &n);
-            let v = eng.mul_mat(&l.wv, &n);
+            let q = eng.submit_now(OpDesc::linear(&l.wq, &n));
+            let k = eng.submit_now(OpDesc::linear(&l.wk, &n));
+            let v = eng.submit_now(OpDesc::linear(&l.wv, &n));
             let a = attention(eng, &q, &k, &v, HEADS);
-            let o = eng.mul_mat(&l.wo, &a);
+            let o = eng.submit_now(OpDesc::linear(&l.wo, &a));
             let mut hd = h.as_f32().to_vec();
             for (dst, src) in hd.iter_mut().zip(o.as_f32()) {
                 *dst += src;
@@ -109,12 +109,12 @@ impl TextEncoder {
             h = Tensor::f32(CTX_LEN, DIM, hd);
             // Pre-LN MLP with residual.
             let n2 = layer_norm(&h, &l.ln2.0, &l.ln2.1);
-            let mut m1 = eng.mul_mat(&l.mlp1, &n2);
+            let mut m1 = eng.submit_now(OpDesc::linear(&l.mlp1, &n2));
             add_bias(&mut m1, &l.mlp1_b);
             if let crate::ggml::tensor::Storage::F32(vv) = &mut m1.data {
                 gelu(vv);
             }
-            let mut m2 = eng.mul_mat(&l.mlp2, &m1);
+            let mut m2 = eng.submit_now(OpDesc::linear(&l.mlp2, &m1));
             add_bias(&mut m2, &l.mlp2_b);
             let mut hd = h.as_f32().to_vec();
             for (dst, src) in hd.iter_mut().zip(m2.as_f32()) {
@@ -140,7 +140,7 @@ fn add_bias(t: &mut Tensor, bias: &[f32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sd::graph::HostEngine;
+    use crate::sd::graph::HostBackend;
 
     #[test]
     fn tokenizer_is_deterministic_and_padded() {
@@ -157,10 +157,10 @@ mod tests {
     fn encode_shape_and_determinism() {
         let f = WeightFactory::new(42, None);
         let enc = TextEncoder::new(&f);
-        let mut eng = HostEngine::new(1);
+        let mut eng = HostBackend::new(1);
         let a = enc.encode(&mut eng, "a lovely cat");
         assert_eq!((a.rows, a.cols), (CTX_LEN, DIM));
-        let mut eng2 = HostEngine::new(2);
+        let mut eng2 = HostBackend::new(2);
         let b = enc.encode(&mut eng2, "a lovely cat");
         assert_eq!(a.as_f32(), b.as_f32(), "thread count must not change result");
     }
@@ -169,7 +169,7 @@ mod tests {
     fn different_prompts_different_contexts() {
         let f = WeightFactory::new(42, None);
         let enc = TextEncoder::new(&f);
-        let mut eng = HostEngine::new(1);
+        let mut eng = HostBackend::new(1);
         let a = enc.encode(&mut eng, "a lovely cat");
         let b = enc.encode(&mut eng, "an angry robot");
         assert_ne!(a.as_f32(), b.as_f32());
@@ -179,7 +179,7 @@ mod tests {
     fn outputs_are_finite_and_normalized() {
         let f = WeightFactory::new(42, Some(crate::sd::trace::QuantModel::Q8_0));
         let enc = TextEncoder::new(&f);
-        let mut eng = HostEngine::new(1);
+        let mut eng = HostBackend::new(1);
         let a = enc.encode(&mut eng, "quantized path");
         assert!(a.as_f32().iter().all(|v| v.is_finite()));
     }

@@ -9,7 +9,7 @@
 //! with self-attn, cross-attn to the 77-token context, GEGLU-ish FF).
 
 use super::graph::{
-    attention, conv2d, group_norm, silu, upsample2x, Feat, MatMulEngine,
+    attention, conv2d, group_norm, silu, upsample2x, ExecBackend, Feat, OpDesc,
 };
 use super::text::{CTX_LEN, DIM as TEXT_DIM};
 use super::weights::WeightFactory;
@@ -65,13 +65,13 @@ impl ResBlock {
         }
     }
 
-    fn forward(&self, eng: &mut dyn MatMulEngine, x: &Feat, temb: &Tensor) -> Feat {
+    fn forward(&self, eng: &mut dyn ExecBackend, x: &Feat, temb: &Tensor) -> Feat {
         debug_assert_eq!(x.c, self.cin);
         let mut h = group_norm(x, GROUPS, &self.norm1.0, &self.norm1.1);
         silu(&mut h.data);
         let mut h = conv2d(eng, &self.conv1, &self.conv1_b, &h, 3, 1);
         // Add the per-channel time embedding projection.
-        let e = eng.mul_mat(&self.emb, temb); // [1, cout]
+        let e = eng.submit_now(OpDesc::time_embed(&self.emb, temb)); // [1, cout]
         let hw = h.hw();
         for c in 0..self.cout {
             let ev = e.as_f32()[c] + self.emb_b[c];
@@ -133,31 +133,31 @@ impl Transformer {
         }
     }
 
-    fn forward(&self, eng: &mut dyn MatMulEngine, x: &Feat, ctx: &Tensor) -> Feat {
+    fn forward(&self, eng: &mut dyn ExecBackend, x: &Feat, ctx: &Tensor) -> Feat {
         debug_assert_eq!(ctx.rows, CTX_LEN);
         let normed = group_norm(x, GROUPS, &self.norm.0, &self.norm.1);
         let toks = normed.to_tokens(); // [hw, ch]
-        let mut h = eng.mul_mat(&self.proj_in, &toks); // [hw, TD]
+        let mut h = eng.submit_now(OpDesc::linear(&self.proj_in, &toks)); // [hw, TD]
         add_bias(&mut h, &self.proj_in_b);
 
         // Self-attention + residual.
-        let q = eng.mul_mat(&self.wq, &h);
-        let k = eng.mul_mat(&self.wk, &h);
-        let v = eng.mul_mat(&self.wv, &h);
+        let q = eng.submit_now(OpDesc::linear(&self.wq, &h));
+        let k = eng.submit_now(OpDesc::linear(&self.wk, &h));
+        let v = eng.submit_now(OpDesc::linear(&self.wv, &h));
         let a = attention(eng, &q, &k, &v, HEADS);
-        let o = eng.mul_mat(&self.wo, &a);
+        let o = eng.submit_now(OpDesc::linear(&self.wo, &a));
         h = add_t(&h, &o);
 
         // Cross-attention to the text context + residual.
-        let q = eng.mul_mat(&self.xq, &h);
-        let k = eng.mul_mat(&self.xk, ctx);
-        let v = eng.mul_mat(&self.xv, ctx);
+        let q = eng.submit_now(OpDesc::linear(&self.xq, &h));
+        let k = eng.submit_now(OpDesc::linear(&self.xk, ctx));
+        let v = eng.submit_now(OpDesc::linear(&self.xv, ctx));
         let a = attention(eng, &q, &k, &v, HEADS);
-        let o = eng.mul_mat(&self.xo, &a);
+        let o = eng.submit_now(OpDesc::linear(&self.xo, &a));
         h = add_t(&h, &o);
 
         // Gated feed-forward + residual.
-        let mut m = eng.mul_mat(&self.ff1, &h); // [hw, 2*TD]
+        let mut m = eng.submit_now(OpDesc::linear(&self.ff1, &h)); // [hw, 2*TD]
         add_bias(&mut m, &self.ff1_b);
         // GEGLU: first half gated by GELU of second half.
         let hw = m.rows;
@@ -173,11 +173,12 @@ impl Transformer {
                 }
             }
         }
-        let mut m2 = eng.mul_mat(&self.ff2, &Tensor::f32(hw, TD, gated));
+        let gated = Tensor::f32(hw, TD, gated);
+        let mut m2 = eng.submit_now(OpDesc::linear(&self.ff2, &gated));
         add_bias(&mut m2, &self.ff2_b);
         h = add_t(&h, &m2);
 
-        let mut out = eng.mul_mat(&self.proj_out, &h); // [hw, ch]
+        let mut out = eng.submit_now(OpDesc::linear(&self.proj_out, &h)); // [hw, ch]
         add_bias(&mut out, &self.proj_out_b);
         Feat::from_tokens(&out, x.h, x.w).add(x)
     }
@@ -251,16 +252,16 @@ impl UNet {
     }
 
     /// Predict noise for a latent at timestep `t` with text context.
-    pub fn forward(&self, eng: &mut dyn MatMulEngine, latent: &Feat, t: f32, ctx: &Tensor) -> Feat {
+    pub fn forward(&self, eng: &mut dyn ExecBackend, latent: &Feat, t: f32, ctx: &Tensor) -> Feat {
         assert_eq!((latent.c, latent.h, latent.w), (LATENT_C, LATENT_HW, LATENT_HW));
         // Time embedding MLP.
         let te = timestep_embedding(t);
-        let mut e = eng.mul_mat(&self.temb1, &te);
+        let mut e = eng.submit_now(OpDesc::time_embed(&self.temb1, &te));
         add_bias(&mut e, &self.temb1_b);
         if let crate::ggml::tensor::Storage::F32(v) = &mut e.data {
             silu(v);
         }
-        let mut e = eng.mul_mat(&self.temb2, &e);
+        let mut e = eng.submit_now(OpDesc::time_embed(&self.temb2, &e));
         add_bias(&mut e, &self.temb2_b);
         let temb = e; // [1, TEMB]
 
@@ -288,7 +289,7 @@ impl UNet {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sd::graph::{HostEngine, ImaxEngine};
+    use crate::sd::graph::{HostBackend, ImaxBackend};
     use crate::sd::trace::QuantModel;
     use crate::util::rng::Xoshiro256pp;
 
@@ -310,11 +311,11 @@ mod tests {
     fn forward_shape_and_determinism() {
         let f = WeightFactory::new(1, None);
         let unet = UNet::new(&f);
-        let mut eng = HostEngine::new(2);
+        let mut eng = HostBackend::new(2);
         let out = unet.forward(&mut eng, &latent(5), 999.0, &ctx(6));
         assert_eq!((out.c, out.h, out.w), (LATENT_C, LATENT_HW, LATENT_HW));
         assert!(out.data.iter().all(|v| v.is_finite()));
-        let mut eng2 = HostEngine::new(1);
+        let mut eng2 = HostBackend::new(1);
         let out2 = unet.forward(&mut eng2, &latent(5), 999.0, &ctx(6));
         assert_eq!(out.data, out2.data);
     }
@@ -326,13 +327,13 @@ mod tests {
         let reference = {
             let f = WeightFactory::new(1, None);
             let unet = UNet::new(&f);
-            let mut eng = HostEngine::new(2);
+            let mut eng = HostBackend::new(2);
             unet.forward(&mut eng, &latent5, 500.0, &c)
         };
         for m in [QuantModel::Q8_0, QuantModel::Q3K] {
             let f = WeightFactory::new(1, Some(m));
             let unet = UNet::new(&f);
-            let mut eng = HostEngine::new(2);
+            let mut eng = HostBackend::new(2);
             let got = unet.forward(&mut eng, &latent5, 500.0, &c);
             // Cosine similarity between quantized and f16 outputs.
             let dot: f32 = got.data.iter().zip(&reference.data).map(|(a, b)| a * b).sum();
@@ -357,9 +358,9 @@ mod tests {
         let unet = UNet::new(&f);
         let l = latent(5);
         let c = ctx(6);
-        let mut host = HostEngine::new(2);
+        let mut host = HostBackend::new(2);
         let a = unet.forward(&mut host, &l, 999.0, &c);
-        let mut imax = ImaxEngine::new(crate::imax::ImaxConfig::fpga(1), 2);
+        let mut imax = ImaxBackend::new(crate::imax::ImaxConfig::fpga(1), 2);
         let b = unet.forward(&mut imax, &l, 999.0, &c);
         assert!(imax.stats().offloaded_calls > 0, "transformer linears offload");
         // Q8_0 lane kernel is bit-exact vs host GGML: whole U-Net agrees.

@@ -5,7 +5,7 @@
 //! F16 — sd.cpp never quantizes the VAE — so this is pure host-side F16
 //! GEMM load, exactly the dominant dtype of Table I.
 
-use super::graph::{conv2d, group_norm, silu, upsample2x, Feat, MatMulEngine};
+use super::graph::{conv2d, group_norm, silu, upsample2x, ExecBackend, Feat};
 use super::weights::WeightFactory;
 use crate::ggml::Tensor;
 
@@ -34,7 +34,7 @@ impl VaeRes {
         }
     }
 
-    fn forward(&self, eng: &mut dyn MatMulEngine, x: &Feat) -> Feat {
+    fn forward(&self, eng: &mut dyn ExecBackend, x: &Feat) -> Feat {
         let mut h = group_norm(x, GROUPS, &self.norm1.0, &self.norm1.1);
         silu(&mut h.data);
         let h = conv2d(eng, &self.conv1, &self.conv1_b, &h, 3, 1);
@@ -79,7 +79,7 @@ impl VaeDecoder {
     }
 
     /// Decode a latent into an RGB image in `[0, 1]`.
-    pub fn decode(&self, eng: &mut dyn MatMulEngine, latent: &Feat) -> Feat {
+    pub fn decode(&self, eng: &mut dyn ExecBackend, latent: &Feat) -> Feat {
         let mut h = conv2d(eng, &self.conv_in.0, &self.conv_in.1, latent, 3, 1);
         for (rb, up) in &self.levels {
             h = rb.forward(eng, &h);
@@ -102,7 +102,7 @@ impl VaeDecoder {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sd::graph::HostEngine;
+    use crate::sd::graph::HostBackend;
     use crate::util::rng::Xoshiro256pp;
 
     #[test]
@@ -113,11 +113,11 @@ mod tests {
         let mut d = vec![0.0f32; 4 * 16 * 16];
         r.fill_normal(&mut d, 1.0);
         let latent = Feat::new(4, 16, 16, d);
-        let mut eng = HostEngine::new(2);
+        let mut eng = HostBackend::new(2);
         let img = vae.decode(&mut eng, &latent);
         assert_eq!((img.c, img.h, img.w), (3, 128, 128));
         assert!(img.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
-        let mut eng2 = HostEngine::new(1);
+        let mut eng2 = HostBackend::new(1);
         let img2 = vae.decode(&mut eng2, &latent);
         assert_eq!(img.data, img2.data);
     }
@@ -136,7 +136,7 @@ mod tests {
     fn different_latents_different_images() {
         let f = WeightFactory::new(2, None);
         let vae = VaeDecoder::new(&f);
-        let mut eng = HostEngine::new(2);
+        let mut eng = HostBackend::new(2);
         let a = vae.decode(&mut eng, &Feat::new(4, 16, 16, vec![0.5; 1024]));
         let b = vae.decode(&mut eng, &Feat::new(4, 16, 16, vec![-0.5; 1024]));
         assert_ne!(a.data, b.data);

@@ -1,30 +1,36 @@
-//! Cross-request mat-mul coalescing: the rendezvous at the heart of the
+//! Cross-request op coalescing: the rendezvous at the heart of the
 //! serving layer.
 //!
 //! Every request in a micro-batch runs the identical op sequence over a
 //! shared read-only [`crate::sd::pipeline::Pipeline`], so the i-th
-//! mat-mul of every request names the *same weight tensor*. Each request
-//! thread drives a [`BatchMember`] engine; model-weight mat-muls
-//! rendezvous in the shared [`SharedBatch`]: the last arrival (the
-//! leader) concatenates all members' activation rows, performs **one**
-//! coordinator submission for the whole micro-batch, splits the stacked
-//! output rows back, and wakes the waiters.
+//! submission of every request names the *same weight tensor with the
+//! same [`OpKind`]*. Each request thread drives a [`BatchMember`]
+//! backend; model-weight ops rendezvous in the shared [`SharedBatch`]:
+//! the last arrival (the leader) concatenates all members' activation
+//! rows, performs **one** coordinator submission for the whole
+//! micro-batch, splits the stacked output rows back, and wakes the
+//! waiters. In sharded mode the merged submission itself row-tile-shards
+//! across the lanes ([`crate::coordinator::Coordinator::submit_sharded`])
+//! — batching amortizes per-op overheads *across requests* while
+//! sharding splits the op *across lanes*; the two compose.
 //!
-//! Activation×activation mat-muls (attention scores / values — F32, and
-//! per-request tensors, so there is nothing shared to batch) bypass the
-//! rendezvous and run immediately on the coordinator's host path — which
-//! is also the paper's routing (F32 never offloads).
+//! Attention score/value ops declare [`OpKind::per_request_operands`]
+//! (F32, per-request tensors, so there is nothing shared to batch):
+//! they bypass the rendezvous and run immediately on the coordinator's
+//! host path — which is also the paper's routing (F32 never offloads).
 //!
-//! Determinism: each output row of a GGML-style `mul_mat` is an
+//! Determinism: each output row of a GGML-style mat-mul is an
 //! independent vec-dot of one weight row and one activation row, and
-//! activation quantization is per-row — so batched outputs are
-//! **bit-identical** to serial per-request execution (regression-tested
-//! in `tests/serve_batching.rs`).
+//! activation quantization is per-row — so batched (and sharded)
+//! outputs are **bit-identical** to serial per-request execution
+//! (regression-tested in `tests/serve_batching.rs`).
 
 use crate::coordinator::Coordinator;
 use crate::ggml::tensor::Storage;
 use crate::ggml::{DType, Tensor, WeightId};
-use crate::sd::graph::{EngineStats, MatMulEngine, RequestId};
+use crate::sd::backend::{
+    resolve_request, Completions, EngineStats, ExecBackend, OpDesc, OpHandle, OpKind, RequestId,
+};
 use std::sync::{Arc, Condvar, Mutex};
 
 /// Identity fingerprint of a weight tensor at a rendezvous point.
@@ -47,10 +53,13 @@ enum WeightFp {
     },
 }
 
-fn fingerprint(w: &Tensor) -> WeightFp {
-    if let Some(id) = w.wid {
+fn fingerprint(op: &OpDesc<'_>) -> WeightFp {
+    // OpDesc.wid is the weight identity everywhere (defaulted to the
+    // tensor's own id by the constructors, overridable via `with_wid`).
+    if let Some(id) = op.wid {
         return WeightFp::Wid(id);
     }
+    let w = op.w;
     let addr = match &w.data {
         Storage::F32(v) => v.as_ptr() as usize,
         Storage::F16(v) => v.as_ptr() as usize,
@@ -61,8 +70,19 @@ fn fingerprint(w: &Tensor) -> WeightFp {
     WeightFp::Addr { addr, rows: w.rows, cols: w.cols }
 }
 
-struct Pending {
+/// The full rendezvous key: lockstep members must agree on the weight
+/// *and* on what the op is — a `(WeightId, OpKind)` pair. The kind
+/// guard catches desynchronized members that happen to reuse a weight
+/// under a different op (and gives mixed-kind traffic distinct
+/// rendezvous points by construction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct RendezvousKey {
     fp: WeightFp,
+    kind: OpKind,
+}
+
+struct Pending {
+    key: RendezvousKey,
     x: Tensor,
 }
 
@@ -77,17 +97,24 @@ struct BatchState {
 pub struct SharedBatch {
     size: usize,
     coordinator: Arc<Coordinator>,
+    /// Route merged submissions through the sharded path (row-tiles
+    /// split across all lanes) instead of whole-op lane affinity.
+    sharded: bool,
     state: Mutex<BatchState>,
     cv: Condvar,
 }
 
 impl SharedBatch {
-    /// New rendezvous for `size` lockstep members.
-    pub fn new(size: usize, coordinator: Arc<Coordinator>) -> Arc<SharedBatch> {
+    /// New rendezvous for `size` lockstep members. `sharded` selects the
+    /// merged submissions' lane routing: whole-op residency affinity
+    /// (`false`) or single-op row-tile sharding across all lanes
+    /// (`true`); outputs are bit-identical either way.
+    pub fn new(size: usize, coordinator: Arc<Coordinator>, sharded: bool) -> Arc<SharedBatch> {
         assert!(size >= 1, "a batch needs at least one member");
         Arc::new(SharedBatch {
             size,
             coordinator,
+            sharded,
             state: Mutex::new(BatchState {
                 inputs: (0..size).map(|_| None).collect(),
                 outputs: (0..size).map(|_| None).collect(),
@@ -108,30 +135,44 @@ impl SharedBatch {
         &self.coordinator
     }
 
+    /// One merged (or solo) submission on the coordinator, honoring the
+    /// sharded routing mode.
+    fn execute(&self, op: &OpDesc<'_>) -> Tensor {
+        if self.sharded && self.coordinator.shardable(op) {
+            self.coordinator.submit_sharded(op).out
+        } else {
+            self.coordinator.submit_op(op)
+        }
+    }
+
     /// Rendezvous: block until all `size` members have submitted their
     /// activations for the current op, execute once, return this
     /// member's `[n_slot, m]` output.
-    fn submit(&self, slot: usize, w: &Tensor, x: &Tensor) -> Tensor {
+    fn rendezvous(&self, slot: usize, op: &OpDesc<'_>) -> Tensor {
         if self.size == 1 {
             // Nothing to merge: skip the rendezvous (and its activation
             // clone) entirely — this is the serial baseline path.
-            return self.coordinator.execute_ref(w, x);
+            return self.execute(op);
         }
+        let (w, kind) = (op.w, op.kind);
+        let key = RendezvousKey { fp: fingerprint(op), kind };
         let mut st = self.state.lock().unwrap();
         assert!(
             st.inputs[slot].is_none(),
             "member {slot} submitted twice before the rendezvous completed"
         );
-        st.inputs[slot] = Some(Pending { fp: fingerprint(w), x: x.clone() });
+        st.inputs[slot] = Some(Pending { key, x: op.x.clone() });
         st.arrived += 1;
         if st.arrived == self.size {
             // Leader: concatenate activation rows in slot order.
-            let fp = fingerprint(w);
             let (m, k) = (w.rows, w.cols);
             let mut rows_per = Vec::with_capacity(self.size);
             let mut total_rows = 0;
             for p in st.inputs.iter().flatten() {
-                assert_eq!(p.fp, fp, "lockstep members diverged at a rendezvous point");
+                assert_eq!(
+                    p.key, key,
+                    "lockstep members diverged at a rendezvous point (weight or op kind)"
+                );
                 rows_per.push(p.x.rows);
                 total_rows += p.x.rows;
             }
@@ -140,11 +181,13 @@ impl SharedBatch {
                 data.extend_from_slice(p.x.as_f32());
             }
             let x_cat = Tensor::f32(total_rows, k, data);
-            let y = self.coordinator.execute_ref(w, &x_cat); // [total_rows, m]
+            let mut merged = OpDesc::new(kind, w, &x_cat);
+            merged.wid = op.wid; // members agreed on the key, so on the id
+            let y = self.execute(&merged); // [total_rows, m]
             // Count the merge only when it actually reached a lane, so
             // `batched_submissions` stays comparable with
             // `Coordinator::execute_coalesced` ("merged *lane*
-            // submissions"); merged host (F16) mat-muls are not lane
+            // submissions"); merged host (F16) ops are not lane
             // submissions.
             if self.coordinator.policy.offloads(w) && self.coordinator.lanes() > 0 {
                 self.coordinator.metrics.record_batch(self.size as u64);
@@ -174,39 +217,55 @@ impl SharedBatch {
     }
 }
 
-/// Per-request engine participating in a [`SharedBatch`].
+/// Per-request backend participating in a [`SharedBatch`].
 pub struct BatchMember {
     shared: Arc<SharedBatch>,
     slot: usize,
     request: RequestId,
     stats: EngineStats,
+    done: Completions,
 }
 
 impl BatchMember {
-    /// Member engine for `slot` (0-based, unique within the batch).
+    /// Member backend for `slot` (0-based, unique within the batch).
     pub fn new(shared: Arc<SharedBatch>, slot: usize, request: RequestId) -> BatchMember {
         assert!(slot < shared.size(), "slot out of range");
-        BatchMember { shared, slot, request, stats: EngineStats::default() }
+        BatchMember {
+            shared,
+            slot,
+            request,
+            stats: EngineStats::default(),
+            done: Completions::default(),
+        }
     }
 }
 
-impl MatMulEngine for BatchMember {
-    fn mul_mat(&mut self, w: &Tensor, x: &Tensor) -> Tensor {
+impl ExecBackend for BatchMember {
+    fn submit(&mut self, op: OpDesc<'_>) -> OpHandle {
         let t0 = std::time::Instant::now();
-        let macs = (w.rows * w.cols * x.rows) as u64;
-        let offloads = self.shared.coordinator().policy.offloads(w);
-        let out = if w.dtype() == DType::F32 {
-            // Per-request activation tensor as "weight": nothing shared
-            // to batch; run on the host path immediately.
-            self.shared.coordinator().execute_ref(w, x)
+        let macs = op.macs();
+        let offloads = self.shared.coordinator().policy.offloads(op.w);
+        let out = if op.kind.per_request_operands() || op.w.dtype() == DType::F32 {
+            // Per-request operand as "weight": nothing shared to batch;
+            // run on the coordinator immediately (host path for F32).
+            self.shared.coordinator().submit_op(&op)
         } else {
-            self.shared.submit(self.slot, w, x)
+            self.shared.rendezvous(self.slot, &op)
         };
         if offloads {
             self.stats.offloaded_calls += 1;
+            // One submission attributable to this request's op; the
+            // merge/shard decomposition of the rendezvous is visible in
+            // the shared CoordinatorMetrics, not per-member stats.
+            self.stats.lane_submissions += 1;
         }
-        self.stats.record(self.request, w.dtype(), macs, t0.elapsed().as_secs_f64());
-        out
+        let request = resolve_request(&op, self.request);
+        self.stats.record(request, op.w.dtype(), macs, t0.elapsed().as_secs_f64());
+        self.done.complete(out)
+    }
+
+    fn sync(&mut self, h: OpHandle) -> Tensor {
+        self.done.take(h)
     }
 
     fn stats(&self) -> &EngineStats {
@@ -239,11 +298,11 @@ mod tests {
 
     #[test]
     fn single_member_batch_executes_inline() {
-        let shared = SharedBatch::new(1, coordinator(1));
+        let shared = SharedBatch::new(1, coordinator(1), false);
         let w = rnd(4, 64, 1).quantize(DType::Q8_0);
         let x = rnd(3, 64, 2);
         let mut eng = BatchMember::new(shared, 0, RequestId(1));
-        let got = eng.mul_mat(&w, &x);
+        let got = eng.submit_now(OpDesc::linear(&w, &x));
         let want = ggml::mul_mat(&w, &x, 1);
         for (a, b) in got.as_f32().iter().zip(want.as_f32()) {
             assert_eq!(a.to_bits(), b.to_bits());
@@ -257,7 +316,7 @@ mod tests {
         let coord = coordinator(2);
         let w = rnd(6, 128, 3).quantize(DType::Q8_0);
         let xs: Vec<Tensor> = (0..3).map(|i| rnd(2 + i, 128, 10 + i as u64)).collect();
-        let shared = SharedBatch::new(3, Arc::clone(&coord));
+        let shared = SharedBatch::new(3, Arc::clone(&coord), false);
         let outs: Vec<Tensor> = std::thread::scope(|scope| {
             let handles: Vec<_> = xs
                 .iter()
@@ -267,7 +326,7 @@ mod tests {
                     let w = &w;
                     scope.spawn(move || {
                         let mut eng = BatchMember::new(shared, slot, RequestId(slot as u64));
-                        eng.mul_mat(w, x)
+                        eng.submit_now(OpDesc::linear(w, x))
                     })
                 })
                 .collect();
@@ -286,14 +345,51 @@ mod tests {
     }
 
     #[test]
-    fn f32_ops_bypass_the_rendezvous() {
-        // With batch size 2 but only ONE member issuing an F32 op, a
-        // rendezvous would deadlock — bypass means it must complete.
-        let shared = SharedBatch::new(2, coordinator(1));
-        let w = rnd(4, 32, 5); // F32 "weight" (attention-score pattern)
+    fn sharded_rendezvous_merges_then_shards_bit_identically() {
+        let w = rnd(8, 128, 30).quantize(DType::Q8_0).with_wid(WeightId(44));
+        let xs: Vec<Tensor> = (0..2).map(|i| rnd(2, 128, 60 + i as u64)).collect();
+        let run = |sharded: bool| {
+            let coord = coordinator(2);
+            let shared = SharedBatch::new(2, Arc::clone(&coord), sharded);
+            let outs: Vec<Tensor> = std::thread::scope(|scope| {
+                let handles: Vec<_> = xs
+                    .iter()
+                    .enumerate()
+                    .map(|(slot, x)| {
+                        let shared = Arc::clone(&shared);
+                        let w = &w;
+                        scope.spawn(move || {
+                            let mut eng = BatchMember::new(shared, slot, RequestId(slot as u64));
+                            eng.submit_now(OpDesc::linear(w, x))
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            (outs, coord)
+        };
+        let (plain, _) = run(false);
+        let (sharded, coord) = run(true);
+        for (a, b) in plain.iter().zip(&sharded) {
+            for (p, q) in a.as_f32().iter().zip(b.as_f32()) {
+                assert_eq!(p.to_bits(), q.to_bits(), "sharded rendezvous stays bit-exact");
+            }
+        }
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(coord.metrics.sharded_ops.load(ord), 1, "one merged sharded submission");
+        assert_eq!(coord.metrics.shard_submissions.load(ord), 2, "split across both lanes");
+        assert_eq!(coord.metrics.batched_submissions.load(ord), 1);
+    }
+
+    #[test]
+    fn per_request_ops_bypass_the_rendezvous() {
+        // With batch size 2 but only ONE member issuing an attention op,
+        // a rendezvous would deadlock — bypass means it must complete.
+        let shared = SharedBatch::new(2, coordinator(1), false);
+        let w = rnd(4, 32, 5); // F32 per-head keys (attention-score pattern)
         let x = rnd(3, 32, 6);
         let mut eng = BatchMember::new(shared, 0, RequestId(0));
-        let got = eng.mul_mat(&w, &x);
+        let got = eng.submit_now(OpDesc::attn_scores(&w, &x));
         let want = ggml::mul_mat(&w, &x, 1);
         for (a, b) in got.as_f32().iter().zip(want.as_f32()) {
             assert!((a - b).abs() < 1e-5);
@@ -303,17 +399,40 @@ mod tests {
 
     #[test]
     fn fingerprint_prefers_weight_identity_over_address() {
+        let x = rnd(2, 64, 10);
         let w = rnd(4, 64, 11).quantize(DType::Q8_0).with_wid(WeightId(5));
         let clone = w.clone(); // different storage address, same identity
-        assert_eq!(fingerprint(&w), fingerprint(&clone), "WeightId keys the rendezvous");
+        assert_eq!(
+            fingerprint(&OpDesc::linear(&w, &x)),
+            fingerprint(&OpDesc::linear(&clone, &x)),
+            "WeightId keys the rendezvous"
+        );
         let anon = rnd(4, 64, 11).quantize(DType::Q8_0);
         let anon2 = anon.clone();
         assert_ne!(
-            fingerprint(&anon),
-            fingerprint(&anon2),
+            fingerprint(&OpDesc::linear(&anon, &x)),
+            fingerprint(&OpDesc::linear(&anon2, &x)),
             "anonymous tensors fall back to address identity"
         );
-        assert_ne!(fingerprint(&w), fingerprint(&anon));
+        assert_ne!(
+            fingerprint(&OpDesc::linear(&w, &x)),
+            fingerprint(&OpDesc::linear(&anon, &x))
+        );
+        assert_eq!(
+            fingerprint(&OpDesc::linear(&anon, &x).with_wid(WeightId(5))),
+            fingerprint(&OpDesc::linear(&w, &x)),
+            "an explicit wid override keys the rendezvous too"
+        );
+    }
+
+    #[test]
+    fn rendezvous_key_includes_op_kind() {
+        let x = rnd(2, 64, 13);
+        let w = rnd(4, 64, 12).quantize(DType::Q8_0).with_wid(WeightId(6));
+        let fp = fingerprint(&OpDesc::linear(&w, &x));
+        let a = RendezvousKey { fp, kind: OpKind::Linear };
+        let b = RendezvousKey { fp, kind: OpKind::TimeEmbed };
+        assert_ne!(a, b, "same weight under different kinds must not rendezvous");
     }
 
     #[test]
@@ -321,7 +440,7 @@ mod tests {
         let coord = coordinator(1);
         let w1 = rnd(4, 64, 7).quantize(DType::Q8_0);
         let w2 = rnd(8, 64, 8).quantize(DType::F16);
-        let shared = SharedBatch::new(2, Arc::clone(&coord));
+        let shared = SharedBatch::new(2, Arc::clone(&coord), false);
         std::thread::scope(|scope| {
             for slot in 0..2usize {
                 let shared = Arc::clone(&shared);
@@ -330,8 +449,8 @@ mod tests {
                     let mut eng = BatchMember::new(shared, slot, RequestId(slot as u64));
                     for round in 0..4u64 {
                         let x = rnd(2, 64, 100 + 10 * round + slot as u64);
-                        let a = eng.mul_mat(w1, &x);
-                        let b = eng.mul_mat(w2, &x);
+                        let a = eng.submit_now(OpDesc::linear(w1, &x));
+                        let b = eng.submit_now(OpDesc::linear(w2, &x));
                         assert_eq!(a.rows, 2);
                         assert_eq!(b.cols, 8);
                     }

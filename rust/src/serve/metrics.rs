@@ -34,7 +34,10 @@ pub struct ServeReport {
     pub offloaded_macs: u64,
     /// Simulated IMAX cycles across lanes.
     pub imax_cycles: u64,
-    /// Lane submissions (merged submissions count once).
+    /// Lane submissions. A merged rendezvous submission counts once
+    /// under affinity routing; under sharded routing it counts once
+    /// **per shard** (the op decomposes into per-lane submissions —
+    /// compare against `CoordinatorMetrics::shard_submissions`).
     pub lane_submissions: u64,
     /// Merged lane submissions covering more than one request.
     pub batched_submissions: u64,

@@ -23,11 +23,16 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// Concurrent micro-batch workers.
     pub workers: usize,
+    /// Route merged submissions through single-op row-tile sharding
+    /// across all lanes (bit-identical; see
+    /// [`crate::coordinator::Coordinator::submit_sharded`]) instead of
+    /// whole-op lane affinity.
+    pub sharded: bool,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { lanes: 2, host_threads: 2, max_batch: 4, workers: 2 }
+        ServeConfig { lanes: 2, host_threads: 2, max_batch: 4, workers: 2, sharded: false }
     }
 }
 
@@ -35,7 +40,7 @@ impl ServeConfig {
     /// The serial baseline: one request at a time, no coalescing — the
     /// paper's one-image-per-invocation mode, for comparison benches.
     pub fn serial(lanes: usize, host_threads: usize) -> ServeConfig {
-        ServeConfig { lanes, host_threads, max_batch: 1, workers: 1 }
+        ServeConfig { lanes, host_threads, max_batch: 1, workers: 1, sharded: false }
     }
 }
 
@@ -78,7 +83,13 @@ impl ServeHarness {
         ));
         let pipeline = Arc::new(Pipeline::new(pipe_cfg));
         if cache_enabled && config.lanes > 0 {
-            coordinator.apply_plan(&pipeline.plan());
+            // The prefetch/pin pass matching the routing mode: row-tile
+            // shards per lane (sharded) or whole weights (affinity).
+            if config.sharded {
+                coordinator.apply_plan_sharded(&pipeline.plan());
+            } else {
+                coordinator.apply_plan(&pipeline.plan());
+            }
         }
         ServeHarness { pipeline, coordinator, config }
     }
@@ -151,14 +162,14 @@ impl ServeHarness {
     /// Run one micro-batch: one thread per request, lockstep through the
     /// shared rendezvous.
     fn run_micro_batch(&self, batch: &[ServeRequest], outcomes: &Mutex<Vec<RequestOutcome>>) {
-        let shared = SharedBatch::new(batch.len(), Arc::clone(&self.coordinator));
+        let shared = SharedBatch::new(batch.len(), Arc::clone(&self.coordinator), self.config.sharded);
         std::thread::scope(|scope| {
             for (slot, req) in batch.iter().enumerate() {
                 let shared = Arc::clone(&shared);
                 scope.spawn(move || {
                     let t0 = std::time::Instant::now();
                     let mut eng = BatchMember::new(shared, slot, req.id);
-                    let (img, report) = self.pipeline.generate_with_engine(
+                    let (img, report) = self.pipeline.generate_with_backend(
                         &mut eng,
                         req.id,
                         &req.prompt,
@@ -202,7 +213,7 @@ mod tests {
     fn serves_all_requests_with_metrics() {
         let h = ServeHarness::new(
             pipe_cfg(),
-            ServeConfig { lanes: 2, host_threads: 2, max_batch: 2, workers: 2 },
+            ServeConfig { lanes: 2, host_threads: 2, max_batch: 2, workers: 2, sharded: false },
         );
         let report = h.serve(&prompts(4));
         assert_eq!(report.requests(), 4);
@@ -225,7 +236,7 @@ mod tests {
         let serial = ServeHarness::new(pipe_cfg(), ServeConfig::serial(1, 2)).serve(&reqs);
         let batched = ServeHarness::new(
             pipe_cfg(),
-            ServeConfig { lanes: 1, host_threads: 2, max_batch: 3, workers: 1 },
+            ServeConfig { lanes: 1, host_threads: 2, max_batch: 3, workers: 1, sharded: false },
         )
         .serve(&reqs);
         for (a, b) in serial.outcomes.iter().zip(&batched.outcomes) {
@@ -281,6 +292,31 @@ mod tests {
             "residency must save simulated lane cycles: {} vs {}",
             report.imax_cycles,
             off_report.imax_cycles
+        );
+    }
+
+    #[test]
+    fn sharded_serving_matches_affinity_serving_bit_identically() {
+        let reqs = prompts(2);
+        let plain = ServeHarness::new(
+            pipe_cfg(),
+            ServeConfig { lanes: 2, host_threads: 2, max_batch: 2, workers: 1, sharded: false },
+        )
+        .serve(&reqs);
+        let sharded_h = ServeHarness::new(
+            pipe_cfg(),
+            ServeConfig { lanes: 2, host_threads: 2, max_batch: 2, workers: 1, sharded: true },
+        );
+        let sharded = sharded_h.serve(&reqs);
+        for (a, b) in plain.outcomes.iter().zip(&sharded.outcomes) {
+            assert_eq!(a.image_crc32, b.image_crc32, "sharded routing must not change bits");
+        }
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        let m = sharded_h.coordinator().metrics.as_ref();
+        assert!(m.sharded_ops.load(ord) > 0, "merged submissions went through the sharded path");
+        assert!(
+            m.shard_submissions.load(ord) > m.sharded_ops.load(ord),
+            "ops split across both lanes"
         );
     }
 

@@ -127,6 +127,13 @@ impl App {
         self
     }
 
+    /// Add a batch of argument declarations (e.g.
+    /// [`BackendFlags::args`]).
+    pub fn args(mut self, list: Vec<Arg>) -> App {
+        self.args.extend(list);
+        self
+    }
+
     /// Add a subcommand.
     pub fn subcommand(mut self, s: App) -> App {
         self.subs.push(s);
@@ -338,6 +345,129 @@ impl Matches {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Shared backend-selection flag set
+// ---------------------------------------------------------------------------
+
+/// Which execution backend a CLI run selects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Host GGML kernels only.
+    Host,
+    /// One IMAX lane (paper §III-B policy).
+    Imax,
+    /// Multi-lane coordinator with single-op row-tile sharding.
+    Sharded,
+}
+
+/// Parsed backend selection shared by `imax-sd` and the serve demo —
+/// one definition of `--backend`/`--lanes`/`--threads`/`--lmm-cache`/
+/// `--no-weight-cache` so every binary exposes the same knobs. One
+/// semantic caveat is inherent: the `imax` pipeline backend is
+/// single-lane by construction, so `--lanes` only takes effect for the
+/// sharded backend and for serving (whose coordinator always has a lane
+/// pool) — the flag help says so.
+#[derive(Debug, Clone)]
+pub struct BackendSel {
+    /// Selected backend.
+    pub kind: BackendKind,
+    /// IMAX lanes (sharded backend / serving coordinator).
+    pub lanes: usize,
+    /// Host threads (marshalling + residual ops).
+    pub threads: usize,
+    /// Per-lane LMM bytes reserved as resident weight cache (0 =
+    /// residency disabled, the paper's stream-every-call baseline).
+    pub cache_bytes: usize,
+}
+
+/// The shared flag declarations. Append these to any [`App`] that runs
+/// the pipeline or the serving stack, then parse with
+/// [`BackendFlags::parse`].
+pub struct BackendFlags;
+
+impl BackendFlags {
+    /// Flag declarations (`--backend host|imax|sharded`, `--lanes N`,
+    /// `--threads N`, `--lmm-cache BYTES`, `--no-weight-cache`).
+    pub fn args() -> Vec<Arg> {
+        vec![
+            Arg::opt("backend", 'b', "KIND", "execution backend: host, imax or sharded")
+                .default("imax"),
+            Arg::opt(
+                "lanes",
+                'l',
+                "N",
+                "IMAX lanes (sharded backend and serving; the single-lane imax pipeline ignores it)",
+            )
+            .default("2"),
+            Arg::opt("threads", 't', "N", "host threads for marshalling + residual ops")
+                .default("2"),
+            Arg::opt("lmm-cache", 'c', "BYTES", "LMM bytes reserved as resident weight cache")
+                .default("262144"),
+            Arg::flag(
+                "no-weight-cache",
+                '\0',
+                "disable weight residency (stream every weight tile, paper baseline)",
+            ),
+        ]
+    }
+
+    /// Parse the shared flags out of a [`Matches`].
+    pub fn parse(m: &Matches) -> Result<BackendSel, CliError> {
+        let kind = match m.str("backend") {
+            "host" => BackendKind::Host,
+            "imax" => BackendKind::Imax,
+            "sharded" => BackendKind::Sharded,
+            other => {
+                return Err(CliError(format!(
+                    "--backend={other}: expected host, imax or sharded"
+                )))
+            }
+        };
+        let lanes = m.usize("lanes")?;
+        if !(1..=crate::imax::MAX_LANES).contains(&lanes) {
+            return Err(CliError(format!(
+                "--lanes={lanes}: the prototype supports 1..={} lanes",
+                crate::imax::MAX_LANES
+            )));
+        }
+        let threads = m.usize("threads")?;
+        if threads == 0 {
+            return Err(CliError("--threads=0: at least one host thread".into()));
+        }
+        let cache_bytes = if m.flag("no-weight-cache") { 0 } else { m.usize("lmm-cache")? };
+        Ok(BackendSel { kind, lanes, threads, cache_bytes })
+    }
+}
+
+impl BackendSel {
+    /// The IMAX configuration this selection describes (FPGA prototype
+    /// with the chosen lane count and cache partition).
+    pub fn imax_config(&self) -> crate::imax::ImaxConfig {
+        let lanes = match self.kind {
+            BackendKind::Sharded => self.lanes,
+            _ => 1,
+        };
+        let mut imax = crate::imax::ImaxConfig::fpga(lanes);
+        imax.weight_cache_bytes = self.cache_bytes;
+        imax
+    }
+
+    /// The pipeline [`crate::sd::pipeline::Backend`] this selection maps
+    /// to.
+    pub fn pipeline_backend(&self) -> crate::sd::pipeline::Backend {
+        use crate::sd::pipeline::Backend;
+        match self.kind {
+            BackendKind::Host => Backend::Host { threads: self.threads },
+            BackendKind::Imax => {
+                Backend::Imax { config: self.imax_config(), threads: self.threads }
+            }
+            BackendKind::Sharded => {
+                Backend::Sharded { config: self.imax_config(), threads: self.threads }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -410,5 +540,54 @@ mod tests {
         for needle in ["--steps", "--verbose", "gen", "test app"] {
             assert!(h.contains(needle), "help missing {needle}: {h}");
         }
+    }
+
+    fn backend_app() -> App {
+        App::new("b", "backend test").args(BackendFlags::args())
+    }
+
+    #[test]
+    fn backend_flags_defaults() {
+        let m = backend_app().parse(&argv(&[])).unwrap();
+        let sel = BackendFlags::parse(&m).unwrap();
+        assert_eq!(sel.kind, BackendKind::Imax);
+        assert_eq!(sel.lanes, 2);
+        assert_eq!(sel.threads, 2);
+        assert_eq!(sel.cache_bytes, 262144);
+        assert_eq!(sel.imax_config().lanes, 1, "non-sharded backends use one lane");
+    }
+
+    #[test]
+    fn backend_flags_sharded_selection() {
+        let m = backend_app()
+            .parse(&argv(&["--backend", "sharded", "--lanes", "4", "--lmm-cache", "65536"]))
+            .unwrap();
+        let sel = BackendFlags::parse(&m).unwrap();
+        assert_eq!(sel.kind, BackendKind::Sharded);
+        let imax = sel.imax_config();
+        assert_eq!(imax.lanes, 4);
+        assert_eq!(imax.weight_cache_bytes, 65536);
+        assert!(matches!(
+            sel.pipeline_backend(),
+            crate::sd::pipeline::Backend::Sharded { .. }
+        ));
+    }
+
+    #[test]
+    fn backend_flags_no_weight_cache_wins() {
+        let m = backend_app()
+            .parse(&argv(&["--no-weight-cache", "--lmm-cache", "123"]))
+            .unwrap();
+        assert_eq!(BackendFlags::parse(&m).unwrap().cache_bytes, 0);
+    }
+
+    #[test]
+    fn backend_flags_reject_bad_values() {
+        let m = backend_app().parse(&argv(&["--backend", "gpu"])).unwrap();
+        assert!(BackendFlags::parse(&m).is_err());
+        let m = backend_app().parse(&argv(&["--lanes", "9"])).unwrap();
+        assert!(BackendFlags::parse(&m).is_err());
+        let m = backend_app().parse(&argv(&["--threads", "0"])).unwrap();
+        assert!(BackendFlags::parse(&m).is_err());
     }
 }

@@ -1,0 +1,121 @@
+//! Property tests for the row-tile shard partitioner: for arbitrary row
+//! counts, lane counts and cache budgets the partition must be
+//! disjoint, covering, balanced, budget-capped and stably identified.
+
+use imax_sd::coordinator::{shard_wid, ShardPlan};
+use imax_sd::ggml::WeightId;
+use imax_sd::util::prop::{run, Gen};
+use imax_sd::util::rng::Xoshiro256pp;
+
+/// Check every invariant of one plan; returns a reason on violation.
+fn check_plan(
+    m: usize,
+    lanes: usize,
+    row_bytes: usize,
+    budget: usize,
+) -> Result<(), String> {
+    let cap = ShardPlan::cap_rows(row_bytes, budget, m);
+    let parent = WeightId(0xABCD ^ m as u64);
+    let plan = ShardPlan::new(m, lanes, cap, Some(parent));
+
+    // Disjoint + covering + ascending: shards tile 0..m exactly.
+    let mut next = 0usize;
+    for s in &plan.shards {
+        if s.rows.start != next {
+            return Err(format!("gap/overlap at row {next}: {:?}", s.rows));
+        }
+        if s.rows.is_empty() {
+            return Err(format!("empty shard at {next}"));
+        }
+        next = s.rows.end;
+    }
+    if next != m {
+        return Err(format!("rows covered {next} != m {m}"));
+    }
+
+    // Lane assignment round-robins and stays in range.
+    for (i, s) in plan.shards.iter().enumerate() {
+        if s.lane != i % lanes {
+            return Err(format!("shard {i} on lane {} (want {})", s.lane, i % lanes));
+        }
+    }
+
+    // Balanced to within one row.
+    let min = plan.shards.iter().map(|s| s.len()).min().unwrap();
+    let max = plan.shards.iter().map(|s| s.len()).max().unwrap();
+    if max - min > 1 {
+        return Err(format!("unbalanced shards: {min}..{max} rows"));
+    }
+
+    // Budget-capped: whenever one row fits the per-lane cache budget at
+    // all, every shard must be cacheable (rows × row_bytes ≤ budget).
+    if budget > 0 && row_bytes <= budget {
+        for s in &plan.shards {
+            if s.len() * row_bytes > budget {
+                return Err(format!(
+                    "shard of {} rows x {row_bytes} B exceeds the {budget} B lane budget",
+                    s.len()
+                ));
+            }
+        }
+    }
+
+    // Shard ids: derived from the parent, pairwise distinct, and equal
+    // to the independent derivation the pin pass performs.
+    let count = plan.shards.len();
+    let mut seen = std::collections::HashSet::new();
+    for (i, s) in plan.shards.iter().enumerate() {
+        let want = shard_wid(parent, i, count);
+        if s.wid != Some(want) {
+            return Err(format!("shard {i} wid {:?} != derived {want:?}", s.wid));
+        }
+        if !seen.insert(want.0) {
+            return Err(format!("shard {i} reuses a wid"));
+        }
+    }
+    if count == 1 && plan.shards[0].wid != Some(parent) {
+        return Err("single shard must keep the parent id".into());
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_shard_partitions_disjoint_covering_budgeted() {
+    run("shard partition invariants", 150, Gen::usize_in(1..=1500), |&m| {
+        // Derive lane counts and byte geometries from the (shrinkable)
+        // row count, covering tight, roomy and disabled budgets.
+        let mut rng = Xoshiro256pp::seed_from_u64(m as u64);
+        for lanes in 1..=8usize {
+            for _ in 0..3 {
+                let row_bytes = 1 + rng.below(4096) as usize;
+                let budget = match rng.below(4) {
+                    0 => 0,                                   // cache disabled
+                    1 => rng.below(row_bytes as u64) as usize, // sub-row budget
+                    2 => row_bytes * (1 + rng.below(16) as usize), // tight
+                    _ => row_bytes * m,                       // roomy
+                };
+                check_plan(m, lanes, row_bytes, budget)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shard_count_matches_budget_pressure() {
+    run("shard count = max(lanes, ceil(m/cap)) clamped to m", 200, Gen::usize_in(1..=2000), |&m| {
+        for lanes in [1usize, 2, 4, 8] {
+            for cap in [1usize, 3, 17, usize::MAX] {
+                let plan = ShardPlan::new(m, lanes, cap, None);
+                let want = lanes.max(m.div_ceil(cap.max(1))).min(m);
+                if plan.shards.len() != want {
+                    return Err(format!(
+                        "m={m} lanes={lanes} cap={cap}: {} shards, want {want}",
+                        plan.shards.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
