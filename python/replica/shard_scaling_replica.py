@@ -7,12 +7,24 @@ Re-implements, in deterministic integer math, exactly what
   minted like ``WeightFactory::weight_id`` with seed 1),
 * the sharded prefetch/pin pass (``Coordinator::apply_plan_sharded``:
   hottest-first, ``ShardPlan`` row partition, per-lane budgets),
+* the shard geometry of ``Coordinator::shard_geometry``: rows capped to
+  the per-lane cache budget, floored by the cycle-model shard threshold
+  (``min_shard_rows``), shard ``i`` on lane ``(wid % lanes + i) %
+  lanes``,
 * per-shard execution on per-lane LMM caches (lookup/insert/LRU with
   pins, ``TilePlan`` over the transient partition, the
   ``breakdown_for_plan_with_residency`` phase pricing and DMA byte
-  accounting of ``imax/lane.rs``).
+  accounting of ``imax/lane.rs``), including **activation broadcast
+  elision**: only shard 0 of an op charges the activation LOAD bytes
+  (``LaneSim::set_act_byte_elision`` — bytes only, cycles unchanged).
 
-Running it prints the table recorded in ``EXPERIMENTS.md`` §Shard
+The lane worker pool (``--threads > 1``) never changes these numbers —
+that is the determinism contract — so one replica backs both the
+sequential and the parallel execution mode. The ``ideal overlap``
+column (total lane cycles / slowest lane's cycles) is the upper bound
+on the parallel speedup the pool can realize on a step.
+
+Running it prints the tables recorded in ``EXPERIMENTS.md`` §Shard
 scaling and asserts the same monotonicity the bench asserts, so the
 recorded numbers and the CI smoke run measure one definition.
 """
@@ -85,6 +97,17 @@ def beats_for_dot(kind: str, k: int) -> int:
     _, elems, groups, _ = KCFG[kind]
     nb = -(-k // elems)
     return -(-nb // groups)
+
+
+def min_shard_rows(kind: str, k: int, n: int) -> int:
+    # Coordinator::min_shard_rows: the per-row work must amortize the
+    # fixed per-shard cost (3 DMA setups + per-PE REGV/RANGE/CONF) 4x.
+    pe = KCFG[kind][0]
+    fixed = 3 * DMA_SETUP + (REGV_PER_PE + RANGE_PER_PE + CONF_PER_PE) * pe
+    stream = lambda b: math.ceil(b / DMA_BPC)
+    row_cycles = (n * (beats_for_dot(kind, k) + 2)
+                  + stream(w_row_bytes(kind, k)) + stream(n * 4))
+    return -(-(4 * fixed) // max(row_cycles, 1))
 
 
 def tile_plan(capacity: int, kind: str, m: int, n: int, k: int):
@@ -202,14 +225,19 @@ def unet_ops(model: str):
     return out
 
 
-def shard_plan(m, lanes, cap, parent):
+def shard_plan(m, lanes, cap, min_rows, parent):
+    # coordinator::shard::ShardPlan::new — count = lanes clamped by the
+    # cost-model threshold, forced up by cache-budget pressure; shard i
+    # runs on lane (parent % lanes + i) % lanes.
     cap = max(cap, 1)
-    count = min(max(lanes, -(-m // cap)), m)
+    by_min = max(m // max(min_rows, 1), 1)
+    count = min(max(min(lanes, by_min), -(-m // cap)), m)
+    base_lane = parent % lanes
     base, rem = divmod(m, count)
     shards, start = [], 0
     for i in range(count):
         ln = base + (1 if i < rem else 0)
-        shards.append(dict(lane=i % lanes, start=start, rows=ln,
+        shards.append(dict(lane=(base_lane + i) % lanes, start=start, rows=ln,
                            wid=shard_wid(parent, i, count)))
         start += ln
     return shards
@@ -221,25 +249,32 @@ def cap_rows(row_bytes, budget, m):
     return budget // row_bytes
 
 
+def op_shards(model, op, lanes, budget):
+    # Coordinator::shard_geometry for one dispatch site.
+    rb = w_row_bytes(model, op["k"])
+    return shard_plan(op["m"], lanes, cap_rows(rb, budget, op["m"]),
+                      min_shard_rows(model, op["k"], op["n"]), op["wid"])
+
+
 def replay(model, lanes, lmm, cache, steps):
     ops = unet_ops(model)
     budget = min(cache, lmm // 4 * 3)
     transient = lmm - budget
     caches = [LaneCache(budget) for _ in range(lanes)]
     configured = [False] * lanes
-    # apply_plan_sharded: hottest-first (streamed bytes desc, wid asc).
+    # apply_plan_sharded: hottest-first (streamed bytes desc, wid asc);
+    # the pin pass derives the same shard geometry execution will use
+    # (threshold from the first recorded site's n).
     uses = {}
     for op in ops:
         wb = op["m"] * w_row_bytes(model, op["k"])
-        u = uses.setdefault(op["wid"], dict(wid=op["wid"], rows=op["m"],
-                                            bytes=wb, streamed=0))
+        u = uses.setdefault(op["wid"], dict(op, bytes=wb, streamed=0))
         u["streamed"] += wb
     order = sorted(uses.values(), key=lambda u: (-u["streamed"], u["wid"]))
     remaining = [budget] * lanes
     for u in order:
-        rb = u["bytes"] // u["rows"]
-        for s in shard_plan(u["rows"], lanes, cap_rows(rb, budget, u["rows"]),
-                            u["wid"]):
+        rb = u["bytes"] // u["m"]
+        for s in op_shards(model, u, lanes, budget):
             b = s["rows"] * rb
             if b <= remaining[s["lane"]]:
                 remaining[s["lane"]] -= b
@@ -249,11 +284,11 @@ def replay(model, lanes, lmm, cache, steps):
     for _ in range(steps):
         cyc = [0] * lanes
         wload = [0] * lanes
+        aload = [0] * lanes
         hits0 = [c.hits for c in caches]
         for op in ops:
             rb = w_row_bytes(model, op["k"])
-            for s in shard_plan(op["m"], lanes, cap_rows(rb, budget, op["m"]),
-                                op["wid"]):
+            for i, s in enumerate(op_shards(model, op, lanes, budget)):
                 lane, c = s["lane"], caches[s["lane"]]
                 wb = s["rows"] * rb
                 if budget > 0 and c.lookup(s["wid"], wb):
@@ -265,12 +300,17 @@ def replay(model, lanes, lmm, cache, steps):
                 plan = tile_plan(transient, model, s["rows"], op["n"], op["k"])
                 reconf = not configured[lane]
                 configured[lane] = True
-                dc, _, dw = breakdown(model, plan, reconf, residency)
+                dc, da, dw = breakdown(model, plan, reconf, residency)
                 cyc[lane] += dc
                 wload[lane] += dw
+                # Activation broadcast elision: only shard 0 charges the
+                # op's activation bytes (cycles unchanged).
+                aload[lane] += da if i == 0 else 0
         results.append(dict(max_ms=max(cyc) / CLOCK_HZ * 1e3,
                             total_cyc=sum(cyc),
+                            max_cyc=max(cyc),
                             max_wload=max(wload),
+                            act_load=sum(aload),
                             hits=sum(c.hits for c in caches) - sum(hits0)))
     return results
 
@@ -280,23 +320,47 @@ def main():
     print(f"shard_scaling replica: mini U-Net step, LMM {lmm >> 10} KiB, "
           f"cache {cache >> 10} KiB/lane\n")
     hdr = (f"{'model':6} {'lanes':>5} {'cold ms':>8} {'warm ms':>8} "
-           f"{'cold wLOAD/lane':>16} {'warm wLOAD/lane':>16} {'hits':>6}")
+           f"{'cold wLOAD/lane':>16} {'warm wLOAD/lane':>16} {'hits':>6} "
+           f"{'actLOAD B':>10} {'overlap':>8}")
     print(hdr)
     print("-" * len(hdr))
     for model in ["Q8_0", "Q3_K"]:
         total = sum(op["m"] * w_row_bytes(model, op["k"])
                     for op in unet_ops(model))
         prev_w = prev_ms = None
+        act_ref = None
         for lanes in [1, 2, 4, 8]:
             cold, warm = replay(model, lanes, lmm, cache, 2)
+            overlap = warm["total_cyc"] / warm["max_cyc"]
             print(f"{model:6} {lanes:>5} {cold['max_ms']:>8.2f} "
                   f"{warm['max_ms']:>8.2f} {cold['max_wload']:>16} "
-                  f"{warm['max_wload']:>16} {warm['hits']:>6}")
+                  f"{warm['max_wload']:>16} {warm['hits']:>6} "
+                  f"{warm['act_load']:>10} {overlap:>7.2f}x")
             if prev_w is not None:
                 assert warm["max_wload"] < prev_w, "warm wLOAD must shrink"
                 assert warm["max_ms"] < prev_ms, "warm ms must shrink"
             prev_w, prev_ms = warm["max_wload"], warm["max_ms"]
+            # Elision: the step's activation LOAD bytes are lane-count
+            # invariant (tests/shard_props.rs asserts the same per-op).
+            if act_ref is None:
+                act_ref = warm["act_load"]
+            assert warm["act_load"] == act_ref, "act bytes must not scale"
         print(f"{model:6} quantized weight set: {total} B\n")
+
+    # The shard-threshold fix in isolation: tiny TimeEmbed GEMVs stay
+    # single-lane, batched matmuls stay lanes-wide (the unit the Rust
+    # test tiny_time_embed_gemv_stays_single_lane pins).
+    print("cycle-model shard threshold (min rows/shard):")
+    for kind, k, n, label in [
+        ("Q8_0", 64, 1, "unet.temb1 GEMV"),
+        ("Q8_0", 256, 1, "emb GEMV"),
+        ("Q8_0", 256, 64, "transformer linear"),
+        ("Q8_0", 128, 64, "proj_in"),
+        ("Q3_K", 256, 1, "emb GEMV (Q3_K)"),
+        ("Q3_K", 256, 77, "attn2.k/v (Q3_K)"),
+    ]:
+        print(f"  {kind} k={k:<4} n={n:<3} -> {min_shard_rows(kind, k, n):>4}"
+              f"  ({label})")
 
 
 if __name__ == "__main__":

@@ -12,17 +12,93 @@
 //!   only its own row-tile shards and the aggregate resident bytes grow
 //!   with the lane count.
 //!
-//! All numbers are simulator-deterministic. `--smoke` shrinks the lane
-//! sweep for CI. Results are recorded in `EXPERIMENTS.md` §Shard
-//! scaling.
+//! A third section measures **host wall-clock** of the lane worker
+//! pool: the same op stream submitted asynchronously over 1 vs 4 lanes
+//! (`--threads > 1` enables the pool; shards of an op then execute
+//! concurrently on their lanes' worker threads). Multi-lane wall-clock
+//! must come in strictly below single-lane — the simulated counters are
+//! bit-identical either way, so this is pure execution overlap.
+//!
+//! The simulated numbers are deterministic; the wall-clock section is
+//! host-dependent by nature. `--smoke` shrinks the sweep for CI;
+//! `--threads N` sets the host thread count (default 4).
 
 use imax_sd::imax::ImaxConfig;
-use imax_sd::sd::plan::replay_unet_steps_sharded;
+use imax_sd::sd::plan::{replay_unet_steps_sharded_threads, ShardStepCost};
 use imax_sd::sd::QuantModel;
 use imax_sd::util::tables::Table;
 
+fn wall_clock_section(threads: usize, smoke: bool) {
+    use imax_sd::ggml::{DType, Tensor, WeightId};
+    use imax_sd::sd::backend::{ExecBackend, OpDesc, ShardedBackend};
+    use imax_sd::util::rng::Xoshiro256pp;
+
+    let (m, k, n) = (512usize, 512usize, 64usize);
+    let n_ops = if smoke { 4 } else { 8 };
+    let reps = if smoke { 1 } else { 2 };
+    let mk = |rows: usize, cols: usize, seed: u64| {
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        let mut v = vec![0.0f32; rows * cols];
+        r.fill_normal(&mut v, 0.5);
+        Tensor::f32(rows, cols, v)
+    };
+    let ws: Vec<Tensor> = (0..n_ops)
+        .map(|i| mk(m, k, 900 + i as u64).quantize(DType::Q8_0).with_wid(WeightId(900 + i as u64)))
+        .collect();
+    let xs: Vec<Tensor> = (0..n_ops).map(|i| mk(n, k, 950 + i as u64)).collect();
+
+    let mut t = Table::new(
+        &format!(
+            "Parallel wall-clock: {n_ops} x ({m}x{k} . {n}x{k}) Q8_0 stream, \
+             {threads} host threads, best of 3"
+        ),
+        &["lanes", "wall ms", "speedup"],
+    );
+    let mut wall_by_lanes = Vec::new();
+    for lanes in [1usize, 4] {
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let mut b = ShardedBackend::from_config(ImaxConfig::fpga(lanes), threads);
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                // Submit the whole wave before syncing any op: with the
+                // pool enabled the shards overlap across lane workers.
+                let handles: Vec<_> =
+                    ws.iter().zip(&xs).map(|(w, x)| b.submit(OpDesc::linear(w, x))).collect();
+                for h in handles {
+                    std::hint::black_box(b.sync(h));
+                }
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        wall_by_lanes.push((lanes, best));
+    }
+    let single = wall_by_lanes[0].1;
+    for &(lanes, s) in &wall_by_lanes {
+        t.row(&[format!("{lanes}"), format!("{:.1}", s * 1e3), format!("{:.2}x", single / s)]);
+    }
+    t.print();
+    if threads > 1 {
+        let (lanes, multi) = wall_by_lanes[1];
+        assert!(
+            multi < single,
+            "{lanes}-lane wall-clock must beat single-lane with the worker pool on \
+             ({multi:.3}s vs {single:.3}s)"
+        );
+    } else {
+        println!("(--threads 1: pool disabled, no wall-clock assertion)");
+    }
+}
+
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let threads = args
+        .iter()
+        .position(|a| a == "--threads")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4usize);
     let lane_sweep: &[usize] = if smoke { &[1, 2, 4] } else { &[1, 2, 4, 8] };
     let clock_hz = ImaxConfig::fpga(1).clock_hz;
     println!(
@@ -51,9 +127,12 @@ fn main() {
         let mut prev_warm_load: Option<u64> = None;
         let mut prev_warm_ms: Option<f64> = None;
         for &lanes in lane_sweep {
-            let steps = replay_unet_steps_sharded(model, lanes, lmm, cache, 2);
+            // `threads` only selects inline vs worker-pool execution —
+            // every simulated number below is bit-identical either way.
+            let steps =
+                replay_unet_steps_sharded_threads(model, lanes, lmm, cache, 2, threads);
             let (cold, warm) = (&steps[0], &steps[1]);
-            let max_w = |c: &imax_sd::sd::plan::ShardStepCost| {
+            let max_w = |c: &ShardStepCost| {
                 c.weight_load_per_lane.iter().max().copied().unwrap_or(0)
             };
             let ms = |cycles: u64| cycles as f64 / clock_hz * 1e3;
@@ -91,6 +170,8 @@ fn main() {
     println!(
         "\nper-lane warm weight LOAD shrinks with lanes: each lane pins only its own \
          row-tile shards, so aggregate residency scales with the lane count \
-         (the cache as a bandwidth lever, not just a latency lever)."
+         (the cache as a bandwidth lever, not just a latency lever).\n"
     );
+
+    wall_clock_section(threads, smoke);
 }

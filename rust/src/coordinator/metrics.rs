@@ -46,7 +46,69 @@ pub struct CoordinatorMetrics {
     pub cache_insert_failures: AtomicU64,
 }
 
+/// Point-in-time copy of every [`CoordinatorMetrics`] counter.
+///
+/// Unlike the live struct (whose fields are atomics and therefore not
+/// comparable), a snapshot derives `PartialEq`/`Eq`, so determinism
+/// tests can assert that a parallel run produced *exactly* the same
+/// counters as a sequential one:
+///
+/// ```rust
+/// use imax_sd::coordinator::metrics::CoordinatorMetrics;
+///
+/// let a = CoordinatorMetrics::default();
+/// let b = CoordinatorMetrics::default();
+/// a.record_offload(100, 42);
+/// b.record_offload(100, 42);
+/// assert_eq!(a.snapshot(), b.snapshot());
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub host_jobs: u64,
+    pub offloaded_jobs: u64,
+    pub offloaded_macs: u64,
+    pub host_macs: u64,
+    pub imax_cycles: u64,
+    pub batched_submissions: u64,
+    pub coalesced_jobs: u64,
+    pub sharded_ops: u64,
+    pub shard_submissions: u64,
+    pub affinity_hits: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_hit_bytes: u64,
+    pub cache_miss_bytes: u64,
+    pub cache_evicted_bytes: u64,
+    pub cache_insert_failures: u64,
+}
+
 impl CoordinatorMetrics {
+    /// Capture every counter into a comparable [`MetricsSnapshot`].
+    ///
+    /// Loads are relaxed and non-atomic as a set: call this only when no
+    /// submissions are in flight (e.g. after `sync`ing every handle).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            host_jobs: ld(&self.host_jobs),
+            offloaded_jobs: ld(&self.offloaded_jobs),
+            offloaded_macs: ld(&self.offloaded_macs),
+            host_macs: ld(&self.host_macs),
+            imax_cycles: ld(&self.imax_cycles),
+            batched_submissions: ld(&self.batched_submissions),
+            coalesced_jobs: ld(&self.coalesced_jobs),
+            sharded_ops: ld(&self.sharded_ops),
+            shard_submissions: ld(&self.shard_submissions),
+            affinity_hits: ld(&self.affinity_hits),
+            cache_hits: ld(&self.cache_hits),
+            cache_misses: ld(&self.cache_misses),
+            cache_hit_bytes: ld(&self.cache_hit_bytes),
+            cache_miss_bytes: ld(&self.cache_miss_bytes),
+            cache_evicted_bytes: ld(&self.cache_evicted_bytes),
+            cache_insert_failures: ld(&self.cache_insert_failures),
+        }
+    }
+
     /// Offload ratio by MACs in `[0, 1]`.
     pub fn offload_ratio(&self) -> f64 {
         let off = self.offloaded_macs.load(Ordering::Relaxed) as f64;
@@ -151,6 +213,19 @@ mod tests {
         assert_eq!(m.cache_evicted_bytes.load(Ordering::Relaxed), 50);
         assert_eq!(m.cache_insert_failures.load(Ordering::Relaxed), 2);
         assert!((m.cache_hit_rate() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_compares_equal_iff_counters_match() {
+        let a = CoordinatorMetrics::default();
+        let b = CoordinatorMetrics::default();
+        a.record_offload(100, 42);
+        a.record_sharded(4);
+        b.record_offload(100, 42);
+        b.record_sharded(4);
+        assert_eq!(a.snapshot(), b.snapshot());
+        b.record_host(1);
+        assert_ne!(a.snapshot(), b.snapshot());
     }
 
     #[test]

@@ -13,7 +13,7 @@ pub mod offload;
 pub mod scheduler;
 pub mod shard;
 
-pub use metrics::CoordinatorMetrics;
+pub use metrics::{CoordinatorMetrics, MetricsSnapshot};
 pub use offload::OffloadPolicy;
-pub use scheduler::{Coordinator, MatMulJob, ShapeKey, ShardedRun};
+pub use scheduler::{Coordinator, MatMulJob, PendingSharded, ShapeKey, ShardedRun};
 pub use shard::{shard_wid, RowShard, ShardPlan};

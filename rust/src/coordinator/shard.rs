@@ -57,7 +57,8 @@ impl RowShard {
 pub struct ShardPlan {
     /// Total weight rows partitioned.
     pub m: usize,
-    /// Shards in ascending row order (lane = index % lanes).
+    /// Shards in ascending row order (lane = (base + index) % lanes, with
+    /// the base rotated by the parent weight id).
     pub shards: Vec<RowShard>,
 }
 
@@ -77,17 +78,41 @@ impl ShardPlan {
     }
 
     /// Partition `m` rows over `lanes` lanes with at most `cap_rows` rows
-    /// per shard. The shard count is `max(lanes, ceil(m / cap_rows))`
-    /// (clamped to `m`), sizes are balanced to within one row, and shard
-    /// `i` runs on lane `i % lanes`; shard ids derive from `parent` via
-    /// [`shard_wid`]. With one shard the parent id is used unchanged, so
-    /// single-lane sharded execution is cache-compatible with unsharded
-    /// execution.
-    pub fn new(m: usize, lanes: usize, cap_rows: usize, parent: Option<WeightId>) -> ShardPlan {
+    /// per shard and at least `min_rows` rows per shard where the
+    /// lane-count split would go finer than that.
+    ///
+    /// The shard count is `min(lanes, max(1, m / min_rows))` widened to
+    /// `ceil(m / cap_rows)` under cache-budget pressure and clamped to
+    /// `m`. `min_rows` is the cycle-model amortization threshold (see
+    /// [`crate::coordinator::Coordinator::min_shard_rows`]): a shard that
+    /// would carry fewer rows than the per-shard fixed cost (DMA setup +
+    /// REGV/RANGE/CONF) can pay for is not worth a lane, so tiny ops —
+    /// the `TimeEmbed` GEMVs — stay on a single lane instead of
+    /// splitting lanes-wide for negligible LOAD savings. `min_rows == 1`
+    /// disables the threshold and reproduces the plain lanes-way split.
+    /// The cache cap deliberately wins over the threshold: a weight that
+    /// must fragment to stay cacheable still fragments.
+    ///
+    /// Sizes are balanced to within one row and shard `i` runs on lane
+    /// `(base + i) % lanes`, where `base` is derived from `parent`
+    /// (anonymous weights use base 0) — so single-shard ops of different
+    /// weights land on *different* lanes instead of all piling onto lane
+    /// 0. Shard ids derive from `parent` via [`shard_wid`]; with one
+    /// shard the parent id is used unchanged, so single-lane sharded
+    /// execution is cache-compatible with unsharded execution.
+    pub fn new(
+        m: usize,
+        lanes: usize,
+        cap_rows: usize,
+        min_rows: usize,
+        parent: Option<WeightId>,
+    ) -> ShardPlan {
         assert!(m > 0, "cannot shard an empty weight");
         assert!(lanes > 0, "cannot shard over zero lanes");
         let cap = cap_rows.max(1);
-        let count = lanes.max(m.div_ceil(cap)).min(m);
+        let by_min = (m / min_rows.max(1)).max(1);
+        let count = lanes.min(by_min).max(m.div_ceil(cap)).min(m);
+        let lane_base = parent.map(|p| (p.0 % lanes as u64) as usize).unwrap_or(0);
         let (base, rem) = (m / count, m % count);
         let mut shards = Vec::with_capacity(count);
         let mut start = 0;
@@ -96,7 +121,7 @@ impl ShardPlan {
             let rows = start..start + len;
             start += len;
             shards.push(RowShard {
-                lane: i % lanes,
+                lane: (lane_base + i) % lanes,
                 rows,
                 wid: parent.map(|p| shard_wid(p, i, count)),
             });
@@ -155,7 +180,7 @@ mod tests {
 
     #[test]
     fn balanced_split_over_lanes() {
-        let p = ShardPlan::new(10, 4, usize::MAX, None);
+        let p = ShardPlan::new(10, 4, usize::MAX, 1, None);
         assert_partition(&p);
         assert_eq!(p.len(), 4);
         let sizes: Vec<_> = p.shards.iter().map(RowShard::len).collect();
@@ -168,7 +193,7 @@ mod tests {
 
     #[test]
     fn fewer_rows_than_lanes_caps_shard_count() {
-        let p = ShardPlan::new(3, 8, usize::MAX, None);
+        let p = ShardPlan::new(3, 8, usize::MAX, 1, None);
         assert_partition(&p);
         assert_eq!(p.len(), 3, "no empty shards");
     }
@@ -176,17 +201,61 @@ mod tests {
     #[test]
     fn cache_cap_splits_finer_and_respects_budget() {
         // 100 rows of 10 B over 2 lanes with a 200 B budget: cap is 20
-        // rows, so 5 shards of ≤ 20 rows dealt round-robin.
+        // rows, so 5 shards of ≤ 20 rows dealt round-robin starting from
+        // the parent-rotated base lane (7 % 2 = 1).
         let cap = ShardPlan::cap_rows(10, 200, 100);
         assert_eq!(cap, 20);
-        let p = ShardPlan::new(100, 2, cap, Some(WeightId(7)));
+        let p = ShardPlan::new(100, 2, cap, 1, Some(WeightId(7)));
         assert_partition(&p);
         assert_eq!(p.len(), 5);
         assert!(p.max_rows() <= cap);
         assert_eq!(
             p.shards.iter().map(|s| s.lane).collect::<Vec<_>>(),
-            vec![0, 1, 0, 1, 0]
+            vec![1, 0, 1, 0, 1]
         );
+    }
+
+    #[test]
+    fn min_rows_threshold_keeps_tiny_ops_on_one_lane() {
+        // A 256-row GEMV whose cycle-model threshold says shards below
+        // 140 rows cannot amortize their fixed cost: one shard, not 8.
+        let p = ShardPlan::new(256, 8, usize::MAX, 140, Some(WeightId(3)));
+        assert_partition(&p);
+        assert_eq!(p.len(), 1, "tiny GEMV stays single-lane");
+        assert_eq!(p.shards[0].wid, Some(WeightId(3)), "single shard keeps the parent id");
+        // Headroom for exactly three threshold-sized shards: split three ways.
+        let p = ShardPlan::new(256, 8, usize::MAX, 80, None);
+        assert_partition(&p);
+        assert_eq!(p.len(), 3);
+        // min_rows == 1 reproduces the plain lanes-way split.
+        let p = ShardPlan::new(256, 8, usize::MAX, 1, None);
+        assert_eq!(p.len(), 8);
+    }
+
+    #[test]
+    fn cache_cap_wins_over_min_rows_threshold() {
+        // The budget forces ≤ 16-row shards even though the threshold
+        // alone would keep the op whole: cacheability beats amortization.
+        let p = ShardPlan::new(64, 2, 16, 999, Some(WeightId(1)));
+        assert_partition(&p);
+        assert_eq!(p.len(), 4);
+        assert!(p.max_rows() <= 16);
+    }
+
+    #[test]
+    fn base_lane_rotates_with_parent_id() {
+        // Single-shard ops of different weights spread over the lanes
+        // instead of all landing on lane 0.
+        for lanes in [2usize, 4, 8] {
+            for wid in 0..32u64 {
+                let p = ShardPlan::new(16, lanes, usize::MAX, 999, Some(WeightId(wid)));
+                assert_eq!(p.len(), 1);
+                assert_eq!(p.shards[0].lane, (wid % lanes as u64) as usize);
+            }
+        }
+        // Anonymous weights keep base 0.
+        let p = ShardPlan::new(16, 4, usize::MAX, 999, None);
+        assert_eq!(p.shards[0].lane, 0);
     }
 
     #[test]
@@ -213,11 +282,11 @@ mod tests {
     #[test]
     fn plan_ids_match_independent_derivation() {
         let parent = WeightId(42);
-        let p = ShardPlan::new(64, 4, 16, Some(parent));
+        let p = ShardPlan::new(64, 4, 16, 1, Some(parent));
         for (i, s) in p.shards.iter().enumerate() {
             assert_eq!(s.wid, Some(shard_wid(parent, i, p.len())));
         }
-        let anon = ShardPlan::new(64, 4, 16, None);
+        let anon = ShardPlan::new(64, 4, 16, 1, None);
         assert!(anon.shards.iter().all(|s| s.wid.is_none()));
     }
 }

@@ -211,6 +211,8 @@ pub struct LaneSim {
     pub dma: DmaStats,
     /// Cumulative phase breakdown across all offloads on this lane.
     pub total: PhaseBreakdown,
+    /// Activation broadcast elision (see [`LaneSim::set_act_byte_elision`]).
+    elide_act_bytes: bool,
 }
 
 impl LaneSim {
@@ -220,12 +222,33 @@ impl LaneSim {
     pub fn new(imax: ImaxConfig) -> LaneSim {
         let mut lmm = Lmm::new(imax.lmm_bytes);
         lmm.set_cache_budget(imax.weight_cache_bytes.min(imax.lmm_bytes / 4 * 3));
-        LaneSim { imax, configured: None, lmm, dma: DmaStats::default(), total: PhaseBreakdown::default() }
+        LaneSim {
+            imax,
+            configured: None,
+            lmm,
+            dma: DmaStats::default(),
+            total: PhaseBreakdown::default(),
+            elide_act_bytes: false,
+        }
     }
 
     /// Whether the next `kind` kernel needs a CONF phase.
     pub fn needs_conf(&self, kind: KernelKind) -> bool {
         self.configured != Some(kind)
+    }
+
+    /// Activation **broadcast elision** for the sharded path: every shard
+    /// of one op streams the *same* activation tiles, so the coordinator
+    /// models the replicated streams as one coherent DDR-side broadcast —
+    /// the op's activation bytes are charged once (on the shard that has
+    /// this flag off) and elided on the remaining shards. Only the DMA
+    /// *byte* ledgers are gated; transfer cycles are unchanged (each
+    /// lane's DMA window is still occupied for the tile's duration), so
+    /// phase breakdowns and outputs stay bit-identical with the flag in
+    /// either state. Defaults to off; the coordinator toggles it around
+    /// each non-primary shard while holding the lane lock.
+    pub fn set_act_byte_elision(&mut self, elide: bool) {
+        self.elide_act_bytes = elide;
     }
 
     /// Pin a weight: once resident it is never LRU-evicted. Called by
@@ -439,7 +462,9 @@ impl LaneSim {
                 .lmm
                 .alloc((at1 - at0) * plan.a_row_bytes, "acts")
                 .expect("plan guarantees the activation tile fits");
-            self.lmm.record_load(a_region);
+            if !self.elide_act_bytes {
+                self.lmm.record_load(a_region);
+            }
             let mut wt0 = 0;
             while wt0 < plan.m {
                 let wt1 = (wt0 + plan.w_tile).min(plan.m);
@@ -480,11 +505,14 @@ impl LaneSim {
     ) {
         self.configured = Some(kind);
         self.total += bd;
-        let load_bytes = match residency {
+        let mut load_bytes = match residency {
             WeightResidency::Streamed => plan.load_bytes(),
             WeightResidency::Inserted => plan.act_load_bytes() + plan.weight_bytes(),
             WeightResidency::Resident => plan.act_load_bytes(),
         };
+        if self.elide_act_bytes {
+            load_bytes -= plan.act_load_bytes();
+        }
         self.dma.record_load(load_bytes);
         self.dma.record_drain(plan.drain_bytes());
     }
@@ -646,6 +674,47 @@ mod tests {
         lane.mul_mat_q8_0(&w_blocks, m, &acts, n, k).unwrap();
         assert_eq!(lane.lmm.loaded_bytes, plan.load_bytes());
         assert_eq!(lane.lmm.drained_bytes, plan.drain_bytes());
+    }
+
+    #[test]
+    fn act_byte_elision_gates_bytes_not_cycles_or_output() {
+        let imax = ImaxConfig::fpga(1);
+        let (m, n, k) = (6, 4, 256);
+        let wt = random_tensor(m, k, 31);
+        let xt = random_tensor(n, k, 32);
+        let w_blocks: Vec<_> = (0..m).flat_map(|r| q8_0::quantize_row(wt.row_f32(r))).collect();
+        let acts: Vec<_> = (0..n).flat_map(|r| q8_0::quantize_row(xt.row_f32(r))).collect();
+
+        let mut plain = LaneSim::new(imax.clone());
+        let (want, bd_plain) = plain.mul_mat_q8_0(&w_blocks, m, &acts, n, k).unwrap();
+
+        let mut elided = LaneSim::new(imax);
+        elided.set_act_byte_elision(true);
+        let (out, bd) = elided.mul_mat_q8_0(&w_blocks, m, &acts, n, k).unwrap();
+        elided.set_act_byte_elision(false);
+
+        for (a, b) in out.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "elision never touches numerics");
+        }
+        assert_eq!(bd, bd_plain, "elision never touches cycles");
+        let plan = TilePlan::with_capacity(
+            elided.imax.lmm_bytes - elided.lmm.cache_budget(),
+            KernelKind::Q8_0,
+            m,
+            n,
+            k,
+        )
+        .unwrap();
+        assert_eq!(
+            plain.lmm.loaded_bytes - elided.lmm.loaded_bytes,
+            plan.act_load_bytes(),
+            "exactly the activation bytes are elided"
+        );
+        assert_eq!(
+            plain.dma.load_bytes - elided.dma.load_bytes,
+            plan.act_load_bytes(),
+            "the DMA ledger agrees"
+        );
     }
 
     #[test]

@@ -34,12 +34,31 @@
 //! | `ImaxEngine::new(cfg, t)`        | `ImaxBackend::new(cfg, t)`                   |
 //! | (not expressible)                | `ShardedBackend` / `Backend::Sharded`        |
 //!
-//! Backends execute `submit` synchronously today (the simulator is
-//! sequential), parking the result until `sync` — the split is the API
-//! contract that lets a future scheduler overlap marshalling, DMA and
-//! EXEC without touching any caller.
+//! # Asynchronous submission
+//!
+//! On [`ShardedBackend`] the `submit`/`sync` split is a real concurrency
+//! boundary: a shardable op is split into row-tile shards that are
+//! enqueued onto their owning lanes' worker threads (one worker per
+//! simulated lane — [`crate::util::pool::LanePool`]) and `submit`
+//! returns its handle **immediately**; `sync` blocks on the per-shard
+//! completion slots, stitches the output column-wise, and merges
+//! per-lane counters in shard order. Shards of one op run concurrently,
+//! and independent ops submitted back-to-back — the Q/K/V projections in
+//! `sd/unet.rs`/`sd/text.rs`, merged rendezvous submissions in
+//! `serve/batcher.rs` — overlap across lanes before any of them is
+//! synced. Outputs and all simulated cycle/byte counters are
+//! bit-identical to the sequential path regardless of thread
+//! interleaving (per-lane queues are FIFO in submission order, and
+//! counters merge at `sync` in deterministic shard order) — see the
+//! "Concurrency model" chapter in `DESIGN.md` for the full argument.
+//!
+//! [`HostBackend`] and [`ImaxBackend`] still execute eagerly inside
+//! `submit`, parking the result until `sync`. The trait contract is
+//! identical either way: every handle must be synced exactly once, and
+//! callers that want overlap simply submit independent ops before
+//! syncing any of them.
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, PendingSharded};
 use crate::ggml::{self, DType, Tensor, WeightId};
 use crate::imax::lane::LaneSim;
 use crate::imax::lmm::CacheStats;
@@ -207,6 +226,17 @@ impl Completions {
         h
     }
 
+    /// Mint a handle with **no parked result** — for backends whose op
+    /// is still in flight at submit time ([`ShardedBackend`] tracks the
+    /// pending shards keyed by this handle and joins them on `sync`).
+    /// Calling [`Completions::take`] on a deferred handle that was never
+    /// completed panics, same as a double-sync.
+    pub fn defer(&mut self) -> OpHandle {
+        let h = OpHandle(self.next);
+        self.next += 1;
+        h
+    }
+
     /// Redeem a handle (panics on double-sync or a foreign handle).
     pub fn take(&mut self, h: OpHandle) -> Tensor {
         self.ready
@@ -264,9 +294,53 @@ impl EngineStats {
 pub trait ExecBackend {
     /// Submit one op; the returned handle is redeemed with
     /// [`ExecBackend::sync`].
+    ///
+    /// On [`ShardedBackend`] with worker threads enabled this returns
+    /// **before** the op has executed — its shards are enqueued on their
+    /// lanes' worker threads — so independent ops can be submitted
+    /// back-to-back and overlap across lanes:
+    ///
+    /// ```rust
+    /// use imax_sd::ggml::{DType, Tensor, WeightId};
+    /// use imax_sd::imax::ImaxConfig;
+    /// use imax_sd::sd::backend::{ExecBackend, OpDesc, ShardedBackend};
+    ///
+    /// let wq = Tensor::f32(8, 64, vec![0.5; 512]).quantize(DType::Q8_0).with_wid(WeightId(1));
+    /// let wk = Tensor::f32(8, 64, vec![0.25; 512]).quantize(DType::Q8_0).with_wid(WeightId(2));
+    /// let x = Tensor::f32(2, 64, vec![0.125; 128]);
+    ///
+    /// // 2 lanes, 2 host threads => lane worker pool enabled.
+    /// let mut b = ShardedBackend::from_config(ImaxConfig::fpga(2), 2);
+    /// let hq = b.submit(OpDesc::linear(&wq, &x)); // enqueued, returns immediately
+    /// let hk = b.submit(OpDesc::linear(&wk, &x)); // overlaps with the first op
+    /// let (q, k) = (b.sync(hq), b.sync(hk));      // blocks, stitches, merges counters
+    /// assert_eq!((q.rows, q.cols), (2, 8));
+    /// assert_eq!((k.rows, k.cols), (2, 8));
+    /// ```
     fn submit(&mut self, op: OpDesc<'_>) -> OpHandle;
 
     /// Block until a submitted op's output is ready and take it.
+    ///
+    /// Each handle must be synced exactly once; double-sync (or a
+    /// foreign handle) panics. Sync order is free — any order of syncing
+    /// outstanding handles yields bit-identical tensors and counters:
+    ///
+    /// ```rust
+    /// use imax_sd::ggml::{DType, Tensor, WeightId};
+    /// use imax_sd::imax::ImaxConfig;
+    /// use imax_sd::sd::backend::{ExecBackend, OpDesc, ShardedBackend};
+    ///
+    /// let w = Tensor::f32(4, 64, vec![0.5; 256]).quantize(DType::Q8_0).with_wid(WeightId(7));
+    /// let x = Tensor::f32(1, 64, vec![0.25; 64]);
+    /// let mut b = ShardedBackend::from_config(ImaxConfig::fpga(2), 2);
+    /// let h1 = b.submit(OpDesc::linear(&w, &x));
+    /// let h2 = b.submit(OpDesc::linear(&w, &x));
+    /// let out2 = b.sync(h2); // syncing out of submission order is fine
+    /// let out1 = b.sync(h1);
+    /// for (a, b) in out1.as_f32().iter().zip(out2.as_f32()) {
+    ///     assert_eq!(a.to_bits(), b.to_bits());
+    /// }
+    /// ```
     fn sync(&mut self, h: OpHandle) -> Tensor;
 
     /// Submit + sync in one call — the synchronous sugar every graph-
@@ -501,11 +575,19 @@ impl ExecBackend for ImaxBackend {
 /// hold `L×` the aggregate resident weight bytes, so the warm-step
 /// weight LOAD per lane *shrinks* as lanes are added instead of every
 /// lane re-streaming the full matrix.
+///
+/// With worker threads enabled (`host_threads > 1`), `submit` enqueues
+/// the op's shards on their lanes' worker threads and returns
+/// immediately; the pending shards are held in `inflight` keyed by the
+/// deferred handle until `sync` joins them. With a single host thread
+/// every shard runs inline during `submit` — same code path, same
+/// counters, no threads.
 pub struct ShardedBackend {
     coordinator: Arc<Coordinator>,
     request: RequestId,
     stats: EngineStats,
     done: Completions,
+    inflight: std::collections::HashMap<u64, PendingSharded>,
     plan: PlanCheck,
 }
 
@@ -517,6 +599,7 @@ impl ShardedBackend {
             request: RequestId::SOLO,
             stats: EngineStats::default(),
             done: Completions::default(),
+            inflight: std::collections::HashMap::new(),
             plan: PlanCheck::default(),
         }
     }
@@ -557,22 +640,33 @@ impl ExecBackend for ShardedBackend {
         if self.plan.diverges(&op) {
             self.stats.plan_divergences += 1;
         }
-        let out = if self.coordinator.shardable(&op) {
-            let run = self.coordinator.submit_sharded(&op);
+        let h = if self.coordinator.shardable(&op) {
+            // Async path: fan the shards out to their lanes' worker
+            // queues (or run them inline when the pool is disabled) and
+            // defer the handle; `sync` joins and stitches.
+            let pending = self.coordinator.start_sharded(&op);
             self.stats.offloaded_calls += 1;
-            self.stats.lane_submissions += run.shards as u64;
-            self.stats.imax_phases += run.phases;
-            self.stats.cache += run.cache;
-            run.out
+            self.stats.lane_submissions += pending.shards() as u64;
+            let h = self.done.defer();
+            self.inflight.insert(h.0, pending);
+            h
         } else {
-            self.coordinator.submit_op(&op)
+            self.done.complete(self.coordinator.submit_op(&op))
         };
         self.stats.record(request, op.w.dtype(), macs, t0.elapsed().as_secs_f64());
-        self.done.complete(out)
+        h
     }
 
     fn sync(&mut self, h: OpHandle) -> Tensor {
-        self.done.take(h)
+        match self.inflight.remove(&h.0) {
+            Some(pending) => {
+                let run = self.coordinator.join_sharded(pending);
+                self.stats.imax_phases += run.phases;
+                self.stats.cache += run.cache;
+                run.out
+            }
+            None => self.done.take(h),
+        }
     }
 
     fn stats(&self) -> &EngineStats {
@@ -707,6 +801,9 @@ mod tests {
         let want = host.submit_now(OpDesc::linear(&w, &x));
         for lanes in [1usize, 2, 4] {
             let mut b = ShardedBackend::from_config(ImaxConfig::fpga(lanes), 2);
+            // The test asserts one shard per lane; disable the cost-model
+            // threshold that would keep a 13-row op on a single lane.
+            b.coordinator().set_min_shard_rows(1);
             let got = b.submit_now(OpDesc::linear(&w, &x));
             assert_eq!((got.rows, got.cols), (3, 13));
             for (p, q) in got.as_f32().iter().zip(want.as_f32()) {
@@ -737,6 +834,7 @@ mod tests {
         let w = rnd(16, 128, 19).quantize(DType::Q8_0).with_wid(WeightId(33));
         let x = rnd(2, 128, 20);
         let mut b = ShardedBackend::from_config(ImaxConfig::fpga(4), 2);
+        b.coordinator().set_min_shard_rows(1); // force one shard per lane
         b.submit_now(OpDesc::linear(&w, &x));
         assert_eq!(b.stats().cache.misses, 4, "one cold miss per lane shard");
         b.submit_now(OpDesc::linear(&w, &x));
@@ -757,12 +855,41 @@ mod tests {
         let plan = rec.finish();
 
         let mut b = ShardedBackend::from_config(ImaxConfig::fpga(2), 2);
+        b.coordinator().set_min_shard_rows(1); // pin + exec one shard per lane
         b.apply_plan(&plan);
         b.submit_now(OpDesc::linear(&w, &x)); // matches site 0
         assert_eq!(b.stats().plan_divergences, 0);
         b.submit_now(OpDesc::linear(&w, &x)); // site 1 expects TimeEmbed
         assert_eq!(b.stats().plan_divergences, 1, "kind mismatch is a divergence");
         assert_eq!(b.stats().cache.hits, 2, "warm shards hit the pre-pinned ids");
+    }
+
+    #[test]
+    fn sharded_backend_syncs_overlapped_submissions_in_any_order() {
+        let wq = rnd(8, 128, 25).quantize(DType::Q8_0).with_wid(WeightId(51));
+        let wk = rnd(8, 128, 26).quantize(DType::Q8_0).with_wid(WeightId(52));
+        let x = rnd(2, 128, 27);
+        let mut host = HostBackend::new(1);
+        let want_q = host.submit_now(OpDesc::linear(&wq, &x));
+        let want_k = host.submit_now(OpDesc::linear(&wk, &x));
+        // threads=1 runs shards inline at submit; threads=2 enqueues
+        // them on lane workers. Same results, same counters.
+        for threads in [1usize, 2] {
+            let mut b = ShardedBackend::from_config(ImaxConfig::fpga(2), threads);
+            b.coordinator().set_min_shard_rows(1);
+            let hq = b.submit(OpDesc::linear(&wq, &x));
+            let hk = b.submit(OpDesc::linear(&wk, &x));
+            let k = b.sync(hk); // reverse of submission order
+            let q = b.sync(hq);
+            for (p, want) in q.as_f32().iter().zip(want_q.as_f32()) {
+                assert_eq!(p.to_bits(), want.to_bits());
+            }
+            for (p, want) in k.as_f32().iter().zip(want_k.as_f32()) {
+                assert_eq!(p.to_bits(), want.to_bits());
+            }
+            assert_eq!(b.stats().offloaded_calls, 2);
+            assert_eq!(b.stats().lane_submissions, 4, "two shards per op");
+        }
     }
 
     #[test]

@@ -10,6 +10,19 @@
 //! `ConvIm2col{k,stride}`, [`attention`] submits `AttnScores` /
 //! `AttnValues`, and the model code submits `Linear` / `TimeEmbed`
 //! directly.
+//!
+//! # Independent graph edges
+//!
+//! The graph's only declared-independent edges — ops submitted
+//! before any of them is synced, so a parallel backend overlaps them —
+//! are the Q/K/V projection triples in `sd/unet.rs` (self- and
+//! cross-attention) and `sd/text.rs` (per encoder layer). Everything in
+//! *this* module stays sequential on purpose: inside [`attention`] the
+//! score → softmax → value chain is data-dependent (each op consumes the
+//! previous op's output), and [`conv2d`]'s im2col GEMM is a single op.
+//! The submission *order* of every op is part of the compiled-plan
+//! contract (`tests` pin it), so overlap never reorders submissions —
+//! only their completion waits.
 
 use crate::ggml::Tensor;
 

@@ -76,6 +76,14 @@ pub struct WeightUse {
     pub rows: usize,
     /// Contraction length (per-row byte geometry).
     pub k: usize,
+    /// Activation rows at the first recorded site — the `n` the shard
+    /// threshold (see
+    /// [`crate::coordinator::Coordinator::min_shard_rows`]) amortizes
+    /// per-shard fixed cost against. Serving may widen `n` at dispatch
+    /// time; the pin pass using the recorded value is conservative
+    /// (a wider `n` only makes sharding *more* worthwhile, and pins are
+    /// an optimization, not a correctness input).
+    pub n: usize,
     /// Serialized bytes (cache footprint).
     pub bytes: usize,
     /// Times the plan dispatches it.
@@ -116,6 +124,7 @@ impl OpPlan {
                         dtype: site.dtype,
                         rows: site.m,
                         k: site.k,
+                        n: site.n,
                         bytes: site.weight_bytes,
                         uses: 1,
                         streamed_bytes: site.weight_bytes as u64,
@@ -384,6 +393,23 @@ pub fn replay_unet_steps_sharded(
     cache_bytes: usize,
     steps: usize,
 ) -> Vec<ShardStepCost> {
+    replay_unet_steps_sharded_threads(model, lanes, lmm_bytes, cache_bytes, steps, 2)
+}
+
+/// [`replay_unet_steps_sharded`] with an explicit `host_threads` knob:
+/// `threads <= 1` keeps every shard inline on the coordinator thread,
+/// `threads > 1` enables the lane worker pool. Simulated counters are
+/// bit-identical either way (the determinism contract of
+/// [`crate::coordinator::Coordinator::submit_sharded`]); only host
+/// wall-clock differs, which is what `benches/shard_scaling.rs` measures.
+pub fn replay_unet_steps_sharded_threads(
+    model: crate::sd::trace::QuantModel,
+    lanes: usize,
+    lmm_bytes: usize,
+    cache_bytes: usize,
+    steps: usize,
+    threads: usize,
+) -> Vec<ShardStepCost> {
     use crate::imax::ImaxConfig;
     use crate::sd::backend::ShardedBackend;
 
@@ -391,7 +417,7 @@ pub fn replay_unet_steps_sharded(
     let mut imax = ImaxConfig::fpga(lanes);
     imax.lmm_bytes = lmm_bytes;
     imax.weight_cache_bytes = cache_bytes;
-    let mut eng = ShardedBackend::from_config(imax, 2);
+    let mut eng = ShardedBackend::from_config(imax, threads);
 
     (0..steps)
         .map(|_| {

@@ -95,11 +95,14 @@ impl TextEncoder {
         }
         let mut h = Tensor::f32(CTX_LEN, DIM, x);
         for l in &self.layers {
-            // Pre-LN self-attention with residual.
+            // Pre-LN self-attention with residual. Q/K/V all read the
+            // normed tokens and nothing else — submit the three before
+            // syncing any so a parallel backend overlaps them.
             let n = layer_norm(&h, &l.ln1.0, &l.ln1.1);
-            let q = eng.submit_now(OpDesc::linear(&l.wq, &n));
-            let k = eng.submit_now(OpDesc::linear(&l.wk, &n));
-            let v = eng.submit_now(OpDesc::linear(&l.wv, &n));
+            let hq = eng.submit(OpDesc::linear(&l.wq, &n));
+            let hk = eng.submit(OpDesc::linear(&l.wk, &n));
+            let hv = eng.submit(OpDesc::linear(&l.wv, &n));
+            let (q, k, v) = (eng.sync(hq), eng.sync(hk), eng.sync(hv));
             let a = attention(eng, &q, &k, &v, HEADS);
             let o = eng.submit_now(OpDesc::linear(&l.wo, &a));
             let mut hd = h.as_f32().to_vec();

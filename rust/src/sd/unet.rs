@@ -140,18 +140,23 @@ impl Transformer {
         let mut h = eng.submit_now(OpDesc::linear(&self.proj_in, &toks)); // [hw, TD]
         add_bias(&mut h, &self.proj_in_b);
 
-        // Self-attention + residual.
-        let q = eng.submit_now(OpDesc::linear(&self.wq, &h));
-        let k = eng.submit_now(OpDesc::linear(&self.wk, &h));
-        let v = eng.submit_now(OpDesc::linear(&self.wv, &h));
+        // Self-attention + residual. Q/K/V are independent (all read
+        // `h`), so submit all three before syncing any — on a parallel
+        // backend they overlap across lanes.
+        let hq = eng.submit(OpDesc::linear(&self.wq, &h));
+        let hk = eng.submit(OpDesc::linear(&self.wk, &h));
+        let hv = eng.submit(OpDesc::linear(&self.wv, &h));
+        let (q, k, v) = (eng.sync(hq), eng.sync(hk), eng.sync(hv));
         let a = attention(eng, &q, &k, &v, HEADS);
         let o = eng.submit_now(OpDesc::linear(&self.wo, &a));
         h = add_t(&h, &o);
 
-        // Cross-attention to the text context + residual.
-        let q = eng.submit_now(OpDesc::linear(&self.xq, &h));
-        let k = eng.submit_now(OpDesc::linear(&self.xk, ctx));
-        let v = eng.submit_now(OpDesc::linear(&self.xv, ctx));
+        // Cross-attention to the text context + residual. Same overlap:
+        // Q reads `h`, K/V read `ctx`; no dependency between them.
+        let hq = eng.submit(OpDesc::linear(&self.xq, &h));
+        let hk = eng.submit(OpDesc::linear(&self.xk, ctx));
+        let hv = eng.submit(OpDesc::linear(&self.xv, ctx));
+        let (q, k, v) = (eng.sync(hq), eng.sync(hk), eng.sync(hv));
         let a = attention(eng, &q, &k, &v, HEADS);
         let o = eng.submit_now(OpDesc::linear(&self.xo, &a));
         h = add_t(&h, &o);

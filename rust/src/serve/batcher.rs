@@ -12,7 +12,13 @@
 //! waiters. In sharded mode the merged submission itself row-tile-shards
 //! across the lanes ([`crate::coordinator::Coordinator::submit_sharded`])
 //! — batching amortizes per-op overheads *across requests* while
-//! sharding splits the op *across lanes*; the two compose.
+//! sharding splits the op *across lanes*; the two compose. When the
+//! coordinator's lane worker pool is enabled (`host_threads > 1`), the
+//! merged submission's shards run **concurrently** on their lanes'
+//! worker threads, so one rendezvous occupies all lanes at once instead
+//! of visiting them in sequence — outputs and counters stay
+//! bit-identical either way (see the "Concurrency model" chapter in
+//! `DESIGN.md`).
 //!
 //! Attention score/value ops declare [`OpKind::per_request_operands`]
 //! (F32, per-request tensors, so there is nothing shared to batch):
@@ -350,6 +356,9 @@ mod tests {
         let xs: Vec<Tensor> = (0..2).map(|i| rnd(2, 128, 60 + i as u64)).collect();
         let run = |sharded: bool| {
             let coord = coordinator(2);
+            // The assertions below want the 8-row merged op split across
+            // both lanes; disable the cost-model shard threshold.
+            coord.set_min_shard_rows(1);
             let shared = SharedBatch::new(2, Arc::clone(&coord), sharded);
             let outs: Vec<Tensor> = std::thread::scope(|scope| {
                 let handles: Vec<_> = xs

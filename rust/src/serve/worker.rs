@@ -17,7 +17,11 @@ use std::sync::{Arc, Mutex};
 pub struct ServeConfig {
     /// IMAX lanes behind the coordinator (1–8).
     pub lanes: usize,
-    /// Host threads for non-offloaded GGML ops.
+    /// Host threads for non-offloaded GGML ops. `> 1` also enables the
+    /// coordinator's **lane worker pool**: sharded submissions enqueue
+    /// their row-tile shards on per-lane worker threads and run
+    /// concurrently (outputs and simulated counters are bit-identical to
+    /// `host_threads == 1`, which executes every shard inline).
     pub host_threads: usize,
     /// Maximum requests coalesced into one micro-batch.
     pub max_batch: usize,

@@ -373,7 +373,10 @@ pub struct BackendSel {
     pub kind: BackendKind,
     /// IMAX lanes (sharded backend / serving coordinator).
     pub lanes: usize,
-    /// Host threads (marshalling + residual ops).
+    /// Host threads (marshalling + residual ops). Values above 1 also
+    /// enable the coordinator's lane worker pool — sharded submissions
+    /// execute their shards concurrently, with bit-identical outputs
+    /// and counters.
     pub threads: usize,
     /// Per-lane LMM bytes reserved as resident weight cache (0 =
     /// residency disabled, the paper's stream-every-call baseline).
@@ -399,8 +402,15 @@ impl BackendFlags {
                 "IMAX lanes (sharded backend and serving; the single-lane imax pipeline ignores it)",
             )
             .default("2"),
-            Arg::opt("threads", 't', "N", "host threads for marshalling + residual ops")
-                .default("2"),
+            Arg::opt(
+                "threads",
+                't',
+                "N",
+                "host threads for marshalling + residual ops; >1 also enables the \
+                 per-lane worker pool (sharded backend: shards run concurrently, \
+                 bit-identical to --threads 1)",
+            )
+            .default("2"),
             Arg::opt("lmm-cache", 'c', "BYTES", "LMM bytes reserved as resident weight cache")
                 .default("262144"),
             Arg::flag(

@@ -1,9 +1,16 @@
 //! A scoped worker thread pool (rayon/tokio are not vendored).
 //!
-//! Two entry points:
+//! Four entry points:
 //!
-//! * [`ThreadPool`] — a long-lived pool with a work queue; the coordinator
-//!   uses one pool to model host CPU cores driving IMAX lanes.
+//! * [`ThreadPool`] — a long-lived pool with a shared work queue; the
+//!   coordinator uses one pool to model host CPU cores driving IMAX lanes.
+//! * [`LanePool`] — one single-threaded FIFO worker **per lane**: jobs
+//!   submitted to the same lane run serially in submission order, jobs on
+//!   different lanes run concurrently. This is the execution substrate of
+//!   the coordinator's parallel shard path (see `DESIGN.md`, "Concurrency
+//!   model").
+//! * [`CompletionSlot`] — a one-shot rendezvous cell a worker fills and a
+//!   caller blocks on; the coordinator parks one per in-flight shard.
 //! * [`parallel_chunks`] — fork-join helper: split an index range over N
 //!   workers with `std::thread::scope`, used by the ggml matmul row loop.
 
@@ -113,6 +120,119 @@ impl Drop for ThreadPool {
     }
 }
 
+/// A one-shot completion cell: a producer thread [`fill`](CompletionSlot::fill)s
+/// it exactly once, a consumer [`wait`](CompletionSlot::wait)s until the value
+/// arrives and takes it. Clones share the same cell.
+///
+/// The coordinator parks one slot per in-flight shard: the lane worker fills
+/// the slot with the shard's `(output, phases, cache delta)` and the join
+/// side blocks on the slots **in shard order**, which is what keeps counter
+/// merging deterministic under any thread interleaving.
+///
+/// ```
+/// use imax_sd::util::pool::CompletionSlot;
+///
+/// let slot = CompletionSlot::new();
+/// let producer = slot.clone();
+/// let t = std::thread::spawn(move || producer.fill(6 * 7));
+/// assert_eq!(slot.wait(), 42); // blocks until the producer fills it
+/// t.join().unwrap();
+/// ```
+pub struct CompletionSlot<T> {
+    cell: Arc<(Mutex<Option<T>>, Condvar)>,
+}
+
+impl<T> Clone for CompletionSlot<T> {
+    fn clone(&self) -> Self {
+        CompletionSlot { cell: Arc::clone(&self.cell) }
+    }
+}
+
+impl<T> Default for CompletionSlot<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> CompletionSlot<T> {
+    /// An empty slot.
+    pub fn new() -> CompletionSlot<T> {
+        CompletionSlot { cell: Arc::new((Mutex::new(None), Condvar::new())) }
+    }
+
+    /// Deposit the value and wake the waiter. Filling twice is a bug in
+    /// the producer (the slot is one-shot) and panics.
+    pub fn fill(&self, value: T) {
+        let (lock, cv) = &*self.cell;
+        let mut cell = lock.lock().unwrap();
+        assert!(cell.is_none(), "CompletionSlot filled twice");
+        *cell = Some(value);
+        cv.notify_all();
+    }
+
+    /// Block until the value arrives and take it. A slot that was already
+    /// filled returns immediately — the sequential (pool-less) path fills
+    /// slots inline at submit time and `wait` degrades to a take.
+    pub fn wait(&self) -> T {
+        let (lock, cv) = &*self.cell;
+        let mut cell = lock.lock().unwrap();
+        loop {
+            if let Some(v) = cell.take() {
+                return v;
+            }
+            cell = cv.wait(cell).unwrap();
+        }
+    }
+}
+
+/// One serial FIFO worker thread per simulated lane.
+///
+/// The per-lane queue is the ordering guarantee of the parallel shard
+/// path: jobs enqueued to one lane execute in exactly the order they were
+/// submitted (so the lane's `LaneSim` state — cache LRU, CONF history,
+/// cycle counters — evolves identically to sequential execution), while
+/// jobs on *different* lanes overlap in wall-clock time.
+///
+/// ```
+/// use imax_sd::util::pool::{CompletionSlot, LanePool};
+///
+/// let pool = LanePool::new(2);
+/// let (a, b) = (CompletionSlot::new(), CompletionSlot::new());
+/// let (fa, fb) = (a.clone(), b.clone());
+/// pool.submit_to(0, move || fa.fill("lane0"));
+/// pool.submit_to(1, move || fb.fill("lane1"));
+/// assert_eq!((a.wait(), b.wait()), ("lane0", "lane1"));
+/// pool.wait_idle();
+/// ```
+pub struct LanePool {
+    lanes: Vec<ThreadPool>,
+}
+
+impl LanePool {
+    /// Spawn one worker per lane (`lanes >= 1`).
+    pub fn new(lanes: usize) -> LanePool {
+        assert!(lanes >= 1, "lane pool needs at least one lane");
+        LanePool { lanes: (0..lanes).map(|_| ThreadPool::new(1)).collect() }
+    }
+
+    /// Number of lane workers.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Enqueue a job on `lane`'s FIFO worker and return immediately.
+    pub fn submit_to<F: FnOnce() + Send + 'static>(&self, lane: usize, f: F) {
+        self.lanes[lane].submit(f);
+    }
+
+    /// Block until every lane's queue has drained.
+    pub fn wait_idle(&self) {
+        for lane in &self.lanes {
+            lane.wait_idle();
+        }
+    }
+}
+
 /// Fork-join over `0..len` in `workers` contiguous chunks.
 ///
 /// `f(chunk_start, chunk_end)` runs on its own scoped thread per chunk; the
@@ -183,6 +303,70 @@ mod tests {
             pool.wait_idle();
             assert_eq!(counter.load(Ordering::Relaxed), (round + 1) * 10);
         }
+    }
+
+    #[test]
+    fn completion_slot_passes_value_across_threads() {
+        let slot = CompletionSlot::new();
+        let producer = slot.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            producer.fill(vec![1u8, 2, 3]);
+        });
+        assert_eq!(slot.wait(), vec![1, 2, 3]);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn completion_slot_prefilled_returns_immediately() {
+        let slot = CompletionSlot::new();
+        slot.fill(7u32);
+        assert_eq!(slot.wait(), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "filled twice")]
+    fn completion_slot_rejects_double_fill() {
+        let slot = CompletionSlot::new();
+        slot.fill(1u8);
+        slot.fill(2u8);
+    }
+
+    #[test]
+    fn lane_pool_preserves_per_lane_fifo_order() {
+        // Each lane appends to its own log; per-lane order must be exactly
+        // submission order no matter how the workers interleave globally.
+        let pool = LanePool::new(3);
+        let logs: Vec<Arc<Mutex<Vec<u64>>>> =
+            (0..3).map(|_| Arc::new(Mutex::new(Vec::new()))).collect();
+        for seq in 0..60u64 {
+            let lane = (seq % 3) as usize;
+            let log = Arc::clone(&logs[lane]);
+            pool.submit_to(lane, move || log.lock().unwrap().push(seq));
+        }
+        pool.wait_idle();
+        for (lane, log) in logs.iter().enumerate() {
+            let got = log.lock().unwrap().clone();
+            let want: Vec<u64> = (0..60).filter(|s| (s % 3) as usize == lane).collect();
+            assert_eq!(got, want, "lane {lane} ran out of order");
+        }
+    }
+
+    #[test]
+    fn lane_pool_runs_lanes_concurrently() {
+        // A job on lane 1 can complete while lane 0 is still blocked —
+        // impossible on a single serial worker.
+        let pool = LanePool::new(2);
+        let gate = CompletionSlot::new();
+        let fast = CompletionSlot::new();
+        let (g, f) = (gate.clone(), fast.clone());
+        pool.submit_to(0, move || {
+            let _ = g.wait(); // parked until the test releases it
+        });
+        pool.submit_to(1, move || f.fill(1u8));
+        assert_eq!(fast.wait(), 1, "lane 1 progressed past a blocked lane 0");
+        gate.fill(0u8);
+        pool.wait_idle();
     }
 
     #[test]

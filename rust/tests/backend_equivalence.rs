@@ -125,6 +125,62 @@ fn every_op_kind_bit_identical_host_vs_sharded() {
     }
 }
 
+/// Concurrency stress for the lane worker pool: waves of interleaved
+/// submissions across several requests, synced in wave-dependent order,
+/// repeated — every parallel run must produce bit-identical outputs and
+/// an identical [`imax_sd::coordinator::MetricsSnapshot`] to the
+/// sequential (threads = 1) reference, regardless of how the OS
+/// interleaves the lane workers.
+#[test]
+fn concurrent_submissions_are_deterministic_across_runs() {
+    use imax_sd::coordinator::MetricsSnapshot;
+    use imax_sd::ggml::WeightId;
+    use imax_sd::sd::backend::RequestId;
+
+    let shapes = [(96usize, 128usize), (64, 256), (48, 256), (128, 128), (80, 256), (33, 128)];
+    let weights: Vec<Tensor> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, k))| {
+            let dtype = if i % 2 == 0 { DType::Q8_0 } else { DType::Q3K };
+            rnd(m, k, 40 + i as u64).quantize(dtype).with_wid(WeightId(200 + i as u64))
+        })
+        .collect();
+
+    let run = |threads: usize| -> (Vec<Vec<u32>>, MetricsSnapshot) {
+        let mut b = ShardedBackend::from_config(ImaxConfig::fpga(4), threads);
+        b.coordinator().set_min_shard_rows(1); // shard every op lanes-wide
+        let mut outs: Vec<Vec<u32>> = Vec::new();
+        for round in 0..3u64 {
+            // One wave: submit an op per weight across three request
+            // tags before syncing any of them.
+            let xs: Vec<Tensor> =
+                (0..weights.len()).map(|i| rnd(4, shapes[i].1, 90 + round * 16 + i as u64)).collect();
+            let mut handles = Vec::new();
+            for (i, (w, x)) in weights.iter().zip(&xs).enumerate() {
+                b.begin_request(RequestId(1 + i as u64 % 3));
+                handles.push(b.submit(OpDesc::linear(w, x)));
+            }
+            // Alternate the sync order per wave; results must not care.
+            if round % 2 == 0 {
+                handles.reverse();
+            }
+            for h in handles {
+                outs.push(b.sync(h).as_f32().iter().map(|v| v.to_bits()).collect());
+            }
+        }
+        (outs, b.coordinator().metrics.snapshot())
+    };
+
+    let (want_outs, want_metrics) = run(1);
+    assert!(want_metrics.shard_submissions > want_metrics.sharded_ops, "ops split lanes-wide");
+    for rep in 0..5 {
+        let (outs, metrics) = run(4);
+        assert_eq!(outs, want_outs, "rep {rep}: outputs must be bit-identical");
+        assert_eq!(metrics, want_metrics, "rep {rep}: every counter must match");
+    }
+}
+
 /// The acceptance criterion: on a warm step, the per-lane DMA
 /// **weight** LOAD bytes shrink as lanes are added — each lane streams
 /// only the shards its cache could not hold, and aggregate cache grows

@@ -1,9 +1,13 @@
 //! Property tests for the row-tile shard partitioner: for arbitrary row
 //! counts, lane counts and cache budgets the partition must be
-//! disjoint, covering, balanced, budget-capped and stably identified.
+//! disjoint, covering, balanced, budget-capped and stably identified —
+//! plus integration checks that activation broadcast elision keeps the
+//! aggregate activation LOAD bytes flat as lanes grow.
 
-use imax_sd::coordinator::{shard_wid, ShardPlan};
-use imax_sd::ggml::WeightId;
+use imax_sd::coordinator::{shard_wid, Coordinator, OffloadPolicy, ShardPlan};
+use imax_sd::ggml::{DType, Tensor, WeightId};
+use imax_sd::imax::ImaxConfig;
+use imax_sd::sd::backend::OpDesc;
 use imax_sd::util::prop::{run, Gen};
 use imax_sd::util::rng::Xoshiro256pp;
 
@@ -16,7 +20,7 @@ fn check_plan(
 ) -> Result<(), String> {
     let cap = ShardPlan::cap_rows(row_bytes, budget, m);
     let parent = WeightId(0xABCD ^ m as u64);
-    let plan = ShardPlan::new(m, lanes, cap, Some(parent));
+    let plan = ShardPlan::new(m, lanes, cap, 1, Some(parent));
 
     // Disjoint + covering + ascending: shards tile 0..m exactly.
     let mut next = 0usize;
@@ -33,10 +37,13 @@ fn check_plan(
         return Err(format!("rows covered {next} != m {m}"));
     }
 
-    // Lane assignment round-robins and stays in range.
+    // Lane assignment round-robins from the parent-derived base lane
+    // and stays in range.
+    let base = (parent.0 % lanes as u64) as usize;
     for (i, s) in plan.shards.iter().enumerate() {
-        if s.lane != i % lanes {
-            return Err(format!("shard {i} on lane {} (want {})", s.lane, i % lanes));
+        let want = (base + i) % lanes;
+        if s.lane != want {
+            return Err(format!("shard {i} on lane {} (want {want})", s.lane));
         }
     }
 
@@ -106,7 +113,9 @@ fn prop_shard_count_matches_budget_pressure() {
     run("shard count = max(lanes, ceil(m/cap)) clamped to m", 200, Gen::usize_in(1..=2000), |&m| {
         for lanes in [1usize, 2, 4, 8] {
             for cap in [1usize, 3, 17, usize::MAX] {
-                let plan = ShardPlan::new(m, lanes, cap, None);
+                // min_rows = 1 disables the cost-model threshold, which
+                // restores the original count formula exactly.
+                let plan = ShardPlan::new(m, lanes, cap, 1, None);
                 let want = lanes.max(m.div_ceil(cap.max(1))).min(m);
                 if plan.shards.len() != want {
                     return Err(format!(
@@ -118,4 +127,90 @@ fn prop_shard_count_matches_budget_pressure() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_min_rows_threshold_limits_shard_count() {
+    run("shard count <= max(1, m/min_rows) under a roomy cap", 200, Gen::usize_in(1..=2000), |&m| {
+        for lanes in [1usize, 2, 4, 8] {
+            for min_rows in [1usize, 7, 64, 500] {
+                let plan = ShardPlan::new(m, lanes, usize::MAX, min_rows, None);
+                let by_min = (m / min_rows).max(1);
+                let want = lanes.min(by_min).min(m);
+                if plan.shards.len() != want {
+                    return Err(format!(
+                        "m={m} lanes={lanes} min_rows={min_rows}: {} shards, want {want}",
+                        plan.shards.len()
+                    ));
+                }
+                // Every shard meets the threshold whenever the plan
+                // split at all (a single shard may be arbitrarily small).
+                if plan.shards.len() > 1 {
+                    for s in &plan.shards {
+                        if s.len() < min_rows {
+                            return Err(format!(
+                                "m={m} lanes={lanes} min_rows={min_rows}: shard of {} rows \
+                                 below threshold",
+                                s.len()
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Activation broadcast elision: the same op executed over 1/2/4/8 lanes
+/// must charge the **same total activation LOAD bytes** — only shard 0
+/// streams the activation block; the other lanes read it as a broadcast
+/// (bytes elided, DMA cycle occupancy kept). Without elision the
+/// activation traffic scaled linearly with the shard count.
+#[test]
+fn sharded_activation_bytes_do_not_scale_with_lanes() {
+    let mut rng = Xoshiro256pp::seed_from_u64(77);
+    let (m, k, n) = (128usize, 256usize, 8usize);
+    let mut wdata = vec![0.0f32; m * k];
+    rng.fill_normal(&mut wdata, 0.5);
+    let w = Tensor::f32(m, k, wdata).quantize(DType::Q8_0).with_wid(WeightId(91));
+    let mut xdata = vec![0.0f32; n * k];
+    rng.fill_normal(&mut xdata, 0.5);
+    let x = Tensor::f32(n, k, xdata);
+
+    let mut act_bytes_by_lanes = Vec::new();
+    let mut reference: Option<Vec<u32>> = None;
+    for lanes in [1usize, 2, 4, 8] {
+        let c = Coordinator::new(ImaxConfig::fpga(lanes), lanes, 1, OffloadPolicy::QuantizedOnly);
+        let op = OpDesc::linear(&w, &x);
+        let run = c.submit_sharded(&op);
+        // Activation LOAD = all DMA LOAD bytes minus the weight bytes.
+        let act: u64 = c
+            .lane_costs()
+            .iter()
+            .map(|lc| lc.loaded_bytes - lc.weight_load_bytes)
+            .sum();
+        assert!(act > 0, "the op streams activations at {lanes} lanes");
+        assert!(run.shards >= 1);
+        act_bytes_by_lanes.push((lanes, run.shards, act));
+        let bits: Vec<u32> = run.out.as_f32().iter().map(|v| v.to_bits()).collect();
+        match &reference {
+            None => reference = Some(bits),
+            Some(want) => assert_eq!(&bits, want, "{lanes}-lane output bit-identical"),
+        }
+    }
+    let (_, _, want) = act_bytes_by_lanes[0];
+    for (lanes, shards, act) in &act_bytes_by_lanes {
+        assert_eq!(
+            *act, want,
+            "activation LOAD bytes must not scale with lanes \
+             (lanes={lanes} shards={shards}: {act} vs single-lane {want}); \
+             full accounting: {act_bytes_by_lanes:?}"
+        );
+    }
+    // The sweep only proves something if the op actually sharded wider.
+    assert!(
+        act_bytes_by_lanes.iter().any(|(_, shards, _)| *shards > 1),
+        "op never split: {act_bytes_by_lanes:?}"
+    );
 }
