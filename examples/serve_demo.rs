@@ -8,7 +8,9 @@
 //! affinity vs single-op row-tile sharding, `--lanes N` sizes the lane
 //! pool, `--threads N` the host pool, `--lmm-cache BYTES` the per-lane
 //! resident weight cache and `--no-weight-cache` restores the paper's
-//! stream-every-call baseline.
+//! stream-every-call baseline. `--conv-offload on|off` (default on)
+//! routes the F16 conv (im2col) GEMMs to the lanes via OP_SML16; `off`
+//! restores the paper's quantized-only routing.
 
 use imax_sd::sd::pipeline::{Backend, PipelineConfig};
 use imax_sd::sd::QuantModel;
@@ -67,18 +69,20 @@ fn main() {
             model: Some(QuantModel::Q8_0),
             steps: 1,
             backend: Backend::Host { threads: 2 },
+            conv_offload: sel.conv_offload,
         },
         serve_cfg,
         imax,
     );
     println!(
-        "serving {} prompts: {} lanes ({} routing), {} workers, micro-batch {}, weight cache {}\n",
+        "serving {} prompts: {} lanes ({} routing), {} workers, micro-batch {}, weight cache {}, conv offload {}\n",
         prompts.len(),
         harness.config.lanes,
         if harness.config.sharded { "sharded" } else { "affinity" },
         harness.config.workers,
         harness.config.max_batch,
-        cache_label
+        cache_label,
+        if sel.conv_offload { "on" } else { "off" }
     );
 
     let report = harness.serve(&prompts);

@@ -1,0 +1,514 @@
+"""Python replica of the conv-offload experiment (no Rust toolchain needed).
+
+Re-implements, in deterministic integer math, exactly what
+``benches/conv_offload.rs`` measures through the Rust simulator via
+``replay_unet_steps_policy``:
+
+* the mini U-Net's **full** op list in dispatch order — quantized
+  linears *and* the F16 ``ConvIm2col`` GEMMs (WeightIds minted like
+  ``WeightFactory::weight_id`` with seed 1; ``k % block != 0`` linears
+  fall back to F16 and stay on the host, as do the F32 attention ops),
+* the single-lane ``ImaxBackend`` replay: the plan-compiled pin pass
+  (``OpPlan::pin_set_for`` — hottest-first greedy, policy-filtered),
+  per-op residency (lookup/insert/LRU-with-pins over the LMM cache
+  partition) and the ``breakdown_for_plan_with_residency`` phase
+  pricing of ``imax/lane.rs``,
+* the **LMM-tiled im2col chunking** of ``run_f16_conv_on_lane``: patch
+  rows split so each chunk's f32 activations fit half the transient
+  partition; every chunk reuses the *same* weight identity, so the
+  first chunk pays the cache fill and the rest hit,
+* CONF accounting across the mixed kind sequence (Q8_0/Q3_K linears
+  interleaved with F16 convs reconfigure the lane on every switch),
+* the host-conv comparison path: the quantized-only replay's warm
+  cycles plus the step's conv MACs priced at the ARM A72 F16 rate
+  (``device::arm_a72().gmacs_f16`` = 3.0 GMAC/s), in lane clocks.
+
+Two substrates frame the honest finding the bench asserts: on the FPGA
+prototype DMA (0.193 B/cycle) the offload REGRESSES — the im2col
+activation stream is LOAD-bound, the Fig. 11 lesson — while the ASIC
+with a production interconnect (6.7 GB/s, LMM big enough to pin the
+whole weight set) beats both the cold step and the host-conv path.
+
+Running it prints the tables recorded in ``EXPERIMENTS.md`` §Conv
+offload and asserts the same inequalities the bench and
+``tests/weight_cache.rs`` assert, so the recorded numbers and the CI
+smoke run measure one definition.
+"""
+
+import math
+
+from shard_scaling_replica import shard_plan, weight_id
+
+DMA_SETUP = 4_000
+CONF_PER_PE = 16
+REGV_PER_PE = 4
+RANGE_PER_PE = 4
+HOST_GMACS_F16 = 3.0  # device::arm_a72().gmacs_f16
+
+KCFG = {
+    # kind: (pe_count, elems_per_beat, groups, pipeline_depth)
+    "Q8_0": (46, 32, 3, 16),
+    "Q3_K": (51, 16, 3, 18),
+    "F16": (46, 16, 3, 16),  # KernelConfig::f16 — OP_SML16 chain
+}
+
+
+class Substrate:
+    def __init__(self, name, clock_hz, dma_bpc, lmm, cache, offload_wins):
+        self.name = name
+        self.clock_hz = clock_hz
+        self.dma_bpc = dma_bpc
+        self.lmm = lmm
+        self.cache = cache
+        self.offload_wins = offload_wins
+
+    @property
+    def budget(self):
+        # LaneSim::new — cache clamped to 3/4 of the LMM.
+        return min(self.cache, self.lmm // 4 * 3)
+
+    @property
+    def transient(self):
+        return self.lmm - self.budget
+
+
+SUBSTRATES = [
+    # ImaxConfig::fpga(1): the calibrated prototype.
+    Substrate("FPGA 145MHz, prototype DMA", 145.0e6, 0.193,
+              512 << 10, 256 << 10, offload_wins=False),
+    # benches/conv_offload.rs ASIC row: 840 MHz, 6.7 GB/s DMA
+    # (8 B/cycle), 8 MiB LMM with a 4 MiB cache partition.
+    Substrate("ASIC 840MHz, 6.7GB/s DMA, 8M LMM", 840.0e6, 8.0,
+              8 << 20, 4 << 20, offload_wins=True),
+]
+
+
+def w_row_bytes(kind, k):
+    if kind == "Q8_0":
+        return k // 32 * 34
+    if kind == "Q3_K":
+        return k // 256 * 110
+    return k * 2  # F16
+
+
+def a_row_bytes(kind, k):
+    if kind == "Q8_0":
+        return k // 32 * 34
+    if kind == "Q3_K":
+        return k // 256 * (4 + 256 + 2 * 16)
+    return k * 4  # acts stay f32 on the F16 path
+
+
+def transfer(sub, bytes_):
+    if bytes_ == 0:
+        return 0
+    return DMA_SETUP + math.ceil(bytes_ / sub.dma_bpc)
+
+
+def beats_for_dot(kind, k):
+    _, elems, groups, _ = KCFG[kind]
+    return -(-(-(-k // elems)) // groups)
+
+
+def tile_plan(capacity, kind, m, n, k):
+    # TilePlan::with_capacity
+    wrb, arb = w_row_bytes(kind, k), a_row_bytes(kind, k)
+    a_tile = min(max(min(capacity // 2 // arb, max(n, 1)), 1), n)
+    while True:
+        a_bytes = a_tile * arb
+        if a_bytes <= capacity:
+            rem = capacity - a_bytes
+            per_w_row = wrb + a_tile * 4
+            if rem >= per_w_row:
+                return dict(m=m, n=n, k=k, a_tile=a_tile,
+                            w_tile=min(rem // per_w_row, m), wrb=wrb, arb=arb)
+        if a_tile == 1:
+            raise MemoryError("K too large for LMM")
+        a_tile //= 2
+
+
+def breakdown(sub, kind, plan, reconf, residency):
+    # breakdown_for_plan_with_residency; returns (cycles, act_B, w_B)
+    pe, _, _, depth = KCFG[kind]
+    cyc = CONF_PER_PE * pe if reconf else 0
+    w_load = plan["m"] * plan["wrb"] if residency == "Inserted" else 0
+    if residency == "Inserted":
+        cyc += transfer(sub, plan["m"] * plan["wrb"])
+    act_load = 0
+    beats = beats_for_dot(kind, plan["k"])
+    at0 = 0
+    while at0 < plan["n"]:
+        at1 = min(at0 + plan["a_tile"], plan["n"])
+        cyc += transfer(sub, (at1 - at0) * plan["arb"])
+        act_load += (at1 - at0) * plan["arb"]
+        wt0 = 0
+        while wt0 < plan["m"]:
+            wt1 = min(wt0 + plan["w_tile"], plan["m"])
+            cyc += (REGV_PER_PE + RANGE_PER_PE) * pe
+            if residency == "Streamed":
+                cyc += transfer(sub, (wt1 - wt0) * plan["wrb"])
+                w_load += (wt1 - wt0) * plan["wrb"]
+            dots = (wt1 - wt0) * (at1 - at0)
+            cyc += depth + dots * (beats + 2)
+            cyc += transfer(sub, dots * 4)
+            wt0 = wt1
+        at0 = at1
+    return cyc, act_load, w_load
+
+
+class LaneCache:
+    """imax/lmm.rs residency cache: LRU with pins, plus hit-byte stats."""
+
+    def __init__(self, budget):
+        self.budget = budget
+        self.entries = {}  # wid -> [bytes, tick, pinned]
+        self.pin_wish = set()
+        self.tick = 0
+        self.hits = 0
+        self.hit_bytes = 0
+
+    def pinned_bytes(self):
+        return sum(b for b, _, p in self.entries.values() if p)
+
+    def used(self):
+        return sum(b for b, _, _ in self.entries.values())
+
+    def lookup(self, wid, bytes_):
+        self.tick += 1
+        if wid in self.entries:
+            self.entries[wid][1] = self.tick
+            self.hits += 1
+            self.hit_bytes += bytes_
+            return True
+        return False
+
+    def insert(self, wid, bytes_):
+        if wid in self.entries:
+            return True
+        if self.budget == 0 or bytes_ > self.budget - self.pinned_bytes():
+            return False
+        while self.budget - self.used() < bytes_:
+            victims = [(t, w) for w, (b, t, p) in self.entries.items() if not p]
+            if not victims:
+                return False
+            del self.entries[min(victims)[1]]
+        self.tick += 1
+        self.entries[wid] = [bytes_, self.tick, wid in self.pin_wish]
+        return True
+
+
+def unet_sites(model):
+    """All weight-bearing op sites of one step, in dispatch order.
+
+    kind: "lin" (quantized linear, lane), "conv" (F16 ConvIm2col),
+    "host" (F16-fallback linear — stays on the host in every policy).
+    The F32 attention ops never carry a weight and are omitted.
+    """
+    C0, C1, TD = 64, 128, 256
+    sites = []
+
+    def lin(name, dout, din, n):
+        block = 32 if model == "Q8_0" else 256
+        if din % block != 0:
+            sites.append(dict(name=name, m=dout, k=din, n=n, dtype="F16",
+                              kind="host", wid=weight_id(1, name, "F16")))
+        else:
+            sites.append(dict(name=name, m=dout, k=din, n=n, dtype=model,
+                              kind="lin", wid=weight_id(1, name, model)))
+
+    def conv(name, cout, cin, ksz, n):
+        sites.append(dict(name=name, m=cout, k=cin * ksz * ksz, n=n,
+                          dtype="F16", kind="conv",
+                          wid=weight_id(1, name, "F16")))
+
+    def resblock(name, cin, cout, n):
+        conv(f"{name}.c1", cout, cin, 3, n)
+        lin(f"{name}.emb", cout, 256, 1)
+        conv(f"{name}.c2", cout, cout, 3, n)
+        if cin != cout:
+            conv(f"{name}.skip", cout, cin, 1, n)
+
+    lin("unet.temb1", 256, 64, 1)
+    lin("unet.temb2", 256, 256, 1)
+    conv("unet.conv_in", C0, 4, 3, 256)
+    resblock("unet.down0", C0, C0, 256)
+    conv("unet.down", C1, C0, 3, 64)
+    resblock("unet.down1", C1, C1, 64)
+    tf = "unet.mid.tf"
+    lin(f"{tf}.proj_in", TD, C1, 64)
+    for a in ["attn1.q", "attn1.k", "attn1.v", "attn1.o", "attn2.q"]:
+        lin(f"{tf}.{a}", TD, TD, 64)
+    lin(f"{tf}.attn2.k", TD, 256, 77)
+    lin(f"{tf}.attn2.v", TD, 256, 77)
+    lin(f"{tf}.attn2.o", TD, TD, 64)
+    lin(f"{tf}.ff1", 2 * TD, TD, 64)
+    lin(f"{tf}.ff2", TD, TD, 64)
+    lin(f"{tf}.proj_out", C1, TD, 64)
+    resblock("unet.mid.rb", C1, C1, 64)
+    resblock("unet.up0", C1 + C1, C1, 64)
+    resblock("unet.up1", C1 + C0, C0, 256)
+    conv("unet.conv_out", 4, C0, 3, 256)
+    return sites
+
+
+def conv_macs(model):
+    return sum(s["m"] * s["k"] * s["n"]
+               for s in unet_sites(model) if s["kind"] == "conv")
+
+
+def lane_eligible(site, policy):
+    if site["kind"] == "lin":
+        return True
+    return site["kind"] == "conv" and policy == "QuantizedAndConv"
+
+
+def replay(model, sub, policy, steps):
+    """replay_unet_steps_policy on one simulated lane."""
+    sites = unet_sites(model)
+    cache = LaneCache(sub.budget)
+    configured = [None]  # lane kernel kind, persists across steps
+
+    # OpPlan::pin_set_for — hottest-first greedy over the eligible
+    # weights (streamed bytes desc, wid asc), policy-filtered.
+    uses = []
+    for s in sites:
+        if s["kind"] == "host":
+            continue  # not offload-eligible, never aggregated
+        if not lane_eligible(s, policy):
+            continue
+        uses.append((s["wid"], s["m"] * w_row_bytes(
+            "F16" if s["kind"] == "conv" else model, s["k"])))
+    remaining = sub.budget
+    for wid, bytes_ in sorted(uses, key=lambda u: (-u[1], u[0])):
+        if bytes_ <= remaining:
+            remaining -= bytes_
+            cache.pin_wish.add(wid)
+
+    results = []
+    for _ in range(steps):
+        cyc = load = 0
+        h0, hb0 = cache.hits, cache.hit_bytes
+        for s in sites:
+            if not lane_eligible(s, policy):
+                continue  # host op: no lane cost
+            kind = "F16" if s["kind"] == "conv" else model
+            wb = s["m"] * w_row_bytes(kind, s["k"])
+            if s["kind"] == "conv":
+                # run_f16_conv_on_lane: LMM-tiled im2col chunks, all
+                # under the same weight identity.
+                rows_per = min(max(sub.transient // 2
+                                   // a_row_bytes("F16", s["k"]), 1), s["n"])
+                r0 = 0
+                while r0 < s["n"]:
+                    rows = min(rows_per, s["n"] - r0)
+                    if cache.lookup(s["wid"], wb):
+                        residency = "Resident"
+                    elif cache.insert(s["wid"], wb):
+                        residency = "Inserted"
+                    else:
+                        residency = "Streamed"
+                    plan = tile_plan(sub.transient, kind, s["m"], rows, s["k"])
+                    reconf = configured[0] != kind
+                    configured[0] = kind
+                    dc, da, dw = breakdown(sub, kind, plan, reconf, residency)
+                    cyc += dc
+                    load += da + dw
+                    r0 += rows
+            else:
+                if cache.lookup(s["wid"], wb):
+                    residency = "Resident"
+                elif cache.insert(s["wid"], wb):
+                    residency = "Inserted"
+                else:
+                    residency = "Streamed"
+                plan = tile_plan(sub.transient, kind, s["m"], s["n"], s["k"])
+                reconf = configured[0] != kind
+                configured[0] = kind
+                dc, da, dw = breakdown(sub, kind, plan, reconf, residency)
+                cyc += dc
+                load += da + dw
+        results.append(dict(cycles=cyc, load_bytes=load,
+                            hits=cache.hits - h0,
+                            hit_bytes=cache.hit_bytes - hb0))
+    return results
+
+
+def min_shard_rows(sub, kind, k, n):
+    # Coordinator::min_shard_rows with the weight's kernel kind.
+    pe = KCFG[kind][0]
+    fixed = 3 * DMA_SETUP + (REGV_PER_PE + RANGE_PER_PE + CONF_PER_PE) * pe
+    stream = lambda b: math.ceil(b / sub.dma_bpc)
+    row_cycles = (n * (beats_for_dot(kind, k) + 2)
+                  + stream(w_row_bytes(kind, k)) + stream(n * 4))
+    return -(-(4 * fixed) // max(row_cycles, 1))
+
+
+def op_shards(sub, op, kind, lanes):
+    # Coordinator::shard_geometry for one dispatch site.
+    rb = w_row_bytes(kind, op["k"])
+    if sub.budget == 0 or rb == 0 or rb > sub.budget:
+        cap = max(op["m"], 1)
+    else:
+        cap = sub.budget // rb
+    return shard_plan(op["m"], lanes, cap,
+                      min_shard_rows(sub, kind, op["k"], op["n"]), op["wid"])
+
+
+def replay_sharded(model, sub, lanes, steps):
+    """replay_unet_steps_sharded_policy(QuantizedAndConv) on the FPGA:
+    per-op row-tile shards over per-lane caches, activation broadcast
+    elision on shards i > 0."""
+    sites = [s for s in unet_sites(model) if s["kind"] != "host"]
+    caches = [LaneCache(sub.budget) for _ in range(lanes)]
+    configured = [None] * lanes
+
+    # apply_plan_sharded: hottest-first, per-lane remaining budgets.
+    uses = []
+    for s in sites:
+        kind = "F16" if s["kind"] == "conv" else model
+        uses.append((s, kind, s["m"] * w_row_bytes(kind, s["k"])))
+    remaining = [sub.budget] * lanes
+    for s, kind, bytes_ in sorted(uses, key=lambda u: (-u[2], u[0]["wid"])):
+        rb = bytes_ // s["m"]
+        for sh in op_shards(sub, s, kind, lanes):
+            b = sh["rows"] * rb
+            if b <= remaining[sh["lane"]]:
+                remaining[sh["lane"]] -= b
+                caches[sh["lane"]].pin_wish.add(sh["wid"])
+
+    results = []
+    for _ in range(steps):
+        cyc = [0] * lanes
+        wload = [0] * lanes
+        for s in sites:
+            kind = "F16" if s["kind"] == "conv" else model
+            rb = w_row_bytes(kind, s["k"])
+            for i, sh in enumerate(op_shards(sub, s, kind, lanes)):
+                lane, c = sh["lane"], caches[sh["lane"]]
+                wb = sh["rows"] * rb
+                if c.lookup(sh["wid"], wb):
+                    residency = "Resident"
+                elif c.insert(sh["wid"], wb):
+                    residency = "Inserted"
+                else:
+                    residency = "Streamed"
+                plan = tile_plan(sub.transient, kind, sh["rows"],
+                                 s["n"], s["k"])
+                reconf = configured[lane] != kind
+                configured[lane] = kind
+                dc, _da, dw = breakdown(sub, kind, plan, reconf, residency)
+                cyc[lane] += dc
+                wload[lane] += dw
+        results.append(dict(max_cyc=max(cyc), max_wload=max(wload)))
+    return results
+
+
+def main():
+    print("conv_offload replica: mini U-Net step, F16 ConvIm2col via "
+          "OP_SML16\n")
+    for model in ["Q8_0", "Q3_K"]:
+        macs = conv_macs(model)
+        wbytes = sum(s["m"] * w_row_bytes("F16", s["k"])
+                     for s in unet_sites(model) if s["kind"] == "conv")
+        abytes = sum(s["n"] * a_row_bytes("F16", s["k"])
+                     for s in unet_sites(model) if s["kind"] == "conv")
+        print(f"{model}: conv MACs/step {macs} "
+              f"({macs / 1e6:.1f} M), F16 conv weights {wbytes} B, "
+              f"im2col acts {abytes} B")
+        assert macs > 100_000_000, "convs must dominate the step"
+    print()
+
+    hdr = (f"{'model':6} {'substrate':32} {'cold Mcyc':>10} "
+           f"{'warm Mcyc':>10} {'warm LOAD B':>12} {'warm hits':>9} "
+           f"{'host Mcyc':>10} {'warm/host':>9}")
+    print(hdr)
+    print("-" * len(hdr))
+    for model in ["Q8_0", "Q3_K"]:
+        for sub in SUBSTRATES:
+            run = replay(model, sub, "QuantizedAndConv", 3)
+            quant = replay(model, sub, "QuantizedOnly", 3)
+            cold, warm = run[0], run[1]
+            host_cyc = int(conv_macs(model) / (HOST_GMACS_F16 * 1e9)
+                           * sub.clock_hz)
+            host_path = quant[1]["cycles"] + host_cyc
+            ratio = warm["cycles"] / host_path
+            print(f"{model:6} {sub.name:32} "
+                  f"{cold['cycles'] / 1e6:>10.2f} "
+                  f"{warm['cycles'] / 1e6:>10.2f} "
+                  f"{warm['load_bytes']:>12} {warm['hits']:>9} "
+                  f"{host_path / 1e6:>10.2f} {ratio:>8.2f}x")
+            # The inequalities tests/weight_cache.rs and the bench assert.
+            assert run[1] == run[2], "warm steps must be steady-state"
+            if sub.offload_wins:
+                # Only claimed where the cache pins the whole weight set.
+                # On the 256 KiB FPGA budget the pin pass locks the
+                # cache, so mid-sized conv weights that cached
+                # transiently during the cold step (insert once, hit on
+                # later im2col chunks) re-stream every warm chunk —
+                # warm can legitimately exceed cold there.
+                assert warm["cycles"] < cold["cycles"], "residency pays off"
+                assert warm["cycles"] < host_path, \
+                    "offload must win on the production interconnect"
+            else:
+                assert warm["cycles"] > host_path, \
+                    "offload must regress on the prototype DMA (Fig. 11)"
+    print("\nhost Mcyc = quantized-only warm lane cycles + conv MACs at "
+          f"the A72 F16 rate ({HOST_GMACS_F16:.1f} GMAC/s), in lane "
+          "clocks.\nThe offload wins only with the production "
+          "interconnect; on the prototype DMA the im2col\nactivation "
+          "stream is LOAD-bound and the offload regresses (the Fig. 11 "
+          "lesson).\n")
+
+    # The FPGA chunk geometry run_f16_conv_on_lane derives: chunks =
+    # ceil(n / (transient/2 // 4k)), weight cacheable iff m·2k fits the
+    # 256 KiB budget.
+    fpga = SUBSTRATES[0]
+    print(f"FPGA im2col chunking (transient {fpga.transient} B, "
+          f"cache budget {fpga.budget} B):")
+    print(f"  {'conv site':18} {'m':>4} {'k':>5} {'n':>4} "
+          f"{'chunks':>6} {'w bytes':>8} {'cacheable':>9}")
+    for s in unet_sites("Q8_0"):
+        if s["kind"] != "conv":
+            continue
+        rows_per = min(max(fpga.transient // 2
+                           // a_row_bytes("F16", s["k"]), 1), s["n"])
+        wb = s["m"] * w_row_bytes("F16", s["k"])
+        print(f"  {s['name']:18} {s['m']:>4} {s['k']:>5} {s['n']:>4} "
+              f"{-(-s['n'] // rows_per):>6} {wb:>8} "
+              f"{str(wb <= fpga.budget):>9}")
+
+    # The sharded section of benches/conv_offload.rs: row-tile shards of
+    # the conv + quantized weights over 1-8 lanes, 64 KiB cache/lane.
+    sharded = Substrate("FPGA sharded", 145.0e6, 0.193,
+                        512 << 10, 64 << 10, offload_wins=False)
+    print(f"\nsharded conv offload (FPGA, {sharded.lmm >> 10} KiB LMM, "
+          f"{sharded.budget >> 10} KiB cache/lane):")
+    hdr = (f"{'model':6} {'lanes':>5} {'cold ms':>8} {'warm ms':>8} "
+           f"{'cold wLOAD B/lane':>18} {'warm wLOAD B/lane':>18}")
+    print(hdr)
+    print("-" * len(hdr))
+    for model in ["Q8_0", "Q3_K"]:
+        prev_w = prev_cyc = None
+        for lanes in [1, 2, 4, 8]:
+            cold, warm = replay_sharded(model, sharded, lanes, 2)
+            ms = lambda c: c / sharded.clock_hz * 1e3
+            print(f"{model:6} {lanes:>5} {ms(cold['max_cyc']):>8.2f} "
+                  f"{ms(warm['max_cyc']):>8.2f} {cold['max_wload']:>18} "
+                  f"{warm['max_wload']:>18}")
+            # The bench's conv-on assertion set. Warm-vs-cold is NOT
+            # claimed: the 64 KiB/lane budget pins only a slice of the
+            # conv weight set, and shards that cached transiently during
+            # the cold step re-stream every warm step, so warm exceeds
+            # cold per lane. What holds is the monotone warm shrink.
+            assert prev_w is None or warm["max_wload"] < prev_w, \
+                f"{model}: warm per-lane weight LOAD must shrink at {lanes}"
+            assert prev_cyc is None or warm["max_cyc"] < prev_cyc, \
+                f"{model}: warm lane wall-clock must improve at {lanes}"
+            prev_w, prev_cyc = warm["max_wload"], warm["max_cyc"]
+    print("\nper-lane conv weight LOAD shrinks with lanes: row-tile "
+          "shards pin per lane and the\nim2col activation stream is "
+          "broadcast-elided (tests/shard_props.rs).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,290 @@
+//! Conv-offload experiment: the §VI F16 `ConvIm2col` datapath
+//! (OP_SML16 kernel + LMM-tiled im2col + conv weight residency) vs the
+//! paper's host-conv routing, on the mini U-Net denoising step.
+//!
+//! Two substrates frame the honest finding:
+//!
+//! * **FPGA prototype DMA** (0.193 B/cycle): offloading the F16 convs
+//!   *regresses* — the conv activation stream is LOAD-bound, the
+//!   Fig. 11 lesson (also asserted by `device::future`).
+//! * **ASIC + production interconnect** (6.7 GB/s DMA, LMM big enough
+//!   to hold the conv + quantized weight sets): warm steps beat both
+//!   the cold offload step and the host-conv path — the same
+//!   inequalities `tests/weight_cache.rs` asserts and
+//!   `python/replica/conv_offload_replica.py` replicates.
+//!
+//! `--conv-offload off` replays only the host-conv (QuantizedOnly)
+//! routing; `--threads N` drives the sharded section's lane worker
+//! pool (simulated counters are bit-identical at any N); `--smoke`
+//! shrinks the sweep for CI. Emits `BENCH_conv_offload.json` with the
+//! cold/warm cycle and DMA-byte totals.
+
+use imax_sd::coordinator::OffloadPolicy;
+use imax_sd::device::arm_a72;
+use imax_sd::imax::ImaxConfig;
+use imax_sd::sd::plan::{
+    replay_unet_steps_policy, replay_unet_steps_sharded_policy, unet_step_conv_macs, StepCost,
+};
+use imax_sd::sd::QuantModel;
+use imax_sd::util::tables::Table;
+
+struct Substrate {
+    name: &'static str,
+    imax: ImaxConfig,
+    /// Whether the warm offload step must beat the host-conv path here
+    /// (true on the production interconnect, false on the prototype
+    /// DMA, where the offload legitimately regresses).
+    offload_wins: bool,
+}
+
+fn substrates() -> Vec<Substrate> {
+    let mut asic = ImaxConfig::asic(1);
+    asic.lmm_bytes = 8 << 20;
+    asic.weight_cache_bytes = 4 << 20;
+    asic.dma_bytes_per_cycle = 8.0; // §VI production interconnect
+    vec![
+        Substrate {
+            name: "FPGA 145MHz, prototype DMA",
+            imax: ImaxConfig::fpga(1),
+            offload_wins: false,
+        },
+        Substrate { name: "ASIC 840MHz, 6.7GB/s DMA, 8M LMM", imax: asic, offload_wins: true },
+    ]
+}
+
+// `offload_wins` also gates the warm-vs-cold assertion: it only holds
+// where the cache pins the whole conv weight set (see main()).
+
+/// One JSON record per (model, substrate) pair.
+struct Record {
+    model: &'static str,
+    substrate: &'static str,
+    conv_offload: bool,
+    cold: StepCost,
+    warm: StepCost,
+    host_path_cycles: u64,
+}
+
+fn emit_json(records: &[Record]) {
+    let mut s = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"model\": \"{}\", \"substrate\": \"{}\", \"conv_offload\": {}, \
+             \"cold_cycles\": {}, \"warm_cycles\": {}, \
+             \"cold_load_bytes\": {}, \"warm_load_bytes\": {}, \
+             \"warm_hits\": {}, \"warm_hit_bytes\": {}, \
+             \"host_conv_path_cycles\": {}}}{}\n",
+            r.model,
+            r.substrate,
+            r.conv_offload,
+            r.cold.cycles,
+            r.warm.cycles,
+            r.cold.load_bytes,
+            r.warm.load_bytes,
+            r.warm.hits,
+            r.warm.hit_bytes,
+            r.host_path_cycles,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    let path = "BENCH_conv_offload.json";
+    std::fs::write(path, s).expect("write bench json");
+    println!("wrote {path} ({} records)", records.len());
+}
+
+fn sharded_section(threads: usize, smoke: bool) {
+    let lane_sweep: &[usize] = if smoke { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let (lmm, cache) = (512usize << 10, 64usize << 10);
+    let clock_hz = ImaxConfig::fpga(1).clock_hz;
+    let mut t = Table::new(
+        &format!(
+            "Sharded conv offload (FPGA, {} KiB LMM, {} KiB cache/lane, {threads} host threads)",
+            lmm >> 10,
+            cache >> 10
+        ),
+        &["model", "lanes", "cold ms", "warm ms", "cold wLOAD B/lane", "warm wLOAD B/lane"],
+    );
+    for model in [QuantModel::Q8_0, QuantModel::Q3K] {
+        let mut prev_warm_load: Option<u64> = None;
+        let mut prev_warm_cyc: Option<u64> = None;
+        for &lanes in lane_sweep {
+            let steps = replay_unet_steps_sharded_policy(
+                model,
+                lanes,
+                lmm,
+                cache,
+                2,
+                threads,
+                OffloadPolicy::QuantizedAndConv,
+            );
+            let (cold, warm) = (&steps[0], &steps[1]);
+            let max_w = |c: &imax_sd::sd::plan::ShardStepCost| {
+                c.weight_load_per_lane.iter().max().copied().unwrap_or(0)
+            };
+            let ms = |cycles: u64| cycles as f64 / clock_hz * 1e3;
+            t.row(&[
+                model.name().to_string(),
+                format!("{lanes}"),
+                format!("{:.2}", ms(cold.max_lane_cycles)),
+                format!("{:.2}", ms(warm.max_lane_cycles)),
+                format!("{}", max_w(cold)),
+                format!("{}", max_w(warm)),
+            ]);
+            // Warm-vs-cold is NOT claimed here: the 64 KiB/lane budget
+            // pins only a slice of the conv weight set, and shards that
+            // cached transiently during the cold step re-stream every
+            // warm step (the replica shows warm > cold per lane). What
+            // does hold — and what the ROADMAP bandwidth claim needs —
+            // is the monotone warm shrink as lanes are added.
+            if let Some(prev) = prev_warm_load {
+                assert!(
+                    max_w(warm) < prev,
+                    "{model:?}: warm per-lane weight LOAD must shrink with lanes \
+                     ({prev} B -> {} B at {lanes} lanes)",
+                    max_w(warm)
+                );
+            }
+            if let Some(prev) = prev_warm_cyc {
+                assert!(
+                    warm.max_lane_cycles < prev,
+                    "{model:?}: warm lane wall-clock must improve with lanes"
+                );
+            }
+            prev_warm_load = Some(max_w(warm));
+            prev_warm_cyc = Some(warm.max_lane_cycles);
+        }
+    }
+    t.print();
+    println!(
+        "\nper-lane conv weight LOAD shrinks with lanes: row-tile shards of the F16 conv\n\
+         weights pin per lane, and the im2col activation stream is broadcast-elided\n\
+         (tests/shard_props.rs asserts the byte invariance per op).\n"
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let threads = args
+        .iter()
+        .position(|a| a == "--threads")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4usize);
+    let conv_offload = args
+        .iter()
+        .position(|a| a == "--conv-offload")
+        .and_then(|i| args.get(i + 1))
+        .map(|v| v != "off")
+        .unwrap_or(true);
+    let steps = if smoke { 2 } else { 3 };
+    println!(
+        "conv_offload: mini U-Net step, F16 ConvIm2col via OP_SML16 (conv offload {}{})\n",
+        if conv_offload { "on" } else { "off" },
+        if smoke { ", smoke" } else { "" }
+    );
+
+    let mut t = Table::new(
+        "Conv offload vs host-conv path (cold step 1, warm step 2)",
+        &[
+            "model",
+            "substrate",
+            "mode",
+            "cold Mcyc",
+            "warm Mcyc",
+            "warm LOAD B",
+            "host path Mcyc",
+            "warm/host",
+        ],
+    );
+    let mut records = Vec::new();
+    for model in [QuantModel::Q8_0, QuantModel::Q3K] {
+        let conv_macs = unet_step_conv_macs(model);
+        assert!(conv_macs > 100_000_000, "convs dominate the step ({conv_macs} MACs)");
+        for sub in substrates() {
+            let policy =
+                if conv_offload { OffloadPolicy::QuantizedAndConv } else { OffloadPolicy::QuantizedOnly };
+            let run = replay_unet_steps_policy(model, sub.imax.clone(), steps, policy);
+            let quant =
+                replay_unet_steps_policy(model, sub.imax.clone(), steps, OffloadPolicy::QuantizedOnly);
+            let (cold, warm) = (run[0], run[1]);
+            // Host-conv path: quantized-only lane cycles plus the conv
+            // MACs at the A72's F16 rate, in lane-clock cycles.
+            let host_conv_cycles =
+                (conv_macs as f64 / (arm_a72().gmacs_f16 * 1e9) * sub.imax.clock_hz) as u64;
+            let host_path = quant[1].cycles + host_conv_cycles;
+            let mcyc = |c: u64| format!("{:.2}", c as f64 / 1e6);
+            t.row(&[
+                model.name().to_string(),
+                sub.name.into(),
+                if conv_offload { "offload".into() } else { "host conv".to_string() },
+                mcyc(cold.cycles),
+                mcyc(warm.cycles),
+                format!("{}", warm.load_bytes),
+                mcyc(host_path),
+                format!("{:.2}x", warm.cycles as f64 / host_path as f64),
+            ]);
+            if conv_offload {
+                if sub.offload_wins {
+                    // On the 256 KiB FPGA cache the pin pass locks the
+                    // budget and mid-sized conv weights that cached
+                    // transiently during the cold step re-stream every
+                    // warm chunk, so cold-vs-warm is only a claim where
+                    // the weight set actually fits (the substrate
+                    // tests/weight_cache.rs pins the inequality on).
+                    assert!(
+                        warm.cycles < cold.cycles,
+                        "{model:?} on {}: resident conv weights must beat the cold step",
+                        sub.name
+                    );
+                }
+                if !smoke {
+                    assert_eq!(run[1], run[2], "{model:?} on {}: steady state", sub.name);
+                }
+                if sub.offload_wins {
+                    assert!(
+                        warm.cycles < host_path,
+                        "{model:?} on {}: warm offload ({}) must beat the host-conv \
+                         path ({host_path})",
+                        sub.name,
+                        warm.cycles
+                    );
+                } else {
+                    // The Fig. 11 lesson, stated positively: on the
+                    // prototype DMA the conv stream is LOAD-bound and
+                    // the offload loses to the host-conv path.
+                    assert!(
+                        warm.cycles > host_path,
+                        "{model:?} on {}: the prototype-DMA regression disappeared? \
+                         ({} vs {host_path})",
+                        sub.name,
+                        warm.cycles
+                    );
+                }
+            }
+            records.push(Record {
+                model: model.name(),
+                substrate: sub.name,
+                conv_offload,
+                cold,
+                warm,
+                host_path_cycles: host_path,
+            });
+        }
+    }
+    t.print();
+    println!(
+        "\nhost path = quantized-only warm lane cycles + conv MACs at the A72 F16 rate\n\
+         ({:.1} GMAC/s), in lane-clock cycles. The offload wins only with the production\n\
+         interconnect — on the prototype DMA it regresses (the Fig. 11 lesson).\n",
+        arm_a72().gmacs_f16
+    );
+
+    if conv_offload {
+        sharded_section(threads, smoke);
+    } else {
+        println!("(--conv-offload off: sharded conv section skipped)");
+    }
+    emit_json(&records);
+}

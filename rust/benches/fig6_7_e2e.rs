@@ -6,7 +6,9 @@
 //! crossover: the FPGA *loses* to standalone ARM on Q8_0 (transfer
 //! volume), the paper's central finding.
 
+use imax_sd::device::future::ImaxFutureDevice;
 use imax_sd::device::{arm_a72, gtx_1080ti, xeon_w5, Device, ImaxDevice};
+use imax_sd::imax::ImaxConfig;
 use imax_sd::sd::arch::sd_turbo_512;
 use imax_sd::sd::QuantModel;
 use imax_sd::util::tables::BarChart;
@@ -33,4 +35,25 @@ fn main() {
         println!();
     }
     println!("paper anchors: Fig6 809.7/790.3/754.5/59.3/16.2  Fig7 625.1/654.7/558.0/~60/~15");
+
+    // Projected conv-offload delta on these same bars: the F16 ops of
+    // the trace are the im2col convs, so ImaxFutureDevice baseline vs
+    // extended is exactly the F16 conv datapath delta
+    // (`benches/conv_offload.rs` measures it cycle-accurately on the
+    // mini U-Net; `benches/future_work.rs` sweeps the substrates).
+    println!("\nprojected conv-offload delta on the ASIC bars (F16 kernel):");
+    for (fig, model) in [(6, QuantModel::Q3K), (7, QuantModel::Q8_0)] {
+        let base = ImaxFutureDevice::baseline(ImaxConfig::asic(1)).e2e_seconds(&trace, model);
+        let proto = ImaxFutureDevice::extended(ImaxConfig::asic(1), 2).e2e_seconds(&trace, model);
+        let mut fast = ImaxConfig::asic(1);
+        fast.dma_bytes_per_cycle = 8.0;
+        let prod = ImaxFutureDevice::extended(fast, 2).e2e_seconds(&trace, model);
+        println!(
+            "  Fig.{fig} {}: {base:.1} s -> {proto:.1} s on the prototype DMA \
+             ({:+.0}%, regression), {prod:.1} s with 6.7 GB/s DMA ({:+.0}%)",
+            model.name(),
+            (proto - base) / base * 100.0,
+            (prod - base) / base * 100.0,
+        );
+    }
 }

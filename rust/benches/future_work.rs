@@ -64,6 +64,43 @@ fn main() {
     t.print();
     println!("(Xeon reference: {:.1} s)\n", xeon_w5().e2e_seconds(&trace, m));
 
+    // --- 1b. Conv-offload delta, both models and substrates: the same
+    // experiment `benches/conv_offload.rs` runs cycle-accurately on the
+    // mini U-Net, projected analytically onto the full SD-1.5 trace.
+    // The F16 ops of the trace are the im2col convs, so baseline vs
+    // +F16 *is* the conv-offload delta.
+    let mut t = Table::new(
+        "Conv-offload delta: e2e (s) without vs with the F16 conv datapath",
+        &["model", "substrate", "host conv", "offload", "delta (s)", "delta"],
+    );
+    for model in [QuantModel::Q8_0, QuantModel::Q3K] {
+        let mut fast_asic = ImaxConfig::asic(1);
+        fast_asic.dma_bytes_per_cycle = 8.0;
+        let subs: Vec<(&str, ImaxConfig)> = vec![
+            ("FPGA, prototype DMA", ImaxConfig::fpga(1)),
+            ("ASIC, prototype DMA", ImaxConfig::asic(1)),
+            ("ASIC, 6.7 GB/s DMA", fast_asic),
+        ];
+        for (name, imax) in subs {
+            let base = ImaxFutureDevice::baseline(imax.clone()).e2e_seconds(&trace, model);
+            let off = ImaxFutureDevice::extended(imax, 2).e2e_seconds(&trace, model);
+            t.row(&[
+                model.name().to_string(),
+                name.into(),
+                format!("{base:.1}"),
+                format!("{off:.1}"),
+                format!("{:+.1}", off - base),
+                format!("{:+.1}%", (off - base) / base * 100.0),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "negative delta = offload wins. On the prototype DMA the conv offload\n\
+         REGRESSES (im2col activation stream is LOAD-bound, Fig. 11); the\n\
+         production interconnect flips the sign.\n"
+    );
+
     // --- 2. Host-core sweep of the lane ceiling.
     let mut t = Table::new(
         "Future work 2: Q3_K kernel seconds vs lanes, by host cores (FPGA)",

@@ -23,6 +23,8 @@ fn pipe_cfg(model: QuantModel) -> PipelineConfig {
         model: Some(model),
         steps: 1,
         backend: Backend::Host { threads: 2 },
+        // The CLI default: F16 conv GEMMs coalesce and offload too.
+        conv_offload: true,
     }
 }
 

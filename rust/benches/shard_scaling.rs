@@ -21,10 +21,16 @@
 //!
 //! The simulated numbers are deterministic; the wall-clock section is
 //! host-dependent by nature. `--smoke` shrinks the sweep for CI;
-//! `--threads N` sets the host thread count (default 4).
+//! `--threads N` sets the host thread count (default 4);
+//! `--conv-offload on` additionally row-tile-shards the F16
+//! `ConvIm2col` weights across the lanes (the §VI OP_SML16 datapath);
+//! the warm per-lane LOAD and kernel-seconds monotonicity holds in
+//! both modes (`python/replica/conv_offload_replica.py` replays the
+//! conv-on sweep step by step).
 
+use imax_sd::coordinator::OffloadPolicy;
 use imax_sd::imax::ImaxConfig;
-use imax_sd::sd::plan::{replay_unet_steps_sharded_threads, ShardStepCost};
+use imax_sd::sd::plan::{replay_unet_steps_sharded_policy, ShardStepCost};
 use imax_sd::sd::QuantModel;
 use imax_sd::util::tables::Table;
 
@@ -99,12 +105,22 @@ fn main() {
         .and_then(|i| args.get(i + 1))
         .and_then(|v| v.parse().ok())
         .unwrap_or(4usize);
+    let conv_offload = args
+        .iter()
+        .position(|a| a == "--conv-offload")
+        .and_then(|i| args.get(i + 1))
+        .map(|v| v == "on")
+        .unwrap_or(false);
+    let policy =
+        if conv_offload { OffloadPolicy::QuantizedAndConv } else { OffloadPolicy::QuantizedOnly };
     let lane_sweep: &[usize] = if smoke { &[1, 2, 4] } else { &[1, 2, 4, 8] };
     let clock_hz = ImaxConfig::fpga(1).clock_hz;
     println!(
-        "shard_scaling: mini U-Net step, row-tile sharding over {:?} lanes{}\n",
+        "shard_scaling: mini U-Net step, row-tile sharding over {:?} lanes{} \
+         (conv offload {})\n",
         lane_sweep,
-        if smoke { " (smoke)" } else { "" }
+        if smoke { " (smoke)" } else { "" },
+        if conv_offload { "on" } else { "off" }
     );
 
     // 512 KiB LMM with a 64 KiB/lane cache partition: small enough that
@@ -130,7 +146,7 @@ fn main() {
             // `threads` only selects inline vs worker-pool execution —
             // every simulated number below is bit-identical either way.
             let steps =
-                replay_unet_steps_sharded_threads(model, lanes, lmm, cache, 2, threads);
+                replay_unet_steps_sharded_policy(model, lanes, lmm, cache, 2, threads, policy);
             let (cold, warm) = (&steps[0], &steps[1]);
             let max_w = |c: &ShardStepCost| {
                 c.weight_load_per_lane.iter().max().copied().unwrap_or(0)
@@ -147,7 +163,9 @@ fn main() {
                 format!("{}", warm.hits),
             ]);
             // The acceptance regression, also asserted in
-            // tests/backend_equivalence.rs over 1/2/4 lanes.
+            // tests/backend_equivalence.rs over 1/2/4 lanes; the conv
+            // replica validates the same monotonicity with the conv
+            // weights sharded in.
             if let Some(prev) = prev_warm_load {
                 assert!(
                     max_w(warm) < prev,

@@ -1,6 +1,7 @@
 //! Offload policy: which mat-muls go to IMAX.
 
 use crate::ggml::{DType, Tensor};
+use crate::sd::backend::OpKind;
 
 /// Routing policy for mat-mul jobs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -8,17 +9,53 @@ pub enum OffloadPolicy {
     /// The paper's policy (§III-B): only the model's quantized kernels
     /// (Q8_0 / Q3_K weights) are offloaded; F16/F32 stay on the host.
     QuantizedOnly,
+    /// [`OffloadPolicy::QuantizedOnly`] plus the §VI extension: F16
+    /// `ConvIm2col` GEMMs (the pipeline's dominant MAC population,
+    /// Table I) run on the lane via the OP_SML16 kernel. F16 *linear*
+    /// fallback weights and all F32 ops still stay on the host — the
+    /// policy is kind-aware, not a blanket dtype rule.
+    QuantizedAndConv,
     /// Everything on the host (the "standalone ARM" baseline).
     HostOnly,
 }
 
 impl OffloadPolicy {
-    /// Decide for a weight tensor.
+    /// Decide for a weight tensor alone (dtype-only view; used where the
+    /// op kind is unknown). F16 never offloads on this view — conv
+    /// routing needs the kind and goes through
+    /// [`OffloadPolicy::offloads_op`].
     pub fn offloads(self, w: &Tensor) -> bool {
         match self {
             OffloadPolicy::HostOnly => false,
-            OffloadPolicy::QuantizedOnly => {
+            OffloadPolicy::QuantizedOnly | OffloadPolicy::QuantizedAndConv => {
                 matches!(w.dtype(), DType::Q8_0 | DType::Q3K)
+            }
+        }
+    }
+
+    /// Decide for a weight tensor under a specific op kind — the full
+    /// routing rule every submission path consults. Quantized weights
+    /// offload regardless of kind; F16 offloads only for `ConvIm2col`
+    /// and only under [`OffloadPolicy::QuantizedAndConv`].
+    pub fn offloads_op(self, w: &Tensor, kind: OpKind) -> bool {
+        self.offloads(w)
+            || (self == OffloadPolicy::QuantizedAndConv
+                && w.dtype() == DType::F16
+                && matches!(kind, OpKind::ConvIm2col { .. }))
+    }
+
+    /// Decide for a plan-aggregated weight that is already known to be
+    /// lane-eligible by kind (see
+    /// [`crate::sd::plan::OpSite::offload_eligible`] — the only F16
+    /// entries a plan aggregates are conv sites). The prefetch/pin
+    /// passes use this so a quantized-only run never wastes cache budget
+    /// pinning conv weights it will execute on the host.
+    pub fn offloads_use(self, dtype: DType) -> bool {
+        match self {
+            OffloadPolicy::HostOnly => false,
+            OffloadPolicy::QuantizedOnly => matches!(dtype, DType::Q8_0 | DType::Q3K),
+            OffloadPolicy::QuantizedAndConv => {
+                matches!(dtype, DType::Q8_0 | DType::Q3K | DType::F16)
             }
         }
     }
@@ -38,5 +75,27 @@ mod tests {
         assert!(!p.offloads(&h));
         assert!(!p.offloads(&f));
         assert!(!OffloadPolicy::HostOnly.offloads(&q));
+    }
+
+    #[test]
+    fn conv_policy_is_kind_aware() {
+        let f = Tensor::f32(2, 18, vec![0.1; 36]);
+        let q = Tensor::f32(2, 64, vec![0.1; 128]).quantize(DType::Q8_0);
+        let h = f.quantize(DType::F16);
+        let conv = OpKind::ConvIm2col { k: 3, stride: 1 };
+        let p = OffloadPolicy::QuantizedAndConv;
+        // F16 conv sites offload; F16 linears and F32 convs do not.
+        assert!(p.offloads_op(&h, conv));
+        assert!(!p.offloads_op(&h, OpKind::Linear));
+        assert!(!p.offloads_op(&f, conv));
+        // Quantized weights offload under any kind, as before.
+        assert!(p.offloads_op(&q, OpKind::Linear));
+        assert!(p.offloads(&q));
+        // The dtype-only view still refuses F16 (no kind to judge by).
+        assert!(!p.offloads(&h));
+        // QuantizedOnly never offloads F16 convs (the --conv-offload=off
+        // baseline), and HostOnly refuses everything.
+        assert!(!OffloadPolicy::QuantizedOnly.offloads_op(&h, conv));
+        assert!(!OffloadPolicy::HostOnly.offloads_op(&q, OpKind::Linear));
     }
 }

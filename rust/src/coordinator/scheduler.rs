@@ -64,6 +64,7 @@ use crate::imax::timing::PhaseBreakdown;
 use crate::imax::ImaxConfig;
 use crate::sd::backend::{OpDesc, OpKind};
 use crate::sd::plan::OpPlan;
+use crate::util::f16::F16;
 use crate::util::pool::{CompletionSlot, LanePool};
 use std::collections::HashMap;
 use std::ops::Range;
@@ -153,6 +154,10 @@ enum QuantActs {
     Q8_0(Vec<crate::ggml::q8_0::BlockQ8_0>),
     /// Q3_K kernel partner (Q8_K rows).
     Q8K(Vec<crate::ggml::q8_k::BlockQ8K>),
+    /// F16 kernel partner — activations stay f32 (the OP_SML16 kernel
+    /// multiplies F16 weights against f32 activations directly, which is
+    /// what keeps the lane bit-identical to the host reference).
+    F16(Vec<f32>),
 }
 
 /// One shard's weight rows, borrowed from the parent tensor (the inline
@@ -162,6 +167,8 @@ enum BlockRows<'a> {
     Q8_0(&'a [BlockQ8_0]),
     /// Q3_K super-block rows.
     Q3K(&'a [BlockQ3K]),
+    /// F16 element rows (block size 1).
+    F16(&'a [F16]),
 }
 
 /// The owned (`'static`) form of [`BlockRows`] an enqueued lane job
@@ -172,6 +179,8 @@ enum OwnedBlockRows {
     Q8_0(Vec<BlockQ8_0>),
     /// Q3_K super-block rows.
     Q3K(Vec<BlockQ3K>),
+    /// F16 element rows.
+    F16(Vec<F16>),
 }
 
 impl OwnedBlockRows {
@@ -179,6 +188,7 @@ impl OwnedBlockRows {
         match self {
             OwnedBlockRows::Q8_0(b) => BlockRows::Q8_0(b),
             OwnedBlockRows::Q3K(b) => BlockRows::Q3K(b),
+            OwnedBlockRows::F16(b) => BlockRows::F16(b),
         }
     }
 }
@@ -311,6 +321,9 @@ impl Coordinator {
             .map(|l| l.lock().unwrap().lmm.cache_budget())
             .collect();
         for (wu, idx) in plan.lane_assignment(self.lanes.len()) {
+            if !self.policy.offloads_use(wu.dtype) {
+                continue; // e.g. F16 conv weights under the quantized-only policy
+            }
             map.insert(wu.wid.0, idx);
             if wu.bytes <= remaining[idx] {
                 remaining[idx] -= wu.bytes;
@@ -332,6 +345,9 @@ impl Coordinator {
         let budget = self.lane_cache_budget();
         let mut remaining = vec![budget; self.lanes.len()];
         for wu in plan.weight_uses() {
+            if !self.policy.offloads_use(wu.dtype) {
+                continue; // this policy executes those sites on the host
+            }
             let rows = wu.rows.max(1);
             // The same derivation submit_sharded uses at execution time
             // (`shard_geometry`), so the shard geometry — and the derived
@@ -438,8 +454,10 @@ impl Coordinator {
         }
     }
 
-    /// Quantize the activation rows into the weight kernel's vec-dot
-    /// partner format (host-side marshalling, once per op).
+    /// Marshal the activation rows into the weight kernel's vec-dot
+    /// partner format (host-side, once per op): quantized kernels get
+    /// their quantized partner rows, the F16 kernel keeps the f32 rows
+    /// verbatim (no activation conversion — the bit-identity contract).
     fn marshal_acts(w: &Tensor, x: &Tensor) -> QuantActs {
         match &w.data {
             crate::ggml::tensor::Storage::Q8_0(_) => QuantActs::Q8_0(
@@ -448,20 +466,22 @@ impl Coordinator {
             crate::ggml::tensor::Storage::Q3K(_) => QuantActs::Q8K(
                 (0..x.rows).flat_map(|r| q8_k::quantize_row(x.row_f32(r))).collect(),
             ),
-            _ => unreachable!("policy only offloads quantized weights"),
+            crate::ggml::tensor::Storage::F16(_) => QuantActs::F16(x.as_f32().to_vec()),
+            _ => unreachable!("policy only offloads lane-eligible weights"),
         }
     }
 
-    /// The lane kernel a quantized weight selects.
+    /// The lane kernel a lane-eligible weight selects.
     fn kernel_kind(w: &Tensor) -> KernelKind {
-        KernelKind::of_dtype(w.dtype()).expect("policy only offloads quantized weights")
+        KernelKind::of_dtype(w.dtype()).expect("policy only offloads lane-eligible weights")
     }
 
     /// Whether an op is eligible for (sharded) lane submission: the
     /// single gate [`crate::sd::backend::ShardedBackend`] and the
-    /// serving rendezvous share.
+    /// serving rendezvous share. Kind-aware: F16 weights shard only for
+    /// conv sites (and only under the conv-offload policy).
     pub fn shardable(&self, op: &OpDesc<'_>) -> bool {
-        self.policy.offloads(op.w) && !self.lanes.is_empty()
+        self.policy.offloads_op(op.w, op.kind) && !self.lanes.is_empty()
     }
 
     /// Borrow weight rows `rows` of `w` as kernel block rows.
@@ -475,7 +495,10 @@ impl Coordinator {
                 let bpr = w.cols / QK_K;
                 BlockRows::Q3K(&blocks[rows.start * bpr..rows.end * bpr])
             }
-            _ => unreachable!("policy only offloads quantized weights"),
+            crate::ggml::tensor::Storage::F16(halves) => {
+                BlockRows::F16(&halves[rows.start * w.cols..rows.end * w.cols])
+            }
+            _ => unreachable!("policy only offloads lane-eligible weights"),
         }
     }
 
@@ -485,6 +508,7 @@ impl Coordinator {
         match Self::borrow_rows(w, rows) {
             BlockRows::Q8_0(b) => OwnedBlockRows::Q8_0(b.to_vec()),
             BlockRows::Q3K(b) => OwnedBlockRows::Q3K(b.to_vec()),
+            BlockRows::F16(b) => OwnedBlockRows::F16(b.to_vec()),
         }
     }
 
@@ -521,7 +545,7 @@ impl Coordinator {
     /// eager `execute_ref`/`execute_batch` entry points (counter
     /// semantics preserved: one `record_offload`/`record_host` per op).
     pub fn submit_op(&self, op: &OpDesc<'_>) -> Tensor {
-        if self.policy.offloads(op.w) && !self.lanes.is_empty() {
+        if self.policy.offloads_op(op.w, op.kind) && !self.lanes.is_empty() {
             let (w, x) = (op.w, op.x);
             let (m, n) = (w.rows, x.rows);
             let acts = Self::marshal_acts(w, x);
@@ -670,7 +694,7 @@ impl Coordinator {
         let mut groups: Vec<Vec<usize>> = Vec::new();
         let mut by_weight: HashMap<usize, usize> = HashMap::new();
         for (i, job) in jobs.iter().enumerate() {
-            if self.policy.offloads(&job.w) && !self.lanes.is_empty() {
+            if self.policy.offloads_op(&job.w, job.kind) && !self.lanes.is_empty() {
                 let key = Arc::as_ptr(&job.w) as usize;
                 match by_weight.entry(key) {
                     std::collections::hash_map::Entry::Occupied(e) => groups[*e.get()].push(i),
@@ -770,6 +794,9 @@ fn exec_rows(
             lane.mul_mat_q3_k_cached(wid, blocks, m_i, a, a.len() / bpr, k)
                 .expect("job shapes fit LMM")
         }
+        (BlockRows::F16(halves), QuantActs::F16(a)) => lane
+            .mul_mat_f16_cached(wid, halves, m_i, a, a.len() / k, k)
+            .expect("job shapes fit LMM"),
         _ => unreachable!("marshalled activations match the weight kernel"),
     };
     lane.set_act_byte_elision(false);

@@ -13,13 +13,16 @@
 
 use super::PES_PER_LANE;
 
-/// Which quantized kernel a configuration implements.
+/// Which lane kernel a configuration implements.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum KernelKind {
     /// Q8_0 × Q8_0 dot (Fig. 3).
     Q8_0,
     /// Q3_K × Q8_K dot with IMAX restructuring (Fig. 4).
     Q3K,
+    /// F16 × f32 dot via OP_SML16 (§VI future work; carries the conv
+    /// GEMMs, the pipeline's dominant MAC population per Table I).
+    F16,
 }
 
 impl KernelKind {
@@ -28,16 +31,21 @@ impl KernelKind {
         match self {
             KernelKind::Q8_0 => "Q8_0",
             KernelKind::Q3K => "Q3_K",
+            KernelKind::F16 => "F16",
         }
     }
 
     /// The lane kernel a weight storage dtype selects (`None` for
     /// host-only dtypes) — the single dtype→kernel mapping the offload
-    /// paths share.
+    /// paths share. Note F16 maps to a kernel but only `ConvIm2col`
+    /// sites route F16 to the lane (the offload *policy* is
+    /// kind-aware; F16 linear fallbacks stay on the host, matching the
+    /// paper's routing table with the §VI conv extension).
     pub fn of_dtype(dtype: crate::ggml::DType) -> Option<KernelKind> {
         match dtype {
             crate::ggml::DType::Q8_0 => Some(KernelKind::Q8_0),
             crate::ggml::DType::Q3K => Some(KernelKind::Q3K),
+            crate::ggml::DType::F16 => Some(KernelKind::F16),
             _ => None,
         }
     }
@@ -50,6 +58,8 @@ pub enum PeRole {
     Load,
     /// OP_SML8 multiply-add stage.
     Sml8,
+    /// OP_SML16 F16×f32 multiply-accumulate stage (§VI).
+    Sml16,
     /// OP_AD24 aggregation stage.
     Ad24,
     /// OP_CVT53 restructuring stage (Q3_K only).
@@ -159,11 +169,57 @@ impl KernelConfig {
         cfg
     }
 
+    /// The F16 mapping: 46 PEs (§VI future work, modelled).
+    ///
+    /// The paper does not publish an OP_SML16 placement — §VI only
+    /// motivates the instruction — so this fixes a concrete mapping with
+    /// the same group structure as Q8_0 (whose footprint OP_SML16 would
+    /// share: one multiply stage per SIMD word, f32 spine unchanged).
+    /// Each OP_SML16 PE retires 2 F16×f32 products per beat (one 32-bit
+    /// weight lane = 2 packed halves, versus 4 int8 products for
+    /// OP_SML8), so a group retires a 16-element slice per beat:
+    ///
+    /// ```text
+    /// per group (12 PEs):
+    ///   3 × Load      stream 1 packed w-word (4 halves) + 2 a-words
+    ///   8 × OP_SML16  2 products each, in-order f32 accumulate = 16 MACs
+    ///   1 × Fma       group-partial chain (ordered)
+    /// shared (10 PEs):
+    ///   6 × Fma       ordered cross-group f32 reduction spine
+    ///   2 × Load      activation prefetch
+    ///   2 × Store     result drain to LMM
+    /// total: 3 × 12 + 10 = 46
+    /// ```
+    ///
+    /// Groups stride a dot's 16-element slices exactly like the
+    /// quantized kernels stride blocks; the ordered reduction spine
+    /// keeps the *value* semantics sequential in element order, which is
+    /// what makes the lane dot bit-identical to the host reference (see
+    /// [`crate::imax::isa::op_sml16`]).
+    pub fn f16() -> KernelConfig {
+        use PeRole::*;
+        let group = vec![
+            Load, Load, Load, Sml16, Sml16, Sml16, Sml16, Sml16, Sml16, Sml16, Sml16, Fma,
+        ];
+        let shared = vec![Fma, Fma, Fma, Fma, Fma, Fma, Load, Load, Store, Store];
+        let cfg = KernelConfig {
+            kind: KernelKind::F16,
+            groups: 3,
+            elems_per_beat: 16,
+            pipeline_depth: 12 + 4,
+            group_pes: group,
+            shared_pes: shared,
+        };
+        debug_assert_eq!(cfg.pe_count(), 46);
+        cfg
+    }
+
     /// Config for a kernel kind.
     pub fn for_kind(kind: KernelKind) -> KernelConfig {
         match kind {
             KernelKind::Q8_0 => KernelConfig::q8_0(),
             KernelKind::Q3K => KernelConfig::q3_k(),
+            KernelKind::F16 => KernelConfig::f16(),
         }
     }
 
@@ -249,5 +305,29 @@ mod tests {
     fn mac_rates() {
         assert_eq!(KernelConfig::q8_0().macs_per_beat(), 96);
         assert_eq!(KernelConfig::q3_k().macs_per_beat(), 48);
+        assert_eq!(KernelConfig::f16().macs_per_beat(), 48);
+    }
+
+    #[test]
+    fn f16_mapping_fits_and_covers_its_beat() {
+        let cfg = KernelConfig::f16();
+        assert_eq!(cfg.pe_count(), 46, "modelled §VI footprint mirrors Q8_0");
+        assert!(cfg.pe_count() <= PES_PER_LANE);
+        let sml16 = cfg.group_pes.iter().filter(|r| **r == PeRole::Sml16).count();
+        // Each OP_SML16 PE performs 2 F16×f32 products per beat.
+        assert_eq!(sml16 * 2, cfg.elems_per_beat);
+        // k=1152 (cin=128, 3×3) -> 72 slices over 3 groups -> 24 beats.
+        assert_eq!(cfg.beats_for_dot(1152), 24);
+        // Odd tails still round up to a slice.
+        assert_eq!(cfg.beats_for_dot(17), 1);
+        assert_eq!(cfg.beats_for_dot(49), 2);
+    }
+
+    #[test]
+    fn f16_dtype_selects_the_f16_kernel() {
+        use crate::ggml::DType;
+        assert_eq!(KernelKind::of_dtype(DType::F16), Some(KernelKind::F16));
+        assert_eq!(KernelKind::of_dtype(DType::F32), None);
+        assert_eq!(KernelKind::of_dtype(DType::Q8K), None);
     }
 }

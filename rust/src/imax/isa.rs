@@ -18,6 +18,16 @@
 //! * [`op_cvt53`] — **OP_CVT53**: Q3_K restructuring: expands packed 3-bit
 //!   quants (stored `q+4`) to signed 8-bit and applies the 5-bit scale
 //!   path (effective scale `2·s5`) by signed multiplication.
+//! * [`op_sml16`] — **OP_SML16**: 2-way SIMD F16 multiply with f32
+//!   accumulation, the §VI future-work instruction that moves the F16
+//!   conv GEMMs (the pipeline's dominant MAC population, Table I) onto
+//!   the lane. One 32-bit weight lane carries two packed halves; the
+//!   matching activations stay f32 (converting them to f16 would change
+//!   the numerics — f16→f32 conversion is exact, so keeping f32
+//!   activations makes the lane dot bit-identical to the host
+//!   `dot_f16_f32` reference by construction).
+
+use crate::util::f16::F16;
 
 /// Two signed 8-bit segments packed in a 32-bit SIMD lane.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -105,6 +115,37 @@ pub fn op_fadd(a: f32, b: f32) -> f32 {
 #[inline]
 pub fn op_fma(acc: f32, a: f32, b: f32) -> f32 {
     op_fadd(acc, op_fmul(a, b))
+}
+
+/// Two IEEE binary16 weight values packed in one 32-bit SIMD lane word —
+/// the LMM-side layout OP_SML16 consumes (halves the weight DMA volume
+/// versus f32 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PairF16(pub F16, pub F16);
+
+/// **OP_SML16** (one 32-bit weight lane × one f32 activation word):
+/// unpacks the two halves (exact f16→f32 conversion), multiplies each
+/// with its f32 activation, and folds both products into the running
+/// f32 accumulator **in element order**: `((acc + w0·a0) + w1·a1)`.
+///
+/// The in-order accumulation is the load-bearing property: the host
+/// reference `ggml::dot::dot_f16_f32` is the same sequential
+/// `s += wᵢ·aᵢ` loop, and since f16→f32 is exact and the multiplies /
+/// adds round identically, the lane dot is bit-identical to the host
+/// dot by construction — no tolerance windows anywhere above.
+#[inline]
+pub fn op_sml16(acc: f32, w: PairF16, a: [f32; 2]) -> f32 {
+    let p0 = op_fmul(w.0.to_f32(), a[0]);
+    let p1 = op_fmul(w.1.to_f32(), a[1]);
+    op_fadd(op_fadd(acc, p0), p1)
+}
+
+/// **OP_SML16** tail half: odd-length rows finish with a single
+/// half×f32 product folded into the accumulator (the second SIMD slot
+/// streams a zero weight on hardware; the simulator skips it).
+#[inline]
+pub fn op_sml16_tail(acc: f32, w: F16, a: f32) -> f32 {
+    op_fadd(acc, op_fmul(w.to_f32(), a))
 }
 
 /// Pack 4 consecutive i8 values into the `[Pair8; 2]` word layout OP_SML8
@@ -211,5 +252,38 @@ mod tests {
     fn pack_word_layout() {
         let w = pack_word(&[1, -2, 3, -4]);
         assert_eq!(w, [Pair8(1, -2), Pair8(3, -4)]);
+    }
+
+    #[test]
+    fn sml16_matches_sequential_host_order() {
+        // ((acc + w0·a0) + w1·a1) must equal the host loop's two
+        // successive `s += w·a` steps bit-for-bit.
+        let w = PairF16(F16::from_f32(1.5), F16::from_f32(-0.25));
+        let a = [3.0f32, 7.0f32];
+        let acc = 0.125f32;
+        let mut host = acc;
+        host += F16::from_f32(1.5).to_f32() * a[0];
+        host += F16::from_f32(-0.25).to_f32() * a[1];
+        assert_eq!(op_sml16(acc, w, a).to_bits(), host.to_bits());
+    }
+
+    #[test]
+    fn sml16_accumulation_is_not_reassociated() {
+        // Catastrophic-cancellation probe: reordering the two adds gives
+        // a different f32 result, so bit-identity pins the order.
+        let w = PairF16(F16::from_f32(1.0), F16::from_f32(1.0));
+        let a = [1.0e-8f32, -1.0f32];
+        let seq = op_sml16(1.0, w, a);
+        let reassoc = 1.0f32 + (1.0e-8f32 + -1.0f32);
+        assert_ne!(seq.to_bits(), reassoc.to_bits());
+    }
+
+    #[test]
+    fn sml16_tail_single_product() {
+        let got = op_sml16_tail(2.0, F16::from_f32(0.5), 8.0);
+        assert_eq!(got, 6.0);
+        // Exactness of the f16→f32 unpack: subnormal half survives.
+        let tiny = F16(1); // 2^-24
+        assert_eq!(op_sml16_tail(0.0, tiny, 1.0), tiny.to_f32());
     }
 }

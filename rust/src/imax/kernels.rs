@@ -9,7 +9,9 @@
 //!   sums, same f32 multiply/accumulate order), and
 //! * [`dot_q3_k`] ≡ [`crate::ggml::q3_k::vec_dot_imax5`] — the *IMAX
 //!   restructured* variant with 5-bit scales, because that is what the
-//!   hardware executes after `OP_CVT53` (§III-B).
+//!   hardware executes after `OP_CVT53` (§III-B), and
+//! * [`dot_f16`] ≡ [`crate::ggml::dot::dot_f16_f32`] (OP_SML16 pairs
+//!   accumulate in element order over exact f16→f32 unpacks — §VI).
 //!
 //! Each call also reports the beats consumed, which the timing model in
 //! [`super::lane`] converts to EXEC cycles — so numerics and timing come
@@ -18,7 +20,7 @@
 use super::conf::KernelConfig;
 use super::isa::{
     op_ad24, op_add32, op_cvt53_scale, op_cvt53_unpack, op_cvti2f, op_fadd, op_fmul, op_sml8,
-    pack_word, Pair8,
+    op_sml16, op_sml16_tail, pack_word, Pair8, PairF16,
 };
 use crate::ggml::q3_k::{to_imax_stream, BlockQ3K};
 use crate::ggml::q8_0::BlockQ8_0;
@@ -123,6 +125,29 @@ pub fn dot_q3_k(cfg: &KernelConfig, w: &[BlockQ3K], a: &[BlockQ8K]) -> DotResult
     DotResult { value: acc, beats: cfg.beats_for_dot(w.len() * QK_K) }
 }
 
+/// Functional F16 × f32 dot over one weight row (§VI OP_SML16 kernel).
+///
+/// Weight halves stream from LMM two-per-32-bit-word; activations stay
+/// f32 (marshalling them to f16 would perturb the numerics — see
+/// [`crate::imax::isa::op_sml16`]). The OP_SML16 chain accumulates in
+/// element order, so the result is bit-identical to the host
+/// [`crate::ggml::dot::dot_f16_f32`] loop. Beat accounting follows the
+/// group geometry exactly like the quantized kernels: 16-element slices
+/// strided over the 3 groups.
+pub fn dot_f16(cfg: &KernelConfig, w: &[crate::util::f16::F16], a: &[f32]) -> DotResult {
+    assert_eq!(w.len(), a.len(), "row length mismatch");
+    debug_assert_eq!(cfg.kind, super::conf::KernelKind::F16);
+    let mut acc = 0.0f32;
+    let pairs = w.len() / 2;
+    for i in 0..pairs {
+        acc = op_sml16(acc, PairF16(w[2 * i], w[2 * i + 1]), [a[2 * i], a[2 * i + 1]]);
+    }
+    if w.len() % 2 == 1 {
+        acc = op_sml16_tail(acc, w[w.len() - 1], a[w.len() - 1]);
+    }
+    DotResult { value: acc, beats: cfg.beats_for_dot(w.len()) }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,5 +239,42 @@ mod tests {
     fn empty_rows_are_zero() {
         assert_eq!(dot_q8_0(&KernelConfig::q8_0(), &[], &[]).value, 0.0);
         assert_eq!(dot_q3_k(&KernelConfig::q3_k(), &[], &[]).value, 0.0);
+        assert_eq!(dot_f16(&KernelConfig::f16(), &[], &[]).value, 0.0);
+    }
+
+    #[test]
+    fn f16_bit_exact_vs_host_reference() {
+        use crate::ggml::dot::dot_f16_f32;
+        use crate::util::f16::F16;
+        let cfg = KernelConfig::f16();
+        // Odd, even, sub-slice and multi-slice lengths, conv-like K too.
+        for (seed, k) in [(1u64, 1usize), (2, 2), (3, 15), (4, 16), (5, 17), (6, 48), (7, 1152)]
+        {
+            let w: Vec<F16> =
+                random_row(k, seed * 2 + 201).iter().map(|&v| F16::from_f32(v)).collect();
+            let a = random_row(k, seed * 2 + 202);
+            let sim = dot_f16(&cfg, &w, &a);
+            let host = dot_f16_f32(&w, &a);
+            assert_eq!(
+                sim.value.to_bits(),
+                host.to_bits(),
+                "k {k}: sim {} vs host {host}",
+                sim.value
+            );
+        }
+    }
+
+    #[test]
+    fn f16_beats_match_config_formula() {
+        use crate::util::f16::F16;
+        let cfg = KernelConfig::f16();
+        let w: Vec<F16> = random_row(1152, 9).iter().map(|&v| F16::from_f32(v)).collect();
+        let a = random_row(1152, 10);
+        // 72 slices of 16 over 3 groups -> 24 beats.
+        assert_eq!(dot_f16(&cfg, &w, &a).beats, 24);
+        let w1 = vec![F16::ONE; 17];
+        let a1 = vec![1.0f32; 17];
+        assert_eq!(dot_f16(&cfg, &w1, &a1).beats, 1);
+        assert_eq!(dot_f16(&cfg, &w1, &a1).value, 17.0);
     }
 }

@@ -50,6 +50,7 @@ use crate::ggml::q8_0::BlockQ8_0;
 use crate::ggml::q8_k::BlockQ8K;
 use crate::ggml::tensor::WeightId;
 use crate::ggml::{QK8_0, QK_K};
+use crate::util::f16::F16;
 
 /// How the weight operand of one offloaded mul_mat reaches the LMM.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -64,20 +65,25 @@ pub enum WeightResidency {
     Resident,
 }
 
-/// Bytes of one quantized weight row of `k` elements.
+/// Bytes of one lane-format weight row of `k` elements (F16 rows pack
+/// two halves per 32-bit word, so 2 bytes/element — half the f32 DMA).
 pub fn weight_row_bytes(kind: KernelKind, k: usize) -> usize {
     match kind {
         KernelKind::Q8_0 => k / QK8_0 * BlockQ8_0::BYTES,
         KernelKind::Q3K => k / QK_K * BlockQ3K::BYTES,
+        KernelKind::F16 => k * 2,
     }
 }
 
-/// Bytes of one quantized activation row of `k` elements (the vec-dot
-/// partner format: Q8_0 → Q8_0, Q3_K → Q8_K).
+/// Bytes of one activation row of `k` elements in the kernel's partner
+/// format (Q8_0 → Q8_0, Q3_K → Q8_K, F16 → raw f32: the OP_SML16 kernel
+/// keeps activations in f32 so the lane dot stays bit-identical to the
+/// host reference — see [`crate::imax::isa::op_sml16`]).
 pub fn act_row_bytes(kind: KernelKind, k: usize) -> usize {
     match kind {
         KernelKind::Q8_0 => k / QK8_0 * BlockQ8_0::BYTES,
         KernelKind::Q3K => k / QK_K * (4 + QK_K + 2 * (QK_K / 16)),
+        KernelKind::F16 => k * 4,
     }
 }
 
@@ -127,6 +133,7 @@ impl TilePlan {
         let block = match kind {
             KernelKind::Q8_0 => QK8_0,
             KernelKind::Q3K => QK_K,
+            KernelKind::F16 => 1,
         };
         assert!(k % block == 0, "K={k} not a multiple of the {kind:?} block");
         let w_row_bytes = weight_row_bytes(kind, k);
@@ -441,6 +448,57 @@ impl LaneSim {
 
         let bd = breakdown_for_plan_with_residency(&self.imax, &kcfg, &plan, reconf, residency);
         self.commit(KernelKind::Q3K, &plan, bd, residency);
+        Ok((out, bd))
+    }
+
+    /// Functional offloaded F16 mul_mat (§VI OP_SML16 kernel): `w` is
+    /// `m` rows × `k` halves, `acts` is `n` f32 rows of length `k`.
+    pub fn mul_mat_f16(
+        &mut self,
+        w: &[F16],
+        m: usize,
+        acts: &[f32],
+        n: usize,
+        k: usize,
+    ) -> Result<(Vec<f32>, PhaseBreakdown), LmmError> {
+        self.mul_mat_f16_cached(None, w, m, acts, n, k)
+    }
+
+    /// [`LaneSim::mul_mat_f16`] with a weight identity: resident F16
+    /// conv weights skip the weight LOAD phase exactly like the
+    /// quantized kernels (residency is a pure DMA elision — outputs are
+    /// bit-identical to the host `mul_mat` F16 path in every mode).
+    pub fn mul_mat_f16_cached(
+        &mut self,
+        wid: Option<WeightId>,
+        w: &[F16],
+        m: usize,
+        acts: &[f32],
+        n: usize,
+        k: usize,
+    ) -> Result<(Vec<f32>, PhaseBreakdown), LmmError> {
+        assert_eq!(w.len(), m * k, "weight element count");
+        assert_eq!(acts.len(), n * k, "activation element count");
+        let (plan, residency) = self.prepare(KernelKind::F16, wid, m, n, k)?;
+        let kcfg = KernelConfig::f16();
+        let reconf = self.needs_conf(KernelKind::F16);
+
+        let mut out = vec![0.0f32; n * m];
+        self.walk_tiles(&plan, residency, |wt0, wt1, at0, at1| {
+            for a_row in at0..at1 {
+                for w_row in wt0..wt1 {
+                    let r = kernels::dot_f16(
+                        &kcfg,
+                        &w[w_row * k..(w_row + 1) * k],
+                        &acts[a_row * k..(a_row + 1) * k],
+                    );
+                    out[a_row * m + w_row] = r.value;
+                }
+            }
+        });
+
+        let bd = breakdown_for_plan_with_residency(&self.imax, &kcfg, &plan, reconf, residency);
+        self.commit(KernelKind::F16, &plan, bd, residency);
         Ok((out, bd))
     }
 
@@ -862,6 +920,121 @@ mod tests {
             )
             .unwrap();
         assert_eq!(cold, analytic_cold, "cold cached functional == Inserted analytic");
+    }
+
+    #[test]
+    fn functional_f16_matches_host_mul_mat() {
+        let imax = ImaxConfig::fpga(1);
+        // Conv-like shape: K = cin·k·k = 2·9, odd M, N = oh·ow.
+        let (m, n, k) = (5, 9, 18);
+        let wt = random_tensor(m, k, 41);
+        let xt = random_tensor(n, k, 42);
+        let wq = wt.quantize(DType::F16);
+        let w_halves = match &wq.data {
+            crate::ggml::tensor::Storage::F16(v) => v.clone(),
+            _ => unreachable!(),
+        };
+        let mut lane = LaneSim::new(imax);
+        let (out, bd) = lane.mul_mat_f16(&w_halves, m, xt.as_f32(), n, k).unwrap();
+        let host = crate::ggml::mul_mat(&wq, &xt, 1);
+        for (a, b) in out.iter().zip(host.as_f32().iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "sim vs host F16 mul_mat");
+        }
+        assert!(bd.exec > 0 && bd.load > 0 && bd.drain > 0);
+        assert_eq!(bd.conf, 46 * lane.imax.conf_cycles_per_pe);
+    }
+
+    #[test]
+    fn cached_f16_weight_skips_load_warm_bit_exactly() {
+        let imax = ImaxConfig::fpga(1);
+        let (m, n, k) = (8, 6, 144); // cin=16, 3×3 conv row
+        let wt = random_tensor(m, k, 43);
+        let xt = random_tensor(n, k, 44);
+        let wq = wt.quantize(DType::F16);
+        let w_halves = match &wq.data {
+            crate::ggml::tensor::Storage::F16(v) => v.clone(),
+            _ => unreachable!(),
+        };
+        let wid = Some(crate::ggml::WeightId(0xF16));
+
+        let mut plain = LaneSim::new(imax.clone());
+        let (want, _) = plain.mul_mat_f16(&w_halves, m, xt.as_f32(), n, k).unwrap();
+
+        let mut lane = LaneSim::new(imax);
+        let (cold_out, cold) =
+            lane.mul_mat_f16_cached(wid, &w_halves, m, xt.as_f32(), n, k).unwrap();
+        let loaded_after_cold = lane.lmm.loaded_bytes;
+        let (warm_out, warm) =
+            lane.mul_mat_f16_cached(wid, &w_halves, m, xt.as_f32(), n, k).unwrap();
+        for (a, b) in cold_out.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "cold cached == uncached");
+        }
+        for (a, b) in warm_out.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "warm cached == uncached");
+        }
+        assert!(warm.load < cold.load, "resident F16 weight skips LOAD");
+        assert_eq!(warm.exec, cold.exec);
+        assert_eq!(warm.drain, cold.drain);
+        let plan = TilePlan::with_capacity(
+            lane.imax.lmm_bytes - lane.lmm.cache_budget(),
+            KernelKind::F16,
+            m,
+            n,
+            k,
+        )
+        .unwrap();
+        assert_eq!(
+            lane.lmm.loaded_bytes - loaded_after_cold,
+            plan.act_load_bytes(),
+            "warm F16 call DMAs activations only"
+        );
+        assert!(lane.weight_resident(crate::ggml::WeightId(0xF16)));
+    }
+
+    #[test]
+    fn analytic_warm_matches_functional_warm_f16() {
+        let imax = ImaxConfig::fpga(1);
+        let (m, n, k) = (4, 3, 36);
+        let wt = random_tensor(m, k, 45);
+        let xt = random_tensor(n, k, 46);
+        let w_halves: Vec<F16> =
+            wt.as_f32().iter().map(|&v| F16::from_f32(v)).collect();
+        let wid = Some(crate::ggml::WeightId(77));
+        let mut lane = LaneSim::new(imax);
+        let (_, cold) = lane.mul_mat_f16_cached(wid, &w_halves, m, xt.as_f32(), n, k).unwrap();
+        let (_, warm) = lane.mul_mat_f16_cached(wid, &w_halves, m, xt.as_f32(), n, k).unwrap();
+        let analytic_warm = lane
+            .analytic_mul_mat_with_residency(
+                KernelKind::F16,
+                m,
+                n,
+                k,
+                false,
+                WeightResidency::Resident,
+            )
+            .unwrap();
+        assert_eq!(warm, analytic_warm, "warm functional == warm analytic");
+        let analytic_cold = lane
+            .analytic_mul_mat_with_residency(
+                KernelKind::F16,
+                m,
+                n,
+                k,
+                true,
+                WeightResidency::Inserted,
+            )
+            .unwrap();
+        assert_eq!(cold, analytic_cold, "cold cached functional == Inserted analytic");
+    }
+
+    #[test]
+    fn f16_row_bytes_model() {
+        assert_eq!(weight_row_bytes(KernelKind::F16, 1152), 2304, "2 B per half");
+        assert_eq!(act_row_bytes(KernelKind::F16, 1152), 4608, "acts stay f32");
+        // Odd K is legal for the F16 kernel (block size 1).
+        let p = TilePlan::new(&ImaxConfig::fpga(1), KernelKind::F16, 3, 2, 17).unwrap();
+        assert_eq!(p.w_row_bytes, 34);
+        assert_eq!(p.a_row_bytes, 68);
     }
 
     #[test]

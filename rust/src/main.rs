@@ -83,6 +83,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 model: Some(model),
                 steps: sub.usize("steps")?,
                 backend: sel.pipeline_backend(),
+                conv_offload: sel.conv_offload,
             });
             let (img, report) = pipe.generate(sub.str("prompt"), sub.u64("seed")?);
             let out = sub.str("out");

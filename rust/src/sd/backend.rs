@@ -398,6 +398,52 @@ impl PlanCheck {
     }
 }
 
+/// Execute one F16 im2col conv GEMM on `lane` in **LMM-capacity-aware
+/// chunks of patch rows**: the `[oh·ow, cin·k·k]` patch matrix is split
+/// into activation tiles whose f32 bytes fit half the lane's transient
+/// partition (the same half-split [`crate::imax::lane::TilePlan`] uses,
+/// so each chunk tiles without further subdivision pressure), every
+/// chunk runs through [`LaneSim::mul_mat_f16_cached`] under the *same*
+/// weight identity — the first chunk pays the cache fill, later chunks
+/// and later calls hit the resident rows — and the chunk outputs are
+/// stitched back row-wise. Each output element is one independent
+/// OP_SML16 vec-dot of unchanged operand bytes, so the stitched result
+/// is bit-identical to a single whole-op submission (and to the host
+/// `dot_f16_f32` reference). Returns the output, the summed phases, and
+/// the number of lane submissions the op decomposed into.
+fn run_f16_conv_on_lane(
+    lane: &mut LaneSim,
+    wid: Option<WeightId>,
+    w: &Tensor,
+    x: &Tensor,
+) -> (Vec<f32>, PhaseBreakdown, u64) {
+    use crate::imax::conf::KernelKind;
+    use crate::imax::lane::act_row_bytes;
+    let halves = match &w.data {
+        crate::ggml::tensor::Storage::F16(h) => h,
+        _ => unreachable!("conv offload wants F16 weights"),
+    };
+    let (m, k, n) = (w.rows, w.cols, x.rows);
+    let transient = lane.imax.lmm_bytes - lane.lmm.cache_budget();
+    let rows_per = (transient / 2 / act_row_bytes(KernelKind::F16, k)).clamp(1, n);
+    let acts = x.as_f32();
+    let mut out = vec![0.0f32; n * m];
+    let mut phases = PhaseBreakdown::default();
+    let mut submissions = 0u64;
+    let mut r0 = 0;
+    while r0 < n {
+        let r1 = (r0 + rows_per).min(n);
+        let (data, bd) = lane
+            .mul_mat_f16_cached(wid, halves, m, &acts[r0 * k..r1 * k], r1 - r0, k)
+            .expect("im2col chunk fits LMM");
+        out[r0 * m..r1 * m].copy_from_slice(&data);
+        phases += bd;
+        submissions += 1;
+        r0 = r1;
+    }
+    (out, phases, submissions)
+}
+
 /// Quantize the activations and run one whole op on `lane`, caching
 /// under `wid` — the single-lane analog of the coordinator's
 /// marshal+run primitive. Returns `None` when `w` is not a lane dtype
@@ -474,13 +520,19 @@ impl ExecBackend for HostBackend {
     }
 }
 
-/// IMAX backend: quantized ops run functionally on one lane simulator
-/// (bit-exact vs the hardware dataflow); everything else falls back to
-/// the host path — exactly the paper's offload policy.
+/// IMAX backend: lane-eligible ops run functionally on one lane
+/// simulator (bit-exact vs the hardware dataflow); everything else falls
+/// back to the host path. The routing policy defaults to the paper's
+/// §III-B quantized-only rule; [`ImaxBackend::with_policy`] (or the
+/// `--conv-offload` CLI flag) enables the §VI extension that also runs
+/// F16 `ConvIm2col` GEMMs on the lane via the OP_SML16 kernel.
 pub struct ImaxBackend {
     lane: LaneSim,
     /// Host threads for the non-offloaded ops.
     pub threads: usize,
+    /// Routing policy (kind-aware; see
+    /// [`crate::coordinator::OffloadPolicy::offloads_op`]).
+    pub policy: crate::coordinator::OffloadPolicy,
     request: RequestId,
     stats: EngineStats,
     done: Completions,
@@ -488,11 +540,21 @@ pub struct ImaxBackend {
 }
 
 impl ImaxBackend {
-    /// New backend over an IMAX configuration.
+    /// New backend over an IMAX configuration (quantized-only policy).
     pub fn new(imax: ImaxConfig, threads: usize) -> ImaxBackend {
+        ImaxBackend::with_policy(imax, threads, crate::coordinator::OffloadPolicy::QuantizedOnly)
+    }
+
+    /// [`ImaxBackend::new`] with an explicit routing policy.
+    pub fn with_policy(
+        imax: ImaxConfig,
+        threads: usize,
+        policy: crate::coordinator::OffloadPolicy,
+    ) -> ImaxBackend {
         ImaxBackend {
             lane: LaneSim::new(imax),
             threads,
+            policy,
             request: RequestId::SOLO,
             stats: EngineStats::default(),
             done: Completions::default(),
@@ -501,13 +563,13 @@ impl ImaxBackend {
     }
 
     /// Attach a compiled [`OpPlan`]: runs the prefetch/pin pass (pin the
-    /// hottest weights that fit this lane's cache budget) and arms the
-    /// dispatch check — each submission is verified against the recorded
-    /// `(wid, kind)` at its position. Call once, before the first
-    /// submission, on a backend that will execute exactly one recorded
-    /// sequence.
+    /// hottest weights **this backend's policy routes to the lane** that
+    /// fit the cache budget) and arms the dispatch check — each
+    /// submission is verified against the recorded `(wid, kind)` at its
+    /// position. Call once, before the first submission, on a backend
+    /// that will execute exactly one recorded sequence.
     pub fn apply_plan(&mut self, plan: &OpPlan) {
-        for wid in plan.pin_set(self.lane.lmm.cache_budget()) {
+        for wid in plan.pin_set_for(self.lane.lmm.cache_budget(), self.policy) {
             self.lane.pin_weight(wid);
         }
         self.plan.arm(plan);
@@ -536,15 +598,27 @@ impl ExecBackend for ImaxBackend {
             self.stats.plan_divergences += 1;
         }
         let (w, x) = (op.w, op.x);
-        let out = match run_quantized_on_lane(&mut self.lane, op.wid, w, x) {
-            Some((data, bd)) => {
-                self.stats.imax_phases += bd;
-                self.stats.offloaded_calls += 1;
-                self.stats.lane_submissions += 1;
-                self.stats.cache = self.lane.cache_stats();
-                Tensor::f32(x.rows, w.rows, data)
+        let out = if w.dtype() == DType::F16 && self.policy.offloads_op(w, op.kind) {
+            // §VI conv offload: F16 ConvIm2col runs on the OP_SML16
+            // kernel in LMM-tiled im2col chunks (F16 linears never reach
+            // this arm — the policy is kind-aware).
+            let (data, bd, submissions) = run_f16_conv_on_lane(&mut self.lane, op.wid, w, x);
+            self.stats.imax_phases += bd;
+            self.stats.offloaded_calls += 1;
+            self.stats.lane_submissions += submissions;
+            self.stats.cache = self.lane.cache_stats();
+            Tensor::f32(x.rows, w.rows, data)
+        } else {
+            match run_quantized_on_lane(&mut self.lane, op.wid, w, x) {
+                Some((data, bd)) => {
+                    self.stats.imax_phases += bd;
+                    self.stats.offloaded_calls += 1;
+                    self.stats.lane_submissions += 1;
+                    self.stats.cache = self.lane.cache_stats();
+                    Tensor::f32(x.rows, w.rows, data)
+                }
+                None => ggml::mul_mat(w, x, self.threads),
             }
-            None => ggml::mul_mat(w, x, self.threads),
         };
         let request = resolve_request(&op, self.request);
         self.stats.record(request, w.dtype(), macs, t0.elapsed().as_secs_f64());
@@ -607,13 +681,22 @@ impl ShardedBackend {
     /// Build a private coordinator: `imax.lanes` lanes, `host_threads`
     /// host workers, quantized-only offload policy.
     pub fn from_config(imax: ImaxConfig, host_threads: usize) -> ShardedBackend {
-        let lanes = imax.lanes;
-        ShardedBackend::new(Arc::new(Coordinator::new(
+        ShardedBackend::from_config_policy(
             imax,
-            lanes,
             host_threads,
             crate::coordinator::OffloadPolicy::QuantizedOnly,
-        )))
+        )
+    }
+
+    /// [`ShardedBackend::from_config`] with an explicit routing policy
+    /// (`QuantizedAndConv` adds the §VI F16 conv offload).
+    pub fn from_config_policy(
+        imax: ImaxConfig,
+        host_threads: usize,
+        policy: crate::coordinator::OffloadPolicy,
+    ) -> ShardedBackend {
+        let lanes = imax.lanes;
+        ShardedBackend::new(Arc::new(Coordinator::new(imax, lanes, host_threads, policy)))
     }
 
     /// The coordinator (lane/cache/metric introspection).
@@ -890,6 +973,81 @@ mod tests {
             assert_eq!(b.stats().offloaded_calls, 2);
             assert_eq!(b.stats().lane_submissions, 4, "two shards per op");
         }
+    }
+
+    #[test]
+    fn imax_backend_offloads_f16_conv_under_conv_policy_only() {
+        let w = rnd(6, 18, 40).quantize(DType::F16).with_wid(WeightId(0xC0));
+        let x = rnd(8, 18, 41); // im2col patch matrix [oh·ow, cin·k·k]
+        let mut host = HostBackend::new(1);
+        let want = host.submit_now(OpDesc::conv_im2col(&w, &x, 3, 1));
+        let mut b =
+            ImaxBackend::with_policy(ImaxConfig::fpga(1), 1, OffloadPolicy::QuantizedAndConv);
+        let got = b.submit_now(OpDesc::conv_im2col(&w, &x, 3, 1));
+        assert_eq!(b.stats().offloaded_calls, 1, "conv routes to the lane");
+        for (p, q) in got.as_f32().iter().zip(want.as_f32()) {
+            assert_eq!(p.to_bits(), q.to_bits(), "lane conv == host conv bit-exact");
+        }
+        // Warm call: the resident conv weight skips its LOAD bytes.
+        let cold_load = b.stats().imax_phases.load;
+        b.submit_now(OpDesc::conv_im2col(&w, &x, 3, 1));
+        assert!(b.stats().imax_phases.load - cold_load < cold_load, "warm conv loads less");
+        assert_eq!(b.stats().cache.hits, 1);
+        // F16 *linear* sites stay on the host even under the conv policy.
+        b.submit_now(OpDesc::linear(&w, &x));
+        assert_eq!(b.stats().offloaded_calls, 2, "F16 linear did not offload");
+        // And the default (paper) policy keeps the conv on the host too.
+        let mut off = ImaxBackend::new(ImaxConfig::fpga(1), 1);
+        off.submit_now(OpDesc::conv_im2col(&w, &x, 3, 1));
+        assert_eq!(off.stats().offloaded_calls, 0, "--conv-offload off baseline");
+    }
+
+    #[test]
+    fn imax_backend_tiles_oversized_im2col_chunks_bit_exactly() {
+        // k = 1152 (cin=128 · 3·3) with a 16 KiB LMM: one f32 patch row
+        // is 4608 B, half the 12 KiB transient partition holds exactly
+        // one row, so 3 patch rows must split into 3 lane submissions —
+        // stitched bit-identically to the host reference.
+        let mut imax = ImaxConfig::fpga(1);
+        imax.lmm_bytes = 16 << 10;
+        imax.weight_cache_bytes = 4 << 10;
+        let w = rnd(4, 1152, 42).quantize(DType::F16).with_wid(WeightId(0xC2));
+        let x = rnd(3, 1152, 43);
+        let mut host = HostBackend::new(1);
+        let want = host.submit_now(OpDesc::conv_im2col(&w, &x, 3, 1));
+        let mut b = ImaxBackend::with_policy(imax, 1, OffloadPolicy::QuantizedAndConv);
+        let got = b.submit_now(OpDesc::conv_im2col(&w, &x, 3, 1));
+        assert_eq!(b.stats().offloaded_calls, 1);
+        assert_eq!(b.stats().lane_submissions, 3, "one chunk per patch row");
+        for (p, q) in got.as_f32().iter().zip(want.as_f32()) {
+            assert_eq!(p.to_bits(), q.to_bits(), "tiled im2col stays bit-exact");
+        }
+    }
+
+    #[test]
+    fn sharded_backend_f16_conv_bit_identical_across_lane_counts() {
+        let w = rnd(11, 36, 44).quantize(DType::F16).with_wid(WeightId(0xC3));
+        let x = rnd(5, 36, 45);
+        let mut host = HostBackend::new(1);
+        let want = host.submit_now(OpDesc::conv_im2col(&w, &x, 3, 2));
+        for lanes in [1usize, 2, 4] {
+            let mut b = ShardedBackend::from_config_policy(
+                ImaxConfig::fpga(lanes),
+                2,
+                OffloadPolicy::QuantizedAndConv,
+            );
+            b.coordinator().set_min_shard_rows(1);
+            let got = b.submit_now(OpDesc::conv_im2col(&w, &x, 3, 2));
+            assert_eq!(b.stats().offloaded_calls, 1);
+            assert_eq!(b.stats().lane_submissions, lanes as u64, "one shard per lane");
+            for (p, q) in got.as_f32().iter().zip(want.as_f32()) {
+                assert_eq!(p.to_bits(), q.to_bits(), "{lanes}-lane F16 conv bit-exact");
+            }
+        }
+        // QuantizedOnly (conv-offload off) keeps the same op on the host.
+        let mut off = ShardedBackend::from_config(ImaxConfig::fpga(2), 2);
+        off.submit_now(OpDesc::conv_im2col(&w, &x, 3, 2));
+        assert_eq!(off.stats().offloaded_calls, 0);
     }
 
     #[test]

@@ -62,6 +62,12 @@ pub struct PipelineConfig {
     pub steps: usize,
     /// Execution backend.
     pub backend: Backend,
+    /// Offload F16 `ConvIm2col` GEMMs to the lanes via the OP_SML16
+    /// kernel (the §VI extension targeting Table I's dominant MAC
+    /// population). `false` is the paper's §III-B quantized-only
+    /// routing. Ignored by [`Backend::Host`]. Defaults to `true`, like
+    /// the CLI's `--conv-offload on`.
+    pub conv_offload: bool,
 }
 
 impl Default for PipelineConfig {
@@ -71,6 +77,19 @@ impl Default for PipelineConfig {
             model: Some(QuantModel::Q8_0),
             steps: 1,
             backend: Backend::Host { threads: 2 },
+            conv_offload: true,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// The [`OffloadPolicy`](crate::coordinator::OffloadPolicy) this
+    /// configuration routes with.
+    pub fn policy(&self) -> crate::coordinator::OffloadPolicy {
+        if self.conv_offload {
+            crate::coordinator::OffloadPolicy::QuantizedAndConv
+        } else {
+            crate::coordinator::OffloadPolicy::QuantizedOnly
         }
     }
 }
@@ -151,7 +170,8 @@ impl Pipeline {
         match &self.config.backend {
             Backend::Host { threads } => Box::new(HostBackend::new(*threads)),
             Backend::Imax { config, threads } => {
-                let mut eng = ImaxBackend::new(config.clone(), *threads);
+                let mut eng =
+                    ImaxBackend::with_policy(config.clone(), *threads, self.config.policy());
                 if config.weight_cache_bytes > 0 {
                     // Prefetch/pin pass: the hottest weights of the
                     // compiled plan become permanent residents.
@@ -160,7 +180,8 @@ impl Pipeline {
                 Box::new(eng)
             }
             Backend::Sharded { config, threads } => {
-                let mut eng = ShardedBackend::from_config(config.clone(), *threads);
+                let mut eng =
+                    ShardedBackend::from_config_policy(config.clone(), *threads, self.config.policy());
                 if config.weight_cache_bytes > 0 {
                     // Sharded prefetch/pin pass: each hot weight's
                     // row-tile shards are pinned on their owning lanes.
@@ -240,8 +261,11 @@ pub fn to_rgb8(img: &Feat) -> Vec<u8> {
 mod tests {
     use super::*;
 
+    // Paper §III-B routing (convs on host) — the historical baseline the
+    // counter expectations below were written against; conv offload is
+    // exercised by the dedicated tests further down.
     fn cfg(model: Option<QuantModel>, backend: Backend) -> PipelineConfig {
-        PipelineConfig { weight_seed: 99, model, steps: 1, backend }
+        PipelineConfig { weight_seed: 99, model, steps: 1, backend, conv_offload: false }
     }
 
     #[test]
@@ -320,12 +344,43 @@ mod tests {
     }
 
     #[test]
+    fn conv_offload_is_bit_identical_and_reaches_the_lane() {
+        let host = Pipeline::new(cfg(Some(QuantModel::Q8_0), Backend::Host { threads: 2 }));
+        let (a, _) = host.generate("a lovely cat", 7);
+        let mk = |conv_offload: bool| {
+            let mut c = cfg(
+                Some(QuantModel::Q8_0),
+                Backend::Imax { config: ImaxConfig::fpga(1), threads: 2 },
+            );
+            c.conv_offload = conv_offload;
+            Pipeline::new(c)
+        };
+        let (_, base) = mk(false).generate("a lovely cat", 7);
+        let (b, conv) = mk(true).generate("a lovely cat", 7);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "F16 conv offload is bit-exact");
+        }
+        assert!(
+            conv.offloaded_calls > base.offloaded_calls,
+            "conv sites joined the offload population: {} vs {}",
+            conv.offloaded_calls,
+            base.offloaded_calls
+        );
+        assert!(
+            conv.imax_phases.total() > base.imax_phases.total(),
+            "conv GEMMs now spend lane cycles"
+        );
+        assert_eq!(conv.plan_divergences, 0, "conv routing still follows the compiled plan");
+    }
+
+    #[test]
     fn compiled_plan_matches_real_dispatch_and_warms_cache() {
         let p = Pipeline::new(PipelineConfig {
             weight_seed: 99,
             model: Some(QuantModel::Q8_0),
             steps: 2,
             backend: Backend::Imax { config: ImaxConfig::fpga(1), threads: 2 },
+            conv_offload: false,
         });
         let plan = p.plan();
         assert!(plan.offloaded_sites() > 0, "quantized sites compiled");

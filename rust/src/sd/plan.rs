@@ -59,9 +59,15 @@ pub struct OpSite {
 }
 
 impl OpSite {
-    /// Whether the offload policy routes this site to a lane kernel.
+    /// Whether *some* offload policy routes this site to a lane kernel
+    /// (the maximal lane-eligibility): quantized weights under any kind,
+    /// F16 weights only at `ConvIm2col` sites (the OP_SML16 kernel).
+    /// F16 linear-fallback and all F32 sites never qualify. Policy-
+    /// specific passes additionally filter with
+    /// [`crate::coordinator::OffloadPolicy::offloads_use`].
     pub fn offload_eligible(&self) -> bool {
         matches!(self.dtype, DType::Q8_0 | DType::Q3K)
+            || (self.dtype == DType::F16 && matches!(self.kind, OpKind::ConvIm2col { .. }))
     }
 }
 
@@ -143,9 +149,23 @@ impl OpPlan {
     /// steps hit on them even when the full weight set exceeds the LMM
     /// (where plain LRU over a cyclic replay would hit on nothing).
     pub fn pin_set(&self, budget: usize) -> Vec<WeightId> {
+        self.pin_set_for(budget, crate::coordinator::OffloadPolicy::QuantizedAndConv)
+    }
+
+    /// [`OpPlan::pin_set`] filtered to the weights `policy` actually
+    /// routes to a lane — a quantized-only backend must not burn cache
+    /// budget pinning F16 conv weights it will run on the host.
+    pub fn pin_set_for(
+        &self,
+        budget: usize,
+        policy: crate::coordinator::OffloadPolicy,
+    ) -> Vec<WeightId> {
         let mut remaining = budget;
         let mut out = Vec::new();
         for wu in self.weight_uses() {
+            if !policy.offloads_use(wu.dtype) {
+                continue;
+            }
             if wu.bytes <= remaining {
                 remaining -= wu.bytes;
                 out.push(wu.wid);
@@ -225,6 +245,19 @@ impl OpPlan {
     /// Offload-eligible sites in the plan.
     pub fn offloaded_sites(&self) -> usize {
         self.sites.iter().filter(|s| s.offload_eligible()).count()
+    }
+
+    /// MACs of the F16 `ConvIm2col` sites — the work the §VI conv
+    /// offload moves from the host to the OP_SML16 kernel. Pricing this
+    /// at a host F16 GMAC rate gives the host-conv side of the
+    /// offload-vs-host comparison in `tests/weight_cache.rs` and
+    /// `EXPERIMENTS.md`.
+    pub fn conv_f16_macs(&self) -> u64 {
+        self.sites
+            .iter()
+            .filter(|s| s.dtype == DType::F16 && matches!(s.kind, OpKind::ConvIm2col { .. }))
+            .map(|s| (s.m * s.n * s.k) as u64)
+            .sum()
     }
 }
 
@@ -331,14 +364,34 @@ pub fn replay_unet_steps(
     cache_bytes: usize,
     steps: usize,
 ) -> Vec<StepCost> {
-    use crate::imax::ImaxConfig;
+    let mut imax = crate::imax::ImaxConfig::fpga(1);
+    imax.lmm_bytes = lmm_bytes;
+    imax.weight_cache_bytes = cache_bytes;
+    replay_unet_steps_policy(model, imax, steps, crate::coordinator::OffloadPolicy::QuantizedOnly)
+}
+
+/// [`replay_unet_steps`] over an explicit [`crate::imax::ImaxConfig`]
+/// and routing policy — the **conv-offload experiment**:
+/// `QuantizedAndConv` routes the mini U-Net's F16 `ConvIm2col` GEMMs
+/// (its dominant MAC population, [`OpPlan::conv_f16_macs`]) through the
+/// OP_SML16 kernel with weight residency, `QuantizedOnly` replays the
+/// paper's host-conv routing. Shared by `tests/weight_cache.rs`, the
+/// `conv_offload` bench and `python/replica/conv_offload_replica.py` so
+/// the recorded deltas all measure one definition. Taking the full
+/// config (not just LMM/cache bytes) lets callers price the §VI
+/// production-interconnect scenario (`dma_bytes_per_cycle` override) —
+/// on the prototype DMA the F16 offload regresses, the Fig. 11 lesson.
+pub fn replay_unet_steps_policy(
+    model: crate::sd::trace::QuantModel,
+    imax: crate::imax::ImaxConfig,
+    steps: usize,
+    policy: crate::coordinator::OffloadPolicy,
+) -> Vec<StepCost> {
     use crate::sd::graph::ImaxBackend;
 
     let (unet, latent, ctx, plan) = unet_fixture(model);
-    let mut imax = ImaxConfig::fpga(1);
-    imax.lmm_bytes = lmm_bytes;
-    imax.weight_cache_bytes = cache_bytes;
-    let mut eng = ImaxBackend::new(imax, 1);
+    let cache_bytes = imax.weight_cache_bytes;
+    let mut eng = ImaxBackend::with_policy(imax, 1, policy);
 
     (0..steps)
         .map(|_| {
@@ -362,6 +415,13 @@ pub fn replay_unet_steps(
             }
         })
         .collect()
+}
+
+/// F16 conv MACs of one mini U-Net step (the replay fixture's plan) —
+/// the host-side work the conv offload eliminates. See
+/// [`OpPlan::conv_f16_macs`].
+pub fn unet_step_conv_macs(model: crate::sd::trace::QuantModel) -> u64 {
+    unet_fixture(model).3.conv_f16_macs()
 }
 
 /// Per-step cost of one sharded mini U-Net replay across `L` lanes.
@@ -410,6 +470,33 @@ pub fn replay_unet_steps_sharded_threads(
     steps: usize,
     threads: usize,
 ) -> Vec<ShardStepCost> {
+    replay_unet_steps_sharded_policy(
+        model,
+        lanes,
+        lmm_bytes,
+        cache_bytes,
+        steps,
+        threads,
+        crate::coordinator::OffloadPolicy::QuantizedOnly,
+    )
+}
+
+/// [`replay_unet_steps_sharded_threads`] with an explicit routing
+/// policy: `QuantizedAndConv` row-tile-shards the F16 `ConvIm2col`
+/// weights across lanes alongside the quantized set (the
+/// `--conv-offload on` mode of `benches/shard_scaling.rs`). The
+/// worker-pool determinism contract is policy-independent — simulated
+/// counters are bit-identical at any `threads`.
+#[allow(clippy::too_many_arguments)]
+pub fn replay_unet_steps_sharded_policy(
+    model: crate::sd::trace::QuantModel,
+    lanes: usize,
+    lmm_bytes: usize,
+    cache_bytes: usize,
+    steps: usize,
+    threads: usize,
+    policy: crate::coordinator::OffloadPolicy,
+) -> Vec<ShardStepCost> {
     use crate::imax::ImaxConfig;
     use crate::sd::backend::ShardedBackend;
 
@@ -417,7 +504,7 @@ pub fn replay_unet_steps_sharded_threads(
     let mut imax = ImaxConfig::fpga(lanes);
     imax.lmm_bytes = lmm_bytes;
     imax.weight_cache_bytes = cache_bytes;
-    let mut eng = ShardedBackend::from_config(imax, threads);
+    let mut eng = ShardedBackend::from_config_policy(imax, threads, policy);
 
     (0..steps)
         .map(|_| {

@@ -193,9 +193,9 @@ impl SharedBatch {
             // Count the merge only when it actually reached a lane, so
             // `batched_submissions` stays comparable with
             // `Coordinator::execute_coalesced` ("merged *lane*
-            // submissions"); merged host (F16) ops are not lane
-            // submissions.
-            if self.coordinator.policy.offloads(w) && self.coordinator.lanes() > 0 {
+            // submissions"); merged host ops (F16 linears, or convs
+            // under a quantized-only policy) are not lane submissions.
+            if self.coordinator.policy.offloads_op(w, kind) && self.coordinator.lanes() > 0 {
                 self.coordinator.metrics.record_batch(self.size as u64);
             }
             // Split the stacked output rows back per member.
@@ -250,7 +250,7 @@ impl ExecBackend for BatchMember {
     fn submit(&mut self, op: OpDesc<'_>) -> OpHandle {
         let t0 = std::time::Instant::now();
         let macs = op.macs();
-        let offloads = self.shared.coordinator().policy.offloads(op.w);
+        let offloads = self.shared.coordinator().policy.offloads_op(op.w, op.kind);
         let out = if op.kind.per_request_operands() || op.w.dtype() == DType::F32 {
             // Per-request operand as "weight": nothing shared to batch;
             // run on the coordinator immediately (host path for F32).

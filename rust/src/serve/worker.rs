@@ -79,11 +79,15 @@ impl ServeHarness {
         assert!(config.max_batch >= 1, "max_batch must be >= 1");
         assert!(config.workers >= 1, "workers must be >= 1");
         let cache_enabled = imax.weight_cache_bytes > 0;
+        // The pipeline config's routing policy (its `backend` field is
+        // ignored, but `conv_offload` is honored): QuantizedAndConv
+        // additionally sends F16 ConvIm2col GEMMs to the lanes.
+        let policy: OffloadPolicy = pipe_cfg.policy();
         let coordinator = Arc::new(Coordinator::new(
             imax,
             config.lanes,
             config.host_threads,
-            OffloadPolicy::QuantizedOnly,
+            policy,
         ));
         let pipeline = Arc::new(Pipeline::new(pipe_cfg));
         if cache_enabled && config.lanes > 0 {
@@ -200,12 +204,16 @@ mod tests {
     use super::*;
     use crate::sd::trace::QuantModel;
 
+    // Paper §III-B routing (convs on host): the counter expectations in
+    // the long-standing tests below were written against it; the
+    // conv-offload serving path has its own test.
     fn pipe_cfg() -> PipelineConfig {
         PipelineConfig {
             weight_seed: 99,
             model: Some(QuantModel::Q8_0),
             steps: 1,
             backend: crate::sd::pipeline::Backend::Host { threads: 2 },
+            conv_offload: false,
         }
     }
 
@@ -321,6 +329,40 @@ mod tests {
         assert!(
             m.shard_submissions.load(ord) > m.sharded_ops.load(ord),
             "ops split across both lanes"
+        );
+    }
+
+    #[test]
+    fn conv_offload_serving_is_bit_identical_and_adds_lane_work() {
+        let reqs = prompts(2);
+        let mut on_cfg = pipe_cfg();
+        on_cfg.conv_offload = true;
+        // Serial: conv offload must not change a bit, only move MACs.
+        let base = ServeHarness::new(pipe_cfg(), ServeConfig::serial(1, 2)).serve(&reqs);
+        let on = ServeHarness::new(on_cfg.clone(), ServeConfig::serial(1, 2)).serve(&reqs);
+        for (a, b) in base.outcomes.iter().zip(&on.outcomes) {
+            assert_eq!(a.image_crc32, b.image_crc32, "conv offload must not change bits");
+        }
+        assert!(
+            on.offloaded_macs > base.offloaded_macs,
+            "F16 conv MACs joined the offload population: {} vs {}",
+            on.offloaded_macs,
+            base.offloaded_macs
+        );
+        assert!(on.imax_cycles > base.imax_cycles, "conv GEMMs now spend lane cycles");
+        // Batched: the conv rendezvous (keyed by WeightId + OpKind) now
+        // lands on a lane, so its merges count as batched submissions.
+        let batch = ServeConfig { lanes: 1, host_threads: 2, max_batch: 2, workers: 1, sharded: false };
+        let off_b = ServeHarness::new(pipe_cfg(), batch.clone()).serve(&reqs);
+        let on_b = ServeHarness::new(on_cfg, batch).serve(&reqs);
+        for (a, b) in base.outcomes.iter().zip(&on_b.outcomes) {
+            assert_eq!(a.image_crc32, b.image_crc32, "batched conv offload stays bit-identical");
+        }
+        assert!(
+            on_b.batched_submissions > off_b.batched_submissions,
+            "merged conv rendezvous are lane submissions now: {} vs {}",
+            on_b.batched_submissions,
+            off_b.batched_submissions
         );
     }
 

@@ -381,6 +381,10 @@ pub struct BackendSel {
     /// Per-lane LMM bytes reserved as resident weight cache (0 =
     /// residency disabled, the paper's stream-every-call baseline).
     pub cache_bytes: usize,
+    /// Offload F16 `ConvIm2col` GEMMs to the lanes via OP_SML16
+    /// (`--conv-offload on`, the default). `off` keeps the paper's
+    /// §III-B quantized-only routing with convs on the host.
+    pub conv_offload: bool,
 }
 
 /// The shared flag declarations. Append these to any [`App`] that runs
@@ -418,6 +422,14 @@ impl BackendFlags {
                 '\0',
                 "disable weight residency (stream every weight tile, paper baseline)",
             ),
+            Arg::opt(
+                "conv-offload",
+                '\0',
+                "on|off",
+                "offload F16 conv (im2col) GEMMs to the lanes via OP_SML16; \
+                 off = paper quantized-only routing (convs on host)",
+            )
+            .default("on"),
         ]
     }
 
@@ -445,11 +457,28 @@ impl BackendFlags {
             return Err(CliError("--threads=0: at least one host thread".into()));
         }
         let cache_bytes = if m.flag("no-weight-cache") { 0 } else { m.usize("lmm-cache")? };
-        Ok(BackendSel { kind, lanes, threads, cache_bytes })
+        let conv_offload = match m.str("conv-offload") {
+            "on" => true,
+            "off" => false,
+            other => {
+                return Err(CliError(format!("--conv-offload={other}: expected on or off")))
+            }
+        };
+        Ok(BackendSel { kind, lanes, threads, cache_bytes, conv_offload })
     }
 }
 
 impl BackendSel {
+    /// The [`crate::coordinator::OffloadPolicy`] this selection routes
+    /// with (`--conv-offload on` → `QuantizedAndConv`).
+    pub fn policy(&self) -> crate::coordinator::OffloadPolicy {
+        if self.conv_offload {
+            crate::coordinator::OffloadPolicy::QuantizedAndConv
+        } else {
+            crate::coordinator::OffloadPolicy::QuantizedOnly
+        }
+    }
+
     /// The IMAX configuration this selection describes (FPGA prototype
     /// with the chosen lane count and cache partition).
     pub fn imax_config(&self) -> crate::imax::ImaxConfig {
@@ -564,7 +593,19 @@ mod tests {
         assert_eq!(sel.lanes, 2);
         assert_eq!(sel.threads, 2);
         assert_eq!(sel.cache_bytes, 262144);
+        assert!(sel.conv_offload, "conv offload defaults to on");
+        assert_eq!(sel.policy(), crate::coordinator::OffloadPolicy::QuantizedAndConv);
         assert_eq!(sel.imax_config().lanes, 1, "non-sharded backends use one lane");
+    }
+
+    #[test]
+    fn backend_flags_conv_offload_off_selects_quantized_only() {
+        let m = backend_app().parse(&argv(&["--conv-offload", "off"])).unwrap();
+        let sel = BackendFlags::parse(&m).unwrap();
+        assert!(!sel.conv_offload);
+        assert_eq!(sel.policy(), crate::coordinator::OffloadPolicy::QuantizedOnly);
+        let m = backend_app().parse(&argv(&["--conv-offload=maybe"])).unwrap();
+        assert!(BackendFlags::parse(&m).is_err(), "only on|off are accepted");
     }
 
     #[test]

@@ -213,6 +213,70 @@ mod tests {
     }
 
     #[test]
+    fn known_bit_patterns() {
+        // Canonical IEEE 754 binary16 vectors (value, bit pattern) —
+        // cross-checked against the tables hardware F16C/fcvt implement.
+        let vectors: &[(f32, u16)] = &[
+            (0.0, 0x0000),
+            (1.0, 0x3C00),
+            (-1.0, 0xBC00),
+            (2.0, 0x4000),
+            (-2.0, 0xC000),
+            (-2.5, 0xC100),
+            (0.5, 0x3800),
+            (0.0999755859375, 0x2E66),     // nearest half to 0.1
+            (0.333251953125, 0x3555),      // nearest half to 1/3
+            (65504.0, 0x7BFF),             // largest finite
+            (6.103515625e-5, 0x0400),      // smallest normal, 2^-14
+            (6.0975551605224609e-5, 0x03FF), // largest subnormal, 1023*2^-24
+            (5.9604644775390625e-8, 0x0001), // smallest subnormal, 2^-24
+        ];
+        for &(v, bits) in vectors {
+            assert_eq!(F16::from_f32(v).0, bits, "from_f32({v})");
+            assert_eq!(F16(bits).to_f32(), v, "to_f32({bits:#06x})");
+        }
+        // Inexact decimals land on those same patterns.
+        assert_eq!(F16::from_f32(0.1).0, 0x2E66);
+        assert_eq!(F16::from_f32(1.0 / 3.0).0, 0x3555);
+    }
+
+    #[test]
+    fn directed_ties_round_to_even() {
+        // 1 + 2^-11 sits exactly between 0x3C00 and 0x3C01 → even wins.
+        assert_eq!(F16::from_f32(1.0 + 2f32.powi(-11)).0, 0x3C00);
+        // 1 + 3·2^-11 sits between 0x3C01 and 0x3C02 → even (0x3C02) wins.
+        assert_eq!(F16::from_f32(1.0 + 3.0 * 2f32.powi(-11)).0, 0x3C02);
+        // Just above/below a tie break away from even as usual.
+        assert_eq!(F16::from_f32(1.0 + 2f32.powi(-11) + 2f32.powi(-20)).0, 0x3C01);
+        assert_eq!(F16::from_f32(1.0 + 2f32.powi(-11) - 2f32.powi(-20)).0, 0x3C00);
+        // Subnormal ties use the same rule: 1.5·2^-24 is halfway between
+        // 0x0001 and 0x0002 → even (0x0002)... no: halfway between
+        // 2^-24 (0x0001) and 2^-23 (0x0002) is 1.5·2^-24 → 0x0002 is even.
+        assert_eq!(F16::from_f32(1.5 * 2f32.powi(-24)).0, 0x0002);
+        // 0.5·2^-24 is halfway between 0 and 0x0001 → zero is even.
+        assert_eq!(F16::from_f32(0.5 * 2f32.powi(-24)).0, 0x0000);
+    }
+
+    #[test]
+    fn overflow_boundary_and_signs() {
+        // 65520 is exactly halfway between 65504 and the (unrepresentable)
+        // 65536 → ties-to-even rounds UP into infinity, per IEEE.
+        assert_eq!(F16::from_f32(65520.0).0, 0x7C00);
+        assert_eq!(F16::from_f32(-65520.0).0, 0xFC00);
+        // Anything strictly below the halfway point stays finite max.
+        assert_eq!(F16::from_f32(65519.0).0, 0x7BFF);
+        assert_eq!(F16::from_f32(f32::INFINITY).0, 0x7C00);
+        assert_eq!(F16::from_f32(f32::NEG_INFINITY).0, 0xFC00);
+        // Signed zero survives both directions.
+        assert_eq!(F16::from_f32(-0.0).0, 0x8000);
+        assert!(F16(0x8000).to_f32().is_sign_negative());
+        assert_eq!(F16(0x8000).to_f32(), 0.0);
+        // NaN keeps its sign and a quiet payload.
+        assert_eq!(F16::from_f32(-f32::NAN).0 & 0x8000, 0x8000);
+        assert!(F16::from_f32(-f32::NAN).is_nan());
+    }
+
+    #[test]
     fn quantize_scale_range() {
         // Typical GGML scales: d = max(|x|)/127 with |x| <= ~30. All such
         // values must be representable with < 0.1% relative error.

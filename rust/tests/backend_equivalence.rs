@@ -18,8 +18,17 @@ use imax_sd::sd::plan::replay_unet_steps_sharded;
 use imax_sd::sd::QuantModel;
 use imax_sd::util::rng::Xoshiro256pp;
 
+// Paper §III-B routing (convs on host), the baseline the historical
+// expectations below were written against; the F16 conv-offload
+// equivalence suite further down opts in explicitly.
 fn cfg(model: QuantModel, backend: Backend) -> PipelineConfig {
-    PipelineConfig { weight_seed: 0x5D_7B0, model: Some(model), steps: 2, backend }
+    PipelineConfig {
+        weight_seed: 0x5D_7B0,
+        model: Some(model),
+        steps: 2,
+        backend,
+        conv_offload: false,
+    }
 }
 
 fn rnd(rows: usize, cols: usize, seed: u64) -> Tensor {
@@ -178,6 +187,130 @@ fn concurrent_submissions_are_deterministic_across_runs() {
         let (outs, metrics) = run(4);
         assert_eq!(outs, want_outs, "rep {rep}: outputs must be bit-identical");
         assert_eq!(metrics, want_metrics, "rep {rep}: every counter must match");
+    }
+}
+
+/// F16 conv offload (`OP_SML16`): every distinct `(cin, cout, k,
+/// stride)` conv site of the UNet **and** VAE, bit-identical on host ==
+/// imax == sharded×{1,2,4}, at host threads 1 and 4. Includes the
+/// strided encoder conv and 1×1 skip convs. The lane kernel accumulates
+/// in f32 in host dot order, so exactness holds by construction — this
+/// pins it against regressions.
+#[test]
+fn f16_conv_bit_identical_across_backends_at_all_model_shapes() {
+    use imax_sd::coordinator::OffloadPolicy;
+    use imax_sd::ggml::WeightId;
+    // (cin, cout, k, stride) for every conv site: UNet encoder/decoder
+    // (incl. stride-2 down conv and 1x1 skips), then the VAE schedule.
+    let shapes: &[(usize, usize, usize, usize)] = &[
+        (4, 64, 3, 1),
+        (64, 64, 3, 1),
+        (64, 128, 3, 2),
+        (128, 128, 3, 1),
+        (256, 128, 3, 1),
+        (256, 128, 1, 1),
+        (192, 64, 3, 1),
+        (192, 64, 1, 1),
+        (64, 4, 3, 1),
+        (64, 48, 3, 1),
+        (48, 48, 3, 1),
+        (48, 32, 3, 1),
+        (32, 32, 3, 1),
+        (32, 16, 3, 1),
+        (16, 16, 3, 1),
+        (16, 3, 3, 1),
+    ];
+    for (i, &(cin, cout, k, stride)) in shapes.iter().enumerate() {
+        let kk = cin * k * k;
+        let n = 24; // im2col patch rows
+        let w = rnd(cout, kk, 100 + i as u64)
+            .quantize(DType::F16)
+            .with_wid(WeightId(500 + i as u64));
+        let x = rnd(n, kk, 200 + i as u64);
+        let mut host = HostBackend::new(1);
+        let want = host.submit_now(OpDesc::conv_im2col(&w, &x, k, stride));
+        for threads in [1usize, 4] {
+            let mut imax = ImaxBackend::with_policy(
+                ImaxConfig::fpga(1),
+                threads,
+                OffloadPolicy::QuantizedAndConv,
+            );
+            let got = imax.submit_now(OpDesc::conv_im2col(&w, &x, k, stride));
+            assert_eq!(imax.stats().offloaded_calls, 1, "conv {i} reached the lane");
+            for (p, q) in got.as_f32().iter().zip(want.as_f32()) {
+                assert_eq!(p.to_bits(), q.to_bits(), "conv {i} imax == host (t{threads})");
+            }
+            for lanes in [1usize, 2, 4] {
+                let mut s = ShardedBackend::from_config_policy(
+                    ImaxConfig::fpga(lanes),
+                    threads,
+                    OffloadPolicy::QuantizedAndConv,
+                );
+                s.coordinator().set_min_shard_rows(1);
+                let got = s.submit_now(OpDesc::conv_im2col(&w, &x, k, stride));
+                for (p, q) in got.as_f32().iter().zip(want.as_f32()) {
+                    assert_eq!(
+                        p.to_bits(),
+                        q.to_bits(),
+                        "conv {i} sharded x{lanes} == host (t{threads})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// F16 conv offload through the full pipeline, including the
+/// LMM-tiled im2col path (the VAE's 128×128 convs overflow the
+/// transient partition many times over): with the F16 reference model
+/// every offloaded op IS a conv, and the images must stay bit-identical
+/// to the host across imax and sharded×{1,2,4}, threads 1 and 4. A
+/// second denoising step re-hits the pinned conv weights, so warm
+/// weight LOAD strictly shrinks (elided bytes show up as cache hits).
+#[test]
+fn f16_reference_pipeline_conv_offload_bit_identical_and_warms() {
+    let mk = |backend| PipelineConfig {
+        weight_seed: 0x5D_7B0,
+        model: None, // all-F16 reference: offloaded work == conv work
+        steps: 2,
+        backend,
+        conv_offload: true,
+    };
+    let host = Pipeline::new(mk(Backend::Host { threads: 2 }));
+    let (want, rh) = host.generate("a lovely cat", 7);
+    assert_eq!(rh.offloaded_calls, 0, "host backend never offloads");
+    for threads in [1usize, 4] {
+        let imax = Pipeline::new(mk(Backend::Imax {
+            config: ImaxConfig::fpga(1),
+            threads,
+        }));
+        let (img, r) = imax.generate("a lovely cat", 7);
+        assert!(r.offloaded_calls > 0, "conv sites offloaded (t{threads})");
+        assert!(
+            r.lane_submissions > r.offloaded_calls,
+            "oversized im2col chunks split into multiple lane submissions: {} vs {}",
+            r.lane_submissions,
+            r.offloaded_calls
+        );
+        assert!(r.cache.hit_bytes > 0, "step 2 re-hits pinned conv weights (t{threads})");
+        for (a, b) in want.data.iter().zip(&img.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "conv-offload imax == host (t{threads})");
+        }
+        for lanes in [1usize, 2, 4] {
+            let sharded = Pipeline::new(mk(Backend::Sharded {
+                config: ImaxConfig::fpga(lanes),
+                threads,
+            }));
+            let (img, r) = sharded.generate("a lovely cat", 7);
+            assert!(r.offloaded_calls > 0);
+            for (a, b) in want.data.iter().zip(&img.data) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "conv-offload sharded x{lanes} == host (t{threads})"
+                );
+            }
+        }
     }
 }
 

@@ -11,7 +11,15 @@ use imax_sd::sd::QuantModel;
 use imax_sd::util::png::{crc32, encode_png, ColorType};
 
 fn cfg(model: QuantModel, backend: Backend, steps: usize) -> PipelineConfig {
-    PipelineConfig { weight_seed: 0x5D_7B0, model: Some(model), steps, backend }
+    // Paper §III-B routing: the offload-ratio band below is defined for
+    // quantized-only offload (convs on host).
+    PipelineConfig {
+        weight_seed: 0x5D_7B0,
+        model: Some(model),
+        steps,
+        backend,
+        conv_offload: false,
+    }
 }
 
 #[test]

@@ -24,6 +24,10 @@ fn pipe_cfg(model: QuantModel) -> PipelineConfig {
         model: Some(model),
         steps: 1,
         backend: Backend::Host { threads: 2 },
+        // Quantized-only serving semantics under test (the submission
+        // counts below assume convs stay on the host); conv-offload
+        // serving is covered in `serve::worker`'s tests.
+        conv_offload: false,
     }
 }
 

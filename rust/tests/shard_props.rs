@@ -214,3 +214,57 @@ fn sharded_activation_bytes_do_not_scale_with_lanes() {
         "op never split: {act_bytes_by_lanes:?}"
     );
 }
+
+/// The im2col variant of the broadcast-elision invariant: a conv patch
+/// matrix inflates the shared activation stream by k² (each input pixel
+/// appears in up to k² patches), so double-charging it per shard would
+/// overstate DMA traffic worst of all ops. Sharding an F16 `ConvIm2col`
+/// across 1/2/4/8 lanes must keep the total activation LOAD bytes
+/// lane-invariant and the stitched output bit-identical.
+#[test]
+fn sharded_conv_im2col_activation_bytes_do_not_scale_with_lanes() {
+    let mut rng = Xoshiro256pp::seed_from_u64(78);
+    // A UNet-shaped conv site: cout=128, cin·k·k=1152, 8x8 output tile.
+    let (cout, kk, n) = (128usize, 1152usize, 64usize);
+    let mut wdata = vec![0.0f32; cout * kk];
+    rng.fill_normal(&mut wdata, 0.3);
+    let w = Tensor::f32(cout, kk, wdata).quantize(DType::F16).with_wid(WeightId(92));
+    let mut patches = vec![0.0f32; n * kk];
+    rng.fill_normal(&mut patches, 0.3);
+    let x = Tensor::f32(n, kk, patches);
+
+    let mut act_bytes_by_lanes = Vec::new();
+    let mut reference: Option<Vec<u32>> = None;
+    for lanes in [1usize, 2, 4, 8] {
+        let c =
+            Coordinator::new(ImaxConfig::fpga(lanes), lanes, 1, OffloadPolicy::QuantizedAndConv);
+        c.set_min_shard_rows(1); // isolate the byte accounting from the cost model
+        let op = OpDesc::conv_im2col(&w, &x, 3, 1);
+        let run = c.submit_sharded(&op);
+        let act: u64 = c
+            .lane_costs()
+            .iter()
+            .map(|lc| lc.loaded_bytes - lc.weight_load_bytes)
+            .sum();
+        assert!(act > 0, "the conv streams its patch matrix at {lanes} lanes");
+        act_bytes_by_lanes.push((lanes, run.shards, act));
+        let bits: Vec<u32> = run.out.as_f32().iter().map(|v| v.to_bits()).collect();
+        match &reference {
+            None => reference = Some(bits),
+            Some(want) => assert_eq!(&bits, want, "{lanes}-lane conv output bit-identical"),
+        }
+    }
+    let (_, _, want) = act_bytes_by_lanes[0];
+    for (lanes, shards, act) in &act_bytes_by_lanes {
+        assert_eq!(
+            *act, want,
+            "im2col LOAD bytes must not scale with lanes \
+             (lanes={lanes} shards={shards}: {act} vs single-lane {want}); \
+             full accounting: {act_bytes_by_lanes:?}"
+        );
+    }
+    assert!(
+        act_bytes_by_lanes.iter().any(|(_, shards, _)| *shards > 1),
+        "conv never split: {act_bytes_by_lanes:?}"
+    );
+}
