@@ -1,0 +1,425 @@
+//! Open-loop load generator for the HTTP serving front-end.
+//!
+//! Starts an in-process [`Server`] on an ephemeral loopback port, then
+//! drives it the way a real client fleet would — every request is a
+//! full HTTP round-trip (`POST /predictions` → poll → terminal state):
+//!
+//! 1. **baseline** — sequential requests to warm the weight pools and
+//!    the runner's EWMA batch-time estimate.
+//! 2. **poisson** — open-loop Poisson arrivals (inter-arrival
+//!    `-ln(u)/λ`) at offered loads of 0.5×, 2× and 6× the measured
+//!    service capacity. At 6× the bounded queue must shed with 429s
+//!    while the p99 latency of *admitted* requests stays inside the
+//!    end-to-end SLO — backpressure protects the admitted tail.
+//! 3. **burst** — every request arrives at once (the worst arrival
+//!    process for a queue estimator).
+//! 4. **mixed** — step counts drawn from {1, 1, 1, 2, 4}, exercising
+//!    the step-homogeneous batcher under heterogeneous work.
+//!
+//! Offered loads and SLOs scale from the *measured* EWMA service time,
+//! so the shedding/tail assertions hold on fast and slow machines
+//! alike. Emits `BENCH_serve_http.json`, one record per phase.
+//!
+//! `--smoke` shrinks every phase for CI and adds a cancellation
+//! round-trip plus a signal-driven graceful shutdown check.
+
+use imax_sd::sd::pipeline::{Backend, PipelineConfig};
+use imax_sd::sd::QuantModel;
+use imax_sd::serve::{RunnerState, ServeConfig, ServeHarness};
+use imax_sd::server::http::http_call;
+use imax_sd::server::{shutdown, Json, RunnerConfig, Server};
+use imax_sd::util::rng::Xoshiro256pp;
+use imax_sd::util::stats::percentile;
+use imax_sd::util::tables::Table;
+use std::time::{Duration, Instant};
+
+/// One client's view of one request.
+enum Outcome {
+    /// Admitted and reached a terminal state.
+    Finished { latency_seconds: f64, state: String },
+    /// 429 at admission.
+    Rejected,
+    /// 503 (draining) or a transport/protocol failure.
+    Error,
+}
+
+/// Aggregate for one phase of the run.
+struct PhaseRecord {
+    phase: String,
+    offered_rps: f64,
+    requests: usize,
+    admitted: usize,
+    succeeded: usize,
+    rejected: usize,
+    errors: usize,
+    p50_seconds: f64,
+    p99_seconds: f64,
+    slo_seconds: f64,
+}
+
+impl PhaseRecord {
+    fn rejection_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / self.requests as f64
+        }
+    }
+
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("phase", Json::Str(self.phase.clone())),
+            ("offered_rps", Json::Num(self.offered_rps)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("succeeded", Json::Num(self.succeeded as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("rejection_rate", Json::Num(self.rejection_rate())),
+            ("p50_seconds", Json::Num(self.p50_seconds)),
+            ("p99_seconds", Json::Num(self.p99_seconds)),
+            ("slo_seconds", Json::Num(self.slo_seconds)),
+        ])
+    }
+}
+
+/// POST one prediction and poll it to a terminal state.
+fn submit_and_wait(addr: &str, prompt: &str, seed: u64, steps: usize) -> Outcome {
+    let body = Json::obj(vec![
+        ("prompt", Json::Str(prompt.into())),
+        ("seed", Json::Num(seed as f64)),
+        ("steps", Json::Num(steps as f64)),
+    ]);
+    let t0 = Instant::now();
+    let Ok(created) = http_call(addr, "POST", "/predictions", Some(&body)) else {
+        return Outcome::Error;
+    };
+    if created.status == 429 {
+        return Outcome::Rejected;
+    }
+    if created.status != 202 {
+        return Outcome::Error;
+    }
+    let Some(id) = created.json().ok().and_then(|j| j.get("id").and_then(Json::as_u64)) else {
+        return Outcome::Error;
+    };
+    // Bounded poll: 2 ms cadence, 120 s cap.
+    for _ in 0..60_000 {
+        let Ok(poll) = http_call(addr, "GET", &format!("/predictions/{id}"), None) else {
+            return Outcome::Error;
+        };
+        if let Ok(st) = poll.json() {
+            let state = st.get("status").and_then(Json::as_str).unwrap_or("").to_string();
+            let terminal = matches!(
+                state.as_str(),
+                s if s == RunnerState::Succeeded.name()
+                    || s == RunnerState::Failed.name()
+                    || s == RunnerState::Cancelled.name()
+                    || s == RunnerState::Expired.name()
+            );
+            if terminal {
+                return Outcome::Finished { latency_seconds: t0.elapsed().as_secs_f64(), state };
+            }
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    Outcome::Error
+}
+
+/// Run one phase: spawn a client thread per arrival, spaced by
+/// `gaps[i]`, and fold the outcomes into a record.
+fn run_phase(
+    addr: &str,
+    phase: &str,
+    offered_rps: f64,
+    gaps: &[Duration],
+    steps: &[usize],
+    slo_seconds: f64,
+) -> PhaseRecord {
+    let mut clients = Vec::new();
+    for (i, gap) in gaps.iter().enumerate() {
+        let addr = addr.to_string();
+        let step_count = steps[i % steps.len()];
+        let prompt = format!("load-gen request {i}");
+        clients.push(std::thread::spawn(move || {
+            submit_and_wait(&addr, &prompt, 1000 + i as u64, step_count)
+        }));
+        std::thread::sleep(*gap);
+    }
+    let (mut admitted, mut succeeded, mut rejected, mut errors) = (0usize, 0usize, 0usize, 0usize);
+    let mut latencies = Vec::new();
+    for c in clients {
+        match c.join().expect("client thread panicked") {
+            Outcome::Finished { latency_seconds, state } => {
+                admitted += 1;
+                if state == RunnerState::Succeeded.name() {
+                    succeeded += 1;
+                    latencies.push(latency_seconds);
+                }
+            }
+            Outcome::Rejected => rejected += 1,
+            Outcome::Error => errors += 1,
+        }
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (p50, p99) = if latencies.is_empty() {
+        (0.0, 0.0)
+    } else {
+        (percentile(&latencies, 50.0), percentile(&latencies, 99.0))
+    };
+    PhaseRecord {
+        phase: phase.to_string(),
+        offered_rps,
+        requests: gaps.len(),
+        admitted,
+        succeeded,
+        rejected,
+        errors,
+        p50_seconds: p50,
+        p99_seconds: p99,
+        slo_seconds,
+    }
+}
+
+/// Poisson inter-arrival gaps at `rps`, deterministic per phase seed.
+fn poisson_gaps(n: usize, rps: f64, seed: u64) -> Vec<Duration> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let u = (1.0 - rng.next_f64()).max(1e-12); // (0, 1], ln is finite
+            Duration::from_secs_f64(-u.ln() / rps)
+        })
+        .collect()
+}
+
+fn smoke_cancel_round_trip(addr: &str) {
+    // A many-step request cancelled right after creation must reach a
+    // terminal state without running to completion.
+    let body = Json::obj(vec![
+        ("prompt", Json::Str("cancel me".into())),
+        ("steps", Json::Num(8.0)),
+    ]);
+    let created = http_call(addr, "POST", "/predictions", Some(&body)).expect("create");
+    assert_eq!(created.status, 202, "cancel target admitted");
+    let id = created.json().unwrap().get("id").unwrap().as_u64().unwrap();
+    let cancelled = http_call(addr, "POST", &format!("/predictions/{id}/cancel"), None).unwrap();
+    assert_eq!(cancelled.status, 200, "cancel route answers");
+    for _ in 0..5_000 {
+        let st = http_call(addr, "GET", &format!("/predictions/{id}"), None).unwrap();
+        let state = st.json().unwrap().get("status").unwrap().as_str().unwrap().to_string();
+        if state == RunnerState::Cancelled.name() {
+            println!("cancel round-trip: request {id} reached '{state}'");
+            return;
+        }
+        assert_ne!(state, RunnerState::Succeeded.name(), "cancelled request ran to completion");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    panic!("cancelled request never reached a terminal state");
+}
+
+fn emit_json(records: &[PhaseRecord], service_seconds: f64, capacity_rps: f64) {
+    let body = Json::obj(vec![
+        ("bench", Json::Str("serve_http".into())),
+        ("service_seconds_ewma", Json::Num(service_seconds)),
+        ("capacity_rps", Json::Num(capacity_rps)),
+        ("phases", Json::Arr(records.iter().map(PhaseRecord::json).collect())),
+    ]);
+    let path = "BENCH_serve_http.json";
+    std::fs::write(path, body.render() + "\n").expect("write bench json");
+    println!("wrote {path} ({} phases)", records.len());
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let workers = 2usize;
+    let max_batch = 2usize;
+    let harness = ServeHarness::new(
+        PipelineConfig {
+            weight_seed: 99,
+            model: Some(QuantModel::Q8_0),
+            steps: 1,
+            backend: Backend::Host { threads: 2 },
+            conv_offload: false,
+        },
+        ServeConfig {
+            lanes: 1,
+            host_threads: 2,
+            max_batch,
+            workers,
+            sharded: false,
+            queue_capacity: 8,
+        },
+    );
+
+    // The runner's SLO is fixed at start, but offered loads must scale
+    // from the measured service time — so a throwaway probe server with
+    // an infinite SLO measures it first.
+    let probe = Server::start(
+        "127.0.0.1:0",
+        harness,
+        RunnerConfig { slo_seconds: f64::INFINITY, default_steps: 1, max_steps: 8 },
+    )
+    .expect("bind probe server");
+    let probe_addr = probe.addr().to_string();
+    let n_base = if smoke { 2 } else { 4 };
+    for i in 0..n_base {
+        match submit_and_wait(&probe_addr, &format!("baseline {i}"), i as u64, 1) {
+            Outcome::Finished { .. } => {}
+            _ => panic!("baseline request failed"),
+        }
+    }
+    let service_seconds = probe.runner().ewma_batch_seconds().max(1e-3);
+    probe.shutdown();
+
+    // Admission threshold at 5 service times; the end-to-end SLO the
+    // admitted tail is held to is 3x that (queue wait bounded by the
+    // admission threshold, plus concurrent service and estimator slack
+    // — the baseline EWMA is measured without worker contention).
+    let slo_admit = 5.0 * service_seconds;
+    let slo_e2e = 3.0 * slo_admit;
+    let capacity_rps = workers as f64 * max_batch as f64 / service_seconds;
+    println!(
+        "load_gen: service {:.1} ms, capacity {:.1} req/s, SLO admit {:.1} / e2e {:.1} ms{}",
+        service_seconds * 1e3,
+        capacity_rps,
+        slo_admit * 1e3,
+        slo_e2e * 1e3,
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let harness = ServeHarness::new(
+        PipelineConfig {
+            weight_seed: 99,
+            model: Some(QuantModel::Q8_0),
+            steps: 1,
+            backend: Backend::Host { threads: 2 },
+            conv_offload: false,
+        },
+        ServeConfig {
+            lanes: 1,
+            host_threads: 2,
+            max_batch,
+            workers,
+            sharded: false,
+            queue_capacity: 8,
+        },
+    );
+    let server = Server::start(
+        "127.0.0.1:0",
+        harness,
+        RunnerConfig { slo_seconds: slo_admit, default_steps: 1, max_steps: 8 },
+    )
+    .expect("bind server");
+    let addr = server.addr().to_string();
+
+    let mut records = Vec::new();
+
+    // Re-warm this server's EWMA so admission estimates are live from
+    // the first timed phase.
+    let warm = if smoke { 2 } else { 4 };
+    records.push(run_phase(
+        &addr,
+        "baseline",
+        0.0,
+        &vec![Duration::from_millis(1); warm],
+        &[1],
+        slo_e2e,
+    ));
+
+    // The overload phase always offers enough arrivals to overflow the
+    // queue bound (8 waiting + 4 in flight): shed before it, the 429s
+    // never happen and the assertion below rightly fails.
+    let n_low = if smoke { 4 } else { 16 };
+    for (label, mult, n) in [
+        ("poisson_0.5x", 0.5, n_low),
+        ("poisson_2x", 2.0, n_low),
+        ("poisson_6x", 6.0, 20),
+    ] {
+        let rps = mult * capacity_rps;
+        let gaps = poisson_gaps(n, rps, 0x10AD + mult as u64);
+        records.push(run_phase(&addr, label, rps, &gaps, &[1], slo_e2e));
+    }
+
+    let n_burst = if smoke { 6 } else { 12 };
+    records.push(run_phase(
+        &addr,
+        "burst",
+        f64::INFINITY,
+        &vec![Duration::ZERO; n_burst],
+        &[1],
+        slo_e2e,
+    ));
+
+    if !smoke {
+        let rps = capacity_rps;
+        let gaps = poisson_gaps(10, rps, 0xBEEF);
+        records.push(run_phase(&addr, "mixed_steps", rps, &gaps, &[1, 1, 1, 2, 4], slo_e2e));
+    }
+
+    if smoke {
+        smoke_cancel_round_trip(&addr);
+    }
+
+    let mut t = Table::new(
+        "HTTP serving under offered load",
+        &["phase", "offered r/s", "reqs", "admitted", "429", "err", "p50", "p99", "rej %"],
+    );
+    for r in &records {
+        t.row(&[
+            r.phase.clone(),
+            if r.offered_rps.is_finite() { format!("{:.1}", r.offered_rps) } else { "∞".into() },
+            format!("{}", r.requests),
+            format!("{}", r.admitted),
+            format!("{}", r.rejected),
+            format!("{}", r.errors),
+            format!("{:.0} ms", r.p50_seconds * 1e3),
+            format!("{:.0} ms", r.p99_seconds * 1e3),
+            format!("{:.0}", 100.0 * r.rejection_rate()),
+        ]);
+    }
+    t.print();
+
+    // The backpressure contract: overload sheds, and what is admitted
+    // stays inside the end-to-end SLO.
+    let overload = records.iter().find(|r| r.phase == "poisson_6x").expect("overload phase ran");
+    assert!(
+        overload.rejected > 0,
+        "6x overload against an 8-deep queue must shed some requests"
+    );
+    for r in &records {
+        assert_eq!(r.errors, 0, "phase {}: transport/protocol errors", r.phase);
+        if r.succeeded > 0 {
+            assert!(
+                r.p99_seconds <= r.slo_seconds,
+                "phase {}: admitted p99 {:.3} s exceeds the {:.3} s SLO",
+                r.phase,
+                r.p99_seconds,
+                r.slo_seconds
+            );
+        }
+    }
+    println!(
+        "\nbackpressure holds: {}/{} overload arrivals shed (429), p99 {:.0} <= SLO {:.0} ms",
+        overload.rejected,
+        overload.requests,
+        overload.p99_seconds * 1e3,
+        overload.slo_seconds * 1e3
+    );
+
+    // Graceful shutdown via the signal path (the in-process equivalent
+    // of SIGTERM), then the drained report.
+    shutdown::request_shutdown();
+    let report = server.run_until_signalled();
+    let served: usize = records.iter().map(|r| r.admitted).sum();
+    assert!(report.outcomes.len() >= served, "drained report covers every admitted request");
+    if let Some(lat) = report.succeeded_latency_summary() {
+        println!(
+            "server-side: {} outcomes, {} rejected, success latency p50 {:.0} ms p99 {:.0} ms",
+            report.outcomes.len(),
+            report.rejected,
+            lat.median * 1e3,
+            lat.p99 * 1e3
+        );
+    }
+    emit_json(&records, service_seconds, capacity_rps);
+}

@@ -55,6 +55,7 @@ fn main() {
         max_batch: 4,
         workers: 2,
         sharded: sel.kind == BackendKind::Sharded,
+        queue_capacity: 64,
     };
     let mut imax = imax_sd::imax::ImaxConfig::fpga(sel.lanes);
     imax.weight_cache_bytes = sel.cache_bytes;
@@ -114,9 +115,10 @@ fn main() {
         report.macs_per_second()
     );
     println!(
-        "  latency              : mean {}  p95 {}",
+        "  latency              : mean {}  p95 {}  p99 {}",
         fmt_duration(lat.mean),
-        fmt_duration(lat.p95)
+        fmt_duration(lat.p95),
+        fmt_duration(lat.p99)
     );
     println!(
         "  lane submissions     : {} ({} merged, {} jobs coalesced, {} sharded ops over {} shards)",

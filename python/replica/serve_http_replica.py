@@ -1,0 +1,174 @@
+"""Python replica of the HTTP serving front-end's admission arithmetic
+(no Rust toolchain needed).
+
+Re-implements, bit-for-bit, the pure functions the serving runner uses
+to decide whether a new prediction is admitted or shed
+(``rust/src/server/runner.rs``):
+
+* ``estimate_queue_seconds`` — estimated time until a newly admitted
+  request would *complete*: requests ahead of it (waiting + inflight +
+  itself) divided ceiling-wise into batch rounds of ``workers *
+  max_batch`` slots, each round priced at the EWMA batch service time.
+  Zero while the EWMA is cold (nothing measured yet — admit freely).
+* ``admission_decision`` — shed with ``Retry-After =
+  max(ceil(est - slo), 1)`` seconds once the estimate passes the SLO;
+  a non-positive SLO disables estimate-based shedding (the bounded
+  queue stays as the backstop).
+* the EWMA update of ``Runner::observe_batch_seconds`` (``alpha =
+  0.3``; the first observation seeds the average directly),
+* ``util::stats::percentile`` — linear interpolation at rank
+  ``p/100 * (len-1)`` — which ``serve/metrics.rs`` uses for the
+  p50/p95/p99 the server reports and ``examples/load_gen.rs`` asserts
+  against.
+
+Each function is pinned to the exact vectors of the Rust unit tests, so
+a drift in either implementation fails one side's CI.
+
+The second half runs a deterministic single-worker queueing simulation
+(fixed service time, fixed arrival spacing — no randomness) twice: with
+the SLO admission policy on, and with it disabled. It demonstrates the
+property the load_gen bench asserts on the real server: with shedding
+on, every admitted request's end-to-end latency stays within the SLO
+(the estimate is a latency upper bound once the EWMA has converged,
+and admission requires estimate <= SLO), while the uncontrolled queue's
+tail grows without bound.
+"""
+
+import math
+
+EWMA_ALPHA = 0.3  # runner.rs EWMA_ALPHA
+
+
+def estimate_queue_seconds(waiting, inflight, workers, max_batch, ewma):
+    """Mirror of ``server::runner::estimate_queue_seconds``."""
+    if ewma <= 0.0:
+        return 0.0
+    slots = max(workers * max_batch, 1)
+    ahead = waiting + inflight + 1
+    rounds = -(-ahead // slots)  # usize::div_ceil
+    return rounds * ewma
+
+
+def admission_decision(est, slo):
+    """Mirror of ``server::runner::admission_decision``.
+
+    Returns None (admit) or the Retry-After in whole seconds (shed).
+    """
+    if slo <= 0.0 or est <= slo:
+        return None
+    return max(int(math.ceil(est - slo)), 1)
+
+
+def ewma_update(old, seconds):
+    """Mirror of ``Runner::observe_batch_seconds``."""
+    if old == 0.0:
+        return seconds
+    return EWMA_ALPHA * seconds + (1.0 - EWMA_ALPHA) * old
+
+
+def percentile(sorted_xs, p):
+    """Mirror of ``util::stats::percentile`` (linear interpolation)."""
+    assert sorted_xs, "percentile of an empty sample"
+    if len(sorted_xs) == 1:
+        return sorted_xs[0]
+    rank = p / 100.0 * (len(sorted_xs) - 1)
+    lo = int(math.floor(rank))
+    hi = int(math.ceil(rank))
+    frac = rank - lo
+    return sorted_xs[lo] * (1.0 - frac) + sorted_xs[hi] * frac
+
+
+def check_unit_vectors():
+    """The exact vectors of the Rust unit tests in runner.rs/stats.rs."""
+    # estimate_queue_seconds: cold EWMA admits freely.
+    assert estimate_queue_seconds(0, 0, 2, 4, 0.0) == 0.0, "cold EWMA -> 0"
+    # 12 ahead over 8 slots -> 2 rounds at 0.5 s.
+    assert estimate_queue_seconds(7, 4, 2, 4, 0.5) == 1.0, "12 ahead / 8 slots"
+    # Single-slot server: 2 ahead -> 2 rounds at 2 s.
+    assert estimate_queue_seconds(0, 1, 1, 1, 2.0) == 4.0, "2 ahead / 1 slot"
+
+    assert admission_decision(1.0, 2.0) is None, "under SLO admits"
+    assert admission_decision(2.0, 2.0) is None, "at SLO admits"
+    assert admission_decision(2.5, 2.0) == 1, "just over SLO -> retry in 1 s"
+    assert admission_decision(9.5, 2.0) == 8, "retry-after = ceil(est - slo)"
+    assert admission_decision(5.0, 0.0) is None, "slo <= 0 disables shedding"
+
+    assert ewma_update(0.0, 0.4) == 0.4, "first observation seeds the EWMA"
+    got = ewma_update(0.4, 0.8)
+    assert abs(got - 0.52) < 1e-12, f"0.3*0.8 + 0.7*0.4 = 0.52, got {got}"
+
+    assert percentile([7.0], 99.0) == 7.0, "single sample"
+    assert percentile([0.0, 10.0], 50.0) == 5.0, "median interpolates"
+    got = percentile([1.0, 2.0, 3.0, 4.0, 5.0], 99.0)
+    assert abs(got - 4.96) < 1e-12, f"p99 of 1..5 = 4.96, got {got}"
+    print("unit vectors: estimate/admission/ewma/percentile all match runner.rs")
+
+
+def simulate(n_arrivals, inter_seconds, service_seconds, slo_seconds):
+    """Deterministic single-worker, batch-1 queueing simulation.
+
+    Arrivals every ``inter_seconds``; each admitted request takes exactly
+    ``service_seconds``; admission uses the mirrored arithmetic with the
+    EWMA observed from completed batches (cold until the first
+    completion, exactly like the Rust runner). Returns (sorted admitted
+    end-to-end latencies, rejected count).
+    """
+    admitted = []  # (arrival, start, end)
+    rejected = 0
+    for i in range(n_arrivals):
+        t = i * inter_seconds
+        # EWMA as the runner would have it: seeded at the first batch
+        # completion; with a fixed service time it stays converged.
+        ewma = service_seconds if any(end <= t for (_, _, end) in admitted) else 0.0
+        waiting = sum(1 for (arr, start, _) in admitted if arr <= t < start)
+        inflight = sum(1 for (_, start, end) in admitted if start <= t < end)
+        est = estimate_queue_seconds(waiting, inflight, 1, 1, ewma)
+        if admission_decision(est, slo_seconds) is not None:
+            rejected += 1
+            continue
+        prev_end = admitted[-1][2] if admitted else 0.0
+        start = max(t, prev_end)
+        admitted.append((t, start, start + service_seconds))
+    latencies = sorted(end - arr for (arr, _, end) in admitted)
+    return latencies, rejected
+
+
+def check_simulation():
+    n, inter, service, slo = 50, 0.1, 0.5, 3.0
+    controlled, shed = simulate(n, inter, service, slo)
+    uncontrolled, shed_off = simulate(n, inter, service, 0.0)
+
+    rows = [
+        ("slo=3.0", len(controlled), shed, controlled),
+        ("slo off", len(uncontrolled), shed_off, uncontrolled),
+    ]
+    print(f"\nqueueing simulation: {n} arrivals every {inter} s, "
+          f"service {service} s, 1 worker x batch 1")
+    print(f"{'policy':>8} {'admitted':>9} {'shed':>5} "
+          f"{'p50 s':>7} {'p99 s':>7} {'max s':>7}")
+    for name, adm, rej, lats in rows:
+        print(f"{name:>8} {adm:>9} {rej:>5} "
+              f"{percentile(lats, 50.0):>7.3f} {percentile(lats, 99.0):>7.3f} "
+              f"{max(lats):>7.3f}")
+
+    assert shed > 0, "5x overload must shed with the SLO policy on"
+    assert shed_off == 0, "slo <= 0 admits everything"
+    worst = max(controlled)
+    assert worst <= slo + 1e-9, (
+        f"admitted tail bounded by the SLO: max {worst} > {slo}"
+    )
+    assert max(uncontrolled) > slo, "uncontrolled queue blows past the SLO"
+    assert percentile(controlled, 99.0) < percentile(uncontrolled, 99.0), (
+        "shedding improves the admitted p99"
+    )
+    print("simulation: shedding bounds the admitted tail at the SLO; "
+          "the uncontrolled queue does not")
+
+
+def main():
+    check_unit_vectors()
+    check_simulation()
+
+
+if __name__ == "__main__":
+    main()

@@ -42,6 +42,7 @@ fn row_for(t: &mut Table, name: &str, r: &ServeReport) {
         format!("{:.3e}", r.macs_per_second()),
         fmt_duration(lat.mean),
         fmt_duration(lat.p95),
+        fmt_duration(lat.p99),
         format!("{:.4}", r.cycles_per_offloaded_mac()),
         format!("{}", r.lane_submissions),
         format!("{}", r.batched_submissions),
@@ -58,8 +59,8 @@ fn main() {
     let mut t = Table::new(
         "Serial per-request submission vs batched multi-lane submission",
         &[
-            "mode", "reqs", "wall s", "req/s", "MAC/s", "lat mean", "lat p95", "cyc/MAC",
-            "lane subs", "merged",
+            "mode", "reqs", "wall s", "req/s", "MAC/s", "lat mean", "lat p95", "lat p99",
+            "cyc/MAC", "lane subs", "merged",
         ],
     );
 
@@ -69,21 +70,42 @@ fn main() {
 
     let batched_1l = ServeHarness::new(
         pipe_cfg(QuantModel::Q8_0),
-        ServeConfig { lanes: 1, host_threads: 2, max_batch: 4, workers: 1, sharded: false },
+        ServeConfig {
+            lanes: 1,
+            host_threads: 2,
+            max_batch: 4,
+            workers: 1,
+            sharded: false,
+            queue_capacity: 64,
+        },
     );
     let batched_1l_report = batched_1l.serve(&reqs);
     row_for(&mut t, "batched 1w/b4/1L", &batched_1l_report);
 
     let batched_ml = ServeHarness::new(
         pipe_cfg(QuantModel::Q8_0),
-        ServeConfig { lanes: 4, host_threads: 4, max_batch: 4, workers: 2, sharded: false },
+        ServeConfig {
+            lanes: 4,
+            host_threads: 4,
+            max_batch: 4,
+            workers: 2,
+            sharded: false,
+            queue_capacity: 64,
+        },
     );
     let batched_ml_report = batched_ml.serve(&reqs);
     row_for(&mut t, "batched 2w/b4/4L", &batched_ml_report);
 
     let sharded_ml = ServeHarness::new(
         pipe_cfg(QuantModel::Q8_0),
-        ServeConfig { lanes: 4, host_threads: 4, max_batch: 4, workers: 2, sharded: true },
+        ServeConfig {
+            lanes: 4,
+            host_threads: 4,
+            max_batch: 4,
+            workers: 2,
+            sharded: true,
+            queue_capacity: 64,
+        },
     );
     let sharded_ml_report = sharded_ml.serve(&reqs);
     row_for(&mut t, "sharded 2w/b4/4L", &sharded_ml_report);

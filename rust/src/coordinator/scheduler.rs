@@ -268,6 +268,16 @@ impl Coordinator {
         self.pool.is_some()
     }
 
+    /// Block until every enqueued lane-worker job has drained — the
+    /// graceful-shutdown barrier the server runs after its workers have
+    /// finished, so no shard is still executing when the process exits.
+    /// A no-op in inline mode (the caller already ran every shard).
+    pub fn quiesce(&self) {
+        if let Some(pool) = &self.pool {
+            pool.wait_idle();
+        }
+    }
+
     /// The lane configuration.
     pub fn config(&self) -> &ImaxConfig {
         &self.imax

@@ -12,4 +12,5 @@ pub mod imax;
 pub mod runtime;
 pub mod sd;
 pub mod serve;
+pub mod server;
 pub mod util;

@@ -9,13 +9,16 @@
 //! * `breakdown` — IMAX phase breakdown (Fig. 11)
 //! * `table1`    — dot-time by dtype (Table I)
 //! * `trace`     — dump the SD-Turbo mat-mul trace summary
+//! * `serve`     — HTTP prediction server (create / poll / cancel, SLO shedding)
 
 use imax_sd::device::{arm_a72, gtx_1080ti, pdp_joules, xeon_w5, Device, ImaxDevice};
 use imax_sd::sd::arch::sd_turbo_512;
 use imax_sd::sd::pipeline::{to_rgb8, Pipeline, PipelineConfig};
 use imax_sd::sd::profiler::table1_shares;
 use imax_sd::sd::QuantModel;
-use imax_sd::util::cli::{App, Arg, BackendFlags};
+use imax_sd::serve::{RunnerState, ServeConfig, ServeHarness};
+use imax_sd::server::{RunnerConfig, Server};
+use imax_sd::util::cli::{App, Arg, BackendFlags, BackendKind};
 use imax_sd::util::png::{write_png, ColorType};
 use imax_sd::util::tables::{BarChart, StackedBars, Table};
 
@@ -65,7 +68,25 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 .arg(Arg::opt("target", 't', "T", "fpga or asic").default("fpga")),
         )
         .subcommand(App::new("table1", "dot-product time by dtype (Table I)"))
-        .subcommand(App::new("trace", "dump the SD-Turbo workload trace summary"));
+        .subcommand(App::new("trace", "dump the SD-Turbo workload trace summary"))
+        .subcommand(
+            App::new("serve", "HTTP prediction server: POST /predictions, poll, cancel")
+                .arg(Arg::opt("addr", 'a', "HOST:PORT", "bind address").default("127.0.0.1:8080"))
+                .arg(Arg::opt("model", 'm', "TYPE", "q3_k or q8_0").default("q8_0"))
+                .arg(
+                    Arg::opt("slo", '\0', "SECONDS", "queue-latency SLO; above it creates get 429")
+                        .default("2.0"),
+                )
+                .arg(Arg::opt("queue", 'q', "N", "admission queue capacity").default("64"))
+                .arg(Arg::opt("steps", 'n', "N", "default denoising steps").default("1"))
+                .arg(
+                    Arg::opt("max-steps", '\0', "N", "largest per-request step count accepted")
+                        .default("8"),
+                )
+                .arg(Arg::opt("batch", '\0', "N", "micro-batch size").default("4"))
+                .arg(Arg::opt("workers", 'w', "N", "serving worker threads").default("2"))
+                .args(BackendFlags::args()),
+        );
 
     let m = app.parse_env();
     let Some(sub) = m.sub else {
@@ -197,6 +218,71 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     trace.offloaded_ops(model).len()
                 );
             }
+        }
+        "serve" => {
+            let model = model_of(sub.str("model"));
+            let sel = BackendFlags::parse(&sub)?;
+            if sel.kind == BackendKind::Host {
+                eprintln!("serve needs the lane coordinator; use --backend imax or sharded");
+                std::process::exit(2);
+            }
+            let serve_cfg = ServeConfig {
+                lanes: sel.lanes,
+                host_threads: sel.threads,
+                max_batch: sub.usize("batch")?,
+                workers: sub.usize("workers")?,
+                sharded: sel.kind == BackendKind::Sharded,
+                queue_capacity: sub.usize("queue")?,
+            };
+            let mut imax = imax_sd::imax::ImaxConfig::fpga(sel.lanes);
+            imax.weight_cache_bytes = sel.cache_bytes;
+            let harness = ServeHarness::with_imax(
+                PipelineConfig {
+                    weight_seed: 0x5D_7B0,
+                    model: Some(model),
+                    steps: sub.usize("steps")?,
+                    backend: imax_sd::sd::pipeline::Backend::Host { threads: 2 },
+                    conv_offload: sel.conv_offload,
+                },
+                serve_cfg,
+                imax,
+            );
+            let runner_cfg = RunnerConfig {
+                slo_seconds: sub.f64("slo")?,
+                default_steps: sub.usize("steps")?,
+                max_steps: sub.usize("max-steps")?,
+            };
+            let server = Server::start(sub.str("addr"), harness, runner_cfg)?;
+            println!("imax-sd serve: listening on http://{}", server.addr());
+            println!("  POST /predictions            {{\"prompt\": \"...\", \"seed\": 7}}");
+            println!("  GET  /predictions/<id>       poll state and metrics");
+            println!("  POST /predictions/<id>/cancel abort remaining denoising steps");
+            println!("  GET  /healthz                queue depth, inflight, wait estimate");
+            println!("ctrl-c or SIGTERM drains in-flight requests, then exits.");
+            let report = server.run_until_signalled();
+            let served = report.outcomes.len();
+            println!("\ndrained: {served} requests served, {} rejected", report.rejected);
+            for state in [
+                RunnerState::Succeeded,
+                RunnerState::Cancelled,
+                RunnerState::Expired,
+                RunnerState::Failed,
+            ] {
+                let n = report.count(state);
+                if n > 0 {
+                    println!("  {:<10} {n}", state.name());
+                }
+            }
+            if let Some(lat) = report.succeeded_latency_summary() {
+                println!(
+                    "  latency      p50 {:.3} s  p95 {:.3} s  p99 {:.3} s",
+                    lat.median, lat.p95, lat.p99
+                );
+            }
+            println!(
+                "  peaks        queue depth {}  inflight {}",
+                report.queue_depth_peak, report.inflight_peak
+            );
         }
         other => unreachable!("unhandled subcommand {other}"),
     }

@@ -21,6 +21,7 @@ use super::weights::WeightFactory;
 use crate::imax::lmm::CacheStats;
 use crate::imax::timing::PhaseBreakdown;
 use crate::imax::ImaxConfig;
+use crate::util::cancel::{CancelCause, CancelToken};
 use crate::util::rng::fnv1a64;
 use std::sync::{Arc, OnceLock};
 
@@ -92,6 +93,17 @@ impl PipelineConfig {
             crate::coordinator::OffloadPolicy::QuantizedOnly
         }
     }
+}
+
+/// A generation aborted cooperatively before finishing (the serving
+/// cancellation/deadline path; see [`Pipeline::generate_request`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Aborted {
+    /// Why the run stopped.
+    pub cause: CancelCause,
+    /// Denoising steps that completed before the stop (0 when the abort
+    /// landed before the first U-Net forward).
+    pub steps_completed: usize,
 }
 
 /// Run metadata returned alongside the image.
@@ -211,16 +223,48 @@ impl Pipeline {
         prompt: &str,
         seed: u64,
     ) -> (Feat, RunReport) {
+        self.generate_request(eng, request, prompt, seed, self.config.steps, &CancelToken::new())
+            .expect("a live token never aborts")
+    }
+
+    /// [`Pipeline::generate_with_backend`] with a caller-chosen step
+    /// count and a cooperative [`CancelToken`], consulted **before** the
+    /// text encode, before every denoising step, and before the VAE
+    /// decode. A fired token stops the run at the next check — no
+    /// further op is submitted — and returns [`Aborted`] with the cause
+    /// and how many denoising steps had completed. This is the seam the
+    /// serving layer's cancel route and per-request deadline act
+    /// through.
+    pub fn generate_request(
+        &self,
+        eng: &mut dyn ExecBackend,
+        request: RequestId,
+        prompt: &str,
+        seed: u64,
+        steps: usize,
+        cancel: &CancelToken,
+    ) -> Result<(Feat, RunReport), Aborted> {
+        assert!(steps >= 1, "a generation needs at least one denoising step");
         let t0 = std::time::Instant::now();
         eng.begin_request(request);
+        if let Err(cause) = cancel.check() {
+            return Err(Aborted { cause, steps_completed: 0 });
+        }
         let ctx = self.text.encode(eng, prompt);
         let z_seed = seed ^ fnv1a64(prompt.as_bytes());
         let z = sampler::initial_latent(z_seed, LATENT_C, LATENT_HW, LATENT_HW);
-        let x0 = if self.config.steps == 1 {
+        let x0 = if steps == 1 {
+            if let Err(cause) = cancel.check() {
+                return Err(Aborted { cause, steps_completed: 0 });
+            }
             sampler::turbo_step(eng, &self.unet, &z, &ctx)
         } else {
-            sampler::ddim(eng, &self.unet, &z, &ctx, self.config.steps)
+            sampler::ddim_cancellable(eng, &self.unet, &z, &ctx, steps, cancel)
+                .map_err(|(cause, steps_completed)| Aborted { cause, steps_completed })?
         };
+        if let Err(cause) = cancel.check() {
+            return Err(Aborted { cause, steps_completed: steps });
+        }
         let img = self.vae.decode(eng, &x0);
         let stats = eng.stats();
         let clock = match &self.config.backend {
@@ -240,7 +284,7 @@ impl Pipeline {
             cache: stats.cache,
             plan_divergences: stats.plan_divergences,
         };
-        (img, report)
+        Ok((img, report))
     }
 }
 
@@ -400,6 +444,32 @@ mod tests {
         let f16 = r.macs_by_dtype.iter().find(|(k, _)| *k == "F16").map(|(_, v)| *v).unwrap();
         let total: u64 = r.macs_by_dtype.iter().map(|(_, v)| *v).sum();
         assert!(f16 * 2 > total, "F16 {} of {}", f16, total);
+    }
+
+    #[test]
+    fn generate_request_honors_cancel_and_deadline() {
+        let p = Pipeline::new(cfg(Some(QuantModel::Q8_0), Backend::Host { threads: 2 }));
+        let mut eng = HostBackend::new(2);
+        let t = CancelToken::new();
+        t.cancel();
+        let got = p.generate_request(&mut eng, RequestId(1), "a lovely cat", 7, 4, &t);
+        assert_eq!(got.unwrap_err(), Aborted { cause: CancelCause::Cancelled, steps_completed: 0 });
+        assert_eq!(eng.stats().calls, 0, "abort before the text encode submits nothing");
+        let d = CancelToken::with_deadline(std::time::Instant::now());
+        let got = p.generate_request(&mut eng, RequestId(2), "a lovely cat", 7, 1, &d);
+        assert_eq!(got.unwrap_err().cause, CancelCause::DeadlineExpired);
+    }
+
+    #[test]
+    fn generate_request_with_live_token_matches_generate() {
+        let p = Pipeline::new(cfg(Some(QuantModel::Q8_0), Backend::Host { threads: 2 }));
+        let (a, _) = p.generate("a lovely cat", 7);
+        let mut eng = HostBackend::new(2);
+        let (b, rb) = p
+            .generate_request(&mut eng, RequestId(3), "a lovely cat", 7, 1, &CancelToken::new())
+            .expect("live token");
+        assert_eq!(a.data, b.data, "the cancellable path is the same computation");
+        assert_eq!(rb.request, RequestId(3));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 use super::graph::{ExecBackend, Feat};
 use super::unet::UNet;
 use crate::ggml::Tensor;
+use crate::util::cancel::{CancelCause, CancelToken};
 use crate::util::rng::Xoshiro256pp;
 
 /// Linear-in-alpha-bar schedule point for timestep `t ∈ [0, 1000)`.
@@ -49,10 +50,30 @@ pub fn ddim(
     ctx: &Tensor,
     steps: usize,
 ) -> Feat {
+    ddim_cancellable(eng, unet, latent, ctx, steps, &CancelToken::new())
+        .expect("a live token never aborts")
+}
+
+/// [`ddim`] with a cooperative cancel check at every step boundary: the
+/// token is consulted **before** each U-Net forward, so a cancelled or
+/// deadline-expired request stops submitting ops before its next
+/// denoising step (the serving acceptance invariant). On abort, returns
+/// the cause and the number of steps already completed.
+pub fn ddim_cancellable(
+    eng: &mut dyn ExecBackend,
+    unet: &UNet,
+    latent: &Feat,
+    ctx: &Tensor,
+    steps: usize,
+    cancel: &CancelToken,
+) -> Result<Feat, (CancelCause, usize)> {
     assert!(steps >= 1);
     let mut x = latent.clone();
     let ts: Vec<f32> = (0..steps).rev().map(|i| (i as f32 + 0.5) / steps as f32 * 999.0).collect();
     for (i, &t) in ts.iter().enumerate() {
+        if let Err(cause) = cancel.check() {
+            return Err((cause, i));
+        }
         let ab_t = alpha_bar(t);
         let ab_prev = if i + 1 < ts.len() { alpha_bar(ts[i + 1]) } else { 1.0 };
         let (a_t, s_t) = (ab_t.sqrt(), (1.0 - ab_t).sqrt());
@@ -69,7 +90,7 @@ pub fn ddim(
             .collect();
         x = Feat { c: x.c, h: x.h, w: x.w, data };
     }
-    x
+    Ok(x)
 }
 
 #[cfg(test)]
@@ -118,6 +139,68 @@ mod tests {
         assert_eq!(x0.data.len(), z.data.len());
         assert!(x0.data.iter().all(|v| v.is_finite()));
         assert_ne!(x0.data, z.data);
+    }
+
+    #[test]
+    fn precancelled_token_aborts_before_any_op() {
+        let (unet, ctx) = setup();
+        let z = initial_latent(3, LATENT_C, LATENT_HW, LATENT_HW);
+        let mut eng = HostBackend::new(2);
+        let t = CancelToken::new();
+        t.cancel();
+        let got = ddim_cancellable(&mut eng, &unet, &z, &ctx, 4, &t);
+        assert_eq!(got.unwrap_err(), (CancelCause::Cancelled, 0));
+        assert_eq!(eng.stats().calls, 0, "no op submitted after a cancel");
+    }
+
+    #[test]
+    fn cancel_mid_run_aborts_at_the_next_step_boundary() {
+        // A backend wrapper fires the token once one full step's worth
+        // of submissions completed — the loop must stop before step 2.
+        use crate::sd::backend::{EngineStats, OpDesc, OpHandle, RequestId};
+        struct CancelAfter<'a> {
+            inner: HostBackend,
+            token: &'a CancelToken,
+            after: u64,
+        }
+        impl ExecBackend for CancelAfter<'_> {
+            fn submit(&mut self, op: OpDesc<'_>) -> OpHandle {
+                let h = self.inner.submit(op);
+                if self.inner.stats().calls >= self.after {
+                    self.token.cancel();
+                }
+                h
+            }
+            fn sync(&mut self, h: OpHandle) -> Tensor {
+                self.inner.sync(h)
+            }
+            fn stats(&self) -> &EngineStats {
+                self.inner.stats()
+            }
+            fn begin_request(&mut self, id: RequestId) {
+                self.inner.begin_request(id)
+            }
+        }
+        let (unet, ctx) = setup();
+        let z = initial_latent(5, LATENT_C, LATENT_HW, LATENT_HW);
+        let mut probe = HostBackend::new(2);
+        let _ = ddim(&mut probe, &unet, &z, &ctx, 1);
+        let per_step = probe.stats().calls;
+        let t = CancelToken::new();
+        let mut eng = CancelAfter { inner: HostBackend::new(2), token: &t, after: per_step };
+        let got = ddim_cancellable(&mut eng, &unet, &z, &ctx, 6, &t);
+        assert_eq!(got.unwrap_err(), (CancelCause::Cancelled, 1), "one step completed");
+        assert_eq!(eng.stats().calls, per_step, "not a single op of step 2 was submitted");
+    }
+
+    #[test]
+    fn expired_deadline_reports_expiry_cause() {
+        let (unet, ctx) = setup();
+        let z = initial_latent(6, LATENT_C, LATENT_HW, LATENT_HW);
+        let mut eng = HostBackend::new(2);
+        let t = CancelToken::with_deadline(std::time::Instant::now());
+        let got = ddim_cancellable(&mut eng, &unet, &z, &ctx, 2, &t);
+        assert_eq!(got.unwrap_err(), (CancelCause::DeadlineExpired, 0));
     }
 
     #[test]

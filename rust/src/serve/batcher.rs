@@ -30,6 +30,16 @@
 //! activation quantization is per-row — so batched (and sharded)
 //! outputs are **bit-identical** to serial per-request execution
 //! (regression-tested in `tests/serve_batching.rs`).
+//!
+//! Cancellation: a member whose request is cancelled (or whose deadline
+//! expired) calls [`SharedBatch::leave`] between rendezvous points. The
+//! batch's *active* member count drops, and if the leaver was the only
+//! thing the others were waiting on, one of the already-arrived waiters
+//! is woken to act as leader and complete the rendezvous with the
+//! survivors' rows only. Because every output row is an independent
+//! vec-dot, the survivors' outputs are bit-identical to a run that
+//! never contained the cancelled member (proved in
+//! `tests/serve_lifecycle.rs`).
 
 use crate::coordinator::Coordinator;
 use crate::ggml::tensor::Storage;
@@ -96,6 +106,10 @@ struct BatchState {
     inputs: Vec<Option<Pending>>,
     outputs: Vec<Option<Tensor>>,
     arrived: usize,
+    /// Members still participating: starts at the batch size, drops on
+    /// [`SharedBatch::leave`]. A rendezvous completes when `arrived`
+    /// reaches `active`, so survivors never wait for a departed member.
+    active: usize,
     generation: u64,
 }
 
@@ -125,6 +139,7 @@ impl SharedBatch {
                 inputs: (0..size).map(|_| None).collect(),
                 outputs: (0..size).map(|_| None).collect(),
                 arrived: 0,
+                active: size,
                 generation: 0,
             }),
             cv: Condvar::new(),
@@ -151,75 +166,120 @@ impl SharedBatch {
         }
     }
 
-    /// Rendezvous: block until all `size` members have submitted their
+    /// Complete the rendezvous for the currently-arrived members:
+    /// concatenate their activation rows in slot order, execute once,
+    /// split the stacked output rows back, reset for the next round and
+    /// bump the generation. Caller holds the state lock and passes its
+    /// *own* op's weight/kind — all arrived members agreed on the key,
+    /// so any member's weight reference serves (which is what lets a
+    /// waiter complete the round after a departed member's
+    /// [`SharedBatch::leave`]).
+    fn complete_locked(&self, st: &mut BatchState, key: RendezvousKey, op: &OpDesc<'_>) {
+        let (w, kind) = (op.w, op.kind);
+        let (m, k) = (w.rows, w.cols);
+        let members = st.arrived;
+        let mut total_rows = 0;
+        for p in st.inputs.iter().flatten() {
+            assert_eq!(
+                p.key, key,
+                "lockstep members diverged at a rendezvous point (weight or op kind)"
+            );
+            total_rows += p.x.rows;
+        }
+        let mut data = Vec::with_capacity(total_rows * k);
+        for p in st.inputs.iter().flatten() {
+            data.extend_from_slice(p.x.as_f32());
+        }
+        let x_cat = Tensor::f32(total_rows, k, data);
+        let mut merged = OpDesc::new(kind, w, &x_cat);
+        merged.wid = op.wid; // members agreed on the key, so on the id
+        let y = self.execute(&merged); // [total_rows, m]
+        // Count the merge only when it coalesced >= 2 requests AND
+        // actually reached a lane, so `batched_submissions` stays
+        // comparable with `Coordinator::execute_coalesced` ("merged
+        // *lane* submissions"); merged host ops (F16 linears, or convs
+        // under a quantized-only policy) are not lane submissions, and a
+        // sole survivor's solo round is not a merge.
+        let on_lane = self.coordinator.policy.offloads_op(w, kind) && self.coordinator.lanes() > 0;
+        if members >= 2 && on_lane {
+            self.coordinator.metrics.record_batch(members as u64);
+        }
+        // Split the stacked output rows back per member, by slot (the
+        // iteration must track slot indices: departed slots stay None).
+        let mut row = 0;
+        for (i, slot_input) in st.inputs.iter_mut().enumerate() {
+            if let Some(p) = slot_input.take() {
+                let n_i = p.x.rows;
+                let slice = &y.as_f32()[row * m..(row + n_i) * m];
+                st.outputs[i] = Some(Tensor::f32(n_i, m, slice.to_vec()));
+                row += n_i;
+            }
+        }
+        st.arrived = 0;
+        st.generation = st.generation.wrapping_add(1);
+    }
+
+    /// Rendezvous: block until every *active* member has submitted its
     /// activations for the current op, execute once, return this
-    /// member's `[n_slot, m]` output.
+    /// member's `[n_slot, m]` output. Whichever member observes the
+    /// batch complete acts as leader — normally the last arrival, but
+    /// after a [`SharedBatch::leave`] it can be an already-waiting
+    /// member woken to finish the round without the departed peer.
     fn rendezvous(&self, slot: usize, op: &OpDesc<'_>) -> Tensor {
         if self.size == 1 {
             // Nothing to merge: skip the rendezvous (and its activation
             // clone) entirely — this is the serial baseline path.
             return self.execute(op);
         }
-        let (w, kind) = (op.w, op.kind);
-        let key = RendezvousKey { fp: fingerprint(op), kind };
+        let key = RendezvousKey { fp: fingerprint(op), kind: op.kind };
         let mut st = self.state.lock().unwrap();
+        assert!(st.active > 0, "rendezvous on a batch with no active members");
         assert!(
             st.inputs[slot].is_none(),
             "member {slot} submitted twice before the rendezvous completed"
         );
         st.inputs[slot] = Some(Pending { key, x: op.x.clone() });
         st.arrived += 1;
-        if st.arrived == self.size {
-            // Leader: concatenate activation rows in slot order.
-            let (m, k) = (w.rows, w.cols);
-            let mut rows_per = Vec::with_capacity(self.size);
-            let mut total_rows = 0;
-            for p in st.inputs.iter().flatten() {
-                assert_eq!(
-                    p.key, key,
-                    "lockstep members diverged at a rendezvous point (weight or op kind)"
-                );
-                rows_per.push(p.x.rows);
-                total_rows += p.x.rows;
+        let gen = st.generation;
+        loop {
+            if st.generation != gen {
+                // Another member led this round while we waited.
+                return st.outputs[slot].take().expect("rendezvous output present");
             }
-            let mut data = Vec::with_capacity(total_rows * k);
-            for p in st.inputs.iter().flatten() {
-                data.extend_from_slice(p.x.as_f32());
+            if st.arrived == st.active {
+                self.complete_locked(&mut st, key, op);
+                let mine = st.outputs[slot].take().expect("leader output present");
+                self.cv.notify_all();
+                return mine;
             }
-            let x_cat = Tensor::f32(total_rows, k, data);
-            let mut merged = OpDesc::new(kind, w, &x_cat);
-            merged.wid = op.wid; // members agreed on the key, so on the id
-            let y = self.execute(&merged); // [total_rows, m]
-            // Count the merge only when it actually reached a lane, so
-            // `batched_submissions` stays comparable with
-            // `Coordinator::execute_coalesced` ("merged *lane*
-            // submissions"); merged host ops (F16 linears, or convs
-            // under a quantized-only policy) are not lane submissions.
-            if self.coordinator.policy.offloads_op(w, kind) && self.coordinator.lanes() > 0 {
-                self.coordinator.metrics.record_batch(self.size as u64);
-            }
-            // Split the stacked output rows back per member.
-            let mut row = 0;
-            for (i, n_i) in rows_per.iter().copied().enumerate() {
-                let slice = &y.as_f32()[row * m..(row + n_i) * m];
-                st.outputs[i] = Some(Tensor::f32(n_i, m, slice.to_vec()));
-                row += n_i;
-            }
-            for p in st.inputs.iter_mut() {
-                *p = None;
-            }
-            st.arrived = 0;
-            st.generation = st.generation.wrapping_add(1);
-            let mine = st.outputs[slot].take().expect("leader output present");
-            self.cv.notify_all();
-            mine
-        } else {
-            let gen = st.generation;
-            while st.generation == gen {
-                st = self.cv.wait(st).unwrap();
-            }
-            st.outputs[slot].take().expect("rendezvous output present")
+            st = self.cv.wait(st).unwrap();
         }
+    }
+
+    /// Withdraw a member from the batch (cancelled or deadline-expired
+    /// request). Any activation it already staged for the current round
+    /// is dropped, the active count shrinks, and if the remaining
+    /// members were only waiting on the leaver, one of them is woken to
+    /// lead the round to completion — so survivors never deadlock and
+    /// their outputs stay bit-identical (fewer concatenated rows, same
+    /// independent per-row vec-dots). Idempotent use is the caller's
+    /// responsibility: leave once per departing member.
+    pub fn leave(&self, slot: usize) {
+        let mut st = self.state.lock().unwrap();
+        assert!(st.active > 0, "leave on a batch with no active members");
+        if st.inputs[slot].take().is_some() {
+            st.arrived -= 1;
+        }
+        st.active -= 1;
+        drop(st);
+        // Wake waiters: one of them re-checks `arrived == active` and
+        // completes the round the leaver would have unblocked.
+        self.cv.notify_all();
+    }
+
+    /// Members still participating (size minus leavers).
+    pub fn active(&self) -> usize {
+        self.state.lock().unwrap().active
     }
 }
 
@@ -243,6 +303,14 @@ impl BatchMember {
             stats: EngineStats::default(),
             done: Completions::default(),
         }
+    }
+
+    /// Withdraw this member from the micro-batch after its request was
+    /// cancelled or its deadline expired — see [`SharedBatch::leave`].
+    /// Call exactly once, between rendezvous points (the pipeline's
+    /// step-boundary cancel checks guarantee that placement).
+    pub fn leave(&self) {
+        self.shared.leave(self.slot);
     }
 }
 
@@ -442,6 +510,122 @@ mod tests {
         let a = RendezvousKey { fp, kind: OpKind::Linear };
         let b = RendezvousKey { fp, kind: OpKind::TimeEmbed };
         assert_ne!(a, b, "same weight under different kinds must not rendezvous");
+    }
+
+    #[test]
+    fn leave_mid_sequence_lets_survivors_complete_bit_identically() {
+        // Member 2 submits one op, then leaves; members 0 and 1 run
+        // three ops. Survivor outputs must be bit-identical to a batch
+        // that never contained member 2.
+        let w = rnd(6, 128, 70).quantize(DType::Q8_0).with_wid(WeightId(9));
+        let xs: Vec<Vec<Tensor>> = (0..3)
+            .map(|slot| (0..3).map(|round| rnd(2, 128, 200 + 10 * slot + round)).collect())
+            .collect();
+        let run = |with_leaver: bool| -> Vec<Vec<Tensor>> {
+            let members = if with_leaver { 3 } else { 2 };
+            let shared = SharedBatch::new(members, coordinator(2), false);
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..2usize)
+                    .map(|slot| {
+                        let shared = Arc::clone(&shared);
+                        let (w, xs) = (&w, &xs);
+                        scope.spawn(move || {
+                            let mut eng = BatchMember::new(shared, slot, RequestId(slot as u64));
+                            xs[slot]
+                                .iter()
+                                .map(|x| eng.submit_now(OpDesc::linear(w, x)))
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                if with_leaver {
+                    let shared = Arc::clone(&shared);
+                    let (w, xs) = (&w, &xs);
+                    scope
+                        .spawn(move || {
+                            let mut eng = BatchMember::new(shared, 2, RequestId(2));
+                            let _ = eng.submit_now(OpDesc::linear(w, &xs[2][0]));
+                            // Simulated cancel between rendezvous points.
+                            eng.leave();
+                        })
+                        .join()
+                        .unwrap();
+                }
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            })
+        };
+        let with_leaver = run(true);
+        let without = run(false);
+        for (a_rounds, b_rounds) in with_leaver.iter().zip(&without) {
+            for (a, b) in a_rounds.iter().zip(b_rounds) {
+                for (p, q) in a.as_f32().iter().zip(b.as_f32()) {
+                    assert_eq!(p.to_bits(), q.to_bits(), "survivors unaffected by the leaver");
+                }
+            }
+        }
+        // And against the serial ground truth.
+        for (slot, rounds) in without.iter().enumerate() {
+            for (round, got) in rounds.iter().enumerate() {
+                let want = ggml::mul_mat(&w, &xs[slot][round], 1);
+                for (p, q) in got.as_f32().iter().zip(want.as_f32()) {
+                    assert_eq!(p.to_bits(), q.to_bits(), "round {round} == serial");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn leave_wakes_waiters_blocked_on_the_leaver() {
+        // Both survivors arrive FIRST and block; the leaver departs
+        // without ever submitting — a waiter must take over leadership.
+        let coord = coordinator(1);
+        let w = rnd(4, 64, 80).quantize(DType::Q8_0);
+        let shared = SharedBatch::new(3, Arc::clone(&coord), false);
+        let outs: Vec<Tensor> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..2usize)
+                .map(|slot| {
+                    let shared = Arc::clone(&shared);
+                    let w = &w;
+                    scope.spawn(move || {
+                        let mut eng = BatchMember::new(shared, slot, RequestId(slot as u64));
+                        eng.submit_now(OpDesc::linear(w, &rnd(2, 64, 90 + slot as u64)))
+                    })
+                })
+                .collect();
+            // Give the survivors time to arrive and block on the
+            // rendezvous before the third member leaves.
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            shared.leave(2);
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(shared.active(), 2);
+        for (slot, got) in outs.iter().enumerate() {
+            let want = ggml::mul_mat(&w, &rnd(2, 64, 90 + slot as u64), 1);
+            for (p, q) in got.as_f32().iter().zip(want.as_f32()) {
+                assert_eq!(p.to_bits(), q.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sole_survivor_continues_solo_without_batch_counters() {
+        let coord = coordinator(1);
+        let shared = SharedBatch::new(2, Arc::clone(&coord), false);
+        let w = rnd(4, 64, 95).quantize(DType::Q8_0);
+        let x = rnd(3, 64, 96);
+        shared.leave(1);
+        let mut eng = BatchMember::new(Arc::clone(&shared), 0, RequestId(0));
+        let got = eng.submit_now(OpDesc::linear(&w, &x));
+        let want = ggml::mul_mat(&w, &x, 1);
+        for (p, q) in got.as_f32().iter().zip(want.as_f32()) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(
+            coord.metrics.batched_submissions.load(ord),
+            0,
+            "a solo round is not a merged submission"
+        );
     }
 
     #[test]

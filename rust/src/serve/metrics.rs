@@ -1,7 +1,65 @@
-//! Serving metrics: per-request latency plus aggregate throughput.
+//! Serving metrics: the request state machine, per-request latency, and
+//! aggregate throughput/tail-latency for one serving run.
 
 use crate::sd::graph::RequestId;
+use crate::util::cancel::CancelCause;
 use crate::util::stats::Summary;
+
+/// Lifecycle state of a served request (the cog-style runner states).
+///
+/// ```text
+/// Queued ──▶ Running ──▶ Succeeded | Failed | Cancelled | Expired
+///    │
+///    └──(cancel while queued / deadline passes in queue)──▶ Cancelled | Expired
+/// ```
+///
+/// `Rejected` never enters the queue at all — it is the backpressure
+/// outcome (HTTP 429) counted in [`ServeReport::rejected`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RunnerState {
+    /// Admitted, waiting for a worker slot.
+    Queued,
+    /// A worker is generating the image.
+    Running,
+    /// Finished; the image and metrics are available.
+    Succeeded,
+    /// The worker panicked or the pipeline errored.
+    Failed,
+    /// A cancel request fired the token before completion.
+    Cancelled,
+    /// The per-request deadline passed before completion.
+    Expired,
+    /// Refused at admission (queue full past the SLO) — never ran.
+    Rejected,
+}
+
+impl RunnerState {
+    /// True for states no transition leaves.
+    pub fn terminal(self) -> bool {
+        !matches!(self, RunnerState::Queued | RunnerState::Running)
+    }
+
+    /// Wire name (the HTTP status field value).
+    pub fn name(self) -> &'static str {
+        match self {
+            RunnerState::Queued => "queued",
+            RunnerState::Running => "running",
+            RunnerState::Succeeded => "succeeded",
+            RunnerState::Failed => "failed",
+            RunnerState::Cancelled => "cancelled",
+            RunnerState::Expired => "expired",
+            RunnerState::Rejected => "rejected",
+        }
+    }
+
+    /// The terminal state an abort cause maps to.
+    pub fn from_cause(cause: CancelCause) -> RunnerState {
+        match cause {
+            CancelCause::Cancelled => RunnerState::Cancelled,
+            CancelCause::DeadlineExpired => RunnerState::Expired,
+        }
+    }
+}
 
 /// Outcome of one served request.
 #[derive(Debug, Clone)]
@@ -10,14 +68,23 @@ pub struct RequestOutcome {
     pub id: RequestId,
     /// The prompt served.
     pub prompt: String,
+    /// Terminal state ([`RunnerState::Succeeded`] for a full run).
+    pub state: RunnerState,
     /// Queue-to-image latency in seconds (includes time spent waiting
     /// for micro-batch peers at rendezvous points).
     pub latency_seconds: f64,
+    /// Seconds spent waiting in the queue before a worker picked the
+    /// request up.
+    pub queue_seconds: f64,
+    /// Denoising steps completed (equals the requested steps on
+    /// success; smaller when cancel/deadline aborted mid-denoise).
+    pub steps_completed: usize,
     /// Mat-mul ops executed for this request.
     pub matmul_calls: u64,
     /// MACs attributed to this request.
     pub macs: u64,
-    /// CRC-32 of the RGB8 image bytes (determinism fingerprint).
+    /// CRC-32 of the RGB8 image bytes (determinism fingerprint; 0 for
+    /// aborted requests, which produce no image).
     pub image_crc32: u32,
 }
 
@@ -47,12 +114,24 @@ pub struct ServeReport {
     pub cache_hit_bytes: u64,
     /// Weight bytes DMA'd on residency-cache misses.
     pub cache_miss_bytes: u64,
+    /// Requests refused at admission (backpressure; they have no
+    /// outcome entry).
+    pub rejected: u64,
+    /// Peak queue depth observed during the run.
+    pub queue_depth_peak: usize,
+    /// Peak number of requests running concurrently in workers.
+    pub inflight_peak: usize,
 }
 
 impl ServeReport {
-    /// Requests served.
+    /// Requests with an outcome (admitted; excludes rejected).
     pub fn requests(&self) -> usize {
         self.outcomes.len()
+    }
+
+    /// How many outcomes ended in `state`.
+    pub fn count(&self, state: RunnerState) -> usize {
+        self.outcomes.iter().filter(|o| o.state == state).count()
     }
 
     /// Aggregate MAC throughput over the run (MAC/s of wall time).
@@ -83,11 +162,38 @@ impl ServeReport {
         }
     }
 
-    /// Latency distribution across requests (empty runs panic, like
-    /// [`Summary::of`]).
+    /// Latency distribution across all admitted requests (empty runs
+    /// panic, like [`Summary::of`]).
     pub fn latency_summary(&self) -> Summary {
         let samples: Vec<f64> = self.outcomes.iter().map(|o| o.latency_seconds).collect();
         Summary::of(&samples)
+    }
+
+    /// Latency distribution over **succeeded** requests only — the
+    /// SLO-facing figure (cancelled/expired latencies would deflate the
+    /// tail). `None` when nothing succeeded.
+    pub fn succeeded_latency_summary(&self) -> Option<Summary> {
+        let samples: Vec<f64> = self
+            .outcomes
+            .iter()
+            .filter(|o| o.state == RunnerState::Succeeded)
+            .map(|o| o.latency_seconds)
+            .collect();
+        if samples.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&samples))
+        }
+    }
+
+    /// Fraction of arrivals refused at admission, in `[0, 1]`.
+    pub fn rejection_rate(&self) -> f64 {
+        let offered = self.outcomes.len() as u64 + self.rejected;
+        if offered == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / offered as f64
+        }
     }
 
     /// Fraction of weight LOAD bytes the residency cache elided, in
@@ -110,7 +216,10 @@ mod tests {
         RequestOutcome {
             id: RequestId(id),
             prompt: format!("p{id}"),
+            state: RunnerState::Succeeded,
             latency_seconds: latency,
+            queue_seconds: 0.1,
+            steps_completed: 1,
             matmul_calls: 10,
             macs,
             image_crc32: 0,
@@ -130,12 +239,17 @@ mod tests {
             coalesced_jobs: 2,
             cache_hit_bytes: 300,
             cache_miss_bytes: 100,
+            rejected: 0,
+            queue_depth_peak: 2,
+            inflight_peak: 2,
         };
         assert_eq!(r.requests(), 2);
+        assert_eq!(r.count(RunnerState::Succeeded), 2);
         assert!((r.macs_per_second() - 2000.0).abs() < 1e-9);
         assert!((r.requests_per_second() - 1.0).abs() < 1e-9);
         assert!((r.cycles_per_offloaded_mac() - 0.5).abs() < 1e-9);
         assert!((r.cache_byte_hit_rate() - 0.75).abs() < 1e-9);
+        assert_eq!(r.rejection_rate(), 0.0);
         let lat = r.latency_summary();
         assert!((lat.mean - 1.0).abs() < 1e-9);
         assert_eq!(lat.n, 2);
@@ -154,10 +268,71 @@ mod tests {
             coalesced_jobs: 0,
             cache_hit_bytes: 0,
             cache_miss_bytes: 0,
+            rejected: 0,
+            queue_depth_peak: 0,
+            inflight_peak: 0,
         };
         assert_eq!(r.macs_per_second(), 0.0);
         assert_eq!(r.requests_per_second(), 0.0);
         assert_eq!(r.cycles_per_offloaded_mac(), 0.0);
         assert_eq!(r.cache_byte_hit_rate(), 0.0);
+        assert_eq!(r.rejection_rate(), 0.0);
+        assert!(r.succeeded_latency_summary().is_none());
+    }
+
+    #[test]
+    fn per_state_counters_and_slo_facing_tail() {
+        let mut cancelled = outcome(3, 0.05, 100);
+        cancelled.state = RunnerState::Cancelled;
+        cancelled.steps_completed = 2;
+        cancelled.image_crc32 = 0;
+        let mut expired = outcome(4, 0.01, 0);
+        expired.state = RunnerState::Expired;
+        expired.steps_completed = 0;
+        let r = ServeReport {
+            outcomes: vec![outcome(1, 1.0, 1000), outcome(2, 3.0, 1000), cancelled, expired],
+            wall_seconds: 4.0,
+            total_macs: 2100,
+            offloaded_macs: 0,
+            imax_cycles: 0,
+            lane_submissions: 0,
+            batched_submissions: 0,
+            coalesced_jobs: 0,
+            cache_hit_bytes: 0,
+            cache_miss_bytes: 0,
+            rejected: 4,
+            queue_depth_peak: 5,
+            inflight_peak: 2,
+        };
+        assert_eq!(r.count(RunnerState::Succeeded), 2);
+        assert_eq!(r.count(RunnerState::Cancelled), 1);
+        assert_eq!(r.count(RunnerState::Expired), 1);
+        assert_eq!(r.count(RunnerState::Failed), 0);
+        // 4 admitted + 4 rejected offered => 50% shed.
+        assert!((r.rejection_rate() - 0.5).abs() < 1e-12);
+        // The SLO tail ignores the fast abort latencies.
+        let ok = r.succeeded_latency_summary().expect("two succeeded");
+        assert_eq!(ok.n, 2);
+        assert!((ok.mean - 2.0).abs() < 1e-12);
+        // The all-outcomes summary includes them.
+        assert_eq!(r.latency_summary().n, 4);
+    }
+
+    #[test]
+    fn state_machine_names_and_terminality() {
+        for (s, name, terminal) in [
+            (RunnerState::Queued, "queued", false),
+            (RunnerState::Running, "running", false),
+            (RunnerState::Succeeded, "succeeded", true),
+            (RunnerState::Failed, "failed", true),
+            (RunnerState::Cancelled, "cancelled", true),
+            (RunnerState::Expired, "expired", true),
+            (RunnerState::Rejected, "rejected", true),
+        ] {
+            assert_eq!(s.name(), name);
+            assert_eq!(s.terminal(), terminal);
+        }
+        assert_eq!(RunnerState::from_cause(CancelCause::Cancelled), RunnerState::Cancelled);
+        assert_eq!(RunnerState::from_cause(CancelCause::DeadlineExpired), RunnerState::Expired);
     }
 }

@@ -35,10 +35,20 @@
 //! the first micro-batch pays the weight LOADs once, every later one
 //! pays almost none.
 //!
-//! Metrics: per-request latency plus aggregate throughput in
-//! [`metrics::ServeReport`], built on the extended
+//! Metrics: per-request latency plus aggregate throughput and tail
+//! percentiles in [`metrics::ServeReport`], built on the extended
 //! [`crate::coordinator::CoordinatorMetrics`] batch counters, plus the
 //! residency cache's hit/miss byte volumes.
+//!
+//! Requests carry a [`crate::util::cancel::CancelToken`] and a step
+//! count: micro-batches are formed from same-step requests (lockstep
+//! members must run the identical op sequence), a fired token aborts
+//! its request at the next step boundary, and the aborting member
+//! [`batcher::BatchMember::leave`]s the rendezvous so the surviving
+//! members complete — bit-identically to a batch that never contained
+//! it. The [`RequestQueue`] is capacity-bounded; a full queue refuses
+//! admission ([`queue::PushError::Full`]), which the HTTP front-end in
+//! [`crate::server`] surfaces as `429 Too Many Requests`.
 
 pub mod batcher;
 pub mod metrics;
@@ -46,6 +56,6 @@ pub mod queue;
 pub mod worker;
 
 pub use batcher::{BatchMember, SharedBatch};
-pub use metrics::{RequestOutcome, ServeReport};
-pub use queue::{RequestQueue, ServeRequest};
+pub use metrics::{RequestOutcome, RunnerState, ServeReport};
+pub use queue::{PushError, RequestQueue, ServeRequest};
 pub use worker::{ServeConfig, ServeHarness};

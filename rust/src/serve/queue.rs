@@ -1,13 +1,24 @@
 //! Concurrent request queue feeding the serving workers.
 //!
-//! A bounded-complexity MPMC queue on `Mutex` + `Condvar` (the vendored
-//! crate set has no channel/async runtime): producers [`RequestQueue::push`]
-//! requests, workers block in [`RequestQueue::pop_batch`] until work (or
-//! close), then drain up to a micro-batch worth in FIFO order.
+//! A bounded MPMC queue on `Mutex` + `Condvar` (the vendored crate set
+//! has no channel/async runtime): producers [`RequestQueue::try_push`]
+//! requests (an explicit [`PushError::Full`] is the backpressure signal
+//! the HTTP 429 path builds on), workers block in
+//! [`RequestQueue::pop_batch`] until work (or close), then drain up to a
+//! micro-batch worth in FIFO order — restricted to requests with the
+//! **same step count**, because every member of a lockstep micro-batch
+//! must run the identical op sequence through the rendezvous
+//! ([`crate::serve::batcher::SharedBatch`]). Mixed-step traffic
+//! therefore forms per-step-count batches: the FIFO head defines the
+//! batch's step count and later same-step requests are pulled forward
+//! past differing ones (bounded overtaking; FIFO order is preserved
+//! within each step class).
 
 use crate::sd::graph::RequestId;
+use crate::util::cancel::CancelToken;
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 /// One image-generation request.
 #[derive(Debug, Clone)]
@@ -18,15 +29,61 @@ pub struct ServeRequest {
     pub prompt: String,
     /// Latent seed.
     pub seed: u64,
+    /// Denoising steps (1 = SD-Turbo). Micro-batches are formed from
+    /// same-step requests so lockstep members stay in sync.
+    pub steps: usize,
+    /// Cooperative cancel/deadline token, checked at step boundaries.
+    pub cancel: CancelToken,
+    /// When the request entered the queue (queue-wait accounting).
+    pub enqueued: Instant,
 }
+
+impl ServeRequest {
+    /// A live request enqueued now, with a fresh (never-firing) token.
+    pub fn new(id: RequestId, prompt: String, seed: u64, steps: usize) -> ServeRequest {
+        assert!(steps >= 1, "a request needs at least one denoising step");
+        let (cancel, enqueued) = (CancelToken::new(), Instant::now());
+        ServeRequest { id, prompt, seed, steps, cancel, enqueued }
+    }
+
+    /// Replace the token (cancel routes and deadlines hold clones of it).
+    pub fn with_cancel(mut self, cancel: CancelToken) -> ServeRequest {
+        self.cancel = cancel;
+        self
+    }
+}
+
+/// Why a push was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushError {
+    /// The queue is at capacity — shed load (HTTP 429 + `Retry-After`).
+    Full {
+        /// The configured bound.
+        capacity: usize,
+    },
+    /// The queue was closed (graceful shutdown drains, then rejects).
+    Closed,
+}
+
+impl std::fmt::Display for PushError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PushError::Full { capacity } => write!(f, "queue full (capacity {capacity})"),
+            PushError::Closed => write!(f, "queue closed"),
+        }
+    }
+}
+
+impl std::error::Error for PushError {}
 
 struct QueueState {
     pending: VecDeque<ServeRequest>,
     closed: bool,
 }
 
-/// FIFO request queue with close semantics.
+/// FIFO request queue with a capacity bound and close semantics.
 pub struct RequestQueue {
+    capacity: usize,
     state: Mutex<QueueState>,
     cv: Condvar,
 }
@@ -38,21 +95,52 @@ impl Default for RequestQueue {
 }
 
 impl RequestQueue {
-    /// New, open, empty queue.
+    /// New, open, empty queue without a capacity bound (offline batch
+    /// runs that enqueue a known request set up front).
     pub fn new() -> RequestQueue {
+        RequestQueue::bounded(usize::MAX)
+    }
+
+    /// New queue admitting at most `capacity` waiting requests; a push
+    /// at the bound returns [`PushError::Full`] instead of growing.
+    pub fn bounded(capacity: usize) -> RequestQueue {
+        assert!(capacity >= 1, "queue capacity must be >= 1");
         RequestQueue {
+            capacity,
             state: Mutex::new(QueueState { pending: VecDeque::new(), closed: false }),
             cv: Condvar::new(),
         }
     }
 
-    /// Enqueue a request. Panics if the queue was closed.
-    pub fn push(&self, req: ServeRequest) {
+    /// The capacity bound (`usize::MAX` for unbounded queues).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Enqueue a request, refusing instead of blocking: [`PushError::Full`]
+    /// at capacity, [`PushError::Closed`] after [`RequestQueue::close`].
+    pub fn try_push(&self, req: ServeRequest) -> Result<(), PushError> {
         let mut st = self.state.lock().unwrap();
-        assert!(!st.closed, "push after close");
+        if st.closed {
+            return Err(PushError::Closed);
+        }
+        if st.pending.len() >= self.capacity {
+            return Err(PushError::Full { capacity: self.capacity });
+        }
         st.pending.push_back(req);
         drop(st);
         self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Enqueue a request. Panics if the queue was closed or is full —
+    /// the infallible producer path for offline runs with a known bound.
+    pub fn push(&self, req: ServeRequest) {
+        match self.try_push(req) {
+            Ok(()) => {}
+            Err(PushError::Closed) => panic!("push after close"),
+            Err(PushError::Full { capacity }) => panic!("queue full (capacity {capacity})"),
+        }
     }
 
     /// Close the queue: workers drain what is left, then see empty pops.
@@ -61,6 +149,11 @@ impl RequestQueue {
         st.closed = true;
         drop(st);
         self.cv.notify_all();
+    }
+
+    /// True once [`RequestQueue::close`] ran.
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
     }
 
     /// Requests currently waiting.
@@ -74,16 +167,26 @@ impl RequestQueue {
     }
 
     /// Block until at least one request is available (or the queue is
-    /// closed and drained), then take up to `max` requests in FIFO
-    /// order. An empty vec means "closed and drained" — the worker's
-    /// stop signal.
+    /// closed and drained), then take up to `max` requests sharing the
+    /// FIFO head's step count (lockstep batches must be step-homogeneous).
+    /// An empty vec means "closed and drained" — the worker's stop
+    /// signal.
     pub fn pop_batch(&self, max: usize) -> Vec<ServeRequest> {
         assert!(max >= 1, "micro-batch size must be >= 1");
         let mut st = self.state.lock().unwrap();
         loop {
             if !st.pending.is_empty() {
-                let take = st.pending.len().min(max);
-                return st.pending.drain(..take).collect();
+                let steps = st.pending.front().expect("non-empty").steps;
+                let mut batch = Vec::with_capacity(max.min(st.pending.len()));
+                let mut i = 0;
+                while i < st.pending.len() && batch.len() < max {
+                    if st.pending[i].steps == steps {
+                        batch.push(st.pending.remove(i).expect("index in range"));
+                    } else {
+                        i += 1;
+                    }
+                }
+                return batch;
             }
             if st.closed {
                 return Vec::new();
@@ -99,7 +202,11 @@ mod tests {
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     fn req(id: u64) -> ServeRequest {
-        ServeRequest { id: RequestId(id), prompt: format!("p{id}"), seed: id }
+        ServeRequest::new(RequestId(id), format!("p{id}"), id, 1)
+    }
+
+    fn req_steps(id: u64, steps: usize) -> ServeRequest {
+        ServeRequest::new(RequestId(id), format!("p{id}"), id, steps)
     }
 
     #[test]
@@ -159,5 +266,47 @@ mod tests {
         let q = RequestQueue::new();
         q.close();
         q.push(req(1));
+    }
+
+    #[test]
+    fn bounded_queue_rejects_at_capacity_until_a_pop_frees_a_slot() {
+        let q = RequestQueue::bounded(2);
+        assert_eq!(q.capacity(), 2);
+        assert_eq!(q.try_push(req(1)), Ok(()));
+        assert_eq!(q.try_push(req(2)), Ok(()));
+        assert_eq!(q.try_push(req(3)), Err(PushError::Full { capacity: 2 }));
+        assert_eq!(q.len(), 2, "the rejected request never entered");
+        assert_eq!(q.pop_batch(1).len(), 1);
+        assert_eq!(q.try_push(req(3)), Ok(()), "a freed slot admits again");
+        q.close();
+        assert_eq!(q.try_push(req(4)), Err(PushError::Closed));
+    }
+
+    #[test]
+    fn batches_are_step_homogeneous_with_bounded_overtaking() {
+        let q = RequestQueue::new();
+        for (id, steps) in [(1, 1), (2, 1), (3, 4), (4, 1), (5, 4)] {
+            q.push(req_steps(id, steps));
+        }
+        q.close();
+        // Head has steps=1: the two queued 1-step peers join, overtaking
+        // the 4-step request in the middle.
+        let a = q.pop_batch(4);
+        assert_eq!(a.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![1, 2, 4]);
+        assert!(a.iter().all(|r| r.steps == 1));
+        let b = q.pop_batch(4);
+        assert_eq!(b.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![3, 5]);
+        assert!(b.iter().all(|r| r.steps == 4));
+    }
+
+    #[test]
+    fn step_grouping_respects_the_batch_limit() {
+        let q = RequestQueue::new();
+        for i in 0..5 {
+            q.push(req_steps(i, 2));
+        }
+        q.close();
+        assert_eq!(q.pop_batch(3).len(), 3);
+        assert_eq!(q.pop_batch(3).len(), 2);
     }
 }

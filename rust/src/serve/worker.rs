@@ -2,13 +2,14 @@
 //! running them lockstep over the shared pipeline.
 
 use super::batcher::{BatchMember, SharedBatch};
-use super::metrics::{RequestOutcome, ServeReport};
+use super::metrics::{RequestOutcome, RunnerState, ServeReport};
 use super::queue::{RequestQueue, ServeRequest};
 use crate::coordinator::{Coordinator, OffloadPolicy};
 use crate::imax::ImaxConfig;
 use crate::sd::graph::RequestId;
 use crate::sd::pipeline::{to_rgb8, Pipeline, PipelineConfig};
 use crate::util::png::crc32;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Serving-side knobs (the pipeline/model side comes from
@@ -32,11 +33,23 @@ pub struct ServeConfig {
     /// [`crate::coordinator::Coordinator::submit_sharded`]) instead of
     /// whole-op lane affinity.
     pub sharded: bool,
+    /// Admission bound: at most this many requests wait in the queue;
+    /// past it, pushes fail (the HTTP layer's 429 signal). Offline
+    /// [`ServeHarness::serve`] runs widen the bound to the request-set
+    /// size, so the cap only bites in online serving.
+    pub queue_capacity: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { lanes: 2, host_threads: 2, max_batch: 4, workers: 2, sharded: false }
+        ServeConfig {
+            lanes: 2,
+            host_threads: 2,
+            max_batch: 4,
+            workers: 2,
+            sharded: false,
+            queue_capacity: 64,
+        }
     }
 }
 
@@ -44,7 +57,14 @@ impl ServeConfig {
     /// The serial baseline: one request at a time, no coalescing — the
     /// paper's one-image-per-invocation mode, for comparison benches.
     pub fn serial(lanes: usize, host_threads: usize) -> ServeConfig {
-        ServeConfig { lanes, host_threads, max_batch: 1, workers: 1, sharded: false }
+        ServeConfig {
+            lanes,
+            host_threads,
+            max_batch: 1,
+            workers: 1,
+            sharded: false,
+            queue_capacity: 64,
+        }
     }
 }
 
@@ -78,6 +98,7 @@ impl ServeHarness {
     ) -> ServeHarness {
         assert!(config.max_batch >= 1, "max_batch must be >= 1");
         assert!(config.workers >= 1, "workers must be >= 1");
+        assert!(config.queue_capacity >= 1, "queue_capacity must be >= 1");
         let cache_enabled = imax.weight_cache_bytes > 0;
         // The pipeline config's routing policy (its `backend` field is
         // ignored, but `conv_offload` is honored): QuantizedAndConv
@@ -127,16 +148,20 @@ impl ServeHarness {
         let base_coalesced_jobs = m.coalesced_jobs.load(ord);
         let base_cache_hit_bytes = m.cache_hit_bytes.load(ord);
         let base_cache_miss_bytes = m.cache_miss_bytes.load(ord);
-        let queue = RequestQueue::new();
+        // Offline runs enqueue everything up front, so the admission cap
+        // is widened to the request-set size (backpressure is an online
+        // concern — the HTTP runner uses the strict bound).
+        let queue =
+            RequestQueue::bounded(self.config.queue_capacity.max(prompts.len()).max(1));
+        let steps = self.pipeline.config.steps;
         for (i, (prompt, seed)) in prompts.iter().enumerate() {
-            queue.push(ServeRequest {
-                id: RequestId(i as u64 + 1),
-                prompt: prompt.clone(),
-                seed: *seed,
-            });
+            queue.push(ServeRequest::new(RequestId(i as u64 + 1), prompt.clone(), *seed, steps));
         }
         queue.close();
+        let queue_depth_peak = prompts.len();
 
+        let inflight = AtomicUsize::new(0);
+        let inflight_peak = AtomicUsize::new(0);
         let outcomes: Mutex<Vec<RequestOutcome>> = Mutex::new(Vec::new());
         std::thread::scope(|scope| {
             for _ in 0..self.config.workers {
@@ -145,7 +170,11 @@ impl ServeHarness {
                     if batch.is_empty() {
                         break;
                     }
-                    self.run_micro_batch(&batch, &outcomes);
+                    let now = inflight.fetch_add(batch.len(), Ordering::Relaxed) + batch.len();
+                    inflight_peak.fetch_max(now, Ordering::Relaxed);
+                    let done = self.run_batch(&batch);
+                    inflight.fetch_sub(batch.len(), Ordering::Relaxed);
+                    outcomes.lock().unwrap().extend(done);
                 });
             }
         });
@@ -164,38 +193,83 @@ impl ServeHarness {
             coalesced_jobs: m.coalesced_jobs.load(ord) - base_coalesced_jobs,
             cache_hit_bytes: m.cache_hit_bytes.load(ord) - base_cache_hit_bytes,
             cache_miss_bytes: m.cache_miss_bytes.load(ord) - base_cache_miss_bytes,
+            rejected: 0,
+            queue_depth_peak,
+            inflight_peak: inflight_peak.load(Ordering::Relaxed),
         }
     }
 
-    /// Run one micro-batch: one thread per request, lockstep through the
-    /// shared rendezvous.
-    fn run_micro_batch(&self, batch: &[ServeRequest], outcomes: &Mutex<Vec<RequestOutcome>>) {
+    /// Run one micro-batch to completion: one thread per request,
+    /// lockstep through the shared rendezvous. Requests whose token
+    /// fires (cancel route, deadline) abort at their next step boundary
+    /// and [`BatchMember::leave`] the rendezvous, so the surviving
+    /// members complete normally — and bit-identically to a batch that
+    /// never contained the leaver (each output row is an independent
+    /// vec-dot). Outcomes are returned sorted by request id.
+    ///
+    /// This is the execution core [`ServeHarness::serve`] and the HTTP
+    /// runner's workers share.
+    pub fn run_batch(&self, batch: &[ServeRequest]) -> Vec<RequestOutcome> {
         let shared = SharedBatch::new(batch.len(), Arc::clone(&self.coordinator), self.config.sharded);
+        let outcomes: Mutex<Vec<RequestOutcome>> = Mutex::new(Vec::with_capacity(batch.len()));
         std::thread::scope(|scope| {
             for (slot, req) in batch.iter().enumerate() {
                 let shared = Arc::clone(&shared);
+                let outcomes = &outcomes;
                 scope.spawn(move || {
+                    let queue_seconds = req.enqueued.elapsed().as_secs_f64();
                     let t0 = std::time::Instant::now();
                     let mut eng = BatchMember::new(shared, slot, req.id);
-                    let (img, report) = self.pipeline.generate_with_backend(
+                    let outcome = match self.pipeline.generate_request(
                         &mut eng,
                         req.id,
                         &req.prompt,
                         req.seed,
-                    );
-                    let macs: u64 = report.macs_by_dtype.iter().map(|(_, v)| *v).sum();
-                    let outcome = RequestOutcome {
-                        id: req.id,
-                        prompt: req.prompt.clone(),
-                        latency_seconds: t0.elapsed().as_secs_f64(),
-                        matmul_calls: report.matmul_calls,
-                        macs,
-                        image_crc32: crc32(&to_rgb8(&img)),
+                        req.steps,
+                        &req.cancel,
+                    ) {
+                        Ok((img, report)) => {
+                            let macs: u64 =
+                                report.macs_by_dtype.iter().map(|(_, v)| *v).sum();
+                            RequestOutcome {
+                                id: req.id,
+                                prompt: req.prompt.clone(),
+                                state: RunnerState::Succeeded,
+                                latency_seconds: queue_seconds + t0.elapsed().as_secs_f64(),
+                                queue_seconds,
+                                steps_completed: req.steps,
+                                matmul_calls: report.matmul_calls,
+                                macs,
+                                image_crc32: crc32(&to_rgb8(&img)),
+                            }
+                        }
+                        Err(aborted) => {
+                            // Give the slot back so peers blocked at a
+                            // rendezvous stop waiting for this member.
+                            eng.leave();
+                            let stats = eng.stats();
+                            let macs: u64 =
+                                stats.macs_by_dtype.iter().map(|(_, v)| *v).sum();
+                            RequestOutcome {
+                                id: req.id,
+                                prompt: req.prompt.clone(),
+                                state: RunnerState::from_cause(aborted.cause),
+                                latency_seconds: queue_seconds + t0.elapsed().as_secs_f64(),
+                                queue_seconds,
+                                steps_completed: aborted.steps_completed,
+                                matmul_calls: stats.calls,
+                                macs,
+                                image_crc32: 0,
+                            }
+                        }
                     };
                     outcomes.lock().unwrap().push(outcome);
                 });
             }
         });
+        let mut out = outcomes.into_inner().unwrap();
+        out.sort_by_key(|o| o.id);
+        out
     }
 }
 
@@ -225,7 +299,14 @@ mod tests {
     fn serves_all_requests_with_metrics() {
         let h = ServeHarness::new(
             pipe_cfg(),
-            ServeConfig { lanes: 2, host_threads: 2, max_batch: 2, workers: 2, sharded: false },
+            ServeConfig {
+                lanes: 2,
+                host_threads: 2,
+                max_batch: 2,
+                workers: 2,
+                sharded: false,
+                queue_capacity: 64,
+            },
         );
         let report = h.serve(&prompts(4));
         assert_eq!(report.requests(), 4);
@@ -238,8 +319,51 @@ mod tests {
         assert!(report.offloaded_macs > 0, "quantized layers offloaded");
         assert!(report.batched_submissions > 0, "micro-batches coalesced ops");
         assert!(report.outcomes.iter().all(|o| o.latency_seconds > 0.0));
+        assert!(report.outcomes.iter().all(|o| o.state == RunnerState::Succeeded));
+        assert!(report.outcomes.iter().all(|o| o.queue_seconds >= 0.0));
+        assert!(report.outcomes.iter().all(|o| o.steps_completed == 1));
+        assert_eq!(report.count(RunnerState::Succeeded), 4);
+        assert_eq!(report.rejected, 0);
+        assert_eq!(report.queue_depth_peak, 4);
+        assert!(report.inflight_peak >= 1);
         assert!(report.macs_per_second() > 0.0);
         assert!(report.latency_summary().n == 4);
+    }
+
+    #[test]
+    fn run_batch_drops_a_precancelled_member_and_peers_match() {
+        let h = ServeHarness::new(
+            pipe_cfg(),
+            ServeConfig {
+                lanes: 1,
+                host_threads: 2,
+                max_batch: 3,
+                workers: 1,
+                sharded: false,
+                queue_capacity: 64,
+            },
+        );
+        let reqs = prompts(2);
+        let reference = h.serve(&reqs);
+        let batch = vec![
+            ServeRequest::new(RequestId(1), reqs[0].0.clone(), reqs[0].1, 1),
+            ServeRequest::new(RequestId(2), reqs[1].0.clone(), reqs[1].1, 1),
+            ServeRequest::new(RequestId(3), "doomed".into(), 99, 1),
+        ];
+        batch[2].cancel.cancel();
+        let out = h.run_batch(&batch);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[2].state, RunnerState::Cancelled);
+        assert_eq!(out[2].steps_completed, 0);
+        assert_eq!(out[2].matmul_calls, 0, "cancelled before any op was submitted");
+        assert_eq!(out[2].image_crc32, 0, "no image for an aborted request");
+        for (a, b) in reference.outcomes.iter().zip(&out) {
+            assert_eq!(b.state, RunnerState::Succeeded);
+            assert_eq!(
+                a.image_crc32, b.image_crc32,
+                "survivors bit-identical to a batch without the leaver"
+            );
+        }
     }
 
     #[test]
@@ -248,7 +372,14 @@ mod tests {
         let serial = ServeHarness::new(pipe_cfg(), ServeConfig::serial(1, 2)).serve(&reqs);
         let batched = ServeHarness::new(
             pipe_cfg(),
-            ServeConfig { lanes: 1, host_threads: 2, max_batch: 3, workers: 1, sharded: false },
+            ServeConfig {
+                lanes: 1,
+                host_threads: 2,
+                max_batch: 3,
+                workers: 1,
+                sharded: false,
+                queue_capacity: 64,
+            },
         )
         .serve(&reqs);
         for (a, b) in serial.outcomes.iter().zip(&batched.outcomes) {
@@ -312,12 +443,26 @@ mod tests {
         let reqs = prompts(2);
         let plain = ServeHarness::new(
             pipe_cfg(),
-            ServeConfig { lanes: 2, host_threads: 2, max_batch: 2, workers: 1, sharded: false },
+            ServeConfig {
+                lanes: 2,
+                host_threads: 2,
+                max_batch: 2,
+                workers: 1,
+                sharded: false,
+                queue_capacity: 64,
+            },
         )
         .serve(&reqs);
         let sharded_h = ServeHarness::new(
             pipe_cfg(),
-            ServeConfig { lanes: 2, host_threads: 2, max_batch: 2, workers: 1, sharded: true },
+            ServeConfig {
+                lanes: 2,
+                host_threads: 2,
+                max_batch: 2,
+                workers: 1,
+                sharded: true,
+                queue_capacity: 64,
+            },
         );
         let sharded = sharded_h.serve(&reqs);
         for (a, b) in plain.outcomes.iter().zip(&sharded.outcomes) {
@@ -352,7 +497,14 @@ mod tests {
         assert!(on.imax_cycles > base.imax_cycles, "conv GEMMs now spend lane cycles");
         // Batched: the conv rendezvous (keyed by WeightId + OpKind) now
         // lands on a lane, so its merges count as batched submissions.
-        let batch = ServeConfig { lanes: 1, host_threads: 2, max_batch: 2, workers: 1, sharded: false };
+        let batch = ServeConfig {
+            lanes: 1,
+            host_threads: 2,
+            max_batch: 2,
+            workers: 1,
+            sharded: false,
+            queue_capacity: 64,
+        };
         let off_b = ServeHarness::new(pipe_cfg(), batch.clone()).serve(&reqs);
         let on_b = ServeHarness::new(on_cfg, batch).serve(&reqs);
         for (a, b) in base.outcomes.iter().zip(&on_b.outcomes) {

@@ -1,0 +1,373 @@
+//! Hand-rolled HTTP/1.1 framing over `std::io` streams.
+//!
+//! The build image has no hyper/axum, so the server speaks a minimal,
+//! strict subset: one request per connection (`Connection: close` on
+//! every response), `Content-Length` bodies only (no chunked encoding),
+//! bounded header count/line length/body size so a misbehaving client
+//! can't balloon memory. Both directions are implemented — the server
+//! parses [`Request`]s and renders [`Response`]s; the load generator
+//! and tests reuse the same framing as a client via [`http_call`].
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Longest accepted request line or header line, in bytes.
+pub const MAX_LINE_BYTES: usize = 8 * 1024;
+/// Most headers accepted per message.
+pub const MAX_HEADERS: usize = 64;
+/// Largest accepted request/response body, in bytes.
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Upper-cased method (`GET`, `POST`, ...).
+    pub method: String,
+    /// Path component, query string stripped.
+    pub path: String,
+    /// `(lower-cased name, value)` pairs in arrival order.
+    pub headers: Vec<(String, String)>,
+    /// Decoded body (empty without `Content-Length`).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of a header, by case-insensitive name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let lower = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == lower).map(|(_, v)| v.as_str())
+    }
+}
+
+/// An HTTP response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Status code (200, 404, ...).
+    pub status: u16,
+    /// Extra headers beyond the always-present set.
+    pub headers: Vec<(String, String)>,
+    /// Body bytes.
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// A JSON response with the given status.
+    pub fn json(status: u16, body: &super::json::Json) -> Response {
+        Response {
+            status,
+            headers: vec![("Content-Type".into(), "application/json".into())],
+            body: body.render().into_bytes(),
+        }
+    }
+
+    /// A plain-text response.
+    pub fn text(status: u16, body: &str) -> Response {
+        Response {
+            status,
+            headers: vec![("Content-Type".into(), "text/plain".into())],
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    /// Append a header.
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.into(), value.into()));
+        self
+    }
+
+    /// Serialize and write the response; always `Connection: close`.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        let reason = reason_phrase(self.status);
+        write!(w, "HTTP/1.1 {} {}\r\n", self.status, reason)?;
+        for (k, v) in &self.headers {
+            write!(w, "{k}: {v}\r\n")?;
+        }
+        write!(w, "Content-Length: {}\r\n", self.body.len())?;
+        write!(w, "Connection: close\r\n\r\n")?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Response",
+    }
+}
+
+/// Why reading a message failed.
+#[derive(Debug)]
+pub enum HttpError {
+    /// The underlying stream failed.
+    Io(std::io::Error),
+    /// The bytes were not a well-formed message (or exceeded a bound).
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Io(e) => write!(f, "http io error: {e}"),
+            HttpError::Malformed(msg) => write!(f, "malformed http message: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+impl From<std::io::Error> for HttpError {
+    fn from(e: std::io::Error) -> HttpError {
+        HttpError::Io(e)
+    }
+}
+
+/// Read one CRLF- (or LF-) terminated line, without the terminator.
+fn read_line<R: BufRead>(r: &mut R) -> Result<String, HttpError> {
+    let mut line = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        let n = r.read(&mut byte)?;
+        if n == 0 {
+            if line.is_empty() {
+                return Err(HttpError::Malformed("unexpected end of stream"));
+            }
+            break;
+        }
+        if byte[0] == b'\n' {
+            break;
+        }
+        line.push(byte[0]);
+        if line.len() > MAX_LINE_BYTES {
+            return Err(HttpError::Malformed("line too long"));
+        }
+    }
+    if line.last() == Some(&b'\r') {
+        line.pop();
+    }
+    String::from_utf8(line).map_err(|_| HttpError::Malformed("non-utf8 line"))
+}
+
+fn read_headers<R: BufRead>(r: &mut R) -> Result<Vec<(String, String)>, HttpError> {
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r)?;
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::Malformed("too many headers"));
+        }
+        let (name, value) =
+            line.split_once(':').ok_or_else(|| HttpError::Malformed("header without ':'"))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+}
+
+fn read_body<R: BufRead>(
+    r: &mut R,
+    headers: &[(String, String)],
+) -> Result<Vec<u8>, HttpError> {
+    let len = match headers.iter().find(|(k, _)| k == "content-length") {
+        None => 0,
+        Some((_, v)) => v
+            .parse::<usize>()
+            .map_err(|_| HttpError::Malformed("invalid content-length"))?,
+    };
+    if len > MAX_BODY_BYTES {
+        return Err(HttpError::Malformed("body too large"));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(|_| HttpError::Malformed("truncated body"))?;
+    Ok(body)
+}
+
+/// Read and parse one request from a stream.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request, HttpError> {
+    let line = read_line(r)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| HttpError::Malformed("empty request line"))?;
+    let target = parts.next().ok_or_else(|| HttpError::Malformed("request line without target"))?;
+    let version = parts.next().ok_or_else(|| HttpError::Malformed("request line without version"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Malformed("unsupported http version"));
+    }
+    // The query string is irrelevant to this API; strip it.
+    let path = target.split('?').next().expect("split yields at least one part");
+    let headers = read_headers(r)?;
+    let body = read_body(r, &headers)?;
+    Ok(Request {
+        method: method.to_ascii_uppercase(),
+        path: path.to_string(),
+        headers,
+        body,
+    })
+}
+
+/// A parsed response (client side).
+#[derive(Debug, Clone)]
+pub struct ClientResponse {
+    /// Status code.
+    pub status: u16,
+    /// `(lower-cased name, value)` pairs.
+    pub headers: Vec<(String, String)>,
+    /// Body bytes.
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    /// First value of a header, by case-insensitive name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let lower = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == lower).map(|(_, v)| v.as_str())
+    }
+
+    /// Parse the body as JSON.
+    pub fn json(&self) -> Result<super::json::Json, HttpError> {
+        let text = std::str::from_utf8(&self.body)
+            .map_err(|_| HttpError::Malformed("non-utf8 body"))?;
+        super::json::Json::parse(text).map_err(|_| HttpError::Malformed("body is not json"))
+    }
+}
+
+/// Read and parse one response from a stream.
+pub fn read_response<R: BufRead>(r: &mut R) -> Result<ClientResponse, HttpError> {
+    let line = read_line(r)?;
+    let mut parts = line.split_whitespace();
+    let version = parts.next().ok_or_else(|| HttpError::Malformed("empty status line"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Malformed("unsupported http version"));
+    }
+    let status = parts
+        .next()
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| HttpError::Malformed("status line without code"))?;
+    let headers = read_headers(r)?;
+    let body = read_body(r, &headers)?;
+    Ok(ClientResponse { status, headers, body })
+}
+
+/// One-shot HTTP client call over a fresh TCP connection: connect,
+/// send `method path` with an optional body, read the response. The
+/// request lifecycle tests and [`examples/load_gen`] drive the server
+/// through this.
+pub fn http_call(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&super::json::Json>,
+) -> Result<ClientResponse, HttpError> {
+    let mut stream = TcpStream::connect(addr)?;
+    let payload = body.map(|b| b.render().into_bytes()).unwrap_or_default();
+    write!(stream, "{method} {path} HTTP/1.1\r\n")?;
+    write!(stream, "Host: {addr}\r\n")?;
+    if body.is_some() {
+        write!(stream, "Content-Type: application/json\r\n")?;
+    }
+    write!(stream, "Content-Length: {}\r\n", payload.len())?;
+    write!(stream, "Connection: close\r\n\r\n")?;
+    stream.write_all(&payload)?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    read_response(&mut reader)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::json::Json;
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let body = "{\"prompt\":\"a\"}";
+        let raw = format!(
+            "POST /predictions?x=1 HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let mut r = Cursor::new(raw.into_bytes());
+        let req = read_request(&mut r).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/predictions", "query string stripped");
+        assert_eq!(req.header("host"), Some("localhost"));
+        assert_eq!(req.header("HOST"), Some("localhost"), "case-insensitive");
+        assert_eq!(req.body, body.as_bytes());
+    }
+
+    #[test]
+    fn missing_content_length_means_empty_body() {
+        let mut r = Cursor::new(b"GET /healthz HTTP/1.1\r\n\r\n".to_vec());
+        let req = read_request(&mut r).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        for raw in [
+            &b"GARBAGE\r\n\r\n"[..],
+            &b"GET /x SPDY/3\r\n\r\n"[..],
+            &b"GET /x HTTP/1.1\r\nbadheader\r\n\r\n"[..],
+            &b"POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n"[..],
+            &b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort"[..],
+            &b""[..],
+        ] {
+            let mut r = Cursor::new(raw.to_vec());
+            assert!(read_request(&mut r).is_err(), "{raw:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn bounds_are_enforced() {
+        let long_line = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_LINE_BYTES + 1));
+        let mut r = Cursor::new(long_line.into_bytes());
+        assert!(matches!(read_request(&mut r), Err(HttpError::Malformed("line too long"))));
+
+        let mut many = String::from("GET /x HTTP/1.1\r\n");
+        for i in 0..(MAX_HEADERS + 1) {
+            many.push_str(&format!("h{i}: v\r\n"));
+        }
+        many.push_str("\r\n");
+        let mut r = Cursor::new(many.into_bytes());
+        assert!(matches!(read_request(&mut r), Err(HttpError::Malformed("too many headers"))));
+
+        let huge = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        let mut r = Cursor::new(huge.into_bytes());
+        assert!(matches!(read_request(&mut r), Err(HttpError::Malformed("body too large"))));
+    }
+
+    #[test]
+    fn response_roundtrips_through_client_parser() {
+        let resp = Response::json(202, &Json::obj(vec![("id", Json::Num(3.0))]))
+            .with_header("Retry-After", "2");
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire).unwrap();
+        let text = String::from_utf8(wire.clone()).unwrap();
+        assert!(text.starts_with("HTTP/1.1 202 Accepted\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        let mut r = Cursor::new(wire);
+        let parsed = read_response(&mut r).unwrap();
+        assert_eq!(parsed.status, 202);
+        assert_eq!(parsed.header("retry-after"), Some("2"));
+        assert_eq!(parsed.json().unwrap().get("id").unwrap().as_u64(), Some(3));
+    }
+
+    #[test]
+    fn bare_lf_line_endings_are_tolerated() {
+        let mut r = Cursor::new(b"GET /healthz HTTP/1.1\nHost: x\n\n".to_vec());
+        let req = read_request(&mut r).unwrap();
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.header("host"), Some("x"));
+    }
+}

@@ -1,0 +1,243 @@
+//! Production-style HTTP serving front-end over the batched serving
+//! stack in [`crate::serve`].
+//!
+//! The paper stops at single-invocation image generation; this
+//! subsystem wraps the micro-batching [`ServeHarness`] in the request
+//! lifecycle a deployed model server needs (the shape of cog's
+//! director/runner split):
+//!
+//! ```text
+//! TCP accept ──▶ http (framing) ──▶ routes ──▶ Runner
+//!                                               │ admission: SLO estimate → 429,
+//!                                               │            queue bound → 429,
+//!                                               │            draining     → 503
+//!                                               ▼
+//!                                    RequestQueue (bounded)
+//!                                               │ step-homogeneous micro-batches
+//!                                               ▼
+//!                                    ServeHarness::run_batch
+//!                                               │ CancelToken checked at every
+//!                                               │ denoising-step boundary
+//!                                               ▼
+//!                                    SharedBatch rendezvous → lanes
+//! ```
+//!
+//! Everything is std-only: hand-rolled HTTP/1.1 framing ([`http`]), a
+//! miniature JSON codec ([`json`]), raw `signal(2)` hooks
+//! ([`shutdown`]). Cancellation is cooperative end-to-end — the cancel
+//! route fires a [`crate::util::cancel::CancelToken`] that the
+//! denoising loop consults before every step, and the aborting member
+//! leaves its lockstep micro-batch without perturbing the survivors'
+//! bits. Graceful shutdown (SIGTERM/ctrl-c or [`Server::shutdown`])
+//! stops admission, drains every queued and running request, joins the
+//! serving workers, then quiesces the coordinator's lane worker pool.
+
+pub mod http;
+pub mod json;
+pub mod routes;
+pub mod runner;
+pub mod shutdown;
+
+pub use json::Json;
+pub use runner::{
+    admission_decision, estimate_queue_seconds, Admission, PredictionStatus, Runner, RunnerConfig,
+};
+
+use crate::serve::{ServeHarness, ServeReport};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How long the accept loop sleeps when no connection is pending.
+const ACCEPT_POLL: Duration = Duration::from_millis(2);
+/// Per-connection socket read timeout (a stalled client cannot pin a
+/// handler thread forever).
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// A running HTTP server: a nonblocking accept loop feeding
+/// thread-per-connection handlers over a shared [`Runner`].
+pub struct Server {
+    runner: Arc<Runner>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral test port)
+    /// and start serving.
+    pub fn start(
+        addr: &str,
+        harness: ServeHarness,
+        config: RunnerConfig,
+    ) -> std::io::Result<Server> {
+        let runner = Runner::start(harness, config);
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_thread = {
+            let runner = Arc::clone(&runner);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || accept_loop(listener, runner, stop))
+        };
+        Ok(Server { runner, addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The lifecycle runner behind the routes.
+    pub fn runner(&self) -> &Arc<Runner> {
+        &self.runner
+    }
+
+    /// Graceful shutdown: drain the runner (new creates see 503 while
+    /// in-flight requests finish), then stop accepting and join the
+    /// accept loop. Returns the aggregate serving report.
+    pub fn shutdown(mut self) -> ServeReport {
+        let report = self.runner.shutdown();
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            h.join().expect("accept loop panicked");
+        }
+        report
+    }
+
+    /// Serve until SIGINT/SIGTERM (or
+    /// [`shutdown::request_shutdown`]), then drain gracefully — the
+    /// `imax-sd serve` main loop.
+    pub fn run_until_signalled(self) -> ServeReport {
+        shutdown::install_signal_handlers();
+        while !shutdown::signalled() {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        self.shutdown()
+    }
+}
+
+fn accept_loop(listener: TcpListener, runner: Arc<Runner>, stop: Arc<AtomicBool>) {
+    // Handler threads are tracked so the loop can join them on exit —
+    // connections are short-lived (one request, `Connection: close`).
+    let handlers: Mutex<Vec<std::thread::JoinHandle<()>>> = Mutex::new(Vec::new());
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let runner = Arc::clone(&runner);
+                let h = std::thread::spawn(move || handle_connection(stream, &runner));
+                let mut live = handlers.lock().unwrap();
+                live.retain(|h| !h.is_finished());
+                live.push(h);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => break,
+        }
+    }
+    for h in handlers.into_inner().unwrap() {
+        let _ = h.join();
+    }
+}
+
+fn handle_connection(stream: TcpStream, runner: &Runner) {
+    // Accepted sockets inherit the listener's nonblocking flag on some
+    // platforms: force blocking reads with a timeout.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let mut reader = BufReader::new(stream);
+    let response = match http::read_request(&mut reader) {
+        Ok(req) => routes::handle(runner, &req),
+        Err(http::HttpError::Io(_)) => return, // peer vanished; nothing to say
+        Err(http::HttpError::Malformed(msg)) => http::Response::text(400, msg),
+    };
+    let mut stream = reader.into_inner();
+    let _ = response.write_to(&mut stream);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::http::http_call;
+    use super::*;
+    use crate::sd::pipeline::{Backend, PipelineConfig};
+    use crate::sd::trace::QuantModel;
+    use crate::serve::ServeConfig;
+
+    fn start_server(queue_capacity: usize) -> Server {
+        let pipe = PipelineConfig {
+            weight_seed: 99,
+            model: Some(QuantModel::Q8_0),
+            steps: 1,
+            backend: Backend::Host { threads: 2 },
+            conv_offload: false,
+        };
+        let serve = ServeConfig {
+            lanes: 1,
+            host_threads: 2,
+            max_batch: 2,
+            workers: 1,
+            sharded: false,
+            queue_capacity,
+        };
+        Server::start("127.0.0.1:0", ServeHarness::new(pipe, serve), RunnerConfig::default())
+            .expect("bind loopback")
+    }
+
+    #[test]
+    fn http_round_trip_over_loopback() {
+        let server = start_server(8);
+        let addr = server.addr().to_string();
+
+        let health = http_call(&addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(health.status, 200);
+        assert_eq!(health.json().unwrap().get("status").unwrap().as_str(), Some("ok"));
+
+        let body = Json::obj(vec![
+            ("prompt", Json::Str("a lovely cat".into())),
+            ("seed", Json::Num(7.0)),
+        ]);
+        let created = http_call(&addr, "POST", "/predictions", Some(&body)).unwrap();
+        assert_eq!(created.status, 202);
+        let id = created.json().unwrap().get("id").unwrap().as_u64().unwrap();
+
+        let mut succeeded = false;
+        for _ in 0..2000 {
+            let poll = http_call(&addr, "GET", &format!("/predictions/{id}"), None).unwrap();
+            assert_eq!(poll.status, 200);
+            let st = poll.json().unwrap();
+            if st.get("status").unwrap().as_str() == Some("succeeded") {
+                assert!(st.get("image_crc32").unwrap().as_u64().unwrap() > 0);
+                succeeded = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(succeeded, "prediction reached success over HTTP");
+
+        let missing = http_call(&addr, "GET", "/predictions/9999", None).unwrap();
+        assert_eq!(missing.status, 404);
+
+        let report = server.shutdown();
+        assert_eq!(report.count(crate::serve::RunnerState::Succeeded), 1);
+    }
+
+    #[test]
+    fn malformed_requests_get_400_and_the_server_survives() {
+        use std::io::{Read, Write};
+        let server = start_server(8);
+        let addr = server.addr();
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        stream.write_all(b"NOT-HTTP\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        let _ = stream.read_to_string(&mut buf);
+        assert!(buf.starts_with("HTTP/1.1 400"), "got: {buf:?}");
+        // The server still answers afterwards.
+        let health = http_call(&addr.to_string(), "GET", "/healthz", None).unwrap();
+        assert_eq!(health.status, 200);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,292 @@
+//! HTTP route table: requests in, lifecycle verbs out.
+//!
+//! The cog-style prediction API:
+//!
+//! | Route                          | Meaning                              |
+//! |--------------------------------|--------------------------------------|
+//! | `GET  /healthz`                | liveness + queue/inflight gauges     |
+//! | `POST /predictions`            | create → `202 {"id": N}` / `429` / `503` |
+//! | `GET  /predictions/{id}`       | poll state, metrics, image CRC       |
+//! | `POST /predictions/{id}/cancel`| fire the request's cancel token      |
+//!
+//! Create bodies are JSON: `{"prompt": "...", "seed": 7, "steps": 1,
+//! "deadline_ms": 5000}` — everything but `prompt` optional.
+
+use super::http::{Request, Response};
+use super::json::Json;
+use super::runner::{Admission, PredictionStatus, Runner};
+use crate::serve::RunnerState;
+use std::time::Duration;
+
+/// Dispatch one parsed request against the runner.
+pub fn handle(runner: &Runner, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => healthz(runner),
+        ("POST", "/predictions") => create(runner, req),
+        (method, path) => {
+            if let Some(rest) = path.strip_prefix("/predictions/") {
+                return prediction_route(runner, method, rest);
+            }
+            not_found()
+        }
+    }
+}
+
+fn prediction_route(runner: &Runner, method: &str, rest: &str) -> Response {
+    if let Some(id_text) = rest.strip_suffix("/cancel") {
+        return match (method, id_text.parse::<u64>()) {
+            ("POST", Ok(id)) => cancel(runner, id),
+            (_, Ok(_)) => method_not_allowed(),
+            (_, Err(_)) => not_found(),
+        };
+    }
+    match (method, rest.parse::<u64>()) {
+        ("GET", Ok(id)) => status(runner, id),
+        (_, Ok(_)) => method_not_allowed(),
+        (_, Err(_)) => not_found(),
+    }
+}
+
+fn healthz(runner: &Runner) -> Response {
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("status", Json::Str("ok".into())),
+            ("queue_depth", Json::Num(runner.queue_depth() as f64)),
+            ("inflight", Json::Num(runner.inflight() as f64)),
+            ("ewma_batch_seconds", Json::Num(runner.ewma_batch_seconds())),
+            ("estimated_wait_seconds", Json::Num(runner.estimated_wait_seconds())),
+        ]),
+    )
+}
+
+fn create(runner: &Runner, req: &Request) -> Response {
+    let Ok(text) = std::str::from_utf8(&req.body) else {
+        return bad_request("body is not utf-8");
+    };
+    let Ok(body) = Json::parse(text) else {
+        return bad_request("body is not json");
+    };
+    let Some(prompt) = body.get("prompt").and_then(Json::as_str) else {
+        return bad_request("missing required field: prompt");
+    };
+    let seed = match body.get("seed") {
+        None => 0,
+        Some(v) => match v.as_u64() {
+            Some(s) => s,
+            None => return bad_request("seed must be a non-negative integer"),
+        },
+    };
+    let steps = match body.get("steps") {
+        None => runner.config().default_steps,
+        Some(v) => match v.as_u64() {
+            Some(s) if (1..=runner.config().max_steps as u64).contains(&s) => s as usize,
+            _ => return bad_request("steps out of range"),
+        },
+    };
+    let deadline = match body.get("deadline_ms") {
+        None => None,
+        Some(v) => match v.as_u64() {
+            Some(ms) => Some(Duration::from_millis(ms)),
+            None => return bad_request("deadline_ms must be a non-negative integer"),
+        },
+    };
+    match runner.create(prompt, seed, steps, deadline) {
+        Admission::Created { id } => Response::json(
+            202,
+            &Json::obj(vec![
+                ("id", Json::Num(id as f64)),
+                ("status", Json::Str(RunnerState::Queued.name().into())),
+            ]),
+        ),
+        Admission::Busy { retry_after } => Response::json(
+            429,
+            &Json::obj(vec![
+                ("error", Json::Str("queue latency above SLO".into())),
+                ("retry_after_seconds", Json::Num(retry_after as f64)),
+            ]),
+        )
+        .with_header("Retry-After", &retry_after.to_string()),
+        Admission::Draining => Response::json(
+            503,
+            &Json::obj(vec![("error", Json::Str("server is draining".into()))]),
+        ),
+    }
+}
+
+fn status(runner: &Runner, id: u64) -> Response {
+    let Some(st) = runner.status(id) else {
+        return not_found();
+    };
+    Response::json(200, &status_json(&st))
+}
+
+/// The poll-response body for one prediction.
+pub fn status_json(st: &PredictionStatus) -> Json {
+    let mut fields = vec![
+        ("id", Json::Num(st.id as f64)),
+        ("status", Json::Str(st.state.name().into())),
+        ("prompt", Json::Str(st.prompt.clone())),
+    ];
+    if let Some(o) = &st.outcome {
+        fields.push((
+            "metrics",
+            Json::obj(vec![
+                ("latency_seconds", Json::Num(o.latency_seconds)),
+                ("queue_seconds", Json::Num(o.queue_seconds)),
+                ("steps_completed", Json::Num(o.steps_completed as f64)),
+                ("matmul_calls", Json::Num(o.matmul_calls as f64)),
+                ("macs", Json::Num(o.macs as f64)),
+            ]),
+        ));
+        if o.state == RunnerState::Succeeded {
+            fields.push(("image_crc32", Json::Num(o.image_crc32 as f64)));
+        }
+    }
+    Json::obj(fields)
+}
+
+fn cancel(runner: &Runner, id: u64) -> Response {
+    if runner.cancel(id) {
+        Response::json(200, &Json::obj(vec![("id", Json::Num(id as f64))]))
+    } else {
+        not_found()
+    }
+}
+
+fn bad_request(msg: &str) -> Response {
+    Response::json(400, &Json::obj(vec![("error", Json::Str(msg.into()))]))
+}
+
+fn not_found() -> Response {
+    Response::json(404, &Json::obj(vec![("error", Json::Str("not found".into()))]))
+}
+
+fn method_not_allowed() -> Response {
+    Response::json(405, &Json::obj(vec![("error", Json::Str("method not allowed".into()))]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sd::pipeline::{Backend, PipelineConfig};
+    use crate::sd::trace::QuantModel;
+    use crate::serve::{ServeConfig, ServeHarness};
+    use crate::server::runner::RunnerConfig;
+    use std::sync::Arc;
+
+    fn runner() -> Arc<Runner> {
+        let pipe = PipelineConfig {
+            weight_seed: 99,
+            model: Some(QuantModel::Q8_0),
+            steps: 1,
+            backend: Backend::Host { threads: 2 },
+            conv_offload: false,
+        };
+        let serve = ServeConfig {
+            lanes: 1,
+            host_threads: 2,
+            max_batch: 2,
+            workers: 1,
+            sharded: false,
+            queue_capacity: 8,
+        };
+        Runner::start(ServeHarness::new(pipe, serve), RunnerConfig::default())
+    }
+
+    fn req(method: &str, path: &str, body: Option<&str>) -> Request {
+        Request {
+            method: method.into(),
+            path: path.into(),
+            headers: Vec::new(),
+            body: body.map(|b| b.as_bytes().to_vec()).unwrap_or_default(),
+        }
+    }
+
+    #[test]
+    fn full_route_round_trip() {
+        let rt = runner();
+        let r = handle(&rt, &req("GET", "/healthz", None));
+        assert_eq!(r.status, 200);
+        let health = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(health.get("status").unwrap().as_str(), Some("ok"));
+
+        let r = handle(
+            &rt,
+            &req("POST", "/predictions", Some(r#"{"prompt": "a lovely cat", "seed": 7}"#)),
+        );
+        assert_eq!(r.status, 202);
+        let created = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        let id = created.get("id").unwrap().as_u64().unwrap();
+
+        // Poll to terminal.
+        let mut last = Json::Null;
+        for _ in 0..2000 {
+            let r = handle(&rt, &req("GET", &format!("/predictions/{id}"), None));
+            assert_eq!(r.status, 200);
+            last = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+            if last.get("status").unwrap().as_str() == Some("succeeded") {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(last.get("status").unwrap().as_str(), Some("succeeded"));
+        assert!(last.get("image_crc32").unwrap().as_u64().unwrap() > 0);
+        let metrics = last.get("metrics").unwrap();
+        assert_eq!(metrics.get("steps_completed").unwrap().as_u64(), Some(1));
+        rt.shutdown();
+    }
+
+    #[test]
+    fn create_validation_errors() {
+        let rt = runner();
+        for (body, why) in [
+            ("", "empty body"),
+            ("{}", "missing prompt"),
+            (r#"{"prompt": 3}"#, "non-string prompt"),
+            (r#"{"prompt": "x", "seed": -1}"#, "negative seed"),
+            (r#"{"prompt": "x", "steps": 0}"#, "steps too small"),
+            (r#"{"prompt": "x", "steps": 99}"#, "steps too large"),
+            (r#"{"prompt": "x", "deadline_ms": "soon"}"#, "non-numeric deadline"),
+        ] {
+            let r = handle(&rt, &req("POST", "/predictions", Some(body)));
+            assert_eq!(r.status, 400, "{why}");
+        }
+        rt.shutdown();
+    }
+
+    #[test]
+    fn unknown_routes_and_methods() {
+        let rt = runner();
+        assert_eq!(handle(&rt, &req("GET", "/nope", None)).status, 404);
+        assert_eq!(handle(&rt, &req("GET", "/predictions/42", None)).status, 404, "unknown id");
+        assert_eq!(handle(&rt, &req("DELETE", "/predictions/42", None)).status, 405);
+        assert_eq!(handle(&rt, &req("GET", "/predictions/abc", None)).status, 404);
+        assert_eq!(
+            handle(&rt, &req("POST", "/predictions/99/cancel", None)).status,
+            404,
+            "cancel of unknown id"
+        );
+        assert_eq!(handle(&rt, &req("GET", "/predictions/1/cancel", None)).status, 405);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn cancel_route_fires_the_token() {
+        let rt = runner();
+        let r = handle(&rt, &req("POST", "/predictions", Some(r#"{"prompt": "x"}"#)));
+        let id = Json::parse(std::str::from_utf8(&r.body).unwrap())
+            .unwrap()
+            .get("id")
+            .unwrap()
+            .as_u64()
+            .unwrap();
+        let r = handle(&rt, &req("POST", &format!("/predictions/{id}/cancel"), None));
+        assert_eq!(r.status, 200);
+        rt.shutdown();
+        // Whether the request was still queued or already running, the
+        // terminal state is cancelled-or-succeeded, never stuck.
+        let st = rt.status(id).unwrap();
+        assert!(st.state.terminal());
+    }
+}

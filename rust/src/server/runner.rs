@@ -1,0 +1,560 @@
+//! The prediction runner: request registry, admission control, worker
+//! pool, and graceful drain — the cog-style lifecycle layer between the
+//! HTTP routes and the [`ServeHarness`].
+//!
+//! Admission uses a queueing estimate: an EWMA of recent micro-batch
+//! service times times the number of batch "waves" ahead of a new
+//! arrival. When the estimate exceeds the configured SLO the request is
+//! refused with a `Retry-After` hint (HTTP 429) instead of building an
+//! unbounded backlog — the queue's hard capacity bound is the second,
+//! coarser line of defense. Both pieces of arithmetic are pure
+//! functions ([`estimate_queue_seconds`], [`admission_decision`])
+//! mirrored bit-for-bit by `python/replica/serve_http_replica.py`.
+
+use crate::sd::graph::RequestId;
+use crate::serve::{
+    PushError, RequestOutcome, RequestQueue, RunnerState, ServeHarness, ServeReport, ServeRequest,
+};
+use crate::util::cancel::CancelToken;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Seconds a new arrival is predicted to wait before a worker picks it
+/// up, from queue occupancy and the smoothed batch service time.
+///
+/// With `waiting` requests queued and `inflight` running, a new arrival
+/// is number `waiting + inflight + 1` in line. The serving stack drains
+/// up to `workers * max_batch` requests per batch "wave", each wave
+/// taking roughly `ewma_batch_seconds`. An EWMA of zero (no completed
+/// batch yet) estimates 0.0 — admit, there is no signal to shed on.
+pub fn estimate_queue_seconds(
+    waiting: usize,
+    inflight: usize,
+    workers: usize,
+    max_batch: usize,
+    ewma_batch_seconds: f64,
+) -> f64 {
+    if ewma_batch_seconds <= 0.0 {
+        return 0.0;
+    }
+    let slots = (workers * max_batch).max(1);
+    let ahead = waiting + inflight + 1;
+    let batches_ahead = ahead.div_ceil(slots);
+    batches_ahead as f64 * ewma_batch_seconds
+}
+
+/// Shed or admit: `None` admits; `Some(retry_after_seconds)` refuses
+/// because the estimated wait exceeds the SLO (a non-positive SLO
+/// disables shedding). The hint is how long until the backlog should
+/// have drained below the SLO, at least 1 second.
+pub fn admission_decision(estimated_seconds: f64, slo_seconds: f64) -> Option<u64> {
+    if slo_seconds <= 0.0 || estimated_seconds <= slo_seconds {
+        None
+    } else {
+        Some(((estimated_seconds - slo_seconds).ceil() as u64).max(1))
+    }
+}
+
+/// Runner-level knobs (the execution side comes from
+/// [`crate::serve::ServeConfig`]).
+#[derive(Debug, Clone)]
+pub struct RunnerConfig {
+    /// Admission SLO in seconds: refuse new work once the estimated
+    /// queue wait exceeds it. `<= 0` disables estimate-based shedding
+    /// (the queue capacity bound still applies).
+    pub slo_seconds: f64,
+    /// Steps when a request does not specify them.
+    pub default_steps: usize,
+    /// Largest accepted per-request step count.
+    pub max_steps: usize,
+}
+
+impl Default for RunnerConfig {
+    fn default() -> Self {
+        RunnerConfig { slo_seconds: 2.0, default_steps: 1, max_steps: 8 }
+    }
+}
+
+/// Result of [`Runner::create`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Admission {
+    /// Admitted; poll `GET /predictions/{id}`.
+    Created {
+        /// The new prediction's id.
+        id: u64,
+    },
+    /// Refused under load; retry after the hinted seconds (HTTP 429).
+    Busy {
+        /// `Retry-After` seconds.
+        retry_after: u64,
+    },
+    /// The server is shutting down and accepts no new work (HTTP 503).
+    Draining,
+}
+
+/// A poll view of one prediction.
+#[derive(Debug, Clone)]
+pub struct PredictionStatus {
+    /// Prediction id.
+    pub id: u64,
+    /// Current lifecycle state.
+    pub state: RunnerState,
+    /// The prompt.
+    pub prompt: String,
+    /// Terminal outcome, once one exists.
+    pub outcome: Option<RequestOutcome>,
+}
+
+struct Entry {
+    state: RunnerState,
+    prompt: String,
+    cancel: CancelToken,
+    outcome: Option<RequestOutcome>,
+}
+
+/// EWMA smoothing factor for batch service seconds.
+const EWMA_ALPHA: f64 = 0.3;
+
+/// The serving runner: owns the queue, the registry, and the worker
+/// threads. Create once with [`Runner::start`], finish with
+/// [`Runner::shutdown`].
+pub struct Runner {
+    harness: Arc<ServeHarness>,
+    queue: Arc<RequestQueue>,
+    config: RunnerConfig,
+    registry: Mutex<HashMap<u64, Entry>>,
+    next_id: AtomicU64,
+    inflight: AtomicUsize,
+    inflight_peak: AtomicUsize,
+    queue_depth_peak: AtomicUsize,
+    rejected: AtomicU64,
+    /// f64 bits of the smoothed batch service time (0 = no sample yet).
+    ewma_bits: AtomicU64,
+    draining: AtomicBool,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    t_start: Instant,
+    baseline: [u64; 7],
+}
+
+impl Runner {
+    /// Start the worker pool over a harness. The queue uses the
+    /// harness's strict `queue_capacity` bound — unlike offline
+    /// [`ServeHarness::serve`], online admission is supposed to fail.
+    pub fn start(harness: ServeHarness, config: RunnerConfig) -> Arc<Runner> {
+        assert!((1..=config.max_steps).contains(&config.default_steps));
+        let harness = Arc::new(harness);
+        let queue = Arc::new(RequestQueue::bounded(harness.config.queue_capacity));
+        let ord = Ordering::Relaxed;
+        let m = &harness.coordinator().metrics;
+        let baseline = [
+            m.offloaded_macs.load(ord),
+            m.imax_cycles.load(ord),
+            m.offloaded_jobs.load(ord),
+            m.batched_submissions.load(ord),
+            m.coalesced_jobs.load(ord),
+            m.cache_hit_bytes.load(ord),
+            m.cache_miss_bytes.load(ord),
+        ];
+        let runner = Arc::new(Runner {
+            harness,
+            queue,
+            config,
+            registry: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            inflight: AtomicUsize::new(0),
+            inflight_peak: AtomicUsize::new(0),
+            queue_depth_peak: AtomicUsize::new(0),
+            rejected: AtomicU64::new(0),
+            ewma_bits: AtomicU64::new(0),
+            draining: AtomicBool::new(false),
+            workers: Mutex::new(Vec::new()),
+            t_start: Instant::now(),
+            baseline,
+        });
+        let mut workers = runner.workers.lock().unwrap();
+        for _ in 0..runner.harness.config.workers {
+            let rt = Arc::clone(&runner);
+            workers.push(std::thread::spawn(move || rt.worker_loop()));
+        }
+        drop(workers);
+        runner
+    }
+
+    /// The runner configuration.
+    pub fn config(&self) -> &RunnerConfig {
+        &self.config
+    }
+
+    /// The execution harness.
+    pub fn harness(&self) -> &ServeHarness {
+        &self.harness
+    }
+
+    /// Requests waiting in the queue right now.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Requests currently running in workers.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// The smoothed micro-batch service time (0 before the first batch).
+    pub fn ewma_batch_seconds(&self) -> f64 {
+        f64::from_bits(self.ewma_bits.load(Ordering::Relaxed))
+    }
+
+    /// The estimated queue wait a new arrival would see right now.
+    pub fn estimated_wait_seconds(&self) -> f64 {
+        estimate_queue_seconds(
+            self.queue.len(),
+            self.inflight(),
+            self.harness.config.workers,
+            self.harness.config.max_batch,
+            self.ewma_batch_seconds(),
+        )
+    }
+
+    /// Admit (or refuse) a new prediction. `deadline` bounds the whole
+    /// request lifetime — queue wait included; past it the request
+    /// expires at its next cancellation check.
+    pub fn create(
+        &self,
+        prompt: &str,
+        seed: u64,
+        steps: usize,
+        deadline: Option<Duration>,
+    ) -> Admission {
+        assert!(
+            (1..=self.config.max_steps).contains(&steps),
+            "steps must be in 1..={} (routes validate first)",
+            self.config.max_steps
+        );
+        if self.draining.load(Ordering::Relaxed) {
+            return Admission::Draining;
+        }
+        if let Some(retry_after) =
+            admission_decision(self.estimated_wait_seconds(), self.config.slo_seconds)
+        {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return Admission::Busy { retry_after };
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let cancel = match deadline {
+            Some(d) => CancelToken::with_deadline(Instant::now() + d),
+            None => CancelToken::new(),
+        };
+        let req = ServeRequest::new(RequestId(id), prompt.to_string(), seed, steps)
+            .with_cancel(cancel.clone());
+        self.registry.lock().unwrap().insert(
+            id,
+            Entry {
+                state: RunnerState::Queued,
+                prompt: prompt.to_string(),
+                cancel,
+                outcome: None,
+            },
+        );
+        match self.queue.try_push(req) {
+            Ok(()) => {
+                let depth = self.queue.len();
+                self.queue_depth_peak.fetch_max(depth, Ordering::Relaxed);
+                Admission::Created { id }
+            }
+            Err(PushError::Full { .. }) => {
+                self.registry.lock().unwrap().remove(&id);
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                let hint = self.ewma_batch_seconds().ceil() as u64;
+                Admission::Busy { retry_after: hint.max(1) }
+            }
+            Err(PushError::Closed) => {
+                self.registry.lock().unwrap().remove(&id);
+                Admission::Draining
+            }
+        }
+    }
+
+    /// Poll one prediction.
+    pub fn status(&self, id: u64) -> Option<PredictionStatus> {
+        let reg = self.registry.lock().unwrap();
+        reg.get(&id).map(|e| PredictionStatus {
+            id,
+            state: e.state,
+            prompt: e.prompt.clone(),
+            outcome: e.outcome.clone(),
+        })
+    }
+
+    /// Cancel one prediction. Fires the token (a running request aborts
+    /// at its next step boundary and leaves its micro-batch); a request
+    /// still queued flips to `Cancelled` immediately. Returns `false`
+    /// for unknown ids.
+    pub fn cancel(&self, id: u64) -> bool {
+        let mut reg = self.registry.lock().unwrap();
+        let Some(e) = reg.get_mut(&id) else {
+            return false;
+        };
+        e.cancel.cancel();
+        if e.state == RunnerState::Queued {
+            e.state = RunnerState::Cancelled;
+        }
+        true
+    }
+
+    /// Graceful shutdown: stop admitting, drain every queued and
+    /// running request, join the workers, then quiesce the lane worker
+    /// pool. Returns the aggregate report over the runner's lifetime.
+    pub fn shutdown(&self) -> ServeReport {
+        self.draining.store(true, Ordering::Relaxed);
+        self.queue.close();
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            h.join().expect("serving worker panicked");
+        }
+        self.harness.coordinator().quiesce();
+        self.report()
+    }
+
+    fn report(&self) -> ServeReport {
+        let ord = Ordering::Relaxed;
+        let reg = self.registry.lock().unwrap();
+        let mut outcomes: Vec<RequestOutcome> =
+            reg.values().filter_map(|e| e.outcome.clone()).collect();
+        drop(reg);
+        outcomes.sort_by_key(|o| o.id);
+        let total_macs = outcomes.iter().map(|o| o.macs).sum();
+        let m = &self.harness.coordinator().metrics;
+        ServeReport {
+            outcomes,
+            wall_seconds: self.t_start.elapsed().as_secs_f64(),
+            total_macs,
+            offloaded_macs: m.offloaded_macs.load(ord) - self.baseline[0],
+            imax_cycles: m.imax_cycles.load(ord) - self.baseline[1],
+            lane_submissions: m.offloaded_jobs.load(ord) - self.baseline[2],
+            batched_submissions: m.batched_submissions.load(ord) - self.baseline[3],
+            coalesced_jobs: m.coalesced_jobs.load(ord) - self.baseline[4],
+            cache_hit_bytes: m.cache_hit_bytes.load(ord) - self.baseline[5],
+            cache_miss_bytes: m.cache_miss_bytes.load(ord) - self.baseline[6],
+            rejected: self.rejected.load(ord),
+            queue_depth_peak: self.queue_depth_peak.load(ord),
+            inflight_peak: self.inflight_peak.load(ord),
+        }
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let batch = self.queue.pop_batch(self.harness.config.max_batch);
+            if batch.is_empty() {
+                return; // closed + drained
+            }
+            let n = batch.len();
+            let now = self.inflight.fetch_add(n, Ordering::Relaxed) + n;
+            self.inflight_peak.fetch_max(now, Ordering::Relaxed);
+            {
+                let mut reg = self.registry.lock().unwrap();
+                for req in &batch {
+                    if let Some(e) = reg.get_mut(&req.id.0) {
+                        // Don't resurrect entries a cancel already
+                        // flipped to a terminal state.
+                        if e.state == RunnerState::Queued {
+                            e.state = RunnerState::Running;
+                        }
+                    }
+                }
+            }
+            let t0 = Instant::now();
+            let outcomes = self.harness.run_batch(&batch);
+            self.observe_batch_seconds(t0.elapsed().as_secs_f64());
+            self.inflight.fetch_sub(n, Ordering::Relaxed);
+            let mut reg = self.registry.lock().unwrap();
+            for outcome in outcomes {
+                if let Some(e) = reg.get_mut(&outcome.id.0) {
+                    e.state = outcome.state;
+                    e.outcome = Some(outcome);
+                }
+            }
+        }
+    }
+
+    fn observe_batch_seconds(&self, seconds: f64) {
+        // Racy read-modify-write is fine: the EWMA is an admission
+        // heuristic, and concurrent batches just pick either sample.
+        let old = self.ewma_batch_seconds();
+        let new =
+            if old == 0.0 { seconds } else { EWMA_ALPHA * seconds + (1.0 - EWMA_ALPHA) * old };
+        self.ewma_bits.store(new.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Test hook: pretend batches have been taking `seconds`.
+    #[cfg(test)]
+    fn force_ewma(&self, seconds: f64) {
+        self.ewma_bits.store(seconds.to_bits(), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sd::pipeline::{Backend, PipelineConfig};
+    use crate::sd::trace::QuantModel;
+    use crate::serve::ServeConfig;
+
+    fn pipe_cfg() -> PipelineConfig {
+        PipelineConfig {
+            weight_seed: 99,
+            model: Some(QuantModel::Q8_0),
+            steps: 1,
+            backend: Backend::Host { threads: 2 },
+            conv_offload: false,
+        }
+    }
+
+    fn serve_cfg() -> ServeConfig {
+        ServeConfig {
+            lanes: 1,
+            host_threads: 2,
+            max_batch: 2,
+            workers: 1,
+            sharded: false,
+            queue_capacity: 8,
+        }
+    }
+
+    fn wait_terminal(rt: &Runner, id: u64) -> PredictionStatus {
+        for _ in 0..2000 {
+            let st = rt.status(id).expect("known id");
+            if st.state.terminal() {
+                return st;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        panic!("prediction {id} never reached a terminal state");
+    }
+
+    #[test]
+    fn queue_estimate_arithmetic() {
+        assert_eq!(estimate_queue_seconds(0, 0, 2, 4, 0.0), 0.0, "no signal, no estimate");
+        assert_eq!(estimate_queue_seconds(7, 4, 2, 4, 0.5), 1.0, "12 ahead / 8 slots = 2 waves");
+        assert_eq!(estimate_queue_seconds(0, 1, 1, 1, 2.0), 4.0, "second in line, serial");
+        assert_eq!(estimate_queue_seconds(0, 0, 0, 0, 1.0), 1.0, "slots clamp to 1");
+    }
+
+    #[test]
+    fn admission_decision_thresholds() {
+        assert_eq!(admission_decision(1.0, 2.0), None);
+        assert_eq!(admission_decision(2.0, 2.0), None, "at the SLO still admits");
+        assert_eq!(admission_decision(2.5, 2.0), Some(1));
+        assert_eq!(admission_decision(9.5, 2.0), Some(8));
+        assert_eq!(admission_decision(5.0, 0.0), None, "SLO 0 disables shedding");
+        assert_eq!(admission_decision(2.0001, 2.0), Some(1), "hint is at least 1s");
+    }
+
+    #[test]
+    fn lifecycle_create_poll_succeed_shutdown() {
+        let rt = Runner::start(
+            ServeHarness::new(pipe_cfg(), serve_cfg()),
+            RunnerConfig::default(),
+        );
+        let Admission::Created { id } = rt.create("a lovely cat", 7, 1, None) else {
+            panic!("idle runner must admit");
+        };
+        let st = wait_terminal(&rt, id);
+        assert_eq!(st.state, RunnerState::Succeeded);
+        let outcome = st.outcome.expect("terminal => outcome");
+        assert!(outcome.image_crc32 != 0);
+        assert_eq!(outcome.steps_completed, 1);
+        assert!(rt.status(999).is_none(), "unknown id");
+        let report = rt.shutdown();
+        assert_eq!(report.requests(), 1);
+        assert_eq!(report.count(RunnerState::Succeeded), 1);
+        assert_eq!(report.rejected, 0);
+    }
+
+    #[test]
+    fn estimate_based_shedding_returns_busy_with_retry_hint() {
+        let rt = Runner::start(
+            ServeHarness::new(pipe_cfg(), serve_cfg()),
+            RunnerConfig { slo_seconds: 2.0, default_steps: 1, max_steps: 8 },
+        );
+        // Pretend batches take 10s: the next arrival would wait ~10s
+        // >> 2s SLO, so admission must shed with a drain hint.
+        rt.force_ewma(10.0);
+        match rt.create("too much", 1, 1, None) {
+            Admission::Busy { retry_after } => assert_eq!(retry_after, 8),
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        let report = rt.shutdown();
+        assert_eq!(report.rejected, 1);
+        assert_eq!(report.requests(), 0);
+    }
+
+    #[test]
+    fn cancel_of_a_queued_request_is_immediate_and_sticky() {
+        let rt = Runner::start(
+            ServeHarness::new(pipe_cfg(), serve_cfg()),
+            RunnerConfig::default(),
+        );
+        // Saturate the single worker so a later request sits queued.
+        let mut ids = Vec::new();
+        for i in 0..4 {
+            if let Admission::Created { id } = rt.create("a lovely cat", i, 1, None) {
+                ids.push(id);
+            }
+        }
+        let last = *ids.last().expect("capacity 8 admits 4");
+        assert!(rt.cancel(last), "known id cancels");
+        assert!(!rt.cancel(999), "unknown id does not");
+        let st = wait_terminal(&rt, last);
+        assert_eq!(st.state, RunnerState::Cancelled);
+        let report = rt.shutdown();
+        // The cancelled request either never ran (no outcome recorded
+        // until its batch drained it) or aborted before its first step.
+        let cancelled: Vec<_> = report
+            .outcomes
+            .iter()
+            .filter(|o| o.state == RunnerState::Cancelled)
+            .collect();
+        for o in &cancelled {
+            assert_eq!(o.steps_completed, 0);
+            assert_eq!(o.image_crc32, 0);
+        }
+        assert_eq!(report.count(RunnerState::Succeeded) + cancelled.len(), ids.len());
+    }
+
+    #[test]
+    fn draining_runner_refuses_new_work() {
+        let rt = Runner::start(
+            ServeHarness::new(pipe_cfg(), serve_cfg()),
+            RunnerConfig::default(),
+        );
+        for i in 0..3 {
+            assert!(matches!(rt.create("a lovely cat", i, 1, None), Admission::Created { .. }));
+        }
+        let report = rt.shutdown();
+        assert_eq!(report.requests(), 3, "graceful shutdown drains everything in flight");
+        assert_eq!(report.count(RunnerState::Succeeded), 3);
+        assert_eq!(rt.create("late", 9, 1, None), Admission::Draining);
+        assert!(report.inflight_peak >= 1);
+    }
+
+    #[test]
+    fn deadline_expired_request_reports_expired() {
+        let rt = Runner::start(
+            ServeHarness::new(pipe_cfg(), serve_cfg()),
+            RunnerConfig::default(),
+        );
+        let Admission::Created { id } =
+            rt.create("a lovely cat", 7, 1, Some(Duration::from_secs(0)))
+        else {
+            panic!("idle runner must admit");
+        };
+        let st = wait_terminal(&rt, id);
+        assert_eq!(st.state, RunnerState::Expired);
+        let outcome = st.outcome.expect("expired requests still report an outcome");
+        assert_eq!(outcome.steps_completed, 0);
+        rt.shutdown();
+    }
+}

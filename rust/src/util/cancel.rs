@@ -1,0 +1,188 @@
+//! Cooperative cancellation: one shared token threaded from the serving
+//! front door down into the denoising step loop.
+//!
+//! A [`CancelToken`] is a cheap `Arc`-shared cell holding a three-state
+//! flag (live / cancelled / deadline-expired) plus an optional deadline.
+//! The HTTP cancel route and the admission layer hold one clone; the
+//! request's pipeline run holds another and calls [`CancelToken::check`]
+//! at every denoising-step boundary (and before the text encoder and the
+//! VAE decoder), so a cancel or an expired deadline stops the request
+//! before it submits another op — without interrupting an op mid-flight,
+//! which keeps the lockstep micro-batch rendezvous sound (the aborting
+//! member leaves the batch between rendezvous points, see
+//! [`crate::serve::batcher::SharedBatch::leave`]).
+//!
+//! The first cause wins: once a token is cancelled it stays `Cancelled`
+//! even if the deadline later passes, and vice versa — the surfaced
+//! terminal state is stable.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Why a request stopped early.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelCause {
+    /// Explicit cancel (`POST /predictions/{id}/cancel`).
+    Cancelled,
+    /// The per-request deadline passed.
+    DeadlineExpired,
+}
+
+const LIVE: u8 = 0;
+const CANCELLED: u8 = 1;
+const EXPIRED: u8 = 2;
+
+struct Inner {
+    state: AtomicU8,
+    deadline: Option<Instant>,
+}
+
+/// Shared cancellation token. Clones observe the same state.
+#[derive(Clone)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        CancelToken::new()
+    }
+}
+
+impl std::fmt::Debug for CancelToken {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CancelToken")
+            .field("cause", &self.cause())
+            .field("deadline", &self.inner.deadline)
+            .finish()
+    }
+}
+
+impl CancelToken {
+    /// A live token with no deadline (never expires on its own).
+    pub fn new() -> CancelToken {
+        CancelToken {
+            inner: Arc::new(Inner { state: AtomicU8::new(LIVE), deadline: None }),
+        }
+    }
+
+    /// A live token that [`CancelToken::check`] flips to
+    /// [`CancelCause::DeadlineExpired`] once `deadline` passes. The
+    /// deadline is evaluated lazily at check points — no watcher thread.
+    pub fn with_deadline(deadline: Instant) -> CancelToken {
+        CancelToken {
+            inner: Arc::new(Inner { state: AtomicU8::new(LIVE), deadline: Some(deadline) }),
+        }
+    }
+
+    /// The deadline, if one was set.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.inner.deadline
+    }
+
+    /// Request cancellation. Returns `true` if this call transitioned
+    /// the token out of the live state (first cause wins; a second
+    /// cancel or an already-expired token returns `false`).
+    pub fn cancel(&self) -> bool {
+        self.inner
+            .state
+            .compare_exchange(LIVE, CANCELLED, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Force the deadline transition now (deadline-watcher seams and
+    /// tests). First cause wins, like [`CancelToken::cancel`].
+    pub fn expire(&self) -> bool {
+        self.inner
+            .state
+            .compare_exchange(LIVE, EXPIRED, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// The cooperative check point: `Ok(())` while live, otherwise the
+    /// cause. Evaluates the deadline lazily (transitioning the shared
+    /// state so every clone observes the same cause afterwards).
+    pub fn check(&self) -> Result<(), CancelCause> {
+        match self.inner.state.load(Ordering::Acquire) {
+            CANCELLED => return Err(CancelCause::Cancelled),
+            EXPIRED => return Err(CancelCause::DeadlineExpired),
+            _ => {}
+        }
+        if let Some(deadline) = self.inner.deadline {
+            if Instant::now() >= deadline {
+                // Lost races surface whichever cause won the CAS.
+                self.expire();
+                return Err(self.cause().expect("post-expire state is terminal"));
+            }
+        }
+        Ok(())
+    }
+
+    /// The terminal cause, or `None` while live. Unlike
+    /// [`CancelToken::check`] this does **not** evaluate the deadline —
+    /// it reports only transitions that already happened.
+    pub fn cause(&self) -> Option<CancelCause> {
+        match self.inner.state.load(Ordering::Acquire) {
+            CANCELLED => Some(CancelCause::Cancelled),
+            EXPIRED => Some(CancelCause::DeadlineExpired),
+            _ => None,
+        }
+    }
+
+    /// True while neither cancelled nor expired.
+    pub fn is_live(&self) -> bool {
+        self.inner.state.load(Ordering::Acquire) == LIVE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn live_token_checks_ok() {
+        let t = CancelToken::new();
+        assert!(t.is_live());
+        assert_eq!(t.check(), Ok(()));
+        assert_eq!(t.cause(), None);
+    }
+
+    #[test]
+    fn cancel_is_sticky_and_shared_across_clones() {
+        let t = CancelToken::new();
+        let clone = t.clone();
+        assert!(t.cancel(), "first cancel transitions");
+        assert!(!t.cancel(), "second cancel is a no-op");
+        assert_eq!(clone.check(), Err(CancelCause::Cancelled));
+        assert_eq!(clone.cause(), Some(CancelCause::Cancelled));
+        assert!(!clone.is_live());
+    }
+
+    #[test]
+    fn past_deadline_expires_on_check() {
+        let t = CancelToken::with_deadline(Instant::now() - Duration::from_millis(1));
+        assert_eq!(t.cause(), None, "lazy: no transition before a check");
+        assert_eq!(t.check(), Err(CancelCause::DeadlineExpired));
+        assert_eq!(t.cause(), Some(CancelCause::DeadlineExpired));
+    }
+
+    #[test]
+    fn future_deadline_stays_live() {
+        let t = CancelToken::with_deadline(Instant::now() + Duration::from_secs(3600));
+        assert_eq!(t.check(), Ok(()));
+        assert!(t.deadline().is_some());
+    }
+
+    #[test]
+    fn first_cause_wins() {
+        let t = CancelToken::with_deadline(Instant::now() - Duration::from_millis(1));
+        assert!(t.cancel(), "cancel landed before any deadline check");
+        assert_eq!(t.check(), Err(CancelCause::Cancelled), "deadline does not overwrite");
+        let u = CancelToken::new();
+        assert!(u.expire());
+        assert!(!u.cancel(), "cancel after expiry is a no-op");
+        assert_eq!(u.check(), Err(CancelCause::DeadlineExpired));
+    }
+}

@@ -6,6 +6,8 @@
 //! workspace needs from them is reimplemented here, scoped to exactly what
 //! this project uses:
 //!
+//! * [`cancel`] — a cooperative cancel/deadline token (stand-in for tokio's
+//!   `CancellationToken`), threaded from the HTTP layer into the step loop
 //! * [`f16`] — IEEE 754 binary16 conversion (GGML stores block scales as f16)
 //! * [`rng`] — SplitMix64 / xoshiro256++ deterministic PRNGs
 //! * [`cli`] — a declarative flag/subcommand parser for the `imax-sd` binary
@@ -16,6 +18,7 @@
 //! * [`stats`] — summary statistics used by the bench harness
 
 pub mod bench;
+pub mod cancel;
 pub mod cli;
 pub mod f16;
 pub mod png;

@@ -17,6 +17,8 @@ pub struct Summary {
     pub std_dev: f64,
     /// 95th percentile.
     pub p95: f64,
+    /// 99th percentile (the serving tail-latency figure).
+    pub p99: f64,
 }
 
 impl Summary {
@@ -40,6 +42,7 @@ impl Summary {
             median: percentile(&sorted, 50.0),
             std_dev: var.sqrt(),
             p95: percentile(&sorted, 95.0),
+            p99: percentile(&sorted, 99.0),
         }
     }
 
@@ -122,6 +125,7 @@ mod tests {
         assert_eq!(s.max, 5.0);
         assert_eq!(s.median, 3.0);
         assert!((s.std_dev - 1.5811388).abs() < 1e-6);
+        assert!((s.p99 - 4.96).abs() < 1e-9, "p99 interpolates the tail");
     }
 
     #[test]
@@ -130,6 +134,7 @@ mod tests {
         assert_eq!(s.median, 7.0);
         assert_eq!(s.std_dev, 0.0);
         assert_eq!(s.p95, 7.0);
+        assert_eq!(s.p99, 7.0);
     }
 
     #[test]

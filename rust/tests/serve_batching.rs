@@ -77,7 +77,14 @@ fn serve_batched_matches_serial_and_improves_lane_efficiency() {
     let serial_report = serial.serve(&reqs);
     let batched = ServeHarness::new(
         pipe_cfg(QuantModel::Q8_0),
-        ServeConfig { lanes: 2, host_threads: 2, max_batch: 4, workers: 1, sharded: false },
+        ServeConfig {
+            lanes: 2,
+            host_threads: 2,
+            max_batch: 4,
+            workers: 1,
+            sharded: false,
+            queue_capacity: 64,
+        },
     );
     let batched_report = batched.serve(&reqs);
 
@@ -115,7 +122,14 @@ fn serve_batched_matches_serial_and_improves_lane_efficiency() {
 fn serve_q3k_model_accounts_per_request() {
     let h = ServeHarness::new(
         pipe_cfg(QuantModel::Q3K),
-        ServeConfig { lanes: 2, host_threads: 2, max_batch: 2, workers: 2, sharded: false },
+        ServeConfig {
+            lanes: 2,
+            host_threads: 2,
+            max_batch: 2,
+            workers: 2,
+            sharded: false,
+            queue_capacity: 64,
+        },
     );
     let report = h.serve(&prompts(4));
     assert_eq!(report.requests(), 4);

@@ -1,0 +1,285 @@
+//! Request-lifecycle integration tests for the serving front-end:
+//! cancellation mid-denoise, deadline expiry, graceful drain, and the
+//! HTTP round-trip — the contracts `DESIGN.md`'s "Serving front-end"
+//! chapter states.
+//!
+//! The mid-denoise test is deterministic without timing games: a
+//! tapping backend counts `OpKind::TimeEmbed` submissions (one fixed
+//! group per UNet step, none in the text encoder or the VAE) and fires
+//! the request's [`CancelToken`] on the first TimeEmbed of step 2 — so
+//! the step-boundary check before step 3 must abort with exactly two
+//! steps completed, and the survivors of the micro-batch must come out
+//! bit-identical to a batch that never contained the cancelled member.
+
+use imax_sd::sd::backend::{EngineStats, ExecBackend, OpDesc, OpHandle, OpKind, RequestId};
+use imax_sd::sd::pipeline::{to_rgb8, Backend, Pipeline, PipelineConfig};
+use imax_sd::sd::QuantModel;
+use imax_sd::serve::{
+    BatchMember, RunnerState, ServeConfig, ServeHarness, ServeRequest, SharedBatch,
+};
+use imax_sd::server::http::http_call;
+use imax_sd::server::{Admission, Json, Runner, RunnerConfig, Server};
+use imax_sd::util::cancel::{CancelCause, CancelToken};
+use imax_sd::util::png::crc32;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn pipe_cfg(steps: usize) -> PipelineConfig {
+    PipelineConfig {
+        weight_seed: 99,
+        model: Some(QuantModel::Q8_0),
+        steps,
+        backend: Backend::Host { threads: 2 },
+        conv_offload: false,
+    }
+}
+
+fn serve_cfg(max_batch: usize, workers: usize, queue_capacity: usize) -> ServeConfig {
+    ServeConfig {
+        lanes: 1,
+        host_threads: 2,
+        max_batch,
+        workers,
+        sharded: false,
+        queue_capacity,
+    }
+}
+
+/// Backend tap: counts TimeEmbed submissions and fires the token when
+/// the count reaches `fire_at` (0 = never fire, pure counter).
+struct TimeEmbedTap {
+    inner: BatchMember,
+    token: CancelToken,
+    seen: usize,
+    fire_at: usize,
+}
+
+impl TimeEmbedTap {
+    fn new(inner: BatchMember, token: CancelToken, fire_at: usize) -> TimeEmbedTap {
+        TimeEmbedTap { inner, token, seen: 0, fire_at }
+    }
+}
+
+impl ExecBackend for TimeEmbedTap {
+    fn submit(&mut self, op: OpDesc<'_>) -> OpHandle {
+        if op.kind == OpKind::TimeEmbed {
+            self.seen += 1;
+            if self.fire_at > 0 && self.seen == self.fire_at {
+                self.token.cancel();
+            }
+        }
+        self.inner.submit(op)
+    }
+
+    fn sync(&mut self, h: OpHandle) -> imax_sd::ggml::Tensor {
+        self.inner.sync(h)
+    }
+
+    fn stats(&self) -> &EngineStats {
+        self.inner.stats()
+    }
+
+    fn begin_request(&mut self, id: RequestId) {
+        self.inner.begin_request(id);
+    }
+}
+
+/// TimeEmbed submissions per denoising step, measured — not assumed —
+/// by differencing a 3-step and a 2-step solo run.
+fn time_embeds_per_step(pipeline: &Pipeline, harness: &ServeHarness) -> usize {
+    let count = |steps: usize| {
+        let shared = SharedBatch::new(1, Arc::clone(harness.coordinator()), false);
+        let member = BatchMember::new(shared, 0, RequestId(1));
+        let mut tap = TimeEmbedTap::new(member, CancelToken::new(), 0);
+        pipeline
+            .generate_request(&mut tap, RequestId(1), "probe", 1, steps, &CancelToken::new())
+            .expect("live probe run completes");
+        tap.seen
+    };
+    let (two, three) = (count(2), count(3));
+    let per_step = three - two;
+    assert!(per_step > 0, "the UNet submits TimeEmbed ops every step");
+    assert_eq!(two, 2 * per_step, "TimeEmbed appears only inside denoising steps");
+    per_step
+}
+
+#[test]
+fn cancel_mid_denoise_aborts_and_survivors_stay_bit_identical() {
+    let steps = 4;
+    let pipeline = Pipeline::new(pipe_cfg(steps));
+    let harness = ServeHarness::new(pipe_cfg(steps), serve_cfg(4, 1, 8));
+    let per_step = time_embeds_per_step(&pipeline, &harness);
+
+    let prompts = ["a lovely cat", "an angry robot", "a doomed request"];
+    let run = |with_victim: bool| -> Vec<(u32, u64)> {
+        let members = if with_victim { 3 } else { 2 };
+        let shared = SharedBatch::new(members, Arc::clone(harness.coordinator()), false);
+        std::thread::scope(|scope| {
+            let survivors: Vec<_> = (0..2usize)
+                .map(|slot| {
+                    let shared = Arc::clone(&shared);
+                    let pipeline = &pipeline;
+                    scope.spawn(move || {
+                        let rid = RequestId(slot as u64 + 1);
+                        let mut eng = BatchMember::new(shared, slot, rid);
+                        let (img, _) = pipeline
+                            .generate_request(
+                                &mut eng,
+                                rid,
+                                prompts[slot],
+                                7 + slot as u64,
+                                steps,
+                                &CancelToken::new(),
+                            )
+                            .expect("survivor completes");
+                        (crc32(&to_rgb8(&img)), eng.stats().calls)
+                    })
+                })
+                .collect();
+            if with_victim {
+                let shared = Arc::clone(&shared);
+                let pipeline = &pipeline;
+                scope.spawn(move || {
+                    let token = CancelToken::new();
+                    let member = BatchMember::new(shared, 2, RequestId(3));
+                    // Fire on the first TimeEmbed of denoising step 2.
+                    let mut tap = TimeEmbedTap::new(member, token.clone(), per_step + 1);
+                    let err = pipeline
+                        .generate_request(&mut tap, RequestId(3), prompts[2], 9, steps, &token)
+                        .expect_err("cancelled request aborts");
+                    // The abort is cooperative: the step-2 boundary was
+                    // already past when the token fired, so exactly two
+                    // steps ran and the rest were never submitted.
+                    assert_eq!(err.cause, CancelCause::Cancelled);
+                    assert_eq!(err.steps_completed, 2, "aborts at the next step boundary");
+                    tap.inner.leave();
+                });
+            }
+            survivors.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    };
+
+    let with_victim = run(true);
+    let reference = run(false);
+    assert_eq!(
+        with_victim, reference,
+        "survivor images and op counts match a batch that never held the victim"
+    );
+}
+
+#[test]
+fn expired_deadline_surfaces_as_expired_in_batch_outcomes() {
+    let harness = ServeHarness::new(pipe_cfg(1), serve_cfg(4, 1, 8));
+    let doomed = CancelToken::with_deadline(std::time::Instant::now() - Duration::from_millis(1));
+    let batch = vec![
+        ServeRequest::new(RequestId(1), "a lovely cat".into(), 7, 1),
+        ServeRequest::new(RequestId(2), "too late".into(), 8, 1).with_cancel(doomed),
+    ];
+    let outcomes = harness.run_batch(&batch);
+    assert_eq!(outcomes.len(), 2);
+    assert_eq!(outcomes[0].state, RunnerState::Succeeded);
+    assert!(outcomes[0].image_crc32 != 0);
+    assert_eq!(outcomes[1].state, RunnerState::Expired);
+    assert_eq!(outcomes[1].steps_completed, 0, "expired before any step");
+    assert_eq!(outcomes[1].image_crc32, 0, "no image for an expired request");
+}
+
+#[test]
+fn graceful_shutdown_drains_queued_work_and_rejects_new() {
+    let harness = ServeHarness::new(pipe_cfg(1), serve_cfg(2, 1, 8));
+    let runner = Runner::start(harness, RunnerConfig::default());
+    let mut ids = Vec::new();
+    for i in 0..3u64 {
+        match runner.create(&format!("drain me {i}"), i, 1, None) {
+            Admission::Created { id } => ids.push(id),
+            other => panic!("admission refused: {other:?}"),
+        }
+    }
+    // Shutdown must drain everything already admitted...
+    let report = runner.shutdown();
+    assert_eq!(report.count(RunnerState::Succeeded), 3, "all admitted requests drained");
+    for id in ids {
+        let st = runner.status(id).expect("drained request still pollable");
+        assert_eq!(st.state, RunnerState::Succeeded);
+    }
+    // ...and everything after the drain is refused.
+    assert!(
+        matches!(runner.create("too late", 9, 1, None), Admission::Draining),
+        "a draining runner admits nothing"
+    );
+}
+
+#[test]
+fn http_round_trip_cancel_backpressure_and_drain() {
+    // One worker, one-request batches, a one-deep queue: with a slow
+    // (8-step) request running and another waiting, the next create
+    // must bounce with 429 + Retry-After.
+    let harness = ServeHarness::new(pipe_cfg(1), serve_cfg(1, 1, 1));
+    let server = Server::start(
+        "127.0.0.1:0",
+        harness,
+        RunnerConfig { slo_seconds: 1e9, default_steps: 1, max_steps: 8 },
+    )
+    .expect("bind loopback");
+    let addr = server.addr().to_string();
+
+    let create = |prompt: &str, steps: f64| {
+        let body = Json::obj(vec![
+            ("prompt", Json::Str(prompt.into())),
+            ("steps", Json::Num(steps)),
+        ]);
+        http_call(&addr, "POST", "/predictions", Some(&body)).expect("create round-trip")
+    };
+
+    // Fill the server: one long request runs, one waits in the queue.
+    let running = create("slow one", 8.0);
+    assert_eq!(running.status, 202);
+    let running_id = running.json().unwrap().get("id").unwrap().as_u64().unwrap();
+    // Wait for the worker to pop it so the one-deep queue is free for
+    // the next create (the pop is asynchronous).
+    for _ in 0..5_000 {
+        let health = http_call(&addr, "GET", "/healthz", None).unwrap();
+        let depth = health.json().unwrap().get("queue_depth").unwrap().as_u64().unwrap();
+        if depth == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let queued = create("waiting one", 8.0);
+    assert_eq!(queued.status, 202);
+
+    // The queue bound is the backstop: the third create is shed.
+    let shed = create("one too many", 1.0);
+    assert_eq!(shed.status, 429, "bounded queue sheds with 429");
+    assert!(shed.header("retry-after").is_some(), "429 carries Retry-After");
+    let retry = shed.json().unwrap().get("retry_after_seconds").unwrap().as_u64().unwrap();
+    assert!(retry >= 1);
+
+    // Cancel the running request over HTTP; it must reach a terminal
+    // state without completing all 8 steps.
+    let cancel = http_call(&addr, "POST", &format!("/predictions/{running_id}/cancel"), None)
+        .expect("cancel round-trip");
+    assert_eq!(cancel.status, 200);
+    let mut state = String::new();
+    for _ in 0..5_000 {
+        let poll = http_call(&addr, "GET", &format!("/predictions/{running_id}"), None).unwrap();
+        state = poll.json().unwrap().get("status").unwrap().as_str().unwrap().to_string();
+        if state == RunnerState::Cancelled.name() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(state, RunnerState::Cancelled.name(), "cancelled over HTTP");
+
+    // Graceful shutdown drains the queued request and reports honestly.
+    let report = server.shutdown();
+    assert_eq!(report.count(RunnerState::Cancelled), 1);
+    assert_eq!(report.count(RunnerState::Succeeded), 1, "queued peer drained to success");
+    assert_eq!(report.rejected, 1, "the 429 is on the books");
+    let cancelled = report
+        .outcomes
+        .iter()
+        .find(|o| o.state == RunnerState::Cancelled)
+        .expect("cancelled outcome present");
+    assert!(cancelled.steps_completed < 8, "cancel aborted remaining steps");
+}
