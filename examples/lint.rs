@@ -1,0 +1,34 @@
+//! Project concurrency lint, gating in CI:
+//!
+//! ```text
+//! cargo run --example lint            # exit 0 = clean, 1 = findings
+//! ```
+//!
+//! Walks every `*.rs` under `rust/src/` and enforces the four project
+//! invariants documented in `imax_sd::check::lint`: predicate loops
+//! around condvar waits, no raw `std::sync` primitives outside the
+//! shim, the lock-poisoning policy, and submit/sync pairing. Findings
+//! print one per line as `path:line: [rule] message` so editors and CI
+//! annotations can jump straight to them.
+
+use std::path::PathBuf;
+
+fn main() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    let findings = match imax_sd::check::lint::lint_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("lint: cannot walk {}: {e}", root.display());
+            std::process::exit(2);
+        }
+    };
+    if findings.is_empty() {
+        println!("lint: 0 findings under {}", root.display());
+        return;
+    }
+    for f in &findings {
+        println!("{f}");
+    }
+    eprintln!("lint: {} finding(s)", findings.len());
+    std::process::exit(1);
+}

@@ -1,0 +1,789 @@
+"""Python replica of the deterministic interleaving explorer
+(``rust/src/check/sched.rs``) and its protocol models
+(``rust/src/check/models.rs``) — no Rust toolchain needed.
+
+The Rust explorer is deliberately deterministic: threads are tried in
+ascending id order, the sleep-set is a sorted set, and there is no
+randomness anywhere, so the number of explored terminal schedules of a
+model under a given preemption bound is an exact, reproducible
+constant. ``rust/tests/conc_check.rs`` pins those constants; this
+replica re-implements the *same search* (DFS over enabled-thread
+choices, sleep-set DPOR cut, preemption bound) and the *same models*
+independently in Python, and asserts the identical constants. A drift
+in either implementation — a changed model step, a different sleep-set
+wake rule, an off-by-one in the preemption accounting — fails one
+side's CI.
+
+Mirrored semantics (keep in lockstep with sched.rs):
+
+* terminal = no enabled thread; all-finished -> final_check + result
+  string, otherwise a deadlock (counted, with its schedule).
+* ``safety()`` runs after every step; a violation terminates that
+  branch and counts as one schedule.
+* sleep sets: after exploring thread ``t``, ``t`` sleeps for the
+  sibling branches; a sleeping thread survives into a child only while
+  it stays enabled and its next action is independent (no same-object
+  access with a write) of the step just taken.
+* preemption: switching away from a still-enabled ``last`` thread
+  costs 1; schedules exceeding the bound are pruned and counted.
+
+Run:  python3 python/replica/conc_check_replica.py
+"""
+
+# --------------------------------------------------------------------------
+# Explorer (mirror of check/sched.rs)
+# --------------------------------------------------------------------------
+
+READ, WRITE = False, True
+
+
+def conflicts(a, b):
+    """Accesses are (obj, write) pairs; conflict = same obj, >=1 write."""
+    return any(x[0] == y[0] and (x[1] or y[1]) for x in a for y in b)
+
+
+class Config:
+    def __init__(self, preemption_bound=None, max_schedules=5_000_000, max_depth=256):
+        self.preemption_bound = preemption_bound
+        self.max_schedules = max_schedules
+        self.max_depth = max_depth
+
+
+class Report:
+    def __init__(self):
+        self.schedules = 0
+        self.deadlocks = 0
+        self.violations = []
+        self.results = set()
+        self.preempt_pruned = 0
+        self.sleep_pruned = 0
+        self.truncated = False
+
+    def is_clean(self):
+        return not self.violations and self.deadlocks == 0 and len(self.results) <= 1
+
+
+def explore(model, cfg):
+    report = Report()
+    _dfs(model, None, 0, frozenset(), cfg, report, [])
+    return report
+
+
+def _dfs(state, last, preemptions, sleep, cfg, report, trace):
+    if report.truncated:
+        return
+    n = state.threads()
+    enabled = [t for t in range(n) if state.enabled(t)]
+    if not enabled:
+        if report.schedules >= cfg.max_schedules:
+            report.truncated = True
+            return
+        report.schedules += 1
+        if all(state.finished(t) for t in range(n)):
+            err = state.final_check()
+            if err is None:
+                report.results.add(state.result())
+            else:
+                report.violations.append(
+                    "final-check failed after [%s]: %s" % (_ts(trace), err)
+                )
+        else:
+            stuck = " ".join("T%d" % t for t in range(n) if not state.finished(t))
+            report.deadlocks += 1
+            report.violations.append(
+                "deadlock after [%s]: %s blocked with no enabled thread"
+                % (_ts(trace), stuck)
+            )
+        return
+    if len(trace) >= cfg.max_depth:
+        report.truncated = True
+        return
+    local_sleep = set(sleep)
+    for t in enabled:
+        if t in local_sleep:
+            report.sleep_pruned += 1
+            continue
+        if last is not None and last != t and state.enabled(last):
+            p = preemptions + 1
+        else:
+            p = preemptions
+        if cfg.preemption_bound is not None and p > cfg.preemption_bound:
+            report.preempt_pruned += 1
+            continue
+        nxt = state.clone()
+        acc = nxt.step(t)
+        trace.append(t)
+        err = nxt.safety()
+        if err is not None:
+            if report.schedules >= cfg.max_schedules:
+                report.truncated = True
+            else:
+                report.schedules += 1
+                report.violations.append(
+                    "safety violated after [%s]: %s" % (_ts(trace), err)
+                )
+        else:
+            child_sleep = set()
+            for s in sorted(local_sleep):
+                if s == t or not nxt.enabled(s):
+                    continue
+                probe = nxt.clone()
+                acc_s = probe.step(s)
+                if not conflicts(acc, acc_s):
+                    child_sleep.add(s)
+            _dfs(nxt, t, p, child_sleep, cfg, report, trace)
+        trace.pop()
+        local_sleep.add(t)
+
+
+def _ts(trace):
+    return ",".join(str(t) for t in trace)
+
+
+# --------------------------------------------------------------------------
+# Models (mirrors of check/models.rs; safety/final_check return an error
+# string or None)
+# --------------------------------------------------------------------------
+
+LIVE, CANCELLED, EXPIRED = 0, 1, 2
+
+
+class CancelModel:
+    """T0 cancel-CAS, T1 expire-CAS, T2 observer reading twice."""
+
+    def __init__(self):
+        self.state = LIVE
+        self.wins = [False, False]
+        self.writer_done = [False, False]
+        self.obs_pc = 0
+        self.obs_first = LIVE
+        self.unstable = False
+
+    def clone(self):
+        c = CancelModel.__new__(CancelModel)
+        c.state = self.state
+        c.wins = list(self.wins)
+        c.writer_done = list(self.writer_done)
+        c.obs_pc = self.obs_pc
+        c.obs_first = self.obs_first
+        c.unstable = self.unstable
+        return c
+
+    def threads(self):
+        return 3
+
+    def finished(self, tid):
+        if tid in (0, 1):
+            return self.writer_done[tid]
+        return self.obs_pc == 2
+
+    def enabled(self, tid):
+        return not self.finished(tid)
+
+    def step(self, tid):
+        if tid in (0, 1):
+            cause = CANCELLED if tid == 0 else EXPIRED
+            if self.state == LIVE:
+                self.state = cause
+                self.wins[tid] = True
+            self.writer_done[tid] = True
+            return [(0, WRITE)]
+        if self.obs_pc == 0:
+            self.obs_first = self.state
+            self.obs_pc = 1
+        else:
+            if self.obs_first != LIVE and self.state != self.obs_first:
+                self.unstable = True
+            self.obs_pc = 2
+        return [(0, READ)]
+
+    def safety(self):
+        if self.wins[0] and self.wins[1]:
+            return "both cancel and expire won the CAS"
+        if self.unstable:
+            return "terminal cause changed after being observed"
+        return None
+
+    def final_check(self):
+        wins = int(self.wins[0]) + int(self.wins[1])
+        if wins != 1:
+            return "%d terminal causes recorded, want exactly 1" % wins
+        if self.state == LIVE:
+            return "cell still LIVE after both writers ran"
+        return None
+
+    def result(self):
+        return "winners=%d" % (int(self.wins[0]) + int(self.wins[1]))
+
+
+class SlotModel:
+    """P0 fills slot 0, P1 fills slot 1, C syncs slot 1 then slot 0."""
+
+    def __init__(self, mutant_drop_notify):
+        self.filled = [False, False]
+        self.val = [0, 0]
+        self.got = [0, 0]
+        self.producer_done = [False, False]
+        self.consumer_pc = 0
+        self.consumer_waiting_on = None
+        self.mutant_drop_notify = mutant_drop_notify
+
+    def clone(self):
+        c = SlotModel.__new__(SlotModel)
+        c.filled = list(self.filled)
+        c.val = list(self.val)
+        c.got = list(self.got)
+        c.producer_done = list(self.producer_done)
+        c.consumer_pc = self.consumer_pc
+        c.consumer_waiting_on = self.consumer_waiting_on
+        c.mutant_drop_notify = self.mutant_drop_notify
+        return c
+
+    def threads(self):
+        return 3
+
+    def finished(self, tid):
+        if tid in (0, 1):
+            return self.producer_done[tid]
+        return self.consumer_pc == 2
+
+    def enabled(self, tid):
+        if tid in (0, 1):
+            return not self.producer_done[tid]
+        return self.consumer_pc != 2 and self.consumer_waiting_on is None
+
+    def step(self, tid):
+        if tid in (0, 1):
+            self.val[tid] = 10 * (tid + 1)
+            self.filled[tid] = True
+            self.producer_done[tid] = True
+            if not self.mutant_drop_notify and self.consumer_waiting_on == tid:
+                self.consumer_waiting_on = None  # broadcast wake
+            return [(tid, WRITE)]
+        s = 1 if self.consumer_pc == 0 else 0
+        if self.filled[s]:
+            self.got[s] = self.val[s]
+            self.consumer_pc += 1
+        else:
+            self.consumer_waiting_on = s
+        return [(s, WRITE)]
+
+    def safety(self):
+        return None
+
+    def final_check(self):
+        if self.got != [10, 20]:
+            return "stitched values %r, want [10, 20]" % (self.got,)
+        return None
+
+    def result(self):
+        return "got1=%d got0=%d" % (self.got[1], self.got[0])
+
+
+class TwoLockModel:
+    """Two threads, two locks; the mutant inverts thread 1's order."""
+
+    def __init__(self, mutant_inverted):
+        self.owner = [None, None]
+        self.pc = [0, 0]
+        self.mutant_inverted = mutant_inverted
+
+    def clone(self):
+        c = TwoLockModel.__new__(TwoLockModel)
+        c.owner = list(self.owner)
+        c.pc = list(self.pc)
+        c.mutant_inverted = self.mutant_inverted
+        return c
+
+    def order(self, tid):
+        if tid == 1 and self.mutant_inverted:
+            return [1, 0]
+        return [0, 1]
+
+    def threads(self):
+        return 2
+
+    def finished(self, tid):
+        return self.pc[tid] == 4
+
+    def enabled(self, tid):
+        pc = self.pc[tid]
+        if pc >= 4:
+            return False
+        ord_ = self.order(tid)
+        if pc == 0:
+            return self.owner[ord_[0]] is None
+        if pc == 1:
+            return self.owner[ord_[1]] is None
+        return True
+
+    def step(self, tid):
+        ord_ = self.order(tid)
+        pc = self.pc[tid]
+        if pc == 0:
+            self.owner[ord_[0]] = tid
+            lock = ord_[0]
+        elif pc == 1:
+            self.owner[ord_[1]] = tid
+            lock = ord_[1]
+        elif pc == 2:
+            self.owner[ord_[1]] = None
+            lock = ord_[1]
+        else:
+            self.owner[ord_[0]] = None
+            lock = ord_[0]
+        self.pc[tid] = pc + 1
+        return [(lock, WRITE)]
+
+    def safety(self):
+        return None
+
+    def final_check(self):
+        if self.owner != [None, None]:
+            return "locks still held at exit: %r" % (self.owner,)
+        return None
+
+    def result(self):
+        return ""
+
+
+class RendezvousModel:
+    """Members M0/M1 rendezvous; T2 leaves. Quorum 3 shrinks to 2."""
+
+    def __init__(self, mutant_drop_notify, mutant_no_requeue_check):
+        self.arrived = 0
+        self.active = 3
+        self.generation = 0
+        self.staged_sum = 0
+        self.output = None
+        self.member_pc = [0, 0]
+        self.member_out = [0, 0]
+        self.leaver_done = False
+        self.mutant_drop_notify = mutant_drop_notify
+        self.mutant_no_requeue_check = mutant_no_requeue_check
+
+    def clone(self):
+        c = RendezvousModel.__new__(RendezvousModel)
+        c.arrived = self.arrived
+        c.active = self.active
+        c.generation = self.generation
+        c.staged_sum = self.staged_sum
+        c.output = self.output
+        c.member_pc = list(self.member_pc)
+        c.member_out = list(self.member_out)
+        c.leaver_done = self.leaver_done
+        c.mutant_drop_notify = self.mutant_drop_notify
+        c.mutant_no_requeue_check = self.mutant_no_requeue_check
+        return c
+
+    def _complete(self):
+        self.output = self.staged_sum
+        self.generation += 1
+        self._broadcast()
+
+    def _broadcast(self):
+        for i in range(2):
+            if self.member_pc[i] == 1:
+                self.member_pc[i] = 2
+
+    def threads(self):
+        return 3
+
+    def finished(self, tid):
+        if tid in (0, 1):
+            return self.member_pc[tid] == 3
+        return self.leaver_done
+
+    def enabled(self, tid):
+        if tid in (0, 1):
+            return self.member_pc[tid] in (0, 2)
+        return not self.leaver_done
+
+    def step(self, tid):
+        if tid == 2:
+            self.active -= 1
+            if not self.mutant_drop_notify:
+                self._broadcast()
+            self.leaver_done = True
+            return [(0, WRITE)]
+        pc = self.member_pc[tid]
+        if pc == 0:
+            self.staged_sum += tid + 1
+            self.arrived += 1
+            if self.arrived == self.active:
+                self._complete()
+                self.member_out[tid] = self.output
+                self.member_pc[tid] = 3
+            else:
+                self.member_pc[tid] = 1
+        elif pc == 2:
+            if self.generation > 0:
+                self.member_out[tid] = self.output
+                self.member_pc[tid] = 3
+            elif not self.mutant_no_requeue_check and self.arrived == self.active:
+                self._complete()
+                self.member_out[tid] = self.output
+                self.member_pc[tid] = 3
+            else:
+                self.member_pc[tid] = 1
+        else:
+            raise AssertionError("member %d stepped at pc %d" % (tid, pc))
+        return [(0, WRITE)]
+
+    def safety(self):
+        if self.active > 3:
+            return "quorum grew: active %d" % self.active
+        if self.arrived > 3:
+            return "arrived %d overran the membership" % self.arrived
+        if self.generation > 1:
+            return "batch completed twice"
+        return None
+
+    def final_check(self):
+        if self.generation != 1:
+            return "generation %d != 1 at exit" % self.generation
+        if self.member_out != [3, 3]:
+            return "member outputs %r, want [3, 3]" % (self.member_out,)
+        if self.arrived != self.active:
+            return "arrived %d != active %d at exit" % (self.arrived, self.active)
+        return None
+
+    def result(self):
+        out = self.output if self.output is not None else -1
+        return "gen=%d out=%d,%d merged=%d" % (
+            self.generation,
+            self.member_out[0],
+            self.member_out[1],
+            out,
+        )
+
+
+class DrainModel:
+    """Producer (2 pushes) races close(); worker drains then stops."""
+
+    def __init__(self, mutant_drop_notify):
+        self.queue = []
+        self.closed = False
+        self.producer_pc = 0
+        self.accepted = 0
+        self.refused = 0
+        self.drainer_done = False
+        self.popped = []
+        self.worker_done = False
+        self.worker_waiting = False
+        self.mutant_drop_notify = mutant_drop_notify
+
+    def clone(self):
+        c = DrainModel.__new__(DrainModel)
+        c.queue = list(self.queue)
+        c.closed = self.closed
+        c.producer_pc = self.producer_pc
+        c.accepted = self.accepted
+        c.refused = self.refused
+        c.drainer_done = self.drainer_done
+        c.popped = list(self.popped)
+        c.worker_done = self.worker_done
+        c.worker_waiting = self.worker_waiting
+        c.mutant_drop_notify = self.mutant_drop_notify
+        return c
+
+    def threads(self):
+        return 3
+
+    def finished(self, tid):
+        if tid == 0:
+            return self.producer_pc == 2
+        if tid == 1:
+            return self.drainer_done
+        return self.worker_done
+
+    def enabled(self, tid):
+        if tid == 0:
+            return self.producer_pc != 2
+        if tid == 1:
+            return not self.drainer_done
+        return not self.worker_done and not self.worker_waiting
+
+    def step(self, tid):
+        if tid == 0:
+            v = self.producer_pc + 1
+            if self.closed:
+                self.refused += 1
+            else:
+                self.queue.append(v)
+                self.accepted += 1
+                self.worker_waiting = False  # push broadcasts
+            self.producer_pc += 1
+            return [(0, WRITE)]
+        if tid == 1:
+            self.closed = True
+            if not self.mutant_drop_notify:
+                self.worker_waiting = False  # close broadcasts
+            self.drainer_done = True
+            return [(0, WRITE)]
+        if self.queue:
+            self.popped.append(self.queue.pop(0))
+        elif self.closed:
+            self.worker_done = True
+        else:
+            self.worker_waiting = True
+        return [(0, WRITE)]
+
+    def safety(self):
+        if self.accepted + self.refused > 2:
+            return "producer pushed more than twice"
+        return None
+
+    def final_check(self):
+        if len(self.popped) != self.accepted:
+            return "accepted %d requests but drained %d — drain lost work" % (
+                self.accepted,
+                len(self.popped),
+            )
+        if self.queue:
+            return "%d requests stranded in the queue" % len(self.queue)
+        if self.accepted + self.refused != 2:
+            return "push accounting does not cover both attempts"
+        return None
+
+    def result(self):
+        return ""
+
+
+OBJ_CTR, OBJ_MTX, OBJ_CV = 0, 1, 2
+
+
+class PoolIdleModel:
+    """Fine-grained wait_idle model; the mutant notifies unlocked."""
+
+    def __init__(self, mutant_unlocked_notify):
+        self.in_flight = 1
+        self.mutex_owner = None
+        self.waiter_parked = False
+        self.worker_pc = 0
+        self.waiter_pc = 0
+        self.last_read = -1
+        self.mutant_unlocked_notify = mutant_unlocked_notify
+
+    def clone(self):
+        c = PoolIdleModel.__new__(PoolIdleModel)
+        c.in_flight = self.in_flight
+        c.mutex_owner = self.mutex_owner
+        c.waiter_parked = self.waiter_parked
+        c.worker_pc = self.worker_pc
+        c.waiter_pc = self.waiter_pc
+        c.last_read = self.last_read
+        c.mutant_unlocked_notify = self.mutant_unlocked_notify
+        return c
+
+    def _worker_done_pc(self):
+        return 2 if self.mutant_unlocked_notify else 4
+
+    def threads(self):
+        return 2
+
+    def finished(self, tid):
+        if tid == 0:
+            return self.worker_pc == self._worker_done_pc()
+        return self.waiter_pc == 5
+
+    def enabled(self, tid):
+        if tid == 0:
+            if self.worker_pc == self._worker_done_pc():
+                return False
+            if not self.mutant_unlocked_notify and self.worker_pc == 1:
+                return self.mutex_owner is None
+            return True
+        pc = self.waiter_pc
+        if pc in (0, 4):
+            return self.mutex_owner is None
+        if pc == 3:
+            return not self.waiter_parked
+        if pc == 5:
+            return False
+        return True
+
+    def step(self, tid):
+        if tid == 0:
+            if self.mutant_unlocked_notify:
+                if self.worker_pc == 0:
+                    self.in_flight -= 1
+                    self.worker_pc = 1
+                    return [(OBJ_CTR, WRITE)]
+                if self.waiter_parked:
+                    self.waiter_parked = False
+                    self.waiter_pc = 4
+                self.worker_pc = 2
+                return [(OBJ_CV, WRITE)]
+            if self.worker_pc == 0:
+                self.in_flight -= 1
+                self.worker_pc = 1
+                return [(OBJ_CTR, WRITE)]
+            if self.worker_pc == 1:
+                self.mutex_owner = 0
+                self.worker_pc = 2
+                return [(OBJ_MTX, WRITE)]
+            if self.worker_pc == 2:
+                if self.waiter_parked:
+                    self.waiter_parked = False
+                    self.waiter_pc = 4
+                self.worker_pc = 3
+                return [(OBJ_CV, WRITE)]
+            self.mutex_owner = None
+            self.worker_pc = 4
+            return [(OBJ_MTX, WRITE)]
+        pc = self.waiter_pc
+        if pc in (0, 4):
+            self.mutex_owner = 1
+            self.waiter_pc = 1
+            return [(OBJ_MTX, WRITE)]
+        if pc == 1:
+            self.last_read = self.in_flight
+            self.waiter_pc = 2 if self.last_read == 0 else 3
+            return [(OBJ_CTR, READ)]
+        if pc == 2:
+            self.mutex_owner = None
+            self.waiter_pc = 5
+            return [(OBJ_MTX, WRITE)]
+        # park: atomically release the mutex + join waitset
+        self.mutex_owner = None
+        self.waiter_parked = True
+        return [(OBJ_MTX, WRITE), (OBJ_CV, WRITE)]
+
+    def safety(self):
+        if self.in_flight < 0:
+            return "in_flight underflowed: %d" % self.in_flight
+        return None
+
+    def final_check(self):
+        if self.in_flight != 0:
+            return "in_flight %d != 0 at exit" % self.in_flight
+        if self.mutex_owner is not None:
+            return "done mutex still held at exit"
+        if self.last_read != 0:
+            return "waiter returned without observing idle"
+        return None
+
+    def result(self):
+        return "idle_observed=%d" % (1 if self.last_read == 0 else 0)
+
+
+# --------------------------------------------------------------------------
+# The sweep: the same (model, bound) grid tests/conc_check.rs pins.
+# --------------------------------------------------------------------------
+
+# Exact explored-schedule counts per (model, preemption bound); None is
+# the unbounded exhaustive search. These constants are pinned verbatim
+# in rust/tests/conc_check.rs — a drift in either implementation fails
+# one side.
+EXPECTED_SCHEDULES = {
+    ("cancel", 0): 6,
+    ("cancel", 1): 12,
+    ("cancel", 2): 12,
+    ("cancel", 3): 12,
+    ("cancel", None): 12,
+    ("slot", 0): 4,
+    ("slot", 1): 4,
+    ("slot", 2): 4,
+    ("slot", 3): 4,
+    ("slot", None): 4,
+    ("twolock", 0): 2,
+    ("twolock", 1): 2,
+    ("twolock", 2): 2,
+    ("twolock", 3): 2,
+    ("twolock", None): 2,
+    ("rendezvous", 0): 10,
+    ("rendezvous", 1): 10,
+    ("rendezvous", 2): 10,
+    ("rendezvous", 3): 10,
+    ("rendezvous", None): 10,
+    ("drain", 0): 8,
+    ("drain", 1): 26,
+    ("drain", 2): 38,
+    ("drain", 3): 40,
+    ("drain", None): 40,
+    ("pool_idle", 0): 2,
+    ("pool_idle", 1): 3,
+    ("pool_idle", 2): 3,
+    ("pool_idle", 3): 3,
+    ("pool_idle", None): 3,
+}
+
+# (schedules, deadlocks) per mutant at preemption bound 2, also pinned
+# in rust/tests/conc_check.rs.
+EXPECTED_MUTANTS = {
+    "slot_drop_notify": (3, 2),
+    "twolock_inverted": (3, 1),
+    "rendezvous_drop_notify": (6, 2),
+    "rendezvous_no_requeue": (10, 4),
+    "drain_drop_notify": (34, 9),
+    "pool_unlocked_notify": (3, 1),
+}
+
+
+def sweep():
+    grid = [
+        ("cancel", lambda: CancelModel()),
+        ("slot", lambda: SlotModel(False)),
+        ("twolock", lambda: TwoLockModel(False)),
+        ("rendezvous", lambda: RendezvousModel(False, False)),
+        ("drain", lambda: DrainModel(False)),
+        ("pool_idle", lambda: PoolIdleModel(False)),
+    ]
+    rows = []
+    for name, mk in grid:
+        for bound in (0, 1, 2, 3, None):
+            cfg = Config(preemption_bound=bound)
+            r = explore(mk(), cfg)
+            assert r.is_clean(), "%s bound=%r not clean: %s" % (
+                name,
+                bound,
+                r.violations[:3],
+            )
+            assert not r.truncated
+            want = EXPECTED_SCHEDULES[(name, bound)]
+            assert r.schedules == want, "%s bound=%r: %d schedules, pinned %d" % (
+                name,
+                bound,
+                r.schedules,
+                want,
+            )
+            rows.append((name, bound, r.schedules, r.sleep_pruned, r.preempt_pruned))
+    return rows
+
+
+def mutants():
+    grid = [
+        ("slot_drop_notify", lambda: SlotModel(True)),
+        ("twolock_inverted", lambda: TwoLockModel(True)),
+        ("rendezvous_drop_notify", lambda: RendezvousModel(True, False)),
+        ("rendezvous_no_requeue", lambda: RendezvousModel(False, True)),
+        ("drain_drop_notify", lambda: DrainModel(True)),
+        ("pool_unlocked_notify", lambda: PoolIdleModel(True)),
+    ]
+    rows = []
+    for name, mk in grid:
+        r = explore(mk(), Config(preemption_bound=2))
+        assert r.deadlocks > 0 or r.violations, "%s: mutant not convicted" % name
+        want = EXPECTED_MUTANTS[name]
+        got = (r.schedules, r.deadlocks)
+        assert got == want, "%s: %r, pinned %r" % (name, got, want)
+        rows.append((name, r.schedules, r.deadlocks, len(r.violations)))
+    return rows
+
+
+def main():
+    print("== clean sweeps (model, bound, schedules, sleep_pruned, preempt_pruned) ==")
+    for name, bound, scheds, slept, preempted in sweep():
+        b = "inf" if bound is None else str(bound)
+        print("%-12s bound=%-4s schedules=%-6d sleep_pruned=%-6d preempt_pruned=%d"
+              % (name, b, scheds, slept, preempted))
+    print("== mutants convicted at bound 2 (name, schedules, deadlocks, violations) ==")
+    for name, scheds, dls, viols in mutants():
+        print("%-24s schedules=%-6d deadlocks=%-5d violations=%d"
+              % (name, scheds, dls, viols))
+    print("conc_check_replica: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,493 @@
+//! Text-level concurrency lint over `rust/src/`, run as a cargo
+//! example (`cargo run --example lint`) and gating in CI.
+//!
+//! Four project invariants, matching the zero-dependency style of the
+//! rest of the crate (no syn/proc-macro parse — a comment/string-aware
+//! line scanner with brace tracking is enough for the patterns these
+//! rules target, and it keeps the lint runnable anywhere the crate
+//! builds):
+//!
+//! - **`condvar-wait-loop`** — every `Condvar::wait(guard)` call must
+//!   sit inside a `loop`/`while` block, the predicate re-check that
+//!   makes spurious and broadcast wakeups safe. (`CompletionSlot::wait()`
+//!   takes no guard argument and loops internally; zero-argument
+//!   `.wait()` calls are exempt.)
+//! - **`raw-sync-primitive`** — no `std::sync::{Mutex, Condvar,
+//!   RwLock, Barrier}` outside `util/sync.rs` (the shim itself) and
+//!   `check/lockorder.rs` (the witness cannot instrument itself).
+//!   Everything else must use the shim so the `conc-check` feature can
+//!   observe it. `Arc`, atomics, `mpsc`, and `OnceLock` stay raw —
+//!   they carry no lock-order or wakeup obligations.
+//! - **`lock-poison-unwrap`** — no `.lock().unwrap()`: the shim's
+//!   `lock()` owns the poisoning policy (panic with the lock's name),
+//!   and drain/shutdown/request paths use `lock_or_abort` so a
+//!   panicked worker cannot cascade into a hung drain (policy in
+//!   DESIGN.md).
+//! - **`submit-without-sync`** — a file whose non-test code calls
+//!   `.submit(` / `.submit_to(` / `.start_sharded(` must also contain
+//!   a matching completion call (`.sync(`, `.join_sharded(`, or a
+//!   `.wait(` on a completion slot). A per-file textual
+//!   reachability check, deliberately coarse: it catches the real
+//!   failure mode (a fire-and-forget submission whose handle is
+//!   dropped on the floor), not arbitrary inter-procedural flows.
+//!
+//! `#[cfg(test)]` modules are skipped: the invariants protect
+//! production paths, and fixtures deliberately violate them.
+
+use std::path::Path;
+
+/// One lint hit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to the lint root (stable across machines).
+    pub file: String,
+    /// 1-indexed source line.
+    pub line: usize,
+    /// Rule id (kebab-case, stable for CI grepping).
+    pub rule: &'static str,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Files exempt from a rule (shim + witness internals).
+fn allowlisted(file: &str, rule: &'static str) -> bool {
+    let shim = file.ends_with("util/sync.rs");
+    let witness = file.ends_with("check/lockorder.rs");
+    match rule {
+        "condvar-wait-loop" => shim, // the shim *implements* wait
+        "raw-sync-primitive" => shim || witness,
+        "lock-poison-unwrap" => shim || witness,
+        _ => false,
+    }
+}
+
+/// Blank comments and string/char-literal *contents* (keeping line
+/// length) so brace tracking and pattern matching only see code.
+/// Returns the blanked line and the block-comment state after it.
+fn blank_noncode(line: &str, mut in_block_comment: bool) -> (String, bool) {
+    let bytes: Vec<char> = line.chars().collect();
+    let mut out = String::with_capacity(line.len());
+    let mut i = 0;
+    let mut in_string = false;
+    let mut in_char = false;
+    while i < bytes.len() {
+        let c = bytes[i];
+        let next = bytes.get(i + 1).copied();
+        if in_block_comment {
+            if c == '*' && next == Some('/') {
+                in_block_comment = false;
+                out.push_str("  ");
+                i += 2;
+            } else {
+                out.push(' ');
+                i += 1;
+            }
+        } else if in_string {
+            if c == '\\' {
+                out.push_str("  ");
+                i += 2;
+            } else if c == '"' {
+                in_string = false;
+                out.push('"');
+                i += 1;
+            } else {
+                out.push(' ');
+                i += 1;
+            }
+        } else if in_char {
+            if c == '\\' {
+                out.push_str("  ");
+                i += 2;
+            } else if c == '\'' {
+                in_char = false;
+                out.push('\'');
+                i += 1;
+            } else {
+                out.push(' ');
+                i += 1;
+            }
+        } else if c == '/' && next == Some('/') {
+            break; // line comment: drop the rest
+        } else if c == '/' && next == Some('*') {
+            in_block_comment = true;
+            out.push_str("  ");
+            i += 2;
+        } else if c == '"' {
+            in_string = true;
+            out.push('"');
+            i += 1;
+        } else if c == '\'' {
+            // Lifetime (`'a`) vs char literal: a char literal closes
+            // with a quote within a few chars; a lifetime never does.
+            let is_char_lit = matches!(next, Some(n) if n == '\\')
+                || bytes.get(i + 2).copied() == Some('\'');
+            if is_char_lit {
+                in_char = true;
+            }
+            out.push('\'');
+            i += 1;
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    (out, in_block_comment)
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Block {
+    Loop,
+    Plain,
+    TestMod,
+}
+
+fn is_ident_char(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// Whole-word occurrence check on a blanked code line.
+fn has_keyword(code: &str, word: &str) -> bool {
+    let b = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let start = from + pos;
+        let end = start + word.len();
+        let ok_before = start == 0 || !is_ident_char(b[start - 1]);
+        let ok_after = end == code.len() || !is_ident_char(b[end]);
+        if ok_before && ok_after {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+const RAW_PRIMITIVES: [&str; 4] = ["Mutex", "Condvar", "RwLock", "Barrier"];
+
+/// Lint one file's source. `file` is the path label used in findings
+/// and allowlists (use forward slashes).
+pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut in_block_comment = false;
+    // Brace-tracked block stack; each entry is one `{`.
+    let mut stack: Vec<Block> = Vec::new();
+    let mut pending_loop = false;
+    let mut pending_cfg_test = false;
+    let mut test_depth: Option<usize> = None;
+
+    let mut submit_sites: Vec<usize> = Vec::new();
+    let mut sync_sites = 0usize;
+
+    for (idx, raw) in src.lines().enumerate() {
+        let lineno = idx + 1;
+        let (code, next_state) = blank_noncode(raw, in_block_comment);
+        in_block_comment = next_state;
+        let trimmed = code.trim();
+        if trimmed.starts_with("#[cfg(test)]") {
+            pending_cfg_test = true;
+        } else if pending_cfg_test && !trimmed.is_empty() && !trimmed.starts_with("#[") {
+            if has_keyword(trimmed, "mod") && test_depth.is_none() {
+                test_depth = Some(stack.len());
+            }
+            pending_cfg_test = false;
+        }
+        let in_test = test_depth.is_some_and(|d| stack.len() > d || trimmed.contains('{'));
+
+        let in_loop_before = stack.iter().any(|b| *b == Block::Loop);
+
+        // Scan the line's braces, classifying each opened block.
+        let mut header_is_loop =
+            pending_loop || has_keyword(&code, "loop") || has_keyword(&code, "while");
+        let mut seen_open_on_line = false;
+        for ch in code.chars() {
+            match ch {
+                '{' => {
+                    // The first `{` after a `loop`/`while` keyword (or
+                    // a `#[cfg(test)] mod` header) owns that role; any
+                    // further braces on the line are plain blocks.
+                    let kind = if test_depth == Some(stack.len()) && !seen_open_on_line {
+                        Block::TestMod
+                    } else if header_is_loop {
+                        header_is_loop = false;
+                        Block::Loop
+                    } else {
+                        Block::Plain
+                    };
+                    stack.push(kind);
+                    seen_open_on_line = true;
+                }
+                '}' => {
+                    stack.pop();
+                    if test_depth.is_some_and(|d| stack.len() <= d) {
+                        test_depth = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+        pending_loop = header_is_loop
+            && !code.contains('{')
+            && (has_keyword(&code, "loop") || has_keyword(&code, "while"));
+
+        if in_test || test_depth.is_some() {
+            continue;
+        }
+
+        // Rule: condvar-wait-loop — `.wait(<guard>)` needs a loop.
+        if !allowlisted(file, "condvar-wait-loop") {
+            let mut from = 0;
+            while let Some(pos) = code[from..].find(".wait(") {
+                let start = from + pos;
+                let at = start + ".wait(".len();
+                let rest = code[at..].trim_start();
+                // Guarded if an enclosing loop block was already open,
+                // or this very line opens one before the wait
+                // (single-line `while p { g = cv.wait(g); }`).
+                let guarded = in_loop_before
+                    || has_keyword(&code[..start], "loop")
+                    || has_keyword(&code[..start], "while");
+                if !rest.starts_with(')') && !guarded {
+                    findings.push(Finding {
+                        file: file.to_string(),
+                        line: lineno,
+                        rule: "condvar-wait-loop",
+                        message: "Condvar::wait(guard) outside a predicate re-check loop \
+                                  (spurious/broadcast wakeups make single waits unsound)"
+                            .to_string(),
+                    });
+                }
+                from = at;
+            }
+        }
+
+        // Rule: raw-sync-primitive.
+        if !allowlisted(file, "raw-sync-primitive") {
+            let mut from = 0;
+            while let Some(pos) = code[from..].find("std::sync::") {
+                let at = from + pos + "std::sync::".len();
+                let rest = &code[at..];
+                let hit = if rest.starts_with('{') {
+                    RAW_PRIMITIVES.iter().find(|p| {
+                        rest[1..rest.find('}').unwrap_or(rest.len())]
+                            .split(',')
+                            .any(|item| item.trim() == **p)
+                    })
+                } else {
+                    RAW_PRIMITIVES.iter().find(|p| {
+                        rest.starts_with(**p)
+                            && !rest.as_bytes().get(p.len()).is_some_and(|&c| is_ident_char(c))
+                    })
+                };
+                if let Some(p) = hit {
+                    findings.push(Finding {
+                        file: file.to_string(),
+                        line: lineno,
+                        rule: "raw-sync-primitive",
+                        message: format!(
+                            "raw std::sync::{p} outside util/sync.rs — use the \
+                             crate::util::sync shim so conc-check can observe it"
+                        ),
+                    });
+                }
+                from = at;
+            }
+        }
+
+        // Rule: lock-poison-unwrap.
+        if !allowlisted(file, "lock-poison-unwrap") && code.contains(".lock().unwrap()") {
+            findings.push(Finding {
+                file: file.to_string(),
+                line: lineno,
+                rule: "lock-poison-unwrap",
+                message: ".lock().unwrap() bypasses the poisoning policy — use the \
+                          sync shim's lock() or lock_or_abort() (see DESIGN.md)"
+                    .to_string(),
+            });
+        }
+
+        // Rule: submit-without-sync (per-file accumulation).
+        for pat in [".submit(", ".submit_to(", ".start_sharded("] {
+            if code.contains(pat) {
+                submit_sites.push(lineno);
+            }
+        }
+        for pat in [".sync(", ".join_sharded(", ".wait("] {
+            if code.contains(pat) {
+                sync_sites += 1;
+            }
+        }
+    }
+
+    if !submit_sites.is_empty() && sync_sites == 0 {
+        findings.push(Finding {
+            file: file.to_string(),
+            line: submit_sites[0],
+            rule: "submit-without-sync",
+            message: format!(
+                "{} submit call(s) with no .sync()/.join_sharded()/.wait() in this \
+                 file — a dropped OpHandle never merges its counters",
+                submit_sites.len()
+            ),
+        });
+    }
+
+    findings
+}
+
+/// Recursively lint every `*.rs` file under `root`, labeling findings
+/// with paths relative to `root`. Files are visited in sorted order so
+/// output is deterministic.
+pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in files {
+        let src = std::fs::read_to_string(&path)?;
+        let label = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        findings.extend(lint_source(&label, &src));
+    }
+    Ok(findings)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn unguarded_condvar_wait_is_flagged() {
+        let bad = r#"
+fn f(cv: &Condvar, m: &Mutex<bool>) {
+    let mut g = m.lock();
+    if !*g {
+        g = cv.wait(g);
+    }
+}
+"#;
+        let f = lint_source("serve/fixture.rs", bad);
+        assert_eq!(rules(&f), vec!["condvar-wait-loop"], "{f:?}");
+        assert_eq!(f[0].line, 5);
+    }
+
+    #[test]
+    fn wait_inside_predicate_loop_is_clean() {
+        let good = r#"
+fn f(cv: &Condvar, m: &Mutex<bool>) {
+    let mut g = m.lock();
+    while !*g {
+        g = cv.wait(g);
+    }
+    loop {
+        if *g { break; }
+        g = cv.wait(g);
+    }
+}
+"#;
+        let f = lint_source("serve/fixture.rs", good);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn zero_arg_completion_wait_is_exempt() {
+        let good = "fn f(s: &CompletionSlot<u8>) -> u8 { s.wait() }\n";
+        assert!(lint_source("sd/fixture.rs", good).is_empty());
+    }
+
+    #[test]
+    fn doc_comment_wait_examples_are_ignored() {
+        let good = "/// let g = cv.wait(g); // docs, not code\nfn f() {}\n";
+        assert!(lint_source("sd/fixture.rs", good).is_empty());
+    }
+
+    #[test]
+    fn raw_primitives_flagged_outside_the_shim() {
+        let bad = "use std::sync::{Arc, Mutex};\nstatic C: std::sync::Condvar = std::sync::Condvar::new();\n";
+        let f = lint_source("serve/fixture.rs", bad);
+        assert_eq!(rules(&f), vec!["raw-sync-primitive", "raw-sync-primitive"], "{f:?}");
+        let ok = "use std::sync::Arc;\nuse std::sync::atomic::AtomicUsize;\nuse std::sync::mpsc;\n";
+        assert!(lint_source("serve/fixture.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn shim_and_witness_are_allowlisted() {
+        let raw = "use std::sync::{Mutex, Condvar};\n";
+        assert!(lint_source("util/sync.rs", raw).is_empty());
+        assert!(lint_source("check/lockorder.rs", raw).is_empty());
+        assert!(!lint_source("serve/queue.rs", raw).is_empty());
+    }
+
+    #[test]
+    fn lock_unwrap_is_flagged() {
+        let bad = "fn f(m: &std::sync::Mutex<u8>) { *m.lock().unwrap() += 1; }\n";
+        let f = lint_source("server/fixture.rs", bad);
+        assert_eq!(rules(&f), vec!["raw-sync-primitive", "lock-poison-unwrap"], "{f:?}");
+    }
+
+    #[test]
+    fn cfg_test_modules_are_skipped() {
+        let src = r#"
+fn prod() {}
+#[cfg(test)]
+mod tests {
+    use std::sync::Mutex;
+    fn t(m: &Mutex<u8>) { *m.lock().unwrap() += 1; }
+}
+"#;
+        assert!(lint_source("serve/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn submit_without_sync_is_flagged_per_file() {
+        let bad = "fn f(b: &B) { let _h = b.submit(op()); }\n";
+        let f = lint_source("sd/fixture.rs", bad);
+        assert_eq!(rules(&f), vec!["submit-without-sync"], "{f:?}");
+        let good = "fn f(b: &B) { let h = b.submit(op()); b.sync(h); }\n";
+        assert!(lint_source("sd/fixture.rs", good).is_empty());
+    }
+
+    #[test]
+    fn string_literals_do_not_confuse_brace_tracking() {
+        let src = "fn f() {\n    let s = format!(\"{} open {{\", 1);\n    let mut g = m.lock();\n    while !*g { g = cv.wait(g); }\n}\n";
+        assert!(lint_source("sd/fixture.rs", src).is_empty(), "braces in strings miscounted");
+    }
+
+    #[test]
+    fn real_tree_has_zero_findings() {
+        // The gating claim, also enforced by `cargo run --example
+        // lint` in CI: the crate's own sources are clean.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let findings = lint_tree(&root).expect("lint walk");
+        assert!(
+            findings.is_empty(),
+            "lint findings on rust/src:\n{}",
+            findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

@@ -1,0 +1,362 @@
+//! Runtime lock-order witness: records the global lock-acquisition
+//! graph and fails on any **potential**-deadlock edge pair — a cycle in
+//! acquisition order is reported the first time both directions have
+//! ever been *observed*, long before a schedule actually interleaves
+//! them into a deadlock.
+//!
+//! Two independent checks run on every nested acquisition:
+//!
+//! 1. **Cycle check.** Acquiring `B` while holding `A` adds the edge
+//!    `A → B`. If `B` can already reach `A` through recorded edges, the
+//!    pair closes a cycle: some pair of threads can each hold one lock
+//!    and want the other. The full cycle path is reported.
+//! 2. **Rank check.** Locks carry the declared hierarchy position from
+//!    [`crate::util::sync::rank`]; a nested acquisition whose rank is
+//!    not strictly greater than every *ranked* lock already held is an
+//!    inversion even if no reverse edge has been observed yet (the
+//!    hierarchy is the spec, the graph is the evidence).
+//!
+//! Re-entrant acquisition of the same lock is reported too — the shim's
+//! mutexes are non-recursive, so that is a guaranteed self-deadlock.
+//!
+//! Under the `conc-check` feature, [`crate::util::sync::Mutex`] routes
+//! every acquire/release (including the release/reacquire inside
+//! [`crate::util::sync::Condvar::wait`]) through the [`global`]
+//! witness, which panics on the first violation so the owning test
+//! fails loudly. The same machinery is usable stand-alone (collect
+//! mode) for unit tests and for replaying traces from the
+//! [`crate::check::sched`] explorer.
+//!
+//! The witness's own state cell is the one deliberate raw
+//! `std::sync::Mutex` outside `util/sync.rs` (it cannot instrument
+//! itself); the lint pass allowlists exactly this file.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Identity + metadata of one lock instance at an acquisition site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LockTag {
+    /// Process-unique lock instance id (minted by [`mint_lock_id`]).
+    pub id: usize,
+    /// Hierarchy position (`0` = unranked, exempt from the rank rule).
+    pub rank: u16,
+    /// Static label for reports.
+    pub name: &'static str,
+}
+
+/// What the witness records per observed edge `from → to`.
+#[derive(Debug, Clone)]
+struct EdgeInfo {
+    from_name: &'static str,
+    to_name: &'static str,
+}
+
+#[derive(Default)]
+struct WitnessState {
+    /// Adjacency: lock id → set of lock ids acquired while holding it.
+    edges: BTreeMap<usize, BTreeMap<usize, EdgeInfo>>,
+    /// Per-thread stack of currently-held tags.
+    held: BTreeMap<u64, Vec<LockTag>>,
+    violations: Vec<String>,
+    acquisitions: u64,
+}
+
+/// The held-locks-graph recorder. `panic_on_violation` selects between
+/// fail-fast mode (the global conc-check witness: first violation
+/// panics inside the offending test) and collect mode (unit tests and
+/// trace replay: violations accumulate for inspection).
+pub struct LockOrderWitness {
+    // Deliberate raw std mutex: the witness cannot route through the
+    // shim it instruments. Allowlisted by the lint pass.
+    state: std::sync::Mutex<WitnessState>,
+    panic_on_violation: bool,
+}
+
+impl LockOrderWitness {
+    /// An empty witness.
+    pub fn new(panic_on_violation: bool) -> LockOrderWitness {
+        LockOrderWitness {
+            state: std::sync::Mutex::new(WitnessState::default()),
+            panic_on_violation,
+        }
+    }
+
+    /// Record that the current thread is acquiring `tag`, checking the
+    /// cycle and rank rules against everything the thread already
+    /// holds. Call **before** blocking on the real lock — a potential
+    /// deadlock must be reported even when this particular schedule
+    /// would have survived it.
+    pub fn acquire(&self, tag: LockTag) {
+        self.acquire_as(current_thread_key(), tag);
+    }
+
+    /// [`LockOrderWitness::acquire`] with an explicit thread key
+    /// (trace replay from the explorer's schedules).
+    pub fn acquire_as(&self, thread: u64, tag: LockTag) {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.acquisitions += 1;
+        let held = st.held.entry(thread).or_default().clone();
+        let mut found: Vec<String> = Vec::new();
+        for h in &held {
+            if h.id == tag.id {
+                found.push(format!(
+                    "re-entrant acquisition of `{}` (id {}) — non-recursive mutex self-deadlock",
+                    tag.name, tag.id
+                ));
+                continue;
+            }
+            if h.rank != 0 && tag.rank != 0 && tag.rank <= h.rank {
+                found.push(format!(
+                    "rank inversion: acquiring `{}` (rank {}) while holding `{}` (rank {})",
+                    tag.name, tag.rank, h.name, h.rank
+                ));
+            }
+            // Would-be edge h → tag. A path tag →* h closes a cycle.
+            if let Some(path) = reach_path(&st.edges, tag.id, h.id) {
+                let names: Vec<&str> = path
+                    .windows(2)
+                    .filter_map(|w| st.edges.get(&w[0]).and_then(|m| m.get(&w[1])))
+                    .map(|e| e.to_name)
+                    .collect();
+                found.push(format!(
+                    "potential deadlock: edge `{}` → `{}` closes a cycle (reverse path {} → {})",
+                    h.name,
+                    tag.name,
+                    tag.name,
+                    names.join(" → ")
+                ));
+            }
+            st.edges
+                .entry(h.id)
+                .or_default()
+                .entry(tag.id)
+                .or_insert(EdgeInfo { from_name: h.name, to_name: tag.name });
+        }
+        st.held.entry(thread).or_default().push(tag);
+        st.violations.extend(found.iter().cloned());
+        drop(st);
+        if self.panic_on_violation {
+            if let Some(v) = found.first() {
+                panic!("lock-order witness: {v}");
+            }
+        }
+    }
+
+    /// Record that the current thread released lock `id` (guard drop or
+    /// the release half of a condvar wait).
+    pub fn release(&self, id: usize) {
+        self.release_as(current_thread_key(), id);
+    }
+
+    /// [`LockOrderWitness::release`] with an explicit thread key.
+    pub fn release_as(&self, thread: u64, id: usize) {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(stack) = st.held.get_mut(&thread) {
+            // Releases are almost always LIFO but guards can drop out of
+            // order: remove the matching entry wherever it sits.
+            if let Some(pos) = stack.iter().rposition(|t| t.id == id) {
+                stack.remove(pos);
+            }
+        }
+    }
+
+    /// All violations recorded so far (collect mode).
+    pub fn violations(&self) -> Vec<String> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner()).violations.clone()
+    }
+
+    /// Number of directed edges observed (held → acquired pairs).
+    pub fn edge_count(&self) -> usize {
+        let st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.edges.values().map(|m| m.len()).sum()
+    }
+
+    /// Total acquisitions witnessed.
+    pub fn acquisitions(&self) -> u64 {
+        self.state.lock().unwrap_or_else(|p| p.into_inner()).acquisitions
+    }
+}
+
+/// BFS path `from →* to` over the recorded edges (inclusive node list),
+/// or `None` when unreachable.
+fn reach_path(
+    edges: &BTreeMap<usize, BTreeMap<usize, EdgeInfo>>,
+    from: usize,
+    to: usize,
+) -> Option<Vec<usize>> {
+    let mut prev: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut queue = std::collections::VecDeque::from([from]);
+    let mut seen = BTreeSet::from([from]);
+    while let Some(n) = queue.pop_front() {
+        if n == to {
+            let mut path = vec![to];
+            let mut cur = to;
+            while cur != from {
+                cur = prev[&cur];
+                path.push(cur);
+            }
+            path.reverse();
+            return Some(path);
+        }
+        if let Some(next) = edges.get(&n) {
+            for &m in next.keys() {
+                if seen.insert(m) {
+                    prev.insert(m, n);
+                    queue.push_back(m);
+                }
+            }
+        }
+    }
+    None
+}
+
+static NEXT_LOCK_ID: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(1);
+
+/// Mint a process-unique nonzero lock id (the shim assigns them lazily
+/// so `Mutex::new` stays const).
+pub fn mint_lock_id() -> usize {
+    NEXT_LOCK_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+}
+
+static NEXT_THREAD_KEY: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
+thread_local! {
+    static THREAD_KEY: u64 =
+        NEXT_THREAD_KEY.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Stable per-thread key (dense, unlike `ThreadId`'s opaque handle).
+pub fn current_thread_key() -> u64 {
+    THREAD_KEY.with(|k| *k)
+}
+
+/// The process-global witness the `conc-check` shim reports into.
+/// Fail-fast: the first potential-deadlock edge pair or rank inversion
+/// panics inside the acquiring test.
+pub fn global() -> &'static LockOrderWitness {
+    static GLOBAL: std::sync::OnceLock<LockOrderWitness> = std::sync::OnceLock::new();
+    GLOBAL.get_or_init(|| LockOrderWitness::new(true))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tag(id: usize, rank: u16, name: &'static str) -> LockTag {
+        LockTag { id, rank, name }
+    }
+
+    #[test]
+    fn ordered_nesting_is_clean() {
+        let w = LockOrderWitness::new(false);
+        let (a, b) = (tag(1, 10, "a"), tag(2, 20, "b"));
+        for _ in 0..3 {
+            w.acquire_as(1, a);
+            w.acquire_as(1, b);
+            w.release_as(1, b.id);
+            w.release_as(1, a.id);
+        }
+        assert!(w.violations().is_empty(), "{:?}", w.violations());
+        assert_eq!(w.edge_count(), 1);
+        assert_eq!(w.acquisitions(), 6);
+    }
+
+    #[test]
+    fn inverted_edge_pair_is_a_potential_deadlock_even_without_deadlocking() {
+        // Sequential execution — no actual deadlock is possible — but
+        // the two acquisition orders A→B and B→A have both been seen.
+        let w = LockOrderWitness::new(false);
+        let (a, b) = (tag(1, 0, "a"), tag(2, 0, "b"));
+        w.acquire_as(1, a);
+        w.acquire_as(1, b);
+        w.release_as(1, b.id);
+        w.release_as(1, a.id);
+        w.acquire_as(2, b);
+        w.acquire_as(2, a); // closes the cycle
+        let v = w.violations();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("potential deadlock"), "{v:?}");
+        assert!(v[0].contains('a') && v[0].contains('b'));
+    }
+
+    #[test]
+    fn transitive_cycles_are_found() {
+        // a→b (thread 1), b→c (thread 2), c→a (thread 3) — no pair
+        // inverts directly; the cycle is length 3.
+        let w = LockOrderWitness::new(false);
+        let (a, b, c) = (tag(1, 0, "a"), tag(2, 0, "b"), tag(3, 0, "c"));
+        for (t, (x, y)) in [(1u64, (a, b)), (2, (b, c))] {
+            w.acquire_as(t, x);
+            w.acquire_as(t, y);
+            w.release_as(t, y.id);
+            w.release_as(t, x.id);
+        }
+        assert!(w.violations().is_empty());
+        w.acquire_as(3, c);
+        w.acquire_as(3, a);
+        let v = w.violations();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("potential deadlock"), "{v:?}");
+    }
+
+    #[test]
+    fn rank_inversion_is_reported_before_any_reverse_edge_exists() {
+        let w = LockOrderWitness::new(false);
+        let lane = tag(1, crate::util::sync::rank::IMAX_LANE, "imax.lane");
+        let batch = tag(2, crate::util::sync::rank::SERVE_BATCH, "serve.batch");
+        w.acquire_as(1, lane);
+        w.acquire_as(1, batch); // 30 <= 50: inversion by declared rank
+        let v = w.violations();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("rank inversion"), "{v:?}");
+    }
+
+    #[test]
+    fn unranked_locks_skip_the_rank_rule_but_not_the_cycle_rule() {
+        let w = LockOrderWitness::new(false);
+        let (a, b) = (tag(1, 0, "ad-hoc-a"), tag(2, 40, "ranked-b"));
+        // Unranked under ranked and vice versa: no rank finding.
+        w.acquire_as(1, b);
+        w.acquire_as(1, a);
+        w.release_as(1, a.id);
+        w.release_as(1, b.id);
+        assert!(w.violations().is_empty(), "{:?}", w.violations());
+    }
+
+    #[test]
+    fn reentrant_acquisition_is_a_self_deadlock() {
+        let w = LockOrderWitness::new(false);
+        let a = tag(1, 0, "a");
+        w.acquire_as(1, a);
+        w.acquire_as(1, a);
+        let v = w.violations();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("re-entrant"), "{v:?}");
+    }
+
+    #[test]
+    fn disjoint_threads_never_interact() {
+        let w = LockOrderWitness::new(false);
+        let (a, b) = (tag(1, 0, "a"), tag(2, 0, "b"));
+        w.acquire_as(1, a);
+        w.acquire_as(2, b); // different thread: no edge, no violation
+        assert_eq!(w.edge_count(), 0);
+        assert!(w.violations().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "lock-order witness")]
+    fn fail_fast_mode_panics_on_first_violation() {
+        let w = LockOrderWitness::new(true);
+        let a = tag(1, 0, "a");
+        w.acquire_as(1, a);
+        w.acquire_as(1, a);
+    }
+
+    #[test]
+    fn mint_ids_are_unique_and_nonzero() {
+        let a = mint_lock_id();
+        let b = mint_lock_id();
+        assert!(a != 0 && b != 0 && a != b);
+    }
+}

@@ -1,0 +1,25 @@
+//! Concurrency-correctness subsystem: machine-checked evidence that
+//! the crate's hand-rolled synchronization (lane pool, lockstep
+//! rendezvous, cancel CAS, drain ordering) is deadlock-free and
+//! determinism-preserving.
+//!
+//! Three cooperating analyses (see DESIGN.md, "Lock hierarchy &
+//! invariants catalog"):
+//!
+//! - [`sched`] — a deterministic bounded interleaving explorer
+//!   (sleep-set DPOR cut + preemption bound) run over the [`models`]
+//!   of the four hot protocols; proves no-deadlock / no-lost-wakeup /
+//!   schedule-invariant outputs over *every* bounded schedule, and
+//!   convicts the seeded mutants in `tests/conc_check.rs`.
+//! - [`lockorder`] — a runtime held-locks witness (cycle detection +
+//!   rank hierarchy) that the `conc-check` feature wires into every
+//!   [`crate::util::sync`] acquire/release.
+//! - [`lint`] — a text-level project lint over `rust/src/`
+//!   (`cargo run --example lint`, gating in CI): predicate loops
+//!   around condvar waits, no raw `std::sync` primitives outside the
+//!   shim, poisoning policy, submit/sync pairing.
+
+pub mod lint;
+pub mod lockorder;
+pub mod models;
+pub mod sched;

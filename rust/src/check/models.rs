@@ -1,0 +1,870 @@
+//! Explorer models of the crate's four hot synchronization protocols,
+//! plus the fine-grained `ThreadPool::wait_idle` model that captures
+//! the lost-wakeup bug class this PR fixed in `util/pool.rs`.
+//!
+//! Each model is a deliberately small instance (2–3 threads) of the
+//! real protocol, with one [`Model::step`] per atomic action. The
+//! coarse models treat a monitor section (lock + act + unlock, or
+//! lock + predicate-check + wait) as a single step — faithful to the
+//! real code, where the predicate is always re-checked under the mutex
+//! the condvar wait atomically releases. The pool-idle model is
+//! fine-grained (separate lock/read/notify steps) because the bug it
+//! exists to catch lives *between* those steps.
+//!
+//! Every model carries `mutant` switches that re-introduce a specific
+//! bug class (dropped notify, inverted lock order, missing quorum
+//! re-check, notify outside the mutex). `tests/conc_check.rs` asserts
+//! the explorer reports a violation for every mutant and a clean,
+//! schedule-invariant sweep for the real protocol. `notify_one` is not
+//! modeled (the real code only uses `notify_all`); waitset wakes are
+//! always broadcast.
+//!
+//! Changing a model changes its explored-schedule count: update the
+//! pinned constants in `tests/conc_check.rs`, mirror the change in
+//! `python/replica/conc_check_replica.py`, and re-run the replica to
+//! confirm both enumerations still agree (see DESIGN.md, "Lock
+//! hierarchy & invariants catalog", for the recipe).
+
+use super::sched::{Access, Model};
+
+// ---------------------------------------------------------------------------
+// Cancel-vs-expire first-cause CAS (util/cancel.rs → sync::StateCell)
+// ---------------------------------------------------------------------------
+
+const LIVE: u8 = 0;
+const CANCELLED: u8 = 1;
+const EXPIRED: u8 = 2;
+
+/// Threads: T0 `cancel()` (CAS LIVE→CANCELLED), T1 `expire()`
+/// (CAS LIVE→EXPIRED), T2 an observer reading the cell twice.
+///
+/// Checked claims: exactly one CAS wins across every schedule, the
+/// cell never returns to LIVE, and an observed terminal cause is
+/// stable (the observer never sees CANCELLED then EXPIRED).
+#[derive(Clone)]
+pub struct CancelModel {
+    state: u8,
+    wins: [bool; 2],
+    /// Observer pc: 0 = first read pending, 1 = second read pending,
+    /// 2 = finished. Writer pcs are `wins`-adjacent `done` flags.
+    writer_done: [bool; 2],
+    obs_pc: u8,
+    obs_first: u8,
+    unstable: bool,
+}
+
+impl CancelModel {
+    /// Fresh LIVE cell, nothing run.
+    pub fn new() -> CancelModel {
+        CancelModel {
+            state: LIVE,
+            wins: [false; 2],
+            writer_done: [false; 2],
+            obs_pc: 0,
+            obs_first: LIVE,
+            unstable: false,
+        }
+    }
+}
+
+impl Default for CancelModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Model for CancelModel {
+    fn threads(&self) -> usize {
+        3
+    }
+
+    fn finished(&self, tid: usize) -> bool {
+        match tid {
+            0 | 1 => self.writer_done[tid],
+            _ => self.obs_pc == 2,
+        }
+    }
+
+    fn enabled(&self, tid: usize) -> bool {
+        !self.finished(tid)
+    }
+
+    fn step(&mut self, tid: usize) -> Vec<Access> {
+        match tid {
+            0 | 1 => {
+                let cause = if tid == 0 { CANCELLED } else { EXPIRED };
+                if self.state == LIVE {
+                    self.state = cause;
+                    self.wins[tid] = true;
+                }
+                self.writer_done[tid] = true;
+                vec![Access::write(0)]
+            }
+            _ => {
+                if self.obs_pc == 0 {
+                    self.obs_first = self.state;
+                    self.obs_pc = 1;
+                } else {
+                    if self.obs_first != LIVE && self.state != self.obs_first {
+                        self.unstable = true;
+                    }
+                    self.obs_pc = 2;
+                }
+                vec![Access::read(0)]
+            }
+        }
+    }
+
+    fn safety(&self) -> Result<(), String> {
+        if self.wins[0] && self.wins[1] {
+            return Err("both cancel and expire won the CAS".into());
+        }
+        if self.unstable {
+            return Err(format!(
+                "terminal cause changed after being observed (first saw {})",
+                self.obs_first
+            ));
+        }
+        Ok(())
+    }
+
+    fn final_check(&self) -> Result<(), String> {
+        let wins = self.wins[0] as u8 + self.wins[1] as u8;
+        if wins != 1 {
+            return Err(format!("{wins} terminal causes recorded, want exactly 1"));
+        }
+        if self.state == LIVE {
+            return Err("cell still LIVE after both writers ran".into());
+        }
+        Ok(())
+    }
+
+    fn result(&self) -> String {
+        // Which cause wins is schedule-dependent by design; the
+        // schedule-invariant claim is the *count* of winners.
+        format!("winners={}", self.wins[0] as u8 + self.wins[1] as u8)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CompletionSlot submit/sync with out-of-order sync (util/sync.rs)
+// ---------------------------------------------------------------------------
+
+/// Threads: P0 fills slot 0 with 10, P1 fills slot 1 with 20, C syncs
+/// slot 1 *first*, then slot 0 — the out-of-order `sync` pattern
+/// `join_sharded` relies on (shards complete in any order; the join
+/// walks them in shard order regardless).
+///
+/// A fill is one monitor step: set value + broadcast. A sync attempt is
+/// one monitor step: take the value if filled, else park on the slot's
+/// waitset (predicate re-checked on every wake — the coarse step *is*
+/// the predicate loop).
+#[derive(Clone)]
+pub struct SlotModel {
+    filled: [bool; 2],
+    val: [i64; 2],
+    got: [i64; 2],
+    producer_done: [bool; 2],
+    /// Consumer: 0 = syncing slot 1, 1 = syncing slot 0, 2 = finished.
+    consumer_pc: u8,
+    consumer_waiting_on: Option<usize>,
+    /// Mutant: fill writes the value but never notifies.
+    pub mutant_drop_notify: bool,
+}
+
+impl SlotModel {
+    /// Fresh model; `mutant_drop_notify` re-introduces the lost-wakeup
+    /// bug the shim's `fill` (notify under the lock) prevents.
+    pub fn new(mutant_drop_notify: bool) -> SlotModel {
+        SlotModel {
+            filled: [false; 2],
+            val: [0; 2],
+            got: [0; 2],
+            producer_done: [false; 2],
+            consumer_pc: 0,
+            consumer_waiting_on: None,
+            mutant_drop_notify,
+        }
+    }
+
+    fn sync_order(pc: u8) -> usize {
+        if pc == 0 {
+            1
+        } else {
+            0
+        }
+    }
+}
+
+impl Model for SlotModel {
+    fn threads(&self) -> usize {
+        3
+    }
+
+    fn finished(&self, tid: usize) -> bool {
+        match tid {
+            0 | 1 => self.producer_done[tid],
+            _ => self.consumer_pc == 2,
+        }
+    }
+
+    fn enabled(&self, tid: usize) -> bool {
+        match tid {
+            0 | 1 => !self.producer_done[tid],
+            _ => self.consumer_pc != 2 && self.consumer_waiting_on.is_none(),
+        }
+    }
+
+    fn step(&mut self, tid: usize) -> Vec<Access> {
+        match tid {
+            0 | 1 => {
+                self.val[tid] = 10 * (tid as i64 + 1);
+                self.filled[tid] = true;
+                self.producer_done[tid] = true;
+                if !self.mutant_drop_notify && self.consumer_waiting_on == Some(tid) {
+                    self.consumer_waiting_on = None; // broadcast wake
+                }
+                vec![Access::write(tid)]
+            }
+            _ => {
+                let s = Self::sync_order(self.consumer_pc);
+                if self.filled[s] {
+                    self.got[s] = self.val[s];
+                    self.consumer_pc += 1;
+                } else {
+                    self.consumer_waiting_on = Some(s);
+                }
+                vec![Access::write(s)]
+            }
+        }
+    }
+
+    fn final_check(&self) -> Result<(), String> {
+        if self.got != [10, 20] {
+            return Err(format!("stitched values {:?}, want [10, 20]", self.got));
+        }
+        Ok(())
+    }
+
+    fn result(&self) -> String {
+        format!("got1={} got0={}", self.got[1], self.got[0])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Two-lock ordering (the lock-hierarchy discipline, check/lockorder.rs)
+// ---------------------------------------------------------------------------
+
+/// Threads: two, each acquiring two mutexes then releasing them. In the
+/// correct protocol both follow the hierarchy (A then B); the mutant
+/// inverts thread 1's order, which the explorer convicts with a
+/// concrete deadlocking schedule (and the lock-order witness convicts
+/// from a *single* sequential run, without needing the schedule).
+#[derive(Clone)]
+pub struct TwoLockModel {
+    owner: [Option<usize>; 2],
+    pc: [u8; 2],
+    /// Mutant: thread 1 takes B before A.
+    pub mutant_inverted: bool,
+}
+
+impl TwoLockModel {
+    /// Fresh model; `mutant_inverted` seeds the classic AB/BA deadlock.
+    pub fn new(mutant_inverted: bool) -> TwoLockModel {
+        TwoLockModel { owner: [None; 2], pc: [0; 2], mutant_inverted }
+    }
+
+    fn order(&self, tid: usize) -> [usize; 2] {
+        if tid == 1 && self.mutant_inverted {
+            [1, 0]
+        } else {
+            [0, 1]
+        }
+    }
+}
+
+impl Model for TwoLockModel {
+    fn threads(&self) -> usize {
+        2
+    }
+
+    fn finished(&self, tid: usize) -> bool {
+        self.pc[tid] == 4
+    }
+
+    fn enabled(&self, tid: usize) -> bool {
+        let pc = self.pc[tid];
+        if pc >= 4 {
+            return false;
+        }
+        let ord = self.order(tid);
+        match pc {
+            0 => self.owner[ord[0]].is_none(),
+            1 => self.owner[ord[1]].is_none(),
+            _ => true,
+        }
+    }
+
+    fn step(&mut self, tid: usize) -> Vec<Access> {
+        let ord = self.order(tid);
+        let pc = self.pc[tid];
+        let lock = match pc {
+            0 => {
+                self.owner[ord[0]] = Some(tid);
+                ord[0]
+            }
+            1 => {
+                self.owner[ord[1]] = Some(tid);
+                ord[1]
+            }
+            2 => {
+                self.owner[ord[1]] = None;
+                ord[1]
+            }
+            _ => {
+                self.owner[ord[0]] = None;
+                ord[0]
+            }
+        };
+        self.pc[tid] = pc + 1;
+        vec![Access::write(lock)]
+    }
+
+    fn final_check(&self) -> Result<(), String> {
+        if self.owner != [None, None] {
+            return Err(format!("locks still held at exit: {:?}", self.owner));
+        }
+        Ok(())
+    }
+
+    fn result(&self) -> String {
+        String::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rendezvous join / leave() / waiter promotion (serve/batcher.rs)
+// ---------------------------------------------------------------------------
+
+/// Threads: members M0 (input 1) and M1 (input 2) rendezvous; T2 is a
+/// cancelled member calling `leave()` without staging. Quorum starts at
+/// 3 and shrinks to 2.
+///
+/// Coarse monitor steps, matching `SharedBatch`:
+/// - join: stage input, `arrived += 1`; if `arrived == active` the
+///   joiner is the leader: merge-execute, bump the generation,
+///   broadcast; otherwise park on the batch condvar.
+/// - wake re-check: if the generation advanced, take the output; else
+///   if `arrived == active` (quorum shrank while parked) the waiter
+///   *promotes itself to leader*; else park again.
+/// - leave: `active -= 1`, broadcast.
+///
+/// Mutants: `drop_notify` (leave forgets the broadcast — the parked
+/// members never learn the quorum shrank) and `no_requeue_check` (a
+/// woken waiter only looks at the generation, missing the promotion
+/// case — both deadlock).
+#[derive(Clone)]
+pub struct RendezvousModel {
+    arrived: u32,
+    active: u32,
+    generation: u32,
+    staged_sum: i64,
+    output: Option<i64>,
+    /// Member pc: 0 = joining, 1 = parked, 2 = woken (re-check), 3 =
+    /// finished. Leaver pc in `leaver_done`.
+    member_pc: [u8; 2],
+    member_out: [i64; 2],
+    leaver_done: bool,
+    /// Mutant: `leave()` skips the broadcast.
+    pub mutant_drop_notify: bool,
+    /// Mutant: a woken waiter skips the quorum re-check (no promotion).
+    pub mutant_no_requeue_check: bool,
+}
+
+impl RendezvousModel {
+    /// Fresh model with both mutants off unless selected.
+    pub fn new(mutant_drop_notify: bool, mutant_no_requeue_check: bool) -> RendezvousModel {
+        RendezvousModel {
+            arrived: 0,
+            active: 3,
+            generation: 0,
+            staged_sum: 0,
+            output: None,
+            member_pc: [0; 2],
+            member_out: [0; 2],
+            leaver_done: false,
+            mutant_drop_notify,
+            mutant_no_requeue_check,
+        }
+    }
+
+    fn complete(&mut self) {
+        self.output = Some(self.staged_sum);
+        self.generation += 1;
+        self.broadcast();
+    }
+
+    fn broadcast(&mut self) {
+        for pc in self.member_pc.iter_mut() {
+            if *pc == 1 {
+                *pc = 2;
+            }
+        }
+    }
+}
+
+impl Model for RendezvousModel {
+    fn threads(&self) -> usize {
+        3
+    }
+
+    fn finished(&self, tid: usize) -> bool {
+        match tid {
+            0 | 1 => self.member_pc[tid] == 3,
+            _ => self.leaver_done,
+        }
+    }
+
+    fn enabled(&self, tid: usize) -> bool {
+        match tid {
+            0 | 1 => self.member_pc[tid] == 0 || self.member_pc[tid] == 2,
+            _ => !self.leaver_done,
+        }
+    }
+
+    fn step(&mut self, tid: usize) -> Vec<Access> {
+        if tid == 2 {
+            self.active -= 1;
+            if !self.mutant_drop_notify {
+                self.broadcast();
+            }
+            self.leaver_done = true;
+            return vec![Access::write(0)];
+        }
+        match self.member_pc[tid] {
+            0 => {
+                self.staged_sum += tid as i64 + 1;
+                self.arrived += 1;
+                if self.arrived == self.active {
+                    self.complete();
+                    self.member_out[tid] = self.output.unwrap();
+                    self.member_pc[tid] = 3;
+                } else {
+                    self.member_pc[tid] = 1;
+                }
+            }
+            2 => {
+                if self.generation > 0 {
+                    self.member_out[tid] = self.output.unwrap();
+                    self.member_pc[tid] = 3;
+                } else if !self.mutant_no_requeue_check && self.arrived == self.active {
+                    self.complete();
+                    self.member_out[tid] = self.output.unwrap();
+                    self.member_pc[tid] = 3;
+                } else {
+                    self.member_pc[tid] = 1;
+                }
+            }
+            pc => unreachable!("member {tid} stepped at pc {pc}"),
+        }
+        vec![Access::write(0)]
+    }
+
+    fn safety(&self) -> Result<(), String> {
+        if self.active > 3 {
+            return Err(format!("quorum grew: active {}", self.active));
+        }
+        if self.arrived > 3 {
+            return Err(format!("arrived {} overran the membership", self.arrived));
+        }
+        if self.generation > 1 {
+            return Err("batch completed twice".into());
+        }
+        Ok(())
+    }
+
+    fn final_check(&self) -> Result<(), String> {
+        if self.generation != 1 {
+            return Err(format!("generation {} != 1 at exit", self.generation));
+        }
+        if self.member_out != [3, 3] {
+            return Err(format!("member outputs {:?}, want [3, 3]", self.member_out));
+        }
+        if self.arrived != self.active {
+            return Err(format!(
+                "arrived {} != active {} at exit",
+                self.arrived, self.active
+            ));
+        }
+        Ok(())
+    }
+
+    fn result(&self) -> String {
+        format!(
+            "gen={} out={},{} merged={}",
+            self.generation,
+            self.member_out[0],
+            self.member_out[1],
+            self.output.unwrap_or(-1)
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Drain-then-refuse (serve/queue.rs close + server/runner.rs shutdown)
+// ---------------------------------------------------------------------------
+
+/// Threads: T0 a producer pushing two requests (the second races the
+/// close), T1 the drainer calling `close()`, T2 a worker popping until
+/// the queue reports closed-and-empty.
+///
+/// Checked claims: every *accepted* push is popped exactly once (drain
+/// loses nothing), every push after close is refused, and the worker
+/// always terminates (close broadcast reaches a parked worker).
+#[derive(Clone)]
+pub struct DrainModel {
+    queue: Vec<i64>,
+    closed: bool,
+    /// Producer pc: 0 = push #1, 1 = push #2, 2 = finished.
+    producer_pc: u8,
+    accepted: u32,
+    refused: u32,
+    drainer_done: bool,
+    popped: Vec<i64>,
+    worker_done: bool,
+    worker_waiting: bool,
+    /// Mutant: close() forgets to wake the parked worker.
+    pub mutant_drop_notify: bool,
+}
+
+impl DrainModel {
+    /// Fresh open queue; `mutant_drop_notify` makes `close()` skip the
+    /// broadcast that unparks an idle worker.
+    pub fn new(mutant_drop_notify: bool) -> DrainModel {
+        DrainModel {
+            queue: Vec::new(),
+            closed: false,
+            producer_pc: 0,
+            accepted: 0,
+            refused: 0,
+            drainer_done: false,
+            popped: Vec::new(),
+            worker_done: false,
+            worker_waiting: false,
+            mutant_drop_notify,
+        }
+    }
+}
+
+impl Model for DrainModel {
+    fn threads(&self) -> usize {
+        3
+    }
+
+    fn finished(&self, tid: usize) -> bool {
+        match tid {
+            0 => self.producer_pc == 2,
+            1 => self.drainer_done,
+            _ => self.worker_done,
+        }
+    }
+
+    fn enabled(&self, tid: usize) -> bool {
+        match tid {
+            0 => self.producer_pc != 2,
+            1 => !self.drainer_done,
+            _ => !self.worker_done && !self.worker_waiting,
+        }
+    }
+
+    fn step(&mut self, tid: usize) -> Vec<Access> {
+        match tid {
+            0 => {
+                let v = self.producer_pc as i64 + 1;
+                if self.closed {
+                    self.refused += 1;
+                } else {
+                    self.queue.push(v);
+                    self.accepted += 1;
+                    self.worker_waiting = false; // push broadcasts
+                }
+                self.producer_pc += 1;
+                vec![Access::write(0)]
+            }
+            1 => {
+                self.closed = true;
+                if !self.mutant_drop_notify {
+                    self.worker_waiting = false; // close broadcasts
+                }
+                self.drainer_done = true;
+                vec![Access::write(0)]
+            }
+            _ => {
+                if !self.queue.is_empty() {
+                    self.popped.push(self.queue.remove(0));
+                } else if self.closed {
+                    self.worker_done = true;
+                } else {
+                    self.worker_waiting = true;
+                }
+                vec![Access::write(0)]
+            }
+        }
+    }
+
+    fn safety(&self) -> Result<(), String> {
+        if self.accepted + self.refused > 2 {
+            return Err("producer pushed more than twice".into());
+        }
+        Ok(())
+    }
+
+    fn final_check(&self) -> Result<(), String> {
+        if self.popped.len() as u32 != self.accepted {
+            return Err(format!(
+                "accepted {} requests but drained {} — drain lost work",
+                self.accepted,
+                self.popped.len()
+            ));
+        }
+        if !self.queue.is_empty() {
+            return Err(format!("{} requests stranded in the queue", self.queue.len()));
+        }
+        if self.accepted + self.refused != 2 {
+            return Err("push accounting does not cover both attempts".into());
+        }
+        Ok(())
+    }
+
+    fn result(&self) -> String {
+        // accepted/refused split is schedule-dependent (the race with
+        // close is real); the invariant is conservation, checked above.
+        String::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ThreadPool::wait_idle lost wakeup (util/pool.rs) — fine-grained
+// ---------------------------------------------------------------------------
+
+/// Threads: W a worker finishing the last job, V a waiter in
+/// `wait_idle`. Fine-grained steps with an explicitly modeled mutex,
+/// because the bug lives between them:
+///
+/// - W: `in_flight.fetch_sub` → (fixed) lock the done mutex → broadcast
+///   → unlock. The mutant broadcasts *without* taking the mutex — the
+///   pre-PR `util/pool.rs` code — which can fire in the window between
+///   V reading the counter and V parking, a classic lost wakeup.
+/// - V: lock → read `in_flight` → if zero, unlock and return; else park
+///   (atomically releasing the mutex) → on wake, re-lock → re-read.
+#[derive(Clone)]
+pub struct PoolIdleModel {
+    in_flight: i64,
+    mutex_owner: Option<usize>,
+    waiter_parked: bool,
+    /// Worker pc: 0 = fetch_sub, then fixed: 1 = lock, 2 = broadcast,
+    /// 3 = unlock, 4 = done; mutant: 1 = broadcast, 2 = done.
+    worker_pc: u8,
+    /// Waiter pc: 0 = lock, 1 = read/decide, 2 = unlock+return,
+    /// 3 = park, 4 = re-lock after wake, 5 = done.
+    waiter_pc: u8,
+    last_read: i64,
+    /// Mutant: broadcast without holding the done mutex.
+    pub mutant_unlocked_notify: bool,
+}
+
+const OBJ_CTR: usize = 0;
+const OBJ_MTX: usize = 1;
+const OBJ_CV: usize = 2;
+
+impl PoolIdleModel {
+    /// One job in flight; `mutant_unlocked_notify` reproduces the
+    /// pre-PR bug.
+    pub fn new(mutant_unlocked_notify: bool) -> PoolIdleModel {
+        PoolIdleModel {
+            in_flight: 1,
+            mutex_owner: None,
+            waiter_parked: false,
+            worker_pc: 0,
+            waiter_pc: 0,
+            last_read: -1,
+            mutant_unlocked_notify,
+        }
+    }
+
+    fn worker_done_pc(&self) -> u8 {
+        if self.mutant_unlocked_notify {
+            2
+        } else {
+            4
+        }
+    }
+}
+
+impl Model for PoolIdleModel {
+    fn threads(&self) -> usize {
+        2
+    }
+
+    fn finished(&self, tid: usize) -> bool {
+        if tid == 0 {
+            self.worker_pc == self.worker_done_pc()
+        } else {
+            self.waiter_pc == 5
+        }
+    }
+
+    fn enabled(&self, tid: usize) -> bool {
+        if tid == 0 {
+            match (self.mutant_unlocked_notify, self.worker_pc) {
+                (_, pc) if pc == self.worker_done_pc() => false,
+                (false, 1) => self.mutex_owner.is_none(),
+                _ => true,
+            }
+        } else {
+            match self.waiter_pc {
+                0 | 4 => self.mutex_owner.is_none(),
+                // pc 3 is the park step itself (release + join waitset,
+                // one atomic action); once parked it stays at pc 3 with
+                // the flag set until the broadcast moves it to pc 4.
+                3 => !self.waiter_parked,
+                5 => false,
+                _ => true,
+            }
+        }
+    }
+
+    fn step(&mut self, tid: usize) -> Vec<Access> {
+        if tid == 0 {
+            if self.mutant_unlocked_notify {
+                match self.worker_pc {
+                    0 => {
+                        self.in_flight -= 1;
+                        self.worker_pc = 1;
+                        vec![Access::write(OBJ_CTR)]
+                    }
+                    _ => {
+                        if self.waiter_parked {
+                            self.waiter_parked = false;
+                            self.waiter_pc = 4;
+                        }
+                        self.worker_pc = 2;
+                        vec![Access::write(OBJ_CV)]
+                    }
+                }
+            } else {
+                match self.worker_pc {
+                    0 => {
+                        self.in_flight -= 1;
+                        self.worker_pc = 1;
+                        vec![Access::write(OBJ_CTR)]
+                    }
+                    1 => {
+                        self.mutex_owner = Some(0);
+                        self.worker_pc = 2;
+                        vec![Access::write(OBJ_MTX)]
+                    }
+                    2 => {
+                        if self.waiter_parked {
+                            self.waiter_parked = false;
+                            self.waiter_pc = 4;
+                        }
+                        self.worker_pc = 3;
+                        vec![Access::write(OBJ_CV)]
+                    }
+                    _ => {
+                        self.mutex_owner = None;
+                        self.worker_pc = 4;
+                        vec![Access::write(OBJ_MTX)]
+                    }
+                }
+            }
+        } else {
+            match self.waiter_pc {
+                0 | 4 => {
+                    self.mutex_owner = Some(1);
+                    self.waiter_pc = 1;
+                    vec![Access::write(OBJ_MTX)]
+                }
+                1 => {
+                    self.last_read = self.in_flight;
+                    self.waiter_pc = if self.last_read == 0 { 2 } else { 3 };
+                    vec![Access::read(OBJ_CTR)]
+                }
+                2 => {
+                    self.mutex_owner = None;
+                    self.waiter_pc = 5;
+                    vec![Access::write(OBJ_MTX)]
+                }
+                _ => {
+                    // park: atomically release the mutex + join waitset
+                    self.mutex_owner = None;
+                    self.waiter_parked = true;
+                    vec![Access::write(OBJ_MTX), Access::write(OBJ_CV)]
+                }
+            }
+        }
+    }
+
+    fn safety(&self) -> Result<(), String> {
+        if self.in_flight < 0 {
+            return Err(format!("in_flight underflowed: {}", self.in_flight));
+        }
+        Ok(())
+    }
+
+    fn final_check(&self) -> Result<(), String> {
+        if self.in_flight != 0 {
+            return Err(format!("in_flight {} != 0 at exit", self.in_flight));
+        }
+        if self.mutex_owner.is_some() {
+            return Err("done mutex still held at exit".into());
+        }
+        if self.last_read != 0 {
+            return Err("waiter returned without observing idle".into());
+        }
+        Ok(())
+    }
+
+    fn result(&self) -> String {
+        format!("idle_observed={}", (self.last_read == 0) as u8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sched::{explore, Config};
+    use super::*;
+
+    // Sanity smoke: real (non-mutant) models are clean under a tight
+    // bound. The full sweeps with pinned schedule counts and the
+    // mutant convictions live in tests/conc_check.rs.
+    #[test]
+    fn real_models_clean_at_bound_two() {
+        let cfg = Config::bounded(2);
+        assert!(explore(&CancelModel::new(), &cfg).is_clean());
+        assert!(explore(&SlotModel::new(false), &cfg).is_clean());
+        assert!(explore(&TwoLockModel::new(false), &cfg).is_clean());
+        assert!(explore(&RendezvousModel::new(false, false), &cfg).is_clean());
+        assert!(explore(&DrainModel::new(false), &cfg).is_clean());
+        assert!(explore(&PoolIdleModel::new(false), &cfg).is_clean());
+    }
+
+    #[test]
+    fn unlocked_notify_mutant_loses_the_wakeup() {
+        let r = explore(&PoolIdleModel::new(true), &Config::bounded(2));
+        assert!(r.deadlocks > 0, "mutant must deadlock somewhere: {r:?}");
+    }
+
+    #[test]
+    fn inverted_lock_order_mutant_deadlocks() {
+        let r = explore(&TwoLockModel::new(true), &Config::bounded(2));
+        assert!(r.deadlocks > 0, "{r:?}");
+    }
+
+    #[test]
+    fn missing_quorum_recheck_mutant_deadlocks() {
+        let r = explore(&RendezvousModel::new(false, true), &Config::bounded(2));
+        assert!(r.deadlocks > 0, "{r:?}");
+    }
+}

@@ -1,0 +1,399 @@
+//! Deterministic interleaving explorer: a loom-style, zero-dependency
+//! bounded model checker for the crate's hot synchronization protocols.
+//!
+//! A protocol is expressed as a [`Model`]: a handful of threads, each a
+//! small explicit-PC state machine over shared state, where one
+//! [`Model::step`] is one *atomic* action (a monitor section for the
+//! coarse models, a single lock/read/notify for the fine-grained ones).
+//! [`explore`] then runs a depth-first search over every choice of
+//! which enabled thread steps next, checking after every step that the
+//! model's safety invariant holds, and at every terminal state that
+//! either all threads finished (no deadlock) and the final-state check
+//! passes, or reporting the exact schedule that got stuck.
+//!
+//! Two cuts keep the search exhaustive-but-bounded:
+//!
+//! - **Sleep sets (DPOR-lite).** After exploring thread `t` from a
+//!   state, `t` is added to the *sleep set* for the sibling branches;
+//!   a sleeping thread is only woken (removed) when a later step is
+//!   *dependent* on its next action (touches the same object with at
+//!   least one write) or changes its enabledness. Schedules that only
+//!   commute independent steps are never revisited.
+//! - **Preemption bound.** Switching away from a thread that is still
+//!   enabled costs one preemption; schedules exceeding the bound are
+//!   pruned (and counted). Empirically almost all concurrency bugs
+//!   need ≤ 2 preemptions; the default sweep uses bound 3.
+//!
+//! Determinism matters doubly here: the search itself is deterministic
+//! (threads tried in ascending id order, no randomness), so the
+//! explored-schedule counts are exact, reproducible constants — pinned
+//! in `tests/conc_check.rs` and cross-checked against an independent
+//! Python implementation (`python/replica/conc_check_replica.py`).
+//!
+//! The [`Report::results`] set carries each model's schedule-invariance
+//! claim: every complete schedule contributes its stitched
+//! output/merged counters as a string, and the set must end up with at
+//! most one element — bit-identity over *all* bounded schedules, not a
+//! handful of stress-test repetitions.
+
+use std::collections::BTreeSet;
+
+/// One shared-object touch performed by a step; the dependence relation
+/// for the sleep-set cut. Two accesses conflict iff they touch the same
+/// object id and at least one writes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Access {
+    /// Model-assigned shared-object id (mutex, counter, slot, ...).
+    pub obj: usize,
+    /// Whether the touch mutates the object (waitset changes count).
+    pub write: bool,
+}
+
+impl Access {
+    /// Read touch on `obj`.
+    pub fn read(obj: usize) -> Access {
+        Access { obj, write: false }
+    }
+    /// Write touch on `obj`.
+    pub fn write(obj: usize) -> Access {
+        Access { obj, write: true }
+    }
+}
+
+fn conflicts(a: &[Access], b: &[Access]) -> bool {
+    a.iter().any(|x| b.iter().any(|y| x.obj == y.obj && (x.write || y.write)))
+}
+
+/// A small concurrent protocol the explorer can exhaustively schedule.
+///
+/// Implementations are plain state machines: `Clone` is the search's
+/// state snapshot, so keep state small (a few ints and tiny vecs).
+pub trait Model: Clone {
+    /// Number of threads (ids `0..threads()`).
+    fn threads(&self) -> usize;
+    /// True when `tid` has run to completion.
+    fn finished(&self, tid: usize) -> bool;
+    /// True when `tid` can take a step now (not finished, not blocked
+    /// on a held mutex, not parked in a condvar waitset).
+    fn enabled(&self, tid: usize) -> bool;
+    /// Execute `tid`'s next atomic action; returns the shared-object
+    /// accesses it performed. Only called when `enabled(tid)`.
+    fn step(&mut self, tid: usize) -> Vec<Access>;
+    /// Safety invariant checked after *every* step (quorum never
+    /// underflows, counters never negative, ...).
+    fn safety(&self) -> Result<(), String> {
+        Ok(())
+    }
+    /// Checked at terminal states where every thread finished.
+    fn final_check(&self) -> Result<(), String>;
+    /// Canonical output of a complete schedule; `explore` collects the
+    /// distinct values — schedule invariance means the set has ≤ 1.
+    fn result(&self) -> String;
+}
+
+/// Search bounds.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Max context switches away from a still-enabled thread;
+    /// `None` = unbounded (full exhaustive search).
+    pub preemption_bound: Option<usize>,
+    /// Hard cap on terminal schedules before the search reports
+    /// truncation (runaway-model backstop, not a tuning knob).
+    pub max_schedules: u64,
+    /// Hard cap on schedule length (steps).
+    pub max_depth: usize,
+}
+
+impl Config {
+    /// The standard sweep: preemption bound 3, generous caps.
+    pub fn bounded(preemption_bound: usize) -> Config {
+        Config {
+            preemption_bound: Some(preemption_bound),
+            max_schedules: 5_000_000,
+            max_depth: 256,
+        }
+    }
+
+    /// Full exhaustive search (still sleep-set-reduced).
+    pub fn exhaustive() -> Config {
+        Config { preemption_bound: None, max_schedules: 5_000_000, max_depth: 256 }
+    }
+}
+
+/// What a sweep found.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Terminal schedules reached (complete + deadlocked + unsafe).
+    pub schedules: u64,
+    /// Schedules that ended with unfinished-but-blocked threads.
+    pub deadlocks: u64,
+    /// Human-readable violations (deadlock traces, safety/final-check
+    /// failures), each with the exact schedule that produced it.
+    pub violations: Vec<String>,
+    /// Distinct `Model::result()` strings over complete schedules.
+    pub results: BTreeSet<String>,
+    /// Branches skipped by the preemption bound.
+    pub preempt_pruned: u64,
+    /// Branches skipped by the sleep-set cut.
+    pub sleep_pruned: u64,
+    /// True if a cap fired — counts are then lower bounds, not exact.
+    pub truncated: bool,
+}
+
+impl Report {
+    /// No deadlock, no violation, outputs schedule-invariant.
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty() && self.deadlocks == 0 && self.results.len() <= 1
+    }
+}
+
+/// Exhaustively (within `cfg`) explore every schedule of `model`.
+pub fn explore<M: Model>(model: &M, cfg: &Config) -> Report {
+    let mut report = Report::default();
+    let mut trace: Vec<usize> = Vec::new();
+    dfs(model, None, 0, &BTreeSet::new(), cfg, &mut report, &mut trace);
+    report
+}
+
+fn trace_str(trace: &[usize]) -> String {
+    let s: Vec<String> = trace.iter().map(|t| t.to_string()).collect();
+    s.join(",")
+}
+
+fn dfs<M: Model>(
+    state: &M,
+    last: Option<usize>,
+    preemptions: usize,
+    sleep: &BTreeSet<usize>,
+    cfg: &Config,
+    report: &mut Report,
+    trace: &mut Vec<usize>,
+) {
+    if report.truncated {
+        return;
+    }
+    let n = state.threads();
+    let enabled: Vec<usize> = (0..n).filter(|&t| state.enabled(t)).collect();
+    if enabled.is_empty() {
+        if report.schedules >= cfg.max_schedules {
+            report.truncated = true;
+            return;
+        }
+        report.schedules += 1;
+        if (0..n).all(|t| state.finished(t)) {
+            match state.final_check() {
+                Ok(()) => {
+                    report.results.insert(state.result());
+                }
+                Err(e) => report
+                    .violations
+                    .push(format!("final-check failed after [{}]: {e}", trace_str(trace))),
+            }
+        } else {
+            let stuck: Vec<String> = (0..n)
+                .filter(|&t| !state.finished(t))
+                .map(|t| format!("T{t}"))
+                .collect();
+            report.deadlocks += 1;
+            report.violations.push(format!(
+                "deadlock after [{}]: {} blocked with no enabled thread",
+                trace_str(trace),
+                stuck.join(" ")
+            ));
+        }
+        return;
+    }
+    if trace.len() >= cfg.max_depth {
+        report.truncated = true;
+        return;
+    }
+    let mut local_sleep = sleep.clone();
+    for &t in &enabled {
+        if local_sleep.contains(&t) {
+            report.sleep_pruned += 1;
+            continue;
+        }
+        let p = match last {
+            Some(l) if l != t && state.enabled(l) => preemptions + 1,
+            _ => preemptions,
+        };
+        if let Some(bound) = cfg.preemption_bound {
+            if p > bound {
+                report.preempt_pruned += 1;
+                continue;
+            }
+        }
+        let mut next = state.clone();
+        let acc = next.step(t);
+        trace.push(t);
+        if let Err(e) = next.safety() {
+            if report.schedules >= cfg.max_schedules {
+                report.truncated = true;
+            } else {
+                report.schedules += 1;
+                report
+                    .violations
+                    .push(format!("safety violated after [{}]: {e}", trace_str(trace)));
+            }
+        } else {
+            // A sleeping thread stays asleep only while it remains
+            // enabled with its next action independent of the step just
+            // taken; anything else wakes it (conservative = explore).
+            let mut child_sleep = BTreeSet::new();
+            for &s in &local_sleep {
+                if s == t || !next.enabled(s) {
+                    continue;
+                }
+                let mut probe = next.clone();
+                let acc_s = probe.step(s);
+                if !conflicts(&acc, &acc_s) {
+                    child_sleep.insert(s);
+                }
+            }
+            dfs(&next, Some(t), p, &child_sleep, cfg, report, trace);
+        }
+        trace.pop();
+        local_sleep.insert(t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two threads, each one independent write to its own object.
+    #[derive(Clone)]
+    struct TwoIndependent {
+        done: [bool; 2],
+    }
+
+    impl Model for TwoIndependent {
+        fn threads(&self) -> usize {
+            2
+        }
+        fn finished(&self, tid: usize) -> bool {
+            self.done[tid]
+        }
+        fn enabled(&self, tid: usize) -> bool {
+            !self.done[tid]
+        }
+        fn step(&mut self, tid: usize) -> Vec<Access> {
+            self.done[tid] = true;
+            vec![Access::write(tid)]
+        }
+        fn final_check(&self) -> Result<(), String> {
+            Ok(())
+        }
+        fn result(&self) -> String {
+            String::new()
+        }
+    }
+
+    /// Two threads, one dependent write each to a shared counter.
+    #[derive(Clone)]
+    struct TwoDependent {
+        steps: [bool; 2],
+        counter: i32,
+    }
+
+    impl Model for TwoDependent {
+        fn threads(&self) -> usize {
+            2
+        }
+        fn finished(&self, tid: usize) -> bool {
+            self.steps[tid]
+        }
+        fn enabled(&self, tid: usize) -> bool {
+            !self.steps[tid]
+        }
+        fn step(&mut self, tid: usize) -> Vec<Access> {
+            self.steps[tid] = true;
+            self.counter += 1;
+            vec![Access::write(0)]
+        }
+        fn final_check(&self) -> Result<(), String> {
+            if self.counter == 2 {
+                Ok(())
+            } else {
+                Err(format!("counter {} != 2", self.counter))
+            }
+        }
+        fn result(&self) -> String {
+            format!("counter={}", self.counter)
+        }
+    }
+
+    /// A thread that blocks forever once the other has run.
+    #[derive(Clone)]
+    struct Stuck {
+        ran0: bool,
+    }
+
+    impl Model for Stuck {
+        fn threads(&self) -> usize {
+            2
+        }
+        fn finished(&self, tid: usize) -> bool {
+            tid == 0 && self.ran0
+        }
+        fn enabled(&self, tid: usize) -> bool {
+            tid == 0 && !self.ran0
+        }
+        fn step(&mut self, _tid: usize) -> Vec<Access> {
+            self.ran0 = true;
+            vec![Access::write(0)]
+        }
+        fn final_check(&self) -> Result<(), String> {
+            Ok(())
+        }
+        fn result(&self) -> String {
+            String::new()
+        }
+    }
+
+    #[test]
+    fn independent_steps_collapse_to_one_schedule() {
+        let r = explore(&TwoIndependent { done: [false, false] }, &Config::exhaustive());
+        assert!(r.is_clean(), "{:?}", r.violations);
+        assert_eq!(r.schedules, 1, "sleep set must prune the commuted order");
+        assert_eq!(r.sleep_pruned, 1);
+    }
+
+    #[test]
+    fn dependent_steps_explore_both_orders() {
+        let m = TwoDependent { steps: [false, false], counter: 0 };
+        let r = explore(&m, &Config::exhaustive());
+        assert!(r.is_clean(), "{:?}", r.violations);
+        assert_eq!(r.schedules, 2);
+        assert_eq!(r.results.iter().next().unwrap(), "counter=2");
+    }
+
+    #[test]
+    fn deadlock_is_reported_with_its_schedule() {
+        let r = explore(&Stuck { ran0: false }, &Config::exhaustive());
+        assert_eq!(r.deadlocks, 1);
+        assert!(!r.is_clean());
+        assert!(r.violations[0].contains("deadlock after [0]"), "{:?}", r.violations);
+        assert!(r.violations[0].contains("T1"), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn preemption_bound_zero_keeps_run_to_completion_schedules() {
+        // Bound 0 still explores every non-preemptive order: each
+        // thread runs to a blocking point before another is scheduled.
+        let m = TwoDependent { steps: [false, false], counter: 0 };
+        let r = explore(&m, &Config { preemption_bound: Some(0), ..Config::exhaustive() });
+        // One step each: every switch happens at thread completion, so
+        // nothing is pruned and both orders survive.
+        assert_eq!(r.schedules, 2);
+        assert_eq!(r.preempt_pruned, 0);
+    }
+
+    #[test]
+    fn schedule_cap_marks_truncation() {
+        let m = TwoDependent { steps: [false, false], counter: 0 };
+        let r = explore(&m, &Config { max_schedules: 1, ..Config::exhaustive() });
+        assert!(r.truncated);
+        assert_eq!(r.schedules, 1);
+    }
+}

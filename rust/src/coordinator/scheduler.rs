@@ -66,10 +66,11 @@ use crate::sd::backend::{OpDesc, OpKind};
 use crate::sd::plan::OpPlan;
 use crate::util::f16::F16;
 use crate::util::pool::{CompletionSlot, LanePool};
+use crate::util::sync::{rank, Mutex};
 use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// One mat-mul job: quantized weights × f32 activations (the owned-
 /// tensor form used by benches/examples; the serving layer submits
@@ -250,7 +251,11 @@ impl Coordinator {
     /// outputs and counters, see `DESIGN.md` "Concurrency model").
     pub fn new(imax: ImaxConfig, lanes: usize, host_threads: usize, policy: OffloadPolicy) -> Coordinator {
         Coordinator {
-            lanes: (0..lanes).map(|_| Arc::new(Mutex::new(LaneSim::new(imax.clone())))).collect(),
+            lanes: (0..lanes)
+                .map(|_| {
+                    Arc::new(Mutex::ranked(rank::IMAX_LANE, "imax.lane", LaneSim::new(imax.clone())))
+                })
+                .collect(),
             pool: (host_threads > 1 && lanes > 0).then(|| LanePool::new(lanes)),
             imax,
             host_threads,
@@ -258,7 +263,7 @@ impl Coordinator {
             metrics: Arc::new(CoordinatorMetrics::default()),
             next_lane: AtomicUsize::new(0),
             min_rows_override: AtomicUsize::new(0),
-            affinity: Mutex::new(HashMap::new()),
+            affinity: Mutex::ranked(rank::COORD_AFFINITY, "coord.affinity", HashMap::new()),
         }
     }
 
@@ -293,7 +298,7 @@ impl Coordinator {
     pub fn lane_cache_budget(&self) -> usize {
         self.lanes
             .first()
-            .map(|l| l.lock().unwrap().lmm.cache_budget())
+            .map(|l| l.lock().lmm.cache_budget())
             .unwrap_or(0)
     }
 
@@ -303,7 +308,7 @@ impl Coordinator {
         self.lanes
             .iter()
             .map(|l| {
-                let lane = l.lock().unwrap();
+                let lane = l.lock();
                 LaneCost {
                     cycles: lane.total.total(),
                     loaded_bytes: lane.lmm.loaded_bytes,
@@ -324,11 +329,11 @@ impl Coordinator {
         if self.lanes.is_empty() {
             return;
         }
-        let mut map = self.affinity.lock().unwrap();
+        let mut map = self.affinity.lock();
         let mut remaining: Vec<usize> = self
             .lanes
             .iter()
-            .map(|l| l.lock().unwrap().lmm.cache_budget())
+            .map(|l| l.lock().lmm.cache_budget())
             .collect();
         for (wu, idx) in plan.lane_assignment(self.lanes.len()) {
             if !self.policy.offloads_use(wu.dtype) {
@@ -337,7 +342,7 @@ impl Coordinator {
             map.insert(wu.wid.0, idx);
             if wu.bytes <= remaining[idx] {
                 remaining[idx] -= wu.bytes;
-                self.lanes[idx].lock().unwrap().pin_weight(wu.wid);
+                self.lanes[idx].lock().pin_weight(wu.wid);
             }
         }
     }
@@ -372,7 +377,7 @@ impl Coordinator {
                 if let Some(wid) = shard.wid {
                     if bytes <= remaining[shard.lane] {
                         remaining[shard.lane] -= bytes;
-                        self.lanes[shard.lane].lock().unwrap().pin_weight(wid);
+                        self.lanes[shard.lane].lock().pin_weight(wid);
                     }
                 }
             }
@@ -445,7 +450,7 @@ impl Coordinator {
         };
         match wid {
             Some(id) => {
-                let mut map = self.affinity.lock().unwrap();
+                let mut map = self.affinity.lock();
                 match map.entry(id.0) {
                     std::collections::hash_map::Entry::Occupied(e) => {
                         self.metrics
@@ -790,7 +795,7 @@ fn exec_rows(
     acts: &QuantActs,
     charge_act_bytes: bool,
 ) -> ShardOut {
-    let mut lane = lane.lock().unwrap();
+    let mut lane = lane.lock();
     let before = lane.cache_stats();
     lane.set_act_byte_elision(!charge_act_bytes);
     let (data, bd) = match (rows, acts) {

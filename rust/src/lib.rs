@@ -4,6 +4,7 @@
 //! General-Purpose CGLA Accelerator" (Ando, Eto, Nakashima; CS.AR 2025).
 //!
 //! See `DESIGN.md` for the substitution ledger and experiment index.
+pub mod check;
 pub mod coordinator;
 pub mod device;
 pub mod ggml;

@@ -47,7 +47,8 @@ use crate::ggml::{DType, Tensor, WeightId};
 use crate::sd::backend::{
     resolve_request, Completions, EngineStats, ExecBackend, OpDesc, OpHandle, OpKind, RequestId,
 };
-use std::sync::{Arc, Condvar, Mutex};
+use crate::util::sync::{rank, Condvar, Mutex};
+use std::sync::Arc;
 
 /// Identity fingerprint of a weight tensor at a rendezvous point.
 ///
@@ -135,13 +136,17 @@ impl SharedBatch {
             size,
             coordinator,
             sharded,
-            state: Mutex::new(BatchState {
-                inputs: (0..size).map(|_| None).collect(),
-                outputs: (0..size).map(|_| None).collect(),
-                arrived: 0,
-                active: size,
-                generation: 0,
-            }),
+            state: Mutex::ranked(
+                rank::SERVE_BATCH,
+                "serve.batch",
+                BatchState {
+                    inputs: (0..size).map(|_| None).collect(),
+                    outputs: (0..size).map(|_| None).collect(),
+                    arrived: 0,
+                    active: size,
+                    generation: 0,
+                },
+            ),
             cv: Condvar::new(),
         })
     }
@@ -232,7 +237,7 @@ impl SharedBatch {
             return self.execute(op);
         }
         let key = RendezvousKey { fp: fingerprint(op), kind: op.kind };
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         assert!(st.active > 0, "rendezvous on a batch with no active members");
         assert!(
             st.inputs[slot].is_none(),
@@ -252,7 +257,7 @@ impl SharedBatch {
                 self.cv.notify_all();
                 return mine;
             }
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st);
         }
     }
 
@@ -265,7 +270,7 @@ impl SharedBatch {
     /// independent per-row vec-dots). Idempotent use is the caller's
     /// responsibility: leave once per departing member.
     pub fn leave(&self, slot: usize) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         assert!(st.active > 0, "leave on a batch with no active members");
         if st.inputs[slot].take().is_some() {
             st.arrived -= 1;
@@ -279,7 +284,7 @@ impl SharedBatch {
 
     /// Members still participating (size minus leavers).
     pub fn active(&self) -> usize {
-        self.state.lock().unwrap().active
+        self.state.lock().active
     }
 }
 

@@ -13,11 +13,16 @@
 //! batch's step count and later same-step requests are pulled forward
 //! past differing ones (bounded overtaking; FIFO order is preserved
 //! within each step class).
+//!
+//! The close/drain protocol (accepted work is drained exactly once,
+//! post-close pushes refused, parked workers always woken) is
+//! model-checked over every bounded schedule by
+//! [`crate::check::models::DrainModel`].
 
 use crate::sd::graph::RequestId;
 use crate::util::cancel::CancelToken;
+use crate::util::sync::{lock_or_abort, rank, Condvar, Mutex};
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
 /// One image-generation request.
@@ -107,7 +112,11 @@ impl RequestQueue {
         assert!(capacity >= 1, "queue capacity must be >= 1");
         RequestQueue {
             capacity,
-            state: Mutex::new(QueueState { pending: VecDeque::new(), closed: false }),
+            state: Mutex::ranked(
+                rank::SERVE_QUEUE,
+                "serve.queue",
+                QueueState { pending: VecDeque::new(), closed: false },
+            ),
             cv: Condvar::new(),
         }
     }
@@ -120,7 +129,7 @@ impl RequestQueue {
     /// Enqueue a request, refusing instead of blocking: [`PushError::Full`]
     /// at capacity, [`PushError::Closed`] after [`RequestQueue::close`].
     pub fn try_push(&self, req: ServeRequest) -> Result<(), PushError> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         if st.closed {
             return Err(PushError::Closed);
         }
@@ -144,8 +153,11 @@ impl RequestQueue {
     }
 
     /// Close the queue: workers drain what is left, then see empty pops.
+    /// Runs on the drain path, so a poisoned queue aborts instead of
+    /// cascading a second panic into a hung shutdown (see the poisoning
+    /// policy in [`crate::util::sync`]).
     pub fn close(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_abort(&self.state);
         st.closed = true;
         drop(st);
         self.cv.notify_all();
@@ -153,12 +165,12 @@ impl RequestQueue {
 
     /// True once [`RequestQueue::close`] ran.
     pub fn is_closed(&self) -> bool {
-        self.state.lock().unwrap().closed
+        self.state.lock().closed
     }
 
     /// Requests currently waiting.
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().pending.len()
+        self.state.lock().pending.len()
     }
 
     /// True when no request is waiting.
@@ -173,7 +185,7 @@ impl RequestQueue {
     /// signal.
     pub fn pop_batch(&self, max: usize) -> Vec<ServeRequest> {
         assert!(max >= 1, "micro-batch size must be >= 1");
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         loop {
             if !st.pending.is_empty() {
                 let steps = st.pending.front().expect("non-empty").steps;
@@ -191,7 +203,7 @@ impl RequestQueue {
             if st.closed {
                 return Vec::new();
             }
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st);
         }
     }
 }

@@ -9,8 +9,9 @@ use crate::imax::ImaxConfig;
 use crate::sd::graph::RequestId;
 use crate::sd::pipeline::{to_rgb8, Pipeline, PipelineConfig};
 use crate::util::png::crc32;
+use crate::util::sync::Mutex;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// Serving-side knobs (the pipeline/model side comes from
 /// [`PipelineConfig`]).
@@ -174,12 +175,12 @@ impl ServeHarness {
                     inflight_peak.fetch_max(now, Ordering::Relaxed);
                     let done = self.run_batch(&batch);
                     inflight.fetch_sub(batch.len(), Ordering::Relaxed);
-                    outcomes.lock().unwrap().extend(done);
+                    outcomes.lock().extend(done);
                 });
             }
         });
 
-        let mut outcomes = outcomes.into_inner().unwrap();
+        let mut outcomes = outcomes.into_inner();
         outcomes.sort_by_key(|o| o.id);
         let total_macs = outcomes.iter().map(|o| o.macs).sum();
         ServeReport {
@@ -263,11 +264,11 @@ impl ServeHarness {
                             }
                         }
                     };
-                    outcomes.lock().unwrap().push(outcome);
+                    outcomes.lock().push(outcome);
                 });
             }
         });
-        let mut out = outcomes.into_inner().unwrap();
+        let mut out = outcomes.into_inner();
         out.sort_by_key(|o| o.id);
         out
     }

@@ -44,10 +44,11 @@ pub use runner::{
 };
 
 use crate::serve::{ServeHarness, ServeReport};
+use crate::util::sync::Mutex;
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// How long the accept loop sleeps when no connection is pending.
@@ -129,7 +130,7 @@ fn accept_loop(listener: TcpListener, runner: Arc<Runner>, stop: Arc<AtomicBool>
             Ok((stream, _peer)) => {
                 let runner = Arc::clone(&runner);
                 let h = std::thread::spawn(move || handle_connection(stream, &runner));
-                let mut live = handlers.lock().unwrap();
+                let mut live = handlers.lock();
                 live.retain(|h| !h.is_finished());
                 live.push(h);
             }
@@ -139,7 +140,7 @@ fn accept_loop(listener: TcpListener, runner: Arc<Runner>, stop: Arc<AtomicBool>
             Err(_) => break,
         }
     }
-    for h in handlers.into_inner().unwrap() {
+    for h in handlers.into_inner() {
         let _ = h.join();
     }
 }

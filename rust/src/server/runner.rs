@@ -16,9 +16,10 @@ use crate::serve::{
     PushError, RequestOutcome, RequestQueue, RunnerState, ServeHarness, ServeReport, ServeRequest,
 };
 use crate::util::cancel::CancelToken;
+use crate::util::sync::{lock_or_abort, rank, Mutex};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Seconds a new arrival is predicted to wait before a worker picks it
@@ -161,7 +162,7 @@ impl Runner {
             harness,
             queue,
             config,
-            registry: Mutex::new(HashMap::new()),
+            registry: Mutex::ranked(rank::SERVER_REGISTRY, "server.registry", HashMap::new()),
             next_id: AtomicU64::new(1),
             inflight: AtomicUsize::new(0),
             inflight_peak: AtomicUsize::new(0),
@@ -173,7 +174,7 @@ impl Runner {
             t_start: Instant::now(),
             baseline,
         });
-        let mut workers = runner.workers.lock().unwrap();
+        let mut workers = runner.workers.lock();
         for _ in 0..runner.harness.config.workers {
             let rt = Arc::clone(&runner);
             workers.push(std::thread::spawn(move || rt.worker_loop()));
@@ -249,7 +250,7 @@ impl Runner {
         };
         let req = ServeRequest::new(RequestId(id), prompt.to_string(), seed, steps)
             .with_cancel(cancel.clone());
-        self.registry.lock().unwrap().insert(
+        self.registry.lock().insert(
             id,
             Entry {
                 state: RunnerState::Queued,
@@ -265,13 +266,13 @@ impl Runner {
                 Admission::Created { id }
             }
             Err(PushError::Full { .. }) => {
-                self.registry.lock().unwrap().remove(&id);
+                self.registry.lock().remove(&id);
                 self.rejected.fetch_add(1, Ordering::Relaxed);
                 let hint = self.ewma_batch_seconds().ceil() as u64;
                 Admission::Busy { retry_after: hint.max(1) }
             }
             Err(PushError::Closed) => {
-                self.registry.lock().unwrap().remove(&id);
+                self.registry.lock().remove(&id);
                 Admission::Draining
             }
         }
@@ -279,7 +280,7 @@ impl Runner {
 
     /// Poll one prediction.
     pub fn status(&self, id: u64) -> Option<PredictionStatus> {
-        let reg = self.registry.lock().unwrap();
+        let reg = self.registry.lock();
         reg.get(&id).map(|e| PredictionStatus {
             id,
             state: e.state,
@@ -293,7 +294,7 @@ impl Runner {
     /// still queued flips to `Cancelled` immediately. Returns `false`
     /// for unknown ids.
     pub fn cancel(&self, id: u64) -> bool {
-        let mut reg = self.registry.lock().unwrap();
+        let mut reg = self.registry.lock();
         let Some(e) = reg.get_mut(&id) else {
             return false;
         };
@@ -307,10 +308,13 @@ impl Runner {
     /// Graceful shutdown: stop admitting, drain every queued and
     /// running request, join the workers, then quiesce the lane worker
     /// pool. Returns the aggregate report over the runner's lifetime.
+    /// Drain-path locks abort on poisoning instead of cascading a
+    /// second panic into a hung shutdown (policy in
+    /// [`crate::util::sync`] and `DESIGN.md`).
     pub fn shutdown(&self) -> ServeReport {
         self.draining.store(true, Ordering::Relaxed);
         self.queue.close();
-        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        let handles: Vec<_> = lock_or_abort(&self.workers).drain(..).collect();
         for h in handles {
             h.join().expect("serving worker panicked");
         }
@@ -320,7 +324,7 @@ impl Runner {
 
     fn report(&self) -> ServeReport {
         let ord = Ordering::Relaxed;
-        let reg = self.registry.lock().unwrap();
+        let reg = lock_or_abort(&self.registry);
         let mut outcomes: Vec<RequestOutcome> =
             reg.values().filter_map(|e| e.outcome.clone()).collect();
         drop(reg);
@@ -354,7 +358,7 @@ impl Runner {
             let now = self.inflight.fetch_add(n, Ordering::Relaxed) + n;
             self.inflight_peak.fetch_max(now, Ordering::Relaxed);
             {
-                let mut reg = self.registry.lock().unwrap();
+                let mut reg = self.registry.lock();
                 for req in &batch {
                     if let Some(e) = reg.get_mut(&req.id.0) {
                         // Don't resurrect entries a cancel already
@@ -369,7 +373,7 @@ impl Runner {
             let outcomes = self.harness.run_batch(&batch);
             self.observe_batch_seconds(t0.elapsed().as_secs_f64());
             self.inflight.fetch_sub(n, Ordering::Relaxed);
-            let mut reg = self.registry.lock().unwrap();
+            let mut reg = self.registry.lock();
             for outcome in outcomes {
                 if let Some(e) = reg.get_mut(&outcome.id.0) {
                     e.state = outcome.state;

@@ -65,11 +65,11 @@ mod tests {
 
     // The flag is process-global and tests run concurrently: serialize
     // the tests that mutate it.
-    static FLAG_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    static FLAG_LOCK: crate::util::sync::Mutex<()> = crate::util::sync::Mutex::new(());
 
     #[test]
     fn in_process_request_trips_and_resets() {
-        let _guard = FLAG_LOCK.lock().unwrap();
+        let _guard = FLAG_LOCK.lock();
         reset();
         assert!(!signalled());
         request_shutdown();
@@ -84,7 +84,7 @@ mod tests {
         extern "C" {
             fn raise(signum: i32) -> i32;
         }
-        let _guard = FLAG_LOCK.lock().unwrap();
+        let _guard = FLAG_LOCK.lock();
         install_signal_handlers();
         reset();
         // SAFETY: raising a signal whose handler we just installed; the

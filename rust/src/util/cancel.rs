@@ -14,9 +14,11 @@
 //!
 //! The first cause wins: once a token is cancelled it stays `Cancelled`
 //! even if the deadline later passes, and vice versa — the surfaced
-//! terminal state is stable.
+//! terminal state is stable. The cancel-vs-expire CAS race (exactly one
+//! terminal cause, stable under every interleaving) is model-checked
+//! over every bounded schedule by [`crate::check::models::CancelModel`].
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use crate::util::sync::StateCell;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -34,7 +36,7 @@ const CANCELLED: u8 = 1;
 const EXPIRED: u8 = 2;
 
 struct Inner {
-    state: AtomicU8,
+    state: StateCell,
     deadline: Option<Instant>,
 }
 
@@ -63,7 +65,7 @@ impl CancelToken {
     /// A live token with no deadline (never expires on its own).
     pub fn new() -> CancelToken {
         CancelToken {
-            inner: Arc::new(Inner { state: AtomicU8::new(LIVE), deadline: None }),
+            inner: Arc::new(Inner { state: StateCell::new(LIVE), deadline: None }),
         }
     }
 
@@ -72,7 +74,7 @@ impl CancelToken {
     /// deadline is evaluated lazily at check points — no watcher thread.
     pub fn with_deadline(deadline: Instant) -> CancelToken {
         CancelToken {
-            inner: Arc::new(Inner { state: AtomicU8::new(LIVE), deadline: Some(deadline) }),
+            inner: Arc::new(Inner { state: StateCell::new(LIVE), deadline: Some(deadline) }),
         }
     }
 
@@ -85,26 +87,20 @@ impl CancelToken {
     /// the token out of the live state (first cause wins; a second
     /// cancel or an already-expired token returns `false`).
     pub fn cancel(&self) -> bool {
-        self.inner
-            .state
-            .compare_exchange(LIVE, CANCELLED, Ordering::AcqRel, Ordering::Acquire)
-            .is_ok()
+        self.inner.state.transition(LIVE, CANCELLED)
     }
 
     /// Force the deadline transition now (deadline-watcher seams and
     /// tests). First cause wins, like [`CancelToken::cancel`].
     pub fn expire(&self) -> bool {
-        self.inner
-            .state
-            .compare_exchange(LIVE, EXPIRED, Ordering::AcqRel, Ordering::Acquire)
-            .is_ok()
+        self.inner.state.transition(LIVE, EXPIRED)
     }
 
     /// The cooperative check point: `Ok(())` while live, otherwise the
     /// cause. Evaluates the deadline lazily (transitioning the shared
     /// state so every clone observes the same cause afterwards).
     pub fn check(&self) -> Result<(), CancelCause> {
-        match self.inner.state.load(Ordering::Acquire) {
+        match self.inner.state.load() {
             CANCELLED => return Err(CancelCause::Cancelled),
             EXPIRED => return Err(CancelCause::DeadlineExpired),
             _ => {}
@@ -123,7 +119,7 @@ impl CancelToken {
     /// [`CancelToken::check`] this does **not** evaluate the deadline —
     /// it reports only transitions that already happened.
     pub fn cause(&self) -> Option<CancelCause> {
-        match self.inner.state.load(Ordering::Acquire) {
+        match self.inner.state.load() {
             CANCELLED => Some(CancelCause::Cancelled),
             EXPIRED => Some(CancelCause::DeadlineExpired),
             _ => None,
@@ -132,7 +128,7 @@ impl CancelToken {
 
     /// True while neither cancelled nor expired.
     pub fn is_live(&self) -> bool {
-        self.inner.state.load(Ordering::Acquire) == LIVE
+        self.inner.state.load() == LIVE
     }
 }
 

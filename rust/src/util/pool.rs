@@ -11,13 +11,24 @@
 //!   model").
 //! * [`CompletionSlot`] — a one-shot rendezvous cell a worker fills and a
 //!   caller blocks on; the coordinator parks one per in-flight shard.
+//!   (Defined in [`crate::util::sync`] with the other blocking
+//!   primitives; re-exported here for its long-standing callers.)
 //! * [`parallel_chunks`] — fork-join helper: split an index range over N
 //!   workers with `std::thread::scope`, used by the ggml matmul row loop.
+//!
+//! All blocking synchronization goes through the [`crate::util::sync`]
+//! shim so the `conc-check` feature can witness it; the idle-barrier
+//! protocol (`in_flight` + `done` condvar) is model-checked over every
+//! bounded schedule by [`crate::check::models::PoolIdleModel`].
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
+
+use crate::util::sync::{rank, Condvar, Mutex};
+
+pub use crate::util::sync::CompletionSlot;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -44,11 +55,15 @@ impl ThreadPool {
     pub fn new(n: usize) -> ThreadPool {
         assert!(n >= 1, "pool needs at least one worker");
         let queue = Arc::new(Queue {
-            jobs: Mutex::new(QueueState { pending: VecDeque::new(), shutdown: false }),
+            jobs: Mutex::ranked(
+                rank::POOL_QUEUE,
+                "pool.queue",
+                QueueState { pending: VecDeque::new(), shutdown: false },
+            ),
             cond: Condvar::new(),
         });
         let in_flight = Arc::new(AtomicUsize::new(0));
-        let done = Arc::new((Mutex::new(()), Condvar::new()));
+        let done = Arc::new((Mutex::ranked(rank::POOL_DONE, "pool.done", ()), Condvar::new()));
         let mut workers = Vec::with_capacity(n);
         for idx in 0..n {
             let q = Arc::clone(&queue);
@@ -59,7 +74,7 @@ impl ThreadPool {
                     .name(format!("imax-pool-{idx}"))
                     .spawn(move || loop {
                         let job = {
-                            let mut st = q.jobs.lock().unwrap();
+                            let mut st = q.jobs.lock();
                             loop {
                                 if let Some(j) = st.pending.pop_front() {
                                     break j;
@@ -67,12 +82,20 @@ impl ThreadPool {
                                 if st.shutdown {
                                     return;
                                 }
-                                st = q.cond.wait(st).unwrap();
+                                st = q.cond.wait(st);
                             }
                         };
                         job();
                         if fl.fetch_sub(1, Ordering::AcqRel) == 1 {
-                            let (_l, cv) = &*dn;
+                            // Notify while holding the done lock. An
+                            // unlocked notify can fire in the window
+                            // between `wait_idle` reading `in_flight`
+                            // and parking — a lost wakeup that leaves
+                            // the waiter blocked until the next job
+                            // (PoolIdleModel's `unlocked_notify`
+                            // mutant deadlocks on exactly this).
+                            let (l, cv) = &*dn;
+                            let _idle = l.lock();
                             cv.notify_all();
                         }
                     })
@@ -90,7 +113,7 @@ impl ThreadPool {
     /// Submit a job.
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.in_flight.fetch_add(1, Ordering::AcqRel);
-        let mut st = self.queue.jobs.lock().unwrap();
+        let mut st = self.queue.jobs.lock();
         st.pending.push_back(Box::new(f));
         drop(st);
         self.queue.cond.notify_one();
@@ -99,9 +122,9 @@ impl ThreadPool {
     /// Block until every submitted job has finished.
     pub fn wait_idle(&self) {
         let (lock, cv) = &*self.done;
-        let mut guard = lock.lock().unwrap();
+        let mut guard = lock.lock();
         while self.in_flight.load(Ordering::Acquire) != 0 {
-            guard = cv.wait(guard).unwrap();
+            guard = cv.wait(guard);
         }
         drop(guard);
     }
@@ -110,77 +133,12 @@ impl ThreadPool {
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         {
-            let mut st = self.queue.jobs.lock().unwrap();
+            let mut st = self.queue.jobs.lock();
             st.shutdown = true;
         }
         self.queue.cond.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
-        }
-    }
-}
-
-/// A one-shot completion cell: a producer thread [`fill`](CompletionSlot::fill)s
-/// it exactly once, a consumer [`wait`](CompletionSlot::wait)s until the value
-/// arrives and takes it. Clones share the same cell.
-///
-/// The coordinator parks one slot per in-flight shard: the lane worker fills
-/// the slot with the shard's `(output, phases, cache delta)` and the join
-/// side blocks on the slots **in shard order**, which is what keeps counter
-/// merging deterministic under any thread interleaving.
-///
-/// ```
-/// use imax_sd::util::pool::CompletionSlot;
-///
-/// let slot = CompletionSlot::new();
-/// let producer = slot.clone();
-/// let t = std::thread::spawn(move || producer.fill(6 * 7));
-/// assert_eq!(slot.wait(), 42); // blocks until the producer fills it
-/// t.join().unwrap();
-/// ```
-pub struct CompletionSlot<T> {
-    cell: Arc<(Mutex<Option<T>>, Condvar)>,
-}
-
-impl<T> Clone for CompletionSlot<T> {
-    fn clone(&self) -> Self {
-        CompletionSlot { cell: Arc::clone(&self.cell) }
-    }
-}
-
-impl<T> Default for CompletionSlot<T> {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl<T> CompletionSlot<T> {
-    /// An empty slot.
-    pub fn new() -> CompletionSlot<T> {
-        CompletionSlot { cell: Arc::new((Mutex::new(None), Condvar::new())) }
-    }
-
-    /// Deposit the value and wake the waiter. Filling twice is a bug in
-    /// the producer (the slot is one-shot) and panics.
-    pub fn fill(&self, value: T) {
-        let (lock, cv) = &*self.cell;
-        let mut cell = lock.lock().unwrap();
-        assert!(cell.is_none(), "CompletionSlot filled twice");
-        *cell = Some(value);
-        cv.notify_all();
-    }
-
-    /// Block until the value arrives and take it. A slot that was already
-    /// filled returns immediately — the sequential (pool-less) path fills
-    /// slots inline at submit time and `wait` degrades to a take.
-    pub fn wait(&self) -> T {
-        let (lock, cv) = &*self.cell;
-        let mut cell = lock.lock().unwrap();
-        loop {
-            if let Some(v) = cell.take() {
-                return v;
-            }
-            cell = cv.wait(cell).unwrap();
         }
     }
 }
@@ -306,30 +264,17 @@ mod tests {
     }
 
     #[test]
-    fn completion_slot_passes_value_across_threads() {
-        let slot = CompletionSlot::new();
-        let producer = slot.clone();
-        let t = std::thread::spawn(move || {
-            std::thread::sleep(std::time::Duration::from_millis(5));
-            producer.fill(vec![1u8, 2, 3]);
-        });
-        assert_eq!(slot.wait(), vec![1, 2, 3]);
-        t.join().unwrap();
-    }
-
-    #[test]
-    fn completion_slot_prefilled_returns_immediately() {
-        let slot = CompletionSlot::new();
-        slot.fill(7u32);
-        assert_eq!(slot.wait(), 7);
-    }
-
-    #[test]
-    #[should_panic(expected = "filled twice")]
-    fn completion_slot_rejects_double_fill() {
-        let slot = CompletionSlot::new();
-        slot.fill(1u8);
-        slot.fill(2u8);
+    fn wait_idle_races_the_last_completion() {
+        // Regression stress for the lost-wakeup fix: a single tiny job
+        // per round maximizes the window between the worker's decrement
+        // and the waiter's park. Before the locked notify, this test
+        // could hang; the interleaving itself is proven impossible by
+        // check::models::PoolIdleModel.
+        let pool = ThreadPool::new(1);
+        for _ in 0..200 {
+            pool.submit(|| {});
+            pool.wait_idle();
+        }
     }
 
     #[test]
@@ -342,11 +287,11 @@ mod tests {
         for seq in 0..60u64 {
             let lane = (seq % 3) as usize;
             let log = Arc::clone(&logs[lane]);
-            pool.submit_to(lane, move || log.lock().unwrap().push(seq));
+            pool.submit_to(lane, move || log.lock().push(seq));
         }
         pool.wait_idle();
         for (lane, log) in logs.iter().enumerate() {
-            let got = log.lock().unwrap().clone();
+            let got = log.lock().clone();
             let want: Vec<u64> = (0..60).filter(|s| (s % 3) as usize == lane).collect();
             assert_eq!(got, want, "lane {lane} ran out of order");
         }

@@ -1,0 +1,534 @@
+//! The project's blocking-synchronization primitives: drop-in
+//! [`Mutex`]/[`Condvar`]/[`CompletionSlot`] wrappers that every module
+//! outside this file must use instead of `std::sync` (enforced by the
+//! `raw-sync-primitive` rule in [`crate::check::lint`]).
+//!
+//! In the default build the wrappers are transparent shells over the
+//! `std` types: no extra state, no extra branches on the lock path, and
+//! the poison `Result` is collapsed at the shim boundary so call sites
+//! never sprinkle `.unwrap()` (the `lock-poison-unwrap` lint rule bans
+//! that everywhere). Under the **`conc-check`** feature every
+//! acquire, release, condvar wait and notify additionally routes
+//! through the process-global [`crate::check::lockorder`] witness,
+//! which records the held-locks graph, fails on any potential-deadlock
+//! edge pair (a cycle in acquisition order) and checks the declared
+//! lock hierarchy below. `cargo test --features conc-check` therefore
+//! turns the whole test suite into a lock-order regression harness.
+//!
+//! # Lock hierarchy
+//!
+//! Every long-lived lock in the system declares a **rank** from
+//! [`rank`]; a thread may only acquire a lock of *strictly greater*
+//! rank than any ranked lock it already holds (unranked ad-hoc locks,
+//! rank 0, are exempt from the rank rule but still participate in
+//! cycle detection). The full catalog — who holds what across which
+//! calls — lives in `DESIGN.md`, "Lock hierarchy & invariants catalog".
+//!
+//! # Poisoning policy
+//!
+//! A poisoned lock means a thread panicked while holding it and the
+//! guarded invariants are unknown. The project policy (see `DESIGN.md`):
+//!
+//! * [`Mutex::lock`] **panics** with the lock's name — the default for
+//!   coordinator/serve internals, where the panic propagates into the
+//!   owning test or scoped thread and surfaces the *original* failure.
+//! * [`Mutex::lock_or_abort`] **aborts the process** — the rule for the
+//!   server's request and drain paths, where a cascade of secondary
+//!   poison panics would otherwise wedge the graceful drain (workers
+//!   die one by one, `shutdown` hangs on a join) while the process
+//!   keeps accepting traffic against corrupt state. An orchestrator
+//!   restart is strictly better than either.
+
+use std::sync::Arc;
+
+#[cfg(feature = "conc-check")]
+use crate::check::lockorder::{self, LockTag};
+#[cfg(feature = "conc-check")]
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// The declared lock hierarchy, lowest-to-highest. Acquire downward in
+/// this list and the order is provably cycle-free; the conc-check
+/// witness enforces strict rank increase on nested acquisition.
+pub mod rank {
+    /// Ad-hoc locks with no hierarchy position (exempt from the rank
+    /// rule, still cycle-checked).
+    pub const UNRANKED: u16 = 0;
+    /// `server::Runner` prediction registry.
+    pub const SERVER_REGISTRY: u16 = 10;
+    /// `serve::RequestQueue` state.
+    pub const SERVE_QUEUE: u16 = 20;
+    /// `serve::SharedBatch` rendezvous state (held across the merged
+    /// submission the round leader executes).
+    pub const SERVE_BATCH: u16 = 30;
+    /// `Coordinator` weight→lane affinity map.
+    pub const COORD_AFFINITY: u16 = 40;
+    /// One simulated lane's `LaneSim` (cache LRU, CONF history,
+    /// cycle/byte ledgers).
+    pub const IMAX_LANE: u16 = 50;
+    /// A `ThreadPool` job queue (one per lane worker).
+    pub const POOL_QUEUE: u16 = 60;
+    /// A `ThreadPool`'s idle-barrier lock (`wait_idle`).
+    pub const POOL_DONE: u16 = 70;
+    /// A `CompletionSlot` cell — always a leaf.
+    pub const SLOT: u16 = 80;
+}
+
+#[cfg(feature = "conc-check")]
+struct LockMeta {
+    id: AtomicUsize,
+    rank: u16,
+    name: &'static str,
+}
+
+#[cfg(feature = "conc-check")]
+impl LockMeta {
+    fn tag(&self) -> LockTag {
+        let mut id = self.id.load(Ordering::Relaxed);
+        if id == 0 {
+            // Lazy identity so `new` stays const: first-use mint, and a
+            // lost race just burns one id.
+            let fresh = lockorder::mint_lock_id();
+            match self.id.compare_exchange(0, fresh, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => id = fresh,
+                Err(cur) => id = cur,
+            }
+        }
+        LockTag { id, rank: self.rank, name: self.name }
+    }
+}
+
+/// Mutual exclusion with project poisoning policy and (under
+/// `conc-check`) lock-order witnessing. See the module docs.
+pub struct Mutex<T> {
+    inner: std::sync::Mutex<T>,
+    #[cfg(feature = "conc-check")]
+    meta: LockMeta,
+}
+
+impl<T> Mutex<T> {
+    /// An unranked mutex (rank 0: exempt from the hierarchy rule,
+    /// still cycle-checked under `conc-check`).
+    pub const fn new(value: T) -> Mutex<T> {
+        Mutex::ranked(rank::UNRANKED, "mutex", value)
+    }
+
+    /// A mutex at a declared position in the [`rank`] hierarchy.
+    /// `name` labels witness reports and poison aborts.
+    pub const fn ranked(rank: u16, name: &'static str, value: T) -> Mutex<T> {
+        #[cfg(not(feature = "conc-check"))]
+        let _ = (rank, name); // metadata only exists under conc-check
+        Mutex {
+            inner: std::sync::Mutex::new(value),
+            #[cfg(feature = "conc-check")]
+            meta: LockMeta { id: AtomicUsize::new(0), rank, name },
+        }
+    }
+
+    /// Acquire. Panics (with the lock's name) if the lock is poisoned —
+    /// the default policy outside the server's request/drain paths.
+    #[cfg(not(feature = "conc-check"))]
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        match self.inner.lock() {
+            Ok(g) => MutexGuard(g),
+            Err(_) => panic!("poisoned mutex"),
+        }
+    }
+
+    /// Acquire. Panics (with the lock's name) if the lock is poisoned —
+    /// the default policy outside the server's request/drain paths.
+    #[cfg(feature = "conc-check")]
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        let tag = self.meta.tag();
+        lockorder::global().acquire(tag);
+        match self.inner.lock() {
+            Ok(g) => MutexGuard { inner: Some(g), meta: &self.meta },
+            Err(_) => {
+                lockorder::global().release(tag.id);
+                panic!("poisoned mutex: {}", self.meta.name)
+            }
+        }
+    }
+
+    /// Acquire, or **abort the process** if the lock is poisoned — the
+    /// mandated form in `server/` request and drain paths (see the
+    /// `lock-poison-unwrap` lint rule), where secondary poison panics
+    /// would cascade into a hung drain. See the module's poisoning
+    /// policy notes.
+    pub fn lock_or_abort(&self) -> MutexGuard<'_, T> {
+        #[cfg(feature = "conc-check")]
+        {
+            let tag = self.meta.tag();
+            lockorder::global().acquire(tag);
+            match self.inner.lock() {
+                Ok(g) => return MutexGuard { inner: Some(g), meta: &self.meta },
+                Err(_) => {
+                    eprintln!(
+                        "fatal: poisoned mutex `{}` on a lifecycle path; aborting",
+                        self.meta.name
+                    );
+                    std::process::abort();
+                }
+            }
+        }
+        #[cfg(not(feature = "conc-check"))]
+        match self.inner.lock() {
+            Ok(g) => MutexGuard(g),
+            Err(_) => {
+                eprintln!("fatal: poisoned mutex on a lifecycle path; aborting");
+                std::process::abort();
+            }
+        }
+    }
+
+    /// Consume the mutex and return the protected value. Panics if a
+    /// holder panicked (same policy as [`Mutex::lock`]).
+    pub fn into_inner(self) -> T {
+        match self.inner.into_inner() {
+            Ok(v) => v,
+            Err(_) => panic!("poisoned mutex at into_inner"),
+        }
+    }
+}
+
+/// Free-function spelling of [`Mutex::lock_or_abort`] for call sites
+/// that read better with the policy name up front.
+pub fn lock_or_abort<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock_or_abort()
+}
+
+/// RAII guard for [`Mutex`]. In the default build this is a transparent
+/// newtype over `std::sync::MutexGuard` (no `Drop` impl of its own);
+/// under `conc-check` dropping it reports the release to the witness.
+#[cfg(not(feature = "conc-check"))]
+pub struct MutexGuard<'a, T>(std::sync::MutexGuard<'a, T>);
+
+/// RAII guard for [`Mutex`]. In the default build this is a transparent
+/// newtype over `std::sync::MutexGuard` (no `Drop` impl of its own);
+/// under `conc-check` dropping it reports the release to the witness.
+#[cfg(feature = "conc-check")]
+pub struct MutexGuard<'a, T> {
+    /// `Some` while held; taken by [`Condvar::wait`] (which reports the
+    /// release itself) so `Drop` only reports real releases.
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+    meta: &'a LockMeta,
+}
+
+#[cfg(feature = "conc-check")]
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.inner.is_some() {
+            lockorder::global().release(self.meta.tag().id);
+        }
+    }
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        #[cfg(not(feature = "conc-check"))]
+        {
+            &self.0
+        }
+        #[cfg(feature = "conc-check")]
+        {
+            self.inner.as_ref().expect("guard present outside wait")
+        }
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        #[cfg(not(feature = "conc-check"))]
+        {
+            &mut self.0
+        }
+        #[cfg(feature = "conc-check")]
+        {
+            self.inner.as_mut().expect("guard present outside wait")
+        }
+    }
+}
+
+/// Condition variable paired with [`Mutex`]. Project rule (enforced by
+/// the `condvar-wait-loop` lint): every `wait` sits inside a
+/// `loop`/`while` that re-checks its predicate under the lock —
+/// wakeups may be spurious and `notify_all` wakes non-targets.
+pub struct Condvar {
+    inner: std::sync::Condvar,
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Condvar::new()
+    }
+}
+
+impl Condvar {
+    /// A fresh condition variable.
+    pub const fn new() -> Condvar {
+        Condvar { inner: std::sync::Condvar::new() }
+    }
+
+    /// Atomically release the guard's lock and block until notified;
+    /// reacquires before returning. Panics on poison (a peer panicked
+    /// while we slept).
+    #[cfg(not(feature = "conc-check"))]
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        match self.inner.wait(guard.0) {
+            Ok(g) => MutexGuard(g),
+            Err(_) => panic!("poisoned mutex at condvar wakeup"),
+        }
+    }
+
+    /// Atomically release the guard's lock and block until notified;
+    /// reacquires before returning. Panics on poison (a peer panicked
+    /// while we slept).
+    #[cfg(feature = "conc-check")]
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        let meta = guard.meta;
+        let tag = meta.tag();
+        // The wait releases the lock: tell the witness so the blocked
+        // interval doesn't hold a phantom edge source.
+        lockorder::global().release(tag.id);
+        let inner = guard.inner.take().expect("guard held before wait");
+        drop(guard); // inner already taken: Drop reports nothing
+        let inner = match self.inner.wait(inner) {
+            Ok(g) => g,
+            Err(_) => panic!("poisoned mutex at condvar wakeup: {}", meta.name),
+        };
+        lockorder::global().acquire(tag);
+        MutexGuard { inner: Some(inner), meta }
+    }
+
+    /// Wake one waiter.
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    /// Wake every waiter.
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+}
+
+/// A one-shot completion cell: a producer thread
+/// [`fill`](CompletionSlot::fill)s it exactly once, a consumer
+/// [`wait`](CompletionSlot::wait)s until the value arrives and takes
+/// it. Clones share the same cell.
+///
+/// The coordinator parks one slot per in-flight shard: the lane worker
+/// fills the slot with the shard's `(output, phases, cache delta)` and
+/// the join side blocks on the slots **in shard order**, which is what
+/// keeps counter merging deterministic under any thread interleaving.
+/// The submit/sync protocol (including out-of-order sync) is
+/// model-checked over every bounded schedule by
+/// [`crate::check::models::SlotModel`].
+///
+/// ```
+/// use imax_sd::util::sync::CompletionSlot;
+///
+/// let slot = CompletionSlot::new();
+/// let producer = slot.clone();
+/// let t = std::thread::spawn(move || producer.fill(6 * 7));
+/// assert_eq!(slot.wait(), 42); // blocks until the producer fills it
+/// t.join().unwrap();
+/// ```
+pub struct CompletionSlot<T> {
+    cell: Arc<Cell<T>>,
+}
+
+struct Cell<T> {
+    value: Mutex<Option<T>>,
+    cv: Condvar,
+}
+
+impl<T> Clone for CompletionSlot<T> {
+    fn clone(&self) -> Self {
+        CompletionSlot { cell: Arc::clone(&self.cell) }
+    }
+}
+
+impl<T> Default for CompletionSlot<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> CompletionSlot<T> {
+    /// An empty slot.
+    pub fn new() -> CompletionSlot<T> {
+        CompletionSlot {
+            cell: Arc::new(Cell {
+                value: Mutex::ranked(rank::SLOT, "sync.slot", None),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Deposit the value and wake the waiter. Filling twice is a bug in
+    /// the producer (the slot is one-shot) and panics.
+    pub fn fill(&self, value: T) {
+        let mut cell = self.cell.value.lock();
+        assert!(cell.is_none(), "CompletionSlot filled twice");
+        *cell = Some(value);
+        // Notify while still holding the lock: a waiter is then either
+        // before its predicate check (and will see the value) or parked
+        // (and gets the wakeup) — never between the two.
+        self.cell.cv.notify_all();
+    }
+
+    /// Block until the value arrives and take it. A slot that was
+    /// already filled returns immediately — the sequential (pool-less)
+    /// path fills slots inline at submit time and `wait` degrades to a
+    /// take.
+    pub fn wait(&self) -> T {
+        let mut cell = self.cell.value.lock();
+        loop {
+            if let Some(v) = cell.take() {
+                return v;
+            }
+            cell = self.cell.cv.wait(cell);
+        }
+    }
+}
+
+/// A one-byte first-cause-wins state cell — the single compare-exchange
+/// primitive in the codebase, kept here so the raw-atomic protocol has
+/// one audited home ([`crate::util::cancel::CancelToken`] is its only
+/// production user; [`crate::check::models::CancelModel`] proves the
+/// exactly-one-terminal-cause property over every bounded schedule).
+pub struct StateCell {
+    bits: std::sync::atomic::AtomicU8,
+}
+
+impl StateCell {
+    /// A cell holding `initial`.
+    pub const fn new(initial: u8) -> StateCell {
+        StateCell { bits: std::sync::atomic::AtomicU8::new(initial) }
+    }
+
+    /// Current state (acquire ordering: observations of the terminal
+    /// state happen-after the transition that installed it).
+    pub fn load(&self) -> u8 {
+        self.bits.load(std::sync::atomic::Ordering::Acquire)
+    }
+
+    /// One-shot transition `from → to`; returns whether **this call**
+    /// performed it. A lost race leaves the winner's value in place —
+    /// first cause wins, later transitions from the same `from` fail.
+    pub fn transition(&self, from: u8, to: u8) -> bool {
+        self.bits
+            .compare_exchange(
+                from,
+                to,
+                std::sync::atomic::Ordering::AcqRel,
+                std::sync::atomic::Ordering::Acquire,
+            )
+            .is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mutex_shim_locks_and_releases() {
+        let m = Mutex::new(1u32);
+        {
+            let mut g = m.lock();
+            *g += 1;
+        }
+        assert_eq!(*m.lock(), 2);
+        assert_eq!(m.into_inner(), 2);
+    }
+
+    #[test]
+    fn ranked_mutex_is_const_constructible() {
+        static GLOBAL: Mutex<u64> = Mutex::ranked(rank::UNRANKED, "test.static", 7);
+        assert_eq!(*GLOBAL.lock(), 7);
+    }
+
+    #[test]
+    fn lock_or_abort_behaves_like_lock_when_healthy() {
+        let m = Mutex::ranked(rank::SERVER_REGISTRY, "test.registry", vec![1, 2]);
+        lock_or_abort(&m).push(3);
+        assert_eq!(m.lock_or_abort().len(), 3);
+    }
+
+    #[test]
+    fn condvar_wait_reacquires_with_state_visible() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let t = std::thread::spawn(move || {
+            let (m, cv) = &*p2;
+            let mut ready = m.lock();
+            *ready = true;
+            cv.notify_all();
+            drop(ready);
+        });
+        let (m, cv) = &*pair;
+        let mut ready = m.lock();
+        while !*ready {
+            ready = cv.wait(ready);
+        }
+        drop(ready);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn poisoned_lock_panics_with_policy_message() {
+        let m = Arc::new(Mutex::new(0u8));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison it");
+        })
+        .join();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = m.lock();
+        }))
+        .expect_err("lock on a poisoned mutex must panic");
+        let msg = err
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| err.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("poisoned mutex"), "got: {msg}");
+    }
+
+    #[test]
+    fn state_cell_first_cause_wins() {
+        let c = StateCell::new(0);
+        assert!(c.transition(0, 1));
+        assert!(!c.transition(0, 2), "second cause loses");
+        assert_eq!(c.load(), 1);
+    }
+
+    #[test]
+    fn completion_slot_passes_value_across_threads() {
+        let slot = CompletionSlot::new();
+        let producer = slot.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            producer.fill(vec![1u8, 2, 3]);
+        });
+        assert_eq!(slot.wait(), vec![1, 2, 3]);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn completion_slot_prefilled_returns_immediately() {
+        let slot = CompletionSlot::new();
+        slot.fill(7u32);
+        assert_eq!(slot.wait(), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "filled twice")]
+    fn completion_slot_rejects_double_fill() {
+        let slot = CompletionSlot::new();
+        slot.fill(1u8);
+        slot.fill(2u8);
+    }
+}

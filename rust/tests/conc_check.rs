@@ -1,0 +1,212 @@
+//! Concurrency-correctness sweep: the deterministic interleaving
+//! explorer over every protocol model, with **pinned, exact explored-
+//! schedule counts**.
+//!
+//! The explorer is deterministic (ascending thread order, sorted sleep
+//! sets, no randomness), so the number of terminal schedules of a model
+//! under a given preemption bound is a reproducible constant. The
+//! constants below are mirrored verbatim in
+//! `python/replica/conc_check_replica.py`, an independent Python
+//! implementation of the same search and the same models: a drift in
+//! either implementation — a changed model step, a different sleep-set
+//! wake rule, an off-by-one in preemption accounting — fails one
+//! side's CI.
+//!
+//! Three layers of claims:
+//!
+//! 1. **Clean sweeps** — every real protocol model is deadlock-free,
+//!    safety-clean and *schedule-invariant* (≤ 1 distinct result
+//!    string) at every bound, including the unbounded exhaustive
+//!    search, with the pinned schedule count.
+//! 2. **Mutant convictions** — re-introducing a specific bug class
+//!    (dropped notify, inverted lock order, missing quorum re-check,
+//!    notify outside the mutex) is caught with a concrete deadlocking
+//!    schedule, at preemption bound ≤ 2.
+//! 3. **Witness convictions** — the runtime lock-order witness convicts
+//!    an inverted acquisition order from a single sequential run, no
+//!    deadlock needed.
+
+use imax_sd::check::lockorder::{current_thread_key, LockOrderWitness, LockTag};
+use imax_sd::check::models::{
+    CancelModel, DrainModel, PoolIdleModel, RendezvousModel, SlotModel, TwoLockModel,
+};
+use imax_sd::check::sched::{explore, Config, Model, Report};
+
+/// Bounds swept by every clean-model test; `None` = unbounded.
+const BOUNDS: [Option<usize>; 5] = [Some(0), Some(1), Some(2), Some(3), None];
+
+fn config(bound: Option<usize>) -> Config {
+    match bound {
+        Some(b) => Config::bounded(b),
+        None => Config::exhaustive(),
+    }
+}
+
+/// Sweep a clean model across all bounds, asserting cleanliness and the
+/// pinned schedule count per bound.
+fn assert_clean_sweep<M: Model>(name: &str, mk: impl Fn() -> M, pinned: [u64; 5]) {
+    for (bound, want) in BOUNDS.iter().zip(pinned) {
+        let r = explore(&mk(), &config(*bound));
+        assert!(
+            r.is_clean(),
+            "{name} bound={bound:?} not clean: deadlocks={} violations={:?} results={:?}",
+            r.deadlocks,
+            r.violations,
+            r.results
+        );
+        assert!(!r.truncated, "{name} bound={bound:?} hit a search cap");
+        assert_eq!(
+            r.schedules, want,
+            "{name} bound={bound:?}: {} schedules, pinned {want} \
+             (update BOTH this constant and conc_check_replica.py)",
+            r.schedules
+        );
+    }
+}
+
+#[test]
+fn cancel_model_clean_and_pinned() {
+    assert_clean_sweep("cancel", CancelModel::new, [6, 12, 12, 12, 12]);
+}
+
+#[test]
+fn cancel_model_has_exactly_one_terminal_cause_everywhere() {
+    // The satellite claim for util/cancel.rs: over *every* schedule of
+    // cancel() racing expire() under an observer, exactly one CAS wins
+    // and the observed cause never flips. Schedule invariance collapses
+    // all 12 exhaustive schedules to the single result "winners=1".
+    let r = explore(&CancelModel::new(), &Config::exhaustive());
+    assert!(r.is_clean(), "{:?}", r.violations);
+    assert_eq!(r.results.len(), 1);
+    assert_eq!(r.results.iter().next().unwrap(), "winners=1");
+}
+
+#[test]
+fn slot_model_clean_and_pinned() {
+    assert_clean_sweep("slot", || SlotModel::new(false), [4, 4, 4, 4, 4]);
+    let r = explore(&SlotModel::new(false), &Config::exhaustive());
+    assert_eq!(r.results.iter().next().unwrap(), "got1=20 got0=10");
+}
+
+#[test]
+fn twolock_model_clean_and_pinned() {
+    assert_clean_sweep("twolock", || TwoLockModel::new(false), [2, 2, 2, 2, 2]);
+}
+
+#[test]
+fn rendezvous_model_clean_and_pinned() {
+    assert_clean_sweep(
+        "rendezvous",
+        || RendezvousModel::new(false, false),
+        [10, 10, 10, 10, 10],
+    );
+    // Merged output is schedule-invariant: both members see staged 1+2.
+    let r = explore(&RendezvousModel::new(false, false), &Config::exhaustive());
+    assert_eq!(r.results.iter().next().unwrap(), "gen=1 out=3,3 merged=3");
+}
+
+#[test]
+fn drain_model_clean_and_pinned() {
+    // The only model where the bound actually cuts schedules — its
+    // deadlock-free claim needs (and gets) the full 40-schedule
+    // exhaustive search.
+    assert_clean_sweep("drain", || DrainModel::new(false), [8, 26, 38, 40, 40]);
+}
+
+#[test]
+fn pool_idle_model_clean_and_pinned() {
+    assert_clean_sweep("pool_idle", || PoolIdleModel::new(false), [2, 3, 3, 3, 3]);
+}
+
+// ---------------------------------------------------------------------------
+// Mutant convictions: (schedules, deadlocks) at preemption bound 2,
+// pinned against the replica.
+// ---------------------------------------------------------------------------
+
+fn assert_convicted<M: Model>(name: &str, model: M, pinned: (u64, u64)) -> Report {
+    let r = explore(&model, &Config::bounded(2));
+    assert!(r.deadlocks > 0, "{name}: mutant must deadlock: {:?}", r.violations);
+    assert_eq!((r.schedules, r.deadlocks), pinned, "{name}: counts drifted");
+    // Every conviction names the exact schedule that got stuck.
+    assert!(
+        r.violations.iter().all(|v| v.contains("deadlock after [")),
+        "{name}: conviction without a schedule: {:?}",
+        r.violations
+    );
+    r
+}
+
+#[test]
+fn dropped_fill_notify_is_convicted() {
+    assert_convicted("slot_drop_notify", SlotModel::new(true), (3, 2));
+}
+
+#[test]
+fn inverted_lock_order_is_convicted() {
+    let r = assert_convicted("twolock_inverted", TwoLockModel::new(true), (3, 1));
+    // The classic AB/BA interleaving: T0 takes A, T1 takes B, both stuck.
+    assert!(r.violations[0].contains("T0 T1"), "{:?}", r.violations);
+}
+
+#[test]
+fn dropped_leave_broadcast_is_convicted() {
+    assert_convicted(
+        "rendezvous_drop_notify",
+        RendezvousModel::new(true, false),
+        (6, 2),
+    );
+}
+
+#[test]
+fn missing_quorum_recheck_is_convicted() {
+    assert_convicted(
+        "rendezvous_no_requeue",
+        RendezvousModel::new(false, true),
+        (10, 4),
+    );
+}
+
+#[test]
+fn dropped_close_broadcast_is_convicted() {
+    assert_convicted("drain_drop_notify", DrainModel::new(true), (34, 9));
+}
+
+#[test]
+fn unlocked_notify_lost_wakeup_is_convicted() {
+    // The bug class this PR fixed in ThreadPool::wait_idle: the worker
+    // broadcast outside the done mutex, which can fire between the
+    // waiter's counter read and its park. One preemption suffices.
+    let r = assert_convicted("pool_unlocked_notify", PoolIdleModel::new(true), (3, 1));
+    assert!(r.violations[0].contains("T1"), "the waiter is the stuck thread");
+    let fixed = explore(&PoolIdleModel::new(false), &Config::exhaustive());
+    assert!(fixed.is_clean(), "locked notify closes the window: {:?}", fixed.violations);
+}
+
+// ---------------------------------------------------------------------------
+// Lock-order witness: convicts inversions from one sequential run.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn witness_convicts_the_twolock_mutant_without_a_deadlock() {
+    // The explorer needs the unlucky schedule; the witness only needs
+    // both orders to *happen* once each, in any schedule at all.
+    let w = LockOrderWitness::new(false);
+    let me = current_thread_key();
+    let a = LockTag { id: 1, rank: 0, name: "A" };
+    let b = LockTag { id: 2, rank: 0, name: "B" };
+    // Thread 0's order: A then B (completes fine).
+    w.acquire_as(me, a);
+    w.acquire_as(me, b);
+    w.release_as(me, b.id);
+    w.release_as(me, a.id);
+    // Thread 1's inverted order: B then A (also completes fine).
+    w.acquire_as(me, b);
+    w.acquire_as(me, a);
+    w.release_as(me, a.id);
+    w.release_as(me, b.id);
+    let v = w.violations();
+    assert!(
+        v.iter().any(|m| m.contains("cycle")),
+        "witness must report the A/B cycle: {v:?}"
+    );
+}
