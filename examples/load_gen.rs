@@ -15,19 +15,25 @@
 //!    process for a queue estimator).
 //! 4. **mixed** — step counts drawn from {1, 1, 1, 2, 4}, exercising
 //!    the step-homogeneous batcher under heterogeneous work.
+//! 5. **webhook** — predictions registering a callback URL against a
+//!    fault-injecting loopback receiver (a scripted 503 forces the
+//!    retry/backoff path); after the drain, deliveries must equal the
+//!    admitted terminal predictions exactly, with zero dead letters.
 //!
 //! Offered loads and SLOs scale from the *measured* EWMA service time,
 //! so the shedding/tail assertions hold on fast and slow machines
-//! alike. Emits `BENCH_serve_http.json`, one record per phase.
+//! alike — and the measured service time also seeds the runner's
+//! cold-start admission prior. Emits `BENCH_serve_http.json`, one
+//! record per phase plus the webhook delivery counters.
 //!
 //! `--smoke` shrinks every phase for CI and adds a cancellation
 //! round-trip plus a signal-driven graceful shutdown check.
 
 use imax_sd::sd::pipeline::{Backend, PipelineConfig};
 use imax_sd::sd::QuantModel;
-use imax_sd::serve::{RunnerState, ServeConfig, ServeHarness};
+use imax_sd::serve::{RunnerState, ServeConfig, ServeHarness, WebhookStats};
 use imax_sd::server::http::http_call;
-use imax_sd::server::{shutdown, Json, RunnerConfig, Server};
+use imax_sd::server::{shutdown, Fault, FaultReceiver, Json, RunnerConfig, Server, WebhookConfig};
 use imax_sd::util::rng::Xoshiro256pp;
 use imax_sd::util::stats::percentile;
 use imax_sd::util::tables::Table;
@@ -83,13 +89,24 @@ impl PhaseRecord {
     }
 }
 
-/// POST one prediction and poll it to a terminal state.
-fn submit_and_wait(addr: &str, prompt: &str, seed: u64, steps: usize) -> Outcome {
-    let body = Json::obj(vec![
+/// POST one prediction and poll it to a terminal state; `webhook`
+/// additionally registers a completion callback URL.
+fn submit_and_wait(
+    addr: &str,
+    prompt: &str,
+    seed: u64,
+    steps: usize,
+    webhook: Option<&str>,
+) -> Outcome {
+    let mut fields = vec![
         ("prompt", Json::Str(prompt.into())),
         ("seed", Json::Num(seed as f64)),
         ("steps", Json::Num(steps as f64)),
-    ]);
+    ];
+    if let Some(url) = webhook {
+        fields.push(("webhook", Json::Str(url.into())));
+    }
+    let body = Json::obj(fields);
     let t0 = Instant::now();
     let Ok(created) = http_call(addr, "POST", "/predictions", Some(&body)) else {
         return Outcome::Error;
@@ -135,14 +152,16 @@ fn run_phase(
     gaps: &[Duration],
     steps: &[usize],
     slo_seconds: f64,
+    webhook: Option<&str>,
 ) -> PhaseRecord {
     let mut clients = Vec::new();
     for (i, gap) in gaps.iter().enumerate() {
         let addr = addr.to_string();
         let step_count = steps[i % steps.len()];
         let prompt = format!("load-gen request {i}");
+        let webhook = webhook.map(str::to_string);
         clients.push(std::thread::spawn(move || {
-            submit_and_wait(&addr, &prompt, 1000 + i as u64, step_count)
+            submit_and_wait(&addr, &prompt, 1000 + i as u64, step_count, webhook.as_deref())
         }));
         std::thread::sleep(*gap);
     }
@@ -161,7 +180,9 @@ fn run_phase(
             Outcome::Error => errors += 1,
         }
     }
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN latency (impossible today, but Instant math has
+    // betrayed better programs) must not panic the whole run.
+    latencies.sort_by(f64::total_cmp);
     let (p50, p99) = if latencies.is_empty() {
         (0.0, 0.0)
     } else {
@@ -217,12 +238,35 @@ fn smoke_cancel_round_trip(addr: &str) {
     panic!("cancelled request never reached a terminal state");
 }
 
-fn emit_json(records: &[PhaseRecord], service_seconds: f64, capacity_rps: f64) {
+fn webhook_json(wh: &WebhookStats) -> Json {
+    let mut fields = vec![
+        ("enqueued", Json::Num(wh.enqueued as f64)),
+        ("attempts", Json::Num(wh.attempts as f64)),
+        ("delivered", Json::Num(wh.delivered as f64)),
+        ("retries", Json::Num(wh.retries as f64)),
+        ("dead_lettered", Json::Num(wh.dead_lettered as f64)),
+        ("overflowed", Json::Num(wh.overflowed as f64)),
+    ];
+    if let Some(lat) = wh.latency_summary() {
+        fields.push((
+            "delivery_latency_seconds",
+            Json::obj(vec![
+                ("p50", Json::Num(lat.median)),
+                ("p95", Json::Num(lat.p95)),
+                ("p99", Json::Num(lat.p99)),
+            ]),
+        ));
+    }
+    Json::obj(fields)
+}
+
+fn emit_json(records: &[PhaseRecord], service_seconds: f64, capacity_rps: f64, wh: &WebhookStats) {
     let body = Json::obj(vec![
         ("bench", Json::Str("serve_http".into())),
         ("service_seconds_ewma", Json::Num(service_seconds)),
         ("capacity_rps", Json::Num(capacity_rps)),
         ("phases", Json::Arr(records.iter().map(PhaseRecord::json).collect())),
+        ("webhook", webhook_json(wh)),
     ]);
     let path = "BENCH_serve_http.json";
     std::fs::write(path, body.render() + "\n").expect("write bench json");
@@ -257,13 +301,18 @@ fn main() {
     let probe = Server::start(
         "127.0.0.1:0",
         harness,
-        RunnerConfig { slo_seconds: f64::INFINITY, default_steps: 1, max_steps: 8 },
+        RunnerConfig {
+            slo_seconds: f64::INFINITY,
+            default_steps: 1,
+            max_steps: 8,
+            ..RunnerConfig::default()
+        },
     )
     .expect("bind probe server");
     let probe_addr = probe.addr().to_string();
     let n_base = if smoke { 2 } else { 4 };
     for i in 0..n_base {
-        match submit_and_wait(&probe_addr, &format!("baseline {i}"), i as u64, 1) {
+        match submit_and_wait(&probe_addr, &format!("baseline {i}"), i as u64, 1, None) {
             Outcome::Finished { .. } => {}
             _ => panic!("baseline request failed"),
         }
@@ -307,7 +356,23 @@ fn main() {
     let server = Server::start(
         "127.0.0.1:0",
         harness,
-        RunnerConfig { slo_seconds: slo_admit, default_steps: 1, max_steps: 8 },
+        RunnerConfig {
+            slo_seconds: slo_admit,
+            default_steps: 1,
+            max_steps: 8,
+            // The probe measured the real service time: use it as the
+            // cold-start admission prior instead of the static default.
+            cold_start_prior_seconds: service_seconds,
+            // Fast schedule against a loopback receiver (the pinned
+            // smoke vectors in `backoff_schedule_is_pinned` use these).
+            webhook: WebhookConfig {
+                base_backoff_ms: 10,
+                max_backoff_ms: 50,
+                jitter_seed: 7,
+                max_attempts: 3,
+                ..WebhookConfig::default()
+            },
+        },
     )
     .expect("bind server");
     let addr = server.addr().to_string();
@@ -324,6 +389,7 @@ fn main() {
         &vec![Duration::from_millis(1); warm],
         &[1],
         slo_e2e,
+        None,
     ));
 
     // The overload phase always offers enough arrivals to overflow the
@@ -337,7 +403,7 @@ fn main() {
     ] {
         let rps = mult * capacity_rps;
         let gaps = poisson_gaps(n, rps, 0x10AD + mult as u64);
-        records.push(run_phase(&addr, label, rps, &gaps, &[1], slo_e2e));
+        records.push(run_phase(&addr, label, rps, &gaps, &[1], slo_e2e, None));
     }
 
     let n_burst = if smoke { 6 } else { 12 };
@@ -348,13 +414,47 @@ fn main() {
         &vec![Duration::ZERO; n_burst],
         &[1],
         slo_e2e,
+        None,
     ));
 
     if !smoke {
         let rps = capacity_rps;
         let gaps = poisson_gaps(10, rps, 0xBEEF);
-        records.push(run_phase(&addr, "mixed_steps", rps, &gaps, &[1, 1, 1, 2, 4], slo_e2e));
+        records.push(run_phase(&addr, "mixed_steps", rps, &gaps, &[1, 1, 1, 2, 4], slo_e2e, None));
     }
+
+    // Webhook phase: sequential submissions (each polled to terminal
+    // before the next create, so every one meets an empty queue and is
+    // admitted) against a fault-injecting loopback receiver. One
+    // scripted 503 forces a live retry through the backoff schedule.
+    let receiver = FaultReceiver::start(vec![Fault::Status(503)]).expect("bind webhook receiver");
+    let hook_url = receiver.url("/completions");
+    let n_hooks = if smoke { 3 } else { 6 };
+    let mut hook_latencies = Vec::new();
+    for i in 0..n_hooks {
+        let prompt = format!("webhook request {i}");
+        match submit_and_wait(&addr, &prompt, 5000 + i as u64, 1, Some(&hook_url)) {
+            Outcome::Finished { latency_seconds, state } => {
+                assert_eq!(state, RunnerState::Succeeded.name(), "webhook request {i}");
+                hook_latencies.push(latency_seconds);
+            }
+            _ => panic!("webhook request {i} refused — sequential creates must be admitted"),
+        }
+    }
+    let webhook_admitted = n_hooks;
+    hook_latencies.sort_by(f64::total_cmp);
+    records.push(PhaseRecord {
+        phase: "webhook".into(),
+        offered_rps: 0.0,
+        requests: n_hooks,
+        admitted: n_hooks,
+        succeeded: n_hooks,
+        rejected: 0,
+        errors: 0,
+        p50_seconds: percentile(&hook_latencies, 50.0),
+        p99_seconds: percentile(&hook_latencies, 99.0),
+        slo_seconds: slo_e2e,
+    });
 
     if smoke {
         smoke_cancel_round_trip(&addr);
@@ -421,5 +521,30 @@ fn main() {
             lat.p99 * 1e3
         );
     }
-    emit_json(&records, service_seconds, capacity_rps);
+
+    // The delivery contract: after the drain (which flushes the
+    // webhook queue), every admitted webhook prediction's terminal
+    // state was delivered — exactly once each, nothing dead-lettered.
+    let wh = &report.webhook;
+    assert_eq!(
+        wh.enqueued, webhook_admitted as u64,
+        "every webhook prediction's terminal transition was enqueued"
+    );
+    assert_eq!(wh.delivered, webhook_admitted as u64, "deliveries == terminal predictions");
+    assert_eq!(wh.dead_lettered, 0, "nothing dead-lettered");
+    assert!(wh.retries >= 1, "the scripted 503 forced at least one retry");
+    assert_eq!(receiver.delivered_count(), webhook_admitted, "receiver-side count agrees");
+    if let Some(lat) = wh.latency_summary() {
+        println!(
+            "webhook: {}/{} delivered ({} attempts, {} retries), latency p50 {:.0} ms p99 {:.0} ms",
+            wh.delivered,
+            wh.enqueued,
+            wh.attempts,
+            wh.retries,
+            lat.median * 1e3,
+            lat.p99 * 1e3
+        );
+    }
+    receiver.stop();
+    emit_json(&records, service_seconds, capacity_rps, &report.webhook);
 }

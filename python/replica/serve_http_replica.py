@@ -14,12 +14,21 @@ to decide whether a new prediction is admitted or shed
   max(ceil(est - slo), 1)`` seconds once the estimate passes the SLO;
   a non-positive SLO disables estimate-based shedding (the bounded
   queue stays as the backstop).
+* ``effective_batch_seconds`` — the cold-start admission fix: while
+  the EWMA has no sample, a *busy* system (queued or inflight work)
+  prices batches at a configured prior instead of zero, while an idle
+  one still admits its first request freely,
 * the EWMA update of ``Runner::observe_batch_seconds`` (``alpha =
   0.3``; the first observation seeds the average directly),
 * ``util::stats::percentile`` — linear interpolation at rank
   ``p/100 * (len-1)`` — which ``serve/metrics.rs`` uses for the
   p50/p95/p99 the server reports and ``examples/load_gen.rs`` asserts
-  against.
+  against,
+* the webhook retry schedule (``rust/src/server/webhook.rs``):
+  ``SplitMix64`` and ``backoff_delay_ms`` — deterministic full-jitter
+  exponential backoff seeded per ``(jitter_seed, prediction_id,
+  attempt)`` — pinned to the exact millisecond vectors of
+  ``backoff_schedule_is_pinned``.
 
 Each function is pinned to the exact vectors of the Rust unit tests, so
 a drift in either implementation fails one side's CI.
@@ -37,6 +46,8 @@ tail grows without bound.
 import math
 
 EWMA_ALPHA = 0.3  # runner.rs EWMA_ALPHA
+MASK64 = (1 << 64) - 1
+GOLDEN = 0x9E37_79B9_7F4A_7C15  # SplitMix64 increment / id mixer
 
 
 def estimate_queue_seconds(waiting, inflight, workers, max_batch, ewma):
@@ -57,6 +68,47 @@ def admission_decision(est, slo):
     if slo <= 0.0 or est <= slo:
         return None
     return max(int(math.ceil(est - slo)), 1)
+
+
+def effective_batch_seconds(ewma, prior, waiting, inflight):
+    """Mirror of ``server::runner::effective_batch_seconds``."""
+    if ewma > 0.0:
+        return ewma
+    if waiting + inflight == 0:
+        return 0.0
+    return prior
+
+
+def splitmix64_next(state):
+    """Mirror of ``util::rng::SplitMix64::next_u64``.
+
+    Returns ``(new_state, value)`` — Python ints stand in for u64 via
+    explicit 64-bit masking.
+    """
+    state = (state + GOLDEN) & MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58_476D_1CE4_E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & MASK64
+    return state, z ^ (z >> 31)
+
+
+def backoff_delay_ms(base_ms, cap_ms, attempt, seed, prediction_id):
+    """Mirror of ``server::webhook::backoff_delay_ms`` (1-based attempt)."""
+    assert attempt >= 1, "attempt is 1-based"
+    # saturating_mul then .min(cap): the shift exponent is clamped to 16.
+    term = min(base_ms * (1 << min(attempt - 1, 16)), MASK64, cap_ms)
+    half = max(term // 2, 1)
+    state = seed ^ ((prediction_id * GOLDEN) & MASK64) ^ attempt
+    _, draw = splitmix64_next(state)
+    return half + draw % half
+
+
+def backoff_schedule(base_ms, cap_ms, seed, prediction_id, retries):
+    """Mirror of ``server::webhook::backoff_schedule``."""
+    return [
+        backoff_delay_ms(base_ms, cap_ms, a, seed, prediction_id)
+        for a in range(1, retries + 1)
+    ]
 
 
 def ewma_update(old, seconds):
@@ -102,6 +154,47 @@ def check_unit_vectors():
     got = percentile([1.0, 2.0, 3.0, 4.0, 5.0], 99.0)
     assert abs(got - 4.96) < 1e-12, f"p99 of 1..5 = 4.96, got {got}"
     print("unit vectors: estimate/admission/ewma/percentile all match runner.rs")
+
+
+def check_cold_start_vectors():
+    """The exact vectors of ``cold_start_admission_uses_the_prior``."""
+    # Warm EWMA always wins; idle-and-cold stays 0 (admit the first
+    # arrival); busy-and-cold prices batches at the prior.
+    assert effective_batch_seconds(0.0, 0.5, 0, 0) == 0.0, "idle cold -> 0"
+    assert effective_batch_seconds(0.0, 0.5, 3, 1) == 0.5, "busy cold -> prior"
+    assert effective_batch_seconds(0.0, 0.5, 0, 1) == 0.5, "inflight counts as busy"
+    assert effective_batch_seconds(0.7, 0.5, 3, 1) == 0.7, "warm EWMA wins"
+    assert effective_batch_seconds(0.7, 0.5, 0, 0) == 0.7, "warm EWMA wins when idle too"
+    # End to end: a cold burst (10 waiting, 2 inflight, 1 worker x
+    # batch 2, prior 0.5 s) estimates 7 rounds x 0.5 = 3.5 s and sheds
+    # against a 2 s SLO with Retry-After 2 — where the pre-fix zero
+    # estimate admitted unboundedly.
+    eff = effective_batch_seconds(0.0, 0.5, 10, 2)
+    est = estimate_queue_seconds(10, 2, 1, 2, eff)
+    assert est == 3.5, f"cold burst estimate, got {est}"
+    assert admission_decision(est, 2.0) == 2, "cold burst sheds with Retry-After 2"
+    # The raw estimator itself is unchanged: zero EWMA still prices 0.
+    assert estimate_queue_seconds(10, 2, 1, 2, 0.0) == 0.0
+    print("cold-start vectors: effective_batch_seconds matches runner.rs")
+
+
+def check_backoff_vectors():
+    """The exact vectors of ``backoff_schedule_is_pinned`` (webhook.rs)."""
+    base, cap, seed = 50, 2000, 0xC0FFEE  # WebhookConfig::default()
+    assert backoff_schedule(base, cap, seed, 1, 4) == [45, 62, 134, 288]
+    assert backoff_schedule(base, cap, seed, 2, 4) == [34, 97, 112, 276]
+    assert backoff_schedule(base, cap, seed, 3, 4) == [26, 54, 178, 287]
+    # The load generator's fast smoke configuration.
+    assert backoff_schedule(10, 50, 7, 1, 4) == [6, 14, 21, 44]
+    assert backoff_schedule(10, 50, 7, 2, 4) == [6, 13, 27, 26]
+    # Window property: every delay sits in [half, 2*half).
+    for pid in range(50):
+        for attempt in range(1, 9):
+            term = min(base * (1 << min(attempt - 1, 16)), cap)
+            half = max(term // 2, 1)
+            d = backoff_delay_ms(base, cap, attempt, seed, pid)
+            assert half <= d < 2 * half, (pid, attempt, d)
+    print("backoff vectors: SplitMix64 jitter schedule matches webhook.rs")
 
 
 def simulate(n_arrivals, inter_seconds, service_seconds, slo_seconds):
@@ -167,6 +260,8 @@ def check_simulation():
 
 def main():
     check_unit_vectors()
+    check_cold_start_vectors()
+    check_backoff_vectors()
     check_simulation()
 
 

@@ -251,10 +251,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 slo_seconds: sub.f64("slo")?,
                 default_steps: sub.usize("steps")?,
                 max_steps: sub.usize("max-steps")?,
+                ..RunnerConfig::default()
             };
             let server = Server::start(sub.str("addr"), harness, runner_cfg)?;
             println!("imax-sd serve: listening on http://{}", server.addr());
-            println!("  POST /predictions            {{\"prompt\": \"...\", \"seed\": 7}}");
+            println!(
+                "  POST /predictions            {{\"prompt\": \"...\", \"seed\": 7, \
+                 \"webhook\": \"http://...\"}}"
+            );
             println!("  GET  /predictions/<id>       poll state and metrics");
             println!("  POST /predictions/<id>/cancel abort remaining denoising steps");
             println!("  GET  /healthz                queue depth, inflight, wait estimate");
@@ -283,6 +287,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 "  peaks        queue depth {}  inflight {}",
                 report.queue_depth_peak, report.inflight_peak
             );
+            let wh = &report.webhook;
+            if wh.enqueued > 0 {
+                println!(
+                    "  webhooks     {} delivered / {} enqueued ({} retries, {} dead-lettered)",
+                    wh.delivered, wh.enqueued, wh.retries, wh.dead_lettered
+                );
+            }
         }
         other => unreachable!("unhandled subcommand {other}"),
     }

@@ -88,6 +88,42 @@ pub struct RequestOutcome {
     pub image_crc32: u32,
 }
 
+/// Webhook delivery counters for one serving run (produced by
+/// `server::webhook::WebhookSender`, zeroed when no prediction carried
+/// a webhook). The invariant the load generator asserts:
+/// `delivered + dead_lettered == enqueued` after a flushed shutdown.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WebhookStats {
+    /// Terminal transitions accepted into the delivery queue.
+    pub enqueued: u64,
+    /// HTTP POST attempts made (per-attempt, so `>= delivered`).
+    pub attempts: u64,
+    /// Deliveries acknowledged with a 2xx.
+    pub delivered: u64,
+    /// Failed attempts that were rescheduled with backoff.
+    pub retries: u64,
+    /// Deliveries abandoned: retry budget exhausted, queue overflow, or
+    /// drain deadline hit at shutdown.
+    pub dead_lettered: u64,
+    /// Subset of `dead_lettered` dropped because the bounded queue was
+    /// full at enqueue time.
+    pub overflowed: u64,
+    /// Terminal-to-acknowledged latency of each successful delivery, in
+    /// seconds (includes every backoff wait before the 2xx).
+    pub latency_seconds: Vec<f64>,
+}
+
+impl WebhookStats {
+    /// Delivery-latency distribution; `None` when nothing delivered.
+    pub fn latency_summary(&self) -> Option<Summary> {
+        if self.latency_seconds.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.latency_seconds))
+        }
+    }
+}
+
 /// Aggregate report for one serving run.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
@@ -121,6 +157,9 @@ pub struct ServeReport {
     pub queue_depth_peak: usize,
     /// Peak number of requests running concurrently in workers.
     pub inflight_peak: usize,
+    /// Webhook delivery counters (all-zero when no prediction carried a
+    /// webhook, e.g. offline `ServeHarness::serve` runs).
+    pub webhook: WebhookStats,
 }
 
 impl ServeReport {
@@ -242,6 +281,7 @@ mod tests {
             rejected: 0,
             queue_depth_peak: 2,
             inflight_peak: 2,
+            webhook: WebhookStats::default(),
         };
         assert_eq!(r.requests(), 2);
         assert_eq!(r.count(RunnerState::Succeeded), 2);
@@ -271,6 +311,7 @@ mod tests {
             rejected: 0,
             queue_depth_peak: 0,
             inflight_peak: 0,
+            webhook: WebhookStats::default(),
         };
         assert_eq!(r.macs_per_second(), 0.0);
         assert_eq!(r.requests_per_second(), 0.0);
@@ -303,6 +344,7 @@ mod tests {
             rejected: 4,
             queue_depth_peak: 5,
             inflight_peak: 2,
+            webhook: WebhookStats::default(),
         };
         assert_eq!(r.count(RunnerState::Succeeded), 2);
         assert_eq!(r.count(RunnerState::Cancelled), 1);
@@ -316,6 +358,22 @@ mod tests {
         assert!((ok.mean - 2.0).abs() < 1e-12);
         // The all-outcomes summary includes them.
         assert_eq!(r.latency_summary().n, 4);
+    }
+
+    #[test]
+    fn webhook_stats_latency_summary() {
+        let mut w = WebhookStats::default();
+        assert!(w.latency_summary().is_none(), "nothing delivered yet");
+        w.latency_seconds = vec![0.010, 0.030, 0.020];
+        let s = w.latency_summary().expect("three samples");
+        assert_eq!(s.n, 3);
+        assert!((s.median - 0.020).abs() < 1e-12);
+        // A NaN sample (clock anomaly) degrades the summary, never
+        // panics the report (regression pinned in util::stats too).
+        w.latency_seconds.push(f64::NAN);
+        let s = w.latency_summary().expect("still three usable samples");
+        assert_eq!(s.n, 3);
+        assert_eq!(s.nan, 1);
     }
 
     #[test]

@@ -56,6 +56,6 @@ pub mod queue;
 pub mod worker;
 
 pub use batcher::{BatchMember, SharedBatch};
-pub use metrics::{RequestOutcome, RunnerState, ServeReport};
+pub use metrics::{RequestOutcome, RunnerState, ServeReport, WebhookStats};
 pub use queue::{PushError, RequestQueue, ServeRequest};
 pub use worker::{ServeConfig, ServeHarness};

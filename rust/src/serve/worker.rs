@@ -197,6 +197,7 @@ impl ServeHarness {
             rejected: 0,
             queue_depth_peak,
             inflight_peak: inflight_peak.load(Ordering::Relaxed),
+            webhook: crate::serve::WebhookStats::default(),
         }
     }
 

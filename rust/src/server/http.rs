@@ -173,15 +173,34 @@ fn read_headers<R: BufRead>(r: &mut R) -> Result<Vec<(String, String)>, HttpErro
     }
 }
 
+/// Strict `Content-Length` value parse: nonempty, ASCII digits only.
+/// `usize::from_str` alone is too lax — it accepts a leading `+`
+/// (`"+10"` parses), and sign/whitespace variance across parsers is
+/// exactly what request-smuggling shapes exploit.
+fn parse_content_length(v: &str) -> Result<usize, HttpError> {
+    if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit()) {
+        return Err(HttpError::Malformed("invalid content-length"));
+    }
+    v.parse::<usize>().map_err(|_| HttpError::Malformed("invalid content-length"))
+}
+
 fn read_body<R: BufRead>(
     r: &mut R,
     headers: &[(String, String)],
 ) -> Result<Vec<u8>, HttpError> {
-    let len = match headers.iter().find(|(k, _)| k == "content-length") {
+    // Duplicate Content-Length headers are the classic smuggling shape:
+    // two framing layers picking different values desynchronize on the
+    // body boundary. One header or none — even agreeing duplicates are
+    // rejected, per RFC 9112 §6.3's "reject as malformed" option.
+    let mut lengths = headers.iter().filter(|(k, _)| k == "content-length");
+    let len = match lengths.next() {
         None => 0,
-        Some((_, v)) => v
-            .parse::<usize>()
-            .map_err(|_| HttpError::Malformed("invalid content-length"))?,
+        Some((_, v)) => {
+            if lengths.next().is_some() {
+                return Err(HttpError::Malformed("duplicate content-length"));
+            }
+            parse_content_length(v)?
+        }
     };
     if len > MAX_BODY_BYTES {
         return Err(HttpError::Malformed("body too large"));
@@ -281,6 +300,40 @@ pub fn http_call(
     read_response(&mut reader)
 }
 
+/// Like [`http_call`] but with explicit per-attempt timeouts: a bounded
+/// connect, and read/write deadlines on the socket. This is the client
+/// the webhook delivery workers use — a stalled or black-holed receiver
+/// must cost one bounded attempt, never wedge a delivery worker.
+pub fn http_call_timeout(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&super::json::Json>,
+    connect_timeout: std::time::Duration,
+    io_timeout: std::time::Duration,
+) -> Result<ClientResponse, HttpError> {
+    use std::net::ToSocketAddrs;
+    let sock = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| HttpError::Malformed("unresolvable address"))?;
+    let mut stream = TcpStream::connect_timeout(&sock, connect_timeout)?;
+    stream.set_read_timeout(Some(io_timeout))?;
+    stream.set_write_timeout(Some(io_timeout))?;
+    let payload = body.map(|b| b.render().into_bytes()).unwrap_or_default();
+    write!(stream, "{method} {path} HTTP/1.1\r\n")?;
+    write!(stream, "Host: {addr}\r\n")?;
+    if body.is_some() {
+        write!(stream, "Content-Type: application/json\r\n")?;
+    }
+    write!(stream, "Content-Length: {}\r\n", payload.len())?;
+    write!(stream, "Connection: close\r\n\r\n")?;
+    stream.write_all(&payload)?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    read_response(&mut reader)
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::json::Json;
@@ -325,6 +378,38 @@ mod tests {
         ] {
             let mut r = Cursor::new(raw.to_vec());
             assert!(read_request(&mut r).is_err(), "{raw:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn rejects_duplicate_content_length_headers() {
+        // Smuggling shape: two Content-Length headers, conflicting
+        // values — and even agreeing duplicates are malformed here.
+        for raw in [
+            &b"POST /x HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 0\r\n\r\nhello"[..],
+            &b"POST /x HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 5\r\n\r\nhello"[..],
+        ] {
+            let mut r = Cursor::new(raw.to_vec());
+            let err = read_request(&mut r);
+            assert!(
+                matches!(err, Err(HttpError::Malformed("duplicate content-length"))),
+                "{raw:?} must be rejected as malformed"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_non_digit_content_length() {
+        // `usize::from_str` accepts "+10"; the wire grammar does not.
+        // (Surrounding whitespace is already stripped by the header
+        // parser, so digits-only is the full residual grammar.)
+        for cl in ["+10", "-1", "0x10", "1_0", ""] {
+            let raw = format!("POST /x HTTP/1.1\r\nContent-Length:{cl}\r\n\r\n0123456789");
+            let mut r = Cursor::new(raw.into_bytes());
+            assert!(
+                matches!(read_request(&mut r), Err(HttpError::Malformed("invalid content-length"))),
+                "Content-Length {cl:?} must be rejected"
+            );
         }
     }
 

@@ -47,6 +47,15 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an array (used e.g. to validate
+    /// `webhook_events_filter` lists on create).
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
     /// The numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
@@ -459,5 +468,14 @@ mod tests {
         assert_eq!(Json::Num(3.5).as_u64(), None);
         assert_eq!(Json::Num(-1.0).as_u64(), None);
         assert_eq!(Json::Str("3".into()).as_u64(), None);
+    }
+
+    #[test]
+    fn array_accessor() {
+        let v = Json::parse(r#"["succeeded","failed"]"#).unwrap();
+        let items = v.as_arr().unwrap();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[0].as_str(), Some("succeeded"));
+        assert_eq!(Json::Num(1.0).as_arr(), None);
     }
 }

@@ -20,6 +20,10 @@
 //!                                               │ denoising-step boundary
 //!                                               ▼
 //!                                    SharedBatch rendezvous → lanes
+//!                                               │ terminal outcome recorded
+//!                                               ▼
+//!                                    WebhookSender (bounded queue,
+//!                                    retry/backoff) ──▶ POST callback URL
 //! ```
 //!
 //! Everything is std-only: hand-rolled HTTP/1.1 framing ([`http`]), a
@@ -28,19 +32,30 @@
 //! route fires a [`crate::util::cancel::CancelToken`] that the
 //! denoising loop consults before every step, and the aborting member
 //! leaves its lockstep micro-batch without perturbing the survivors'
-//! bits. Graceful shutdown (SIGTERM/ctrl-c or [`Server::shutdown`])
-//! stops admission, drains every queued and running request, joins the
-//! serving workers, then quiesces the coordinator's lane worker pool.
+//! bits. Clients that pass a `webhook` URL on create get the terminal
+//! prediction JSON POSTed back with retry/backoff ([`webhook`]) instead
+//! of having to poll. Graceful shutdown (SIGTERM/ctrl-c or
+//! [`Server::shutdown`]) stops admission, drains every queued and
+//! running request, joins the serving workers, quiesces the
+//! coordinator's lane worker pool, **flushes the webhook delivery
+//! queue** (drain-deadline bounded), and only then stops the accept
+//! loop — terminal states produced mid-drain are still delivered.
 
 pub mod http;
 pub mod json;
 pub mod routes;
 pub mod runner;
 pub mod shutdown;
+pub mod webhook;
 
 pub use json::Json;
 pub use runner::{
-    admission_decision, estimate_queue_seconds, Admission, PredictionStatus, Runner, RunnerConfig,
+    admission_decision, effective_batch_seconds, estimate_queue_seconds, Admission,
+    PredictionStatus, Runner, RunnerConfig,
+};
+pub use webhook::{
+    backoff_delay_ms, backoff_schedule, Fault, FaultReceiver, Webhook, WebhookConfig,
+    WebhookSender,
 };
 
 use crate::serve::{ServeHarness, ServeReport};

@@ -11,9 +11,12 @@
 //! functions ([`estimate_queue_seconds`], [`admission_decision`])
 //! mirrored bit-for-bit by `python/replica/serve_http_replica.py`.
 
+use super::routes;
+use super::webhook::{Webhook, WebhookConfig, WebhookSender};
 use crate::sd::graph::RequestId;
 use crate::serve::{
     PushError, RequestOutcome, RequestQueue, RunnerState, ServeHarness, ServeReport, ServeRequest,
+    WebhookStats,
 };
 use crate::util::cancel::CancelToken;
 use crate::util::sync::{lock_or_abort, rank, Mutex};
@@ -29,7 +32,8 @@ use std::time::{Duration, Instant};
 /// is number `waiting + inflight + 1` in line. The serving stack drains
 /// up to `workers * max_batch` requests per batch "wave", each wave
 /// taking roughly `ewma_batch_seconds`. An EWMA of zero (no completed
-/// batch yet) estimates 0.0 — admit, there is no signal to shed on.
+/// batch yet) estimates 0.0 — callers that want cold-start protection
+/// substitute a prior via [`effective_batch_seconds`] first.
 pub fn estimate_queue_seconds(
     waiting: usize,
     inflight: usize,
@@ -44,6 +48,33 @@ pub fn estimate_queue_seconds(
     let ahead = waiting + inflight + 1;
     let batches_ahead = ahead.div_ceil(slots);
     batches_ahead as f64 * ewma_batch_seconds
+}
+
+/// The batch service time admission should reason with: the EWMA once
+/// a batch has completed, and before that a conservative configured
+/// prior — **unless the system is idle**, where the first request must
+/// always be admitted (an idle cold server shedding its first arrival
+/// would never warm up at all).
+///
+/// This closes the cold-start admission hole: with a zero EWMA the raw
+/// estimate was 0.0 regardless of queue depth, so a burst arriving
+/// before the first batch completed was admitted unboundedly (and the
+/// queue-full `Retry-After` hint was computed from that same zero).
+/// Pinned in `cold_start_admission_uses_the_prior` and mirrored by
+/// `python/replica/serve_http_replica.py`.
+pub fn effective_batch_seconds(
+    ewma_batch_seconds: f64,
+    cold_start_prior_seconds: f64,
+    waiting: usize,
+    inflight: usize,
+) -> f64 {
+    if ewma_batch_seconds > 0.0 {
+        ewma_batch_seconds
+    } else if waiting + inflight == 0 {
+        0.0
+    } else {
+        cold_start_prior_seconds
+    }
 }
 
 /// Shed or admit: `None` admits; `Some(retry_after_seconds)` refuses
@@ -70,11 +101,24 @@ pub struct RunnerConfig {
     pub default_steps: usize,
     /// Largest accepted per-request step count.
     pub max_steps: usize,
+    /// Batch-seconds prior used while the EWMA has no sample yet and
+    /// work is already queued or running (see
+    /// [`effective_batch_seconds`]). The load generator derives it from
+    /// its probe measurement; the default is a conservative guess.
+    pub cold_start_prior_seconds: f64,
+    /// Webhook delivery knobs.
+    pub webhook: WebhookConfig,
 }
 
 impl Default for RunnerConfig {
     fn default() -> Self {
-        RunnerConfig { slo_seconds: 2.0, default_steps: 1, max_steps: 8 }
+        RunnerConfig {
+            slo_seconds: 2.0,
+            default_steps: 1,
+            max_steps: 8,
+            cold_start_prior_seconds: 0.5,
+            webhook: WebhookConfig::default(),
+        }
     }
 }
 
@@ -113,6 +157,7 @@ struct Entry {
     prompt: String,
     cancel: CancelToken,
     outcome: Option<RequestOutcome>,
+    webhook: Option<Webhook>,
 }
 
 /// EWMA smoothing factor for batch service seconds.
@@ -135,6 +180,7 @@ pub struct Runner {
     ewma_bits: AtomicU64,
     draining: AtomicBool,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    webhook: Arc<WebhookSender>,
     t_start: Instant,
     baseline: [u64; 7],
 }
@@ -158,6 +204,7 @@ impl Runner {
             m.cache_hit_bytes.load(ord),
             m.cache_miss_bytes.load(ord),
         ];
+        let webhook = WebhookSender::start(config.webhook.clone());
         let runner = Arc::new(Runner {
             harness,
             queue,
@@ -171,6 +218,7 @@ impl Runner {
             ewma_bits: AtomicU64::new(0),
             draining: AtomicBool::new(false),
             workers: Mutex::new(Vec::new()),
+            webhook,
             t_start: Instant::now(),
             baseline,
         });
@@ -208,26 +256,53 @@ impl Runner {
         f64::from_bits(self.ewma_bits.load(Ordering::Relaxed))
     }
 
+    /// The batch service time admission reasons with right now: the
+    /// EWMA once warm, the configured cold-start prior while cold work
+    /// is already in the system.
+    fn admission_batch_seconds(&self, waiting: usize, inflight: usize) -> f64 {
+        effective_batch_seconds(
+            self.ewma_batch_seconds(),
+            self.config.cold_start_prior_seconds,
+            waiting,
+            inflight,
+        )
+    }
+
     /// The estimated queue wait a new arrival would see right now.
     pub fn estimated_wait_seconds(&self) -> f64 {
+        let (waiting, inflight) = (self.queue.len(), self.inflight());
         estimate_queue_seconds(
-            self.queue.len(),
-            self.inflight(),
+            waiting,
+            inflight,
             self.harness.config.workers,
             self.harness.config.max_batch,
-            self.ewma_batch_seconds(),
+            self.admission_batch_seconds(waiting, inflight),
         )
+    }
+
+    /// Webhook delivery counters so far (final numbers come from the
+    /// post-flush [`ServeReport`]).
+    pub fn webhook_stats(&self) -> WebhookStats {
+        self.webhook.stats()
+    }
+
+    /// Webhook deliveries waiting (or backing off) right now.
+    pub fn webhook_pending(&self) -> usize {
+        self.webhook.pending()
     }
 
     /// Admit (or refuse) a new prediction. `deadline` bounds the whole
     /// request lifetime — queue wait included; past it the request
-    /// expires at its next cancellation check.
+    /// expires at its next cancellation check. With a `webhook`, the
+    /// full prediction JSON is POSTed to it on the terminal transition
+    /// (subject to the webhook's events filter).
     pub fn create(
         &self,
         prompt: &str,
         seed: u64,
         steps: usize,
         deadline: Option<Duration>,
+        webhook: Option<Webhook>,
     ) -> Admission {
         assert!(
             (1..=self.config.max_steps).contains(&steps),
@@ -257,6 +332,7 @@ impl Runner {
                 prompt: prompt.to_string(),
                 cancel,
                 outcome: None,
+                webhook,
             },
         );
         match self.queue.try_push(req) {
@@ -268,7 +344,11 @@ impl Runner {
             Err(PushError::Full { .. }) => {
                 self.registry.lock().remove(&id);
                 self.rejected.fetch_add(1, Ordering::Relaxed);
-                let hint = self.ewma_batch_seconds().ceil() as u64;
+                // A full queue implies work in the system, so this uses
+                // the cold-start prior too — the hint used to come from
+                // a possibly-zero EWMA.
+                let eff = self.admission_batch_seconds(self.queue.len(), self.inflight());
+                let hint = eff.ceil() as u64;
                 Admission::Busy { retry_after: hint.max(1) }
             }
             Err(PushError::Closed) => {
@@ -306,11 +386,14 @@ impl Runner {
     }
 
     /// Graceful shutdown: stop admitting, drain every queued and
-    /// running request, join the workers, then quiesce the lane worker
-    /// pool. Returns the aggregate report over the runner's lifetime.
-    /// Drain-path locks abort on poisoning instead of cascading a
-    /// second panic into a hung shutdown (policy in
-    /// [`crate::util::sync`] and `DESIGN.md`).
+    /// running request, join the workers, quiesce the lane worker
+    /// pool, then **flush the webhook delivery queue** (terminal
+    /// states produced during the drain are delivered — retries and
+    /// backoff included — before this returns, bounded by
+    /// [`WebhookConfig::drain_deadline_ms`]). Returns the aggregate
+    /// report over the runner's lifetime. Drain-path locks abort on
+    /// poisoning instead of cascading a second panic into a hung
+    /// shutdown (policy in [`crate::util::sync`] and `DESIGN.md`).
     pub fn shutdown(&self) -> ServeReport {
         self.draining.store(true, Ordering::Relaxed);
         self.queue.close();
@@ -319,6 +402,10 @@ impl Runner {
             h.join().expect("serving worker panicked");
         }
         self.harness.coordinator().quiesce();
+        // After the worker join every terminal transition has been
+        // enqueued; the flush empties the queue or dead-letters at the
+        // deadline.
+        self.webhook.flush_and_join(Duration::from_millis(self.config.webhook.drain_deadline_ms));
         self.report()
     }
 
@@ -345,6 +432,7 @@ impl Runner {
             rejected: self.rejected.load(ord),
             queue_depth_peak: self.queue_depth_peak.load(ord),
             inflight_peak: self.inflight_peak.load(ord),
+            webhook: self.webhook.stats(),
         }
     }
 
@@ -373,12 +461,37 @@ impl Runner {
             let outcomes = self.harness.run_batch(&batch);
             self.observe_batch_seconds(t0.elapsed().as_secs_f64());
             self.inflight.fetch_sub(n, Ordering::Relaxed);
+            // Every admitted request reaches its terminal state exactly
+            // once, right here (cancelled-while-queued entries drain
+            // through `run_batch` too), so this is the single webhook
+            // enqueue point. Payloads are rendered under the registry
+            // lock; the enqueue itself happens after dropping it — the
+            // delivery queue's lock is never nested inside the
+            // registry's.
+            let mut deliveries: Vec<(u64, Webhook, super::json::Json)> = Vec::new();
             let mut reg = self.registry.lock();
             for outcome in outcomes {
-                if let Some(e) = reg.get_mut(&outcome.id.0) {
+                let id = outcome.id.0;
+                if let Some(e) = reg.get_mut(&id) {
                     e.state = outcome.state;
                     e.outcome = Some(outcome);
+                    if let Some(wh) = &e.webhook {
+                        if wh.wants(e.state) {
+                            let body = routes::status_json(&PredictionStatus {
+                                id,
+                                state: e.state,
+                                prompt: e.prompt.clone(),
+                                outcome: e.outcome.clone(),
+                            });
+                            deliveries.push((id, wh.clone(), body));
+                        }
+                    }
                 }
+            }
+            drop(reg);
+            let terminal_at = Instant::now();
+            for (id, wh, body) in deliveries {
+                self.webhook.enqueue(id, &wh, body, terminal_at);
             }
         }
     }
@@ -447,6 +560,31 @@ mod tests {
     }
 
     #[test]
+    fn cold_start_admission_uses_the_prior() {
+        // Regression for the cold-start admission hole: before this
+        // fix, a zero EWMA made the estimate 0.0 regardless of queue
+        // depth, so a pre-first-batch burst was admitted unboundedly.
+        // These vectors are mirrored by serve_http_replica.py.
+        assert_eq!(effective_batch_seconds(0.0, 0.5, 0, 0), 0.0, "idle cold system admits freely");
+        assert_eq!(effective_batch_seconds(0.0, 0.5, 3, 1), 0.5, "cold + backlog uses the prior");
+        assert_eq!(effective_batch_seconds(0.0, 0.5, 0, 1), 0.5, "inflight alone counts too");
+        assert_eq!(effective_batch_seconds(0.7, 0.5, 3, 1), 0.7, "a warm EWMA wins");
+        assert_eq!(effective_batch_seconds(0.7, 0.5, 0, 0), 0.7, "warm EWMA used even when idle");
+        // End-to-end arithmetic: 10 waiting + 2 inflight on 1 worker x
+        // 2 max_batch = 7 waves ahead; at the 0.5s prior that is 3.5s
+        // against a 2s SLO => shed with a 2s hint. The un-fixed code
+        // said 0.0 => admit.
+        let est = estimate_queue_seconds(10, 2, 1, 2, effective_batch_seconds(0.0, 0.5, 10, 2));
+        assert_eq!(est, 3.5);
+        assert_eq!(admission_decision(est, 2.0), Some(2));
+        assert_eq!(
+            estimate_queue_seconds(10, 2, 1, 2, 0.0),
+            0.0,
+            "the raw estimator alone still has no signal — the prior is the fix"
+        );
+    }
+
+    #[test]
     fn admission_decision_thresholds() {
         assert_eq!(admission_decision(1.0, 2.0), None);
         assert_eq!(admission_decision(2.0, 2.0), None, "at the SLO still admits");
@@ -462,7 +600,7 @@ mod tests {
             ServeHarness::new(pipe_cfg(), serve_cfg()),
             RunnerConfig::default(),
         );
-        let Admission::Created { id } = rt.create("a lovely cat", 7, 1, None) else {
+        let Admission::Created { id } = rt.create("a lovely cat", 7, 1, None, None) else {
             panic!("idle runner must admit");
         };
         let st = wait_terminal(&rt, id);
@@ -481,12 +619,12 @@ mod tests {
     fn estimate_based_shedding_returns_busy_with_retry_hint() {
         let rt = Runner::start(
             ServeHarness::new(pipe_cfg(), serve_cfg()),
-            RunnerConfig { slo_seconds: 2.0, default_steps: 1, max_steps: 8 },
+            RunnerConfig { slo_seconds: 2.0, ..RunnerConfig::default() },
         );
         // Pretend batches take 10s: the next arrival would wait ~10s
         // >> 2s SLO, so admission must shed with a drain hint.
         rt.force_ewma(10.0);
-        match rt.create("too much", 1, 1, None) {
+        match rt.create("too much", 1, 1, None, None) {
             Admission::Busy { retry_after } => assert_eq!(retry_after, 8),
             other => panic!("expected Busy, got {other:?}"),
         }
@@ -504,7 +642,7 @@ mod tests {
         // Saturate the single worker so a later request sits queued.
         let mut ids = Vec::new();
         for i in 0..4 {
-            if let Admission::Created { id } = rt.create("a lovely cat", i, 1, None) {
+            if let Admission::Created { id } = rt.create("a lovely cat", i, 1, None, None) {
                 ids.push(id);
             }
         }
@@ -535,12 +673,13 @@ mod tests {
             RunnerConfig::default(),
         );
         for i in 0..3 {
-            assert!(matches!(rt.create("a lovely cat", i, 1, None), Admission::Created { .. }));
+            let adm = rt.create("a lovely cat", i, 1, None, None);
+            assert!(matches!(adm, Admission::Created { .. }));
         }
         let report = rt.shutdown();
         assert_eq!(report.requests(), 3, "graceful shutdown drains everything in flight");
         assert_eq!(report.count(RunnerState::Succeeded), 3);
-        assert_eq!(rt.create("late", 9, 1, None), Admission::Draining);
+        assert_eq!(rt.create("late", 9, 1, None, None), Admission::Draining);
         assert!(report.inflight_peak >= 1);
     }
 
@@ -551,7 +690,7 @@ mod tests {
             RunnerConfig::default(),
         );
         let Admission::Created { id } =
-            rt.create("a lovely cat", 7, 1, Some(Duration::from_secs(0)))
+            rt.create("a lovely cat", 7, 1, Some(Duration::from_secs(0)), None)
         else {
             panic!("idle runner must admit");
         };

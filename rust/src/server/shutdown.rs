@@ -5,8 +5,12 @@
 //! symbol is declared directly and pointed at a handler that only sets
 //! an `AtomicBool` (the one async-signal-safe thing a handler may do).
 //! The accept loop polls [`signalled`] and begins a graceful drain when
-//! it flips. On non-unix targets installation is a no-op — tests and
-//! the in-process [`request_shutdown`] path still work.
+//! it flips: admission stops, queued and running requests finish, the
+//! webhook delivery queue is flushed (bounded by
+//! [`super::webhook::WebhookConfig::drain_deadline_ms`]), and only
+//! then does the accept loop stop. On non-unix targets installation is
+//! a no-op — tests and the in-process [`request_shutdown`] path still
+//! work.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 

@@ -1,0 +1,766 @@
+//! Webhook completion delivery: POST the terminal prediction JSON to a
+//! client-supplied callback URL, with retries, so clients are not
+//! forced to poll `GET /predictions/{id}`.
+//!
+//! ```text
+//! Runner worker (terminal outcome recorded, registry lock dropped)
+//!        │ enqueue(id, payload)          bounded queue (overflow ⇒ dead-letter)
+//!        ▼
+//! WebhookSender ── pending: VecDeque<Delivery> ──┐
+//!        ▲                                       │ earliest-ready pick
+//!        │ requeue with backoff                  ▼
+//!        └──────── attempt failed ◀── delivery worker ──▶ POST (connect/read
+//!                  (until budget)                          timeouts) ──▶ 2xx ✓
+//! ```
+//!
+//! **Delivery guarantees.** At-least-once per matching terminal
+//! transition, up to [`WebhookConfig::max_attempts`] HTTP attempts; a
+//! delivery that exhausts its budget (or overflows the bounded queue,
+//! or is still pending when the shutdown drain deadline passes) is
+//! counted in the dead-letter counter and dropped. There is **no
+//! ordering guarantee across predictions** — deliveries retry
+//! independently, so a fast success can overtake a backing-off peer.
+//! A 2xx response acknowledges; anything else (connect refusal, read
+//! timeout, 5xx, torn connection) costs one attempt.
+//!
+//! **Backoff.** Deterministic full-jitter-style schedule, mirrored
+//! bit-for-bit by `python/replica/serve_http_replica.py`: retry *k*
+//! (1-based) waits `half + SplitMix64(seed ⊕ id·φ ⊕ k) % half` ms where
+//! `half = min(base·2^(k−1), cap) / 2` — i.e. uniform in `[half, 2·half)`,
+//! seeded per `(jitter_seed, prediction_id, attempt)` so the exact
+//! schedule is pinned in tests ([`backoff_delay_ms`]).
+//!
+//! **Drain ordering.** `Runner::shutdown` drains the serving workers
+//! first (every admitted request reaches a terminal outcome and is
+//! enqueued here), then calls [`WebhookSender::flush_and_join`] with
+//! the drain deadline, and only then does the server stop its accept
+//! loop — so terminal states produced *during* the drain are still
+//! delivered before `shutdown()` returns.
+
+use super::http;
+use super::json::Json;
+use crate::serve::{RunnerState, WebhookStats};
+use crate::util::rng::SplitMix64;
+use crate::util::sync::{lock_or_abort, rank, Condvar, Mutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Knobs for the delivery subsystem (part of
+/// [`crate::server::RunnerConfig`]).
+#[derive(Debug, Clone)]
+pub struct WebhookConfig {
+    /// Delivery worker threads draining the queue.
+    pub workers: usize,
+    /// Bounded queue capacity; an enqueue past it dead-letters the
+    /// delivery immediately (counted in `overflowed` too).
+    pub queue_capacity: usize,
+    /// Total HTTP attempts per delivery (first try + retries).
+    pub max_attempts: u32,
+    /// Base of the exponential backoff, in milliseconds.
+    pub base_backoff_ms: u64,
+    /// Cap on the un-jittered exponential term, in milliseconds.
+    pub max_backoff_ms: u64,
+    /// Seed for the deterministic jitter (see [`backoff_delay_ms`]).
+    pub jitter_seed: u64,
+    /// Per-attempt TCP connect timeout, in milliseconds.
+    pub connect_timeout_ms: u64,
+    /// Per-attempt socket read/write timeout, in milliseconds.
+    pub read_timeout_ms: u64,
+    /// How long [`WebhookSender::flush_and_join`] keeps delivering
+    /// after shutdown starts before dead-lettering the remainder.
+    pub drain_deadline_ms: u64,
+}
+
+impl Default for WebhookConfig {
+    fn default() -> Self {
+        WebhookConfig {
+            workers: 1,
+            queue_capacity: 256,
+            max_attempts: 5,
+            base_backoff_ms: 50,
+            max_backoff_ms: 2000,
+            jitter_seed: 0xC0FFEE,
+            connect_timeout_ms: 1000,
+            read_timeout_ms: 2000,
+            drain_deadline_ms: 10_000,
+        }
+    }
+}
+
+/// Delay in milliseconds before retry number `attempt` (1-based: the
+/// wait after the `attempt`-th failed POST) of `prediction_id`'s
+/// delivery. Pure and deterministic — the Python replica mirrors it
+/// bit-for-bit, and the fault-injection tests assert the exact
+/// schedule.
+///
+/// The un-jittered term doubles from `base_ms` and saturates at
+/// `cap_ms`; the jittered delay is uniform in `[half, 2·half)` with
+/// `half = term/2`, drawn from a [`SplitMix64`] seeded per
+/// `(seed, prediction_id, attempt)` so concurrent deliveries decorrelate
+/// without shared RNG state.
+pub fn backoff_delay_ms(
+    base_ms: u64,
+    cap_ms: u64,
+    attempt: u32,
+    seed: u64,
+    prediction_id: u64,
+) -> u64 {
+    assert!(attempt >= 1, "attempt is 1-based");
+    let term = base_ms.saturating_mul(1u64 << (attempt - 1).min(16)).min(cap_ms);
+    let half = (term / 2).max(1);
+    let mut sm =
+        SplitMix64::new(seed ^ prediction_id.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ attempt as u64);
+    half + sm.next_u64() % half
+}
+
+/// The full retry schedule (ms per retry, in order) a delivery would
+/// follow under `cfg` — what tests and the load generator pin against.
+pub fn backoff_schedule(cfg: &WebhookConfig, prediction_id: u64, retries: u32) -> Vec<u64> {
+    (1..=retries)
+        .map(|a| {
+            let (base, cap) = (cfg.base_backoff_ms, cfg.max_backoff_ms);
+            backoff_delay_ms(base, cap, a, cfg.jitter_seed, prediction_id)
+        })
+        .collect()
+}
+
+/// A validated webhook target: an absolute `http://host[:port][/path]`
+/// URL plus an optional terminal-state filter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Webhook {
+    /// The URL as the client supplied it.
+    pub url: String,
+    /// `host:port` to connect to (port defaults to 80).
+    addr: String,
+    /// Path to POST to (`/` when the URL has none).
+    path: String,
+    /// Terminal states to deliver; `None` delivers every terminal
+    /// transition.
+    events: Option<Vec<RunnerState>>,
+}
+
+impl Webhook {
+    /// Parse and validate a webhook URL. Only absolute `http://` URLs
+    /// are accepted — the zero-dep client speaks plaintext HTTP/1.1;
+    /// anything else is a create-time `400`, not a delivery-time
+    /// surprise.
+    pub fn parse(url: &str) -> Result<Webhook, &'static str> {
+        let rest = url.strip_prefix("http://").ok_or("webhook must be an absolute http:// url")?;
+        let (authority, path) = match rest.find('/') {
+            Some(i) => (&rest[..i], &rest[i..]),
+            None => (rest, "/"),
+        };
+        if authority.is_empty() {
+            return Err("webhook url has no host");
+        }
+        if authority.contains('@') {
+            return Err("webhook url must not carry userinfo");
+        }
+        let addr = match authority.rsplit_once(':') {
+            Some((host, port)) => {
+                if host.is_empty() {
+                    return Err("webhook url has no host");
+                }
+                if port.is_empty() || !port.bytes().all(|b| b.is_ascii_digit()) {
+                    return Err("webhook url port is not a number");
+                }
+                if port.parse::<u16>().is_err() {
+                    return Err("webhook url port out of range");
+                }
+                authority.to_string()
+            }
+            None => format!("{authority}:80"),
+        };
+        Ok(Webhook { url: url.to_string(), addr, path: path.to_string(), events: None })
+    }
+
+    /// Restrict delivery to the given terminal states.
+    pub fn with_events(mut self, events: Vec<RunnerState>) -> Webhook {
+        self.events = Some(events);
+        self
+    }
+
+    /// Whether a terminal transition to `state` should be delivered.
+    pub fn wants(&self, state: RunnerState) -> bool {
+        match &self.events {
+            None => true,
+            Some(filter) => filter.contains(&state),
+        }
+    }
+
+    /// `host:port` the delivery connects to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Path the delivery POSTs to.
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+}
+
+/// One pending delivery in the queue.
+struct Delivery {
+    /// Prediction id (also the jitter discriminator).
+    id: u64,
+    /// Connect target.
+    addr: String,
+    /// POST path.
+    path: String,
+    /// Full prediction JSON at terminal time.
+    body: Json,
+    /// POST attempts already made.
+    attempts_made: u32,
+    /// Earliest instant the next attempt may run (backoff gate).
+    not_before: Instant,
+    /// When the terminal transition happened (delivery-latency origin).
+    terminal_at: Instant,
+}
+
+/// Queue state under the [`rank::WEBHOOK_QUEUE`] mutex.
+struct QueueState {
+    pending: VecDeque<Delivery>,
+    /// Attempts currently executing outside the lock (so the flush can
+    /// tell "empty queue" from "quiescent").
+    inflight: usize,
+    /// No new enqueues race the drain accounting after close.
+    closed: bool,
+    /// The drain deadline passed: failed attempts dead-letter instead
+    /// of rescheduling.
+    abandoned: bool,
+}
+
+/// The delivery subsystem: a bounded queue drained by worker threads.
+/// Create with [`WebhookSender::start`], finish with
+/// [`WebhookSender::flush_and_join`] (the runner does both).
+pub struct WebhookSender {
+    config: WebhookConfig,
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    enqueued: AtomicU64,
+    attempts: AtomicU64,
+    delivered: AtomicU64,
+    retries: AtomicU64,
+    dead_lettered: AtomicU64,
+    overflowed: AtomicU64,
+    /// Terminal-to-2xx seconds per success; a leaf lock, never held
+    /// together with the queue mutex.
+    latencies: Mutex<Vec<f64>>,
+    joined: AtomicBool,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl WebhookSender {
+    /// Start the delivery workers.
+    pub fn start(config: WebhookConfig) -> Arc<WebhookSender> {
+        assert!(config.workers >= 1, "webhook delivery needs at least one worker");
+        assert!(config.max_attempts >= 1, "a delivery needs at least one attempt");
+        let sender = Arc::new(WebhookSender {
+            config,
+            state: Mutex::ranked(
+                rank::WEBHOOK_QUEUE,
+                "server.webhook_queue",
+                QueueState {
+                    pending: VecDeque::new(),
+                    inflight: 0,
+                    closed: false,
+                    abandoned: false,
+                },
+            ),
+            cv: Condvar::new(),
+            enqueued: AtomicU64::new(0),
+            attempts: AtomicU64::new(0),
+            delivered: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            dead_lettered: AtomicU64::new(0),
+            overflowed: AtomicU64::new(0),
+            latencies: Mutex::new(Vec::new()),
+            joined: AtomicBool::new(false),
+            workers: Mutex::new(Vec::new()),
+        });
+        let mut workers = sender.workers.lock();
+        for _ in 0..sender.config.workers {
+            let s = Arc::clone(&sender);
+            workers.push(std::thread::spawn(move || s.worker_loop()));
+        }
+        drop(workers);
+        sender
+    }
+
+    /// The sender configuration.
+    pub fn config(&self) -> &WebhookConfig {
+        &self.config
+    }
+
+    /// Deliveries waiting (or backing off) right now.
+    pub fn pending(&self) -> usize {
+        lock_or_abort(&self.state).pending.len()
+    }
+
+    /// Accept one terminal transition for delivery. `terminal_at` is
+    /// when the transition happened (origin of the delivery-latency
+    /// sample). Over capacity the delivery is dead-lettered on the
+    /// spot — webhook pressure must never back up into the runner.
+    pub fn enqueue(&self, id: u64, webhook: &Webhook, body: Json, terminal_at: Instant) {
+        let mut st = lock_or_abort(&self.state);
+        if st.abandoned {
+            // The drain deadline already passed; accounting only.
+            self.dead_lettered.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        if st.pending.len() >= self.config.queue_capacity {
+            self.overflowed.fetch_add(1, Ordering::Relaxed);
+            self.dead_lettered.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.enqueued.fetch_add(1, Ordering::Relaxed);
+        st.pending.push_back(Delivery {
+            id,
+            addr: webhook.addr().to_string(),
+            path: webhook.path().to_string(),
+            body,
+            attempts_made: 0,
+            not_before: Instant::now(),
+            terminal_at,
+        });
+        drop(st);
+        self.cv.notify_one();
+    }
+
+    /// Counter snapshot (latency samples cloned).
+    pub fn stats(&self) -> WebhookStats {
+        let ord = Ordering::Relaxed;
+        WebhookStats {
+            enqueued: self.enqueued.load(ord),
+            attempts: self.attempts.load(ord),
+            delivered: self.delivered.load(ord),
+            retries: self.retries.load(ord),
+            dead_lettered: self.dead_lettered.load(ord),
+            overflowed: self.overflowed.load(ord),
+            latency_seconds: lock_or_abort(&self.latencies).clone(),
+        }
+    }
+
+    /// Flush the queue and stop: keep delivering (backoff schedules
+    /// included) until everything pending has been delivered or
+    /// dead-lettered, or until `deadline` passes — then dead-letter the
+    /// remainder — and join the workers. Idempotent; drain-path locks
+    /// abort on poisoning per the project policy.
+    pub fn flush_and_join(&self, deadline: Duration) {
+        let t_deadline = Instant::now() + deadline;
+        {
+            let mut st = lock_or_abort(&self.state);
+            st.closed = true;
+            // Notify under the lock: a worker is either before its
+            // predicate re-check (sees closed) or parked (gets woken).
+            self.cv.notify_all();
+            loop {
+                if st.pending.is_empty() && st.inflight == 0 {
+                    break;
+                }
+                if !st.abandoned && Instant::now() >= t_deadline {
+                    st.abandoned = true;
+                    self.dead_lettered.fetch_add(st.pending.len() as u64, Ordering::Relaxed);
+                    st.pending.clear();
+                    self.cv.notify_all();
+                    // Still-inflight attempts settle on their own (they
+                    // observe `abandoned` and dead-letter instead of
+                    // rescheduling); keep waiting for them below.
+                }
+                let (g, _timed_out) = self.cv.wait_timeout(st, Duration::from_millis(2));
+                st = g;
+            }
+        }
+        if self.joined.swap(true, Ordering::AcqRel) {
+            return; // a prior flush already joined the workers
+        }
+        let handles: Vec<_> = lock_or_abort(&self.workers).drain(..).collect();
+        for h in handles {
+            h.join().expect("webhook delivery worker panicked");
+        }
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let Some(job) = self.next_job() else {
+                return;
+            };
+            let delivered = self.attempt(&job);
+            self.settle(job, delivered);
+        }
+    }
+
+    /// Block until a delivery is ready to run (its `not_before` gate
+    /// passed), claim it, and mark it inflight; `None` once the queue
+    /// is closed and empty (worker exit).
+    fn next_job(&self) -> Option<Delivery> {
+        let mut st = lock_or_abort(&self.state);
+        loop {
+            let now = Instant::now();
+            if let Some(i) = st.pending.iter().position(|d| d.not_before <= now) {
+                let job = st.pending.remove(i).expect("position is in range");
+                st.inflight += 1;
+                return Some(job);
+            }
+            if st.pending.is_empty() {
+                if st.closed {
+                    return None;
+                }
+                st = self.cv.wait(st);
+            } else {
+                // Everything pending is backing off: sleep until the
+                // earliest gate (or a notify for new work / close).
+                let earliest =
+                    st.pending.iter().map(|d| d.not_before).min().expect("pending nonempty");
+                let dur = earliest.saturating_duration_since(now).max(Duration::from_millis(1));
+                let (g, _timed_out) = self.cv.wait_timeout(st, dur);
+                st = g;
+            }
+        }
+    }
+
+    /// One HTTP attempt; `true` on a 2xx acknowledgment.
+    fn attempt(&self, job: &Delivery) -> bool {
+        self.attempts.fetch_add(1, Ordering::Relaxed);
+        let resp = http::http_call_timeout(
+            &job.addr,
+            "POST",
+            &job.path,
+            Some(&job.body),
+            Duration::from_millis(self.config.connect_timeout_ms),
+            Duration::from_millis(self.config.read_timeout_ms),
+        );
+        matches!(resp, Ok(r) if (200..300).contains(&r.status))
+    }
+
+    /// Record an attempt's result: count a success, reschedule a
+    /// failure with backoff, or dead-letter past the budget (or past
+    /// the drain deadline).
+    fn settle(&self, mut job: Delivery, delivered: bool) {
+        if delivered {
+            self.delivered.fetch_add(1, Ordering::Relaxed);
+            lock_or_abort(&self.latencies).push(job.terminal_at.elapsed().as_secs_f64());
+        } else {
+            job.attempts_made += 1;
+        }
+        let mut st = lock_or_abort(&self.state);
+        st.inflight -= 1;
+        if !delivered {
+            if job.attempts_made >= self.config.max_attempts || st.abandoned {
+                self.dead_lettered.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.retries.fetch_add(1, Ordering::Relaxed);
+                let delay = backoff_delay_ms(
+                    self.config.base_backoff_ms,
+                    self.config.max_backoff_ms,
+                    job.attempts_made,
+                    self.config.jitter_seed,
+                    job.id,
+                );
+                job.not_before = Instant::now() + Duration::from_millis(delay);
+                st.pending.push_back(job);
+            }
+        }
+        drop(st);
+        // Wake backoff sleepers (the new gate may be earlier than what
+        // they are sleeping toward) and the flush waiter.
+        self.cv.notify_all();
+    }
+}
+
+/// How the fault-injection receiver treats one incoming connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Read the request and acknowledge with `200` (records the body).
+    Ok,
+    /// Accept, then drop the connection without responding.
+    DropConnection,
+    /// Read the request, answer with this status (e.g. `503`).
+    Status(u16),
+    /// Read the request, stall this long, then answer `200` — pushes a
+    /// client whose read timeout is shorter into a timeout failure
+    /// (records the body: the response was sent, the client gave up).
+    StallMs(u64),
+}
+
+/// A loopback webhook receiver with scripted faults, used by the
+/// delivery tests and the load generator's webhook phase. Connections
+/// consume faults from the script in order; an exhausted script means
+/// [`Fault::Ok`]. Connections are handled serially on the accept
+/// thread (a stall blocks later arrivals — fine for fault injection,
+/// wrong for a real server).
+pub struct FaultReceiver {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    shared: Arc<ReceiverShared>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+struct ReceiverShared {
+    script: Mutex<VecDeque<Fault>>,
+    /// Bodies of requests answered `200`, with their arrival instants.
+    delivered: Mutex<Vec<(Instant, Json)>>,
+    /// Arrival instant of every connection (dropped ones included).
+    hits: Mutex<Vec<Instant>>,
+}
+
+impl FaultReceiver {
+    /// Bind an ephemeral loopback port and start accepting.
+    pub fn start(script: Vec<Fault>) -> std::io::Result<FaultReceiver> {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let shared = Arc::new(ReceiverShared {
+            script: Mutex::new(script.into()),
+            delivered: Mutex::new(Vec::new()),
+            hits: Mutex::new(Vec::new()),
+        });
+        let thread = {
+            let stop = Arc::clone(&stop);
+            let shared = Arc::clone(&shared);
+            Some(std::thread::spawn(move || receiver_loop(listener, shared, stop)))
+        };
+        Ok(FaultReceiver { addr, stop, shared, thread })
+    }
+
+    /// The webhook URL clients should register, with `path` appended.
+    pub fn url(&self, path: &str) -> String {
+        format!("http://{}{}", self.addr, path)
+    }
+
+    /// The bound loopback address.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Append faults to the script.
+    pub fn push_faults(&self, faults: impl IntoIterator<Item = Fault>) {
+        self.shared.script.lock().extend(faults);
+    }
+
+    /// Bodies acknowledged with `200`, in arrival order.
+    pub fn delivered(&self) -> Vec<Json> {
+        self.shared.delivered.lock().iter().map(|(_, b)| b.clone()).collect()
+    }
+
+    /// Arrival instants of acknowledged deliveries, in order.
+    pub fn delivered_at(&self) -> Vec<Instant> {
+        self.shared.delivered.lock().iter().map(|(t, _)| *t).collect()
+    }
+
+    /// Count of acknowledged deliveries.
+    pub fn delivered_count(&self) -> usize {
+        self.shared.delivered.lock().len()
+    }
+
+    /// Arrival instants of every connection (faulted ones included) —
+    /// what the backoff-schedule assertions measure gaps over.
+    pub fn hits(&self) -> Vec<Instant> {
+        self.shared.hits.lock().clone()
+    }
+
+    /// Stop accepting and join the accept thread.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FaultReceiver {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn receiver_loop(
+    listener: std::net::TcpListener,
+    shared: Arc<ReceiverShared>,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shared.hits.lock().push(Instant::now());
+                let fault = shared.script.lock().pop_front().unwrap_or(Fault::Ok);
+                serve_faulted(stream, fault, &shared);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn serve_faulted(stream: std::net::TcpStream, fault: Fault, shared: &ReceiverShared) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    if fault == Fault::DropConnection {
+        return; // drop without reading: the client sees a torn connection
+    }
+    let mut reader = std::io::BufReader::new(stream);
+    let Ok(req) = http::read_request(&mut reader) else {
+        return;
+    };
+    let (status, record) = match fault {
+        Fault::Ok => (200, true),
+        Fault::Status(code) => (code, false),
+        Fault::StallMs(ms) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            (200, true)
+        }
+        Fault::DropConnection => unreachable!("handled before reading"),
+    };
+    if record {
+        if let Ok(text) = std::str::from_utf8(&req.body) {
+            if let Ok(body) = Json::parse(text) {
+                shared.delivered.lock().push((Instant::now(), body));
+            }
+        }
+    }
+    let resp = http::Response::json(status, &Json::obj(vec![("ok", Json::Bool(status == 200))]));
+    let mut stream = reader.into_inner();
+    let _ = resp.write_to(&mut stream);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_schedule_is_pinned() {
+        // Mirrored bit-for-bit by python/replica/serve_http_replica.py:
+        // change either side and both CI gates fail.
+        let cfg = WebhookConfig::default(); // base 50, cap 2000, seed 0xC0FFEE
+        assert_eq!(backoff_schedule(&cfg, 1, 4), vec![45, 62, 134, 288]);
+        assert_eq!(backoff_schedule(&cfg, 2, 4), vec![34, 97, 112, 276]);
+        assert_eq!(backoff_schedule(&cfg, 3, 4), vec![26, 54, 178, 287]);
+        let smoke =
+            WebhookConfig { base_backoff_ms: 10, max_backoff_ms: 50, jitter_seed: 7, ..cfg };
+        assert_eq!(backoff_schedule(&smoke, 1, 4), vec![6, 14, 21, 44]);
+        assert_eq!(backoff_schedule(&smoke, 2, 4), vec![6, 13, 27, 26]);
+    }
+
+    #[test]
+    fn backoff_delay_stays_in_the_jitter_window() {
+        let (base, cap) = (50u64, 2000u64);
+        for id in 0..50u64 {
+            for attempt in 1..=8u32 {
+                let term = base.saturating_mul(1 << (attempt - 1).min(16)).min(cap);
+                let half = (term / 2).max(1);
+                let d = backoff_delay_ms(base, cap, attempt, 0xC0FFEE, id);
+                assert!(
+                    (half..2 * half).contains(&d),
+                    "id {id} attempt {attempt}: {d} outside [{half}, {})",
+                    2 * half
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn webhook_url_parsing() {
+        let w = Webhook::parse("http://127.0.0.1:9999/hooks/done").unwrap();
+        assert_eq!(w.addr(), "127.0.0.1:9999");
+        assert_eq!(w.path(), "/hooks/done");
+        let w = Webhook::parse("http://example.com").unwrap();
+        assert_eq!(w.addr(), "example.com:80", "port defaults to 80");
+        assert_eq!(w.path(), "/", "path defaults to /");
+        for bad in [
+            "https://example.com/hook", // no TLS in the zero-dep client
+            "example.com/hook",
+            "http://",
+            "http:///path",
+            "http://user@host/x",
+            "http://host:notaport/x",
+            "http://host:99999/x",
+            "http://:8080/x",
+        ] {
+            assert!(Webhook::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn events_filter_gates_delivery() {
+        let w = Webhook::parse("http://127.0.0.1:1/x").unwrap();
+        assert!(w.wants(RunnerState::Succeeded), "no filter delivers everything");
+        assert!(w.wants(RunnerState::Cancelled));
+        let w = w.with_events(vec![RunnerState::Succeeded, RunnerState::Failed]);
+        assert!(w.wants(RunnerState::Succeeded));
+        assert!(!w.wants(RunnerState::Cancelled));
+        assert!(!w.wants(RunnerState::Expired));
+    }
+
+    /// Deterministic, receiver-free delivery check: an unbound loopback
+    /// port refuses instantly, so every attempt fails fast and the
+    /// dead-letter accounting is exact.
+    #[test]
+    fn exhausted_budget_dead_letters() {
+        let port = {
+            // Bind-then-drop: the port is free again, connects refuse.
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let cfg = WebhookConfig {
+            max_attempts: 3,
+            base_backoff_ms: 2,
+            max_backoff_ms: 8,
+            connect_timeout_ms: 250,
+            read_timeout_ms: 250,
+            ..WebhookConfig::default()
+        };
+        let sender = WebhookSender::start(cfg);
+        let wh = Webhook::parse(&format!("http://127.0.0.1:{port}/gone")).unwrap();
+        sender.enqueue(1, &wh, Json::obj(vec![("id", Json::Num(1.0))]), Instant::now());
+        sender.flush_and_join(Duration::from_secs(10));
+        let stats = sender.stats();
+        assert_eq!(stats.enqueued, 1);
+        assert_eq!(stats.attempts, 3, "budget spent exactly");
+        assert_eq!(stats.retries, 2);
+        assert_eq!(stats.delivered, 0);
+        assert_eq!(stats.dead_lettered, 1);
+        assert!(stats.latency_seconds.is_empty());
+    }
+
+    #[test]
+    fn overflow_dead_letters_without_blocking() {
+        let port = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let cfg = WebhookConfig {
+            queue_capacity: 1,
+            max_attempts: 1,
+            connect_timeout_ms: 250,
+            read_timeout_ms: 250,
+            ..WebhookConfig::default()
+        };
+        let sender = WebhookSender::start(cfg);
+        let wh = Webhook::parse(&format!("http://127.0.0.1:{port}/gone")).unwrap();
+        // Flood faster than one refused connect can drain.
+        for id in 0..20u64 {
+            sender.enqueue(id, &wh, Json::obj(vec![("id", Json::Num(id as f64))]), Instant::now());
+        }
+        sender.flush_and_join(Duration::from_secs(10));
+        let stats = sender.stats();
+        assert_eq!(stats.delivered, 0);
+        assert_eq!(stats.enqueued + stats.overflowed, 20, "every enqueue accounted");
+        assert_eq!(stats.dead_lettered, 20, "all 20 dead-letter: refused or overflowed");
+    }
+
+    #[test]
+    fn flush_is_idempotent() {
+        let sender = WebhookSender::start(WebhookConfig::default());
+        sender.flush_and_join(Duration::from_millis(100));
+        sender.flush_and_join(Duration::from_millis(100));
+        assert_eq!(sender.stats(), WebhookStats::default());
+    }
+}

@@ -3,8 +3,13 @@
 /// Summary of a sample of measurements (times in seconds, or any unit).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
-    /// Number of samples.
+    /// Number of samples the statistics were computed over (NaN inputs
+    /// are excluded; see [`Summary::nan`]).
     pub n: usize,
+    /// Number of NaN inputs dropped before computing the statistics. A
+    /// NaN latency sample (e.g. a clock anomaly) must degrade the
+    /// report, not panic it at shutdown.
+    pub nan: usize,
     /// Arithmetic mean.
     pub mean: f64,
     /// Minimum.
@@ -22,12 +27,30 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Compute a summary; panics on an empty sample.
+    /// Compute a summary; panics on an empty sample. NaN inputs are
+    /// filtered out and counted in [`Summary::nan`] instead of
+    /// poisoning the sort (a `partial_cmp(..).unwrap()` here used to
+    /// panic the whole metrics path on one bad sample); if *every*
+    /// input is NaN the summary is all-zero with `n == 0`.
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "summary of empty sample");
-        let n = samples.len();
-        let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut sorted: Vec<f64> = samples.iter().copied().filter(|x| !x.is_nan()).collect();
+        let nan = samples.len() - sorted.len();
+        let n = sorted.len();
+        if n == 0 {
+            return Summary {
+                n: 0,
+                nan,
+                mean: 0.0,
+                min: 0.0,
+                max: 0.0,
+                median: 0.0,
+                std_dev: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+            };
+        }
+        sorted.sort_by(f64::total_cmp);
         let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
             sorted.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
@@ -36,6 +59,7 @@ impl Summary {
         };
         Summary {
             n,
+            nan,
             mean,
             min: sorted[0],
             max: sorted[n - 1],
@@ -56,9 +80,13 @@ impl Summary {
     }
 }
 
-/// Linear-interpolated percentile of an ascending-sorted slice.
+/// Linear-interpolated percentile of an ascending-sorted slice. The
+/// caller is responsible for filtering NaN before sorting (as
+/// [`Summary::of`] does): a NaN in the slice makes any "sorted" claim
+/// meaningless, which is a caller bug, not a data condition.
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     assert!(!sorted.is_empty());
+    debug_assert!(sorted.iter().all(|x| !x.is_nan()), "percentile over NaN samples");
     if sorted.len() == 1 {
         return sorted[0];
     }
@@ -135,6 +163,28 @@ mod tests {
         assert_eq!(s.std_dev, 0.0);
         assert_eq!(s.p95, 7.0);
         assert_eq!(s.p99, 7.0);
+    }
+
+    #[test]
+    fn summary_drops_nan_instead_of_panicking() {
+        // Regression: `sort_by(partial_cmp().unwrap())` panicked on one
+        // NaN sample, taking the whole metrics report down with it.
+        let s = Summary::of(&[1.0, f64::NAN, 3.0]);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.nan, 1);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.median, 2.0);
+    }
+
+    #[test]
+    fn summary_of_all_nan_is_zeroed_not_a_panic() {
+        let s = Summary::of(&[f64::NAN, f64::NAN]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.nan, 2);
+        assert_eq!(s.mean, 0.0);
+        assert_eq!(s.p99, 0.0);
     }
 
     #[test]

@@ -55,6 +55,11 @@ pub mod rank {
     pub const UNRANKED: u16 = 0;
     /// `server::Runner` prediction registry.
     pub const SERVER_REGISTRY: u16 = 10;
+    /// `server::WebhookSender` delivery queue. Deliberately above the
+    /// registry: the runner enqueues deliveries *after* dropping the
+    /// registry lock, and the delivery workers never touch the
+    /// registry, so the edge only ever points one way.
+    pub const WEBHOOK_QUEUE: u16 = 15;
     /// `serve::RequestQueue` state.
     pub const SERVE_QUEUE: u16 = 20;
     /// `serve::SharedBatch` rendezvous state (held across the merged
@@ -300,6 +305,47 @@ impl Condvar {
         MutexGuard { inner: Some(inner), meta }
     }
 
+    /// Like [`Condvar::wait`] but with a timeout: reacquires the lock
+    /// and additionally reports whether the timeout elapsed. The same
+    /// project rule applies — call it inside a predicate loop; a timed
+    /// wakeup proves nothing about the predicate.
+    #[cfg(not(feature = "conc-check"))]
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: std::time::Duration,
+    ) -> (MutexGuard<'a, T>, bool) {
+        match self.inner.wait_timeout(guard.0, dur) {
+            Ok((g, to)) => (MutexGuard(g), to.timed_out()),
+            Err(_) => panic!("poisoned mutex at condvar wakeup"),
+        }
+    }
+
+    /// Like [`Condvar::wait`] but with a timeout: reacquires the lock
+    /// and additionally reports whether the timeout elapsed. The same
+    /// project rule applies — call it inside a predicate loop; a timed
+    /// wakeup proves nothing about the predicate.
+    #[cfg(feature = "conc-check")]
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        dur: std::time::Duration,
+    ) -> (MutexGuard<'a, T>, bool) {
+        let meta = guard.meta;
+        let tag = meta.tag();
+        // Same witness protocol as `wait`: the blocked interval does
+        // not hold the lock.
+        lockorder::global().release(tag.id);
+        let inner = guard.inner.take().expect("guard held before wait");
+        drop(guard); // inner already taken: Drop reports nothing
+        let (inner, timed_out) = match self.inner.wait_timeout(inner, dur) {
+            Ok((g, to)) => (g, to.timed_out()),
+            Err(_) => panic!("poisoned mutex at condvar wakeup: {}", meta.name),
+        };
+        lockorder::global().acquire(tag);
+        (MutexGuard { inner: Some(inner), meta }, timed_out)
+    }
+
     /// Wake one waiter.
     pub fn notify_one(&self) {
         self.inner.notify_one();
@@ -474,6 +520,26 @@ mod tests {
         }
         drop(ready);
         t.join().unwrap();
+    }
+
+    #[test]
+    fn condvar_wait_timeout_times_out_and_reacquires() {
+        let m = Mutex::new(0u32);
+        let cv = Condvar::new();
+        let mut g = m.lock();
+        let mut timed_out = false;
+        while *g == 0 {
+            let (g2, to) = cv.wait_timeout(g, std::time::Duration::from_millis(5));
+            g = g2;
+            if to {
+                timed_out = true;
+                break;
+            }
+        }
+        assert!(timed_out, "nobody notifies: the wait must time out");
+        *g = 9; // the guard is live again after the timed-out wait
+        drop(g);
+        assert_eq!(*m.lock(), 9);
     }
 
     #[test]

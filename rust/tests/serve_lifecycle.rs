@@ -190,7 +190,7 @@ fn graceful_shutdown_drains_queued_work_and_rejects_new() {
     let runner = Runner::start(harness, RunnerConfig::default());
     let mut ids = Vec::new();
     for i in 0..3u64 {
-        match runner.create(&format!("drain me {i}"), i, 1, None) {
+        match runner.create(&format!("drain me {i}"), i, 1, None, None) {
             Admission::Created { id } => ids.push(id),
             other => panic!("admission refused: {other:?}"),
         }
@@ -204,7 +204,7 @@ fn graceful_shutdown_drains_queued_work_and_rejects_new() {
     }
     // ...and everything after the drain is refused.
     assert!(
-        matches!(runner.create("too late", 9, 1, None), Admission::Draining),
+        matches!(runner.create("too late", 9, 1, None, None), Admission::Draining),
         "a draining runner admits nothing"
     );
 }
@@ -218,7 +218,12 @@ fn http_round_trip_cancel_backpressure_and_drain() {
     let server = Server::start(
         "127.0.0.1:0",
         harness,
-        RunnerConfig { slo_seconds: 1e9, default_steps: 1, max_steps: 8 },
+        RunnerConfig {
+            slo_seconds: 1e9,
+            default_steps: 1,
+            max_steps: 8,
+            ..RunnerConfig::default()
+        },
     )
     .expect("bind loopback");
     let addr = server.addr().to_string();

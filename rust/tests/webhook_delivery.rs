@@ -1,0 +1,186 @@
+//! Webhook delivery integration tests: a loopback [`FaultReceiver`]
+//! with scripted faults (5xx, read-timeout stalls) proves the retry
+//! schedule, eventual delivery, the events filter end-to-end, and the
+//! shutdown drain ordering — terminal states produced mid-drain are
+//! delivered before `shutdown()` returns.
+//!
+//! The backoff schedule is deterministic (seeded jitter keyed on the
+//! prediction id), so the tests assert *exact lower bounds* on the
+//! gaps between delivery attempts, not just "it retried eventually".
+
+use imax_sd::sd::pipeline::{Backend, PipelineConfig};
+use imax_sd::sd::QuantModel;
+use imax_sd::serve::{RunnerState, ServeConfig, ServeHarness};
+use imax_sd::server::http::http_call;
+use imax_sd::server::{
+    backoff_schedule, Admission, Fault, FaultReceiver, Json, Runner, RunnerConfig, Server, Webhook,
+    WebhookConfig, WebhookSender,
+};
+use std::time::{Duration, Instant};
+
+fn harness() -> ServeHarness {
+    let pipe = PipelineConfig {
+        weight_seed: 99,
+        model: Some(QuantModel::Q8_0),
+        steps: 1,
+        backend: Backend::Host { threads: 2 },
+        conv_offload: false,
+    };
+    let serve = ServeConfig {
+        lanes: 1,
+        host_threads: 2,
+        max_batch: 2,
+        workers: 1,
+        sharded: false,
+        queue_capacity: 8,
+    };
+    ServeHarness::new(pipe, serve)
+}
+
+/// End-to-end over HTTP: the receiver fails the first two attempts
+/// with 503, so the delivery must follow the pinned backoff schedule
+/// for prediction id 1 and land exactly once on the third attempt.
+#[test]
+fn faulted_receiver_gets_exactly_one_delivery_on_the_pinned_schedule() {
+    let receiver = FaultReceiver::start(vec![Fault::Status(503), Fault::Status(503)])
+        .expect("bind loopback receiver");
+    let server = Server::start("127.0.0.1:0", harness(), RunnerConfig::default())
+        .expect("bind loopback server");
+    let addr = server.addr().to_string();
+
+    let body = Json::obj(vec![
+        ("prompt", Json::Str("a lovely cat".into())),
+        ("seed", Json::Num(7.0)),
+        ("webhook", Json::Str(receiver.url("/hooks/done"))),
+    ]);
+    let created = http_call(&addr, "POST", "/predictions", Some(&body)).unwrap();
+    assert_eq!(created.status, 202);
+    let id = created.json().unwrap().get("id").unwrap().as_u64().unwrap();
+    assert_eq!(id, 1, "first prediction takes id 1 (the schedule below is keyed on it)");
+
+    // Shutdown flushes the delivery queue (retries included) before
+    // returning, so no polling is needed on the receiver side.
+    let report = server.shutdown();
+
+    assert_eq!(receiver.delivered_count(), 1, "delivered exactly once");
+    let delivered = receiver.delivered();
+    assert_eq!(delivered[0].get("id").unwrap().as_u64(), Some(1));
+    assert_eq!(delivered[0].get("status").unwrap().as_str(), Some("succeeded"));
+    assert!(delivered[0].get("image_crc32").unwrap().as_u64().unwrap() > 0);
+    assert!(delivered[0].get("metrics").is_some(), "full prediction JSON, not a stub");
+
+    // Three connections: 503, 503, 200 — with gaps no shorter than the
+    // pinned schedule (45 ms, then 62 ms for id 1 under the default
+    // config; `backoff_schedule_is_pinned` asserts the exact values).
+    let hits = receiver.hits();
+    assert_eq!(hits.len(), 3, "two faulted attempts plus the success");
+    let pinned = backoff_schedule(&WebhookConfig::default(), 1, 2);
+    for (k, gap_floor_ms) in pinned.iter().enumerate() {
+        let gap = hits[k + 1].duration_since(hits[k]);
+        assert!(
+            gap >= Duration::from_millis(*gap_floor_ms),
+            "retry {} fired after {:?}, before its {} ms backoff gate",
+            k + 1,
+            gap,
+            gap_floor_ms
+        );
+    }
+
+    let wh = &report.webhook;
+    assert_eq!(wh.enqueued, 1);
+    assert_eq!(wh.attempts, 3);
+    assert_eq!(wh.retries, 2);
+    assert_eq!(wh.delivered, 1);
+    assert_eq!(wh.dead_lettered, 0);
+    assert_eq!(wh.latency_seconds.len(), 1, "one delivery-latency sample");
+    receiver.stop();
+}
+
+/// A receiver that stalls past the client's read timeout costs one
+/// attempt; the retry (after the stall has cleared) delivers. Driven
+/// at the `WebhookSender` layer so the timeouts and backoff can be
+/// pinned tightly without a pipeline in the loop.
+#[test]
+fn stall_past_read_timeout_retries_and_delivers() {
+    let receiver =
+        FaultReceiver::start(vec![Fault::StallMs(400)]).expect("bind loopback receiver");
+    let cfg = WebhookConfig {
+        read_timeout_ms: 150,
+        // One retry gate ∈ [500, 1000) ms — comfortably after the
+        // receiver's 400 ms stall has cleared its serial accept loop.
+        base_backoff_ms: 1000,
+        max_backoff_ms: 2000,
+        ..WebhookConfig::default()
+    };
+    let sender = WebhookSender::start(cfg);
+    let wh = Webhook::parse(&receiver.url("/hook")).unwrap();
+    sender.enqueue(1, &wh, Json::obj(vec![("id", Json::Num(1.0))]), Instant::now());
+    sender.flush_and_join(Duration::from_secs(30));
+
+    let stats = sender.stats();
+    assert_eq!(stats.attempts, 2, "stalled attempt timed out, retry succeeded");
+    assert_eq!(stats.retries, 1);
+    assert_eq!(stats.delivered, 1);
+    assert_eq!(stats.dead_lettered, 0);
+    assert_eq!(receiver.hits().len(), 2);
+    receiver.stop();
+}
+
+/// Drain ordering: a prediction still queued when shutdown starts
+/// reaches its terminal state during the drain, and its webhook is
+/// delivered *before* `shutdown()` returns — no poll, no sleep.
+#[test]
+fn terminal_state_during_drain_is_delivered_before_shutdown_returns() {
+    let receiver = FaultReceiver::start(Vec::new()).expect("bind loopback receiver");
+    let runner = Runner::start(harness(), RunnerConfig::default());
+    let wh = Webhook::parse(&receiver.url("/drained")).unwrap();
+    let Admission::Created { id } = runner.create("drain me", 7, 1, None, Some(wh)) else {
+        panic!("admission refused");
+    };
+    // Shut down immediately: the prediction is (at best) just starting.
+    let report = runner.shutdown();
+
+    assert_eq!(receiver.delivered_count(), 1, "delivery happened-before shutdown returned");
+    let delivered = receiver.delivered();
+    assert_eq!(delivered[0].get("id").unwrap().as_u64(), Some(id));
+    assert_eq!(delivered[0].get("status").unwrap().as_str(), Some("succeeded"));
+    assert_eq!(report.webhook.delivered, 1);
+    assert_eq!(report.webhook.dead_lettered, 0);
+    assert_eq!(report.count(RunnerState::Succeeded), 1, "the drain ran the prediction");
+    receiver.stop();
+}
+
+/// The events filter end-to-end over HTTP: a filter that excludes the
+/// prediction's terminal state suppresses delivery entirely; a
+/// matching filter delivers.
+#[test]
+fn events_filter_gates_delivery_end_to_end() {
+    let receiver = FaultReceiver::start(Vec::new()).expect("bind loopback receiver");
+    let server = Server::start("127.0.0.1:0", harness(), RunnerConfig::default())
+        .expect("bind loopback server");
+    let addr = server.addr().to_string();
+
+    let create = |prompt: &str, filter: &[&str]| {
+        let events = filter.iter().map(|s| Json::Str((*s).into())).collect();
+        let body = Json::obj(vec![
+            ("prompt", Json::Str(prompt.into())),
+            ("webhook", Json::Str(receiver.url("/filtered"))),
+            ("webhook_events_filter", Json::Arr(events)),
+        ]);
+        let resp = http_call(&addr, "POST", "/predictions", Some(&body)).unwrap();
+        assert_eq!(resp.status, 202);
+        resp.json().unwrap().get("id").unwrap().as_u64().unwrap()
+    };
+
+    let _suppressed = create("succeeds quietly", &["cancelled", "expired"]);
+    let wanted = create("succeeds loudly", &["succeeded"]);
+    let report = server.shutdown();
+
+    assert_eq!(receiver.delivered_count(), 1, "only the matching filter delivered");
+    let delivered = receiver.delivered();
+    assert_eq!(delivered[0].get("id").unwrap().as_u64(), Some(wanted));
+    assert_eq!(delivered[0].get("status").unwrap().as_str(), Some("succeeded"));
+    assert_eq!(report.webhook.enqueued, 1, "the non-matching transition was never enqueued");
+    assert_eq!(report.webhook.delivered, 1);
+    receiver.stop();
+}
